@@ -1,0 +1,49 @@
+//! Torus sweep: compare every algorithm on a 2-D and a 3-D torus (the
+//! workloads motivating the paper's §6.2/§6.3 evaluation — TPUv4-style
+//! direct-connect pods), including a bandwidth sensitivity slice.
+//!
+//! ```sh
+//! cargo run --release --example torus_sweep [-- <dims like 8x8>]
+//! ```
+
+use trivance::algo::Algo;
+use trivance::cli::parse_topo;
+use trivance::cost::NetParams;
+use trivance::harness::sweep::{run_sweep, size_ladder};
+
+fn main() {
+    let arg = std::env::args().nth(1).unwrap_or_else(|| "8x8".to_string());
+    let torus = parse_topo(&arg).expect("dims like 8x8 or 4x4x4");
+    let algos = [Algo::Trivance, Algo::Bruck, Algo::Swing, Algo::RecDoub, Algo::Bucket];
+
+    // message-size sweep at the paper's default network
+    let sweep = run_sweep(&torus, &algos, &size_ladder(8 << 20), &NetParams::default());
+    println!(
+        "{}",
+        sweep.render(&format!("AllReduce on {:?} ({} nodes)", torus.dims(), torus.n()))
+    );
+    println!("winners per size: {:?}\n", sweep.winners().iter().map(|a| a.label()).collect::<Vec<_>>());
+
+    // bandwidth sensitivity at 2 MiB (Fig. 8's experiment, one slice)
+    println!("### bandwidth sensitivity at 2 MiB\n");
+    for bw in [200.0, 800.0, 3200.0] {
+        let s = run_sweep(
+            &torus,
+            &algos,
+            &[2 << 20],
+            &NetParams::default().with_bandwidth_gbps(bw),
+        );
+        let best_existing = s
+            .algos
+            .iter()
+            .filter(|&&a| a != Algo::Trivance)
+            .map(|&a| (a, s.rel_to_trivance(a, 0)))
+            .min_by(|a, b| a.1.partial_cmp(&b.1).unwrap())
+            .unwrap();
+        println!(
+            "  {bw:>6.0} Gb/s: best existing = {} at {:+.1}% vs Trivance",
+            best_existing.0.label(),
+            (best_existing.1 - 1.0) * 100.0
+        );
+    }
+}

@@ -1,0 +1,70 @@
+"""AOT lowering: JAX → HLO **text** artifacts for the Rust PJRT runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax ≥ 0.5 emits protos with 64-bit instruction ids that the ``xla`` crate's
+xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text parser
+reassigns ids and round-trips cleanly. Lowered with ``return_tuple=True``;
+the Rust side unwraps with ``to_tuple1()`` / ``to_tuple()``.
+
+Run via ``make artifacts`` (no-op when inputs are unchanged):
+
+    cd python && python -m compile.aot --out ../artifacts
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_entry(fn, shapes) -> str:
+    specs = [jax.ShapeDtypeStruct(s, jnp.float32) for s in shapes]
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts", help="artifact directory")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    for name, fn, shapes in model.ENTRY_POINTS:
+        text = lower_entry(fn, shapes)
+        path = os.path.join(args.out, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        print(f"wrote {path} ({len(text)} chars)")
+
+    # Static shape metadata for the Rust runtime (flat key=value lines —
+    # no JSON dependency on the Rust side).
+    meta = {
+        "reduce_lanes": model.REDUCE_LANES,
+        "mlp_in": model.MLP_IN,
+        "mlp_hidden": model.MLP_HIDDEN,
+        "mlp_classes": model.MLP_CLASSES,
+        "mlp_batch": model.MLP_BATCH,
+        "mlp_params": model.MLP_PARAMS,
+    }
+    meta_path = os.path.join(args.out, "meta.txt")
+    with open(meta_path, "w") as f:
+        for k, v in meta.items():
+            f.write(f"{k}={v}\n")
+    print(f"wrote {meta_path}")
+
+
+if __name__ == "__main__":
+    main()

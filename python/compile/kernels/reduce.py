@@ -1,0 +1,74 @@
+"""Layer 1 — Pallas joint-reduction kernels.
+
+Trivance's per-step compute hot-spot is the *joint reduction* (§1, §4):
+every node sums the two partial aggregates arriving from its left and
+right peers into its accumulator before the next step. On a TPU this is
+pure VPU work streamed through VMEM; the kernels below tile the operand
+vectors into VMEM-sized blocks via ``BlockSpec`` so that (operands +
+output) of one grid step stay far under the ~16 MiB VMEM budget and the
+pipeline can double-buffer HBM↔VMEM transfers.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so kernels are lowered to plain HLO; the *structure*
+(BlockSpec tiling, grid) is what carries to real hardware. See DESIGN.md
+§Hardware-Adaptation for the roofline discussion (the kernel is
+memory-bound at 1 FLOP per 8–12 bytes moved).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: 2048 f32 lanes = 8 KiB per operand block. With reduce3's
+# four blocks resident (3 in + 1 out) plus double buffering this is ~64 KiB
+# of VMEM — deliberately small so many grid steps pipeline.
+DEFAULT_BLOCK = 2048
+
+
+def _reduce2_kernel(a_ref, b_ref, o_ref):
+    o_ref[...] = a_ref[...] + b_ref[...]
+
+
+def _reduce3_kernel(a_ref, b_ref, c_ref, o_ref):
+    # Single fused pass: both incoming aggregates join the accumulator in
+    # one VMEM round-trip (the "joint reduction" — halves traffic vs two
+    # chained reduce2 calls).
+    o_ref[...] = a_ref[...] + b_ref[...] + c_ref[...]
+
+
+def _block_for(n: int, block: int) -> int:
+    """Largest divisor of n not exceeding block (vectors here are padded to
+    powers of two by the caller, so this finds a clean tile)."""
+    b = min(n, block)
+    while n % b != 0:
+        b -= 1
+    return b
+
+
+def _tiled_call(kernel, arity: int, x: jax.Array, *rest, block: int):
+    n = x.shape[0]
+    b = _block_for(n, block)
+    grid = n // b
+    spec = pl.BlockSpec((b,), lambda i: (i,))
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct((n,), x.dtype),
+        grid=(grid,),
+        in_specs=[spec] * arity,
+        out_specs=spec,
+        interpret=True,
+    )(x, *rest)
+
+
+def reduce2(a: jax.Array, b: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Elementwise sum of two aggregates, tiled through VMEM."""
+    assert a.shape == b.shape and a.ndim == 1
+    return _tiled_call(_reduce2_kernel, 2, a, b, block=block)
+
+
+def reduce3(a: jax.Array, b: jax.Array, c: jax.Array, *, block: int = DEFAULT_BLOCK) -> jax.Array:
+    """Joint reduction: accumulator + left aggregate + right aggregate."""
+    assert a.shape == b.shape == c.shape and a.ndim == 1
+    return _tiled_call(_reduce3_kernel, 3, a, b, c, block=block)

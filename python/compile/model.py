@@ -1,0 +1,107 @@
+"""Layer 2 — JAX compute graphs, lowered once to HLO by ``aot.py``.
+
+Two groups of entry points:
+
+* ``jointreduce2`` / ``jointreduce3`` — the per-step reduction of the
+  collective dataflow (calling the Layer-1 Pallas kernels). The Rust
+  executor invokes these through PJRT on every schedule step, so Python is
+  never on the request path.
+* ``mlp_grad`` — forward+backward of a small MLP classifier (synthetic
+  spiral task), the per-worker compute of the end-to-end data-parallel
+  training demo (``examples/train_demo.rs``): each simulated worker runs
+  this executable on its shard, the gradients are AllReduced through the
+  actual Trivance dataflow, and SGD is applied coordinator-side.
+
+All shapes are static (AOT): vectors are chunked to ``REDUCE_LANES`` by the
+runtime; the MLP dimensions are fixed below and mirrored in
+``artifacts/meta.txt``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.reduce import reduce2, reduce3
+
+# ---- static AOT shapes -----------------------------------------------------
+
+#: Chunk width (f32 lanes) of the reduction executables; the Rust runtime
+#: zero-pads block payloads up to a multiple of this.
+REDUCE_LANES = 4096
+
+#: MLP classifier dimensions (spiral synthetic task).
+MLP_IN = 2
+MLP_HIDDEN = 128
+MLP_CLASSES = 3
+MLP_BATCH = 64
+
+#: Flat parameter count: W1 + b1 + W2 + b2.
+MLP_PARAMS = MLP_IN * MLP_HIDDEN + MLP_HIDDEN + MLP_HIDDEN * MLP_CLASSES + MLP_CLASSES
+
+
+# ---- collective reductions ---------------------------------------------------
+
+
+def jointreduce2(a, b):
+    """Sum of two partial aggregates (one incoming port)."""
+    return (reduce2(a, b),)
+
+
+def jointreduce3(acc, left, right):
+    """Trivance's joint reduction: accumulator + both incoming aggregates in
+    one fused pass (§4: "jointly reduce both received transmissions")."""
+    return (reduce3(acc, left, right),)
+
+
+# ---- MLP train-step graph ----------------------------------------------------
+
+
+def _unflatten(params):
+    i = 0
+    w1 = params[i : i + MLP_IN * MLP_HIDDEN].reshape(MLP_IN, MLP_HIDDEN)
+    i += MLP_IN * MLP_HIDDEN
+    b1 = params[i : i + MLP_HIDDEN]
+    i += MLP_HIDDEN
+    w2 = params[i : i + MLP_HIDDEN * MLP_CLASSES].reshape(MLP_HIDDEN, MLP_CLASSES)
+    i += MLP_HIDDEN * MLP_CLASSES
+    b2 = params[i : i + MLP_CLASSES]
+    return w1, b1, w2, b2
+
+
+def mlp_logits(params, x):
+    w1, b1, w2, b2 = _unflatten(params)
+    h = jnp.tanh(x @ w1 + b1)
+    return h @ w2 + b2
+
+
+def mlp_loss(params, x, y_onehot):
+    logits = mlp_logits(params, x)
+    logp = jax.nn.log_softmax(logits)
+    return -jnp.mean(jnp.sum(y_onehot * logp, axis=-1))
+
+
+def mlp_grad(params, x, y_onehot):
+    """(loss, grad) for one worker shard — the AOT train-step entry point."""
+    loss, grad = jax.value_and_grad(mlp_loss)(params, x, y_onehot)
+    return (grad, loss)
+
+
+#: (name, fn, example argument shapes) — everything ``aot.py`` lowers.
+ENTRY_POINTS = [
+    (
+        "reduce2",
+        jointreduce2,
+        [(REDUCE_LANES,), (REDUCE_LANES,)],
+    ),
+    (
+        "reduce3",
+        jointreduce3,
+        [(REDUCE_LANES,), (REDUCE_LANES,), (REDUCE_LANES,)],
+    ),
+    (
+        "mlp_grad",
+        mlp_grad,
+        [(MLP_PARAMS,), (MLP_BATCH, MLP_IN), (MLP_BATCH, MLP_CLASSES)],
+    ),
+]

@@ -1,0 +1,7 @@
+"""Test configuration: enable x64 so float64 sweeps are exact and the
+finite-difference gradient check is meaningful (the AOT path itself lowers
+f32 graphs; x64 here only affects test arithmetic)."""
+
+import jax
+
+jax.config.update("jax_enable_x64", True)

@@ -1,0 +1,95 @@
+"""L2 correctness: model graphs — shapes, gradients, and trainability."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels.ref import allreduce_ref
+
+
+def spiral(n_per_class, seed=0):
+    """The synthetic spiral classification set used by the e2e demo."""
+    rng = np.random.default_rng(seed)
+    xs, ys = [], []
+    for c in range(model.MLP_CLASSES):
+        t = np.linspace(0.0, 1.0, n_per_class)
+        r = t * 2.0 + 0.05
+        ang = t * 4.0 + c * 2.0 * np.pi / model.MLP_CLASSES
+        x = np.stack([r * np.cos(ang), r * np.sin(ang)], axis=1)
+        x += rng.standard_normal(x.shape) * 0.05
+        xs.append(x)
+        ys.append(np.full(n_per_class, c))
+    return (
+        np.concatenate(xs).astype(np.float32),
+        np.concatenate(ys).astype(np.int32),
+    )
+
+
+def onehot(y):
+    return np.eye(model.MLP_CLASSES, dtype=np.float32)[y]
+
+
+def init_params(seed=0):
+    rng = np.random.default_rng(seed)
+    return (rng.standard_normal(model.MLP_PARAMS) * 0.1).astype(np.float32)
+
+
+def test_param_count():
+    assert model.MLP_PARAMS == 2 * 128 + 128 + 128 * 3 + 3 == 771
+
+
+def test_grad_shapes_and_finiteness():
+    x, y = spiral(model.MLP_BATCH // model.MLP_CLASSES + 1)
+    x, y = x[: model.MLP_BATCH], y[: model.MLP_BATCH]
+    p = init_params()
+    grad, loss = model.mlp_grad(jnp.asarray(p), jnp.asarray(x), jnp.asarray(onehot(y)))
+    assert grad.shape == (model.MLP_PARAMS,)
+    assert np.isfinite(np.asarray(loss))
+    assert np.isfinite(np.asarray(grad)).all()
+
+
+def test_grad_matches_finite_differences():
+    x, y = spiral(4, seed=3)
+    x, y = x[: model.MLP_BATCH], y[: model.MLP_BATCH]
+    yh = onehot(y)
+    p = init_params(1).astype(np.float64)
+    loss_fn = lambda q: model.mlp_loss(q, x.astype(np.float64), yh.astype(np.float64))
+    grad = np.asarray(jax.grad(loss_fn)(jnp.asarray(p)))
+    eps = 1e-6
+    rng = np.random.default_rng(2)
+    for i in rng.integers(0, model.MLP_PARAMS, size=12):
+        dp = np.zeros_like(p)
+        dp[i] = eps
+        fd = (float(loss_fn(jnp.asarray(p + dp))) - float(loss_fn(jnp.asarray(p - dp)))) / (
+            2 * eps
+        )
+        np.testing.assert_allclose(grad[i], fd, rtol=1e-4, atol=1e-7)
+
+
+def test_sgd_reduces_loss():
+    x, y = spiral(64, seed=5)
+    yh = onehot(y)
+    p = jnp.asarray(init_params(4))
+    step = jax.jit(model.mlp_grad)
+    first = None
+    for _ in range(200):
+        grad, loss = step(p, jnp.asarray(x[: model.MLP_BATCH]), jnp.asarray(yh[: model.MLP_BATCH]))
+        if first is None:
+            first = float(loss)
+        p = p - 0.5 * grad
+    assert float(loss) < first * 0.5, f"loss {first} -> {float(loss)}"
+
+
+def test_jointreduce_entry_points():
+    rng = np.random.default_rng(0)
+    a, b, c = (rng.standard_normal(model.REDUCE_LANES).astype(np.float32) for _ in range(3))
+    (r2,) = model.jointreduce2(jnp.asarray(a), jnp.asarray(b))
+    (r3,) = model.jointreduce3(jnp.asarray(a), jnp.asarray(b), jnp.asarray(c))
+    np.testing.assert_allclose(np.asarray(r2), a + b, rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(r3), a + b + c, rtol=1e-6)
+
+
+def test_allreduce_ref_is_columnwise_sum():
+    v = np.arange(12, dtype=np.float32).reshape(3, 4)
+    np.testing.assert_allclose(np.asarray(allreduce_ref(jnp.asarray(v))), v.sum(axis=0))

@@ -1,0 +1,104 @@
+//! Ablation benches for the design choices DESIGN.md calls out: each case
+//! quantifies one decision by comparing completion times / congestion of
+//! the two alternatives on the paper's network.
+
+use trivance::agpattern::{latency_allreduce, AgPattern};
+use trivance::algo::multidim::{concurrent_slices, ProductAg};
+use trivance::algo::rings::{bruck, fullport, trivance, Order};
+use trivance::algo::{build, Algo, Variant};
+use trivance::cost::{measure_optimality, NetParams};
+use trivance::schedule::analysis::analyze;
+use trivance::sim::{simulate, SimMode};
+use trivance::topology::Torus;
+use trivance::util::fmt;
+
+fn completion(s: &trivance::schedule::Schedule, t: &Torus, m: u64) -> f64 {
+    simulate(s, t, m, &NetParams::default(), SimMode::Flow).completion_s
+}
+
+fn main() {
+    let p = NetParams::default();
+    let _ = p;
+
+    println!("== ablation: Bruck routing modification (ring 27, latency variant) ==");
+    let t = Torus::ring(27);
+    let modif = build(Algo::Bruck, Variant::Latency, &t).unwrap();
+    let unmod = build(Algo::BruckUnidir, Variant::Latency, &t).unwrap();
+    for m in [32u64, 64 << 10, 4 << 20] {
+        let a = completion(&modif.net, &t, m);
+        let b = completion(&unmod.net, &t, m);
+        println!(
+            "  m={:>8}: shortest-path {:>12}  unidirectional {:>12}  ({:.2}× worse)",
+            fmt::bytes(m),
+            fmt::secs(a),
+            fmt::secs(b),
+            b / a
+        );
+    }
+
+    println!("\n== ablation: multidim dimension order for Trivance-L (9x9) ==");
+    let t2 = Torus::new(&[9, 9]);
+    let mk = |seq: bool| {
+        let p0 = trivance(9, Order::Inc);
+        let p1 = trivance(9, Order::Inc);
+        let steps: Vec<usize> = vec![2, 2];
+        let slices: Vec<_> = (0..2)
+            .map(|c| {
+                let sd = if seq {
+                    ProductAg::sequential(&steps, c)
+                } else {
+                    ProductAg::round_robin(&steps, c)
+                };
+                latency_allreduce(&ProductAg::new(format!("abl{c}"), t2.clone(), &[&p0, &p1], sd))
+            })
+            .collect();
+        concurrent_slices(slices, "abl".into())
+    };
+    for m in [32u64, 1 << 20] {
+        let rr = completion(&mk(false), &t2, m);
+        let sq = completion(&mk(true), &t2, m);
+        println!(
+            "  m={:>8}: round-robin (Fig. 5) {:>12}  sequential {:>12}",
+            fmt::bytes(m),
+            fmt::secs(rr),
+            fmt::secs(sq)
+        );
+    }
+
+    println!("\n== ablation: virtual padding cost (swing on n=27 via 32 virtual) ==");
+    let t27 = Torus::ring(27);
+    let sw = build(Algo::Swing, Variant::Latency, &t27).unwrap();
+    let tv = build(Algo::Trivance, Variant::Latency, &t27).unwrap();
+    for m in [32u64, 256 << 10] {
+        println!(
+            "  m={:>8}: padded swing {:>12}  native trivance {:>12}",
+            fmt::bytes(m),
+            fmt::secs(completion(&sw.net, &t27, m)),
+            fmt::secs(completion(&tv.net, &t27, m))
+        );
+    }
+
+    println!("\n== extension: full-port radix-(p+1) pattern (§7), steps & congestion ==");
+    for (n, ports) in [(81u32, 2u32), (81, 4), (81, 8)] {
+        let pat = fullport(n, ports, Order::Inc);
+        let s = latency_allreduce(&pat);
+        let t = Torus::ring(n);
+        let stats = analyze(&s, &t);
+        let o = measure_optimality(&stats, &t);
+        println!(
+            "  n={n} ports={ports}: steps={:>2}  Θ={:>7.1}  completion(32B)={}",
+            s.num_steps(),
+            o.theta,
+            fmt::secs(completion(&s, &t, 32))
+        );
+    }
+
+    println!("\n== reference: trivance vs bruck step structure (ring 81) ==");
+    let tb = bruck(81, Order::Inc, false);
+    let tt = trivance(81, Order::Inc);
+    println!(
+        "  bruck steps={}  trivance steps={}  (both ⌈log₃ 81⌉ = 4)",
+        tb.num_steps(),
+        tt.num_steps()
+    );
+}

@@ -1,0 +1,87 @@
+//! Microbenchmarks of the hot paths (the §Perf targets in EXPERIMENTS.md):
+//! schedule construction, validation, congestion analysis, both simulator
+//! modes, and the numeric executor (native and, when artifacts exist,
+//! PJRT reductions).
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::cost::NetParams;
+use trivance::exec::{verify_allreduce, NativeReducer, Reducer};
+use trivance::schedule::analysis::analyze;
+use trivance::sim::{simulate, SimMode};
+use trivance::topology::Torus;
+use trivance::util::bench::Bencher;
+
+fn main() {
+    let b = Bencher::new(1, 5);
+
+    println!("== schedule construction ==");
+    for (label, dims) in [("ring64", vec![64u32]), ("ring81", vec![81]), ("8x8", vec![8, 8])] {
+        let t = Torus::new(&dims);
+        for algo in [Algo::Trivance, Algo::Bruck, Algo::Swing, Algo::Bucket] {
+            for variant in Variant::ALL {
+                if build(algo, variant, &t).is_err() {
+                    continue;
+                }
+                b.run(&format!("build/{label}/{}-{}", algo.label(), variant.label()), || {
+                    build(algo, variant, &t).unwrap().net.num_messages()
+                });
+            }
+        }
+    }
+    // the heavy construction cases, once
+    let b1 = Bencher::new(0, 1);
+    let t32 = Torus::new(&[32, 32]);
+    b1.run("build/32x32/trivance-L", || {
+        build(Algo::Trivance, Variant::Latency, &t32).unwrap().net.num_messages()
+    });
+    b1.run("build/32x32/bucket-B", || {
+        build(Algo::Bucket, Variant::Bandwidth, &t32).unwrap().net.num_messages()
+    });
+
+    println!("\n== validation ==");
+    let t81 = Torus::ring(81);
+    let tv81 = build(Algo::Trivance, Variant::Bandwidth, &t81).unwrap();
+    b.run("validate/ring81/trivance-B", || tv81.validate().unwrap().messages);
+
+    println!("\n== congestion analysis ==");
+    let stats = b.run("analyze/ring81/trivance-B", || analyze(&tv81.net, &t81).tx_delay_rel);
+    let _ = stats;
+
+    println!("\n== simulators ==");
+    let p = NetParams::default();
+    let t27 = Torus::ring(27);
+    let tv27 = build(Algo::Trivance, Variant::Bandwidth, &t27).unwrap();
+    b.run("sim-flow/ring27/trivance-B/1MiB", || {
+        simulate(&tv27.net, &t27, 1 << 20, &p, SimMode::Flow).events
+    });
+    b.run("sim-packet/ring27/trivance-B/1MiB", || {
+        simulate(&tv27.net, &t27, 1 << 20, &p, SimMode::Packet { mtu: 4096 }).events
+    });
+    let t88 = Torus::new(&[8, 8]);
+    let bu88 = build(Algo::Bucket, Variant::Bandwidth, &t88).unwrap();
+    b.run("sim-flow/8x8/bucket-B/8MiB", || {
+        simulate(&bu88.net, &t88, 8 << 20, &p, SimMode::Flow).events
+    });
+    let bu32 = build(Algo::Bucket, Variant::Bandwidth, &t32).unwrap();
+    b1.run("sim-flow/32x32/bucket-B/8MiB", || {
+        simulate(&bu32.net, &t32, 8 << 20, &p, SimMode::Flow).events
+    });
+
+    println!("\n== numeric executor ==");
+    let tv9 = build(Algo::Trivance, Variant::Latency, &Torus::ring(9)).unwrap();
+    b.run("exec-native/ring9/trivance-L/L=1024", || {
+        verify_allreduce(&tv9.exec, 1024, 1, &NativeReducer)
+    });
+    match trivance::runtime::Runtime::load_default() {
+        Ok(rt) => {
+            b.run("exec-pjrt/ring9/trivance-L/L=1024", || {
+                verify_allreduce(&tv9.exec, 1024, 1, &rt as &dyn Reducer)
+            });
+            let a = vec![1.0f32; rt.meta.reduce_lanes];
+            let c = vec![2.0f32; rt.meta.reduce_lanes];
+            let d = vec![3.0f32; rt.meta.reduce_lanes];
+            b.run("pjrt/reduce3/4096", || rt.reduce3(&a, &c, &d).unwrap().len());
+        }
+        Err(_) => println!("(artifacts not built — skipping PJRT benches)"),
+    }
+}

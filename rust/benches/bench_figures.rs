@@ -1,0 +1,28 @@
+//! End-to-end benchmark: regenerate every figure of the paper's evaluation
+//! (the workload of `trivance figures --all`), timing each artifact.
+//!
+//! Full-fidelity inputs for the small topologies; the 32×32 and 16×16×16
+//! sweeps run once per invocation (they are minutes-scale by design — the
+//! paper's own SST sweeps are hours-scale).
+
+use trivance::util::bench::Bencher;
+
+fn main() {
+    println!("== figure regeneration (end-to-end) ==");
+    // fast figures: several iterations for stable numbers
+    let b = Bencher::new(1, 3);
+    for id in ["table1", "table2", "fig6a", "fig6b", "fig7a"] {
+        b.run(&format!("figures/{id}"), || {
+            trivance::harness::run(id, false).unwrap().len()
+        });
+    }
+    // heavyweight sweeps: single timed pass; fig7b/fig10 run their quick
+    // (reduced-topology) configurations here to keep `cargo bench` bounded —
+    // the full 32×32 / 16×16×16 sweeps are `trivance figures --id fig7b`
+    // (~2 min) and `--id fig10` (~25 min), recorded in EXPERIMENTS.md.
+    let b1 = Bencher::new(0, 1);
+    b1.run("figures/fig9", || trivance::harness::run("fig9", false).unwrap().len());
+    b1.run("figures/fig8-quick", || trivance::harness::run("fig8", true).unwrap().len());
+    b1.run("figures/fig7b-quick", || trivance::harness::run("fig7b", true).unwrap().len());
+    b1.run("figures/fig10-quick", || trivance::harness::run("fig10", true).unwrap().len());
+}

@@ -1,0 +1,509 @@
+//! Generic AllGather-pattern machinery.
+//!
+//! Every collective in this crate (Trivance, Bruck, Swing, Recursive
+//! Doubling, Ring/Bucket) is specified *once* as an **AllGather pattern**:
+//! which source-data block sets flow between which nodes at each step. Both
+//! AllReduce variants are derived mechanically:
+//!
+//! * **Latency-optimal AllReduce** = the same pattern reinterpreted over
+//!   full-vector partial aggregates: an AG message "u sends block set B to
+//!   v" becomes "u sends v the m-byte aggregate over contributor ranks B".
+//!   The AG no-duplicate invariant is exactly the no-double-reduction
+//!   requirement. One subtlety: an aggregate cannot be un-summed, so each
+//!   transmitted contributor set must be an exact union of aggregates the
+//!   sender kept separate. [`latency_allreduce`] runs a fixpoint **cut
+//!   propagation**: whenever a send would need to split an aggregate the
+//!   sender received merged, the *upstream* message is split at that
+//!   boundary instead (costing one extra m-byte piece — this is precisely
+//!   the paper's observation that non-power-of-three sizes transmit data
+//!   "comparable to the next larger power-of-three topology").
+//! * **Bandwidth-optimal AllReduce** = Reduce-Scatter + AllGather, where the
+//!   Reduce-Scatter is the **tree reversal** of the AG pattern: for every AG
+//!   edge "u→v carries block b at step t" the RS has "v→u carries the
+//!   partial sum of block b over v's AG subtree at step S−1−t". Subtree
+//!   contributor sets are exact unions of the sender's atoms by
+//!   construction, so no cuts are ever needed.
+//!
+//! Everything produced here is checked by [`crate::schedule::validate`].
+
+use crate::blockset::BlockSet;
+use crate::schedule::{Kind, Piece, RouteHint, Schedule, Send};
+
+/// One AllGather message: `src` sends the source blocks `blocks` to `to`.
+#[derive(Clone, Debug)]
+pub struct AgSend {
+    pub src: u32,
+    pub to: u32,
+    pub blocks: BlockSet,
+    pub route: RouteHint,
+}
+
+/// An AllGather pattern over `n` nodes: after [`AgPattern::num_steps`]
+/// steps, every node must hold every node's source block, never receiving a
+/// block twice.
+pub trait AgPattern {
+    fn name(&self) -> String;
+    fn n(&self) -> u32;
+    fn num_steps(&self) -> usize;
+    /// The messages of step `k` (all nodes).
+    fn sends(&self, step: usize) -> Vec<AgSend>;
+}
+
+/// Materialize the pure AllGather schedule (Set pieces; used standalone and
+/// as the second phase of the bandwidth-optimal variant).
+pub fn allgather_schedule(p: &dyn AgPattern) -> Schedule {
+    let n = p.n();
+    let mut s = Schedule::new(format!("{}-allgather", p.name()), n, n);
+    for k in 0..p.num_steps() {
+        let step = s.push_step();
+        for ag in p.sends(k) {
+            if ag.blocks.is_empty() {
+                continue;
+            }
+            step.push(
+                ag.src,
+                Send {
+                    to: ag.to,
+                    pieces: vec![Piece {
+                        blocks: ag.blocks,
+                        contrib: BlockSet::full(n),
+                        kind: Kind::Set,
+                    }],
+                    route: ag.route,
+                },
+            );
+        }
+    }
+    s
+}
+
+/// Internal: a message under cut propagation — the block set is kept as an
+/// ordered list of parts; each part becomes one Piece (one aggregate).
+#[derive(Clone, Debug)]
+struct CutMsg {
+    src: u32,
+    to: u32,
+    parts: Vec<BlockSet>,
+    route: RouteHint,
+}
+
+/// Where an atom came from: its own contribution or a received part.
+#[derive(Clone, Copy, Debug)]
+enum Provenance {
+    Own,
+    Received { step: usize, msg: usize, part: usize },
+}
+
+/// Derive the latency-optimal AllReduce schedule from an AG pattern (see
+/// module docs for the cut-propagation fixpoint).
+pub fn latency_allreduce(p: &dyn AgPattern) -> Schedule {
+    let n = p.n();
+    let mut steps: Vec<Vec<CutMsg>> = (0..p.num_steps())
+        .map(|k| {
+            p.sends(k)
+                .into_iter()
+                .filter(|m| !m.blocks.is_empty())
+                .map(|m| CutMsg { src: m.src, to: m.to, parts: vec![m.blocks], route: m.route })
+                .collect()
+        })
+        .collect();
+
+    // Fixpoint: simulate; on the first exact-cover violation, split the
+    // upstream part at the violating boundary and restart. Atoms only get
+    // finer (bounded below by singletons), so this terminates.
+    loop {
+        // state[node] = list of (atom, provenance). Scanning a step uses
+        // start-of-step state because deliveries are applied afterwards.
+        let mut state: Vec<Vec<(BlockSet, Provenance)>> = (0..n)
+            .map(|r| vec![(BlockSet::singleton(r, n), Provenance::Own)])
+            .collect();
+        // All discovered splits this pass: (step, msg, part) → boundaries.
+        use std::collections::HashMap;
+        let mut fixes: HashMap<(usize, usize, usize), Vec<BlockSet>> = HashMap::new();
+        for k in 0..steps.len() {
+            for msg in steps[k].iter() {
+                for part in msg.parts.iter() {
+                    // check exact cover of `part` by sender atoms
+                    for (atom, prov) in &state[msg.src as usize] {
+                        let inter = atom.intersect(part);
+                        if inter.is_empty() || inter == *atom {
+                            continue;
+                        }
+                        // Partial overlap: split the upstream message part
+                        // that delivered `atom` at the `part` boundary.
+                        match *prov {
+                            Provenance::Own => unreachable!("own atoms are singletons"),
+                            Provenance::Received { step, msg: umi, part: upi } => {
+                                let v = fixes.entry((step, umi, upi)).or_default();
+                                if !v.contains(part) {
+                                    v.push(part.clone());
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+            // deliver
+            for (mi, msg) in steps[k].iter().enumerate() {
+                for (pi, part) in msg.parts.iter().enumerate() {
+                    state[msg.to as usize].push((
+                        part.clone(),
+                        Provenance::Received { step: k, msg: mi, part: pi },
+                    ));
+                }
+            }
+        }
+        if fixes.is_empty() {
+            break;
+        }
+        // Apply every split, grouped per message, rebuilding the part list
+        // (indices in `fixes` refer to pre-split positions).
+        let mut by_msg: HashMap<(usize, usize), Vec<(usize, Vec<BlockSet>)>> = HashMap::new();
+        for ((step, umi, upi), bs) in fixes {
+            by_msg.entry((step, umi)).or_default().push((upi, bs));
+        }
+        for ((step, umi), mut splits) in by_msg {
+            splits.sort_by_key(|(upi, _)| *upi);
+            let msg = &mut steps[step][umi];
+            let mut new_parts: Vec<BlockSet> = Vec::with_capacity(msg.parts.len() + splits.len());
+            for (pi, part) in msg.parts.iter().enumerate() {
+                let mut pieces = vec![part.clone()];
+                if let Some((_, bounds)) = splits.iter().find(|(upi, _)| *upi == pi) {
+                    for b in bounds {
+                        pieces = pieces
+                            .into_iter()
+                            .flat_map(|p| {
+                                let a = p.intersect(b);
+                                let rest = p.difference(&a);
+                                [a, rest]
+                            })
+                            .filter(|p| !p.is_empty())
+                            .collect();
+                    }
+                }
+                new_parts.extend(pieces);
+            }
+            msg.parts = new_parts;
+        }
+    }
+
+    let mut s = Schedule::new(format!("{}-latency", p.name()), n, n);
+    for step_msgs in &steps {
+        let step = s.push_step();
+        for msg in step_msgs {
+            step.push(
+                msg.src,
+                Send {
+                    to: msg.to,
+                    pieces: msg
+                        .parts
+                        .iter()
+                        .map(|part| Piece {
+                            blocks: BlockSet::full(n),
+                            contrib: part.clone(),
+                            kind: Kind::Reduce,
+                        })
+                        .collect(),
+                    route: msg.route,
+                },
+            );
+        }
+    }
+    s
+}
+
+/// A concrete AllGather pattern built from a **peer sequence** by greedy
+/// block assignment.
+///
+/// The caller supplies, for each step and node, the ordered list of peers
+/// the node sends to. The constructor simulates the gather: each message
+/// carries `held(sender) \ (held(receiver) ∪ already-pending(receiver))`,
+/// i.e. exactly the blocks the receiver does not yet have and is not
+/// already being sent this step. For the canonical configurations this
+/// reproduces the closed-form block sets of the papers (full accumulated
+/// balls/runs); on irregular sizes it automatically performs the trimming
+/// of Trivance §4.4 / Bruck's partial final step. Coverage is *not*
+/// guaranteed by construction — the schedule validator proves it per
+/// instance.
+pub struct ExchangeAg {
+    name: String,
+    n: u32,
+    sends: Vec<Vec<AgSend>>,
+}
+
+impl ExchangeAg {
+    pub fn new(
+        name: String,
+        n: u32,
+        num_steps: usize,
+        peers: impl Fn(usize, u32) -> Vec<(u32, RouteHint)>,
+    ) -> Self {
+        let mut held: Vec<BlockSet> = (0..n).map(|r| BlockSet::singleton(r, n)).collect();
+        let mut sends = Vec::with_capacity(num_steps);
+        for k in 0..num_steps {
+            let mut pending: Vec<BlockSet> = vec![BlockSet::empty(); n as usize];
+            let mut step = Vec::new();
+            for r in 0..n {
+                for (to, route) in peers(k, r) {
+                    if to == r {
+                        continue;
+                    }
+                    let blocks = held[r as usize]
+                        .difference(&held[to as usize])
+                        .difference(&pending[to as usize]);
+                    if blocks.is_empty() {
+                        continue;
+                    }
+                    pending[to as usize].union_with(&blocks);
+                    step.push(AgSend { src: r, to, blocks, route });
+                }
+            }
+            for r in 0..n {
+                let p = std::mem::take(&mut pending[r as usize]);
+                held[r as usize].union_with(&p);
+            }
+            sends.push(step);
+        }
+        ExchangeAg { name, n, sends }
+    }
+
+    /// Does the pattern actually complete the gather? (Greedy construction
+    /// does not guarantee coverage; the registry uses this to decide
+    /// whether a fallback is needed.)
+    pub fn is_complete(&self) -> bool {
+        let mut held: Vec<BlockSet> = (0..self.n).map(|r| BlockSet::singleton(r, self.n)).collect();
+        for step in &self.sends {
+            for s in step {
+                let b = s.blocks.clone();
+                held[s.to as usize].union_with(&b);
+            }
+        }
+        held.iter().all(|h| h.is_full(self.n))
+    }
+}
+
+impl AgPattern for ExchangeAg {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+    fn n(&self) -> u32 {
+        self.n
+    }
+    fn num_steps(&self) -> usize {
+        self.sends.len()
+    }
+    fn sends(&self, step: usize) -> Vec<AgSend> {
+        self.sends[step].clone()
+    }
+}
+
+/// Derive the Reduce-Scatter schedule as the tree reversal of the AG
+/// pattern (see module docs).
+pub fn reduce_scatter_schedule(p: &dyn AgPattern) -> Schedule {
+    let n = p.n();
+    let s_total = p.num_steps();
+    // Forward-simulate the AG to collect, per block, the distribution tree:
+    // edges[(b)] = list of (step, u, v).
+    // held[v] tracks blocks to find each block's receive edge exactly once.
+    let mut edges: Vec<Vec<(usize, u32, u32)>> = vec![Vec::new(); n as usize];
+    let mut held: Vec<BlockSet> = (0..n).map(|r| BlockSet::singleton(r, n)).collect();
+    for k in 0..s_total {
+        let sends = p.sends(k);
+        for ag in &sends {
+            for b in ag.blocks.iter() {
+                debug_assert!(held[ag.src as usize].contains(b), "AG sends unheld block");
+                edges[b as usize].push((k, ag.src, ag.to));
+            }
+        }
+        for ag in &sends {
+            held[ag.to as usize].union_with(&ag.blocks);
+        }
+    }
+
+    // subtree[b][v] = contributor set v forwards for block b in the RS =
+    // {v} ∪ subtrees of v's AG children. Compute per block in reverse step
+    // order.
+    let mut rs = Schedule::new(format!("{}-rs", p.name()), n, n);
+    for _ in 0..s_total {
+        rs.push_step();
+    }
+    // Group RS pieces per (step, src, dst).
+    use std::collections::HashMap;
+    let mut groups: HashMap<(usize, u32, u32), Vec<(u32, BlockSet)>> = HashMap::new();
+    for b in 0..n {
+        let evs = &edges[b as usize];
+        let mut subtree: HashMap<u32, BlockSet> = HashMap::new();
+        // process AG edges in reverse order: children first
+        for &(t, u, v) in evs.iter().rev() {
+            let sub_v = subtree
+                .remove(&v)
+                .unwrap_or_else(|| BlockSet::singleton(v, n))
+                .union(&BlockSet::singleton(v, n));
+            // RS: v -> u at reversed step, contrib = subtree(v)
+            groups
+                .entry((s_total - 1 - t, v, u))
+                .or_default()
+                .push((b, sub_v.clone()));
+            // accumulate into u's subtree
+            let e = subtree.entry(u).or_insert_with(|| BlockSet::singleton(u, n));
+            e.union_with(&sub_v);
+        }
+        // sanity: block b's root is node b, whose subtree is everything
+        debug_assert!(
+            evs.is_empty() || subtree.get(&b).map(|s| s.is_full(n)).unwrap_or(false),
+            "block {b} tree does not root at its owner"
+        );
+    }
+    let mut keys: Vec<_> = groups.keys().copied().collect();
+    keys.sort_unstable();
+    for (t, src, dst) in keys {
+        let mut pieces_raw = groups.remove(&(t, src, dst)).unwrap();
+        pieces_raw.sort_by_key(|(b, _)| *b);
+        // Merge blocks that share an identical contributor set into one
+        // piece (keeps the IR compact; byte accounting is unchanged).
+        let mut pieces: Vec<Piece> = Vec::new();
+        for (b, contrib) in pieces_raw {
+            if let Some(last) = pieces.last_mut() {
+                if last.contrib == contrib {
+                    last.blocks.union_with(&BlockSet::singleton(b, n));
+                    continue;
+                }
+            }
+            pieces.push(Piece {
+                blocks: BlockSet::singleton(b, n),
+                contrib,
+                kind: Kind::Reduce,
+            });
+        }
+        // Reverse the route hint: the RS message travels the opposite way.
+        let route = RouteHint::Minimal;
+        rs.steps[t].push(src, Send { to: dst, pieces, route });
+    }
+    rs
+}
+
+/// Bandwidth-optimal AllReduce: Reduce-Scatter (tree reversal) followed by
+/// the AllGather itself. Completes in `2 · num_steps` steps.
+pub fn bandwidth_allreduce(p: &dyn AgPattern) -> Schedule {
+    let mut s = reduce_scatter_schedule(p);
+    s.name = format!("{}-bandwidth", p.name());
+    let ag = allgather_schedule(p);
+    s.concat(&ag);
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::validate::{validate_allgather, validate_allreduce};
+
+    /// Simple ring AG pattern: at step t every node sends block (r - t) to
+    /// its right neighbor — the Hamiltonian ring building block.
+    struct RingAg {
+        n: u32,
+    }
+
+    impl AgPattern for RingAg {
+        fn name(&self) -> String {
+            format!("ring n={}", self.n)
+        }
+        fn n(&self) -> u32 {
+            self.n
+        }
+        fn num_steps(&self) -> usize {
+            self.n as usize - 1
+        }
+        fn sends(&self, step: usize) -> Vec<AgSend> {
+            (0..self.n)
+                .map(|r| AgSend {
+                    src: r,
+                    to: (r + 1) % self.n,
+                    blocks: BlockSet::singleton(
+                        (r + self.n - step as u32 % self.n) % self.n,
+                        self.n,
+                    ),
+                    route: RouteHint::Minimal,
+                })
+                .collect()
+        }
+    }
+
+    /// Doubling AG: step k exchanges with r XOR 2^k, sending everything
+    /// held (recursive doubling); needs n a power of two.
+    struct DoublingAg {
+        n: u32,
+    }
+
+    impl AgPattern for DoublingAg {
+        fn name(&self) -> String {
+            format!("doubling n={}", self.n)
+        }
+        fn n(&self) -> u32 {
+            self.n
+        }
+        fn num_steps(&self) -> usize {
+            crate::util::ceil_log(2, self.n as u64) as usize
+        }
+        fn sends(&self, step: usize) -> Vec<AgSend> {
+            let d = 1u32 << step;
+            (0..self.n)
+                .map(|r| {
+                    // held set after k steps = the aligned range [r - r%d, +d)
+                    let base = r - (r % d);
+                    AgSend {
+                        src: r,
+                        to: r ^ d,
+                        blocks: BlockSet::cyc_range(base, d as u64, self.n),
+                        route: RouteHint::Minimal,
+                    }
+                })
+                .collect()
+        }
+    }
+
+    #[test]
+    fn ring_ag_valid() {
+        for n in [2u32, 3, 5, 8] {
+            let p = RingAg { n };
+            validate_allgather(&allgather_schedule(&p)).unwrap();
+        }
+    }
+
+    #[test]
+    fn ring_latency_allreduce_valid() {
+        for n in [2u32, 3, 5, 8] {
+            let p = RingAg { n };
+            validate_allreduce(&latency_allreduce(&p)).unwrap();
+        }
+    }
+
+    #[test]
+    fn ring_bandwidth_allreduce_valid() {
+        for n in [2u32, 3, 5, 8] {
+            let p = RingAg { n };
+            let s = bandwidth_allreduce(&p);
+            assert_eq!(s.num_steps(), 2 * (n as usize - 1));
+            validate_allreduce(&s).unwrap();
+        }
+    }
+
+    #[test]
+    fn doubling_valid() {
+        for n in [2u32, 4, 8, 16] {
+            let p = DoublingAg { n };
+            validate_allgather(&allgather_schedule(&p)).unwrap();
+            validate_allreduce(&latency_allreduce(&p)).unwrap();
+            validate_allreduce(&bandwidth_allreduce(&p)).unwrap();
+        }
+    }
+
+    #[test]
+    fn bandwidth_rs_moves_minimal_data() {
+        // Rabenseifner-style bound: per node ~2m(1-1/n) total in B variant.
+        let p = DoublingAg { n: 8 };
+        let s = bandwidth_allreduce(&p);
+        let sent: f64 = (0..8).map(|r| s.node_sent_rel_bytes(r)).sum::<f64>() / 8.0;
+        let expect = 2.0 * (1.0 - 1.0 / 8.0);
+        assert!((sent - expect).abs() < 1e-9, "sent {sent} expect {expect}");
+    }
+}

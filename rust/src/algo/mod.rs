@@ -1,0 +1,19 @@
+//! Collective algorithms as AllGather patterns.
+//!
+//! * [`rings`] — the 1-D building blocks: Trivance (§4, including the §4.4
+//!   arbitrary-n final adjustment step), Bruck (radix-3, two same-direction
+//!   sends per step), Swing, Recursive Doubling, and the Hamiltonian ring.
+//! * [`multidim`] — the product/interleave machinery lifting any set of
+//!   per-dimension ring patterns onto a torus (§5), the mirrored
+//!   (reflection) combinator, concurrent data slices, and virtual
+//!   power-of-three padding.
+//! * [`registry`] — the user-facing catalogue: algorithm × variant × torus
+//!   → validated schedule, exactly the configurations of the paper's
+//!   evaluation.
+
+pub mod rings;
+pub mod multidim;
+pub mod hierarchical;
+pub mod registry;
+
+pub use registry::{build, Algo, BuiltCollective, Variant};

@@ -1,0 +1,429 @@
+//! Lifting ring patterns onto multidimensional tori (§5).
+//!
+//! * [`ProductAg`] — the product/interleave construction: given one ring
+//!   pattern per torus dimension and a global step→dimension assignment,
+//!   every node's held set is the *product* of its per-dimension held sets;
+//!   a step in dimension `d` runs that dimension's next ring step on every
+//!   fiber, carrying `held(other dims) × (new-in-d)`. This is exactly the
+//!   Fig. 5 pattern when the assignment round-robins dimensions, and the
+//!   sequential per-dimension phase structure of Bucket/Swing/RD when it
+//!   concatenates them.
+//! * [`reflect_schedule`] — the mirrored-collective combinator (§2.4
+//!   "bidirectional design"): relabels every rank by coordinate reflection,
+//!   producing the opposite-direction copy.
+//! * [`concurrent_slices`] — overlays `S` collectives, each operating on a
+//!   `1/S` slice of the data vector, into one schedule (block space `S·n`).
+//! * [`virtual_pad`] — embeds a collective built for `N > n` virtual nodes
+//!   onto `n` real nodes (co-hosted messages leave the network schedule);
+//!   the documented fallback for sizes where a pattern has no native
+//!   arbitrary-`n` form.
+
+use crate::agpattern::{AgPattern, AgSend};
+use crate::blockset::BlockSet;
+use crate::schedule::{RouteHint, Schedule, Send};
+use crate::topology::Torus;
+
+/// Simulate an AG pattern and return `held[t][node]` = blocks held *before*
+/// step `t` (index `num_steps()` = final state).
+pub fn simulate_held(p: &dyn AgPattern) -> Vec<Vec<BlockSet>> {
+    let n = p.n();
+    let mut held: Vec<Vec<BlockSet>> = Vec::with_capacity(p.num_steps() + 1);
+    held.push((0..n).map(|r| BlockSet::singleton(r, n)).collect());
+    for k in 0..p.num_steps() {
+        let mut next = held[k].clone();
+        for s in p.sends(k) {
+            next[s.to as usize].union_with(&s.blocks);
+        }
+        held.push(next);
+    }
+    held
+}
+
+/// Product/interleave lifting of per-dimension ring patterns (module docs).
+pub struct ProductAg {
+    name: String,
+    torus: Torus,
+    /// Per dim: ring sends per ring step.
+    ring_sends: Vec<Vec<Vec<AgSend>>>,
+    /// Per dim: held-before tables from [`simulate_held`].
+    ring_held: Vec<Vec<Vec<BlockSet>>>,
+    /// Global step → dimension.
+    step_dims: Vec<usize>,
+}
+
+impl ProductAg {
+    /// `patterns[d]` must be a pattern over a ring of size `torus.dims()[d]`.
+    /// `step_dims` assigns every global step to a dimension and must contain
+    /// each dimension exactly `patterns[d].num_steps()` times.
+    pub fn new(
+        name: String,
+        torus: Torus,
+        patterns: &[&dyn AgPattern],
+        step_dims: Vec<usize>,
+    ) -> Self {
+        assert_eq!(patterns.len(), torus.ndims());
+        for (d, p) in patterns.iter().enumerate() {
+            assert_eq!(p.n(), torus.dims()[d], "pattern/torus dim {d} mismatch");
+            let count = step_dims.iter().filter(|&&x| x == d).count();
+            assert_eq!(count, p.num_steps(), "step_dims gives dim {d} {count} steps");
+        }
+        let ring_sends: Vec<Vec<Vec<AgSend>>> = patterns
+            .iter()
+            .map(|p| (0..p.num_steps()).map(|k| p.sends(k)).collect())
+            .collect();
+        let ring_held = patterns.iter().map(|p| simulate_held(*p)).collect();
+        ProductAg { name, torus, ring_sends, ring_held, step_dims }
+    }
+
+    /// Round-robin dimension assignment starting at `start` (the Fig. 5
+    /// interleave): cycles dimensions, skipping ones whose pattern is
+    /// exhausted.
+    pub fn round_robin(dims_steps: &[usize], start: usize) -> Vec<usize> {
+        let d = dims_steps.len();
+        let mut remaining = dims_steps.to_vec();
+        let total: usize = dims_steps.iter().sum();
+        let mut out = Vec::with_capacity(total);
+        let mut i = start;
+        while out.len() < total {
+            if remaining[i % d] > 0 {
+                remaining[i % d] -= 1;
+                out.push(i % d);
+            }
+            i += 1;
+        }
+        out
+    }
+
+    /// Sequential per-dimension phases, rotated to start at `start` (the
+    /// Bucket/Swing/RD structure).
+    pub fn sequential(dims_steps: &[usize], start: usize) -> Vec<usize> {
+        let d = dims_steps.len();
+        let mut out = Vec::new();
+        for i in 0..d {
+            let dim = (start + i) % d;
+            out.extend(std::iter::repeat(dim).take(dims_steps[dim]));
+        }
+        out
+    }
+
+    /// Ring-step index within `dim` for global step `k`.
+    fn ring_step(&self, k: usize) -> usize {
+        let d = self.step_dims[k];
+        self.step_dims[..k].iter().filter(|&&x| x == d).count()
+    }
+}
+
+impl AgPattern for ProductAg {
+    fn name(&self) -> String {
+        self.name.clone()
+    }
+
+    fn n(&self) -> u32 {
+        self.torus.n()
+    }
+
+    fn num_steps(&self) -> usize {
+        self.step_dims.len()
+    }
+
+    fn sends(&self, k: usize) -> Vec<AgSend> {
+        let d = self.step_dims[k];
+        let t = self.ring_step(k);
+        let ndims = self.torus.ndims();
+        // Per-dim ring-step counters at global step k.
+        let t_of: Vec<usize> = (0..ndims)
+            .map(|e| self.step_dims[..k].iter().filter(|&&x| x == e).count())
+            .collect();
+        let mut out = Vec::new();
+        // For each ring send and each fiber through dimension d.
+        for rs in &self.ring_sends[d][t] {
+            for r in 0..self.torus.n() {
+                if self.torus.coord(r, d) != rs.src {
+                    continue;
+                }
+                let dst = {
+                    let mut c = self.torus.coords(r);
+                    c[d] = rs.to;
+                    self.torus.rank(&c)
+                };
+                // blocks = product(held in other dims, new blocks in d)
+                let ranges: Vec<BlockSet> = (0..ndims)
+                    .map(|e| {
+                        if e == d {
+                            rs.blocks.clone()
+                        } else {
+                            self.ring_held[e][t_of[e]][self.torus.coord(r, e) as usize].clone()
+                        }
+                    })
+                    .collect();
+                let blocks = self.torus.product_set(&ranges);
+                if blocks.is_empty() {
+                    continue;
+                }
+                let route = match rs.route {
+                    RouteHint::Minimal => RouteHint::Minimal,
+                    RouteHint::Directed { dir, .. } => RouteHint::Directed { dim: d as u8, dir },
+                };
+                out.push(AgSend { src: r, to: dst, blocks, route });
+            }
+        }
+        out
+    }
+}
+
+/// Coordinate-reflection rank map on a torus (`c_d → (a_d − c_d) mod a_d`).
+pub fn reflection_map(t: &Torus) -> Vec<u32> {
+    (0..t.n())
+        .map(|r| {
+            let c: Vec<u32> = t
+                .coords(r)
+                .iter()
+                .zip(t.dims())
+                .map(|(&c, &a)| (a - c) % a)
+                .collect();
+            t.rank(&c)
+        })
+        .collect()
+}
+
+/// Apply a rank permutation to a whole schedule: node ids, contributor
+/// sets, and block ids (block `b` is rank `b`'s block). With the
+/// reflection map this yields the mirrored collective of §2.4.
+pub fn permute_schedule(s: &Schedule, map: &[u32]) -> Schedule {
+    assert_eq!(map.len(), s.n as usize);
+    assert_eq!(s.n, s.n_blocks, "permute_schedule expects rank-indexed blocks");
+    let map_set = |bs: &BlockSet| -> BlockSet {
+        let ranks: Vec<u32> = bs.iter().map(|r| map[r as usize]).collect();
+        BlockSet::from_ranks(&ranks, s.n)
+    };
+    let mut out = Schedule::new(format!("{}-mirror", s.name), s.n, s.n_blocks);
+    for step in &s.steps {
+        let st = out.push_step();
+        for (src, sends) in step.sends.iter().enumerate() {
+            for snd in sends {
+                let pieces = snd
+                    .pieces
+                    .iter()
+                    .map(|p| crate::schedule::Piece {
+                        blocks: map_set(&p.blocks),
+                        contrib: map_set(&p.contrib),
+                        kind: p.kind,
+                    })
+                    .collect();
+                let route = match snd.route {
+                    RouteHint::Minimal => RouteHint::Minimal,
+                    RouteHint::Directed { dim, dir } => RouteHint::Directed { dim, dir: -dir },
+                };
+                st.push(map[src], Send { to: map[snd.to as usize], pieces, route });
+            }
+        }
+    }
+    out
+}
+
+/// Overlay `S` schedules, each owning a `1/S` slice of the vector, into one
+/// schedule with block space `S·n_blocks` (slice `c`'s block `b` becomes
+/// global block `c·n_blocks + b`).
+pub fn concurrent_slices(slices: Vec<Schedule>, name: String) -> Schedule {
+    assert!(!slices.is_empty());
+    let n = slices[0].n;
+    let nb = slices[0].n_blocks;
+    let s_count = slices.len() as u32;
+    let mut out = Schedule::new(name, n, s_count * nb);
+    for (c, sl) in slices.iter().enumerate() {
+        assert_eq!(sl.n, n);
+        assert_eq!(sl.n_blocks, nb);
+        while out.steps.len() < sl.steps.len() {
+            out.push_step();
+        }
+        let off = (c as u32 * nb) as i64;
+        for (k, step) in sl.steps.iter().enumerate() {
+            for (src, sends) in step.sends.iter().enumerate() {
+                for snd in sends {
+                    let pieces = snd
+                        .pieces
+                        .iter()
+                        .map(|p| crate::schedule::Piece {
+                            // embed the slice's block ids into the global
+                            // block space (no wrap: offsets are multiples
+                            // of nb and the space is s_count·nb)
+                            blocks: BlockSet::from_intervals(
+                                p.blocks
+                                    .intervals()
+                                    .map(|(s, e)| ((s as i64 + off) as u32, (e as i64 + off) as u32))
+                                    .collect(),
+                            ),
+                            contrib: p.contrib.clone(),
+                            kind: p.kind,
+                        })
+                        .collect();
+                    out.steps[k].sends[src].push(Send {
+                        to: snd.to,
+                        pieces,
+                        route: snd.route,
+                    });
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Virtual padding: a collective built for `nv > n` virtual nodes executed
+/// on `n` real hosts. Returns the **network schedule** over the real nodes:
+/// virtual rank `v` is hosted on `host(v) = ⌊v·n/nv⌋` (order-preserving, so
+/// virtual distances map proportionally onto real distances); messages
+/// between co-hosted virtual ranks cost nothing on the network and are
+/// dropped. The *virtual* schedule remains the source of truth for
+/// validation and numeric execution (real node `r` takes the result of its
+/// first hosted virtual rank).
+pub fn virtual_pad_network(virtual_schedule: &Schedule, n_real: u32) -> Schedule {
+    let nv = virtual_schedule.n;
+    assert!(n_real <= nv);
+    let host = |v: u32| -> u32 { ((v as u64 * n_real as u64) / nv as u64) as u32 };
+    let mut out = Schedule::new(
+        format!("{}-padded(n={n_real})", virtual_schedule.name),
+        n_real,
+        virtual_schedule.n_blocks,
+    );
+    for step in &virtual_schedule.steps {
+        let st = out.push_step();
+        let mut any = false;
+        for (src, sends) in step.sends.iter().enumerate() {
+            let hsrc = host(src as u32);
+            for snd in sends {
+                let hdst = host(snd.to);
+                if hsrc == hdst {
+                    continue; // co-hosted: a local memory move
+                }
+                any = true;
+                st.push(hsrc, Send { to: hdst, pieces: snd.pieces.clone(), route: snd.route });
+            }
+        }
+        if !any {
+            // A step whose traffic is entirely local still costs α
+            // (the virtual algorithm synchronizes on it); keep the empty
+            // step so step counting stays faithful.
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agpattern::{
+        allgather_schedule, bandwidth_allreduce, latency_allreduce,
+    };
+    use crate::algo::rings::{hamiltonian, trivance, Order};
+    use crate::schedule::validate::{validate_allgather, validate_allreduce};
+
+    #[test]
+    fn product_trivance_3x3_valid() {
+        let t = Torus::new(&[3, 3]);
+        let p0 = trivance(3, Order::Inc);
+        let p1 = trivance(3, Order::Inc);
+        let sd = ProductAg::round_robin(&[1, 1], 0);
+        let p = ProductAg::new("t2d".into(), t, &[&p0, &p1], sd);
+        assert_eq!(p.num_steps(), 2); // log₃ 9
+        validate_allgather(&allgather_schedule(&p)).unwrap();
+        validate_allreduce(&latency_allreduce(&p)).unwrap();
+    }
+
+    #[test]
+    fn product_trivance_9x9_steps_and_valid() {
+        let t = Torus::new(&[9, 9]);
+        let p0 = trivance(9, Order::Inc);
+        let p1 = trivance(9, Order::Inc);
+        let sd = ProductAg::round_robin(&[2, 2], 0);
+        let p = ProductAg::new("t2d".into(), t, &[&p0, &p1], sd);
+        assert_eq!(p.num_steps(), 4); // log₃ 81
+        validate_allgather(&allgather_schedule(&p)).unwrap();
+        validate_allreduce(&latency_allreduce(&p)).unwrap();
+    }
+
+    #[test]
+    fn product_bandwidth_3x3_valid() {
+        let t = Torus::new(&[3, 3]);
+        let p0 = trivance(3, Order::Dec);
+        let p1 = trivance(3, Order::Dec);
+        let sd = ProductAg::round_robin(&[1, 1], 0);
+        let p = ProductAg::new("t2d".into(), t, &[&p0, &p1], sd);
+        let s = bandwidth_allreduce(&p);
+        assert_eq!(s.num_steps(), 4);
+        validate_allreduce(&s).unwrap();
+    }
+
+    #[test]
+    fn product_bucket_sequential_valid() {
+        let t = Torus::new(&[3, 4]);
+        let p0 = hamiltonian(3);
+        let p1 = hamiltonian(4);
+        let sd = ProductAg::sequential(&[2, 3], 0);
+        let p = ProductAg::new("bucket2d".into(), t.clone(), &[&p0, &p1], sd);
+        validate_allgather(&allgather_schedule(&p)).unwrap();
+        validate_allreduce(&bandwidth_allreduce(&p)).unwrap();
+    }
+
+    #[test]
+    fn step_dim_assignments() {
+        assert_eq!(ProductAg::round_robin(&[2, 2], 0), vec![0, 1, 0, 1]);
+        assert_eq!(ProductAg::round_robin(&[2, 2], 1), vec![1, 0, 1, 0]);
+        assert_eq!(ProductAg::round_robin(&[3, 1], 0), vec![0, 1, 0, 0]);
+        assert_eq!(ProductAg::sequential(&[2, 3], 1), vec![1, 1, 1, 0, 0]);
+    }
+
+    #[test]
+    fn reflection_is_involution() {
+        let t = Torus::new(&[4, 3]);
+        let m = reflection_map(&t);
+        for r in 0..t.n() {
+            assert_eq!(m[m[r as usize] as usize], r);
+        }
+    }
+
+    #[test]
+    fn mirrored_schedule_valid() {
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let t = Torus::ring(9);
+        let m = permute_schedule(&s, &reflection_map(&t));
+        validate_allreduce(&m).unwrap();
+    }
+
+    #[test]
+    fn concurrent_slices_valid() {
+        // two mirrored trivance collectives, half data each
+        let t = Torus::ring(9);
+        let a = latency_allreduce(&trivance(9, Order::Inc));
+        let b = permute_schedule(&a, &reflection_map(&t));
+        let merged = concurrent_slices(vec![a.clone(), b], "pair".into());
+        assert_eq!(merged.n_blocks, 18);
+        validate_allreduce(&merged).unwrap();
+        // each message carries half the vector
+        let rel = merged.steps[0].sends[0][0].rel_bytes(merged.n_blocks);
+        assert!((rel - 0.5).abs() < 1e-12, "rel={rel}");
+        // total sent per node is unchanged vs the single collective
+        let single = a.node_sent_rel_bytes(0);
+        let merged_sent = merged.node_sent_rel_bytes(0);
+        assert!((merged_sent - single).abs() < 1e-9);
+    }
+
+    #[test]
+    fn virtual_pad_drops_local_messages() {
+        // pad a 9-node trivance onto 7 real nodes
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        validate_allreduce(&s).unwrap(); // virtual schedule is the validated one
+        let net = virtual_pad_network(&s, 7);
+        assert_eq!(net.n, 7);
+        assert_eq!(net.num_steps(), s.num_steps());
+        assert!(net.num_messages() < s.num_messages());
+        // no self-sends remain
+        for st in &net.steps {
+            for (src, sends) in st.sends.iter().enumerate() {
+                for snd in sends {
+                    assert_ne!(snd.to as usize, src);
+                }
+            }
+        }
+    }
+}

@@ -1,0 +1,409 @@
+//! The algorithm catalogue: algorithm × variant × torus → schedules.
+//!
+//! This is the single entry point the harness, CLI, simulator, and executor
+//! go through. A [`BuiltCollective`] carries two schedules:
+//!
+//! * `exec` — the semantically complete schedule used for validation and
+//!   numeric execution. For virtually-padded configurations it runs over
+//!   the padded (virtual) node count.
+//! * `net` — the schedule whose messages actually hit the network (equal to
+//!   `exec` except under virtual padding, where co-hosted messages vanish).
+
+use crate::agpattern::{bandwidth_allreduce, latency_allreduce, AgPattern};
+use crate::algo::multidim::{
+    concurrent_slices, permute_schedule, reflection_map, virtual_pad_network, ProductAg,
+};
+use crate::algo::rings::{bruck, hamiltonian, recdoub, swing, trivance, Order};
+use crate::schedule::Schedule;
+use crate::topology::Torus;
+use crate::util::{ceil_log, is_power_of};
+
+/// The AllReduce algorithms of the paper's evaluation.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Algo {
+    /// §4 — this paper's contribution.
+    Trivance,
+    /// Bruck with the evaluation's shortest-path routing modification.
+    Bruck,
+    /// Original Bruck: all traffic in one ring direction (ablation).
+    BruckUnidir,
+    /// Swing (De Sensi et al., NSDI'24); power-of-two sizes.
+    Swing,
+    /// Recursive Doubling / Rabenseifner; power-of-two sizes.
+    RecDoub,
+    /// Hamiltonian-ring / Bucket (bandwidth-optimal baseline).
+    Bucket,
+}
+
+impl Algo {
+    pub const ALL: [Algo; 6] = [
+        Algo::Trivance,
+        Algo::Bruck,
+        Algo::BruckUnidir,
+        Algo::Swing,
+        Algo::RecDoub,
+        Algo::Bucket,
+    ];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Algo::Trivance => "trivance",
+            Algo::Bruck => "bruck",
+            Algo::BruckUnidir => "bruck-unidir",
+            Algo::Swing => "swing",
+            Algo::RecDoub => "recdoub",
+            Algo::Bucket => "bucket",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Algo> {
+        Algo::ALL.into_iter().find(|a| a.label() == s)
+    }
+}
+
+/// Latency-optimal (single phase, full-vector aggregates) or
+/// bandwidth-optimal (Reduce-Scatter + AllGather) variant.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Variant {
+    Latency,
+    Bandwidth,
+}
+
+impl Variant {
+    pub const ALL: [Variant; 2] = [Variant::Latency, Variant::Bandwidth];
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Variant::Latency => "L",
+            Variant::Bandwidth => "B",
+        }
+    }
+}
+
+/// A built collective: execution + network schedules (see module docs).
+#[derive(Clone, Debug)]
+pub struct BuiltCollective {
+    pub name: String,
+    pub algo: Algo,
+    pub variant: Variant,
+    pub exec: Schedule,
+    pub net: Schedule,
+    /// True when the collective was embedded via virtual padding.
+    pub padded: bool,
+}
+
+impl BuiltCollective {
+    fn plain(name: String, algo: Algo, variant: Variant, s: Schedule) -> Self {
+        BuiltCollective { name, algo, variant, net: s.clone(), exec: s, padded: false }
+    }
+
+    /// Validate the execution schedule (disjointness + coverage).
+    pub fn validate(&self) -> Result<crate::schedule::validate::Report, String> {
+        crate::schedule::validate::validate_allreduce(&self.exec)
+    }
+}
+
+/// Build the ring pattern for one dimension of `algo`, in the given step
+/// order. Returns `None` when the size is unsupported natively (then the
+/// caller pads).
+fn ring_pattern(algo: Algo, n: u32, order: Order) -> Option<Box<dyn AgPattern>> {
+    match algo {
+        Algo::Trivance => {
+            let p = trivance(n, order);
+            p.is_complete().then(|| Box::new(p) as Box<dyn AgPattern>)
+        }
+        Algo::Bruck => {
+            let p = bruck(n, order, false);
+            p.is_complete().then(|| Box::new(p) as Box<dyn AgPattern>)
+        }
+        Algo::BruckUnidir => {
+            let p = bruck(n, order, true);
+            p.is_complete().then(|| Box::new(p) as Box<dyn AgPattern>)
+        }
+        Algo::Swing => {
+            is_power_of(2, n as u64).then(|| Box::new(swing(n, order)) as Box<dyn AgPattern>)
+        }
+        Algo::RecDoub => {
+            is_power_of(2, n as u64).then(|| Box::new(recdoub(n, order)) as Box<dyn AgPattern>)
+        }
+        Algo::Bucket => Some(Box::new(hamiltonian(n))),
+    }
+}
+
+/// Derive one slice's AllReduce schedule from its pattern.
+fn derive(p: &dyn AgPattern, variant: Variant) -> Schedule {
+    match variant {
+        Variant::Latency => latency_allreduce(p),
+        Variant::Bandwidth => bandwidth_allreduce(p),
+    }
+}
+
+/// Step order used for the given variant: latency variants run distances
+/// increasing; bandwidth variants are derived from the decreasing-distance
+/// AllGather phase (see [`crate::algo::rings`] module docs).
+fn order_for(variant: Variant) -> Order {
+    match variant {
+        Variant::Latency => Order::Inc,
+        Variant::Bandwidth => Order::Dec,
+    }
+}
+
+/// Does this algorithm family use mirrored pairs (Swing/RD/Bucket `2D`
+/// slices) rather than one inherently bidirectional collective per
+/// dimension (Trivance/Bruck, `D` slices)? Applies to the bandwidth
+/// variants only: per Appendix B, "the latency-optimal variants of
+/// Recursive Doubling and Swing utilize only a single port per node" —
+/// their L variants run one un-mirrored collective on the full vector
+/// (which is exactly what makes Δ = log₂n/2 and Θ = n/3 in Table 1).
+fn mirrored_family(algo: Algo) -> bool {
+    matches!(algo, Algo::Swing | Algo::RecDoub | Algo::Bucket)
+}
+
+/// Build `algo` (`variant`) on `torus`. Errors only on genuinely
+/// unsupported configurations (e.g. Swing on a non-power-of-two dimension,
+/// where the paper's SST setup has no implementation either and this crate
+/// falls back to virtual padding).
+pub fn build(algo: Algo, variant: Variant, torus: &Torus) -> Result<BuiltCollective, String> {
+    let name = format!("{}-{} {:?}", algo.label(), variant.label(), torus.dims());
+    let d = torus.ndims();
+    let order = order_for(variant);
+
+    // Try native per-dimension patterns first.
+    let native: Option<Vec<Box<dyn AgPattern>>> = torus
+        .dims()
+        .iter()
+        .map(|&a| ring_pattern(algo, a, order))
+        .collect();
+
+    if let Some(pats) = native {
+        let dims_steps: Vec<usize> = pats.iter().map(|p| p.num_steps()).collect();
+        let refs: Vec<&dyn AgPattern> = pats.iter().map(|b| b.as_ref()).collect();
+        let mut slices = Vec::new();
+        let single_port_l = mirrored_family(algo) && variant == Variant::Latency;
+        if d == 1 && (!mirrored_family(algo) || single_port_l) {
+            // Trivance/Bruck on a ring (bidirectional by construction), or
+            // a single-port latency variant: one collective, full vector.
+            slices.push(derive(refs[0], variant));
+        } else if single_port_l {
+            // Single-port L variant on a torus: one sequential
+            // per-dimension collective, full vector.
+            let step_dims = ProductAg::sequential(&dims_steps, 0);
+            let prod = ProductAg::new(algo.label().to_string(), torus.clone(), &refs, step_dims);
+            slices.push(derive(&prod, variant));
+        } else {
+            for start in 0..d {
+                let sched = match (variant, d) {
+                    // Multidimensional bandwidth variant: hierarchical
+                    // per-dimension RS/AG phases (§2.4 / §5), built from
+                    // O(a)-sized ring schedules — the scalable path.
+                    (Variant::Bandwidth, 2..) => {
+                        let dim_order: Vec<usize> = (0..d).map(|i| (start + i) % d).collect();
+                        crate::algo::hierarchical::hierarchical_bandwidth(
+                            torus,
+                            &refs,
+                            &dim_order,
+                            format!("{}[d0={start}]", algo.label()),
+                        )
+                    }
+                    _ => {
+                        let step_dims = if mirrored_family(algo) {
+                            ProductAg::sequential(&dims_steps, start)
+                        } else {
+                            ProductAg::round_robin(&dims_steps, start)
+                        };
+                        let prod;
+                        let pat: &dyn AgPattern = if d == 1 {
+                            refs[0]
+                        } else {
+                            prod = ProductAg::new(
+                                format!("{}[d0={start}]", algo.label()),
+                                torus.clone(),
+                                &refs,
+                                step_dims,
+                            );
+                            &prod
+                        };
+                        derive(pat, variant)
+                    }
+                };
+                if mirrored_family(algo) {
+                    let mirror = permute_schedule(&sched, &reflection_map(torus));
+                    slices.push(sched);
+                    slices.push(mirror);
+                } else {
+                    slices.push(sched);
+                }
+            }
+        }
+        let merged = if slices.len() == 1 {
+            let mut s = slices.pop().unwrap();
+            s.name = name.clone();
+            s
+        } else {
+            concurrent_slices(slices, name.clone())
+        };
+        return Ok(BuiltCollective::plain(name, algo, variant, merged));
+    }
+
+    // Virtual padding fallback: embed the collective built for the next
+    // supported dimension sizes onto the real torus.
+    let pad_base: u64 = match algo {
+        Algo::Swing | Algo::RecDoub => 2,
+        _ => 3,
+    };
+    let padded_dims: Vec<u32> = torus
+        .dims()
+        .iter()
+        .map(|&a| pad_base.pow(ceil_log(pad_base, a as u64)) as u32)
+        .collect();
+    if padded_dims.iter().zip(torus.dims()).all(|(a, b)| a == b) {
+        return Err(format!("{name}: unsupported size and padding is a no-op"));
+    }
+    let vtorus = Torus::new(&padded_dims);
+    let inner = build(algo, variant, &vtorus)?;
+    // Per-dimension host mapping ⌊c·a/av⌋ composes into the rank map used
+    // by virtual_pad_network only for rings; for tori map per dimension.
+    let net = if d == 1 {
+        virtual_pad_network(&inner.exec, torus.n())
+    } else {
+        // Build an explicit host map per rank and collapse.
+        collapse_torus(&inner.exec, &vtorus, torus)
+    };
+    Ok(BuiltCollective {
+        name: format!("{name} (padded {:?})", padded_dims),
+        algo,
+        variant,
+        exec: inner.exec,
+        net,
+        padded: true,
+    })
+}
+
+/// Collapse a schedule over `vtorus` onto `torus` by mapping each virtual
+/// coordinate `c` to host coordinate `⌊c·a/av⌋` per dimension; co-hosted
+/// messages are dropped (local moves).
+fn collapse_torus(s: &Schedule, vtorus: &Torus, torus: &Torus) -> Schedule {
+    let host = |v: u32| -> u32 {
+        let cs: Vec<u32> = vtorus
+            .coords(v)
+            .iter()
+            .zip(vtorus.dims().iter().zip(torus.dims()))
+            .map(|(&c, (&av, &a))| ((c as u64 * a as u64) / av as u64) as u32)
+            .collect();
+        torus.rank(&cs)
+    };
+    let mut out = Schedule::new(
+        format!("{}-padded({:?})", s.name, torus.dims()),
+        torus.n(),
+        s.n_blocks,
+    );
+    for step in &s.steps {
+        let st = out.push_step();
+        for (src, sends) in step.sends.iter().enumerate() {
+            let hsrc = host(src as u32);
+            for snd in sends {
+                let hdst = host(snd.to);
+                if hsrc == hdst {
+                    continue;
+                }
+                st.push(
+                    hsrc,
+                    crate::schedule::Send {
+                        to: hdst,
+                        pieces: snd.pieces.clone(),
+                        route: snd.route,
+                    },
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_catalogue_valid() {
+        let t = Torus::ring(8);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?}: {e}"));
+                b.validate()
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn ring9_trivance_and_bruck() {
+        let t = Torus::ring(9);
+        for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t).unwrap();
+                assert!(!b.padded);
+                b.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn swing_pads_on_non_pow2() {
+        let t = Torus::ring(9);
+        let b = build(Algo::Swing, Variant::Latency, &t).unwrap();
+        assert!(b.padded);
+        b.validate().unwrap(); // exec schedule over 16 virtual nodes
+        assert_eq!(b.exec.n, 16);
+        assert_eq!(b.net.n, 9);
+    }
+
+    #[test]
+    fn torus_3x3_catalogue_valid() {
+        let t = Torus::new(&[3, 3]);
+        for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?}: {e}"));
+                b.validate()
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn torus_4x4_catalogue_valid() {
+        let t = Torus::new(&[4, 4]);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?}: {e}"));
+                b.validate()
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?}: {e}"));
+            }
+        }
+    }
+
+    #[test]
+    fn trivance_torus_latency_steps() {
+        // §5: ⌈log₃ n⌉ steps on the torus (n = a^D, a a power of three).
+        let t = Torus::new(&[9, 9]);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        assert_eq!(b.net.num_steps(), 4); // log₃ 81
+        let t3 = Torus::new(&[3, 3, 3]);
+        let b3 = build(Algo::Trivance, Variant::Latency, &t3).unwrap();
+        assert_eq!(b3.net.num_steps(), 3); // log₃ 27
+    }
+
+    #[test]
+    fn slices_have_split_data() {
+        // On a D-dim torus Trivance runs D collectives with 1/D of the data.
+        let t = Torus::new(&[3, 3]);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        assert_eq!(b.net.n_blocks, 2 * 9);
+        // Bucket/Swing families run 2D mirrored collectives.
+        let bb = build(Algo::Bucket, Variant::Bandwidth, &t).unwrap();
+        assert_eq!(bb.net.n_blocks, 4 * 9);
+    }
+}

@@ -1,0 +1,351 @@
+//! Cyclic interval sets over the rank/block space `Z_n`.
+//!
+//! All collective schedules in this crate describe *which* blocks (or
+//! contributor ranks) a message carries as subsets of `{0, .., n-1}` with
+//! ring (cyclic) structure. The sets arising from the algorithms in the
+//! paper are unions of a handful of contiguous cyclic ranges, so we store
+//! them as sorted, disjoint, non-adjacent half-open intervals in linear
+//! coordinates; a wrapped range `[s, s+len)` with `s+len > n` is normalized
+//! into two linear intervals.
+
+use std::fmt;
+
+/// A set of ranks in `Z_n`, stored as sorted disjoint half-open intervals.
+#[derive(Clone, PartialEq, Eq, Hash, Default)]
+pub struct BlockSet {
+    /// Sorted, disjoint, non-adjacent `[start, end)` intervals, `end <= n`.
+    ivs: Vec<(u32, u32)>,
+}
+
+impl BlockSet {
+    /// The empty set.
+    pub fn empty() -> Self {
+        BlockSet { ivs: Vec::new() }
+    }
+
+    /// The full set `{0, .., n-1}`.
+    pub fn full(n: u32) -> Self {
+        BlockSet { ivs: vec![(0, n)] }
+    }
+
+    /// A single rank.
+    pub fn singleton(r: u32, n: u32) -> Self {
+        Self::cyc_range(r, 1, n)
+    }
+
+    /// The cyclic range of `len` ranks starting at `start` (mod `n`).
+    /// `len >= n` yields the full set.
+    pub fn cyc_range(start: u32, len: u64, n: u32) -> Self {
+        if len == 0 {
+            return Self::empty();
+        }
+        if len >= n as u64 {
+            return Self::full(n);
+        }
+        let len = len as u32;
+        let s = start % n;
+        if s + len <= n {
+            BlockSet { ivs: vec![(s, s + len)] }
+        } else {
+            // wraps: [s, n) ∪ [0, s+len-n)
+            BlockSet { ivs: vec![(0, s + len - n), (s, n)] }
+        }
+    }
+
+    /// Cyclic range centered at `center` with the given `radius`
+    /// (i.e. `2*radius + 1` ranks), mod `n`.
+    pub fn cyc_ball(center: i64, radius: u64, n: u32) -> Self {
+        let len = 2 * radius + 1;
+        let start = (center - radius as i64).rem_euclid(n as i64) as u32;
+        Self::cyc_range(start, len, n)
+    }
+
+    /// Build from a list of (possibly unsorted/overlapping) half-open
+    /// linear intervals with `end <= n`.
+    pub fn from_intervals(mut ivs: Vec<(u32, u32)>) -> Self {
+        ivs.retain(|&(s, e)| s < e);
+        ivs.sort_unstable();
+        let mut out: Vec<(u32, u32)> = Vec::with_capacity(ivs.len());
+        for (s, e) in ivs {
+            match out.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => out.push((s, e)),
+            }
+        }
+        BlockSet { ivs: out }
+    }
+
+    /// Build from an unsorted list of ranks (deduplicated).
+    pub fn from_ranks(ranks: &[u32], n: u32) -> Self {
+        let mut v: Vec<u32> = ranks.iter().map(|&r| r % n).collect();
+        v.sort_unstable();
+        v.dedup();
+        let mut ivs = Vec::new();
+        let mut i = 0;
+        while i < v.len() {
+            let s = v[i];
+            let mut e = s + 1;
+            i += 1;
+            while i < v.len() && v[i] == e {
+                e += 1;
+                i += 1;
+            }
+            ivs.push((s, e));
+        }
+        BlockSet { ivs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ivs.is_empty()
+    }
+
+    /// Number of ranks in the set.
+    pub fn len(&self) -> u64 {
+        self.ivs.iter().map(|&(s, e)| (e - s) as u64).sum()
+    }
+
+    /// Number of linear intervals (the "piece count" a sender needs if it
+    /// transmits this set as contiguous runs). Note: two intervals that are
+    /// cyclically adjacent across the 0 boundary count as one run.
+    pub fn runs(&self, n: u32) -> usize {
+        let k = self.ivs.len();
+        if k >= 2 && self.ivs[0].0 == 0 && self.ivs[k - 1].1 == n {
+            k - 1
+        } else {
+            k
+        }
+    }
+
+    pub fn contains(&self, r: u32) -> bool {
+        self.ivs.iter().any(|&(s, e)| s <= r && r < e)
+    }
+
+    /// Union of two sets.
+    pub fn union(&self, other: &BlockSet) -> BlockSet {
+        if self.is_empty() {
+            return other.clone();
+        }
+        if other.is_empty() {
+            return self.clone();
+        }
+        let mut all: Vec<(u32, u32)> = Vec::with_capacity(self.ivs.len() + other.ivs.len());
+        all.extend_from_slice(&self.ivs);
+        all.extend_from_slice(&other.ivs);
+        all.sort_unstable();
+        let mut out: Vec<(u32, u32)> = Vec::with_capacity(all.len());
+        for (s, e) in all {
+            match out.last_mut() {
+                Some(last) if s <= last.1 => last.1 = last.1.max(e),
+                _ => out.push((s, e)),
+            }
+        }
+        BlockSet { ivs: out }
+    }
+
+    /// In-place union.
+    pub fn union_with(&mut self, other: &BlockSet) {
+        *self = self.union(other);
+    }
+
+    /// Intersection.
+    pub fn intersect(&self, other: &BlockSet) -> BlockSet {
+        let mut out = Vec::new();
+        let (mut i, mut j) = (0, 0);
+        while i < self.ivs.len() && j < other.ivs.len() {
+            let (s1, e1) = self.ivs[i];
+            let (s2, e2) = other.ivs[j];
+            let s = s1.max(s2);
+            let e = e1.min(e2);
+            if s < e {
+                out.push((s, e));
+            }
+            if e1 <= e2 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        BlockSet { ivs: out }
+    }
+
+    pub fn is_disjoint(&self, other: &BlockSet) -> bool {
+        let (mut i, mut j) = (0, 0);
+        while i < self.ivs.len() && j < other.ivs.len() {
+            let (s1, e1) = self.ivs[i];
+            let (s2, e2) = other.ivs[j];
+            if s1.max(s2) < e1.min(e2) {
+                return false;
+            }
+            if e1 <= e2 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        true
+    }
+
+    /// Set difference `self \ other`.
+    pub fn difference(&self, other: &BlockSet) -> BlockSet {
+        let mut out = Vec::new();
+        let mut j = 0;
+        for &(s, e) in &self.ivs {
+            let mut cur = s;
+            while j < other.ivs.len() && other.ivs[j].1 <= cur {
+                j += 1;
+            }
+            let mut jj = j;
+            while cur < e {
+                if jj >= other.ivs.len() || other.ivs[jj].0 >= e {
+                    out.push((cur, e));
+                    break;
+                }
+                let (os, oe) = other.ivs[jj];
+                if os > cur {
+                    out.push((cur, os));
+                }
+                cur = cur.max(oe);
+                jj += 1;
+            }
+        }
+        BlockSet { ivs: out }
+    }
+
+    /// `self == {0,..,n-1}`?
+    pub fn is_full(&self, n: u32) -> bool {
+        self.ivs.len() == 1 && self.ivs[0] == (0, n)
+    }
+
+    /// Is `other` a subset of `self`?
+    pub fn is_superset(&self, other: &BlockSet) -> bool {
+        other.difference(self).is_empty()
+    }
+
+    /// Iterate over all ranks in the set, ascending.
+    pub fn iter(&self) -> impl Iterator<Item = u32> + '_ {
+        self.ivs.iter().flat_map(|&(s, e)| s..e)
+    }
+
+    /// Iterate over the linear intervals.
+    pub fn intervals(&self) -> impl Iterator<Item = (u32, u32)> + '_ {
+        self.ivs.iter().copied()
+    }
+
+    /// Shift every rank by `delta` mod `n` (used to translate a schedule
+    /// built for node 0 to node `r`).
+    pub fn shift(&self, delta: i64, n: u32) -> BlockSet {
+        let mut out = Self::empty();
+        for &(s, e) in &self.ivs {
+            let ns = (s as i64 + delta).rem_euclid(n as i64) as u32;
+            out = out.union(&Self::cyc_range(ns, (e - s) as u64, n));
+        }
+        out
+    }
+}
+
+impl fmt::Debug for BlockSet {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{{")?;
+        for (i, (s, e)) in self.ivs.iter().enumerate() {
+            if i > 0 {
+                write!(f, ",")?;
+            }
+            if e - s == 1 {
+                write!(f, "{s}")?;
+            } else {
+                write!(f, "{s}..{e}")?;
+            }
+        }
+        write!(f, "}}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn cyc_range_basic() {
+        let s = BlockSet::cyc_range(2, 3, 9);
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(2) && s.contains(3) && s.contains(4));
+        assert!(!s.contains(5) && !s.contains(1));
+    }
+
+    #[test]
+    fn cyc_range_wrap() {
+        let s = BlockSet::cyc_range(7, 4, 9); // {7,8,0,1}
+        assert_eq!(s.len(), 4);
+        for r in [7, 8, 0, 1] {
+            assert!(s.contains(r), "missing {r}");
+        }
+        assert!(!s.contains(2) && !s.contains(6));
+        assert_eq!(s.runs(9), 1); // cyclically one run
+    }
+
+    #[test]
+    fn cyc_range_full() {
+        assert!(BlockSet::cyc_range(5, 9, 9).is_full(9));
+        assert!(BlockSet::cyc_range(5, 100, 9).is_full(9));
+    }
+
+    #[test]
+    fn cyc_ball() {
+        let s = BlockSet::cyc_ball(0, 1, 9); // {8,0,1}
+        assert_eq!(s.len(), 3);
+        assert!(s.contains(8) && s.contains(0) && s.contains(1));
+    }
+
+    #[test]
+    fn union_and_merge() {
+        let a = BlockSet::cyc_range(0, 3, 10);
+        let b = BlockSet::cyc_range(3, 2, 10);
+        let u = a.union(&b);
+        assert_eq!(u.len(), 5);
+        assert_eq!(u.intervals().count(), 1);
+    }
+
+    #[test]
+    fn disjoint_and_intersect() {
+        let a = BlockSet::cyc_range(0, 3, 10);
+        let b = BlockSet::cyc_range(5, 3, 10);
+        assert!(a.is_disjoint(&b));
+        let c = BlockSet::cyc_range(2, 4, 10);
+        assert!(!a.is_disjoint(&c));
+        assert_eq!(a.intersect(&c).len(), 1);
+    }
+
+    #[test]
+    fn difference() {
+        let a = BlockSet::full(10);
+        let b = BlockSet::cyc_range(3, 4, 10);
+        let d = a.difference(&b);
+        assert_eq!(d.len(), 6);
+        assert!(d.is_disjoint(&b));
+        assert!(d.union(&b).is_full(10));
+    }
+
+    #[test]
+    fn from_ranks() {
+        let s = BlockSet::from_ranks(&[3, 1, 2, 7, 7, 8], 10);
+        assert_eq!(s.len(), 5);
+        assert_eq!(s.intervals().count(), 2);
+    }
+
+    #[test]
+    fn shift() {
+        let s = BlockSet::cyc_range(0, 3, 9).shift(7, 9); // {7,8,0}
+        assert!(s.contains(7) && s.contains(8) && s.contains(0));
+        assert_eq!(s.len(), 3);
+        let back = s.shift(-7, 9);
+        assert_eq!(back, BlockSet::cyc_range(0, 3, 9));
+    }
+
+    #[test]
+    fn superset() {
+        let a = BlockSet::cyc_range(0, 5, 9);
+        let b = BlockSet::cyc_range(1, 3, 9);
+        assert!(a.is_superset(&b));
+        assert!(!b.is_superset(&a));
+    }
+}

@@ -1,0 +1,377 @@
+//! Hand-rolled CLI (the vendored registry has no clap).
+//!
+//! ```text
+//! trivance figures  [--id ID]... [--all] [--quick] [--out DIR]
+//! trivance simulate --topo 8x8 [--algo A] [--variant L|B] [--size BYTES]
+//!                   [--bw-gbps N] [--mode flow|packet] [--mtu BYTES]
+//! trivance validate --topo 27 [--algo A]
+//! trivance verify   --topo 9 [--algo A] [--block-len N] [--pjrt]
+//! trivance pattern  --n 9 [--algo trivance|bruck]
+//! trivance optimality --topo 81
+//! trivance train-demo [--workers 9] [--steps 200] [--lr 0.5]
+//! ```
+
+use crate::algo::{build, Algo, Variant};
+use crate::cost::{eq1_with_hops, measure_optimality, NetParams};
+use crate::exec::{f32_sum_tolerance, verify_allreduce, NativeReducer, Reducer};
+use crate::schedule::analysis::analyze;
+use crate::sim::{simulate, SimMode};
+use crate::topology::Torus;
+use crate::util::fmt;
+
+/// Parsed flag map: `--key value` and bare `--flag`.
+struct Args {
+    flags: Vec<(String, Option<String>)>,
+}
+
+impl Args {
+    fn parse(argv: &[String]) -> Result<Args, String> {
+        let mut flags = Vec::new();
+        let mut i = 0;
+        while i < argv.len() {
+            let a = &argv[i];
+            let key = a
+                .strip_prefix("--")
+                .ok_or_else(|| format!("expected --flag, got {a:?}"))?
+                .to_string();
+            if i + 1 < argv.len() && !argv[i + 1].starts_with("--") {
+                flags.push((key, Some(argv[i + 1].clone())));
+                i += 2;
+            } else {
+                flags.push((key, None));
+                i += 1;
+            }
+        }
+        Ok(Args { flags })
+    }
+
+    fn get(&self, key: &str) -> Option<&str> {
+        self.flags
+            .iter()
+            .rev()
+            .find(|(k, _)| k == key)
+            .and_then(|(_, v)| v.as_deref())
+    }
+
+    fn getall(&self, key: &str) -> Vec<&str> {
+        self.flags
+            .iter()
+            .filter(|(k, _)| k == key)
+            .filter_map(|(_, v)| v.as_deref())
+            .collect()
+    }
+
+    fn has(&self, key: &str) -> bool {
+        self.flags.iter().any(|(k, _)| k == key)
+    }
+}
+
+/// "27" → ring(27); "8x8" / "16x16x16" → torus.
+pub fn parse_topo(s: &str) -> Result<Torus, String> {
+    let dims: Result<Vec<u32>, _> = s.split(['x', 'X']).map(str::parse).collect();
+    let dims = dims.map_err(|e| format!("bad --topo {s:?}: {e}"))?;
+    if dims.is_empty() || dims.iter().any(|&d| d < 2) {
+        return Err(format!("bad --topo {s:?}: dims must be >= 2"));
+    }
+    Ok(Torus::new(&dims))
+}
+
+fn parse_algo(s: &str) -> Result<Algo, String> {
+    Algo::parse(s).ok_or_else(|| {
+        format!(
+            "unknown --algo {s:?} (known: {})",
+            Algo::ALL.map(|a| a.label()).join(", ")
+        )
+    })
+}
+
+fn parse_variant(s: &str) -> Result<Variant, String> {
+    match s {
+        "L" | "l" | "latency" => Ok(Variant::Latency),
+        "B" | "b" | "bandwidth" => Ok(Variant::Bandwidth),
+        _ => Err(format!("unknown --variant {s:?} (L or B)")),
+    }
+}
+
+fn net_params(args: &Args) -> Result<NetParams, String> {
+    let mut p = NetParams::default();
+    if let Some(bw) = args.get("bw-gbps") {
+        p = p.with_bandwidth_gbps(bw.parse().map_err(|e| format!("bad --bw-gbps: {e}"))?);
+    }
+    if let Some(a) = args.get("alpha-us") {
+        p.alpha_s = a.parse::<f64>().map_err(|e| format!("bad --alpha-us: {e}"))? * 1e-6;
+    }
+    Ok(p)
+}
+
+const USAGE: &str = "\
+trivance — latency-optimal AllReduce by shortcutting multiport networks
+
+USAGE:
+  trivance figures  [--id ID]... [--all] [--quick] [--out DIR]
+  trivance simulate --topo 8x8 [--algo A] [--variant L|B] [--size 1MiB]
+                    [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
+  trivance validate --topo 27 [--algo A]
+  trivance verify   --topo 9  [--algo A] [--block-len 8] [--pjrt]
+  trivance pattern  --n 9 [--algo trivance|bruck]
+  trivance optimality --topo 81
+  trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
+
+IDs: table1 table2 fig6a fig6b fig7a fig7b fig8 fig9 fig10
+Algorithms: trivance bruck bruck-unidir swing recdoub bucket
+";
+
+/// CLI entry point; returns the process exit code.
+pub fn main(argv: Vec<String>) -> i32 {
+    match run(argv) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("error: {e}");
+            eprintln!("{USAGE}");
+            1
+        }
+    }
+}
+
+fn run(argv: Vec<String>) -> Result<(), String> {
+    let Some((cmd, rest)) = argv.split_first() else {
+        return Err("missing subcommand".into());
+    };
+    let args = Args::parse(rest)?;
+    match cmd.as_str() {
+        "figures" => figures(&args),
+        "simulate" => simulate_cmd(&args),
+        "validate" => validate_cmd(&args),
+        "verify" => verify_cmd(&args),
+        "pattern" => pattern_cmd(&args),
+        "optimality" => optimality_cmd(&args),
+        "train-demo" => train_cmd(&args),
+        "help" | "--help" | "-h" => {
+            println!("{USAGE}");
+            Ok(())
+        }
+        other => Err(format!("unknown subcommand {other:?}")),
+    }
+}
+
+fn figures(args: &Args) -> Result<(), String> {
+    let quick = args.has("quick");
+    let ids: Vec<String> = if args.has("all") || args.getall("id").is_empty() {
+        crate::harness::ALL_IDS.iter().map(|s| s.to_string()).collect()
+    } else {
+        args.getall("id").iter().map(|s| s.to_string()).collect()
+    };
+    let out_dir = args.get("out");
+    for id in &ids {
+        eprintln!("[figures] running {id} ...");
+        let t0 = std::time::Instant::now();
+        let md = crate::harness::run(id, quick)?;
+        eprintln!("[figures] {id} done in {:.1}s", t0.elapsed().as_secs_f64());
+        match out_dir {
+            Some(dir) => {
+                std::fs::create_dir_all(dir).map_err(|e| e.to_string())?;
+                let path = format!("{dir}/{id}.md");
+                std::fs::write(&path, &md).map_err(|e| e.to_string())?;
+                println!("wrote {path}");
+            }
+            None => println!("{md}"),
+        }
+    }
+    Ok(())
+}
+
+fn simulate_cmd(args: &Args) -> Result<(), String> {
+    let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
+    let m = args
+        .get("size")
+        .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --size {s:?}")))
+        .transpose()?
+        .unwrap_or(1 << 20);
+    let params = net_params(args)?;
+    let mode = match args.get("mode").unwrap_or("flow") {
+        "flow" => SimMode::Flow,
+        "packet" => SimMode::Packet {
+            mtu: args
+                .get("mtu")
+                .map(|s| s.parse().map_err(|e| format!("bad --mtu: {e}")))
+                .transpose()?
+                .unwrap_or(4096),
+        },
+        other => return Err(format!("unknown --mode {other:?}")),
+    };
+    let algos: Vec<Algo> = match args.get("algo") {
+        Some(a) => vec![parse_algo(a)?],
+        None => Algo::ALL.to_vec(),
+    };
+    let variants: Vec<Variant> = match args.get("variant") {
+        Some(v) => vec![parse_variant(v)?],
+        None => Variant::ALL.to_vec(),
+    };
+    let mut table = fmt::Table::new(vec![
+        "collective", "steps", "messages", "completion", "eq1 (analytic)",
+    ]);
+    for algo in algos {
+        for variant in variants.iter().copied() {
+            let Ok(b) = build(algo, variant, &torus) else { continue };
+            let r = simulate(&b.net, &torus, m, &params, mode);
+            let stats = analyze(&b.net, &torus);
+            table.row(vec![
+                b.name.clone(),
+                b.net.num_steps().to_string(),
+                r.messages.to_string(),
+                fmt::secs(r.completion_s),
+                fmt::secs(eq1_with_hops(&stats, m, &params)),
+            ]);
+        }
+    }
+    println!(
+        "AllReduce of {} on {:?} ({} nodes), {} Gb/s links\n",
+        fmt::bytes(m),
+        torus.dims(),
+        torus.n(),
+        params.link_bw_bps / 1e9
+    );
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn validate_cmd(args: &Args) -> Result<(), String> {
+    let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
+    let algos: Vec<Algo> = match args.get("algo") {
+        Some(a) => vec![parse_algo(a)?],
+        None => Algo::ALL.to_vec(),
+    };
+    for algo in algos {
+        for variant in Variant::ALL {
+            match build(algo, variant, &torus) {
+                Err(e) => println!("{:>14} ({}): unsupported: {e}", algo.label(), variant.label()),
+                Ok(b) => match b.validate() {
+                    Ok(rep) => println!(
+                        "{:>14} ({}): OK — {} steps, {} messages, max {} atoms{}",
+                        algo.label(),
+                        variant.label(),
+                        rep.steps,
+                        rep.messages,
+                        rep.max_atoms,
+                        if b.padded { " (padded)" } else { "" }
+                    ),
+                    Err(e) => return Err(format!("{} {}: INVALID: {e}", algo.label(), variant.label())),
+                },
+            }
+        }
+    }
+    Ok(())
+}
+
+fn verify_cmd(args: &Args) -> Result<(), String> {
+    let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
+    let block_len: usize = args
+        .get("block-len")
+        .map(|s| s.parse().map_err(|e| format!("bad --block-len: {e}")))
+        .transpose()?
+        .unwrap_or(8);
+    let pjrt = args.has("pjrt");
+    let rt;
+    let reducer: &dyn Reducer = if pjrt {
+        rt = crate::runtime::Runtime::load_default().map_err(|e| e.to_string())?;
+        println!("reductions via PJRT ({})", rt.platform());
+        &rt
+    } else {
+        &NativeReducer
+    };
+    let algos: Vec<Algo> = match args.get("algo") {
+        Some(a) => vec![parse_algo(a)?],
+        None => Algo::ALL.to_vec(),
+    };
+    for algo in algos {
+        for variant in Variant::ALL {
+            let Ok(b) = build(algo, variant, &torus) else { continue };
+            let err = verify_allreduce(&b.exec, block_len, 42, reducer);
+            let tol = f32_sum_tolerance(b.exec.n);
+            let ok = if err < tol { "OK" } else { "FAIL" };
+            println!(
+                "{:>14} ({}): {ok} — max numeric error {err:.3e} (tolerance {tol:.1e})",
+                algo.label(),
+                variant.label()
+            );
+            if err >= tol {
+                return Err("numeric verification failed".into());
+            }
+        }
+    }
+    Ok(())
+}
+
+fn pattern_cmd(args: &Args) -> Result<(), String> {
+    let n: u32 = args
+        .get("n")
+        .ok_or("--n required")?
+        .parse()
+        .map_err(|e| format!("bad --n: {e}"))?;
+    let algo = args.get("algo").unwrap_or("trivance");
+    print!("{}", crate::harness::pattern::render_ring_pattern(algo, n)?);
+    Ok(())
+}
+
+fn optimality_cmd(args: &Args) -> Result<(), String> {
+    let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
+    let mut table = fmt::Table::new(vec!["collective", "steps", "Λ", "Δ", "Θ"]);
+    for algo in Algo::ALL {
+        for variant in Variant::ALL {
+            let Ok(b) = build(algo, variant, &torus) else { continue };
+            let stats = analyze(&b.net, &torus);
+            let o = measure_optimality(&stats, &torus);
+            table.row(vec![
+                b.name.clone(),
+                stats.num_steps().to_string(),
+                format!("{:.2}", o.lambda),
+                format!("{:.2}", o.delta),
+                format!("{:.2}", o.theta),
+            ]);
+        }
+    }
+    println!("{}", table.render());
+    Ok(())
+}
+
+fn train_cmd(args: &Args) -> Result<(), String> {
+    let workers: u32 = args.get("workers").unwrap_or("9").parse().map_err(|e| format!("{e}"))?;
+    let steps: u32 = args.get("steps").unwrap_or("200").parse().map_err(|e| format!("{e}"))?;
+    let lr: f32 = args.get("lr").unwrap_or("0.5").parse().map_err(|e| format!("{e}"))?;
+    let log_every: u32 = args.get("log-every").unwrap_or("20").parse().map_err(|e| format!("{e}"))?;
+    let rt = crate::runtime::Runtime::load_default()
+        .map_err(|e| format!("{e:#} — run `make artifacts` first"))?;
+    let report = crate::harness::train::run_train_demo(&rt, workers, steps, lr, log_every)
+        .map_err(|e| format!("{e:#}"))?;
+    println!("{}", report.render());
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_topo_forms() {
+        assert_eq!(parse_topo("27").unwrap().dims(), &[27]);
+        assert_eq!(parse_topo("8x8").unwrap().dims(), &[8, 8]);
+        assert_eq!(parse_topo("16x16x16").unwrap().n(), 4096);
+        assert!(parse_topo("").is_err());
+        assert!(parse_topo("8x1").is_err());
+    }
+
+    #[test]
+    fn args_parsing() {
+        let a = Args::parse(&["--topo".into(), "8x8".into(), "--quick".into()]).unwrap();
+        assert_eq!(a.get("topo"), Some("8x8"));
+        assert!(a.has("quick"));
+        assert!(!a.has("nope"));
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(parse_variant("L").unwrap(), Variant::Latency);
+        assert_eq!(parse_variant("bandwidth").unwrap(), Variant::Bandwidth);
+        assert!(parse_variant("x").is_err());
+    }
+}

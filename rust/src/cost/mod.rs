@@ -1,0 +1,164 @@
+//! The congestion-aware Hockney cost model (§2.1, Eq. 1) and the
+//! latency/bandwidth/transmission-delay optimality factors (§2.3, Tables 1
+//! and 2).
+//!
+//! `C(m, A) = steps(A)·α + Σ_k β·m_k·c_k`, where `m_k·c_k` is the payload
+//! crossing the bottleneck link in step `k` — extracted from the actual
+//! schedule routed on the actual topology by
+//! [`crate::schedule::analysis::analyze`].
+
+pub mod optimality;
+
+use crate::schedule::analysis::ScheduleStats;
+use crate::topology::Torus;
+use crate::util::ceil_log;
+
+/// Network parameters. Defaults are the paper's SST configuration (§6):
+/// 800 Gb/s links, 100 ns link latency, 100 ns per-hop processing,
+/// α = 1.5 µs per step.
+#[derive(Clone, Copy, Debug)]
+pub struct NetParams {
+    /// Per-step startup latency α (seconds).
+    pub alpha_s: f64,
+    /// Link bandwidth (bits per second).
+    pub link_bw_bps: f64,
+    /// Link propagation latency (seconds).
+    pub link_latency_s: f64,
+    /// Per-hop packet processing latency (seconds).
+    pub hop_latency_s: f64,
+}
+
+impl Default for NetParams {
+    fn default() -> Self {
+        NetParams {
+            alpha_s: 1.5e-6,
+            link_bw_bps: 800e9,
+            link_latency_s: 100e-9,
+            hop_latency_s: 100e-9,
+        }
+    }
+}
+
+impl NetParams {
+    pub fn with_bandwidth_gbps(mut self, gbps: f64) -> Self {
+        self.link_bw_bps = gbps * 1e9;
+        self
+    }
+
+    /// β: transmission time per byte (seconds).
+    pub fn beta_per_byte(&self) -> f64 {
+        8.0 / self.link_bw_bps
+    }
+
+    /// Per-hop forwarding latency (propagation + processing).
+    pub fn per_hop_s(&self) -> f64 {
+        self.link_latency_s + self.hop_latency_s
+    }
+}
+
+/// Paper Eq. 1: completion-time estimate of the analyzed schedule for an
+/// `m_bytes` AllReduce.
+pub fn eq1_completion_time(stats: &ScheduleStats, m_bytes: u64, p: &NetParams) -> f64 {
+    let steps = stats.num_steps() as f64;
+    let tx: f64 = stats.tx_delay_rel * m_bytes as f64 * p.beta_per_byte();
+    steps * p.alpha_s + tx
+}
+
+/// Eq. 1 extended with the per-hop propagation term the DES models
+/// explicitly (each step additionally pays `max_hops · per_hop`): a cheap
+/// analytic proxy used for cross-checking the simulator.
+pub fn eq1_with_hops(stats: &ScheduleStats, m_bytes: u64, p: &NetParams) -> f64 {
+    let hop: f64 = stats
+        .steps
+        .iter()
+        .map(|s| s.max_hops as f64 * p.per_hop_s())
+        .sum();
+    eq1_completion_time(stats, m_bytes, p) + hop
+}
+
+/// Measured optimality factors of a schedule (Tables 1 and 2 definitions):
+/// Λ relative to ⌈log₃ n⌉ steps, Δ relative to 2m transmitted per node, Θ
+/// relative to m·β/D transmission delay.
+#[derive(Clone, Copy, Debug)]
+pub struct Optimality {
+    pub lambda: f64,
+    pub delta: f64,
+    pub theta: f64,
+}
+
+pub fn measure_optimality(stats: &ScheduleStats, t: &Torus) -> Optimality {
+    let n = t.n() as u64;
+    let d = t.ndims() as f64;
+    let opt_steps = ceil_log(3, n).max(1) as f64;
+    Optimality {
+        lambda: stats.num_steps() as f64 / opt_steps,
+        delta: stats.max_node_sent_rel / 2.0,
+        theta: stats.tx_delay_rel * d,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agpattern::{bandwidth_allreduce, latency_allreduce};
+    use crate::algo::rings::{trivance, Order};
+    use crate::schedule::analysis::analyze;
+
+    #[test]
+    fn default_params_match_paper() {
+        let p = NetParams::default();
+        assert!((p.alpha_s - 1.5e-6).abs() < 1e-12);
+        assert!((p.link_bw_bps - 800e9).abs() < 1.0);
+        // 800 Gb/s → 100 GB/s → 10.24 ns per KiB
+        assert!((p.beta_per_byte() * 1024.0 - 10.24e-9).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq1_trivance_l_ring9() {
+        // Trivance-L on a 9-ring: 2 steps, congestion 3^k, full vector:
+        // tx_delay_rel = 1 + 3 = 4.
+        let t = crate::topology::Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let stats = analyze(&s, &t);
+        assert_eq!(stats.num_steps(), 2);
+        assert!((stats.tx_delay_rel - 4.0).abs() < 1e-9, "{}", stats.tx_delay_rel);
+        let p = NetParams::default();
+        let m = 1 << 20;
+        let c = eq1_completion_time(&stats, m, &p);
+        let expect = 2.0 * p.alpha_s + 4.0 * m as f64 * p.beta_per_byte();
+        assert!((c - expect).abs() < 1e-12);
+    }
+
+    #[test]
+    fn eq1_trivance_b_constant_product() {
+        // Appendix B: B-variant per-step product is m/3 in each phase.
+        let t = crate::topology::Torus::ring(27);
+        let s = bandwidth_allreduce(&trivance(27, Order::Dec));
+        let stats = analyze(&s, &t);
+        assert_eq!(stats.num_steps(), 6);
+        for st in &stats.steps {
+            assert!(
+                (st.max_link_rel - 1.0 / 3.0).abs() < 1e-9,
+                "per-step max link load {}",
+                st.max_link_rel
+            );
+        }
+        // Θ = 2·log₃n/3 = 2
+        let o = measure_optimality(&stats, &t);
+        assert!((o.theta - 2.0).abs() < 1e-9, "theta {}", o.theta);
+        assert!((o.lambda - 2.0).abs() < 1e-9);
+        assert!((o.delta - (1.0 - 1.0 / 27.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    fn trivance_l_theta_half_n() {
+        // Table 1: Trivance (L) Θ = n/2 (as n → ∞; exactly (3^s−1)/2).
+        let t = crate::topology::Torus::ring(27);
+        let s = latency_allreduce(&trivance(27, Order::Inc));
+        let stats = analyze(&s, &t);
+        let o = measure_optimality(&stats, &t);
+        assert!((o.theta - 13.0).abs() < 1e-9, "theta {}", o.theta); // (27-1)/2
+        assert!((o.lambda - 1.0).abs() < 1e-9);
+        assert!((o.delta - 3.0).abs() < 1e-9); // log₃ 27
+    }
+}

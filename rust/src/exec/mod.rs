@@ -1,0 +1,304 @@
+//! Dataflow executor: runs a schedule on *real vectors*, performing every
+//! reduction the schedule prescribes, and checks the AllReduce
+//! postcondition numerically.
+//!
+//! The executor is the semantic twin of the static validator
+//! ([`crate::schedule::validate`]): the validator proves contributor-set
+//! disjointness symbolically; the executor proves it arithmetically — every
+//! node ends with the exact global sum, for every algorithm, variant, and
+//! topology. It also powers the end-to-end training demo, where the
+//! reductions run through the AOT-compiled PJRT kernels
+//! ([`crate::runtime`]).
+//!
+//! State is kept at *atom* granularity (one aggregate per received piece),
+//! mirroring what a real implementation must do: an aggregate can be
+//! summed further but never split.
+
+use crate::blockset::BlockSet;
+use crate::schedule::{Kind, Schedule};
+
+/// The reduction backend. `add3` is Trivance's joint reduction (one fused
+/// pass over the accumulator and both incoming aggregates).
+pub trait Reducer {
+    fn add2(&self, a: &[f32], b: &[f32]) -> Vec<f32>;
+    fn add3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32>;
+}
+
+/// Plain-Rust reducer (no artifacts needed); also the perf baseline the
+/// PJRT path is compared against in benches.
+pub struct NativeReducer;
+
+impl Reducer for NativeReducer {
+    fn add2(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        a.iter().zip(b).map(|(x, y)| x + y).collect()
+    }
+    fn add3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+        a.iter().zip(b).zip(c).map(|((x, y), z)| x + y + z).collect()
+    }
+}
+
+impl Reducer for crate::runtime::Runtime {
+    fn add2(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        self.reduce2(a, b).expect("pjrt reduce2")
+    }
+    fn add3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+        self.reduce3(a, b, c).expect("pjrt reduce3")
+    }
+}
+
+/// One stored aggregate: the partial sum over `contrib` for one block.
+#[derive(Clone, Debug)]
+struct Atom {
+    contrib: BlockSet,
+    data: Vec<f32>,
+}
+
+/// Sum a list of vectors with the reducer, preferring 3-way joint
+/// reductions (the Trivance fast path).
+fn sum_all(reducer: &dyn Reducer, parts: &[&Vec<f32>]) -> Vec<f32> {
+    assert!(!parts.is_empty());
+    let mut acc: Vec<f32> = parts[0].clone();
+    let mut i = 1;
+    while i < parts.len() {
+        if i + 1 < parts.len() {
+            acc = reducer.add3(&acc, parts[i], parts[i + 1]);
+            i += 2;
+        } else {
+            acc = reducer.add2(&acc, parts[i]);
+            i += 1;
+        }
+    }
+    acc
+}
+
+/// Execute `schedule` on per-node input vectors. `inputs[r]` must have
+/// length `n_blocks · block_len`. Returns each node's final vector.
+///
+/// Panics if the schedule violates exact-cover/disjointness — schedules
+/// must come from the validated registry.
+pub fn run_allreduce(
+    schedule: &Schedule,
+    inputs: &[Vec<f32>],
+    block_len: usize,
+    reducer: &dyn Reducer,
+) -> Vec<Vec<f32>> {
+    let n = schedule.n as usize;
+    let nb = schedule.n_blocks as usize;
+    assert_eq!(inputs.len(), n, "one input vector per node");
+    for (r, v) in inputs.iter().enumerate() {
+        assert_eq!(v.len(), nb * block_len, "input {r} length");
+    }
+
+    // state[node][block] = atoms
+    let mut state: Vec<Vec<Vec<Atom>>> = inputs
+        .iter()
+        .enumerate()
+        .map(|(r, v)| {
+            (0..nb)
+                .map(|b| {
+                    vec![Atom {
+                        contrib: BlockSet::singleton(r as u32, schedule.n),
+                        data: v[b * block_len..(b + 1) * block_len].to_vec(),
+                    }]
+                })
+                .collect()
+        })
+        .collect();
+
+    for (k, step) in schedule.steps.iter().enumerate() {
+        // Phase 1: materialize payloads against start-of-step state.
+        // payloads: (dst, block, kind, contrib, data)
+        let mut deliveries: Vec<(usize, usize, Kind, BlockSet, Vec<f32>)> = Vec::new();
+        for (src, sends) in step.sends.iter().enumerate() {
+            for snd in sends {
+                for piece in &snd.pieces {
+                    for b in piece.blocks.iter() {
+                        let cell = &state[src][b as usize];
+                        match piece.kind {
+                            Kind::Reduce => {
+                                let parts: Vec<&Vec<f32>> = cell
+                                    .iter()
+                                    .filter(|a| piece.contrib.is_superset(&a.contrib))
+                                    .map(|a| &a.data)
+                                    .collect();
+                                let got: u64 = cell
+                                    .iter()
+                                    .filter(|a| piece.contrib.is_superset(&a.contrib))
+                                    .map(|a| a.contrib.len())
+                                    .sum();
+                                assert_eq!(
+                                    got,
+                                    piece.contrib.len(),
+                                    "step {k}: {src}->{}: block {b}: contrib {:?} is not an \
+                                     exact atom cover",
+                                    snd.to,
+                                    piece.contrib
+                                );
+                                let data = sum_all(reducer, &parts);
+                                deliveries.push((
+                                    snd.to as usize,
+                                    b as usize,
+                                    Kind::Reduce,
+                                    piece.contrib.clone(),
+                                    data,
+                                ));
+                            }
+                            Kind::Set => {
+                                let total: u64 = cell.iter().map(|a| a.contrib.len()).sum();
+                                assert_eq!(
+                                    total, schedule.n as u64,
+                                    "step {k}: {src}->{}: Set of incomplete block {b}",
+                                    snd.to
+                                );
+                                let parts: Vec<&Vec<f32>> = cell.iter().map(|a| &a.data).collect();
+                                let data = sum_all(reducer, &parts);
+                                deliveries.push((
+                                    snd.to as usize,
+                                    b as usize,
+                                    Kind::Set,
+                                    BlockSet::full(schedule.n),
+                                    data,
+                                ));
+                            }
+                        }
+                    }
+                }
+            }
+        }
+        // Phase 2: apply.
+        for (dst, b, kind, contrib, data) in deliveries {
+            match kind {
+                Kind::Reduce => state[dst][b].push(Atom { contrib, data }),
+                Kind::Set => state[dst][b] = vec![Atom { contrib, data }],
+            }
+        }
+    }
+
+    // Collapse: every node, every block must have full coverage.
+    state
+        .into_iter()
+        .enumerate()
+        .map(|(r, node)| {
+            let mut out = Vec::with_capacity(nb * block_len);
+            for (b, cell) in node.into_iter().enumerate() {
+                let total: u64 = cell.iter().map(|a| a.contrib.len()).sum();
+                assert_eq!(
+                    total, schedule.n as u64,
+                    "node {r} block {b}: incomplete coverage"
+                );
+                let parts: Vec<&Vec<f32>> = cell.iter().map(|a| &a.data).collect();
+                out.extend_from_slice(&sum_all(reducer, &parts));
+            }
+            out
+        })
+        .collect()
+}
+
+/// Build random inputs, run the schedule, and compare every node's result
+/// against the reference global sum. Returns the max absolute error.
+pub fn verify_allreduce(
+    schedule: &Schedule,
+    block_len: usize,
+    seed: u64,
+    reducer: &dyn Reducer,
+) -> f64 {
+    let n = schedule.n as usize;
+    let nb = schedule.n_blocks as usize;
+    let mut rng = crate::util::SplitMix64::new(seed);
+    let inputs: Vec<Vec<f32>> = (0..n)
+        .map(|_| (0..nb * block_len).map(|_| rng.f32() * 2.0 - 1.0).collect())
+        .collect();
+    let mut expect = vec![0f64; nb * block_len];
+    for v in &inputs {
+        for (e, x) in expect.iter_mut().zip(v) {
+            *e += *x as f64;
+        }
+    }
+    let results = run_allreduce(schedule, &inputs, block_len, reducer);
+    let mut max_err = 0f64;
+    for res in &results {
+        for (got, want) in res.iter().zip(&expect) {
+            max_err = max_err.max((*got as f64 - want).abs());
+        }
+    }
+    max_err
+}
+
+/// Error tolerance for f32 summation over n contributors.
+pub fn f32_sum_tolerance(n: u32) -> f64 {
+    1e-4 * (n as f64).sqrt()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{build, Algo, Variant};
+    use crate::topology::Torus;
+
+    #[test]
+    fn trivance_ring9_numerics() {
+        let t = Torus::ring(9);
+        for variant in Variant::ALL {
+            let b = build(Algo::Trivance, variant, &t).unwrap();
+            let err = verify_allreduce(&b.exec, 8, 42, &NativeReducer);
+            assert!(err < f32_sum_tolerance(9), "{variant:?}: err {err}");
+        }
+    }
+
+    #[test]
+    fn all_algorithms_ring8_numerics() {
+        let t = Torus::ring(8);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t).unwrap();
+                let err = verify_allreduce(&b.exec, 4, 7, &NativeReducer);
+                assert!(err < f32_sum_tolerance(8), "{algo:?} {variant:?}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn trivance_arbitrary_n_numerics() {
+        for n in [5u32, 7, 11, 26, 32] {
+            let t = Torus::ring(n);
+            for variant in Variant::ALL {
+                let b = build(Algo::Trivance, variant, &t).unwrap();
+                let err = verify_allreduce(&b.exec, 2, n as u64, &NativeReducer);
+                assert!(err < f32_sum_tolerance(n), "n={n} {variant:?}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn torus_3x3_numerics() {
+        let t = Torus::new(&[3, 3]);
+        for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t).unwrap();
+                let err = verify_allreduce(&b.exec, 2, 3, &NativeReducer);
+                assert!(err < f32_sum_tolerance(9), "{algo:?} {variant:?}: err {err}");
+            }
+        }
+    }
+
+    #[test]
+    fn padded_swing_numerics() {
+        // swing on n=6 pads to 8 virtual nodes; executor runs the virtual
+        // schedule (real nodes take their virtual result).
+        let t = Torus::ring(6);
+        let b = build(Algo::Swing, Variant::Bandwidth, &t).unwrap();
+        assert!(b.padded);
+        let err = verify_allreduce(&b.exec, 2, 3, &NativeReducer);
+        assert!(err < f32_sum_tolerance(8), "err {err}");
+    }
+
+    #[test]
+    #[should_panic(expected = "incomplete coverage")]
+    fn incomplete_schedule_panics() {
+        let t = Torus::ring(9);
+        let mut b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        // drop the last step: coverage must fail loudly
+        b.exec.steps.pop();
+        let _ = verify_allreduce(&b.exec, 2, 1, &NativeReducer);
+    }
+}

@@ -1,0 +1,152 @@
+//! Figure regeneration (paper §6.1–6.3). Each function returns markdown.
+
+use super::sweep::{run_sweep, size_ladder};
+use crate::algo::Algo;
+use crate::cost::NetParams;
+use crate::topology::Torus;
+use crate::util::fmt;
+
+/// Algorithm set of the power-of-two figures (Fig. 6–8).
+const POW2_ALGOS: [Algo; 5] =
+    [Algo::Trivance, Algo::Bruck, Algo::Swing, Algo::RecDoub, Algo::Bucket];
+
+/// Algorithm set of the power-of-three figure (Fig. 9): the paper compares
+/// only Bucket and Bruck there ("Swing and Recursive Doubling have no
+/// implementation for arbitrary n in SST").
+const POW3_ALGOS: [Algo; 3] = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+
+fn max_size(quick: bool) -> u64 {
+    if quick {
+        512 << 10
+    } else {
+        128 << 20
+    }
+}
+
+/// Fig. 6: rings of size 8 (a) and 64 (b), 32 B – 128 MiB.
+pub fn fig6(n: u32, quick: bool) -> String {
+    let t = Torus::ring(n);
+    let s = run_sweep(&t, &POW2_ALGOS, &size_ladder(max_size(quick)), &NetParams::default());
+    s.render(&format!(
+        "Fig. 6{} — AllReduce completion relative to Trivance, ring n={n}",
+        if n == 8 { "a" } else { "b" }
+    ))
+}
+
+/// Fig. 7: square tori 8×8 (a) and 32×32 (b).
+pub fn fig7(a: u32, quick: bool) -> String {
+    let t = Torus::new(&[a, a]);
+    let s = run_sweep(&t, &POW2_ALGOS, &size_ladder(max_size(quick)), &NetParams::default());
+    s.render(&format!(
+        "Fig. 7{} — AllReduce completion relative to Trivance, {a}×{a} torus",
+        if a == 8 { "a" } else { "b" }
+    ))
+}
+
+/// Fig. 8: 32×32 torus under 200 Gb/s – 3.2 Tb/s; per bandwidth, Trivance
+/// vs the best existing approach at each size.
+pub fn fig8(quick: bool) -> String {
+    let a = if quick { 8 } else { 32 };
+    let t = Torus::new(&[a, a]);
+    let sizes = size_ladder(if quick { 512 << 10 } else { 64 << 20 });
+    let bandwidths: &[f64] = if quick {
+        &[200.0, 3200.0]
+    } else {
+        &[200.0, 400.0, 800.0, 1600.0, 2400.0, 3200.0]
+    };
+    let mut out = format!(
+        "### Fig. 8 — {a}×{a} torus, best existing approach relative to Trivance across bandwidths\n\n"
+    );
+    let mut table = fmt::Table::new(
+        std::iter::once("size".to_string())
+            .chain(bandwidths.iter().map(|b| format!("{b:.0} Gb/s Δ%")))
+            .collect::<Vec<_>>(),
+    );
+    // one sweep per bandwidth
+    let sweeps: Vec<_> = bandwidths
+        .iter()
+        .map(|&bw| {
+            run_sweep(&t, &POW2_ALGOS, &sizes, &NetParams::default().with_bandwidth_gbps(bw))
+        })
+        .collect();
+    for (si, &m) in sizes.iter().enumerate() {
+        let mut row = vec![fmt::bytes(m)];
+        for sw in &sweeps {
+            // best existing (non-Trivance) relative to Trivance
+            let best_rel = sw
+                .algos
+                .iter()
+                .filter(|&&al| al != Algo::Trivance)
+                .map(|&al| sw.rel_to_trivance(al, si))
+                .fold(f64::INFINITY, f64::min);
+            row.push(format!("{:+.1}%", (best_rel - 1.0) * 100.0));
+        }
+        table.row(row);
+    }
+    out.push_str(&table.render());
+    out.push_str("\npositive = Trivance faster than every existing approach at that point\n");
+    out
+}
+
+/// Fig. 9: 27×27 torus (power-of-three) — Bucket and Bruck vs Trivance.
+pub fn fig9(quick: bool) -> String {
+    let a = if quick { 9 } else { 27 };
+    let t = Torus::new(&[a, a]);
+    let s = run_sweep(&t, &POW3_ALGOS, &size_ladder(max_size(quick)), &NetParams::default());
+    s.render(&format!(
+        "Fig. 9 — AllReduce completion relative to Trivance, {a}×{a} torus (power-of-three)"
+    ))
+}
+
+/// Fig. 10: 16×16×16 torus (4096 nodes).
+pub fn fig10(quick: bool) -> String {
+    let (dims, sizes): (Vec<u32>, Vec<u64>) = if quick {
+        (vec![4, 4, 4], size_ladder(512 << 10))
+    } else {
+        (vec![16, 16, 16], size_ladder(128 << 20))
+    };
+    let t = Torus::new(&dims);
+    let s = run_sweep(&t, &POW2_ALGOS, &sizes, &NetParams::default());
+    s.render(&format!("Fig. 10 — AllReduce completion relative to Trivance, {dims:?} torus"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::harness::sweep::run_sweep;
+
+    #[test]
+    fn fig6a_quick_renders() {
+        let md = fig6(8, true);
+        assert!(md.contains("ring n=8"));
+        assert!(md.contains("32 B"));
+    }
+
+    #[test]
+    fn small_sizes_latency_optimal_wins() {
+        // The paper's headline: in the latency-bound regime Trivance is the
+        // best performer (Fig. 6a small sizes).
+        let t = Torus::ring(8);
+        let s = run_sweep(&t, &POW2_ALGOS, &[32, 128], &NetParams::default());
+        for (si, _) in s.sizes.iter().enumerate() {
+            for &a in &s.algos {
+                if a == Algo::Trivance {
+                    continue;
+                }
+                assert!(
+                    s.rel_to_trivance(a, si) >= 0.999,
+                    "size idx {si}: {a:?} beat trivance"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn large_sizes_bucket_wins_on_ring() {
+        // Fig. 6a: from ~4 MiB the Bucket algorithm achieves the lowest
+        // completion time.
+        let t = Torus::ring(8);
+        let s = run_sweep(&t, &POW2_ALGOS, &[32 << 20], &NetParams::default());
+        assert_eq!(s.winners()[0], Algo::Bucket);
+    }
+}

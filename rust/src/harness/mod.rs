@@ -1,0 +1,45 @@
+//! Benchmark harness: regenerates every table and figure of the paper's
+//! evaluation (§6) on the discrete-event simulator.
+//!
+//! | id       | paper artifact                                         |
+//! |----------|--------------------------------------------------------|
+//! | `table1` | Table 1 — ring optimality factors, closed form vs measured |
+//! | `table2` | Table 2 — torus transmission-delay optimality          |
+//! | `fig6a`  | ring n=8 sweep, completion relative to Trivance        |
+//! | `fig6b`  | ring n=64 sweep                                        |
+//! | `fig7a`  | 8×8 torus sweep                                        |
+//! | `fig7b`  | 32×32 torus sweep                                      |
+//! | `fig8`   | 32×32 torus, bandwidth 200 Gb/s–3.2 Tb/s               |
+//! | `fig9`   | 27×27 torus (power-of-three), Bucket/Bruck vs Trivance |
+//! | `fig10`  | 16×16×16 torus sweep                                   |
+//!
+//! Numbers are not SST's absolute nanoseconds — the claims reproduced are
+//! the *shapes*: who wins per message-size regime, where the crossovers
+//! sit, and the ~3× Bruck-vs-Trivance congestion gap (EXPERIMENTS.md).
+
+pub mod sweep;
+pub mod figures;
+pub mod tables;
+pub mod pattern;
+pub mod train;
+
+/// All harness-regenerable artifact ids.
+pub const ALL_IDS: [&str; 9] = [
+    "table1", "table2", "fig6a", "fig6b", "fig7a", "fig7b", "fig8", "fig9", "fig10",
+];
+
+/// Run one artifact by id; `quick` trims sweep sizes for smoke runs.
+pub fn run(id: &str, quick: bool) -> Result<String, String> {
+    match id {
+        "table1" => Ok(tables::table1(quick)),
+        "table2" => Ok(tables::table2(quick)),
+        "fig6a" => Ok(figures::fig6(8, quick)),
+        "fig6b" => Ok(figures::fig6(64, quick)),
+        "fig7a" => Ok(figures::fig7(8, quick)),
+        "fig7b" => Ok(figures::fig7(32, quick)),
+        "fig8" => Ok(figures::fig8(quick)),
+        "fig9" => Ok(figures::fig9(quick)),
+        "fig10" => Ok(figures::fig10(quick)),
+        other => Err(format!("unknown artifact id {other:?} (known: {})", ALL_IDS.join(", "))),
+    }
+}

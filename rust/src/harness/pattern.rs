@@ -1,0 +1,75 @@
+//! Communication-pattern pretty printer — the textual equivalent of the
+//! paper's Figs. 3/4: per step, each node's peers and the set of nodes it
+//! has accumulated data from.
+
+use crate::agpattern::AgPattern;
+use crate::algo::multidim::simulate_held;
+use crate::algo::rings::{bruck, trivance, Order};
+use crate::util::fmt;
+
+/// Render the block-propagation table of `algo` ("trivance" or "bruck") on
+/// a ring of `n` nodes.
+pub fn render_ring_pattern(algo: &str, n: u32) -> Result<String, String> {
+    let p: Box<dyn AgPattern> = match algo {
+        "trivance" => Box::new(trivance(n, Order::Inc)),
+        "bruck" => Box::new(bruck(n, Order::Inc, false)),
+        other => return Err(format!("pattern printer supports trivance|bruck, got {other}")),
+    };
+    let held = simulate_held(p.as_ref());
+    let mut out = format!(
+        "{} on a ring of n={n}: {} steps (⌈log₃ {n}⌉)\n\n",
+        p.name(),
+        p.num_steps()
+    );
+    for k in 0..p.num_steps() {
+        out.push_str(&format!("step {k}:\n"));
+        let sends = p.sends(k);
+        let mut t = fmt::Table::new(vec!["node", "sends to", "blocks", "holds after"]);
+        for r in 0..n {
+            let tos: Vec<String> = sends
+                .iter()
+                .filter(|s| s.src == r)
+                .map(|s| s.to.to_string())
+                .collect();
+            let blocks: Vec<String> = sends
+                .iter()
+                .filter(|s| s.src == r)
+                .map(|s| format!("{:?}", s.blocks))
+                .collect();
+            t.row(vec![
+                r.to_string(),
+                tos.join(", "),
+                blocks.join(" / "),
+                format!("{:?}", held[k + 1][r as usize]),
+            ]);
+        }
+        out.push_str(&t.render());
+        out.push('\n');
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fig3_pattern_ring9() {
+        // Fig. 3: after step 0 node 0 holds {8,0,1}; after step 1 all 9.
+        let s = render_ring_pattern("trivance", 9).unwrap();
+        assert!(s.contains("2 steps"));
+        assert!(s.contains("{0..9}") || s.contains("{0..8"), "{s}");
+    }
+
+    #[test]
+    fn fig4_pattern_ring7_two_steps() {
+        // Fig. 4: n=7 also completes in two steps, final distance 2.
+        let s = render_ring_pattern("trivance", 7).unwrap();
+        assert!(s.contains("2 steps"));
+    }
+
+    #[test]
+    fn rejects_unknown() {
+        assert!(render_ring_pattern("nope", 9).is_err());
+    }
+}

@@ -1,0 +1,186 @@
+//! Core sweep machinery: build each algorithm once per topology, simulate
+//! across message sizes, pick the best variant per point, and render
+//! relative-to-Trivance tables (the paper's plotting convention: positive %
+//! = Trivance is faster).
+
+use crate::algo::{build, Algo, BuiltCollective, Variant};
+use crate::cost::NetParams;
+use crate::sim::{simulate, SimMode};
+use crate::topology::Torus;
+use crate::util::fmt;
+
+/// Message-size ladder 32 B … `max` (×4 per step, the paper's x-axis).
+pub fn size_ladder(max: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut m = 32u64;
+    while m <= max {
+        v.push(m);
+        m *= 4;
+    }
+    v
+}
+
+/// One algorithm's built variants on a topology.
+pub struct BuiltAlgo {
+    pub algo: Algo,
+    pub variants: Vec<BuiltCollective>,
+}
+
+/// Build every requested algorithm (both variants) on `torus`,
+/// skipping unsupported configurations silently (matching the paper's
+/// per-figure algorithm sets).
+pub fn build_all(torus: &Torus, algos: &[Algo]) -> Vec<BuiltAlgo> {
+    algos
+        .iter()
+        .filter_map(|&algo| {
+            let variants: Vec<BuiltCollective> = Variant::ALL
+                .iter()
+                .filter_map(|&v| build(algo, v, torus).ok())
+                .collect();
+            if variants.is_empty() {
+                None
+            } else {
+                Some(BuiltAlgo { algo, variants })
+            }
+        })
+        .collect()
+}
+
+/// Completion time of the best variant at one message size.
+pub struct BestPoint {
+    pub completion_s: f64,
+    pub variant: Variant,
+}
+
+pub fn best_completion(
+    built: &BuiltAlgo,
+    torus: &Torus,
+    m_bytes: u64,
+    params: &NetParams,
+) -> BestPoint {
+    built
+        .variants
+        .iter()
+        .map(|b| {
+            let r = simulate(&b.net, torus, m_bytes, params, SimMode::Flow);
+            BestPoint { completion_s: r.completion_s, variant: b.variant }
+        })
+        .min_by(|a, b| a.completion_s.partial_cmp(&b.completion_s).unwrap())
+        .unwrap()
+}
+
+/// Full sweep result: `points[size_idx][algo_idx]`.
+pub struct Sweep {
+    pub torus: Torus,
+    pub sizes: Vec<u64>,
+    pub algos: Vec<Algo>,
+    pub points: Vec<Vec<BestPoint>>,
+}
+
+pub fn run_sweep(torus: &Torus, algos: &[Algo], sizes: &[u64], params: &NetParams) -> Sweep {
+    let built = build_all(torus, algos);
+    let points = sizes
+        .iter()
+        .map(|&m| {
+            built
+                .iter()
+                .map(|b| best_completion(b, torus, m, params))
+                .collect()
+        })
+        .collect();
+    Sweep {
+        torus: torus.clone(),
+        sizes: sizes.to_vec(),
+        algos: built.iter().map(|b| b.algo).collect(),
+        points,
+    }
+}
+
+impl Sweep {
+    fn trivance_idx(&self) -> usize {
+        self.algos
+            .iter()
+            .position(|&a| a == Algo::Trivance)
+            .expect("sweep must include trivance")
+    }
+
+    /// Markdown table: completion per algorithm (variant-tagged) and
+    /// relative % vs Trivance (positive = Trivance faster, the paper's
+    /// y-axis).
+    pub fn render(&self, title: &str) -> String {
+        let ti = self.trivance_idx();
+        let mut header = vec!["size".to_string()];
+        for &a in &self.algos {
+            header.push(a.label().to_string());
+            if a != Algo::Trivance {
+                header.push(format!("{} Δ%", a.label()));
+            }
+        }
+        let mut t = fmt::Table::new(header);
+        for (si, &m) in self.sizes.iter().enumerate() {
+            let base = self.points[si][ti].completion_s;
+            let mut row = vec![fmt::bytes(m)];
+            for (ai, _a) in self.algos.iter().enumerate() {
+                let p = &self.points[si][ai];
+                row.push(format!("{} ({})", fmt::secs(p.completion_s), p.variant.label()));
+                if ai != ti {
+                    let rel = (p.completion_s / base - 1.0) * 100.0;
+                    row.push(format!("{rel:+.1}%"));
+                }
+            }
+            t.row(row);
+        }
+        format!("### {title}\n\n{}", t.render())
+    }
+
+    /// The winner (algorithm index) at each size.
+    pub fn winners(&self) -> Vec<Algo> {
+        self.points
+            .iter()
+            .map(|row| {
+                let i = row
+                    .iter()
+                    .enumerate()
+                    .min_by(|a, b| a.1.completion_s.partial_cmp(&b.1.completion_s).unwrap())
+                    .unwrap()
+                    .0;
+                self.algos[i]
+            })
+            .collect()
+    }
+
+    /// Completion of `algo` relative to Trivance at size index `si`
+    /// (`>1` = Trivance faster).
+    pub fn rel_to_trivance(&self, algo: Algo, si: usize) -> f64 {
+        let ti = self.trivance_idx();
+        let ai = self.algos.iter().position(|&a| a == algo).expect("algo in sweep");
+        self.points[si][ai].completion_s / self.points[si][ti].completion_s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ladder() {
+        let v = size_ladder(128 << 20);
+        assert_eq!(v[0], 32);
+        assert_eq!(*v.last().unwrap(), 128 << 20);
+        assert_eq!(v.len(), 12);
+    }
+
+    #[test]
+    fn sweep_ring8_small() {
+        let t = Torus::ring(8);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Swing];
+        let s = run_sweep(&t, &algos, &[32, 32 << 10], &NetParams::default());
+        assert_eq!(s.points.len(), 2);
+        assert_eq!(s.points[0].len(), 3);
+        let md = s.render("test");
+        assert!(md.contains("trivance"));
+        // at 32 B everything is latency-bound: Trivance/Bruck (2 steps)
+        // beat Swing (3 steps)
+        assert!(s.rel_to_trivance(Algo::Swing, 0) > 1.0);
+    }
+}

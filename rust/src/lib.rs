@@ -1,0 +1,45 @@
+//! # Trivance — latency-optimal AllReduce by shortcutting multiport networks
+//!
+//! Reproduction of *Trivance: Latency-Optimal AllReduce by Shortcutting
+//! Multiport Networks* (CS.DC 2026). The crate provides:
+//!
+//! * [`topology`] — bidirectional rings and D-dimensional tori with minimal
+//!   routing, the network substrate all schedules execute on.
+//! * [`blockset`] — cyclic interval arithmetic over the rank/block space.
+//! * [`schedule`] — the schedule IR (steps → sends → pieces), plus a static
+//!   validator that proves contributor-set disjointness and coverage for any
+//!   generated schedule, and congestion/bytes analysis under minimal routing.
+//! * [`agpattern`] — the generic AllGather-pattern machinery: every collective
+//!   is specified as an AllGather pattern; latency-optimal AllReduce is the
+//!   reinterpretation of that pattern over full-vector partial aggregates
+//!   (with backward cut-point propagation so every send is an exact segment
+//!   cover), and bandwidth-optimal AllReduce is the tree-reversal
+//!   Reduce-Scatter followed by the AllGather itself.
+//! * [`algo`] — Trivance (§4), Bruck, Swing, Recursive Doubling, Ring /
+//!   Bucket, each with latency- (L) and bandwidth-optimal (B) variants, on
+//!   rings and multidimensional tori (§5), plus virtual power-of-three /
+//!   power-of-two padding for arbitrary node counts.
+//! * [`cost`] — the congestion-aware Hockney cost model (paper Eq. 1) and the
+//!   optimality factors Λ/Δ/Θ of Tables 1 and 2.
+//! * [`sim`] — the discrete-event network simulator substituting for SST:
+//!   flow-level (max-min fair sharing) and packet-level modes.
+//! * [`exec`] — the dataflow executor running schedules on real vectors with
+//!   reductions through the AOT-compiled PJRT kernels ([`runtime`]).
+//! * [`harness`] — regeneration of every table and figure in the paper.
+//!
+//! Python/JAX/Pallas exist only on the build path (`python/compile`), which
+//! AOT-lowers the reduction kernels and the demo train step to HLO text in
+//! `artifacts/`; the runtime loads those via the PJRT C API.
+
+pub mod util;
+pub mod blockset;
+pub mod topology;
+pub mod schedule;
+pub mod agpattern;
+pub mod algo;
+pub mod cost;
+pub mod sim;
+pub mod exec;
+pub mod runtime;
+pub mod harness;
+pub mod cli;

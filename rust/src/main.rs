@@ -1,0 +1,6 @@
+//! `trivance` — leader entrypoint. See `trivance help`.
+
+fn main() {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    std::process::exit(trivance::cli::main(argv));
+}

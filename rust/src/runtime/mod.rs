@@ -1,0 +1,230 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt`) and
+//! executes them on the CPU PJRT client via the `xla` crate.
+//!
+//! Pipeline: `PjRtClient::cpu()` → `HloModuleProto::from_text_file` →
+//! `XlaComputation::from_proto` → `client.compile` → `execute`. Executables
+//! are compiled once at load and cached for the life of the process; the
+//! request path never touches Python.
+
+use anyhow::{bail, Context, Result};
+use std::path::{Path, PathBuf};
+
+/// Static shape metadata emitted by `python/compile/aot.py` (`meta.txt`).
+#[derive(Clone, Copy, Debug)]
+pub struct Meta {
+    pub reduce_lanes: usize,
+    pub mlp_in: usize,
+    pub mlp_hidden: usize,
+    pub mlp_classes: usize,
+    pub mlp_batch: usize,
+    pub mlp_params: usize,
+}
+
+impl Meta {
+    fn parse(text: &str) -> Result<Meta> {
+        let mut get = |key: &str| -> Result<usize> {
+            text.lines()
+                .find_map(|l| l.strip_prefix(&format!("{key}=")))
+                .with_context(|| format!("meta.txt missing key {key}"))?
+                .trim()
+                .parse()
+                .with_context(|| format!("meta.txt bad value for {key}"))
+        };
+        Ok(Meta {
+            reduce_lanes: get("reduce_lanes")?,
+            mlp_in: get("mlp_in")?,
+            mlp_hidden: get("mlp_hidden")?,
+            mlp_classes: get("mlp_classes")?,
+            mlp_batch: get("mlp_batch")?,
+            mlp_params: get("mlp_params")?,
+        })
+    }
+}
+
+/// The loaded runtime: compiled executables + metadata.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    reduce2: xla::PjRtLoadedExecutable,
+    reduce3: xla::PjRtLoadedExecutable,
+    mlp_grad: xla::PjRtLoadedExecutable,
+    pub meta: Meta,
+}
+
+/// Default artifact directory (relative to the repo root / CWD).
+pub fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("TRIVANCE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
+}
+
+impl Runtime {
+    /// Load and compile all artifacts from `dir`.
+    pub fn load(dir: &Path) -> Result<Runtime> {
+        let meta_text = std::fs::read_to_string(dir.join("meta.txt"))
+            .with_context(|| format!("reading {}/meta.txt (run `make artifacts`)", dir.display()))?;
+        let meta = Meta::parse(&meta_text)?;
+        let client = xla::PjRtClient::cpu()?;
+        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+            let path = dir.join(format!("{name}.hlo.txt"));
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().context("non-utf8 artifact path")?,
+            )
+            .with_context(|| format!("parsing {}", path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            Ok(client.compile(&comp)?)
+        };
+        Ok(Runtime {
+            reduce2: compile("reduce2")?,
+            reduce3: compile("reduce3")?,
+            mlp_grad: compile("mlp_grad")?,
+            client,
+            meta,
+        })
+    }
+
+    /// Load from the default directory if artifacts exist.
+    pub fn load_default() -> Result<Runtime> {
+        Self::load(&default_artifact_dir())
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
+        let result = exe.execute::<xla::Literal>(args)?;
+        Ok(result[0][0].to_literal_sync()?)
+    }
+
+    /// One lanes-wide chunked call of an elementwise executable.
+    fn reduce_chunked(&self, exe: &xla::PjRtLoadedExecutable, parts: &[&[f32]]) -> Result<Vec<f32>> {
+        let n = parts[0].len();
+        if parts.iter().any(|p| p.len() != n) {
+            bail!("reduce arity length mismatch");
+        }
+        let lanes = self.meta.reduce_lanes;
+        let mut out = Vec::with_capacity(n);
+        let mut off = 0;
+        let mut padded = vec![0f32; lanes];
+        while off < n {
+            let take = lanes.min(n - off);
+            let args: Vec<xla::Literal> = parts
+                .iter()
+                .map(|p| {
+                    if take == lanes {
+                        xla::Literal::vec1(&p[off..off + lanes])
+                    } else {
+                        padded[..take].copy_from_slice(&p[off..off + take]);
+                        padded[take..].iter_mut().for_each(|x| *x = 0.0);
+                        xla::Literal::vec1(&padded)
+                    }
+                })
+                .collect();
+            let res = self.run1(exe, &args)?.to_tuple1()?;
+            let v = res.to_vec::<f32>()?;
+            out.extend_from_slice(&v[..take]);
+            off += take;
+        }
+        Ok(out)
+    }
+
+    /// Elementwise `a + b` through the AOT `reduce2` kernel.
+    pub fn reduce2(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+        self.reduce_chunked(&self.reduce2, &[a, b])
+    }
+
+    /// Joint reduction `a + b + c` through the AOT `reduce3` kernel.
+    pub fn reduce3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+        self.reduce_chunked(&self.reduce3, &[a, b, c])
+    }
+
+    /// One worker's (gradient, loss) for a batch, via the AOT train step.
+    /// `x` is row-major `[batch, in]`, `y_onehot` row-major `[batch,
+    /// classes]`.
+    pub fn mlp_grad(&self, params: &[f32], x: &[f32], y_onehot: &[f32]) -> Result<(Vec<f32>, f32)> {
+        let m = &self.meta;
+        if params.len() != m.mlp_params
+            || x.len() != m.mlp_batch * m.mlp_in
+            || y_onehot.len() != m.mlp_batch * m.mlp_classes
+        {
+            bail!("mlp_grad argument shape mismatch");
+        }
+        let args = [
+            xla::Literal::vec1(params),
+            xla::Literal::vec1(x).reshape(&[m.mlp_batch as i64, m.mlp_in as i64])?,
+            xla::Literal::vec1(y_onehot).reshape(&[m.mlp_batch as i64, m.mlp_classes as i64])?,
+        ];
+        let (grad, loss) = self.run1(&self.mlp_grad, &args)?.to_tuple2()?;
+        let g = grad.to_vec::<f32>()?;
+        let l = loss.to_vec::<f32>()?;
+        Ok((g, l[0]))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // Tests are skipped when artifacts have not been built (plain
+        // `cargo test` without `make artifacts`); `make test` always builds
+        // them first.
+        Runtime::load_default().ok()
+    }
+
+    #[test]
+    fn meta_parses() {
+        let m = Meta::parse(
+            "reduce_lanes=4096\nmlp_in=2\nmlp_hidden=128\nmlp_classes=3\nmlp_batch=64\nmlp_params=771\n",
+        )
+        .unwrap();
+        assert_eq!(m.reduce_lanes, 4096);
+        assert_eq!(m.mlp_params, 771);
+    }
+
+    #[test]
+    fn meta_rejects_missing_key() {
+        assert!(Meta::parse("reduce_lanes=4096\n").is_err());
+    }
+
+    #[test]
+    fn reduce2_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let n = 10_000; // forces chunking + padding
+        let a: Vec<f32> = (0..n).map(|i| i as f32 * 0.5).collect();
+        let b: Vec<f32> = (0..n).map(|i| (n - i) as f32).collect();
+        let got = rt.reduce2(&a, &b).unwrap();
+        for i in 0..n {
+            assert_eq!(got[i], a[i] + b[i], "i={i}");
+        }
+    }
+
+    #[test]
+    fn reduce3_matches_native() {
+        let Some(rt) = runtime() else { return };
+        let n = 4096 + 7;
+        let a: Vec<f32> = (0..n).map(|i| i as f32).collect();
+        let b = vec![1.0f32; n];
+        let c = vec![2.0f32; n];
+        let got = rt.reduce3(&a, &b, &c).unwrap();
+        for i in 0..n {
+            assert_eq!(got[i], a[i] + 3.0);
+        }
+    }
+
+    #[test]
+    fn mlp_grad_runs_and_is_finite() {
+        let Some(rt) = runtime() else { return };
+        let m = rt.meta;
+        let params = vec![0.01f32; m.mlp_params];
+        let x = vec![0.5f32; m.mlp_batch * m.mlp_in];
+        let mut y = vec![0f32; m.mlp_batch * m.mlp_classes];
+        for r in 0..m.mlp_batch {
+            y[r * m.mlp_classes + r % m.mlp_classes] = 1.0;
+        }
+        let (grad, loss) = rt.mlp_grad(&params, &x, &y).unwrap();
+        assert_eq!(grad.len(), m.mlp_params);
+        assert!(loss.is_finite() && loss > 0.0);
+        assert!(grad.iter().all(|g| g.is_finite()));
+    }
+}

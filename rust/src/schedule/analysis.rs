@@ -1,0 +1,193 @@
+//! Schedule analysis: per-step link loads, congestion, transmitted volume.
+//!
+//! Bridges the schedule IR to the paper's congestion-aware cost model
+//! (Eq. 1): for each step `k` it computes the chunk size `m_k` and the
+//! congestion `c_k` ("number of chunks sharing a link") by actually routing
+//! every message on the topology and accounting per-link byte loads; the
+//! bottleneck link determines the step's transmission term.
+
+use super::{RouteHint, Schedule};
+use crate::topology::Torus;
+
+/// Per-step figures, all byte quantities in units of the vector size `m`.
+#[derive(Clone, Debug)]
+pub struct StepStats {
+    /// Max over links of the summed payload crossing it (⇒ the step's
+    /// transmission delay is `beta * m * max_link_rel`).
+    pub max_link_rel: f64,
+    /// Max messages sharing one link (the paper's `c_k` chunk count).
+    pub max_link_msgs: u32,
+    /// Largest single message in the step (`m_k`).
+    pub max_msg_rel: f64,
+    /// Total payload injected in the step.
+    pub total_rel: f64,
+    /// Longest route (hops) of any message in the step.
+    pub max_hops: u32,
+    /// Number of messages.
+    pub messages: usize,
+}
+
+/// Whole-schedule figures.
+#[derive(Clone, Debug)]
+pub struct ScheduleStats {
+    pub steps: Vec<StepStats>,
+    /// Max over nodes of total injected payload (units of m) — the Δ
+    /// numerator (per-port bandwidth term uses this divided by ports).
+    pub max_node_sent_rel: f64,
+    /// Σ_k max_link_rel — the transmission-delay figure Θ·(m·β) of
+    /// Appendix B, in units of m·β.
+    pub tx_delay_rel: f64,
+}
+
+/// Analyze `s` on topology `t`.
+pub fn analyze(s: &Schedule, t: &Torus) -> ScheduleStats {
+    assert_eq!(s.n, t.n(), "schedule/topology node count mismatch");
+    let mut steps = Vec::with_capacity(s.steps.len());
+    let mut loads = vec![0f64; t.num_links()];
+    let mut counts = vec![0u32; t.num_links()];
+    for step in &s.steps {
+        loads.iter_mut().for_each(|x| *x = 0.0);
+        counts.iter_mut().for_each(|x| *x = 0);
+        let mut max_msg_rel = 0f64;
+        let mut total_rel = 0f64;
+        let mut max_hops = 0u32;
+        let mut messages = 0usize;
+        for (src, sends) in step.sends.iter().enumerate() {
+            for send in sends {
+                let rel = send.rel_bytes(s.n_blocks);
+                if rel == 0.0 {
+                    continue;
+                }
+                messages += 1;
+                max_msg_rel = max_msg_rel.max(rel);
+                total_rel += rel;
+                let route = match send.route {
+                    RouteHint::Minimal => t.route(src as u32, send.to),
+                    RouteHint::Directed { dim, dir } => {
+                        t.route_directed(src as u32, send.to, dim as usize, dir)
+                    }
+                };
+                max_hops = max_hops.max(route.len() as u32);
+                for link in route {
+                    let idx = t.link_index(link);
+                    loads[idx] += rel;
+                    counts[idx] += 1;
+                }
+            }
+        }
+        let max_link_rel = loads.iter().copied().fold(0f64, f64::max);
+        let max_link_msgs = counts.iter().copied().max().unwrap_or(0);
+        steps.push(StepStats {
+            max_link_rel,
+            max_link_msgs,
+            max_msg_rel,
+            total_rel,
+            max_hops,
+            messages,
+        });
+    }
+    let max_node_sent_rel = (0..s.n)
+        .map(|r| s.node_sent_rel_bytes(r))
+        .fold(0f64, f64::max);
+    let tx_delay_rel = steps.iter().map(|st| st.max_link_rel).sum();
+    ScheduleStats { steps, max_node_sent_rel, tx_delay_rel }
+}
+
+impl ScheduleStats {
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockset::BlockSet;
+    use crate::schedule::{Kind, Piece, Send};
+
+    #[test]
+    fn analyze_neighbor_exchange() {
+        // 4-ring, everyone sends a full vector to the right neighbor.
+        let n = 4;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("x", n, n);
+        let st = s.push_step();
+        for r in 0..n {
+            st.push(
+                r,
+                Send {
+                    to: (r + 1) % n,
+                    pieces: vec![Piece {
+                        blocks: BlockSet::full(n),
+                        contrib: BlockSet::singleton(r, n),
+                        kind: Kind::Reduce,
+                    }],
+                    route: RouteHint::Minimal,
+                },
+            );
+        }
+        let st = analyze(&s, &t);
+        assert_eq!(st.num_steps(), 1);
+        let s0 = &st.steps[0];
+        assert!((s0.max_link_rel - 1.0).abs() < 1e-12); // one message per link
+        assert_eq!(s0.max_link_msgs, 1);
+        assert_eq!(s0.max_hops, 1);
+        assert!((st.max_node_sent_rel - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn analyze_distance_two_congestion() {
+        // 6-ring, everyone sends distance +2: each link carries 2 messages.
+        let n = 6;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("d2", n, n);
+        let st = s.push_step();
+        for r in 0..n {
+            st.push(
+                r,
+                Send {
+                    to: (r + 2) % n,
+                    pieces: vec![Piece {
+                        blocks: BlockSet::full(n),
+                        contrib: BlockSet::singleton(r, n),
+                        kind: Kind::Reduce,
+                    }],
+                    route: RouteHint::Minimal,
+                },
+            );
+        }
+        let stats = analyze(&s, &t);
+        assert_eq!(stats.steps[0].max_link_msgs, 2);
+        assert!((stats.steps[0].max_link_rel - 2.0).abs() < 1e-12);
+        assert_eq!(stats.steps[0].max_hops, 2);
+    }
+
+    #[test]
+    fn directed_route_congestion_differs() {
+        // distance 4 on a 6-ring: minimal routes 2 hops backward; directed
+        // +1 routes 4 hops forward.
+        let n = 6;
+        let t = Torus::ring(n);
+        let mk = |route| {
+            let mut s = Schedule::new("d", n, n);
+            let st = s.push_step();
+            st.push(
+                0,
+                Send {
+                    to: 4,
+                    pieces: vec![Piece {
+                        blocks: BlockSet::full(n),
+                        contrib: BlockSet::singleton(0, n),
+                        kind: Kind::Reduce,
+                    }],
+                    route,
+                },
+            );
+            s
+        };
+        let min = analyze(&mk(RouteHint::Minimal), &t);
+        let fwd = analyze(&mk(RouteHint::Directed { dim: 0, dir: 1 }), &t);
+        assert_eq!(min.steps[0].max_hops, 2);
+        assert_eq!(fwd.steps[0].max_hops, 4);
+    }
+}

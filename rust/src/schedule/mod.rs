@@ -1,0 +1,243 @@
+//! Schedule IR.
+//!
+//! A [`Schedule`] is the complete, static description of a collective: a
+//! sequence of steps, each step mapping every source node to the messages it
+//! sends. A message ([`Send`]) carries one or more [`Piece`]s.
+//!
+//! ## Semantics
+//!
+//! The AllReduce input vector of `m` bytes is partitioned into `n_blocks`
+//! equal blocks. Every node initially contributes to *every* block (its own
+//! local vector). A piece is either:
+//!
+//! * **Reduce**: for each block in `blocks`, the partial aggregate over the
+//!   contributor ranks in `contrib`. The receiver adds it in; correctness
+//!   requires `contrib` to be disjoint from the receiver's accumulated
+//!   contributor set for those blocks, and the *sender* must hold `contrib`
+//!   as an exact union of its stored atoms (you cannot un-sum an aggregate).
+//! * **Set**: the final, fully-reduced value of each block in `blocks`
+//!   (AllGather phase of bandwidth-optimal variants). `contrib` is the full
+//!   rank set by construction.
+//!
+//! Message size: a piece carrying `|blocks|` of the `n_blocks` blocks is
+//! `|blocks| / n_blocks · m` bytes — for latency-optimal variants pieces
+//! carry all blocks (a full-vector partial aggregate, `m` bytes); for
+//! bandwidth-optimal variants they carry the block subsets of the
+//! reduce-scatter/allgather bookkeeping.
+//!
+//! The IR is *paper-faithful*: the per-step structure gives `steps(A)·α`,
+//! and per-link byte loads under minimal routing give the `β·m_k·c_k`
+//! congestion terms of Eq. 1.
+
+pub mod validate;
+pub mod analysis;
+
+use crate::blockset::BlockSet;
+
+/// Piece semantics (see module docs).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Reduce,
+    Set,
+}
+
+/// A contiguous unit of payload within a message.
+#[derive(Clone, Debug)]
+pub struct Piece {
+    /// Which vector blocks this piece carries (block space `0..n_blocks`).
+    pub blocks: BlockSet,
+    /// Whose contributions are aggregated in (rank space `0..n`).
+    pub contrib: BlockSet,
+    pub kind: Kind,
+}
+
+/// Routing directive for a message.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RouteHint {
+    /// Minimal (shortest-path, tie split by parity) routing.
+    Minimal,
+    /// Forced direction along one dimension (e.g. unmodified Bruck routes
+    /// everything in the +1 direction regardless of distance).
+    Directed { dim: u8, dir: i8 },
+}
+
+/// One message from an implicit source (the index into `Step::sends`).
+#[derive(Clone, Debug)]
+pub struct Send {
+    pub to: u32,
+    pub pieces: Vec<Piece>,
+    pub route: RouteHint,
+}
+
+impl Send {
+    /// Payload in units of the full vector size `m` (i.e. fraction of `m`).
+    pub fn rel_bytes(&self, n_blocks: u32) -> f64 {
+        self.pieces
+            .iter()
+            .map(|p| p.blocks.len() as f64 / n_blocks as f64)
+            .sum()
+    }
+}
+
+/// One communication step: `sends[src]` are the messages node `src` injects.
+#[derive(Clone, Debug, Default)]
+pub struct Step {
+    pub sends: Vec<Vec<Send>>,
+}
+
+impl Step {
+    pub fn new(n: u32) -> Self {
+        Step { sends: vec![Vec::new(); n as usize] }
+    }
+
+    pub fn push(&mut self, src: u32, send: Send) {
+        self.sends[src as usize].push(send);
+    }
+}
+
+/// A complete collective schedule.
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    /// Human-readable identity, e.g. `trivance-L n=9`.
+    pub name: String,
+    /// Number of nodes.
+    pub n: u32,
+    /// Number of vector blocks (`n` for ring schedules; `D·a` etc. for
+    /// merged multidimensional schedules).
+    pub n_blocks: u32,
+    pub steps: Vec<Step>,
+}
+
+impl Schedule {
+    pub fn new(name: impl Into<String>, n: u32, n_blocks: u32) -> Self {
+        Schedule { name: name.into(), n, n_blocks, steps: Vec::new() }
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.steps.len()
+    }
+
+    /// Append an empty step and return a mutable reference to it.
+    pub fn push_step(&mut self) -> &mut Step {
+        self.steps.push(Step::new(self.n));
+        self.steps.last_mut().unwrap()
+    }
+
+    /// Total payload injected by `node` over the whole schedule, in units
+    /// of `m`.
+    pub fn node_sent_rel_bytes(&self, node: u32) -> f64 {
+        self.steps
+            .iter()
+            .map(|s| {
+                s.sends[node as usize]
+                    .iter()
+                    .map(|snd| snd.rel_bytes(self.n_blocks))
+                    .sum::<f64>()
+            })
+            .sum()
+    }
+
+    /// Merge another schedule's steps into this one, step-aligned from
+    /// `offset`; both must agree on `n` and `n_blocks`. Used to overlay the
+    /// concurrent per-dimension collectives of multidimensional variants.
+    pub fn overlay(&mut self, other: &Schedule, offset: usize) {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.n_blocks, other.n_blocks);
+        while self.steps.len() < offset + other.steps.len() {
+            self.push_step();
+        }
+        for (i, st) in other.steps.iter().enumerate() {
+            for (src, sends) in st.sends.iter().enumerate() {
+                for s in sends {
+                    self.steps[offset + i].sends[src].push(s.clone());
+                }
+            }
+        }
+    }
+
+    /// Concatenate `other` after this schedule (phase composition, e.g.
+    /// Reduce-Scatter followed by AllGather).
+    pub fn concat(&mut self, other: &Schedule) {
+        let off = self.steps.len();
+        self.overlay(other, off);
+    }
+
+    /// Number of messages in the whole schedule.
+    pub fn num_messages(&self) -> usize {
+        self.steps
+            .iter()
+            .map(|s| s.sends.iter().map(|v| v.len()).sum::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reduce_piece(blocks: BlockSet, contrib: BlockSet) -> Piece {
+        Piece { blocks, contrib, kind: Kind::Reduce }
+    }
+
+    #[test]
+    fn rel_bytes_full_vector() {
+        let s = Send {
+            to: 1,
+            pieces: vec![reduce_piece(BlockSet::full(9), BlockSet::singleton(0, 9))],
+            route: RouteHint::Minimal,
+        };
+        assert!((s.rel_bytes(9) - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn rel_bytes_blocks() {
+        let s = Send {
+            to: 1,
+            pieces: vec![reduce_piece(BlockSet::cyc_range(0, 3, 9), BlockSet::singleton(0, 9))],
+            route: RouteHint::Minimal,
+        };
+        assert!((s.rel_bytes(9) - 1.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn overlay_and_concat() {
+        let mut a = Schedule::new("a", 4, 4);
+        a.push_step();
+        let mut b = Schedule::new("b", 4, 4);
+        let st = b.push_step();
+        st.push(
+            0,
+            Send { to: 1, pieces: vec![], route: RouteHint::Minimal },
+        );
+        a.overlay(&b, 0);
+        assert_eq!(a.num_steps(), 1);
+        assert_eq!(a.num_messages(), 1);
+        a.concat(&b);
+        assert_eq!(a.num_steps(), 2);
+        assert_eq!(a.num_messages(), 2);
+    }
+
+    #[test]
+    fn node_sent_rel_bytes_sums() {
+        let mut a = Schedule::new("a", 3, 3);
+        let st = a.push_step();
+        st.push(
+            0,
+            Send {
+                to: 1,
+                pieces: vec![reduce_piece(BlockSet::full(3), BlockSet::singleton(0, 3))],
+                route: RouteHint::Minimal,
+            },
+        );
+        st.push(
+            0,
+            Send {
+                to: 2,
+                pieces: vec![reduce_piece(BlockSet::cyc_range(0, 1, 3), BlockSet::singleton(0, 3))],
+                route: RouteHint::Minimal,
+            },
+        );
+        assert!((a.node_sent_rel_bytes(0) - (1.0 + 1.0 / 3.0)).abs() < 1e-12);
+        assert_eq!(a.node_sent_rel_bytes(1), 0.0);
+    }
+}

@@ -1,0 +1,371 @@
+//! Flow-level discrete-event simulation with max-min fair link sharing.
+//!
+//! Each message is a fluid flow over its route. Whenever the set of active
+//! flows changes (injection or drain), rates are recomputed by progressive
+//! water-filling: repeatedly freeze the flows crossing the currently most
+//! contended link at its fair share. Deliveries complete `hops · per_hop`
+//! after the last byte is serialized (cut-through pipelining).
+//!
+//! Events at equal timestamps are batch-processed so the symmetric,
+//! step-synchronized traffic of these collectives triggers only a handful
+//! of rate recomputations per step.
+
+use super::{materialize, SimMsg, SimResult};
+use crate::cost::NetParams;
+use crate::schedule::Schedule;
+use crate::topology::Torus;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+const TIME_EPS: f64 = 1e-15;
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Event {
+    /// Node enters step `k`: inject its step-`k` sends.
+    StepStart { node: u32, step: u32 },
+    /// A message has fully arrived at its destination.
+    Delivery { node: u32, step: u32 },
+}
+
+#[derive(Clone, Copy, PartialEq)]
+struct Timed {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl Eq for Timed {}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // min-heap by time (reverse), tie-broken by insertion order
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+struct ActiveFlow {
+    msg_idx: u32,
+    remaining: f64,
+    rate: f64,
+}
+
+pub fn simulate_flow(
+    schedule: &Schedule,
+    torus: &Torus,
+    m_bytes: u64,
+    params: &NetParams,
+) -> SimResult {
+    let steps = materialize(schedule, torus, m_bytes);
+    let n = schedule.n as usize;
+    let nsteps = steps.len();
+    if nsteps == 0 {
+        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+    }
+    let cap = params.link_bw_bps / 8.0; // bytes per second per link
+    let per_hop = params.per_hop_s();
+
+    // Expected receive counts per (node, step).
+    let mut expected = vec![0u32; n * nsteps];
+    for (k, msgs) in steps.iter().enumerate() {
+        for m in msgs {
+            expected[m.dst as usize * nsteps + k] += 1;
+        }
+    }
+    let mut received = vec![0u32; n * nsteps];
+    // Per node: the step it has entered (sends injected); none = about to
+    // enter step 0.
+    let mut entered = vec![-1i64; n];
+
+    let msgs_flat: Vec<&SimMsg> = steps.iter().flatten().collect();
+    // index of messages per (step, src) for injection
+    let mut by_step_src: Vec<Vec<u32>> = vec![Vec::new(); n * nsteps];
+    for (i, m) in msgs_flat.iter().enumerate() {
+        by_step_src[m.src as usize * nsteps + m.step].push(i as u32);
+    }
+
+    let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
+    let mut seq = 0u64;
+    let mut push = |heap: &mut BinaryHeap<Timed>, t: f64, ev: Event| {
+        seq += 1;
+        heap.push(Timed { t, seq, ev });
+    };
+    // Every node enters step 0 after the initial α.
+    for r in 0..n {
+        push(&mut heap, params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+    }
+
+    let mut active: Vec<ActiveFlow> = Vec::new();
+    let mut link_count = vec![0u32; torus.num_links()];
+    let mut now = 0.0f64;
+    let mut completion = 0.0f64;
+    let mut events = 0u64;
+    // scratch buffers for water-filling
+    let mut link_cap = vec![0f64; torus.num_links()];
+
+    // Water-filling rate assignment over `active`.
+    let recompute = |active: &mut Vec<ActiveFlow>,
+                     link_count: &mut [u32],
+                     link_cap: &mut [f64],
+                     frozen: &mut Vec<bool>| {
+        frozen.clear();
+        frozen.resize(active.len(), false);
+        // initialize per-link state for links actually used
+        for f in active.iter() {
+            for &l in &msgs_flat[f.msg_idx as usize].route {
+                link_cap[l as usize] = cap;
+                link_count[l as usize] = 0;
+            }
+        }
+        for f in active.iter() {
+            for &l in &msgs_flat[f.msg_idx as usize].route {
+                link_count[l as usize] += 1;
+            }
+        }
+        let mut left = active.len();
+        while left > 0 {
+            // find the most contended link's fair share
+            let mut min_share = f64::INFINITY;
+            for (i, f) in active.iter().enumerate() {
+                if frozen[i] {
+                    continue;
+                }
+                for &l in &msgs_flat[f.msg_idx as usize].route {
+                    let c = link_count[l as usize];
+                    if c > 0 {
+                        let share = link_cap[l as usize] / c as f64;
+                        if share < min_share {
+                            min_share = share;
+                        }
+                    }
+                }
+            }
+            if !min_share.is_finite() {
+                // remaining flows cross no contended links (shouldn't
+                // happen: every flow has ≥1 hop)
+                for (i, f) in active.iter_mut().enumerate() {
+                    if !frozen[i] {
+                        f.rate = cap;
+                        frozen[i] = true;
+                        left -= 1;
+                    }
+                }
+                break;
+            }
+            // freeze every unfrozen flow whose bottleneck share equals min
+            let mut progressed = false;
+            for i in 0..active.len() {
+                if frozen[i] {
+                    continue;
+                }
+                let route = &msgs_flat[active[i].msg_idx as usize].route;
+                let share = route
+                    .iter()
+                    .map(|&l| link_cap[l as usize] / link_count[l as usize].max(1) as f64)
+                    .fold(f64::INFINITY, f64::min);
+                if share <= min_share * (1.0 + 1e-12) {
+                    active[i].rate = min_share;
+                    frozen[i] = true;
+                    left -= 1;
+                    progressed = true;
+                    for &l in route {
+                        link_cap[l as usize] -= min_share;
+                        link_count[l as usize] -= 1;
+                    }
+                }
+            }
+            debug_assert!(progressed, "water-filling stalled");
+            if !progressed {
+                break;
+            }
+        }
+    };
+
+    let mut frozen_buf: Vec<bool> = Vec::new();
+    let mut need_recompute = false;
+
+    loop {
+        // Next discrete event vs. next flow drain.
+        let t_event = heap.peek().map(|e| e.t).unwrap_or(f64::INFINITY);
+        let mut t_drain = f64::INFINITY;
+        for f in &active {
+            if f.rate > 0.0 {
+                let t = now + f.remaining / f.rate;
+                if t < t_drain {
+                    t_drain = t;
+                }
+            }
+        }
+        let t_next = t_event.min(t_drain);
+        if !t_next.is_finite() {
+            break;
+        }
+        // advance fluid state
+        let dt = t_next - now;
+        if dt > 0.0 {
+            for f in active.iter_mut() {
+                f.remaining -= f.rate * dt;
+            }
+        }
+        now = t_next;
+
+        // Collect drained flows at this instant.
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining <= active[i].rate * TIME_EPS + 1e-9 * TIME_EPS
+                || active[i].remaining <= 1e-7
+            {
+                let f = active.swap_remove(i);
+                let m = msgs_flat[f.msg_idx as usize];
+                let arrive = now + m.route.len() as f64 * per_hop;
+                push(&mut heap, arrive, Event::Delivery { node: m.dst, step: m.step as u32 });
+                need_recompute = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        // Process all heap events at this instant.
+        while let Some(top) = heap.peek() {
+            if top.t > now + TIME_EPS.max(now * 1e-12) {
+                break;
+            }
+            let Timed { ev, .. } = heap.pop().unwrap();
+            events += 1;
+            match ev {
+                Event::StepStart { node, step } => {
+                    entered[node as usize] = step as i64;
+                    for &mi in &by_step_src[node as usize * nsteps + step as usize] {
+                        let m = msgs_flat[mi as usize];
+                        active.push(ActiveFlow { msg_idx: mi, remaining: m.bytes, rate: 0.0 });
+                        need_recompute = true;
+                    }
+                    // A step with no expected receives chains immediately.
+                    let k = step as usize;
+                    if expected[node as usize * nsteps + k] == received[node as usize * nsteps + k]
+                        && k + 1 < nsteps
+                    {
+                        push(
+                            &mut heap,
+                            now + params.alpha_s,
+                            Event::StepStart { node, step: step + 1 },
+                        );
+                    }
+                }
+                Event::Delivery { node, step } => {
+                    completion = completion.max(now);
+                    let k = step as usize;
+                    received[node as usize * nsteps + k] += 1;
+                    // barrier: all step-k receives done AND node entered k
+                    if received[node as usize * nsteps + k] == expected[node as usize * nsteps + k]
+                        && entered[node as usize] == k as i64
+                        && k + 1 < nsteps
+                    {
+                        push(
+                            &mut heap,
+                            now + params.alpha_s,
+                            Event::StepStart { node, step: step as u32 + 1 },
+                        );
+                    }
+                }
+            }
+        }
+
+        if need_recompute {
+            recompute(&mut active, &mut link_count, &mut link_cap, &mut frozen_buf);
+            need_recompute = false;
+        }
+    }
+
+    SimResult { completion_s: completion, messages: msgs_flat.len(), events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agpattern::latency_allreduce;
+    use crate::algo::rings::{trivance, Order};
+
+    fn params() -> NetParams {
+        NetParams::default()
+    }
+
+    #[test]
+    fn single_message_time() {
+        // one neighbor message: α + bytes/rate + per_hop
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("one", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            crate::schedule::Send {
+                to: 1,
+                pieces: vec![crate::schedule::Piece {
+                    blocks: crate::blockset::BlockSet::full(n),
+                    contrib: crate::blockset::BlockSet::singleton(0, n),
+                    kind: crate::schedule::Kind::Reduce,
+                }],
+                route: crate::schedule::RouteHint::Minimal,
+            },
+        );
+        let p = params();
+        let m = 1u64 << 20;
+        let r = simulate_flow(&s, &t, m, &p);
+        let expect = p.alpha_s + m as f64 * 8.0 / p.link_bw_bps + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < 1e-12,
+            "got {}, expect {expect}",
+            r.completion_s
+        );
+    }
+
+    #[test]
+    fn trivance_ring9_latency_time() {
+        // 2 steps; step k: full vector at distance 3^k with uniform
+        // congestion 3^k (each link carries 3^k flows in each direction) →
+        // serialization 3^k·m·β each step (shared fairly), plus pipelining.
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = params();
+        let m = 1u64 << 20;
+        let r = simulate_flow(&s, &t, m, &p);
+        let beta = 8.0 / p.link_bw_bps;
+        let expect = 2.0 * p.alpha_s
+            + (1.0 + 3.0) * m as f64 * beta
+            + (1.0 + 3.0) * p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "got {}, expect {expect}",
+            r.completion_s
+        );
+    }
+
+    #[test]
+    fn alpha_dominates_small_messages() {
+        let t = Torus::ring(27);
+        let s = latency_allreduce(&trivance(27, Order::Inc));
+        let p = params();
+        let r = simulate_flow(&s, &t, 32, &p);
+        // 3 steps × 1.5 µs = 4.5 µs dominates; plus (1+3+9) hops × 200 ns
+        // = 2.6 µs of propagation and negligible serialization.
+        assert!(r.completion_s > 4.5e-6 && r.completion_s < 7.5e-6, "{}", r.completion_s);
+    }
+
+    #[test]
+    fn more_bandwidth_is_faster() {
+        let t = Torus::ring(27);
+        let s = latency_allreduce(&trivance(27, Order::Inc));
+        let m = 8 << 20;
+        let slow = simulate_flow(&s, &t, m, &NetParams::default().with_bandwidth_gbps(200.0));
+        let fast = simulate_flow(&s, &t, m, &NetParams::default().with_bandwidth_gbps(3200.0));
+        assert!(fast.completion_s < slow.completion_s / 8.0);
+    }
+}

@@ -1,0 +1,125 @@
+//! Discrete-event network simulator — the substitute for the paper's SST
+//! testbed (§6).
+//!
+//! Both modes share the same execution semantics:
+//!
+//! * Every node proceeds through the schedule's steps sequentially; step
+//!   `k+1`'s sends are injected `α` after **all** of the node's step-`k`
+//!   receives have fully arrived (the joint-reduction dependency of §4.3)
+//!   and not before the node itself entered step `k`.
+//! * Messages are routed per the schedule's route hints on the torus
+//!   (minimal adaptive by default) and pay `hops · (link latency +
+//!   processing latency)` propagation plus serialization on shared links.
+//! * The completion time is the last delivery.
+//!
+//! [`flow`] models each message as a fluid flow with **max-min fair**
+//! bandwidth sharing, recomputed whenever the active flow set changes —
+//! accurate for the steady, step-synchronized traffic these collectives
+//! generate and fast enough for 4096-node × 128 MiB sweeps. [`packet`]
+//! models MTU-sized packets with store-and-forward FIFO queueing per link —
+//! the ground-truth mode used at small scale to cross-validate the flow
+//! model (see `rust/tests/sim_crosscheck.rs`).
+
+pub mod flow;
+pub mod packet;
+
+use crate::cost::NetParams;
+use crate::schedule::{RouteHint, Schedule};
+use crate::topology::Torus;
+
+/// Simulation fidelity mode.
+#[derive(Clone, Copy, Debug)]
+pub enum SimMode {
+    /// Fluid flows with max-min fair sharing.
+    Flow,
+    /// Packet-level store-and-forward with the given MTU (bytes).
+    Packet { mtu: u32 },
+}
+
+/// Result of one simulated collective.
+#[derive(Clone, Debug)]
+pub struct SimResult {
+    /// AllReduce completion time (seconds).
+    pub completion_s: f64,
+    /// Number of network messages simulated.
+    pub messages: usize,
+    /// Number of simulator events processed.
+    pub events: u64,
+}
+
+/// A materialized message ready for simulation.
+#[derive(Clone, Debug)]
+pub(crate) struct SimMsg {
+    pub src: u32,
+    pub dst: u32,
+    pub step: usize,
+    pub bytes: f64,
+    /// Directed link indices along the route.
+    pub route: Vec<u32>,
+}
+
+/// Flatten a schedule into per-step message lists with resolved routes.
+pub(crate) fn materialize(s: &Schedule, t: &Torus, m_bytes: u64) -> Vec<Vec<SimMsg>> {
+    assert_eq!(s.n, t.n(), "schedule/topology mismatch");
+    let mut out: Vec<Vec<SimMsg>> = Vec::with_capacity(s.steps.len());
+    for (k, step) in s.steps.iter().enumerate() {
+        let mut msgs = Vec::new();
+        for (src, sends) in step.sends.iter().enumerate() {
+            for snd in sends {
+                let bytes = snd.rel_bytes(s.n_blocks) * m_bytes as f64;
+                if bytes <= 0.0 {
+                    continue;
+                }
+                let route = match snd.route {
+                    RouteHint::Minimal => t.route(src as u32, snd.to),
+                    RouteHint::Directed { dim, dir } => {
+                        t.route_directed(src as u32, snd.to, dim as usize, dir)
+                    }
+                };
+                let route: Vec<u32> = route.into_iter().map(|l| t.link_index(l) as u32).collect();
+                msgs.push(SimMsg { src: src as u32, dst: snd.to, step: k, bytes, route });
+            }
+        }
+        out.push(msgs);
+    }
+    out
+}
+
+/// Simulate the collective: `m_bytes` AllReduce of `schedule` on `torus`.
+pub fn simulate(
+    schedule: &Schedule,
+    torus: &Torus,
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+) -> SimResult {
+    match mode {
+        SimMode::Flow => flow::simulate_flow(schedule, torus, m_bytes, params),
+        SimMode::Packet { mtu } => packet::simulate_packet(schedule, torus, m_bytes, params, mtu),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agpattern::latency_allreduce;
+    use crate::algo::rings::{trivance, Order};
+
+    #[test]
+    fn materialize_routes_and_bytes() {
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let steps = materialize(&s, &t, 900);
+        assert_eq!(steps.len(), 2);
+        // step 0: distance 1, full vector
+        for m in &steps[0] {
+            assert_eq!(m.route.len(), 1);
+            assert!((m.bytes - 900.0).abs() < 1e-9);
+        }
+        // step 1: distance 3
+        for m in &steps[1] {
+            assert_eq!(m.route.len(), 3);
+        }
+        assert_eq!(steps[0].len(), 18);
+    }
+}

@@ -1,0 +1,247 @@
+//! Packet-level discrete-event simulation: MTU-sized packets,
+//! store-and-forward, FIFO per directed link.
+//!
+//! The ground-truth mode: no fluid approximation, every packet queues
+//! individually. Quadratic-ish in message size, so it is used at small
+//! scale to cross-validate [`super::flow`] (the sweep workhorse).
+
+use super::{materialize, SimResult};
+use crate::cost::NetParams;
+use crate::schedule::Schedule;
+use crate::topology::Torus;
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+#[derive(Clone, Copy, Debug)]
+enum Event {
+    /// Node enters step `k`.
+    StepStart { node: u32, step: u32 },
+    /// A packet of message `msg` is ready to enter hop `hop` of its route
+    /// (`hop == route.len()` means it reached the destination).
+    Packet { msg: u32, hop: u16, bytes: f32 },
+}
+
+#[derive(Clone, Copy)]
+struct Timed {
+    t: f64,
+    seq: u64,
+    ev: Event,
+}
+
+impl PartialEq for Timed {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl Eq for Timed {}
+impl Ord for Timed {
+    fn cmp(&self, other: &Self) -> Ordering {
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl PartialOrd for Timed {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+pub fn simulate_packet(
+    schedule: &Schedule,
+    torus: &Torus,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+) -> SimResult {
+    assert!(mtu > 0);
+    let steps = materialize(schedule, torus, m_bytes);
+    let n = schedule.n as usize;
+    let nsteps = steps.len();
+    if nsteps == 0 {
+        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+    }
+    let cap = params.link_bw_bps / 8.0; // bytes/s
+    let per_hop = params.per_hop_s();
+
+    let msgs: Vec<&super::SimMsg> = steps.iter().flatten().collect();
+    let mut by_step_src: Vec<Vec<u32>> = vec![Vec::new(); n * nsteps];
+    let mut expected = vec![0u32; n * nsteps];
+    for (i, m) in msgs.iter().enumerate() {
+        by_step_src[m.src as usize * nsteps + m.step].push(i as u32);
+        expected[m.dst as usize * nsteps + m.step] += 1;
+    }
+    let mut received = vec![0u32; n * nsteps];
+    let mut entered = vec![-1i64; n];
+    // remaining packets per message
+    let mut pkts_left: Vec<u32> = msgs
+        .iter()
+        .map(|m| ((m.bytes / mtu as f64).ceil() as u32).max(1))
+        .collect();
+
+    let mut free_at = vec![0f64; torus.num_links()];
+    let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
+    let mut seq = 0u64;
+    macro_rules! push {
+        ($t:expr, $ev:expr) => {{
+            seq += 1;
+            heap.push(Timed { t: $t, seq, ev: $ev });
+        }};
+    }
+    for r in 0..n {
+        push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+    }
+
+    let mut completion = 0.0f64;
+    let mut events = 0u64;
+
+    while let Some(Timed { t: now, ev, .. }) = heap.pop() {
+        events += 1;
+        match ev {
+            Event::StepStart { node, step } => {
+                entered[node as usize] = step as i64;
+                for &mi in &by_step_src[node as usize * nsteps + step as usize] {
+                    // split the message into packets, all ready now; FIFO
+                    // on the first link serializes them.
+                    let m = msgs[mi as usize];
+                    let full = pkts_left[mi as usize];
+                    let mut left = m.bytes;
+                    for _ in 0..full {
+                        let sz = left.min(mtu as f64);
+                        left -= sz.min(left);
+                        push!(now, Event::Packet { msg: mi, hop: 0, bytes: sz as f32 });
+                    }
+                }
+                let k = step as usize;
+                if expected[node as usize * nsteps + k] == received[node as usize * nsteps + k]
+                    && k + 1 < nsteps
+                {
+                    push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
+                }
+            }
+            Event::Packet { msg, hop, bytes } => {
+                let m = msgs[msg as usize];
+                if hop as usize == m.route.len() {
+                    // packet arrived at destination
+                    pkts_left[msg as usize] -= 1;
+                    if pkts_left[msg as usize] == 0 {
+                        completion = completion.max(now);
+                        let k = m.step;
+                        received[m.dst as usize * nsteps + k] += 1;
+                        if received[m.dst as usize * nsteps + k]
+                            == expected[m.dst as usize * nsteps + k]
+                            && entered[m.dst as usize] == k as i64
+                            && k + 1 < nsteps
+                        {
+                            push!(
+                                now + params.alpha_s,
+                                Event::StepStart { node: m.dst, step: k as u32 + 1 }
+                            );
+                        }
+                    }
+                } else {
+                    // serialize on the next link (FIFO), then propagate
+                    let l = m.route[hop as usize] as usize;
+                    let start = now.max(free_at[l]);
+                    let end = start + bytes as f64 / cap;
+                    free_at[l] = end;
+                    push!(end + per_hop, Event::Packet { msg, hop: hop + 1, bytes });
+                }
+            }
+        }
+    }
+
+    SimResult { completion_s: completion, messages: msgs.len(), events }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agpattern::latency_allreduce;
+    use crate::algo::rings::{trivance, Order};
+    use crate::sim::flow::simulate_flow;
+
+    #[test]
+    fn single_hop_message_matches_closed_form() {
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("one", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            crate::schedule::Send {
+                to: 1,
+                pieces: vec![crate::schedule::Piece {
+                    blocks: crate::blockset::BlockSet::full(n),
+                    contrib: crate::blockset::BlockSet::singleton(0, n),
+                    kind: crate::schedule::Kind::Reduce,
+                }],
+                route: crate::schedule::RouteHint::Minimal,
+            },
+        );
+        let p = NetParams::default();
+        let m = 64 * 1024u64;
+        let r = simulate_packet(&s, &t, m, &p, 4096);
+        // single hop, FIFO serialization = whole message back-to-back
+        let expect = p.alpha_s + m as f64 * 8.0 / p.link_bw_bps + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < 1e-12,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+    }
+
+    #[test]
+    fn packet_pipelining_beats_store_and_forward_of_whole_message() {
+        // over 3 hops, packets pipeline: completion ≈ ser(msg) + 2·ser(pkt)
+        // + 3·per_hop, far less than 3×ser(msg).
+        let n = 9u32;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("hop3", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            crate::schedule::Send {
+                to: 3,
+                pieces: vec![crate::schedule::Piece {
+                    blocks: crate::blockset::BlockSet::full(n),
+                    contrib: crate::blockset::BlockSet::singleton(0, n),
+                    kind: crate::schedule::Kind::Reduce,
+                }],
+                route: crate::schedule::RouteHint::Minimal,
+            },
+        );
+        let p = NetParams::default();
+        let m = 256 * 1024u64;
+        let r = simulate_packet(&s, &t, m, &p, 4096);
+        let ser_msg = m as f64 * 8.0 / p.link_bw_bps;
+        let ser_pkt = 4096.0 * 8.0 / p.link_bw_bps;
+        let expect = p.alpha_s + ser_msg + 2.0 * ser_pkt + 3.0 * p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        assert!(r.completion_s < p.alpha_s + 3.0 * ser_msg);
+    }
+
+    #[test]
+    fn flow_and_packet_agree_on_trivance_ring9() {
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = NetParams::default();
+        for m in [4096u64, 64 * 1024, 1 << 20] {
+            let fr = simulate_flow(&s, &t, m, &p);
+            let pr = simulate_packet(&s, &t, m, &p, 4096);
+            let rel = (fr.completion_s - pr.completion_s).abs() / pr.completion_s;
+            assert!(
+                rel < 0.1,
+                "m={m}: flow {} vs packet {} ({rel:.3})",
+                fr.completion_s,
+                pr.completion_s
+            );
+        }
+    }
+}

@@ -1,0 +1,335 @@
+//! Bidirectional ring / D-dimensional torus topology and minimal routing.
+//!
+//! Model (paper §2): `n = ∏ dims` nodes; every node has two ports per
+//! dimension (one per direction), i.e. `2D` ports total, and can inject one
+//! message per port concurrently. Links are directed (a physical
+//! bidirectional link is two directed links). Packets are forwarded with
+//! minimal routing; on exact-half-ring ties the direction is split
+//! deterministically by source parity (the "minimal adaptive" assumption).
+
+use crate::blockset::BlockSet;
+
+/// A D-dimensional torus (D = 1 is the bidirectional ring).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Torus {
+    dims: Vec<u32>,
+    /// Strides for coordinate <-> rank conversion (row-major, dim 0 fastest).
+    strides: Vec<u64>,
+    n: u32,
+}
+
+/// A directed link: from `node`, along `dim`, in direction `dir`.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub struct Link {
+    pub node: u32,
+    pub dim: u8,
+    /// +1 = increasing coordinate, -1 = decreasing.
+    pub dir: i8,
+}
+
+impl Torus {
+    pub fn ring(n: u32) -> Self {
+        Self::new(&[n])
+    }
+
+    pub fn new(dims: &[u32]) -> Self {
+        assert!(!dims.is_empty() && dims.iter().all(|&d| d >= 2), "torus dims must be >= 2");
+        let mut strides = Vec::with_capacity(dims.len());
+        let mut acc = 1u64;
+        for &d in dims {
+            strides.push(acc);
+            acc *= d as u64;
+        }
+        assert!(acc <= u32::MAX as u64, "torus too large");
+        Torus { dims: dims.to_vec(), strides, n: acc as u32 }
+    }
+
+    pub fn n(&self) -> u32 {
+        self.n
+    }
+
+    pub fn ndims(&self) -> usize {
+        self.dims.len()
+    }
+
+    pub fn dims(&self) -> &[u32] {
+        &self.dims
+    }
+
+    /// Total number of directed links.
+    pub fn num_links(&self) -> usize {
+        self.n as usize * self.dims.len() * 2
+    }
+
+    /// Dense index of a directed link, for per-link load accounting.
+    pub fn link_index(&self, l: Link) -> usize {
+        let d = l.dim as usize;
+        let dirbit = usize::from(l.dir > 0);
+        (l.node as usize * self.dims.len() + d) * 2 + dirbit
+    }
+
+    pub fn coords(&self, rank: u32) -> Vec<u32> {
+        let mut c = Vec::with_capacity(self.dims.len());
+        let mut r = rank as u64;
+        for &d in &self.dims {
+            c.push((r % d as u64) as u32);
+            r /= d as u64;
+        }
+        c
+    }
+
+    pub fn rank(&self, coords: &[u32]) -> u32 {
+        assert_eq!(coords.len(), self.dims.len());
+        let mut r = 0u64;
+        for (i, &c) in coords.iter().enumerate() {
+            debug_assert!(c < self.dims[i]);
+            r += c as u64 * self.strides[i];
+        }
+        r as u32
+    }
+
+    /// The coordinate of `rank` in `dim`.
+    pub fn coord(&self, rank: u32, dim: usize) -> u32 {
+        ((rank as u64 / self.strides[dim]) % self.dims[dim] as u64) as u32
+    }
+
+    /// Neighbor of `rank` at cyclic `offset` along `dim`.
+    pub fn neighbor(&self, rank: u32, dim: usize, offset: i64) -> u32 {
+        let a = self.dims[dim] as i64;
+        let c = self.coord(rank, dim) as i64;
+        let nc = (c + offset).rem_euclid(a) as u64;
+        let base = rank as u64 - (c as u64) * self.strides[dim];
+        (base + nc * self.strides[dim]) as u32
+    }
+
+    /// Cyclic distance between two coordinates along `dim`.
+    pub fn cyc_distance(&self, a: u32, b: u32, dim: usize) -> u32 {
+        let m = self.dims[dim];
+        let d = (b + m - a) % m;
+        d.min(m - d)
+    }
+
+    /// Hop distance between two ranks (sum of per-dim minimal distances).
+    pub fn distance(&self, a: u32, b: u32) -> u32 {
+        (0..self.dims.len())
+            .map(|d| self.cyc_distance(self.coord(a, d), self.coord(b, d), d))
+            .sum()
+    }
+
+    /// Minimal route from `src` to `dst` as a sequence of directed links,
+    /// dimension-ordered. On an exact-half-ring tie in a dimension the
+    /// direction is chosen by the parity of the source coordinate, which
+    /// splits tied traffic evenly across both directions (minimal adaptive
+    /// routing under uniform symmetric load).
+    pub fn route(&self, src: u32, dst: u32) -> Vec<Link> {
+        let mut links = Vec::new();
+        let mut cur = src;
+        for d in 0..self.dims.len() {
+            let a = self.dims[d];
+            let cs = self.coord(cur, d);
+            let cd = self.coord(dst, d);
+            if cs == cd {
+                continue;
+            }
+            let fwd = (cd + a - cs) % a;
+            let bwd = a - fwd;
+            let dir: i8 = if fwd < bwd {
+                1
+            } else if bwd < fwd {
+                -1
+            } else if cs % 2 == 0 {
+                1
+            } else {
+                -1
+            };
+            let hops = fwd.min(bwd);
+            for _ in 0..hops {
+                links.push(Link { node: cur, dim: d as u8, dir });
+                cur = self.neighbor(cur, d, dir as i64);
+            }
+        }
+        debug_assert_eq!(cur, dst);
+        links
+    }
+
+    /// Route that is forced to travel in `dir` along `dim` (used by
+    /// unidirectional algorithms such as unmodified Bruck, which route all
+    /// traffic one way regardless of distance).
+    pub fn route_directed(&self, src: u32, dst: u32, dim: usize, dir: i8) -> Vec<Link> {
+        let a = self.dims[dim];
+        let cs = self.coord(src, dim);
+        let cd = self.coord(dst, dim);
+        assert_eq!(
+            self.rank(&{
+                let mut c = self.coords(src);
+                c[dim] = cd;
+                c
+            }),
+            dst,
+            "route_directed requires src/dst to differ only in `dim`"
+        );
+        let hops = if dir > 0 { (cd + a - cs) % a } else { (cs + a - cd) % a };
+        let mut links = Vec::with_capacity(hops as usize);
+        let mut cur = src;
+        for _ in 0..hops {
+            links.push(Link { node: cur, dim: dim as u8, dir });
+            cur = self.neighbor(cur, dim, dir as i64);
+        }
+        links
+    }
+
+    /// All ranks forming the 1-D ring through `rank` along `dim`, in
+    /// coordinate order starting at coordinate 0.
+    pub fn ring_through(&self, rank: u32, dim: usize) -> Vec<u32> {
+        let c = self.coord(rank, dim);
+        let base = rank as u64 - c as u64 * self.strides[dim];
+        (0..self.dims[dim])
+            .map(|i| (base + i as u64 * self.strides[dim]) as u32)
+            .collect()
+    }
+
+    /// The set of ranks whose coordinate in every dim `d` lies in
+    /// `ranges[d]` — used to build product contributor sets for
+    /// multidimensional schedules. Dim 0 is the fastest-varying (stride-1)
+    /// coordinate, so the result is assembled as one linear interval per
+    /// combination of the higher-dimension coordinates.
+    pub fn product_set(&self, ranges: &[BlockSet]) -> BlockSet {
+        assert_eq!(ranges.len(), self.dims.len());
+        if ranges.iter().any(|r| r.is_empty()) {
+            return BlockSet::empty();
+        }
+        // Linear intervals of dim-0 coordinates (stride 1 in rank space).
+        let dim0: Vec<(u32, u32)> = ranges[0].intervals().collect();
+        // Enumerate higher-dim coordinate combinations as base offsets.
+        let mut bases: Vec<u64> = vec![0];
+        for d in 1..ranges.len() {
+            let stride = self.strides[d];
+            let mut next = Vec::with_capacity(bases.len() * ranges[d].len() as usize);
+            for c in ranges[d].iter() {
+                let off = c as u64 * stride;
+                next.extend(bases.iter().map(|&b| b + off));
+            }
+            bases = next;
+        }
+        let mut ivs = Vec::with_capacity(bases.len() * dim0.len());
+        for &b in &bases {
+            for &(s, e) in &dim0 {
+                ivs.push((b as u32 + s, b as u32 + e));
+            }
+        }
+        BlockSet::from_intervals(ivs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_basics() {
+        let t = Torus::ring(9);
+        assert_eq!(t.n(), 9);
+        assert_eq!(t.neighbor(0, 0, -1), 8);
+        assert_eq!(t.neighbor(8, 0, 1), 0);
+        assert_eq!(t.distance(0, 5), 4);
+        assert_eq!(t.distance(0, 4), 4);
+    }
+
+    #[test]
+    fn torus_coords_roundtrip() {
+        let t = Torus::new(&[4, 3, 5]);
+        assert_eq!(t.n(), 60);
+        for r in 0..60 {
+            assert_eq!(t.rank(&t.coords(r)), r);
+        }
+    }
+
+    #[test]
+    fn neighbor_wraps_in_dim() {
+        let t = Torus::new(&[4, 3]);
+        let r = t.rank(&[3, 2]);
+        assert_eq!(t.coords(t.neighbor(r, 0, 1)), vec![0, 2]);
+        assert_eq!(t.coords(t.neighbor(r, 1, 1)), vec![3, 0]);
+        assert_eq!(t.coords(t.neighbor(r, 0, -2)), vec![1, 2]);
+    }
+
+    #[test]
+    fn route_is_minimal_and_connects() {
+        let t = Torus::new(&[5, 5]);
+        for src in 0..25 {
+            for dst in 0..25 {
+                let route = t.route(src, dst);
+                assert_eq!(route.len() as u32, t.distance(src, dst));
+                // walk the route
+                let mut cur = src;
+                for l in &route {
+                    assert_eq!(l.node, cur);
+                    cur = t.neighbor(cur, l.dim as usize, l.dir as i64);
+                }
+                assert_eq!(cur, dst);
+            }
+        }
+    }
+
+    #[test]
+    fn route_tie_splits_by_parity() {
+        let t = Torus::ring(8);
+        // distance exactly 4: even sources go +, odd sources go -
+        let r0 = t.route(0, 4);
+        let r1 = t.route(1, 5);
+        assert_eq!(r0[0].dir, 1);
+        assert_eq!(r1[0].dir, -1);
+    }
+
+    #[test]
+    fn route_directed_wraps() {
+        let t = Torus::ring(9);
+        let r = t.route_directed(7, 2, 0, 1);
+        assert_eq!(r.len(), 4); // 7->8->0->1->2
+        let back = t.route_directed(2, 7, 0, -1);
+        assert_eq!(back.len(), 4);
+    }
+
+    #[test]
+    fn link_index_dense_and_unique() {
+        let t = Torus::new(&[3, 3]);
+        let mut seen = vec![false; t.num_links()];
+        for node in 0..t.n() {
+            for dim in 0..2u8 {
+                for dir in [-1i8, 1] {
+                    let idx = t.link_index(Link { node, dim, dir });
+                    assert!(idx < t.num_links());
+                    assert!(!seen[idx]);
+                    seen[idx] = true;
+                }
+            }
+        }
+        assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn ring_through() {
+        let t = Torus::new(&[3, 4]);
+        let r = t.rank(&[1, 2]);
+        let ring0 = t.ring_through(r, 0);
+        assert_eq!(ring0.len(), 3);
+        assert_eq!(t.coords(ring0[0]), vec![0, 2]);
+        assert_eq!(t.coords(ring0[2]), vec![2, 2]);
+        let ring1 = t.ring_through(r, 1);
+        assert_eq!(ring1.len(), 4);
+        assert!(ring1.iter().all(|&x| t.coord(x, 0) == 1));
+    }
+
+    #[test]
+    fn product_set_matches_bruteforce() {
+        let t = Torus::new(&[3, 3]);
+        let ranges = vec![
+            crate::blockset::BlockSet::cyc_range(2, 2, 3), // coords {2,0} in dim0
+            crate::blockset::BlockSet::cyc_range(0, 1, 3), // coord {0} in dim1
+        ];
+        let s = t.product_set(&ranges);
+        assert_eq!(s.len(), 2);
+        assert!(s.contains(t.rank(&[2, 0])));
+        assert!(s.contains(t.rank(&[0, 0])));
+    }
+}

@@ -1,0 +1,96 @@
+//! Minimal benchmark harness (criterion is not in the vendored registry).
+//!
+//! Each `rust/benches/*.rs` target uses `harness = false` and drives this:
+//! warmup, repeated timed runs, median/mean/min reporting, and an output
+//! format stable enough to diff across optimization iterations
+//! (EXPERIMENTS.md §Perf).
+
+use std::time::Instant;
+
+/// Result of one benchmark case.
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: u32,
+    pub mean_s: f64,
+    pub median_s: f64,
+    pub min_s: f64,
+    pub max_s: f64,
+}
+
+impl BenchStats {
+    pub fn report(&self) -> String {
+        format!(
+            "{:<48} iters={:>3}  mean={:>12}  median={:>12}  min={:>12}",
+            self.name,
+            self.iters,
+            super::fmt::secs(self.mean_s),
+            super::fmt::secs(self.median_s),
+            super::fmt::secs(self.min_s),
+        )
+    }
+}
+
+/// Benchmark runner: fixed warmup count then `iters` timed iterations.
+pub struct Bencher {
+    warmup: u32,
+    iters: u32,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher { warmup: 2, iters: 7 }
+    }
+}
+
+impl Bencher {
+    pub fn new(warmup: u32, iters: u32) -> Self {
+        assert!(iters >= 1);
+        Bencher { warmup, iters }
+    }
+
+    /// Runs `f`, timing each call; `f` should return something observable to
+    /// keep the optimizer honest (the value is black-boxed).
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> BenchStats {
+        for _ in 0..self.warmup {
+            black_box(f());
+        }
+        let mut times = Vec::with_capacity(self.iters as usize);
+        for _ in 0..self.iters {
+            let t0 = Instant::now();
+            black_box(f());
+            times.push(t0.elapsed().as_secs_f64());
+        }
+        times.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let mean = times.iter().sum::<f64>() / times.len() as f64;
+        let stats = BenchStats {
+            name: name.to_string(),
+            iters: self.iters,
+            mean_s: mean,
+            median_s: times[times.len() / 2],
+            min_s: times[0],
+            max_s: *times.last().unwrap(),
+        };
+        println!("{}", stats.report());
+        stats
+    }
+}
+
+/// Opaque identity to prevent the optimizer from deleting benchmarked work.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66.
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_runs_and_orders() {
+        let b = Bencher::new(0, 5);
+        let s = b.run("noop", || 1 + 1);
+        assert_eq!(s.iters, 5);
+        assert!(s.min_s <= s.median_s && s.median_s <= s.max_s);
+    }
+}

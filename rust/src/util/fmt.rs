@@ -1,0 +1,152 @@
+//! Byte-size parsing/formatting and markdown table rendering for the
+//! harness output.
+
+/// Format a byte count the way the paper labels its x-axes (32 B, 8 KiB,
+/// 128 MiB, ...).
+pub fn bytes(b: u64) -> String {
+    const UNITS: [(&str, u64); 4] = [
+        ("GiB", 1 << 30),
+        ("MiB", 1 << 20),
+        ("KiB", 1 << 10),
+        ("B", 1),
+    ];
+    for (name, unit) in UNITS {
+        if b >= unit && b % unit == 0 {
+            return format!("{} {}", b / unit, name);
+        }
+    }
+    for (name, unit) in UNITS {
+        if b >= unit {
+            return format!("{:.1} {}", b as f64 / unit as f64, name);
+        }
+    }
+    format!("{b} B")
+}
+
+/// Parse "8KiB", "8 KiB", "32B", "1.5MiB", plain integers.
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let split = s.find(|c: char| !c.is_ascii_digit() && c != '.')?;
+    let (num, unit) = s.split_at(split);
+    let num: f64 = num.parse().ok()?;
+    let mult = match unit.trim().to_ascii_lowercase().as_str() {
+        "b" => 1u64,
+        "k" | "kb" | "kib" => 1 << 10,
+        "m" | "mb" | "mib" => 1 << 20,
+        "g" | "gb" | "gib" => 1 << 30,
+        _ => return None,
+    };
+    Some((num * mult as f64).round() as u64)
+}
+
+/// Parse a plain integer or a byte string.
+pub fn parse_size(s: &str) -> Option<u64> {
+    s.trim().parse::<u64>().ok().or_else(|| parse_bytes(s))
+}
+
+/// Format a duration in seconds the way the harness reports completion
+/// times (ns/µs/ms/s with 3 significant digits).
+pub fn secs(t: f64) -> String {
+    if t < 1e-6 {
+        format!("{:.1} ns", t * 1e9)
+    } else if t < 1e-3 {
+        format!("{:.2} µs", t * 1e6)
+    } else if t < 1.0 {
+        format!("{:.3} ms", t * 1e3)
+    } else {
+        format!("{t:.3} s")
+    }
+}
+
+/// Minimal markdown table renderer: rows of equal length, first row is the
+/// header.
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new<S: Into<String>>(header: Vec<S>) -> Self {
+        Table {
+            header: header.into_iter().map(Into::into).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row<S: Into<String>>(&mut self, row: Vec<S>) {
+        let row: Vec<String> = row.into_iter().map(Into::into).collect();
+        assert_eq!(row.len(), self.header.len(), "table row arity mismatch");
+        self.rows.push(row);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.header.len();
+        let mut widths = vec![0usize; ncol];
+        for row in std::iter::once(&self.header).chain(self.rows.iter()) {
+            for (i, cell) in row.iter().enumerate() {
+                widths[i] = widths[i].max(cell.chars().count());
+            }
+        }
+        let mut out = String::new();
+        let fmt_row = |row: &[String]| -> String {
+            let cells: Vec<String> = row
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:w$}", c, w = widths[i]))
+                .collect();
+            format!("| {} |\n", cells.join(" | "))
+        };
+        out.push_str(&fmt_row(&self.header));
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        out.push_str(&format!("| {} |\n", sep.join(" | ")));
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// CSV rendering for machine consumption.
+    pub fn render_csv(&self) -> String {
+        let mut out = String::new();
+        for row in std::iter::once(&self.header).chain(self.rows.iter()) {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bytes_roundtrip() {
+        assert_eq!(bytes(32), "32 B");
+        assert_eq!(bytes(8 << 10), "8 KiB");
+        assert_eq!(bytes(128 << 20), "128 MiB");
+        assert_eq!(parse_bytes("8KiB"), Some(8 << 10));
+        assert_eq!(parse_bytes("32 B"), Some(32));
+        assert_eq!(parse_bytes("128MiB"), Some(128 << 20));
+        assert_eq!(parse_bytes("1.5 KiB"), Some(1536));
+        assert_eq!(parse_size("4096"), Some(4096));
+    }
+
+    #[test]
+    fn secs_scales() {
+        assert!(secs(1.5e-6).contains("µs"));
+        assert!(secs(2e-9).contains("ns"));
+        assert!(secs(0.5).contains("ms"));
+        assert!(secs(2.0).contains("s"));
+    }
+
+    #[test]
+    fn table_renders() {
+        let mut t = Table::new(vec!["a", "b"]);
+        t.row(vec!["1", "22"]);
+        let s = t.render();
+        assert!(s.contains("| a | b  |"));
+        assert!(s.contains("| 1 | 22 |"));
+        assert_eq!(t.render_csv(), "a,b\n1,22\n");
+    }
+}

@@ -1,0 +1,72 @@
+//! Small self-contained utilities.
+//!
+//! The offline vendored registry ships neither `rand`, `criterion`, nor
+//! `proptest`, so this module provides the minimal equivalents used across
+//! the crate: a SplitMix64 PRNG, a tiny benchmark harness, a randomized
+//! property-test driver, and table/byte formatting helpers.
+
+pub mod rng;
+pub mod bench;
+pub mod fmt;
+pub mod prop;
+
+pub use rng::SplitMix64;
+
+/// `⌈log_base(n)⌉` for integers (`n >= 1`, `base >= 2`).
+pub fn ceil_log(base: u64, n: u64) -> u32 {
+    assert!(base >= 2 && n >= 1);
+    let mut s = 0;
+    let mut v = 1u64;
+    while v < n {
+        v = v.saturating_mul(base);
+        s += 1;
+    }
+    s
+}
+
+/// `⌊log_base(n)⌋` for integers (`n >= 1`, `base >= 2`).
+pub fn floor_log(base: u64, n: u64) -> u32 {
+    assert!(base >= 2 && n >= 1);
+    let mut s = 0;
+    let mut v = base;
+    while v <= n {
+        v = v.saturating_mul(base);
+        s += 1;
+    }
+    s
+}
+
+/// Is `n` an exact power of `base`?
+pub fn is_power_of(base: u64, n: u64) -> bool {
+    n >= 1 && base.pow(floor_log(base, n)) == n
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn logs() {
+        assert_eq!(ceil_log(3, 1), 0);
+        assert_eq!(ceil_log(3, 3), 1);
+        assert_eq!(ceil_log(3, 4), 2);
+        assert_eq!(ceil_log(3, 9), 2);
+        assert_eq!(ceil_log(3, 27), 3);
+        assert_eq!(ceil_log(3, 28), 4);
+        assert_eq!(floor_log(3, 1), 0);
+        assert_eq!(floor_log(3, 2), 0);
+        assert_eq!(floor_log(3, 3), 1);
+        assert_eq!(floor_log(3, 26), 2);
+        assert_eq!(floor_log(3, 27), 3);
+        assert_eq!(floor_log(2, 1024), 10);
+    }
+
+    #[test]
+    fn powers() {
+        assert!(is_power_of(3, 1));
+        assert!(is_power_of(3, 27));
+        assert!(!is_power_of(3, 26));
+        assert!(is_power_of(2, 64));
+        assert!(!is_power_of(2, 63));
+    }
+}

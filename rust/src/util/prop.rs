@@ -1,0 +1,71 @@
+//! Tiny randomized property-test driver (proptest is not vendored).
+//!
+//! `check(seed, cases, gen, prop)` draws `cases` inputs from `gen` and
+//! asserts `prop` on each; failures report the failing case and the seed so
+//! the exact input reproduces deterministically. No shrinking — generators
+//! here draw from small structured spaces (node counts, message sizes) where
+//! the raw failing case is already readable.
+
+use super::rng::SplitMix64;
+use std::fmt::Debug;
+
+/// Run a randomized property: draws `cases` values and asserts the property.
+pub fn check<T: Debug>(
+    seed: u64,
+    cases: u32,
+    mut gen: impl FnMut(&mut SplitMix64) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let mut rng = SplitMix64::new(seed);
+    for i in 0..cases {
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!(
+                "property failed on case {i}/{cases} (seed {seed}):\n  input: {input:?}\n  {msg}"
+            );
+        }
+    }
+}
+
+/// Assert helper returning `Result` for use inside properties.
+#[macro_export]
+macro_rules! prop_assert {
+    ($cond:expr, $($fmt:tt)+) => {
+        if !$cond {
+            return Err(format!($($fmt)+));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_passes() {
+        check(
+            1,
+            50,
+            |r| r.range(1, 100),
+            |&v| {
+                if v >= 1 && v <= 100 {
+                    Ok(())
+                } else {
+                    Err(format!("out of range: {v}"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn check_fails_loudly() {
+        check(2, 50, |r| r.range(0, 10), |&v| {
+            if v < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+}

@@ -1,0 +1,251 @@
+//! Cross-module integration: registry → validator → analysis → simulator →
+//! numeric executor, over a matrix of topologies, plus randomized property
+//! tests over the invariants the paper proves.
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::cost::{eq1_with_hops, measure_optimality, NetParams};
+use trivance::exec::{f32_sum_tolerance, verify_allreduce, NativeReducer};
+use trivance::schedule::analysis::analyze;
+use trivance::sim::{simulate, SimMode};
+use trivance::topology::Torus;
+use trivance::util::{ceil_log, prop, SplitMix64};
+
+/// Every supported (algo, variant) on a topology: validate + verify + sim.
+fn full_stack_check(torus: &Torus, algos: &[Algo]) {
+    for &algo in algos {
+        for variant in Variant::ALL {
+            let Ok(b) = build(algo, variant, torus) else { continue };
+            b.validate()
+                .unwrap_or_else(|e| panic!("{algo:?} {variant:?} on {:?}: {e}", torus.dims()));
+            let err = verify_allreduce(&b.exec, 4, 99, &NativeReducer);
+            assert!(
+                err < f32_sum_tolerance(b.exec.n),
+                "{algo:?} {variant:?} on {:?}: numeric err {err}",
+                torus.dims()
+            );
+            let r = simulate(&b.net, torus, 64 << 10, &NetParams::default(), SimMode::Flow);
+            assert!(r.completion_s > 0.0 && r.completion_s.is_finite());
+        }
+    }
+}
+
+#[test]
+fn full_stack_rings() {
+    for n in [4u32, 8, 9, 27] {
+        full_stack_check(&Torus::ring(n), &Algo::ALL);
+    }
+}
+
+#[test]
+fn full_stack_small_tori() {
+    full_stack_check(&Torus::new(&[4, 4]), &Algo::ALL);
+    full_stack_check(&Torus::new(&[3, 9]), &[Algo::Trivance, Algo::Bruck, Algo::Bucket]);
+    full_stack_check(&Torus::new(&[3, 3, 3]), &[Algo::Trivance, Algo::Bruck, Algo::Bucket]);
+    full_stack_check(&Torus::new(&[2, 2, 2]), &Algo::ALL);
+}
+
+#[test]
+fn property_trivance_valid_on_random_n() {
+    // arbitrary-n §4.4 + cut propagation: any ring size works.
+    prop::check(
+        0xA11CE,
+        25,
+        |rng: &mut SplitMix64| rng.range(2, 160) as u32,
+        |&n| {
+            let t = Torus::ring(n);
+            for variant in Variant::ALL {
+                let b = build(Algo::Trivance, variant, &t).map_err(|e| e)?;
+                b.validate().map_err(|e| format!("n={n}: {e}"))?;
+                if b.net.num_steps() as u32
+                    != match variant {
+                        Variant::Latency => ceil_log(3, n as u64),
+                        Variant::Bandwidth => 2 * ceil_log(3, n as u64),
+                    }
+                {
+                    return Err(format!(
+                        "n={n} {variant:?}: {} steps (not latency-optimal)",
+                        b.net.num_steps()
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_random_tori_validate() {
+    prop::check(
+        0xB0B,
+        12,
+        |rng: &mut SplitMix64| {
+            let d = rng.range(1, 3) as usize;
+            (0..d).map(|_| rng.range(2, 6) as u32).collect::<Vec<u32>>()
+        },
+        |dims| {
+            let t = Torus::new(dims);
+            for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+                for variant in Variant::ALL {
+                    let b = build(algo, variant, &t)
+                        .map_err(|e| format!("{algo:?} {dims:?}: {e}"))?;
+                    b.validate().map_err(|e| format!("{algo:?} {variant:?} {dims:?}: {e}"))?;
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+#[test]
+fn property_numerics_random_block_len() {
+    prop::check(
+        0xC0FFEE,
+        10,
+        |rng: &mut SplitMix64| (rng.range(2, 40) as u32, rng.range(1, 17) as usize),
+        |&(n, block_len)| {
+            let t = Torus::ring(n);
+            let b = build(Algo::Trivance, Variant::Latency, &t).map_err(|e| e)?;
+            let err = verify_allreduce(&b.exec, block_len, n as u64, &NativeReducer);
+            if err < f32_sum_tolerance(n) {
+                Ok(())
+            } else {
+                Err(format!("n={n} L={block_len}: err {err}"))
+            }
+        },
+    );
+}
+
+#[test]
+fn lemma_4_2_block_propagation_radius() {
+    // After step k each node holds exactly the radius-R_k ball,
+    // R_k = (3^{k+1} − 1)/2 (power-of-three ring).
+    use trivance::agpattern::AgPattern;
+    use trivance::algo::multidim::simulate_held;
+    use trivance::algo::rings::{trivance, Order};
+    for n in [9u32, 27, 81] {
+        let p = trivance(n, Order::Inc);
+        let held = simulate_held(&p);
+        for k in 0..p.num_steps() {
+            let r_k = (3u64.pow(k as u32 + 1) - 1) / 2;
+            for r in 0..n {
+                let h = &held[k + 1][r as usize];
+                assert_eq!(h.len(), (2 * r_k + 1).min(n as u64), "n={n} k={k} r={r}");
+                let expect = trivance::blockset::BlockSet::cyc_ball(r as i64, r_k, n);
+                assert_eq!(*h, expect, "n={n} k={k} r={r}");
+            }
+        }
+    }
+}
+
+#[test]
+fn bruck_theta_is_three_times_trivance() {
+    // §4 / Appendix B: Trivance's congestion is exactly 3× lower than
+    // (original, unidirectional) Bruck's; the evaluation's shortest-path
+    // modified Bruck narrows that to ~1.5× but stays strictly worse.
+    for n in [9u32, 27, 81] {
+        let t = Torus::ring(n);
+        let tv = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        let bu = build(Algo::BruckUnidir, Variant::Latency, &t).unwrap();
+        let bm = build(Algo::Bruck, Variant::Latency, &t).unwrap();
+        let theta = |b: &trivance::algo::BuiltCollective| {
+            measure_optimality(&analyze(&b.net, &t), &t).theta
+        };
+        let ratio_orig = theta(&bu) / theta(&tv);
+        assert!(
+            (ratio_orig - 3.0).abs() < 0.05,
+            "n={n}: original Bruck/Trivance Θ ratio {ratio_orig}"
+        );
+        let ratio_mod = theta(&bm) / theta(&tv);
+        assert!(ratio_mod > 1.2, "n={n}: modified Bruck ratio {ratio_mod}");
+    }
+}
+
+#[test]
+fn unidirectional_bruck_is_worse() {
+    // the paper's routing modification matters: unmodified Bruck drags
+    // long transfers the long way around.
+    let t = Torus::ring(27);
+    let m = 1 << 20;
+    let modif = build(Algo::Bruck, Variant::Latency, &t).unwrap();
+    let unmod = build(Algo::BruckUnidir, Variant::Latency, &t).unwrap();
+    let tm = simulate(&modif.net, &t, m, &NetParams::default(), SimMode::Flow).completion_s;
+    let tu = simulate(&unmod.net, &t, m, &NetParams::default(), SimMode::Flow).completion_s;
+    assert!(tu > tm * 1.2, "unidir {tu} vs modified {tm}");
+}
+
+#[test]
+fn flow_packet_crosscheck_matrix() {
+    // the fluid model tracks the packet ground truth within 10% across
+    // algorithms and sizes (small configs).
+    let t = Torus::ring(9);
+    for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+        for variant in Variant::ALL {
+            let b = build(algo, variant, &t).unwrap();
+            for m in [4096u64, 256 << 10] {
+                let f = simulate(&b.net, &t, m, &NetParams::default(), SimMode::Flow);
+                let p = simulate(
+                    &b.net,
+                    &t,
+                    m,
+                    &NetParams::default(),
+                    SimMode::Packet { mtu: 4096 },
+                );
+                let rel = (f.completion_s - p.completion_s).abs() / p.completion_s;
+                assert!(
+                    rel < 0.10,
+                    "{algo:?} {variant:?} m={m}: flow {} packet {} rel {rel:.3}",
+                    f.completion_s,
+                    p.completion_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn eq1_tracks_simulator_for_symmetric_schedules() {
+    // the analytic model (Eq. 1 + hop term) agrees with the DES for the
+    // globally synchronized Trivance pattern.
+    let t = Torus::ring(27);
+    let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+    let stats = analyze(&b.net, &t);
+    for m in [32u64, 64 << 10, 8 << 20] {
+        let sim = simulate(&b.net, &t, m, &NetParams::default(), SimMode::Flow).completion_s;
+        let analytic = eq1_with_hops(&stats, m, &NetParams::default());
+        let rel = (sim - analytic).abs() / sim;
+        assert!(rel < 0.05, "m={m}: sim {sim} analytic {analytic} rel {rel:.3}");
+    }
+}
+
+#[test]
+fn theorem_4_3_latency_optimal_steps_match_chan_bound() {
+    // ⌈log_{2D+1} n⌉ is the Chan et al. lower bound; Trivance meets
+    // ⌈log₃ n⌉ per §4 on rings (and per-collective on tori).
+    for n in [3u32, 9, 27, 81, 243] {
+        let t = Torus::ring(n);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        assert_eq!(b.net.num_steps() as u32, ceil_log(3, n as u64));
+    }
+    let t = Torus::new(&[9, 9]);
+    let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+    assert_eq!(b.net.num_steps() as u32, ceil_log(3, 81));
+}
+
+#[test]
+fn padded_configs_full_stack() {
+    // virtual padding: swing/recdoub on non-power-of-two rings.
+    for n in [5u32, 9, 12] {
+        let t = Torus::ring(n);
+        for algo in [Algo::Swing, Algo::RecDoub] {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t).unwrap();
+                assert!(b.padded);
+                b.validate().unwrap();
+                let err = verify_allreduce(&b.exec, 2, 5, &NativeReducer);
+                assert!(err < f32_sum_tolerance(b.exec.n), "{algo:?} n={n}: {err}");
+                let r = simulate(&b.net, &t, 4096, &NetParams::default(), SimMode::Flow);
+                assert!(r.completion_s > 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Failure injection: randomly corrupt valid schedules and assert the
+//! static validator rejects every mutation. This is the guarantee that an
+//! incorrect communication pattern can never silently reach the simulator
+//! or the numeric executor — the validator is only trustworthy if it
+//! actually *fails* on broken inputs.
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::blockset::BlockSet;
+use trivance::schedule::validate::validate_allreduce;
+use trivance::schedule::Schedule;
+use trivance::topology::Torus;
+use trivance::util::SplitMix64;
+
+/// A single random structural corruption. Returns a human label, or None
+/// if this mutation happens to be inapplicable at the drawn location.
+fn mutate(s: &mut Schedule, rng: &mut SplitMix64) -> Option<&'static str> {
+    let steps = s.steps.len();
+    let k = rng.below(steps as u64) as usize;
+    let n = s.n;
+    match rng.below(5) {
+        // drop one message: coverage must fail
+        0 => {
+            let src = (0..n).find(|&r| !s.steps[k].sends[r as usize].is_empty())?;
+            s.steps[k].sends[src as usize].pop();
+            Some("drop-message")
+        }
+        // duplicate a Reduce message: double reduction. (Duplicating a
+        // Set message is benign — overwriting a complete block with the
+        // same complete value — and correctly accepted.)
+        1 => {
+            let (src, idx) = (0..n).find_map(|r| {
+                s.steps[k].sends[r as usize].iter().position(|snd| {
+                    snd.pieces.iter().any(|p| p.kind == trivance::schedule::Kind::Reduce)
+                }).map(|i| (r, i))
+            })?;
+            let dup = s.steps[k].sends[src as usize][idx].clone();
+            s.steps[k].sends[src as usize].push(dup);
+            Some("duplicate-message")
+        }
+        // widen a Reduce contrib by one rank: sender either lacks it,
+        // cannot cover it exactly, or the receiver double-reduces
+        2 => {
+            let src = (0..n).find(|&r| !s.steps[k].sends[r as usize].is_empty())?;
+            let snd = &mut s.steps[k].sends[src as usize][0];
+            let p = snd.pieces.first_mut()?;
+            if p.kind != trivance::schedule::Kind::Reduce || p.contrib.is_full(n) {
+                return None;
+            }
+            let extra = (0..n).find(|&r| !p.contrib.contains(r))?;
+            p.contrib = p.contrib.union(&BlockSet::singleton(extra, n));
+            Some("widen-contrib")
+        }
+        // shrink a contrib by dropping its first rank: either not an exact
+        // cover any more, or downstream coverage breaks
+        3 => {
+            let src = (0..n).find(|&r| !s.steps[k].sends[r as usize].is_empty())?;
+            let snd = &mut s.steps[k].sends[src as usize][0];
+            let p = snd.pieces.first_mut()?;
+            let first = p.contrib.iter().next()?;
+            if p.contrib.len() <= 1 {
+                return None;
+            }
+            p.contrib = p.contrib.difference(&BlockSet::singleton(first, n));
+            Some("shrink-contrib")
+        }
+        // retarget a message to a random other node
+        _ => {
+            let src = (0..n).find(|&r| !s.steps[k].sends[r as usize].is_empty())?;
+            let snd = &mut s.steps[k].sends[src as usize][0];
+            let new = (snd.to + 1 + rng.below((n - 2).max(1) as u64) as u32) % n;
+            if new == src {
+                return None;
+            }
+            snd.to = new;
+            Some("retarget-message")
+        }
+    }
+}
+
+#[test]
+fn validator_rejects_every_mutation() {
+    let mut rng = SplitMix64::new(0xDEAD);
+    let mut rejected = 0u32;
+    let mut tried = 0u32;
+    for (algo, n) in [
+        (Algo::Trivance, 9u32),
+        (Algo::Trivance, 27),
+        (Algo::Trivance, 7),
+        (Algo::Bruck, 9),
+        (Algo::Swing, 8),
+        (Algo::Bucket, 6),
+    ] {
+        for variant in Variant::ALL {
+            let base = build(algo, variant, &Torus::ring(n)).unwrap();
+            validate_allreduce(&base.exec).unwrap();
+            for _ in 0..40 {
+                let mut s = base.exec.clone();
+                let Some(label) = mutate(&mut s, &mut rng) else { continue };
+                tried += 1;
+                match validate_allreduce(&s) {
+                    Err(_) => rejected += 1,
+                    Ok(_) => panic!(
+                        "{algo:?} {variant:?} n={n}: mutation {label} slipped past the validator"
+                    ),
+                }
+            }
+        }
+    }
+    assert!(tried > 200, "only {tried} mutations exercised");
+    assert_eq!(rejected, tried);
+}
+
+#[test]
+fn executor_panics_on_corrupted_schedule() {
+    // the numeric executor independently asserts coverage
+    let base = build(Algo::Trivance, Variant::Latency, &Torus::ring(9)).unwrap();
+    let mut s = base.exec.clone();
+    s.steps[1].sends[0].clear(); // node 0 stops forwarding in step 1
+    let r = std::panic::catch_unwind(|| {
+        trivance::exec::verify_allreduce(&s, 2, 1, &trivance::exec::NativeReducer)
+    });
+    assert!(r.is_err(), "executor accepted a corrupted schedule");
+}

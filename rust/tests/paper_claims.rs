@@ -1,0 +1,160 @@
+//! Evaluation-shape tests: the qualitative claims of §6 the reproduction
+//! must preserve (winners per regime, crossovers, headline percentages).
+//! These run on reduced sweeps so `cargo test` stays fast; the full-size
+//! regenerations live in `cargo bench` / `trivance figures`.
+
+use trivance::algo::Algo;
+use trivance::cost::NetParams;
+use trivance::harness::sweep::run_sweep;
+use trivance::topology::Torus;
+
+const ALGOS: [Algo; 5] = [Algo::Trivance, Algo::Bruck, Algo::Swing, Algo::RecDoub, Algo::Bucket];
+
+#[test]
+fn fig6a_small_messages_trivance_wins_over_swing_rd_by_20pct() {
+    // §6.1: "more than a 20% performance advantage over Swing and
+    // Recursive Doubling" for small sizes on the 8-ring.
+    let t = Torus::ring(8);
+    let s = run_sweep(&t, &ALGOS, &[32, 512], &NetParams::default());
+    for si in 0..2 {
+        assert!(s.rel_to_trivance(Algo::Swing, si) > 1.20, "swing si={si}");
+        assert!(s.rel_to_trivance(Algo::RecDoub, si) > 1.20, "recdoub si={si}");
+        // and slightly better than Bruck
+        assert!(s.rel_to_trivance(Algo::Bruck, si) > 1.0, "bruck si={si}");
+    }
+}
+
+#[test]
+fn fig6a_swing_overtakes_by_low_megabytes() {
+    // §6.1: the tradeoff point where Swing matches Trivance is ~512 KiB on
+    // the 8-ring; beyond it Swing wins.
+    let t = Torus::ring(8);
+    let s = run_sweep(&t, &ALGOS, &[128 << 10, 4 << 20], &NetParams::default());
+    assert!(s.rel_to_trivance(Algo::Swing, 0) > 0.90); // near parity below
+    assert!(s.rel_to_trivance(Algo::Swing, 1) < 1.0); // Swing ahead after
+}
+
+#[test]
+fn fig6a_bucket_wins_large() {
+    // §6.1: "Starting at 4 MiB, the Bucket algorithm achieves the lowest
+    // completion time."
+    let t = Torus::ring(8);
+    let s = run_sweep(&t, &ALGOS, &[16 << 20], &NetParams::default());
+    assert_eq!(s.winners()[0], Algo::Bucket);
+}
+
+#[test]
+fn fig6b_ring64_trivance_wins_small_about_10pct() {
+    // §6.1: on the 64-ring Trivance outperforms everything by ≈10% for
+    // 32 B – 8 KiB.
+    let t = Torus::ring(64);
+    let s = run_sweep(&t, &ALGOS, &[32, 8 << 10], &NetParams::default());
+    for si in 0..2 {
+        for &a in &s.algos {
+            if a == Algo::Trivance {
+                continue;
+            }
+            assert!(
+                s.rel_to_trivance(a, si) > 1.02,
+                "{a:?} at si={si}: {}",
+                s.rel_to_trivance(a, si)
+            );
+        }
+    }
+}
+
+#[test]
+fn fig7a_torus_trivance_wins_mid_range() {
+    // §6.2: on 8×8, Trivance outperforms everything in the
+    // latency-to-mid-size band (our testbed places the Swing-L crossover
+    // near 128 KiB rather than the paper's 2 MiB — see EXPERIMENTS.md).
+    let t = Torus::new(&[8, 8]);
+    let s = run_sweep(&t, &ALGOS, &[8 << 10, 32 << 10], &NetParams::default());
+    for si in 0..2 {
+        for &a in &s.algos {
+            if a == Algo::Trivance {
+                continue;
+            }
+            assert!(s.rel_to_trivance(a, si) > 1.0, "{a:?} si={si}");
+        }
+    }
+}
+
+#[test]
+fn fig8_high_bandwidth_extends_trivance_regime() {
+    // §6.2: higher bandwidth pushes the crossover to larger sizes — at a
+    // size where 200 Gb/s already favors bandwidth-optimal baselines,
+    // 3.2 Tb/s still favors Trivance.
+    let t = Torus::new(&[8, 8]);
+    let m = 8 << 20;
+    let low = run_sweep(&t, &ALGOS, &[m], &NetParams::default().with_bandwidth_gbps(200.0));
+    let high = run_sweep(&t, &ALGOS, &[m], &NetParams::default().with_bandwidth_gbps(3200.0));
+    let best_rel = |s: &trivance::harness::sweep::Sweep| {
+        s.algos
+            .iter()
+            .filter(|&&a| a != Algo::Trivance)
+            .map(|&a| s.rel_to_trivance(a, 0))
+            .fold(f64::INFINITY, f64::min)
+    };
+    assert!(
+        best_rel(&high) > best_rel(&low),
+        "high-bw should favor trivance more: low {} high {}",
+        best_rel(&low),
+        best_rel(&high)
+    );
+}
+
+#[test]
+fn fig9_power_of_three_trivance_dominates() {
+    // §6.2: on the 9×9 power-of-three torus Trivance beats Bucket and
+    // Bruck well past the megabyte range.
+    let t = Torus::new(&[9, 9]);
+    let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+    let s = run_sweep(&t, &algos, &[32, 128 << 10, 2 << 20], &NetParams::default());
+    for si in 0..3 {
+        assert_eq!(s.winners()[si], Algo::Trivance, "si={si}");
+    }
+}
+
+#[test]
+fn fig10_3d_torus_trivance_wins_broadly() {
+    // §6.3 (scaled down to 4×4×4 for test time): in 3-D tori the
+    // bandwidth-optimal baselines approach optimal transmission delay, so
+    // the per-step latency advantage dominates across the sweep.
+    // dims of 8: ⌈log₃8⌉ = 2 steps/dim vs Swing's 3 — the step advantage
+    // that drives Fig. 10 (dims of 4 would tie at 2 steps each).
+    let t = Torus::new(&[8, 8, 8]);
+    let s = run_sweep(&t, &ALGOS, &[32, 32 << 10], &NetParams::default());
+    // latency-bound point: Trivance wins outright
+    assert_eq!(s.winners()[0], Algo::Trivance);
+    // mid-size point: within a few % of the best (dims of 8 blunt the
+    // ⌈log₃⌉ advantage vs dims of 16; the full Fig. 10 runs 16×16×16)
+    let best = s.points[1]
+        .iter()
+        .map(|p| p.completion_s)
+        .fold(f64::INFINITY, f64::min);
+    let ti = s.algos.iter().position(|&a| a == Algo::Trivance).unwrap();
+    assert!(s.points[1][ti].completion_s <= best * 1.10);
+}
+
+#[test]
+fn headline_trivance_best_latency_optimal_everywhere() {
+    // §6.4: "Trivance remains the best-performing latency-optimal
+    // algorithm" — compare latency variants only, across topologies.
+    use trivance::algo::{build, Variant};
+    use trivance::sim::{simulate, SimMode};
+    for dims in [vec![8u32], vec![27], vec![8, 8]] {
+        let t = Torus::new(&dims);
+        for m in [32u64, 8 << 10] {
+            let mut best: Option<(Algo, f64)> = None;
+            for algo in ALGOS {
+                let Ok(b) = build(algo, Variant::Latency, &t) else { continue };
+                let c = simulate(&b.net, &t, m, &NetParams::default(), SimMode::Flow).completion_s;
+                if best.map(|(_, bc)| c < bc).unwrap_or(true) {
+                    best = Some((algo, c));
+                }
+            }
+            assert_eq!(best.unwrap().0, Algo::Trivance, "dims {dims:?} m={m}");
+        }
+    }
+}
