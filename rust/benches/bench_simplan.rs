@@ -1,0 +1,68 @@
+//! SimPlan benchmarks: plan compilation, plan reuse across a message-size
+//! ladder vs per-size rebuild, the incremental water-filling under heavy
+//! congestion, and the parallel sweep engine vs one thread.
+//!
+//! (criterion is not in the vendored registry; this drives the same
+//! hand-rolled harness as the other bench targets.)
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::cost::NetParams;
+use trivance::harness::sweep::{run_sweep_threads, size_ladder};
+use trivance::sim::{flow::simulate_flow_plan, simulate, SimMode, SimPlan};
+use trivance::topology::Torus;
+use trivance::util::bench::Bencher;
+use trivance::util::par;
+
+fn main() {
+    let b = Bencher::new(1, 5);
+    let p = NetParams::default();
+
+    println!("== plan compilation (once per ladder) ==");
+    let t81 = Torus::ring(81);
+    let tv81 = build(Algo::Trivance, Variant::Bandwidth, &t81).unwrap();
+    b.run("plan-build/ring81/trivance-B", || SimPlan::build(&tv81.net, &t81).num_msgs());
+    let t88 = Torus::new(&[8, 8]);
+    let bu88 = build(Algo::Bucket, Variant::Bandwidth, &t88).unwrap();
+    b.run("plan-build/8x8/bucket-B", || SimPlan::build(&bu88.net, &t88).num_msgs());
+
+    println!("\n== ladder: one plan reused vs per-size rebuild ==");
+    let ladder = size_ladder(8 << 20);
+    let plan88 = SimPlan::build(&bu88.net, &t88);
+    b.run("ladder/8x8/bucket-B/reuse-plan", || {
+        ladder
+            .iter()
+            .map(|&m| simulate_flow_plan(&plan88, m, &p).events)
+            .sum::<u64>()
+    });
+    b.run("ladder/8x8/bucket-B/rebuild-per-size", || {
+        ladder
+            .iter()
+            .map(|&m| simulate(&bu88.net, &t88, m, &p, SimMode::Flow).events)
+            .sum::<u64>()
+    });
+
+    println!("\n== incremental water-filling under congestion ==");
+    let t27 = Torus::ring(27);
+    let bu27 = build(Algo::BruckUnidir, Variant::Latency, &t27).unwrap();
+    let plan27 = SimPlan::build(&bu27.net, &t27);
+    b.run("flow/ring27/bruck-unidir-L/8MiB", || {
+        simulate_flow_plan(&plan27, 8 << 20, &p).events
+    });
+    let tv27 = build(Algo::Trivance, Variant::Bandwidth, &t27).unwrap();
+    let plan27b = SimPlan::build(&tv27.net, &t27);
+    b.run("flow/ring27/trivance-B/8MiB", || {
+        simulate_flow_plan(&plan27b, 8 << 20, &p).events
+    });
+
+    println!("\n== sweep engine: 3x3x3 full registry, 32 B – 4 MiB ==");
+    let t333 = Torus::new(&[3, 3, 3]);
+    let sizes = size_ladder(4 << 20);
+    let b1 = Bencher::new(1, 3);
+    b1.run("sweep/3x3x3/threads=1", || {
+        run_sweep_threads(&t333, &Algo::ALL, &sizes, &p, 1).points.len()
+    });
+    let auto = par::available_threads();
+    b1.run(&format!("sweep/3x3x3/threads={auto}"), || {
+        run_sweep_threads(&t333, &Algo::ALL, &sizes, &p, 0).points.len()
+    });
+}

@@ -125,31 +125,52 @@ impl BlockSet {
         if self.is_empty() {
             return other.clone();
         }
-        if other.is_empty() {
-            return self.clone();
-        }
-        let mut all: Vec<(u32, u32)> = Vec::with_capacity(self.ivs.len() + other.ivs.len());
-        all.extend_from_slice(&self.ivs);
-        all.extend_from_slice(&other.ivs);
-        all.sort_unstable();
-        let mut out: Vec<(u32, u32)> = Vec::with_capacity(all.len());
-        for (s, e) in all {
-            match out.last_mut() {
-                Some(last) if s <= last.1 => last.1 = last.1.max(e),
-                _ => out.push((s, e)),
-            }
-        }
-        BlockSet { ivs: out }
+        let mut out = self.clone();
+        out.union_with(other);
+        out
     }
 
-    /// In-place union.
+    /// In-place union: merges `other`'s intervals into this set's buffer
+    /// with no intermediate allocation (the hot validator path — every
+    /// received piece unions into the receiver's contributor set used to
+    /// allocate two scratch `Vec`s per call). The appended intervals are
+    /// sorted only when the concatenation is actually out of order, then
+    /// coalesced with one in-place pass.
     pub fn union_with(&mut self, other: &BlockSet) {
-        *self = self.union(other);
+        if other.is_empty() {
+            return;
+        }
+        let old_len = self.ivs.len();
+        self.ivs.extend_from_slice(&other.ivs);
+        // Both halves are sorted; skip the sort when the concatenation
+        // already is (common: accumulating ascending pieces).
+        if old_len > 0 && self.ivs[old_len - 1] > self.ivs[old_len] {
+            self.ivs.sort_unstable();
+        }
+        // Coalesce overlapping/adjacent intervals in place.
+        let mut w = 0;
+        for r in 1..self.ivs.len() {
+            let (s, e) = self.ivs[r];
+            if s <= self.ivs[w].1 {
+                if e > self.ivs[w].1 {
+                    self.ivs[w].1 = e;
+                }
+            } else {
+                w += 1;
+                self.ivs[w] = (s, e);
+            }
+        }
+        self.ivs.truncate(w + 1);
     }
 
     /// Intersection.
     pub fn intersect(&self, other: &BlockSet) -> BlockSet {
-        let mut out = Vec::new();
+        if self.is_empty() || other.is_empty() {
+            return BlockSet::empty();
+        }
+        // an intersection has at most |self| + |other| − 1 intervals; the
+        // common validator case is much smaller, so hint conservatively
+        let mut out = Vec::with_capacity(self.ivs.len().max(other.ivs.len()));
         let (mut i, mut j) = (0, 0);
         while i < self.ivs.len() && j < other.ivs.len() {
             let (s1, e1) = self.ivs[i];
@@ -216,9 +237,26 @@ impl BlockSet {
         self.ivs.len() == 1 && self.ivs[0] == (0, n)
     }
 
-    /// Is `other` a subset of `self`?
+    /// Is `other` a subset of `self`? Allocation-free two-pointer walk:
+    /// because intervals are disjoint and non-adjacent, every interval of a
+    /// subset must lie inside a single interval of the superset.
     pub fn is_superset(&self, other: &BlockSet) -> bool {
-        other.difference(self).is_empty()
+        let mut i = 0;
+        'outer: for &(s, e) in &other.ivs {
+            while i < self.ivs.len() {
+                let (ss, se) = self.ivs[i];
+                if se <= s {
+                    i += 1;
+                    continue;
+                }
+                if ss <= s && e <= se {
+                    continue 'outer;
+                }
+                return false;
+            }
+            return false;
+        }
+        true
     }
 
     /// Iterate over all ranks in the set, ascending.
@@ -347,5 +385,79 @@ mod tests {
         let b = BlockSet::cyc_range(1, 3, 9);
         assert!(a.is_superset(&b));
         assert!(!b.is_superset(&a));
+        // multi-interval containment: each piece inside a different interval
+        let c = BlockSet::from_intervals(vec![(0, 3), (5, 8)]);
+        let d = BlockSet::from_intervals(vec![(1, 2), (5, 6), (7, 8)]);
+        assert!(c.is_superset(&d));
+        assert!(!c.is_superset(&BlockSet::from_intervals(vec![(2, 4)])));
+        assert!(c.is_superset(&BlockSet::empty()));
+        assert!(!BlockSet::empty().is_superset(&c));
+    }
+
+    #[test]
+    fn union_with_wraparound_intervals() {
+        // {7,8,0,1} stored as [(0,2),(7,9)] unioned with {1,2} must merge
+        // across the seam into [(0,3),(7,9)] — cyclically one run.
+        let mut a = BlockSet::cyc_range(7, 4, 9);
+        a.union_with(&BlockSet::cyc_range(1, 2, 9));
+        assert_eq!(a.len(), 5);
+        for r in [7, 8, 0, 1, 2] {
+            assert!(a.contains(r), "missing {r}");
+        }
+        assert_eq!(a.intervals().count(), 2);
+        assert_eq!(a.runs(9), 1);
+        // and merging the gap closes it into the full set
+        a.union_with(&BlockSet::cyc_range(3, 4, 9));
+        assert!(a.is_full(9));
+    }
+
+    #[test]
+    fn union_with_matches_union_on_random_wrapped_ranges() {
+        // in-place union must agree with the pure one for every mix of
+        // wrapped/linear/overlapping/adjacent inputs
+        let mut rng = crate::util::SplitMix64::new(0x5EED);
+        for _ in 0..500 {
+            let n = rng.range(2, 40) as u32;
+            let mk = |rng: &mut crate::util::SplitMix64| {
+                let a = BlockSet::cyc_range(
+                    rng.below(n as u64) as u32,
+                    rng.range(0, n as u64 + 1),
+                    n,
+                );
+                let b = BlockSet::cyc_range(
+                    rng.below(n as u64) as u32,
+                    rng.range(0, n as u64),
+                    n,
+                );
+                a.union(&b)
+            };
+            let x = mk(&mut rng);
+            let y = mk(&mut rng);
+            let mut inplace = x.clone();
+            inplace.union_with(&y);
+            // reference: rank-by-rank membership
+            for r in 0..n {
+                assert_eq!(
+                    inplace.contains(r),
+                    x.contains(r) || y.contains(r),
+                    "n={n} r={r} x={x:?} y={y:?} got {inplace:?}"
+                );
+            }
+            // structural invariants: sorted, disjoint, non-adjacent
+            let ivs: Vec<(u32, u32)> = inplace.intervals().collect();
+            for w in ivs.windows(2) {
+                assert!(w[0].1 < w[1].0, "not coalesced: {ivs:?}");
+            }
+        }
+    }
+
+    #[test]
+    fn intersect_wraparound() {
+        let a = BlockSet::cyc_range(7, 4, 9); // {7,8,0,1}
+        let b = BlockSet::cyc_range(8, 3, 9); // {8,0,1}
+        let i = a.intersect(&b);
+        assert_eq!(i.len(), 3);
+        assert!(i.contains(8) && i.contains(0) && i.contains(1));
+        assert!(a.intersect(&BlockSet::empty()).is_empty());
     }
 }

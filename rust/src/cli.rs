@@ -108,14 +108,19 @@ const USAGE: &str = "\
 trivance — latency-optimal AllReduce by shortcutting multiport networks
 
 USAGE:
-  trivance figures  [--id ID]... [--all] [--quick] [--out DIR]
+  trivance figures  [--id ID]... [--all] [--quick] [--out DIR] [--threads N]
   trivance simulate --topo 8x8 [--algo A] [--variant L|B] [--size 1MiB]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
+  trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
+                    [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
   trivance validate --topo 27 [--algo A]
   trivance verify   --topo 9  [--algo A] [--block-len 8] [--pjrt]
   trivance pattern  --n 9 [--algo trivance|bruck]
   trivance optimality --topo 81
   trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
+
+--threads 0 (default) uses every core; sweep results are identical for any
+thread count.
 
 IDs: table1 table2 fig6a fig6b fig7a fig7b fig8 fig9 fig10
 Algorithms: trivance bruck bruck-unidir swing recdoub bucket
@@ -140,6 +145,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
     let args = Args::parse(rest)?;
     match cmd.as_str() {
         "figures" => figures(&args),
+        "bench-sweep" => bench_sweep_cmd(&args),
         "simulate" => simulate_cmd(&args),
         "validate" => validate_cmd(&args),
         "verify" => verify_cmd(&args),
@@ -154,8 +160,17 @@ fn run(argv: Vec<String>) -> Result<(), String> {
     }
 }
 
+/// Parse the `--threads` knob (`0` = all cores).
+fn parse_threads(args: &Args) -> Result<usize, String> {
+    args.get("threads")
+        .map(|s| s.parse().map_err(|e| format!("bad --threads: {e}")))
+        .transpose()
+        .map(|t| t.unwrap_or(0))
+}
+
 fn figures(args: &Args) -> Result<(), String> {
     let quick = args.has("quick");
+    let threads = parse_threads(args)?;
     let ids: Vec<String> = if args.has("all") || args.getall("id").is_empty() {
         crate::harness::ALL_IDS.iter().map(|s| s.to_string()).collect()
     } else {
@@ -165,7 +180,7 @@ fn figures(args: &Args) -> Result<(), String> {
     for id in &ids {
         eprintln!("[figures] running {id} ...");
         let t0 = std::time::Instant::now();
-        let md = crate::harness::run(id, quick)?;
+        let md = crate::harness::run_opts(id, quick, threads)?;
         eprintln!("[figures] {id} done in {:.1}s", t0.elapsed().as_secs_f64());
         match out_dir {
             Some(dir) => {
@@ -177,6 +192,45 @@ fn figures(args: &Args) -> Result<(), String> {
             None => println!("{md}"),
         }
     }
+    Ok(())
+}
+
+/// Full-registry sweep with wall-clock accounting; writes the
+/// machine-readable `BENCH_sweep.json` perf record (the acceptance artifact
+/// future PRs diff against).
+fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
+    use crate::harness::sweep::{run_sweep_timed, size_ladder, write_bench_json};
+    let torus = match args.get("topo") {
+        Some(t) => parse_topo(t)?,
+        None => Torus::new(&[3, 3, 3]),
+    };
+    let max = args
+        .get("max-size")
+        .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --max-size {s:?}")))
+        .transpose()?
+        .unwrap_or(128 << 20);
+    let threads = parse_threads(args)?;
+    let params = net_params(args)?;
+    let out = args.get("out").unwrap_or("BENCH_sweep.json");
+    let sizes = size_ladder(max);
+
+    eprintln!(
+        "[bench-sweep] {:?} ({} nodes), {} sizes up to {} ...",
+        torus.dims(),
+        torus.n(),
+        sizes.len(),
+        fmt::bytes(max),
+    );
+    let t0 = std::time::Instant::now();
+    let (sweep, timing) = run_sweep_timed(&torus, &Algo::ALL, &sizes, &params, threads);
+    let wall = t0.elapsed().as_secs_f64();
+    write_bench_json(out, &sweep, &timing).map_err(|e| format!("writing {out}: {e}"))?;
+
+    println!("{}", sweep.render("bench-sweep — completion relative to Trivance"));
+    println!(
+        "build {:.3}s + sim {:.3}s = {:.3}s wall ({} threads); wrote {out}",
+        timing.build_wall_s, timing.sim_wall_s, wall, timing.threads
+    );
     Ok(())
 }
 
@@ -373,5 +427,15 @@ mod tests {
         assert_eq!(parse_variant("L").unwrap(), Variant::Latency);
         assert_eq!(parse_variant("bandwidth").unwrap(), Variant::Bandwidth);
         assert!(parse_variant("x").is_err());
+    }
+
+    #[test]
+    fn threads_parse() {
+        let a = Args::parse(&["--threads".into(), "4".into()]).unwrap();
+        assert_eq!(parse_threads(&a).unwrap(), 4);
+        let none = Args::parse(&[]).unwrap();
+        assert_eq!(parse_threads(&none).unwrap(), 0);
+        let bad = Args::parse(&["--threads".into(), "x".into()]).unwrap();
+        assert!(parse_threads(&bad).is_err());
     }
 }

@@ -1,6 +1,9 @@
 //! Figure regeneration (paper §6.1–6.3). Each function returns markdown.
+//!
+//! Every figure takes a `threads` knob (`0` = all cores) that is forwarded
+//! to the parallel sweep engine; results are identical for any value.
 
-use super::sweep::{run_sweep, size_ladder};
+use super::sweep::{run_sweep_threads, size_ladder};
 use crate::algo::Algo;
 use crate::cost::NetParams;
 use crate::topology::Torus;
@@ -24,9 +27,15 @@ fn max_size(quick: bool) -> u64 {
 }
 
 /// Fig. 6: rings of size 8 (a) and 64 (b), 32 B – 128 MiB.
-pub fn fig6(n: u32, quick: bool) -> String {
+pub fn fig6(n: u32, quick: bool, threads: usize) -> String {
     let t = Torus::ring(n);
-    let s = run_sweep(&t, &POW2_ALGOS, &size_ladder(max_size(quick)), &NetParams::default());
+    let s = run_sweep_threads(
+        &t,
+        &POW2_ALGOS,
+        &size_ladder(max_size(quick)),
+        &NetParams::default(),
+        threads,
+    );
     s.render(&format!(
         "Fig. 6{} — AllReduce completion relative to Trivance, ring n={n}",
         if n == 8 { "a" } else { "b" }
@@ -34,9 +43,15 @@ pub fn fig6(n: u32, quick: bool) -> String {
 }
 
 /// Fig. 7: square tori 8×8 (a) and 32×32 (b).
-pub fn fig7(a: u32, quick: bool) -> String {
+pub fn fig7(a: u32, quick: bool, threads: usize) -> String {
     let t = Torus::new(&[a, a]);
-    let s = run_sweep(&t, &POW2_ALGOS, &size_ladder(max_size(quick)), &NetParams::default());
+    let s = run_sweep_threads(
+        &t,
+        &POW2_ALGOS,
+        &size_ladder(max_size(quick)),
+        &NetParams::default(),
+        threads,
+    );
     s.render(&format!(
         "Fig. 7{} — AllReduce completion relative to Trivance, {a}×{a} torus",
         if a == 8 { "a" } else { "b" }
@@ -45,7 +60,7 @@ pub fn fig7(a: u32, quick: bool) -> String {
 
 /// Fig. 8: 32×32 torus under 200 Gb/s – 3.2 Tb/s; per bandwidth, Trivance
 /// vs the best existing approach at each size.
-pub fn fig8(quick: bool) -> String {
+pub fn fig8(quick: bool, threads: usize) -> String {
     let a = if quick { 8 } else { 32 };
     let t = Torus::new(&[a, a]);
     let sizes = size_ladder(if quick { 512 << 10 } else { 64 << 20 });
@@ -66,7 +81,13 @@ pub fn fig8(quick: bool) -> String {
     let sweeps: Vec<_> = bandwidths
         .iter()
         .map(|&bw| {
-            run_sweep(&t, &POW2_ALGOS, &sizes, &NetParams::default().with_bandwidth_gbps(bw))
+            run_sweep_threads(
+                &t,
+                &POW2_ALGOS,
+                &sizes,
+                &NetParams::default().with_bandwidth_gbps(bw),
+                threads,
+            )
         })
         .collect();
     for (si, &m) in sizes.iter().enumerate() {
@@ -89,24 +110,30 @@ pub fn fig8(quick: bool) -> String {
 }
 
 /// Fig. 9: 27×27 torus (power-of-three) — Bucket and Bruck vs Trivance.
-pub fn fig9(quick: bool) -> String {
+pub fn fig9(quick: bool, threads: usize) -> String {
     let a = if quick { 9 } else { 27 };
     let t = Torus::new(&[a, a]);
-    let s = run_sweep(&t, &POW3_ALGOS, &size_ladder(max_size(quick)), &NetParams::default());
+    let s = run_sweep_threads(
+        &t,
+        &POW3_ALGOS,
+        &size_ladder(max_size(quick)),
+        &NetParams::default(),
+        threads,
+    );
     s.render(&format!(
         "Fig. 9 — AllReduce completion relative to Trivance, {a}×{a} torus (power-of-three)"
     ))
 }
 
 /// Fig. 10: 16×16×16 torus (4096 nodes).
-pub fn fig10(quick: bool) -> String {
+pub fn fig10(quick: bool, threads: usize) -> String {
     let (dims, sizes): (Vec<u32>, Vec<u64>) = if quick {
         (vec![4, 4, 4], size_ladder(512 << 10))
     } else {
         (vec![16, 16, 16], size_ladder(128 << 20))
     };
     let t = Torus::new(&dims);
-    let s = run_sweep(&t, &POW2_ALGOS, &sizes, &NetParams::default());
+    let s = run_sweep_threads(&t, &POW2_ALGOS, &sizes, &NetParams::default(), threads);
     s.render(&format!("Fig. 10 — AllReduce completion relative to Trivance, {dims:?} torus"))
 }
 
@@ -117,7 +144,7 @@ mod tests {
 
     #[test]
     fn fig6a_quick_renders() {
-        let md = fig6(8, true);
+        let md = fig6(8, true, 0);
         assert!(md.contains("ring n=8"));
         assert!(md.contains("32 B"));
     }

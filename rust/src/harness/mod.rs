@@ -29,17 +29,23 @@ pub const ALL_IDS: [&str; 9] = [
 ];
 
 /// Run one artifact by id; `quick` trims sweep sizes for smoke runs.
+/// Sweeps use every core; use [`run_opts`] for an explicit thread count.
 pub fn run(id: &str, quick: bool) -> Result<String, String> {
+    run_opts(id, quick, 0)
+}
+
+/// [`run`] with an explicit sweep thread count (`0` = all cores).
+pub fn run_opts(id: &str, quick: bool, threads: usize) -> Result<String, String> {
     match id {
-        "table1" => Ok(tables::table1(quick)),
-        "table2" => Ok(tables::table2(quick)),
-        "fig6a" => Ok(figures::fig6(8, quick)),
-        "fig6b" => Ok(figures::fig6(64, quick)),
-        "fig7a" => Ok(figures::fig7(8, quick)),
-        "fig7b" => Ok(figures::fig7(32, quick)),
-        "fig8" => Ok(figures::fig8(quick)),
-        "fig9" => Ok(figures::fig9(quick)),
-        "fig10" => Ok(figures::fig10(quick)),
+        "table1" => Ok(tables::table1(quick, threads)),
+        "table2" => Ok(tables::table2(quick, threads)),
+        "fig6a" => Ok(figures::fig6(8, quick, threads)),
+        "fig6b" => Ok(figures::fig6(64, quick, threads)),
+        "fig7a" => Ok(figures::fig7(8, quick, threads)),
+        "fig7b" => Ok(figures::fig7(32, quick, threads)),
+        "fig8" => Ok(figures::fig8(quick, threads)),
+        "fig9" => Ok(figures::fig9(quick, threads)),
+        "fig10" => Ok(figures::fig10(quick, threads)),
         other => Err(format!("unknown artifact id {other:?} (known: {})", ALL_IDS.join(", "))),
     }
 }

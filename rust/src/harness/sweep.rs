@@ -1,13 +1,22 @@
-//! Core sweep machinery: build each algorithm once per topology, simulate
-//! across message sizes, pick the best variant per point, and render
-//! relative-to-Trivance tables (the paper's plotting convention: positive %
-//! = Trivance is faster).
+//! Core sweep machinery: build each algorithm once per topology, precompile
+//! one [`SimPlan`] per variant, simulate across message sizes, pick the best
+//! variant per point, and render relative-to-Trivance tables (the paper's
+//! plotting convention: positive % = Trivance is faster).
+//!
+//! The grid of `(algo, variant, size)` points is fanned out across threads
+//! with [`crate::util::par::par_map`]; every point reuses the precompiled
+//! plans, and results are reassembled in input order, so a parallel sweep is
+//! bit-identical to the sequential one. [`run_sweep_timed`] additionally
+//! records per-point wall-clock, and [`write_bench_json`] emits the
+//! machine-readable `BENCH_sweep.json` used to track the performance
+//! trajectory across PRs (`trivance bench-sweep`).
 
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
-use crate::sim::{simulate, SimMode};
+use crate::sim::{simulate_plan, SimMode, SimPlan};
 use crate::topology::Torus;
-use crate::util::fmt;
+use crate::util::{fmt, par};
+use std::time::Instant;
 
 /// Message-size ladder 32 B … `max` (×4 per step, the paper's x-axis).
 pub fn size_ladder(max: u64) -> Vec<u64> {
@@ -20,15 +29,18 @@ pub fn size_ladder(max: u64) -> Vec<u64> {
     v
 }
 
-/// One algorithm's built variants on a topology.
+/// One algorithm's built variants on a topology, with their precompiled
+/// simulation plans (index-aligned with `variants`).
 pub struct BuiltAlgo {
     pub algo: Algo,
     pub variants: Vec<BuiltCollective>,
+    pub plans: Vec<SimPlan>,
 }
 
-/// Build every requested algorithm (both variants) on `torus`,
-/// skipping unsupported configurations silently (matching the paper's
-/// per-figure algorithm sets).
+/// Build every requested algorithm (both variants) on `torus` and
+/// precompile their network schedules into simulation plans, skipping
+/// unsupported configurations silently (matching the paper's per-figure
+/// algorithm sets).
 pub fn build_all(torus: &Torus, algos: &[Algo]) -> Vec<BuiltAlgo> {
     algos
         .iter()
@@ -40,7 +52,8 @@ pub fn build_all(torus: &Torus, algos: &[Algo]) -> Vec<BuiltAlgo> {
             if variants.is_empty() {
                 None
             } else {
-                Some(BuiltAlgo { algo, variants })
+                let plans = variants.iter().map(|b| SimPlan::build(&b.net, torus)).collect();
+                Some(BuiltAlgo { algo, variants, plans })
             }
         })
         .collect()
@@ -52,21 +65,28 @@ pub struct BestPoint {
     pub variant: Variant,
 }
 
+fn best_point(built: &BuiltAlgo, m_bytes: u64, params: &NetParams) -> BestPoint {
+    built
+        .variants
+        .iter()
+        .zip(&built.plans)
+        .map(|(b, plan)| BestPoint {
+            completion_s: simulate_plan(plan, m_bytes, params, SimMode::Flow).completion_s,
+            variant: b.variant,
+        })
+        .min_by(|a, b| a.completion_s.partial_cmp(&b.completion_s).unwrap())
+        .unwrap()
+}
+
+/// Completion time of the best variant at one message size (plan-reusing).
 pub fn best_completion(
     built: &BuiltAlgo,
     torus: &Torus,
     m_bytes: u64,
     params: &NetParams,
 ) -> BestPoint {
-    built
-        .variants
-        .iter()
-        .map(|b| {
-            let r = simulate(&b.net, torus, m_bytes, params, SimMode::Flow);
-            BestPoint { completion_s: r.completion_s, variant: b.variant }
-        })
-        .min_by(|a, b| a.completion_s.partial_cmp(&b.completion_s).unwrap())
-        .unwrap()
+    debug_assert_eq!(built.plans[0].n(), torus.n() as usize);
+    best_point(built, m_bytes, params)
 }
 
 /// Full sweep result: `points[size_idx][algo_idx]`.
@@ -77,23 +97,90 @@ pub struct Sweep {
     pub points: Vec<Vec<BestPoint>>,
 }
 
+/// Wall-clock accounting of one sweep run.
+pub struct SweepTiming {
+    /// Threads actually used for the grid fan-out.
+    pub threads: usize,
+    /// Schedule construction + plan compilation (once per ladder).
+    pub build_wall_s: f64,
+    /// Grid simulation (all points, wall-clock across threads).
+    pub sim_wall_s: f64,
+    /// Per-point wall seconds, `[size_idx][algo_idx]`.
+    pub point_wall_s: Vec<Vec<f64>>,
+}
+
+impl SweepTiming {
+    pub fn total_wall_s(&self) -> f64 {
+        self.build_wall_s + self.sim_wall_s
+    }
+}
+
+/// Sequential-compatible entry point (auto thread count).
 pub fn run_sweep(torus: &Torus, algos: &[Algo], sizes: &[u64], params: &NetParams) -> Sweep {
+    run_sweep_threads(torus, algos, sizes, params, 0)
+}
+
+/// Sweep with an explicit thread count (`0` = all cores, `1` = sequential).
+pub fn run_sweep_threads(
+    torus: &Torus,
+    algos: &[Algo],
+    sizes: &[u64],
+    params: &NetParams,
+    threads: usize,
+) -> Sweep {
+    run_sweep_timed(torus, algos, sizes, params, threads).0
+}
+
+/// Sweep with per-point wall-clock accounting (see [`SweepTiming`]).
+pub fn run_sweep_timed(
+    torus: &Torus,
+    algos: &[Algo],
+    sizes: &[u64],
+    params: &NetParams,
+    threads: usize,
+) -> (Sweep, SweepTiming) {
+    let t_build = Instant::now();
     let built = build_all(torus, algos);
-    let points = sizes
-        .iter()
-        .map(|&m| {
-            built
-                .iter()
-                .map(|b| best_completion(b, torus, m, params))
-                .collect()
-        })
+    let build_wall_s = t_build.elapsed().as_secs_f64();
+
+    // One task per (size, algo) grid point; the per-point work (simulating
+    // each variant and taking the min) is untouched by parallelism, so the
+    // result is bit-identical for every thread count.
+    let tasks: Vec<(usize, usize)> = (0..sizes.len())
+        .flat_map(|si| (0..built.len()).map(move |ai| (si, ai)))
         .collect();
-    Sweep {
+    let threads_used = par::resolve_threads(threads).min(tasks.len().max(1));
+    let t_sim = Instant::now();
+    let evaluated: Vec<(BestPoint, f64)> = par::par_map(&tasks, threads, |_, &(si, ai)| {
+        let t0 = Instant::now();
+        let bp = best_point(&built[ai], sizes[si], params);
+        (bp, t0.elapsed().as_secs_f64())
+    });
+    let sim_wall_s = t_sim.elapsed().as_secs_f64();
+
+    let mut points: Vec<Vec<BestPoint>> = Vec::with_capacity(sizes.len());
+    let mut point_wall_s: Vec<Vec<f64>> = Vec::with_capacity(sizes.len());
+    let mut it = evaluated.into_iter();
+    for _ in 0..sizes.len() {
+        let mut row = Vec::with_capacity(built.len());
+        let mut wrow = Vec::with_capacity(built.len());
+        for _ in 0..built.len() {
+            let (bp, w) = it.next().expect("grid arity");
+            row.push(bp);
+            wrow.push(w);
+        }
+        points.push(row);
+        point_wall_s.push(wrow);
+    }
+
+    let sweep = Sweep {
         torus: torus.clone(),
         sizes: sizes.to_vec(),
         algos: built.iter().map(|b| b.algo).collect(),
         points,
-    }
+    };
+    let timing = SweepTiming { threads: threads_used, build_wall_s, sim_wall_s, point_wall_s };
+    (sweep, timing)
 }
 
 impl Sweep {
@@ -158,6 +245,64 @@ impl Sweep {
     }
 }
 
+/// Render the machine-readable benchmark record of one timed sweep
+/// (`BENCH_sweep.json`): per-point completion *and* wall-clock, plus the
+/// build/sim split — everything a future PR needs to compare performance
+/// trajectories. Hand-rolled JSON (no serde in the vendored registry).
+pub fn bench_json(sweep: &Sweep, timing: &SweepTiming) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"trivance.bench_sweep.v1\",\n");
+    let dims: Vec<String> = sweep.torus.dims().iter().map(|d| d.to_string()).collect();
+    out.push_str(&format!("  \"topo\": [{}],\n", dims.join(", ")));
+    out.push_str(&format!("  \"nodes\": {},\n", sweep.torus.n()));
+    out.push_str(&format!("  \"threads\": {},\n", timing.threads));
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    out.push_str(&format!("  \"generated_unix_s\": {unix_s},\n"));
+    out.push_str(&format!("  \"build_wall_s\": {:e},\n", timing.build_wall_s));
+    out.push_str(&format!("  \"sim_wall_s\": {:e},\n", timing.sim_wall_s));
+    out.push_str(&format!("  \"total_wall_s\": {:e},\n", timing.total_wall_s()));
+    let sizes: Vec<String> = sweep.sizes.iter().map(|s| s.to_string()).collect();
+    out.push_str(&format!("  \"sizes\": [{}],\n", sizes.join(", ")));
+    let algos: Vec<String> =
+        sweep.algos.iter().map(|a| format!("\"{}\"", a.label())).collect();
+    out.push_str(&format!("  \"algos\": [{}],\n", algos.join(", ")));
+    out.push_str("  \"points\": [\n");
+    let mut first = true;
+    for (si, &m) in sweep.sizes.iter().enumerate() {
+        for (ai, a) in sweep.algos.iter().enumerate() {
+            if !first {
+                out.push_str(",\n");
+            }
+            first = false;
+            let p = &sweep.points[si][ai];
+            out.push_str(&format!(
+                "    {{\"algo\": \"{}\", \"variant\": \"{}\", \"size_bytes\": {}, \
+                 \"completion_s\": {:e}, \"wall_s\": {:e}}}",
+                a.label(),
+                p.variant.label(),
+                m,
+                p.completion_s,
+                timing.point_wall_s[si][ai],
+            ));
+        }
+    }
+    out.push_str("\n  ]\n}\n");
+    out
+}
+
+/// Write [`bench_json`] to `path`.
+pub fn write_bench_json(
+    path: &str,
+    sweep: &Sweep,
+    timing: &SweepTiming,
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_json(sweep, timing))
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -182,5 +327,41 @@ mod tests {
         // at 32 B everything is latency-bound: Trivance/Bruck (2 steps)
         // beat Swing (3 steps)
         assert!(s.rel_to_trivance(Algo::Swing, 0) > 1.0);
+    }
+
+    #[test]
+    fn parallel_sweep_is_bit_identical_to_sequential() {
+        let t = Torus::new(&[3, 3]);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+        let sizes = [32u64, 4096, 256 << 10];
+        let p = NetParams::default();
+        let seq = run_sweep_threads(&t, &algos, &sizes, &p, 1);
+        let par4 = run_sweep_threads(&t, &algos, &sizes, &p, 4);
+        for si in 0..sizes.len() {
+            for ai in 0..seq.algos.len() {
+                assert_eq!(
+                    seq.points[si][ai].completion_s.to_bits(),
+                    par4.points[si][ai].completion_s.to_bits(),
+                    "point ({si}, {ai})"
+                );
+                assert_eq!(seq.points[si][ai].variant, par4.points[si][ai].variant);
+            }
+        }
+    }
+
+    #[test]
+    fn timed_sweep_and_json_shape() {
+        let t = Torus::ring(8);
+        let algos = [Algo::Trivance, Algo::Bruck];
+        let (s, timing) = run_sweep_timed(&t, &algos, &[32, 4096], &NetParams::default(), 2);
+        assert_eq!(timing.point_wall_s.len(), 2);
+        assert_eq!(timing.point_wall_s[0].len(), s.algos.len());
+        assert!(timing.total_wall_s() >= timing.sim_wall_s);
+        let json = bench_json(&s, &timing);
+        assert!(json.contains("\"schema\": \"trivance.bench_sweep.v1\""));
+        assert!(json.contains("\"algo\": \"trivance\""));
+        assert!(json.contains("\"size_bytes\": 4096"));
+        // crude structural sanity: one point object per grid cell
+        assert_eq!(json.matches("\"completion_s\"").count(), 4);
     }
 }

@@ -1,12 +1,15 @@
 //! Table 1 and Table 2 regeneration: closed forms (cost::optimality) side
 //! by side with values measured from the actual schedules.
+//!
+//! Rows are independent (build + analyze per collective), so they are
+//! computed through the parallel map and rendered in paper order.
 
 use crate::algo::{build, Algo, Variant};
-use crate::cost::optimality::{table1_closed_form, table2_closed_form};
 use crate::cost::measure_optimality;
+use crate::cost::optimality::{table1_closed_form, table2_closed_form};
 use crate::schedule::analysis::analyze;
 use crate::topology::Torus;
-use crate::util::fmt;
+use crate::util::{fmt, par};
 
 /// Rows of Table 1 (paper order).
 const TABLE1_ROWS: [(Algo, Variant); 11] = [
@@ -29,12 +32,9 @@ const TABLE1_ROWS: [(Algo, Variant); 11] = [
 /// Table 1: ring optimality factors Λ/Δ/Θ — closed form vs measured.
 /// Power-of-two algorithms are measured on n=64, power-of-three ones on
 /// n=81 (each family's natural size, as in the paper's analysis).
-pub fn table1(quick: bool) -> String {
+pub fn table1(quick: bool, threads: usize) -> String {
     let (n2, n3) = if quick { (16u32, 27u32) } else { (64, 81) };
-    let mut t = fmt::Table::new(vec![
-        "algorithm", "n", "Λ paper", "Λ meas", "Δ paper", "Δ meas", "Θ paper", "Θ meas",
-    ]);
-    for (algo, variant) in TABLE1_ROWS {
+    let rows = par::par_map(&TABLE1_ROWS, threads, |_, &(algo, variant)| {
         let n = match algo {
             Algo::Swing | Algo::RecDoub => n2,
             _ => n3,
@@ -47,7 +47,7 @@ pub fn table1(quick: bool) -> String {
         let torus = Torus::ring(n);
         let built = match build(algo, variant, &torus) {
             Ok(b) => b,
-            Err(_) => continue,
+            Err(_) => return None,
         };
         let stats = analyze(&built.net, &torus);
         let meas = measure_optimality(&stats, &torus);
@@ -60,7 +60,7 @@ pub fn table1(quick: bool) -> String {
         let (lp, dp, tp) = closed
             .map(|(l, d, th)| (format!("{l:.2}"), format!("{d:.2}"), format!("{th:.2}")))
             .unwrap_or_else(|| ("—".into(), "—".into(), "—".into()));
-        t.row(vec![
+        Some(vec![
             format!("{} ({})", label, variant.label()),
             n.to_string(),
             lp,
@@ -69,7 +69,13 @@ pub fn table1(quick: bool) -> String {
             format!("{:.2}", meas.delta),
             tp,
             format!("{:.2}", meas.theta),
-        ]);
+        ])
+    });
+    let mut t = fmt::Table::new(vec![
+        "algorithm", "n", "Λ paper", "Λ meas", "Δ paper", "Δ meas", "Θ paper", "Θ meas",
+    ]);
+    for row in rows.into_iter().flatten() {
+        t.row(row);
     }
     format!(
         "### Table 1 — ring optimality factors (Λ: steps / log₃n, Δ: bytes / 2m, Θ: tx delay / mβ)\n\n{}",
@@ -79,7 +85,7 @@ pub fn table1(quick: bool) -> String {
 
 /// Table 2: transmission-delay optimality on D-dimensional tori — paper
 /// closed form (n → ∞) vs values measured on concrete tori.
-pub fn table2(quick: bool) -> String {
+pub fn table2(quick: bool, threads: usize) -> String {
     // per-D concrete tori: power-of-three for Trivance/Bruck/Bucket,
     // power-of-two for Swing/RecDoub.
     let configs: &[(u32, Vec<u32>, Vec<u32>)] = if quick {
@@ -96,34 +102,45 @@ pub fn table2(quick: bool) -> String {
         "### Table 2 — transmission-delay optimality, D ≥ 2 tori (relative to mβ/D)\n\n",
     );
     for variant in [Variant::Latency, Variant::Bandwidth] {
-        let mut t = fmt::Table::new(vec!["algorithm", "D", "torus", "paper (n→∞)", "measured"]);
-        for &(d, ref p3, ref p2) in configs {
-            for algo in algos {
-                if algo == Algo::Bucket && variant == Variant::Latency {
-                    continue; // no paper entry
-                }
-                let dims = match algo {
-                    Algo::Swing | Algo::RecDoub => p2,
-                    _ => p3,
-                };
-                let torus = Torus::new(dims);
-                let built = match build(algo, variant, &torus) {
-                    Ok(b) => b,
-                    Err(_) => continue,
-                };
-                let stats = analyze(&built.net, &torus);
-                let meas = measure_optimality(&stats, &torus);
-                let closed = table2_closed_form(algo, variant, d, torus.n() as u64)
-                    .map(|v| format!("{v:.2}"))
-                    .unwrap_or_else(|| "—".into());
-                t.row(vec![
-                    format!("{} ({})", algo.label(), variant.label()),
-                    d.to_string(),
-                    format!("{dims:?}"),
-                    closed,
-                    format!("{:.2}", meas.theta),
-                ]);
+        // one task per (config, algo) cell, computed in parallel, rendered
+        // in paper order
+        let tasks: Vec<(u32, Vec<u32>, Algo)> = configs
+            .iter()
+            .flat_map(|&(d, ref p3, ref p2)| {
+                algos.iter().map(move |&algo| {
+                    let dims = match algo {
+                        Algo::Swing | Algo::RecDoub => p2.clone(),
+                        _ => p3.clone(),
+                    };
+                    (d, dims, algo)
+                })
+            })
+            .collect();
+        let rows = par::par_map(&tasks, threads, |_, (d, dims, algo)| {
+            if *algo == Algo::Bucket && variant == Variant::Latency {
+                return None; // no paper entry
             }
+            let torus = Torus::new(dims);
+            let built = match build(*algo, variant, &torus) {
+                Ok(b) => b,
+                Err(_) => return None,
+            };
+            let stats = analyze(&built.net, &torus);
+            let meas = measure_optimality(&stats, &torus);
+            let closed = table2_closed_form(*algo, variant, *d, torus.n() as u64)
+                .map(|v| format!("{v:.2}"))
+                .unwrap_or_else(|| "—".into());
+            Some(vec![
+                format!("{} ({})", algo.label(), variant.label()),
+                d.to_string(),
+                format!("{dims:?}"),
+                closed,
+                format!("{:.2}", meas.theta),
+            ])
+        });
+        let mut t = fmt::Table::new(vec!["algorithm", "D", "torus", "paper (n→∞)", "measured"]);
+        for row in rows.into_iter().flatten() {
+            t.row(row);
         }
         out.push_str(&format!(
             "**{} variants**\n\n{}\n",
@@ -143,7 +160,7 @@ mod tests {
 
     #[test]
     fn table1_quick_renders_all_rows() {
-        let md = table1(true);
+        let md = table1(true, 0);
         for name in [
             "bucket (B)",
             "trivance (B)",
@@ -158,8 +175,14 @@ mod tests {
 
     #[test]
     fn table2_quick_renders() {
-        let md = table2(true);
+        let md = table2(true, 0);
         assert!(md.contains("trivance (B)"));
         assert!(md.contains("measured"));
+    }
+
+    #[test]
+    fn tables_are_thread_count_invariant() {
+        assert_eq!(table1(true, 1), table1(true, 4));
+        assert_eq!(table2(true, 1), table2(true, 4));
     }
 }

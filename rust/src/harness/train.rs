@@ -12,11 +12,10 @@
 use crate::algo::{build, Algo, Variant};
 use crate::cost::NetParams;
 use crate::exec::{run_allreduce, Reducer};
-use crate::runtime::Runtime;
+use crate::runtime::{Error, Result, Runtime};
 use crate::sim::{simulate, SimMode};
 use crate::topology::Torus;
 use crate::util::SplitMix64;
-use anyhow::{Context, Result};
 
 /// Training-run report.
 pub struct TrainReport {
@@ -71,8 +70,7 @@ pub fn run_train_demo(
     // the collective: Trivance latency variant on the worker ring
     let torus = Torus::ring(workers);
     let coll = build(Algo::Trivance, Variant::Latency, &torus)
-        .map_err(|e| anyhow::anyhow!(e))
-        .context("building trivance collective")?;
+        .map_err(|e| Error::msg(format!("building trivance collective: {e}")))?;
     let exec_n = coll.exec.n as usize;
     let nb = coll.exec.n_blocks as usize;
     let block_len = meta.mlp_params.div_ceil(nb);

@@ -22,10 +22,15 @@
 //! * [`cost`] — the congestion-aware Hockney cost model (paper Eq. 1) and the
 //!   optimality factors Λ/Δ/Θ of Tables 1 and 2.
 //! * [`sim`] — the discrete-event network simulator substituting for SST:
-//!   flow-level (max-min fair sharing) and packet-level modes.
+//!   flow-level (incremental max-min fair sharing) and packet-level modes,
+//!   both executing precompiled size-independent [`sim::SimPlan`]s so
+//!   message-size ladders reuse one plan per `(schedule, topology)`.
 //! * [`exec`] — the dataflow executor running schedules on real vectors with
 //!   reductions through the AOT-compiled PJRT kernels ([`runtime`]).
-//! * [`harness`] — regeneration of every table and figure in the paper.
+//! * [`harness`] — regeneration of every table and figure in the paper; the
+//!   sweep grid fans out across threads ([`util::par`]) with deterministic,
+//!   bit-identical results, and `trivance bench-sweep` emits the
+//!   `BENCH_sweep.json` performance record.
 //!
 //! Python/JAX/Pallas exist only on the build path (`python/compile`), which
 //! AOT-lowers the reduction kernels and the demo train step to HLO text in

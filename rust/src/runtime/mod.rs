@@ -5,9 +5,48 @@
 //! `XlaComputation::from_proto` → `client.compile` → `execute`. Executables
 //! are compiled once at load and cached for the life of the process; the
 //! request path never touches Python.
+//!
+//! The real implementation needs the `xla` and `anyhow` crates, which the
+//! offline vendored registry does not ship; it is therefore gated behind the
+//! `pjrt` cargo feature **and** the feature alone is not sufficient:
+//! `--features pjrt` only compiles after `xla` and `anyhow` are added as
+//! path dependencies in `Cargo.toml` (they are intentionally undeclared so
+//! the default build resolves offline). The default build compiles a
+//! dependency-free stub with the identical API whose `load` always fails —
+//! callers (CLI `verify --pjrt`, the train demo, benches) degrade
+//! gracefully, and the rest of the crate (simulator, validator, native
+//! executor) is unaffected.
 
-use anyhow::{bail, Context, Result};
-use std::path::{Path, PathBuf};
+use std::path::PathBuf;
+
+/// Runtime error type: `anyhow::Error` with the `pjrt` feature, a minimal
+/// message wrapper without it. Both support `Error::msg`, `Display`, and
+/// alternate (`{:#}`) formatting.
+#[cfg(feature = "pjrt")]
+pub use anyhow::Error;
+
+#[cfg(not(feature = "pjrt"))]
+#[derive(Debug)]
+pub struct Error(String);
+
+#[cfg(not(feature = "pjrt"))]
+impl Error {
+    pub fn msg(m: impl std::fmt::Display) -> Error {
+        Error(m.to_string())
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl std::fmt::Display for Error {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+impl std::error::Error for Error {}
+
+pub type Result<T> = std::result::Result<T, Error>;
 
 /// Static shape metadata emitted by `python/compile/aot.py` (`meta.txt`).
 #[derive(Clone, Copy, Debug)]
@@ -20,34 +59,29 @@ pub struct Meta {
     pub mlp_params: usize,
 }
 
+// Without the `pjrt` feature the parser is exercised only by tests (the
+// stub never loads artifacts).
+#[cfg_attr(not(feature = "pjrt"), allow(dead_code))]
 impl Meta {
+    fn get(text: &str, key: &str) -> Result<usize> {
+        text.lines()
+            .find_map(|l| l.strip_prefix(&format!("{key}=")))
+            .ok_or_else(|| Error::msg(format!("meta.txt missing key {key}")))?
+            .trim()
+            .parse()
+            .map_err(|e| Error::msg(format!("meta.txt bad value for {key}: {e}")))
+    }
+
     fn parse(text: &str) -> Result<Meta> {
-        let mut get = |key: &str| -> Result<usize> {
-            text.lines()
-                .find_map(|l| l.strip_prefix(&format!("{key}=")))
-                .with_context(|| format!("meta.txt missing key {key}"))?
-                .trim()
-                .parse()
-                .with_context(|| format!("meta.txt bad value for {key}"))
-        };
         Ok(Meta {
-            reduce_lanes: get("reduce_lanes")?,
-            mlp_in: get("mlp_in")?,
-            mlp_hidden: get("mlp_hidden")?,
-            mlp_classes: get("mlp_classes")?,
-            mlp_batch: get("mlp_batch")?,
-            mlp_params: get("mlp_params")?,
+            reduce_lanes: Self::get(text, "reduce_lanes")?,
+            mlp_in: Self::get(text, "mlp_in")?,
+            mlp_hidden: Self::get(text, "mlp_hidden")?,
+            mlp_classes: Self::get(text, "mlp_classes")?,
+            mlp_batch: Self::get(text, "mlp_batch")?,
+            mlp_params: Self::get(text, "mlp_params")?,
         })
     }
-}
-
-/// The loaded runtime: compiled executables + metadata.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    reduce2: xla::PjRtLoadedExecutable,
-    reduce3: xla::PjRtLoadedExecutable,
-    mlp_grad: xla::PjRtLoadedExecutable,
-    pub meta: Meta,
 }
 
 /// Default artifact directory (relative to the repo root / CWD).
@@ -57,107 +91,189 @@ pub fn default_artifact_dir() -> PathBuf {
         .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl Runtime {
-    /// Load and compile all artifacts from `dir`.
-    pub fn load(dir: &Path) -> Result<Runtime> {
-        let meta_text = std::fs::read_to_string(dir.join("meta.txt"))
-            .with_context(|| format!("reading {}/meta.txt (run `make artifacts`)", dir.display()))?;
-        let meta = Meta::parse(&meta_text)?;
-        let client = xla::PjRtClient::cpu()?;
-        let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
-            let path = dir.join(format!("{name}.hlo.txt"));
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().context("non-utf8 artifact path")?,
-            )
-            .with_context(|| format!("parsing {}", path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            Ok(client.compile(&comp)?)
-        };
-        Ok(Runtime {
-            reduce2: compile("reduce2")?,
-            reduce3: compile("reduce3")?,
-            mlp_grad: compile("mlp_grad")?,
-            client,
-            meta,
-        })
+pub use imp::Runtime;
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use super::{default_artifact_dir, Meta, Result};
+    use anyhow::{bail, Context};
+    use std::path::Path;
+
+    /// The loaded runtime: compiled executables + metadata.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        reduce2: xla::PjRtLoadedExecutable,
+        reduce3: xla::PjRtLoadedExecutable,
+        mlp_grad: xla::PjRtLoadedExecutable,
+        pub meta: Meta,
     }
 
-    /// Load from the default directory if artifacts exist.
-    pub fn load_default() -> Result<Runtime> {
-        Self::load(&default_artifact_dir())
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    fn run1(&self, exe: &xla::PjRtLoadedExecutable, args: &[xla::Literal]) -> Result<xla::Literal> {
-        let result = exe.execute::<xla::Literal>(args)?;
-        Ok(result[0][0].to_literal_sync()?)
-    }
-
-    /// One lanes-wide chunked call of an elementwise executable.
-    fn reduce_chunked(&self, exe: &xla::PjRtLoadedExecutable, parts: &[&[f32]]) -> Result<Vec<f32>> {
-        let n = parts[0].len();
-        if parts.iter().any(|p| p.len() != n) {
-            bail!("reduce arity length mismatch");
+    impl Runtime {
+        /// Load and compile all artifacts from `dir`.
+        pub fn load(dir: &Path) -> Result<Runtime> {
+            let meta_text = std::fs::read_to_string(dir.join("meta.txt")).with_context(|| {
+                format!("reading {}/meta.txt (run `make artifacts`)", dir.display())
+            })?;
+            let meta = Meta::parse(&meta_text)?;
+            let client = xla::PjRtClient::cpu()?;
+            let compile = |name: &str| -> Result<xla::PjRtLoadedExecutable> {
+                let path = dir.join(format!("{name}.hlo.txt"));
+                let proto = xla::HloModuleProto::from_text_file(
+                    path.to_str().context("non-utf8 artifact path")?,
+                )
+                .with_context(|| format!("parsing {}", path.display()))?;
+                let comp = xla::XlaComputation::from_proto(&proto);
+                Ok(client.compile(&comp)?)
+            };
+            Ok(Runtime {
+                reduce2: compile("reduce2")?,
+                reduce3: compile("reduce3")?,
+                mlp_grad: compile("mlp_grad")?,
+                client,
+                meta,
+            })
         }
-        let lanes = self.meta.reduce_lanes;
-        let mut out = Vec::with_capacity(n);
-        let mut off = 0;
-        let mut padded = vec![0f32; lanes];
-        while off < n {
-            let take = lanes.min(n - off);
-            let args: Vec<xla::Literal> = parts
-                .iter()
-                .map(|p| {
-                    if take == lanes {
-                        xla::Literal::vec1(&p[off..off + lanes])
-                    } else {
-                        padded[..take].copy_from_slice(&p[off..off + take]);
-                        padded[take..].iter_mut().for_each(|x| *x = 0.0);
-                        xla::Literal::vec1(&padded)
-                    }
-                })
-                .collect();
-            let res = self.run1(exe, &args)?.to_tuple1()?;
-            let v = res.to_vec::<f32>()?;
-            out.extend_from_slice(&v[..take]);
-            off += take;
+
+        /// Load from the default directory if artifacts exist.
+        pub fn load_default() -> Result<Runtime> {
+            Self::load(&default_artifact_dir())
         }
-        Ok(out)
-    }
 
-    /// Elementwise `a + b` through the AOT `reduce2` kernel.
-    pub fn reduce2(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
-        self.reduce_chunked(&self.reduce2, &[a, b])
-    }
-
-    /// Joint reduction `a + b + c` through the AOT `reduce3` kernel.
-    pub fn reduce3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
-        self.reduce_chunked(&self.reduce3, &[a, b, c])
-    }
-
-    /// One worker's (gradient, loss) for a batch, via the AOT train step.
-    /// `x` is row-major `[batch, in]`, `y_onehot` row-major `[batch,
-    /// classes]`.
-    pub fn mlp_grad(&self, params: &[f32], x: &[f32], y_onehot: &[f32]) -> Result<(Vec<f32>, f32)> {
-        let m = &self.meta;
-        if params.len() != m.mlp_params
-            || x.len() != m.mlp_batch * m.mlp_in
-            || y_onehot.len() != m.mlp_batch * m.mlp_classes
-        {
-            bail!("mlp_grad argument shape mismatch");
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        let args = [
-            xla::Literal::vec1(params),
-            xla::Literal::vec1(x).reshape(&[m.mlp_batch as i64, m.mlp_in as i64])?,
-            xla::Literal::vec1(y_onehot).reshape(&[m.mlp_batch as i64, m.mlp_classes as i64])?,
-        ];
-        let (grad, loss) = self.run1(&self.mlp_grad, &args)?.to_tuple2()?;
-        let g = grad.to_vec::<f32>()?;
-        let l = loss.to_vec::<f32>()?;
-        Ok((g, l[0]))
+
+        fn run1(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            args: &[xla::Literal],
+        ) -> Result<xla::Literal> {
+            let result = exe.execute::<xla::Literal>(args)?;
+            Ok(result[0][0].to_literal_sync()?)
+        }
+
+        /// One lanes-wide chunked call of an elementwise executable.
+        fn reduce_chunked(
+            &self,
+            exe: &xla::PjRtLoadedExecutable,
+            parts: &[&[f32]],
+        ) -> Result<Vec<f32>> {
+            let n = parts[0].len();
+            if parts.iter().any(|p| p.len() != n) {
+                bail!("reduce arity length mismatch");
+            }
+            let lanes = self.meta.reduce_lanes;
+            let mut out = Vec::with_capacity(n);
+            let mut off = 0;
+            let mut padded = vec![0f32; lanes];
+            while off < n {
+                let take = lanes.min(n - off);
+                let args: Vec<xla::Literal> = parts
+                    .iter()
+                    .map(|p| {
+                        if take == lanes {
+                            xla::Literal::vec1(&p[off..off + lanes])
+                        } else {
+                            padded[..take].copy_from_slice(&p[off..off + take]);
+                            padded[take..].iter_mut().for_each(|x| *x = 0.0);
+                            xla::Literal::vec1(&padded)
+                        }
+                    })
+                    .collect();
+                let res = self.run1(exe, &args)?.to_tuple1()?;
+                let v = res.to_vec::<f32>()?;
+                out.extend_from_slice(&v[..take]);
+                off += take;
+            }
+            Ok(out)
+        }
+
+        /// Elementwise `a + b` through the AOT `reduce2` kernel.
+        pub fn reduce2(&self, a: &[f32], b: &[f32]) -> Result<Vec<f32>> {
+            self.reduce_chunked(&self.reduce2, &[a, b])
+        }
+
+        /// Joint reduction `a + b + c` through the AOT `reduce3` kernel.
+        pub fn reduce3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Result<Vec<f32>> {
+            self.reduce_chunked(&self.reduce3, &[a, b, c])
+        }
+
+        /// One worker's (gradient, loss) for a batch, via the AOT train step.
+        /// `x` is row-major `[batch, in]`, `y_onehot` row-major `[batch,
+        /// classes]`.
+        pub fn mlp_grad(
+            &self,
+            params: &[f32],
+            x: &[f32],
+            y_onehot: &[f32],
+        ) -> Result<(Vec<f32>, f32)> {
+            let m = &self.meta;
+            if params.len() != m.mlp_params
+                || x.len() != m.mlp_batch * m.mlp_in
+                || y_onehot.len() != m.mlp_batch * m.mlp_classes
+            {
+                bail!("mlp_grad argument shape mismatch");
+            }
+            let args = [
+                xla::Literal::vec1(params),
+                xla::Literal::vec1(x).reshape(&[m.mlp_batch as i64, m.mlp_in as i64])?,
+                xla::Literal::vec1(y_onehot)
+                    .reshape(&[m.mlp_batch as i64, m.mlp_classes as i64])?,
+            ];
+            let (grad, loss) = self.run1(&self.mlp_grad, &args)?.to_tuple2()?;
+            let g = grad.to_vec::<f32>()?;
+            let l = loss.to_vec::<f32>()?;
+            Ok((g, l[0]))
+        }
+    }
+}
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use super::{default_artifact_dir, Error, Meta, Result};
+    use std::path::Path;
+
+    const UNAVAILABLE: &str =
+        "trivance was built without the `pjrt` feature; AOT artifacts cannot be executed \
+         (rebuild with `--features pjrt` and the xla/anyhow path dependencies)";
+
+    /// Dependency-free stand-in for the PJRT runtime. `load` always fails,
+    /// so a value of this type is never actually constructed; the type only
+    /// exists to keep every consumer (CLI, train demo, benches) compiling
+    /// identically with and without the feature.
+    pub struct Runtime {
+        pub meta: Meta,
+    }
+
+    impl Runtime {
+        pub fn load(_dir: &Path) -> Result<Runtime> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        pub fn load_default() -> Result<Runtime> {
+            Self::load(&default_artifact_dir())
+        }
+
+        pub fn platform(&self) -> String {
+            "stub".to_string()
+        }
+
+        pub fn reduce2(&self, _a: &[f32], _b: &[f32]) -> Result<Vec<f32>> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        pub fn reduce3(&self, _a: &[f32], _b: &[f32], _c: &[f32]) -> Result<Vec<f32>> {
+            Err(Error::msg(UNAVAILABLE))
+        }
+
+        pub fn mlp_grad(
+            &self,
+            _params: &[f32],
+            _x: &[f32],
+            _y_onehot: &[f32],
+        ) -> Result<(Vec<f32>, f32)> {
+            Err(Error::msg(UNAVAILABLE))
+        }
     }
 }
 
@@ -167,8 +283,8 @@ mod tests {
 
     fn runtime() -> Option<Runtime> {
         // Tests are skipped when artifacts have not been built (plain
-        // `cargo test` without `make artifacts`); `make test` always builds
-        // them first.
+        // `cargo test` without `make artifacts`, or a build without the
+        // `pjrt` feature); `make test` always builds them first.
         Runtime::load_default().ok()
     }
 
@@ -185,6 +301,19 @@ mod tests {
     #[test]
     fn meta_rejects_missing_key() {
         assert!(Meta::parse("reduce_lanes=4096\n").is_err());
+    }
+
+    #[test]
+    fn stub_or_real_load_reports_cleanly() {
+        // Whatever the build mode, a failed load must surface a displayable
+        // error (the CLI prints it with `{:#}`), never panic.
+        match Runtime::load(std::path::Path::new("/nonexistent-artifact-dir")) {
+            Ok(_) => {}
+            Err(e) => {
+                let msg = format!("{e:#}");
+                assert!(!msg.is_empty());
+            }
+        }
     }
 
     #[test]

@@ -2,15 +2,29 @@
 //!
 //! Each message is a fluid flow over its route. Whenever the set of active
 //! flows changes (injection or drain), rates are recomputed by progressive
-//! water-filling: repeatedly freeze the flows crossing the currently most
-//! contended link at its fair share. Deliveries complete `hops · per_hop`
-//! after the last byte is serialized (cut-through pipelining).
+//! water-filling: repeatedly freeze the flows bottlenecked on the currently
+//! most contended link at its fair share. Deliveries complete `hops ·
+//! per_hop` after the last byte is serialized (cut-through pipelining).
 //!
 //! Events at equal timestamps are batch-processed so the symmetric,
 //! step-synchronized traffic of these collectives triggers only a handful
 //! of rate recomputations per step.
+//!
+//! ## Incremental water-filling
+//!
+//! The rate solver keeps **persistent per-link state** ([`WaterFill`]):
+//! active-flow counts per link are maintained incrementally (±1 per route
+//! hop at injection/drain), and the set of links touched by any active flow
+//! is tracked as a compact list. A recomputation therefore initializes
+//! residual capacity only for the touched links, finds each round's minimum
+//! fair share by scanning links (not flows × hops), and freezes from a
+//! shrinking unfrozen-flow list — instead of re-initializing every link and
+//! rescanning all active flows (frozen ones included) on every round, as
+//! the previous implementation did. Combined with [`SimPlan`] reuse this is
+//! what makes full-registry message-size ladders cheap.
 
-use super::{materialize, SimMsg, SimResult};
+use super::plan::SimPlan;
+use super::SimResult;
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
@@ -18,6 +32,9 @@ use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 const TIME_EPS: f64 = 1e-15;
+/// Relative slack when matching a flow's bottleneck share against the
+/// round's minimum (absorbs float drift in `residual / count`).
+const SHARE_EPS: f64 = 1e-12;
 
 #[derive(Clone, Copy, Debug, PartialEq)]
 enum Event {
@@ -52,143 +69,195 @@ impl PartialOrd for Timed {
 }
 
 struct ActiveFlow {
-    msg_idx: u32,
+    msg: u32,
     remaining: f64,
     rate: f64,
 }
 
+/// Persistent max-min water-filling state (see module docs). Sized once per
+/// plan; all per-recomputation work is proportional to the *touched* links
+/// and the still-unfrozen flows.
+struct WaterFill {
+    /// Active flows crossing each link — incrementally maintained.
+    nactive: Vec<u32>,
+    /// Links with `nactive > 0` (compacted lazily at recompute).
+    touched: Vec<u32>,
+    in_touched: Vec<bool>,
+    /// Scratch, valid for touched links during one recomputation.
+    residual: Vec<f64>,
+    unfrozen: Vec<u32>,
+    /// Scratch: indices into the active-flow list.
+    unfrozen_flows: Vec<u32>,
+    freeze_buf: Vec<u32>,
+}
+
+impl WaterFill {
+    fn new(num_links: usize) -> Self {
+        WaterFill {
+            nactive: vec![0; num_links],
+            touched: Vec::new(),
+            in_touched: vec![false; num_links],
+            residual: vec![0.0; num_links],
+            unfrozen: vec![0; num_links],
+            unfrozen_flows: Vec::new(),
+            freeze_buf: Vec::new(),
+        }
+    }
+
+    fn inject(&mut self, route: &[u32]) {
+        for &l in route {
+            let li = l as usize;
+            if !self.in_touched[li] {
+                self.in_touched[li] = true;
+                self.touched.push(l);
+            }
+            self.nactive[li] += 1;
+        }
+    }
+
+    fn drain(&mut self, route: &[u32]) {
+        for &l in route {
+            self.nactive[l as usize] -= 1;
+        }
+        // links that reached zero are dropped at the next recompute
+    }
+
+    /// Assign max-min fair rates to `active`. Progressive filling: each
+    /// round computes the global minimum fair share over the touched links,
+    /// freezes every flow whose bottleneck equals it (two-phase, so the
+    /// round's selection is order-independent), and subtracts the frozen
+    /// bandwidth from the links crossed.
+    fn recompute(&mut self, active: &mut [ActiveFlow], plan: &SimPlan, cap: f64) {
+        // Compact the touched list and (re)initialize per-link state for
+        // links still carrying active flows.
+        let mut touched = std::mem::take(&mut self.touched);
+        touched.retain(|&l| {
+            let li = l as usize;
+            if self.nactive[li] == 0 {
+                self.in_touched[li] = false;
+                false
+            } else {
+                self.residual[li] = cap;
+                self.unfrozen[li] = self.nactive[li];
+                true
+            }
+        });
+        self.touched = touched;
+
+        self.unfrozen_flows.clear();
+        self.unfrozen_flows.extend(0..active.len() as u32);
+        while !self.unfrozen_flows.is_empty() {
+            // The most contended link's fair share.
+            let mut min_share = f64::INFINITY;
+            for &l in &self.touched {
+                let li = l as usize;
+                if self.unfrozen[li] > 0 {
+                    let share = self.residual[li] / self.unfrozen[li] as f64;
+                    if share < min_share {
+                        min_share = share;
+                    }
+                }
+            }
+            if !min_share.is_finite() {
+                // Remaining flows cross no contended link (possible only
+                // for zero-hop routes, which schedules never produce).
+                for &fi in &self.unfrozen_flows {
+                    active[fi as usize].rate = cap;
+                }
+                self.unfrozen_flows.clear();
+                break;
+            }
+            // Phase 1: select the flows bottlenecked at min_share.
+            self.freeze_buf.clear();
+            let mut i = 0;
+            while i < self.unfrozen_flows.len() {
+                let fi = self.unfrozen_flows[i] as usize;
+                let share = plan
+                    .route(active[fi].msg as usize)
+                    .iter()
+                    .map(|&l| {
+                        let li = l as usize;
+                        self.residual[li] / self.unfrozen[li].max(1) as f64
+                    })
+                    .fold(f64::INFINITY, f64::min);
+                if share <= min_share * (1.0 + SHARE_EPS) {
+                    self.freeze_buf.push(self.unfrozen_flows[i]);
+                    self.unfrozen_flows.swap_remove(i);
+                } else {
+                    i += 1;
+                }
+            }
+            debug_assert!(!self.freeze_buf.is_empty(), "water-filling stalled");
+            if self.freeze_buf.is_empty() {
+                // Float-drift safety net: never loop forever.
+                for &fi in &self.unfrozen_flows {
+                    active[fi as usize].rate = min_share;
+                }
+                self.unfrozen_flows.clear();
+                break;
+            }
+            // Phase 2: apply.
+            for &fi in &self.freeze_buf {
+                let fi = fi as usize;
+                active[fi].rate = min_share;
+                for &l in plan.route(active[fi].msg as usize) {
+                    let li = l as usize;
+                    self.residual[li] -= min_share;
+                    if self.residual[li] < 0.0 {
+                        self.residual[li] = 0.0;
+                    }
+                    self.unfrozen[li] -= 1;
+                }
+            }
+        }
+    }
+}
+
+/// Convenience wrapper: build the plan and simulate. Ladder-style callers
+/// should build one [`SimPlan`] and call [`simulate_flow_plan`] per size.
 pub fn simulate_flow(
     schedule: &Schedule,
     torus: &Torus,
     m_bytes: u64,
     params: &NetParams,
 ) -> SimResult {
-    let steps = materialize(schedule, torus, m_bytes);
-    let n = schedule.n as usize;
-    let nsteps = steps.len();
+    simulate_flow_plan(&SimPlan::build(schedule, torus), m_bytes, params)
+}
+
+/// Flow-level simulation of an `m_bytes` collective against a precompiled
+/// plan.
+pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> SimResult {
+    let n = plan.n();
+    let nsteps = plan.num_steps();
     if nsteps == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
     let cap = params.link_bw_bps / 8.0; // bytes per second per link
     let per_hop = params.per_hop_s();
 
-    // Expected receive counts per (node, step).
-    let mut expected = vec![0u32; n * nsteps];
-    for (k, msgs) in steps.iter().enumerate() {
-        for m in msgs {
-            expected[m.dst as usize * nsteps + k] += 1;
-        }
-    }
     let mut received = vec![0u32; n * nsteps];
-    // Per node: the step it has entered (sends injected); none = about to
+    // Per node: the step it has entered (sends injected); -1 = about to
     // enter step 0.
     let mut entered = vec![-1i64; n];
 
-    let msgs_flat: Vec<&SimMsg> = steps.iter().flatten().collect();
-    // index of messages per (step, src) for injection
-    let mut by_step_src: Vec<Vec<u32>> = vec![Vec::new(); n * nsteps];
-    for (i, m) in msgs_flat.iter().enumerate() {
-        by_step_src[m.src as usize * nsteps + m.step].push(i as u32);
-    }
-
     let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
     let mut seq = 0u64;
-    let mut push = |heap: &mut BinaryHeap<Timed>, t: f64, ev: Event| {
-        seq += 1;
-        heap.push(Timed { t, seq, ev });
-    };
+    macro_rules! push {
+        ($t:expr, $ev:expr) => {{
+            seq += 1;
+            heap.push(Timed { t: $t, seq, ev: $ev });
+        }};
+    }
     // Every node enters step 0 after the initial α.
     for r in 0..n {
-        push(&mut heap, params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+        push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
     }
 
     let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut link_count = vec![0u32; torus.num_links()];
+    let mut wf = WaterFill::new(plan.num_links());
     let mut now = 0.0f64;
     let mut completion = 0.0f64;
     let mut events = 0u64;
-    // scratch buffers for water-filling
-    let mut link_cap = vec![0f64; torus.num_links()];
-
-    // Water-filling rate assignment over `active`.
-    let recompute = |active: &mut Vec<ActiveFlow>,
-                     link_count: &mut [u32],
-                     link_cap: &mut [f64],
-                     frozen: &mut Vec<bool>| {
-        frozen.clear();
-        frozen.resize(active.len(), false);
-        // initialize per-link state for links actually used
-        for f in active.iter() {
-            for &l in &msgs_flat[f.msg_idx as usize].route {
-                link_cap[l as usize] = cap;
-                link_count[l as usize] = 0;
-            }
-        }
-        for f in active.iter() {
-            for &l in &msgs_flat[f.msg_idx as usize].route {
-                link_count[l as usize] += 1;
-            }
-        }
-        let mut left = active.len();
-        while left > 0 {
-            // find the most contended link's fair share
-            let mut min_share = f64::INFINITY;
-            for (i, f) in active.iter().enumerate() {
-                if frozen[i] {
-                    continue;
-                }
-                for &l in &msgs_flat[f.msg_idx as usize].route {
-                    let c = link_count[l as usize];
-                    if c > 0 {
-                        let share = link_cap[l as usize] / c as f64;
-                        if share < min_share {
-                            min_share = share;
-                        }
-                    }
-                }
-            }
-            if !min_share.is_finite() {
-                // remaining flows cross no contended links (shouldn't
-                // happen: every flow has ≥1 hop)
-                for (i, f) in active.iter_mut().enumerate() {
-                    if !frozen[i] {
-                        f.rate = cap;
-                        frozen[i] = true;
-                        left -= 1;
-                    }
-                }
-                break;
-            }
-            // freeze every unfrozen flow whose bottleneck share equals min
-            let mut progressed = false;
-            for i in 0..active.len() {
-                if frozen[i] {
-                    continue;
-                }
-                let route = &msgs_flat[active[i].msg_idx as usize].route;
-                let share = route
-                    .iter()
-                    .map(|&l| link_cap[l as usize] / link_count[l as usize].max(1) as f64)
-                    .fold(f64::INFINITY, f64::min);
-                if share <= min_share * (1.0 + 1e-12) {
-                    active[i].rate = min_share;
-                    frozen[i] = true;
-                    left -= 1;
-                    progressed = true;
-                    for &l in route {
-                        link_cap[l as usize] -= min_share;
-                        link_count[l as usize] -= 1;
-                    }
-                }
-            }
-            debug_assert!(progressed, "water-filling stalled");
-            if !progressed {
-                break;
-            }
-        }
-    };
-
-    let mut frozen_buf: Vec<bool> = Vec::new();
     let mut need_recompute = false;
 
     loop {
@@ -223,9 +292,11 @@ pub fn simulate_flow(
                 || active[i].remaining <= 1e-7
             {
                 let f = active.swap_remove(i);
-                let m = msgs_flat[f.msg_idx as usize];
-                let arrive = now + m.route.len() as f64 * per_hop;
-                push(&mut heap, arrive, Event::Delivery { node: m.dst, step: m.step as u32 });
+                let route = plan.route(f.msg as usize);
+                wf.drain(route);
+                let m = plan.msg(f.msg as usize);
+                let arrive = now + route.len() as f64 * per_hop;
+                push!(arrive, Event::Delivery { node: m.dst, step: m.step });
                 need_recompute = true;
             } else {
                 i += 1;
@@ -242,21 +313,21 @@ pub fn simulate_flow(
             match ev {
                 Event::StepStart { node, step } => {
                     entered[node as usize] = step as i64;
-                    for &mi in &by_step_src[node as usize * nsteps + step as usize] {
-                        let m = msgs_flat[mi as usize];
-                        active.push(ActiveFlow { msg_idx: mi, remaining: m.bytes, rate: 0.0 });
+                    for &mi in plan.injections(node as usize, step as usize) {
+                        active.push(ActiveFlow {
+                            msg: mi,
+                            remaining: plan.bytes(mi as usize, m_bytes),
+                            rate: 0.0,
+                        });
+                        wf.inject(plan.route(mi as usize));
                         need_recompute = true;
                     }
                     // A step with no expected receives chains immediately.
                     let k = step as usize;
-                    if expected[node as usize * nsteps + k] == received[node as usize * nsteps + k]
+                    if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
                         && k + 1 < nsteps
                     {
-                        push(
-                            &mut heap,
-                            now + params.alpha_s,
-                            Event::StepStart { node, step: step + 1 },
-                        );
+                        push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                     }
                 }
                 Event::Delivery { node, step } => {
@@ -264,27 +335,23 @@ pub fn simulate_flow(
                     let k = step as usize;
                     received[node as usize * nsteps + k] += 1;
                     // barrier: all step-k receives done AND node entered k
-                    if received[node as usize * nsteps + k] == expected[node as usize * nsteps + k]
+                    if received[node as usize * nsteps + k] == plan.expected(node as usize, k)
                         && entered[node as usize] == k as i64
                         && k + 1 < nsteps
                     {
-                        push(
-                            &mut heap,
-                            now + params.alpha_s,
-                            Event::StepStart { node, step: step as u32 + 1 },
-                        );
+                        push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                     }
                 }
             }
         }
 
         if need_recompute {
-            recompute(&mut active, &mut link_count, &mut link_cap, &mut frozen_buf);
+            wf.recompute(&mut active, plan, cap);
             need_recompute = false;
         }
     }
 
-    SimResult { completion_s: completion, messages: msgs_flat.len(), events }
+    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
 }
 
 #[cfg(test)]
@@ -367,5 +434,65 @@ mod tests {
         let slow = simulate_flow(&s, &t, m, &NetParams::default().with_bandwidth_gbps(200.0));
         let fast = simulate_flow(&s, &t, m, &NetParams::default().with_bandwidth_gbps(3200.0));
         assert!(fast.completion_s < slow.completion_s / 8.0);
+    }
+
+    #[test]
+    fn plan_reuse_across_sizes_matches_rebuild() {
+        // The plan/execute split must be observationally identical to
+        // per-size materialization — bit-for-bit.
+        let t = Torus::ring(27);
+        let s = latency_allreduce(&trivance(27, Order::Inc));
+        let p = params();
+        let plan = SimPlan::build(&s, &t);
+        for m in [32u64, 4096, 1 << 20, 8 << 20] {
+            let via_plan = simulate_flow_plan(&plan, m, &p);
+            let direct = simulate_flow(&s, &t, m, &p);
+            assert_eq!(
+                via_plan.completion_s.to_bits(),
+                direct.completion_s.to_bits(),
+                "m={m}"
+            );
+            assert_eq!(via_plan.messages, direct.messages);
+            assert_eq!(via_plan.events, direct.events);
+        }
+    }
+
+    #[test]
+    fn incremental_state_survives_asymmetric_load() {
+        // Two flows share a link, a third does not: rates must settle at
+        // cap/2, cap/2, cap — and completion must reflect the shared pair
+        // finishing last.
+        let n = 6u32;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("asym", n, n);
+        let st = s.push_step();
+        for (src, to) in [(0u32, 2u32), (1, 2), (4, 5)] {
+            st.push(
+                src,
+                crate::schedule::Send {
+                    to,
+                    pieces: vec![crate::schedule::Piece {
+                        blocks: crate::blockset::BlockSet::full(n),
+                        contrib: crate::blockset::BlockSet::singleton(src, n),
+                        kind: crate::schedule::Kind::Reduce,
+                    }],
+                    route: crate::schedule::RouteHint::Minimal,
+                },
+            );
+        }
+        let p = params();
+        let m = 1u64 << 20;
+        let r = simulate_flow(&s, &t, m, &p);
+        // 0→2 and 1→2 share link 1→2 (both route forward): the later of the
+        // two is bottlenecked at cap/2 on that link. 0→2 serializes first on
+        // 0→1 at full rate … the completion is dominated by the shared pair:
+        // total bytes through link 1→2 is 2m at cap.
+        let beta = 8.0 / p.link_bw_bps;
+        let expect = p.alpha_s + 2.0 * m as f64 * beta + 2.0 * p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-6,
+            "got {} expect {expect}",
+            r.completion_s
+        );
     }
 }

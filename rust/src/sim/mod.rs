@@ -19,12 +19,20 @@
 //! models MTU-sized packets with store-and-forward FIFO queueing per link —
 //! the ground-truth mode used at small scale to cross-validate the flow
 //! model (see `rust/tests/sim_crosscheck.rs`).
+//!
+//! Both modes execute against a precompiled [`SimPlan`] ([`plan`]): the
+//! schedule→routes structure is flattened once per `(schedule, torus)` and
+//! reused across every message size (and across sweep threads). Use
+//! [`simulate`] for one-off runs, [`simulate_plan`] when sweeping a ladder.
 
 pub mod flow;
 pub mod packet;
+pub mod plan;
+
+pub use plan::SimPlan;
 
 use crate::cost::NetParams;
-use crate::schedule::{RouteHint, Schedule};
+use crate::schedule::Schedule;
 use crate::topology::Torus;
 
 /// Simulation fidelity mode.
@@ -47,45 +55,10 @@ pub struct SimResult {
     pub events: u64,
 }
 
-/// A materialized message ready for simulation.
-#[derive(Clone, Debug)]
-pub(crate) struct SimMsg {
-    pub src: u32,
-    pub dst: u32,
-    pub step: usize,
-    pub bytes: f64,
-    /// Directed link indices along the route.
-    pub route: Vec<u32>,
-}
-
-/// Flatten a schedule into per-step message lists with resolved routes.
-pub(crate) fn materialize(s: &Schedule, t: &Torus, m_bytes: u64) -> Vec<Vec<SimMsg>> {
-    assert_eq!(s.n, t.n(), "schedule/topology mismatch");
-    let mut out: Vec<Vec<SimMsg>> = Vec::with_capacity(s.steps.len());
-    for (k, step) in s.steps.iter().enumerate() {
-        let mut msgs = Vec::new();
-        for (src, sends) in step.sends.iter().enumerate() {
-            for snd in sends {
-                let bytes = snd.rel_bytes(s.n_blocks) * m_bytes as f64;
-                if bytes <= 0.0 {
-                    continue;
-                }
-                let route = match snd.route {
-                    RouteHint::Minimal => t.route(src as u32, snd.to),
-                    RouteHint::Directed { dim, dir } => {
-                        t.route_directed(src as u32, snd.to, dim as usize, dir)
-                    }
-                };
-                let route: Vec<u32> = route.into_iter().map(|l| t.link_index(l) as u32).collect();
-                msgs.push(SimMsg { src: src as u32, dst: snd.to, step: k, bytes, route });
-            }
-        }
-        out.push(msgs);
-    }
-    out
-}
-
 /// Simulate the collective: `m_bytes` AllReduce of `schedule` on `torus`.
+///
+/// Builds a fresh [`SimPlan`] per call — when simulating the same schedule
+/// at several sizes, build the plan once and call [`simulate_plan`].
 pub fn simulate(
     schedule: &Schedule,
     torus: &Torus,
@@ -93,9 +66,19 @@ pub fn simulate(
     params: &NetParams,
     mode: SimMode,
 ) -> SimResult {
+    simulate_plan(&SimPlan::build(schedule, torus), m_bytes, params, mode)
+}
+
+/// Simulate an `m_bytes` collective against a precompiled plan.
+pub fn simulate_plan(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+) -> SimResult {
     match mode {
-        SimMode::Flow => flow::simulate_flow(schedule, torus, m_bytes, params),
-        SimMode::Packet { mtu } => packet::simulate_packet(schedule, torus, m_bytes, params, mtu),
+        SimMode::Flow => flow::simulate_flow_plan(plan, m_bytes, params),
+        SimMode::Packet { mtu } => packet::simulate_packet_plan(plan, m_bytes, params, mtu),
     }
 }
 
@@ -106,20 +89,17 @@ mod tests {
     use crate::algo::rings::{trivance, Order};
 
     #[test]
-    fn materialize_routes_and_bytes() {
+    fn modes_dispatch_against_one_plan() {
         let t = Torus::ring(9);
         let s = latency_allreduce(&trivance(9, Order::Inc));
-        let steps = materialize(&s, &t, 900);
-        assert_eq!(steps.len(), 2);
-        // step 0: distance 1, full vector
-        for m in &steps[0] {
-            assert_eq!(m.route.len(), 1);
-            assert!((m.bytes - 900.0).abs() < 1e-9);
-        }
-        // step 1: distance 3
-        for m in &steps[1] {
-            assert_eq!(m.route.len(), 3);
-        }
-        assert_eq!(steps[0].len(), 18);
+        let plan = SimPlan::build(&s, &t);
+        let p = NetParams::default();
+        let f = simulate_plan(&plan, 4096, &p, SimMode::Flow);
+        let k = simulate_plan(&plan, 4096, &p, SimMode::Packet { mtu: 4096 });
+        assert_eq!(f.messages, k.messages);
+        assert!(f.completion_s > 0.0 && k.completion_s > 0.0);
+        // and the schedule-level entry point agrees exactly
+        let f2 = simulate(&s, &t, 4096, &p, SimMode::Flow);
+        assert_eq!(f.completion_s.to_bits(), f2.completion_s.to_bits());
     }
 }

@@ -3,9 +3,12 @@
 //!
 //! The ground-truth mode: no fluid approximation, every packet queues
 //! individually. Quadratic-ish in message size, so it is used at small
-//! scale to cross-validate [`super::flow`] (the sweep workhorse).
+//! scale to cross-validate [`super::flow`] (the sweep workhorse). Consumes
+//! the same precompiled [`SimPlan`] as the flow mode, so a cross-validation
+//! ladder shares one plan across both modes and every size.
 
-use super::{materialize, SimResult};
+use super::plan::SimPlan;
+use super::SimResult;
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
@@ -49,6 +52,8 @@ impl PartialOrd for Timed {
     }
 }
 
+/// Convenience wrapper: build the plan and simulate. Ladder-style callers
+/// should build one [`SimPlan`] and call [`simulate_packet_plan`] per size.
 pub fn simulate_packet(
     schedule: &Schedule,
     torus: &Torus,
@@ -56,32 +61,34 @@ pub fn simulate_packet(
     params: &NetParams,
     mtu: u32,
 ) -> SimResult {
+    simulate_packet_plan(&SimPlan::build(schedule, torus), m_bytes, params, mtu)
+}
+
+/// Packet-level simulation of an `m_bytes` collective against a precompiled
+/// plan.
+pub fn simulate_packet_plan(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+) -> SimResult {
     assert!(mtu > 0);
-    let steps = materialize(schedule, torus, m_bytes);
-    let n = schedule.n as usize;
-    let nsteps = steps.len();
+    let n = plan.n();
+    let nsteps = plan.num_steps();
     if nsteps == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
     let cap = params.link_bw_bps / 8.0; // bytes/s
     let per_hop = params.per_hop_s();
 
-    let msgs: Vec<&super::SimMsg> = steps.iter().flatten().collect();
-    let mut by_step_src: Vec<Vec<u32>> = vec![Vec::new(); n * nsteps];
-    let mut expected = vec![0u32; n * nsteps];
-    for (i, m) in msgs.iter().enumerate() {
-        by_step_src[m.src as usize * nsteps + m.step].push(i as u32);
-        expected[m.dst as usize * nsteps + m.step] += 1;
-    }
     let mut received = vec![0u32; n * nsteps];
     let mut entered = vec![-1i64; n];
     // remaining packets per message
-    let mut pkts_left: Vec<u32> = msgs
-        .iter()
-        .map(|m| ((m.bytes / mtu as f64).ceil() as u32).max(1))
+    let mut pkts_left: Vec<u32> = (0..plan.num_msgs())
+        .map(|i| ((plan.bytes(i, m_bytes) / mtu as f64).ceil() as u32).max(1))
         .collect();
 
-    let mut free_at = vec![0f64; torus.num_links()];
+    let mut free_at = vec![0f64; plan.num_links()];
     let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
     let mut seq = 0u64;
     macro_rules! push {
@@ -102,12 +109,11 @@ pub fn simulate_packet(
         match ev {
             Event::StepStart { node, step } => {
                 entered[node as usize] = step as i64;
-                for &mi in &by_step_src[node as usize * nsteps + step as usize] {
+                for &mi in plan.injections(node as usize, step as usize) {
                     // split the message into packets, all ready now; FIFO
                     // on the first link serializes them.
-                    let m = msgs[mi as usize];
                     let full = pkts_left[mi as usize];
-                    let mut left = m.bytes;
+                    let mut left = plan.bytes(mi as usize, m_bytes);
                     for _ in 0..full {
                         let sz = left.min(mtu as f64);
                         left -= sz.min(left);
@@ -115,35 +121,36 @@ pub fn simulate_packet(
                     }
                 }
                 let k = step as usize;
-                if expected[node as usize * nsteps + k] == received[node as usize * nsteps + k]
+                if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
                     && k + 1 < nsteps
                 {
                     push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                 }
             }
             Event::Packet { msg, hop, bytes } => {
-                let m = msgs[msg as usize];
-                if hop as usize == m.route.len() {
+                let route = plan.route(msg as usize);
+                if hop as usize == route.len() {
                     // packet arrived at destination
                     pkts_left[msg as usize] -= 1;
                     if pkts_left[msg as usize] == 0 {
                         completion = completion.max(now);
-                        let k = m.step;
+                        let m = plan.msg(msg as usize);
+                        let k = m.step as usize;
                         received[m.dst as usize * nsteps + k] += 1;
                         if received[m.dst as usize * nsteps + k]
-                            == expected[m.dst as usize * nsteps + k]
+                            == plan.expected(m.dst as usize, k)
                             && entered[m.dst as usize] == k as i64
                             && k + 1 < nsteps
                         {
                             push!(
                                 now + params.alpha_s,
-                                Event::StepStart { node: m.dst, step: k as u32 + 1 }
+                                Event::StepStart { node: m.dst, step: m.step + 1 }
                             );
                         }
                     }
                 } else {
                     // serialize on the next link (FIFO), then propagate
-                    let l = m.route[hop as usize] as usize;
+                    let l = route[hop as usize] as usize;
                     let start = now.max(free_at[l]);
                     let end = start + bytes as f64 / cap;
                     free_at[l] = end;
@@ -153,7 +160,7 @@ pub fn simulate_packet(
         }
     }
 
-    SimResult { completion_s: completion, messages: msgs.len(), events }
+    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
 }
 
 #[cfg(test)]
@@ -242,6 +249,20 @@ mod tests {
                 fr.completion_s,
                 pr.completion_s
             );
+        }
+    }
+
+    #[test]
+    fn plan_reuse_matches_rebuild() {
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = NetParams::default();
+        let plan = SimPlan::build(&s, &t);
+        for m in [4096u64, 64 * 1024] {
+            let a = simulate_packet_plan(&plan, m, &p, 4096);
+            let b = simulate_packet(&s, &t, m, &p, 4096);
+            assert_eq!(a.completion_s.to_bits(), b.completion_s.to_bits(), "m={m}");
+            assert_eq!(a.events, b.events);
         }
     }
 }

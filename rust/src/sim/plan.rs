@@ -1,0 +1,294 @@
+//! Precompiled simulation plans: the plan/execute split of the simulator.
+//!
+//! Simulating one `(schedule, topology)` pair across a message-size ladder
+//! used to re-materialize the identical structure — per-message routes,
+//! per-(step, source) injection lists, expected-receive counts — once per
+//! size, even though none of it depends on the message size. A [`SimPlan`]
+//! does that work **once**: [`SimPlan::build`] flattens the schedule into
+//! immutable, cache-friendly arrays, and both simulator modes
+//! ([`crate::sim::flow`], [`crate::sim::packet`]) execute against
+//! `&SimPlan + (m_bytes, NetParams)`. The paper's sweep tables (one point
+//! per algorithm × variant × topology × size) therefore pay schedule
+//! flattening and route resolution once per ladder instead of once per
+//! point, and plans are `Sync`, so the sweep harness fans points out across
+//! threads against shared plans.
+//!
+//! Layout notes:
+//!
+//! * Messages with zero relative payload are dropped at build time (they
+//!   carry no bytes at any size — same as the old per-size materializer).
+//! * Routes are stored as one flattened array of dense link indices with
+//!   per-message `(offset, len)` — no per-message `Vec`, no pointer chasing.
+//! * `injections(node, step)` and `msgs_on_link(link)` are CSR adjacency
+//!   lists; the latter exists for link-centric consumers (congestion
+//!   accounting, future incremental schedulers).
+
+use crate::cost::NetParams;
+use crate::schedule::{RouteHint, Schedule};
+use crate::topology::Torus;
+
+/// One flattened message: everything size-independent about it.
+#[derive(Clone, Copy, Debug)]
+pub struct PlanMsg {
+    pub src: u32,
+    pub dst: u32,
+    pub step: u32,
+    /// Payload in units of the full vector size `m` (multiply by `m_bytes`).
+    pub rel_bytes: f64,
+    route_off: u32,
+    route_len: u32,
+}
+
+/// An immutable, size-independent simulation plan for one
+/// `(schedule, torus)` pair. See the module docs.
+#[derive(Clone, Debug)]
+pub struct SimPlan {
+    n: usize,
+    nsteps: usize,
+    num_links: usize,
+    msgs: Vec<PlanMsg>,
+    /// Flattened routes (dense directed-link indices), indexed by each
+    /// message's `(route_off, route_len)`.
+    route_links: Vec<u32>,
+    /// CSR offsets/ids: messages injected by `(node, step)`.
+    inject_off: Vec<u32>,
+    inject_ids: Vec<u32>,
+    /// Expected receive count per `(node, step)`.
+    expected: Vec<u32>,
+    /// CSR offsets/ids: messages whose route crosses each link.
+    link_off: Vec<u32>,
+    link_ids: Vec<u32>,
+}
+
+impl SimPlan {
+    /// Flatten `schedule` routed on `torus` into a plan. Cost is one route
+    /// resolution per message; the result is reused for every message size
+    /// (and across threads).
+    pub fn build(schedule: &Schedule, torus: &Torus) -> SimPlan {
+        assert_eq!(schedule.n, torus.n(), "schedule/topology mismatch");
+        let n = schedule.n as usize;
+        let nsteps = schedule.steps.len();
+        let num_links = torus.num_links();
+
+        let mut msgs: Vec<PlanMsg> = Vec::new();
+        let mut route_links: Vec<u32> = Vec::new();
+        for (k, step) in schedule.steps.iter().enumerate() {
+            for (src, sends) in step.sends.iter().enumerate() {
+                for snd in sends {
+                    let rel = snd.rel_bytes(schedule.n_blocks);
+                    if rel <= 0.0 {
+                        continue;
+                    }
+                    let route = match snd.route {
+                        RouteHint::Minimal => torus.route(src as u32, snd.to),
+                        RouteHint::Directed { dim, dir } => {
+                            torus.route_directed(src as u32, snd.to, dim as usize, dir)
+                        }
+                    };
+                    let route_off = route_links.len() as u32;
+                    route_links.extend(route.into_iter().map(|l| torus.link_index(l) as u32));
+                    let route_len = route_links.len() as u32 - route_off;
+                    msgs.push(PlanMsg {
+                        src: src as u32,
+                        dst: snd.to,
+                        step: k as u32,
+                        rel_bytes: rel,
+                        route_off,
+                        route_len,
+                    });
+                }
+            }
+        }
+
+        // CSR: (node, step) -> injected message ids, plus expected receives.
+        let mut inject_counts = vec![0u32; n * nsteps];
+        let mut expected = vec![0u32; n * nsteps];
+        for m in &msgs {
+            inject_counts[m.src as usize * nsteps + m.step as usize] += 1;
+            expected[m.dst as usize * nsteps + m.step as usize] += 1;
+        }
+        let (inject_off, mut cursor) = prefix_sum(&inject_counts);
+        let mut inject_ids = vec![0u32; msgs.len()];
+        for (i, m) in msgs.iter().enumerate() {
+            let slot = m.src as usize * nsteps + m.step as usize;
+            inject_ids[cursor[slot] as usize] = i as u32;
+            cursor[slot] += 1;
+        }
+
+        // CSR: link -> message ids crossing it.
+        let mut link_counts = vec![0u32; num_links];
+        for &l in &route_links {
+            link_counts[l as usize] += 1;
+        }
+        let (link_off, mut lcursor) = prefix_sum(&link_counts);
+        let mut link_ids = vec![0u32; route_links.len()];
+        for (i, m) in msgs.iter().enumerate() {
+            let (off, len) = (m.route_off as usize, m.route_len as usize);
+            for &l in &route_links[off..off + len] {
+                link_ids[lcursor[l as usize] as usize] = i as u32;
+                lcursor[l as usize] += 1;
+            }
+        }
+
+        SimPlan {
+            n,
+            nsteps,
+            num_links,
+            msgs,
+            route_links,
+            inject_off,
+            inject_ids,
+            expected,
+            link_off,
+            link_ids,
+        }
+    }
+
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    pub fn num_steps(&self) -> usize {
+        self.nsteps
+    }
+
+    pub fn num_links(&self) -> usize {
+        self.num_links
+    }
+
+    pub fn num_msgs(&self) -> usize {
+        self.msgs.len()
+    }
+
+    /// Total route length summed over all messages (scratch sizing).
+    pub fn total_hops(&self) -> usize {
+        self.route_links.len()
+    }
+
+    pub fn msg(&self, i: usize) -> &PlanMsg {
+        &self.msgs[i]
+    }
+
+    /// The dense directed-link indices of message `i`'s route.
+    pub fn route(&self, i: usize) -> &[u32] {
+        let m = &self.msgs[i];
+        &self.route_links[m.route_off as usize..(m.route_off + m.route_len) as usize]
+    }
+
+    /// Absolute payload of message `i` for an `m_bytes` collective.
+    pub fn bytes(&self, i: usize, m_bytes: u64) -> f64 {
+        self.msgs[i].rel_bytes * m_bytes as f64
+    }
+
+    /// Message ids node `node` injects when it enters `step`.
+    pub fn injections(&self, node: usize, step: usize) -> &[u32] {
+        let slot = node * self.nsteps + step;
+        &self.inject_ids[self.inject_off[slot] as usize..self.inject_off[slot + 1] as usize]
+    }
+
+    /// Number of messages `node` must receive in `step` before advancing.
+    pub fn expected(&self, node: usize, step: usize) -> u32 {
+        self.expected[node * self.nsteps + step]
+    }
+
+    /// Message ids whose route crosses dense link `link`.
+    pub fn msgs_on_link(&self, link: usize) -> &[u32] {
+        &self.link_ids[self.link_off[link] as usize..self.link_off[link + 1] as usize]
+    }
+
+    /// Serialization lower bound (seconds) of the whole collective at
+    /// `m_bytes` under `params`: the most-loaded link's total payload at
+    /// line rate. A cheap sanity anchor for both simulator modes.
+    pub fn bottleneck_serialization_s(&self, m_bytes: u64, params: &NetParams) -> f64 {
+        let mut load = vec![0f64; self.num_links];
+        for (i, m) in self.msgs.iter().enumerate() {
+            let b = m.rel_bytes * m_bytes as f64;
+            for &l in self.route(i) {
+                load[l as usize] += b;
+            }
+        }
+        load.into_iter().fold(0f64, f64::max) * params.beta_per_byte()
+    }
+}
+
+/// Exclusive prefix sum; returns (offsets with trailing total, a working
+/// copy of the offsets to use as fill cursors).
+fn prefix_sum(counts: &[u32]) -> (Vec<u32>, Vec<u32>) {
+    let mut off = Vec::with_capacity(counts.len() + 1);
+    let mut acc = 0u32;
+    off.push(0);
+    for &c in counts {
+        acc += c;
+        off.push(acc);
+    }
+    let cursor = off[..counts.len()].to_vec();
+    (off, cursor)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::agpattern::latency_allreduce;
+    use crate::algo::rings::{trivance, Order};
+
+    #[test]
+    fn plan_flattens_trivance_ring9() {
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = SimPlan::build(&s, &t);
+        assert_eq!(p.num_steps(), 2);
+        assert_eq!(p.n(), 9);
+        // step 0: 18 messages at distance 1, full vector
+        let step0: Vec<usize> = (0..p.num_msgs()).filter(|&i| p.msg(i).step == 0).collect();
+        assert_eq!(step0.len(), 18);
+        for &i in &step0 {
+            assert_eq!(p.route(i).len(), 1);
+            assert!((p.bytes(i, 900) - 900.0).abs() < 1e-9);
+        }
+        // step 1: distance 3
+        for i in 0..p.num_msgs() {
+            if p.msg(i).step == 1 {
+                assert_eq!(p.route(i).len(), 3);
+            }
+        }
+    }
+
+    #[test]
+    fn injection_and_expected_counts_are_consistent() {
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = SimPlan::build(&s, &t);
+        let mut total = 0usize;
+        for node in 0..p.n() {
+            for step in 0..p.num_steps() {
+                for &mi in p.injections(node, step) {
+                    let m = p.msg(mi as usize);
+                    assert_eq!(m.src as usize, node);
+                    assert_eq!(m.step as usize, step);
+                    total += 1;
+                }
+            }
+        }
+        assert_eq!(total, p.num_msgs());
+        let expected_total: u32 =
+            (0..p.n()).flat_map(|r| (0..p.num_steps()).map(move |k| (r, k)))
+                .map(|(r, k)| p.expected(r, k))
+                .sum();
+        assert_eq!(expected_total as usize, p.num_msgs());
+    }
+
+    #[test]
+    fn link_adjacency_covers_every_hop() {
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = SimPlan::build(&s, &t);
+        let mut hops = 0usize;
+        for l in 0..p.num_links() {
+            for &mi in p.msgs_on_link(l) {
+                assert!(p.route(mi as usize).contains(&(l as u32)));
+                hops += 1;
+            }
+        }
+        assert_eq!(hops, p.total_hops());
+    }
+}

@@ -1,13 +1,15 @@
 //! Small self-contained utilities.
 //!
-//! The offline vendored registry ships neither `rand`, `criterion`, nor
-//! `proptest`, so this module provides the minimal equivalents used across
-//! the crate: a SplitMix64 PRNG, a tiny benchmark harness, a randomized
-//! property-test driver, and table/byte formatting helpers.
+//! The offline vendored registry ships neither `rand`, `criterion`,
+//! `proptest`, nor `rayon`, so this module provides the minimal equivalents
+//! used across the crate: a SplitMix64 PRNG, a tiny benchmark harness, a
+//! randomized property-test driver, a scoped-thread parallel map, and
+//! table/byte formatting helpers.
 
 pub mod rng;
 pub mod bench;
 pub mod fmt;
+pub mod par;
 pub mod prop;
 
 pub use rng::SplitMix64;

@@ -1,0 +1,115 @@
+//! Minimal data-parallel map (rayon is not in the offline vendored
+//! registry; this is the dependency-free substitute the sweep engine runs
+//! on).
+//!
+//! [`par_map`] evaluates `f` over a slice on a scoped thread pool with an
+//! atomic work-stealing cursor (dynamic load balancing — sweep points vary
+//! by orders of magnitude in cost between 32 B and 128 MiB). Results are
+//! returned **in input order** regardless of scheduling, so parallel runs
+//! are deterministic and bit-identical to `threads == 1`: each point's
+//! computation is untouched, only the iteration is distributed. A worker
+//! panic propagates to the caller after the scope joins.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// Hardware parallelism (1 when unavailable).
+pub fn available_threads() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a user-facing thread-count knob: `0` = auto (all cores).
+pub fn resolve_threads(threads: usize) -> usize {
+    if threads == 0 {
+        available_threads()
+    } else {
+        threads
+    }
+}
+
+/// Map `f` over `items` on up to `threads` scoped threads (`0` = auto).
+/// `f` receives `(index, &item)`; the result vector is in input order.
+pub fn par_map<T, R, F>(items: &[T], threads: usize, f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    let threads = resolve_threads(threads).min(items.len().max(1));
+    if threads <= 1 || items.len() <= 1 {
+        return items.iter().enumerate().map(|(i, x)| f(i, x)).collect();
+    }
+    let cursor = AtomicUsize::new(0);
+    let chunks: Vec<Vec<(usize, R)>> = std::thread::scope(|scope| {
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                scope.spawn(|| {
+                    let mut out: Vec<(usize, R)> = Vec::new();
+                    loop {
+                        let i = cursor.fetch_add(1, Ordering::Relaxed);
+                        if i >= items.len() {
+                            break;
+                        }
+                        out.push((i, f(i, &items[i])));
+                    }
+                    out
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("par_map worker panicked"))
+            .collect()
+    });
+    let mut slots: Vec<Option<R>> = Vec::with_capacity(items.len());
+    slots.resize_with(items.len(), || None);
+    for (i, r) in chunks.into_iter().flatten() {
+        debug_assert!(slots[i].is_none());
+        slots[i] = Some(r);
+    }
+    slots
+        .into_iter()
+        .map(|s| s.expect("par_map missed an index"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn maps_in_order() {
+        let xs: Vec<u64> = (0..100).collect();
+        let seq = par_map(&xs, 1, |i, &x| x * 2 + i as u64);
+        let par = par_map(&xs, 4, |i, &x| x * 2 + i as u64);
+        assert_eq!(seq, par);
+        assert_eq!(seq[10], 30);
+    }
+
+    #[test]
+    fn empty_and_single() {
+        let none: Vec<u32> = Vec::new();
+        assert!(par_map(&none, 8, |_, &x| x).is_empty());
+        assert_eq!(par_map(&[7u32], 8, |_, &x| x + 1), vec![8]);
+    }
+
+    #[test]
+    fn auto_threads_resolves() {
+        assert!(resolve_threads(0) >= 1);
+        assert_eq!(resolve_threads(3), 3);
+    }
+
+    #[test]
+    fn uneven_work_is_balanced() {
+        // heavier items at the front; the atomic cursor must still cover all
+        let xs: Vec<u64> = (0..64).rev().collect();
+        let out = par_map(&xs, 8, |_, &x| {
+            let mut acc = 0u64;
+            for i in 0..(x * 100) {
+                acc = acc.wrapping_add(i);
+            }
+            std::hint::black_box(acc);
+            x
+        });
+        assert_eq!(out, xs);
+    }
+}

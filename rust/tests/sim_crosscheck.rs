@@ -1,0 +1,165 @@
+//! Flow-vs-packet simulator cross-validation, and the exact invariants of
+//! the SimPlan plan/execute split and the parallel sweep engine.
+//!
+//! The flow mode (max-min fluid) is the sweep workhorse; the packet mode is
+//! the ground truth. The property tests here pin their agreement for every
+//! registry algorithm on small topologies, so a rewrite of the flow model's
+//! water-filling (incremental or otherwise) cannot silently diverge. The
+//! plan-reuse and parallelism invariants are *exact* (bit-identical): those
+//! layers only restructure the computation, never the arithmetic.
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::cost::NetParams;
+use trivance::harness::sweep::{run_sweep_threads, size_ladder};
+use trivance::sim::{simulate_plan, SimMode, SimPlan};
+use trivance::topology::Torus;
+use trivance::util::{prop, SplitMix64};
+
+/// Tolerance of the fluid approximation against packet ground truth.
+///
+/// The seed pinned 10% for Trivance/Bruck/Bucket on ring(9); padded
+/// configurations (Swing/RecDoub on power-of-three sizes) and multi-dim
+/// tori have slightly lumpier traffic, so the registry-wide bound is
+/// looser.
+const REL_TOL: f64 = 0.25;
+
+fn crosscheck(torus: &Torus, algo: Algo, variant: Variant, m: u64, mtu: u32) -> Result<(), String> {
+    let Ok(b) = build(algo, variant, torus) else {
+        return Ok(()); // unsupported configuration: nothing to check
+    };
+    let p = NetParams::default();
+    let plan = SimPlan::build(&b.net, torus);
+    let f = simulate_plan(&plan, m, &p, SimMode::Flow);
+    let k = simulate_plan(&plan, m, &p, SimMode::Packet { mtu });
+    if k.completion_s <= 0.0 {
+        return Err(format!("{algo:?} {variant:?}: packet completion {}", k.completion_s));
+    }
+    let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
+    if rel > REL_TOL {
+        return Err(format!(
+            "{algo:?} {variant:?} m={m}: flow {} vs packet {} (rel {rel:.3})",
+            f.completion_s, k.completion_s
+        ));
+    }
+    Ok(())
+}
+
+#[test]
+fn property_flow_tracks_packet_for_every_registry_algorithm() {
+    // random (topology, algorithm, variant, size) draws across the full
+    // registry; small tori keep the packet mode tractable
+    let topologies = [vec![8u32], vec![9], vec![3, 3]];
+    let sizes = [4096u64, 32 << 10, 256 << 10];
+    prop::check(
+        0x51AC,
+        60,
+        |rng: &mut SplitMix64| {
+            let dims = rng.choose(&topologies).clone();
+            let algo = *rng.choose(&Algo::ALL);
+            let variant = *rng.choose(&Variant::ALL);
+            let m = *rng.choose(&sizes);
+            (dims, algo, variant, m)
+        },
+        |(dims, algo, variant, m)| {
+            crosscheck(&Torus::new(dims), *algo, *variant, *m, 4096)
+        },
+    );
+}
+
+#[test]
+fn exhaustive_ring9_registry_within_tight_tolerance() {
+    // the seed-era matrix (non-padded algorithms, ring 9) stays within the
+    // original 10% bound — the incremental water-filling must not widen it
+    let t = Torus::ring(9);
+    for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+        for variant in Variant::ALL {
+            let b = build(algo, variant, &t).unwrap();
+            let p = NetParams::default();
+            let plan = SimPlan::build(&b.net, &t);
+            for m in [4096u64, 256 << 10] {
+                let f = simulate_plan(&plan, m, &p, SimMode::Flow);
+                let k = simulate_plan(&plan, m, &p, SimMode::Packet { mtu: 4096 });
+                let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
+                assert!(
+                    rel < 0.10,
+                    "{algo:?} {variant:?} m={m}: flow {} packet {} rel {rel:.3}",
+                    f.completion_s,
+                    k.completion_s
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_reuse_is_bit_identical_across_a_ladder() {
+    // one plan per (algo, variant), every size of the ladder: identical to
+    // building the plan per point (what the pre-SimPlan code effectively
+    // did) — the plan carries no size-dependent state
+    let t = Torus::new(&[3, 3]);
+    let p = NetParams::default();
+    for algo in [Algo::Trivance, Algo::Bucket] {
+        for variant in Variant::ALL {
+            let b = build(algo, variant, &t).unwrap();
+            let shared = SimPlan::build(&b.net, &t);
+            for m in size_ladder(1 << 20) {
+                let reused = simulate_plan(&shared, m, &p, SimMode::Flow);
+                let fresh =
+                    simulate_plan(&SimPlan::build(&b.net, &t), m, &p, SimMode::Flow);
+                assert_eq!(
+                    reused.completion_s.to_bits(),
+                    fresh.completion_s.to_bits(),
+                    "{algo:?} {variant:?} m={m}"
+                );
+                assert_eq!(reused.events, fresh.events);
+            }
+        }
+    }
+}
+
+#[test]
+fn parallel_sweep_bit_identical_for_any_thread_count() {
+    let t = Torus::new(&[3, 3, 3]);
+    let sizes = size_ladder(256 << 10);
+    let p = NetParams::default();
+    let baseline = run_sweep_threads(&t, &Algo::ALL, &sizes, &p, 1);
+    for threads in [2usize, 4, 0] {
+        let sw = run_sweep_threads(&t, &Algo::ALL, &sizes, &p, threads);
+        assert_eq!(sw.algos, baseline.algos);
+        for si in 0..sizes.len() {
+            for ai in 0..baseline.algos.len() {
+                assert_eq!(
+                    sw.points[si][ai].completion_s.to_bits(),
+                    baseline.points[si][ai].completion_s.to_bits(),
+                    "threads={threads} point ({si}, {ai})"
+                );
+                assert_eq!(sw.points[si][ai].variant, baseline.points[si][ai].variant);
+            }
+        }
+    }
+}
+
+#[test]
+fn flow_never_beats_the_serialization_lower_bound() {
+    // completion can never undercut the bottleneck link's serialization
+    // time — a one-sided sanity check that survives any fluid-model rewrite
+    let p = NetParams::default();
+    for dims in [vec![9u32], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t).unwrap();
+                let plan = SimPlan::build(&b.net, &t);
+                for m in [4096u64, 1 << 20] {
+                    let f = simulate_plan(&plan, m, &p, SimMode::Flow);
+                    let lower = plan.bottleneck_serialization_s(m, &p);
+                    assert!(
+                        f.completion_s >= lower * (1.0 - 1e-9),
+                        "{algo:?} {variant:?} {dims:?} m={m}: {} < bound {lower}",
+                        f.completion_s
+                    );
+                }
+            }
+        }
+    }
+}
