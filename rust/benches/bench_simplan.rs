@@ -1,6 +1,7 @@
 //! SimPlan benchmarks: plan compilation, plan reuse across a message-size
 //! ladder vs per-size rebuild, the incremental water-filling under heavy
-//! congestion, and the parallel sweep engine vs one thread.
+//! congestion, the batched packet engine vs the per-packet reference, the
+//! plan cache, and the parallel sweep engine vs one thread.
 //!
 //! (criterion is not in the vendored registry; this drives the same
 //! hand-rolled harness as the other bench targets.)
@@ -8,7 +9,8 @@
 use trivance::algo::{build, Algo, Variant};
 use trivance::cost::NetParams;
 use trivance::harness::sweep::{run_sweep_threads, size_ladder};
-use trivance::sim::{flow::simulate_flow_plan, simulate, SimMode, SimPlan};
+use trivance::sim::packet::{reference, simulate_packet_plan};
+use trivance::sim::{flow::simulate_flow_plan, simulate, PlanCache, PlanKey, SimMode, SimPlan};
 use trivance::topology::Torus;
 use trivance::util::bench::Bencher;
 use trivance::util::par;
@@ -24,6 +26,20 @@ fn main() {
     let t88 = Torus::new(&[8, 8]);
     let bu88 = build(Algo::Bucket, Variant::Bandwidth, &t88).unwrap();
     b.run("plan-build/8x8/bucket-B", || SimPlan::build(&bu88.net, &t88).num_msgs());
+
+    println!("\n== plan cache: hit vs fresh build ==");
+    let cache = PlanCache::new();
+    cache.get_or_build(PlanKey::new(Algo::Bucket, Variant::Bandwidth, t88.dims()), || {
+        SimPlan::build(&bu88.net, &t88)
+    });
+    b.run("plan-cache/8x8/bucket-B/hit", || {
+        cache
+            .get_or_build(PlanKey::new(Algo::Bucket, Variant::Bandwidth, t88.dims()), || {
+                SimPlan::build(&bu88.net, &t88)
+            })
+            .num_msgs()
+    });
+    b.run("plan-cache/8x8/bucket-B/fresh", || SimPlan::build(&bu88.net, &t88).num_msgs());
 
     println!("\n== ladder: one plan reused vs per-size rebuild ==");
     let ladder = size_ladder(8 << 20);
@@ -53,6 +69,37 @@ fn main() {
     b.run("flow/ring27/trivance-B/8MiB", || {
         simulate_flow_plan(&plan27b, 8 << 20, &p).events
     });
+
+    println!("\n== packet engine: batched vs per-packet reference (ring27, 1 MiB) ==");
+    let tv27l = build(Algo::Trivance, Variant::Latency, &t27).unwrap();
+    let plan27l = SimPlan::build(&tv27l.net, &t27);
+    let batched = b.run("packet/ring27/trivance-L/1MiB/batched", || {
+        simulate_packet_plan(&plan27l, 1 << 20, &p, 4096).events
+    });
+    let refr = b.run("packet/ring27/trivance-L/1MiB/reference", || {
+        reference::simulate_packet_reference_plan(&plan27l, 1 << 20, &p, 4096).events
+    });
+    let be = simulate_packet_plan(&plan27l, 1 << 20, &p, 4096);
+    let re = reference::simulate_packet_reference_plan(&plan27l, 1 << 20, &p, 4096);
+    // The acceptance metric is simulated packet-work per wall second: both
+    // engines simulate the same collective, so throughput is the per-packet
+    // reference event count divided by each engine's wall time.
+    let batched_throughput = re.events as f64 / batched.median_s;
+    let reference_throughput = re.events as f64 / refr.median_s;
+    println!(
+        "batched: {} events in {:.3} ms | reference: {} events in {:.3} ms | \
+         packet-work throughput {:.2e} vs {:.2e} pkt-ev/s ({:.1}x), \
+         heap-event reduction {:.0}x, completion drift {:.2e}",
+        be.events,
+        batched.median_s * 1e3,
+        re.events,
+        refr.median_s * 1e3,
+        batched_throughput,
+        reference_throughput,
+        batched_throughput / reference_throughput,
+        re.events as f64 / be.events as f64,
+        (be.completion_s - re.completion_s).abs() / re.completion_s,
+    );
 
     println!("\n== sweep engine: 3x3x3 full registry, 32 B – 4 MiB ==");
     let t333 = Torus::new(&[3, 3, 3]);

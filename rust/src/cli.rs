@@ -109,10 +109,12 @@ trivance — latency-optimal AllReduce by shortcutting multiport networks
 
 USAGE:
   trivance figures  [--id ID]... [--all] [--quick] [--out DIR] [--threads N]
+                    [--no-plan-cache]
   trivance simulate --topo 8x8 [--algo A] [--variant L|B] [--size 1MiB]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
   trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
+                    [--no-plan-cache]
   trivance validate --topo 27 [--algo A]
   trivance verify   --topo 9  [--algo A] [--block-len 8] [--pjrt]
   trivance pattern  --n 9 [--algo trivance|bruck]
@@ -120,7 +122,9 @@ USAGE:
   trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
 
 --threads 0 (default) uses every core; sweep results are identical for any
-thread count.
+thread count. Simulation plans are shared process-wide via a cache keyed by
+(algo, variant, dims); --no-plan-cache forces fresh builds (results are
+bit-identical either way).
 
 IDs: table1 table2 fig6a fig6b fig7a fig7b fig8 fig9 fig10
 Algorithms: trivance bruck bruck-unidir swing recdoub bucket
@@ -168,9 +172,28 @@ fn parse_threads(args: &Args) -> Result<usize, String> {
         .map(|t| t.unwrap_or(0))
 }
 
+/// Apply the `--no-plan-cache` knob to the process-wide plan cache.
+fn apply_plan_cache_flag(args: &Args) {
+    if args.has("no-plan-cache") {
+        crate::sim::PlanCache::global().set_enabled(false);
+    }
+}
+
+fn plan_cache_stats() -> String {
+    let c = crate::sim::PlanCache::global();
+    format!(
+        "plan cache: {} hits / {} misses, {} plans cached{}",
+        c.hits(),
+        c.misses(),
+        c.len(),
+        if c.is_enabled() { "" } else { " (disabled)" }
+    )
+}
+
 fn figures(args: &Args) -> Result<(), String> {
     let quick = args.has("quick");
     let threads = parse_threads(args)?;
+    apply_plan_cache_flag(args);
     let ids: Vec<String> = if args.has("all") || args.getall("id").is_empty() {
         crate::harness::ALL_IDS.iter().map(|s| s.to_string()).collect()
     } else {
@@ -210,6 +233,7 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
         .transpose()?
         .unwrap_or(128 << 20);
     let threads = parse_threads(args)?;
+    apply_plan_cache_flag(args);
     let params = net_params(args)?;
     let out = args.get("out").unwrap_or("BENCH_sweep.json");
     let sizes = size_ladder(max);
@@ -231,6 +255,7 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
         "build {:.3}s + sim {:.3}s = {:.3}s wall ({} threads); wrote {out}",
         timing.build_wall_s, timing.sim_wall_s, wall, timing.threads
     );
+    println!("{}", plan_cache_stats());
     Ok(())
 }
 

@@ -62,8 +62,20 @@ pub fn table2_closed_form(algo: Algo, variant: Variant, d: u32, n: u64) -> Optio
 /// Appendix B exact transmission-delay sums for the ring (finite n), used
 /// to check the measured values at small sizes where the asymptotics of
 /// Table 1 are loose.
+///
+/// The sums telescope only for exact power sizes, so non-power `n` returns
+/// `None` for the affected rows instead of silently rounding the exponent
+/// (the old `log2().round()` accepted n = 81 in the power-of-two rows and
+/// produced a value for a schedule that does not exist).
 pub fn appendix_b_ring_theta(algo: Algo, variant: Variant, n: u64) -> Option<f64> {
-    let s2 = (n as f64).log2().round() as u32;
+    let pow2 = crate::util::is_power_of(2, n);
+    let pow3 = crate::util::is_power_of(3, n);
+    match algo {
+        Algo::RecDoub | Algo::Swing if !pow2 => return None,
+        Algo::Trivance | Algo::Bruck if !pow3 => return None,
+        _ => {}
+    }
+    let s2 = crate::util::floor_log(2, n);
     let s3 = crate::util::ceil_log(3, n);
     Some(match (algo, variant) {
         // Σ_{k} 2^k = n − 1
@@ -147,6 +159,26 @@ mod tests {
         assert!((f(Algo::Bruck) - 3.0 * root).abs() < 1e-9);
         assert!((f(Algo::RecDoub) - 4.0 * root).abs() < 1e-9);
         assert!((f(Algo::Swing) - 4.0 / 3.0 * root).abs() < 1e-9);
+    }
+
+    #[test]
+    fn appendix_b_rejects_non_power_sizes() {
+        // n = 81 = 3⁴: power-of-three rows resolve, power-of-two rows do
+        // not (the old rounding accepted 81 ≈ 2^6.34 and returned garbage).
+        assert!(appendix_b_ring_theta(Algo::Trivance, Variant::Latency, 81).is_some());
+        assert!(appendix_b_ring_theta(Algo::Bruck, Variant::Bandwidth, 81).is_some());
+        assert!(appendix_b_ring_theta(Algo::RecDoub, Variant::Latency, 81).is_none());
+        assert!(appendix_b_ring_theta(Algo::Swing, Variant::Bandwidth, 81).is_none());
+        // n = 80: neither family resolves; Bucket's finite-n formula is
+        // exact for every n and stays available.
+        assert!(appendix_b_ring_theta(Algo::Trivance, Variant::Latency, 80).is_none());
+        assert!(appendix_b_ring_theta(Algo::Bruck, Variant::Latency, 80).is_none());
+        assert!(appendix_b_ring_theta(Algo::RecDoub, Variant::Bandwidth, 80).is_none());
+        assert!(appendix_b_ring_theta(Algo::Swing, Variant::Latency, 80).is_none());
+        assert!(appendix_b_ring_theta(Algo::Bucket, Variant::Bandwidth, 80).is_some());
+        // exact powers of two still resolve with the exact exponent
+        let v = appendix_b_ring_theta(Algo::RecDoub, Variant::Latency, 64).unwrap();
+        assert!((v - 63.0).abs() < 1e-12); // 2^6 − 1
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //!
 //! Every figure takes a `threads` knob (`0` = all cores) that is forwarded
 //! to the parallel sweep engine; results are identical for any value.
+//! Sweeps share simulation plans through the process-wide
+//! [`crate::sim::PlanCache`], so `fig8`'s six per-bandwidth sweeps compile
+//! each `(algo, variant)` plan once, and a `figures --all` run reuses plans
+//! across figures that revisit a topology (results are bit-identical with
+//! the cache disabled via `--no-plan-cache`).
 
 use super::sweep::{run_sweep_threads, size_ladder};
 use crate::algo::Algo;

@@ -6,16 +6,21 @@
 //! The grid of `(algo, variant, size)` points is fanned out across threads
 //! with [`crate::util::par::par_map`]; every point reuses the precompiled
 //! plans, and results are reassembled in input order, so a parallel sweep is
-//! bit-identical to the sequential one. [`run_sweep_timed`] additionally
+//! bit-identical to the sequential one. Plans are obtained through the
+//! process-wide [`PlanCache`] (keyed `(algo, variant, dims)`), so repeated
+//! sweeps over one topology — figure reruns, `fig8`'s per-bandwidth grid —
+//! skip schedule flattening entirely; cached and uncached sweeps are
+//! bit-identical. [`run_sweep_timed`] additionally
 //! records per-point wall-clock, and [`write_bench_json`] emits the
 //! machine-readable `BENCH_sweep.json` used to track the performance
 //! trajectory across PRs (`trivance bench-sweep`).
 
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
-use crate::sim::{simulate_plan, SimMode, SimPlan};
+use crate::sim::{simulate_plan, PlanCache, PlanKey, SimMode, SimPlan};
 use crate::topology::Torus;
 use crate::util::{fmt, par};
+use std::sync::Arc;
 use std::time::Instant;
 
 /// Message-size ladder 32 B … `max` (×4 per step, the paper's x-axis).
@@ -30,18 +35,32 @@ pub fn size_ladder(max: u64) -> Vec<u64> {
 }
 
 /// One algorithm's built variants on a topology, with their precompiled
-/// simulation plans (index-aligned with `variants`).
+/// simulation plans (index-aligned with `variants`). Plans are `Arc`s so
+/// they can come from the process-wide [`PlanCache`] and be shared across
+/// sweeps and threads.
 pub struct BuiltAlgo {
     pub algo: Algo,
     pub variants: Vec<BuiltCollective>,
-    pub plans: Vec<SimPlan>,
+    pub plans: Vec<Arc<SimPlan>>,
 }
 
 /// Build every requested algorithm (both variants) on `torus` and
 /// precompile their network schedules into simulation plans, skipping
 /// unsupported configurations silently (matching the paper's per-figure
-/// algorithm sets).
+/// algorithm sets). Plans go through the global [`PlanCache`], so repeated
+/// sweeps over the same `(algo, variant, dims)` (figure reruns, `fig8`'s
+/// per-bandwidth sweeps, CLI invocations in one process) share one plan.
 pub fn build_all(torus: &Torus, algos: &[Algo]) -> Vec<BuiltAlgo> {
+    build_all_with(torus, algos, Some(PlanCache::global()))
+}
+
+/// [`build_all`] with every plan built fresh — used to assert that cached
+/// and uncached sweeps are bit-identical.
+pub fn build_all_uncached(torus: &Torus, algos: &[Algo]) -> Vec<BuiltAlgo> {
+    build_all_with(torus, algos, None)
+}
+
+fn build_all_with(torus: &Torus, algos: &[Algo], cache: Option<&PlanCache>) -> Vec<BuiltAlgo> {
     algos
         .iter()
         .filter_map(|&algo| {
@@ -52,7 +71,19 @@ pub fn build_all(torus: &Torus, algos: &[Algo]) -> Vec<BuiltAlgo> {
             if variants.is_empty() {
                 None
             } else {
-                let plans = variants.iter().map(|b| SimPlan::build(&b.net, torus)).collect();
+                let plans = variants
+                    .iter()
+                    .map(|b| {
+                        let fresh = || SimPlan::build(&b.net, torus);
+                        match cache {
+                            Some(c) => c.get_or_build(
+                                PlanKey::new(algo, b.variant, torus.dims()),
+                                fresh,
+                            ),
+                            None => Arc::new(fresh()),
+                        }
+                    })
+                    .collect();
                 Some(BuiltAlgo { algo, variants, plans })
             }
         })
@@ -65,6 +96,18 @@ pub struct BestPoint {
     pub variant: Variant,
 }
 
+/// NaN-safe ordering key for completion times: a NaN completion (a future
+/// model bug) must lose every comparison deterministically instead of
+/// panicking mid-sweep — and `total_cmp` alone ranks a *negative* NaN
+/// below every finite time, which would crown the broken variant.
+fn completion_key(v: f64) -> f64 {
+    if v.is_nan() {
+        f64::INFINITY
+    } else {
+        v
+    }
+}
+
 fn best_point(built: &BuiltAlgo, m_bytes: u64, params: &NetParams) -> BestPoint {
     built
         .variants
@@ -74,7 +117,7 @@ fn best_point(built: &BuiltAlgo, m_bytes: u64, params: &NetParams) -> BestPoint 
             completion_s: simulate_plan(plan, m_bytes, params, SimMode::Flow).completion_s,
             variant: b.variant,
         })
-        .min_by(|a, b| a.completion_s.partial_cmp(&b.completion_s).unwrap())
+        .min_by(|a, b| completion_key(a.completion_s).total_cmp(&completion_key(b.completion_s)))
         .unwrap()
 }
 
@@ -228,7 +271,9 @@ impl Sweep {
                 let i = row
                     .iter()
                     .enumerate()
-                    .min_by(|a, b| a.1.completion_s.partial_cmp(&b.1.completion_s).unwrap())
+                    .min_by(|a, b| {
+                        completion_key(a.1.completion_s).total_cmp(&completion_key(b.1.completion_s))
+                    })
                     .unwrap()
                     .0;
                 self.algos[i]

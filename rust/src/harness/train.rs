@@ -38,7 +38,11 @@ fn spiral(n_per_class: usize, classes: usize, rng: &mut SplitMix64) -> (Vec<[f32
     let mut ys = Vec::new();
     for c in 0..classes {
         for i in 0..n_per_class {
-            let t = i as f32 / (n_per_class - 1).max(1) as f32;
+            // hardening: the `.max(1)` cannot guard `n_per_class - 1`
+            // itself (an n_per_class of 0 skips the loop today, but any
+            // refactor hoisting the divisor out would underflow) — saturate
+            // so the expression is safe wherever it is evaluated
+            let t = i as f32 / n_per_class.saturating_sub(1).max(1) as f32;
             let r = t * 2.0 + 0.05;
             let ang = t * 4.0 + c as f32 * 2.0 * std::f32::consts::PI / classes as f32;
             let noise = |rng: &mut SplitMix64| (rng.f32() - 0.5) * 0.1;
@@ -143,7 +147,12 @@ pub fn run_train_demo(
             let pred = logits
                 .iter()
                 .enumerate()
-                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                // NaN-safe argmax: a NaN logit (diverged run) must never
+                // win — total_cmp alone ranks NaN above every number
+                .max_by(|a, b| {
+                    let key = |v: f32| if v.is_nan() { f32::NEG_INFINITY } else { v };
+                    key(*a.1).total_cmp(&key(*b.1))
+                })
                 .unwrap()
                 .0 as u32;
             correct += usize::from(pred == y);
@@ -181,6 +190,33 @@ fn mlp_forward(params: &[f32], x: &[f32; 2], meta: &crate::runtime::Meta) -> Vec
         }
     }
     out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn spiral_degenerate_shards_do_not_underflow() {
+        let mut rng = SplitMix64::new(7);
+        let (xs, ys) = spiral(0, 3, &mut rng);
+        assert!(xs.is_empty() && ys.is_empty());
+        // one point per class: divisor saturates to 1, values stay finite
+        let (xs, ys) = spiral(1, 3, &mut rng);
+        assert_eq!(xs.len(), 3);
+        assert_eq!(ys, vec![0, 1, 2]);
+        assert!(xs.iter().all(|p| p[0].is_finite() && p[1].is_finite()));
+    }
+
+    #[test]
+    fn spiral_shard_is_class_balanced() {
+        let mut rng = SplitMix64::new(7);
+        let (xs, ys) = spiral(80, 3, &mut rng);
+        assert_eq!(xs.len(), 240);
+        for c in 0..3u32 {
+            assert_eq!(ys.iter().filter(|&&y| y == c).count(), 80);
+        }
+    }
 }
 
 impl TrainReport {

@@ -22,9 +22,12 @@
 //! * [`cost`] — the congestion-aware Hockney cost model (paper Eq. 1) and the
 //!   optimality factors Λ/Δ/Θ of Tables 1 and 2.
 //! * [`sim`] — the discrete-event network simulator substituting for SST:
-//!   flow-level (incremental max-min fair sharing) and packet-level modes,
-//!   both executing precompiled size-independent [`sim::SimPlan`]s so
-//!   message-size ladders reuse one plan per `(schedule, topology)`.
+//!   flow-level (incremental max-min fair sharing with a closed-form
+//!   symmetric-step fast path) and packet-level modes (per-link FIFO batch
+//!   scheduling, `O(messages × hops)` heap traffic), both executing
+//!   precompiled size-independent [`sim::SimPlan`]s so message-size ladders
+//!   reuse one plan per `(schedule, topology)`; registry plans are further
+//!   shared process-wide through [`sim::PlanCache`].
 //! * [`exec`] — the dataflow executor running schedules on real vectors with
 //!   reductions through the AOT-compiled PJRT kernels ([`runtime`]).
 //! * [`harness`] — regeneration of every table and figure in the paper; the

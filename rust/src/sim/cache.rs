@@ -1,0 +1,185 @@
+//! Process-wide [`SimPlan`] cache keyed by `(algo, variant, dims)`.
+//!
+//! A `SimPlan` is a pure function of the built schedule and the topology,
+//! and the registry build is deterministic in `(algo, variant, dims)` — so
+//! repeated CLI invocations, figure regenerations, and sweep ladders that
+//! revisit the same configuration (e.g. `fig8`'s six per-bandwidth sweeps
+//! over one torus, or `figures --all` visiting ring-8 for both `table1` and
+//! `fig6a`) can share one immutable plan instead of re-flattening the
+//! schedule per sweep. Plans are handed out as `Arc<SimPlan>` (`SimPlan` is
+//! `Sync`), so cached plans are shared across sweep threads exactly like
+//! locally built ones.
+//!
+//! Caching is an identity-preserving optimization only: a hit returns a
+//! plan **bit-identical** to a fresh build (`sim_crosscheck.rs` asserts
+//! flow results match with the cache on and off). The CLI exposes
+//! `--no-plan-cache` (via [`PlanCache::set_enabled`]) to force fresh
+//! builds, e.g. when benchmarking plan compilation itself.
+
+use super::SimPlan;
+use crate::algo::{Algo, Variant};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+
+/// Cache key: the deterministic inputs of a registry-built plan.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct PlanKey {
+    pub algo: Algo,
+    pub variant: Variant,
+    pub dims: Vec<u32>,
+}
+
+impl PlanKey {
+    pub fn new(algo: Algo, variant: Variant, dims: &[u32]) -> Self {
+        PlanKey { algo, variant, dims: dims.to_vec() }
+    }
+}
+
+/// A concurrent plan cache (see module docs).
+#[derive(Default)]
+pub struct PlanCache {
+    map: Mutex<HashMap<PlanKey, Arc<SimPlan>>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    disabled: AtomicBool,
+}
+
+impl PlanCache {
+    pub fn new() -> Self {
+        PlanCache::default()
+    }
+
+    /// The process-wide cache shared by the sweep harness and the CLI.
+    pub fn global() -> &'static PlanCache {
+        static GLOBAL: OnceLock<PlanCache> = OnceLock::new();
+        GLOBAL.get_or_init(PlanCache::new)
+    }
+
+    /// Return the cached plan for `key`, building and inserting it on a
+    /// miss. The build runs *outside* the cache lock so unrelated-key
+    /// builds never serialize behind it (and a panicking build cannot
+    /// poison the cache); if two threads race on one key, the first insert
+    /// wins and every caller shares that plan (builds are deterministic,
+    /// so the discarded duplicate is identical).
+    pub fn get_or_build(&self, key: PlanKey, build: impl FnOnce() -> SimPlan) -> Arc<SimPlan> {
+        if self.disabled.load(Ordering::Relaxed) {
+            self.misses.fetch_add(1, Ordering::Relaxed);
+            return Arc::new(build());
+        }
+        if let Some(plan) = self.lock().get(&key) {
+            self.hits.fetch_add(1, Ordering::Relaxed);
+            return Arc::clone(plan);
+        }
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let plan = Arc::new(build());
+        Arc::clone(self.lock().entry(key).or_insert(plan))
+    }
+
+    /// Lock the map, shrugging off poisoning: the map only ever holds
+    /// fully-built plans (inserts happen after `build()` returns), so a
+    /// panic elsewhere cannot leave it in a broken state.
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<PlanKey, Arc<SimPlan>>> {
+        self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Disable (or re-enable) caching; disabled lookups always build fresh.
+    pub fn set_enabled(&self, enabled: bool) {
+        self.disabled.store(!enabled, Ordering::Relaxed);
+    }
+
+    pub fn is_enabled(&self) -> bool {
+        !self.disabled.load(Ordering::Relaxed)
+    }
+
+    pub fn hits(&self) -> u64 {
+        self.hits.load(Ordering::Relaxed)
+    }
+
+    pub fn misses(&self) -> u64 {
+        self.misses.load(Ordering::Relaxed)
+    }
+
+    /// Number of distinct plans currently cached.
+    pub fn len(&self) -> usize {
+        self.lock().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Drop every cached plan (hit/miss counters are kept).
+    pub fn clear(&self) {
+        self.lock().clear();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::build;
+    use crate::topology::Torus;
+
+    fn plan_for(algo: Algo, variant: Variant, dims: &[u32]) -> SimPlan {
+        let t = Torus::new(dims);
+        let b = build(algo, variant, &t).unwrap();
+        SimPlan::build(&b.net, &t)
+    }
+
+    #[test]
+    fn hit_returns_the_same_arc() {
+        let cache = PlanCache::new();
+        let key = PlanKey::new(Algo::Trivance, Variant::Latency, &[9]);
+        let a = cache.get_or_build(key.clone(), || plan_for(Algo::Trivance, Variant::Latency, &[9]));
+        let b = cache.get_or_build(key, || panic!("must not rebuild on a hit"));
+        assert!(Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.hits(), 1);
+        assert_eq!(cache.misses(), 1);
+        assert_eq!(cache.len(), 1);
+    }
+
+    #[test]
+    fn distinct_keys_do_not_collide() {
+        let cache = PlanCache::new();
+        let a = cache.get_or_build(PlanKey::new(Algo::Trivance, Variant::Latency, &[9]), || {
+            plan_for(Algo::Trivance, Variant::Latency, &[9])
+        });
+        let b = cache.get_or_build(PlanKey::new(Algo::Trivance, Variant::Bandwidth, &[9]), || {
+            plan_for(Algo::Trivance, Variant::Bandwidth, &[9])
+        });
+        let c = cache.get_or_build(PlanKey::new(Algo::Trivance, Variant::Latency, &[3, 3]), || {
+            plan_for(Algo::Trivance, Variant::Latency, &[3, 3])
+        });
+        assert_eq!(cache.len(), 3);
+        assert_ne!(a.num_msgs(), 0);
+        assert_ne!(b.num_steps(), a.num_steps()); // B has RS+AG phases
+        assert_eq!(c.n(), 9);
+        assert!(!Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn disabled_cache_builds_fresh() {
+        let cache = PlanCache::new();
+        cache.set_enabled(false);
+        let key = PlanKey::new(Algo::Bucket, Variant::Bandwidth, &[8]);
+        let a = cache.get_or_build(key.clone(), || plan_for(Algo::Bucket, Variant::Bandwidth, &[8]));
+        let b = cache.get_or_build(key, || plan_for(Algo::Bucket, Variant::Bandwidth, &[8]));
+        assert!(!Arc::ptr_eq(&a, &b));
+        assert_eq!(cache.len(), 0);
+        assert_eq!(cache.misses(), 2);
+        cache.set_enabled(true);
+        assert!(cache.is_enabled());
+    }
+
+    #[test]
+    fn clear_drops_plans() {
+        let cache = PlanCache::new();
+        cache.get_or_build(PlanKey::new(Algo::Bruck, Variant::Latency, &[9]), || {
+            plan_for(Algo::Bruck, Variant::Latency, &[9])
+        });
+        assert_eq!(cache.len(), 1);
+        cache.clear();
+        assert!(cache.is_empty());
+    }
+}

@@ -22,13 +22,23 @@
 //! rescanning all active flows (frozen ones included) on every round, as
 //! the previous implementation did. Combined with [`SimPlan`] reuse this is
 //! what makes full-registry message-size ladders cheap.
+//!
+//! ## Symmetric-step fast path
+//!
+//! The steady state of these step-synchronized collectives is uniform
+//! congestion: every contended link carries the same number of flows. The
+//! recomputation detects that case up front and assigns the closed-form
+//! equal split `cap / c` to every active flow — no water-filling rounds, no
+//! per-flow route scans — falling back to progressive filling whenever link
+//! loads diverge (padded configurations, drain transients). The fast path
+//! computes the identical f64 division the generic first round would, so
+//! flow results are bit-identical either way.
 
 use super::plan::SimPlan;
-use super::SimResult;
+use super::{SimResult, Timed};
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
-use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 const TIME_EPS: f64 = 1e-15;
@@ -42,30 +52,6 @@ enum Event {
     StepStart { node: u32, step: u32 },
     /// A message has fully arrived at its destination.
     Delivery { node: u32, step: u32 },
-}
-
-#[derive(Clone, Copy, PartialEq)]
-struct Timed {
-    t: f64,
-    seq: u64,
-    ev: Event,
-}
-
-impl Eq for Timed {}
-impl Ord for Timed {
-    fn cmp(&self, other: &Self) -> Ordering {
-        // min-heap by time (reverse), tie-broken by insertion order
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-impl PartialOrd for Timed {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
 }
 
 struct ActiveFlow {
@@ -89,10 +75,15 @@ struct WaterFill {
     /// Scratch: indices into the active-flow list.
     unfrozen_flows: Vec<u32>,
     freeze_buf: Vec<u32>,
+    /// Whether the symmetric-step fast path may fire: every message in the
+    /// plan crosses at least one link (a zero-hop flow is never link-bound
+    /// and must take the generic infinite-share branch).
+    symmetric_ok: bool,
 }
 
 impl WaterFill {
-    fn new(num_links: usize) -> Self {
+    fn new(plan: &SimPlan) -> Self {
+        let num_links = plan.num_links();
         WaterFill {
             nactive: vec![0; num_links],
             touched: Vec::new(),
@@ -101,6 +92,7 @@ impl WaterFill {
             unfrozen: vec![0; num_links],
             unfrozen_flows: Vec::new(),
             freeze_buf: Vec::new(),
+            symmetric_ok: !plan.has_zero_hop_routes(),
         }
     }
 
@@ -143,6 +135,28 @@ impl WaterFill {
             }
         });
         self.touched = touched;
+
+        // Symmetric-step fast path: the steady state of these collectives
+        // is *uniform* congestion — every contended link carries the same
+        // number of flows. Max-min fairness then degenerates to an equal
+        // split (every flow is bottlenecked at `cap / c` on every link it
+        // crosses), so rates are assigned in closed form without any
+        // water-filling rounds. The assigned rate is the same f64 division
+        // the generic first round would compute, so results stay
+        // bit-identical (see symmetric_fast_path_is_bit_identical_to_
+        // water_filling below).
+        if self.symmetric_ok {
+            if let Some(&l0) = self.touched.first() {
+                let c = self.nactive[l0 as usize];
+                if self.touched.iter().all(|&l| self.nactive[l as usize] == c) {
+                    let share = cap / c as f64;
+                    for f in active.iter_mut() {
+                        f.rate = share;
+                    }
+                    return;
+                }
+            }
+        }
 
         self.unfrozen_flows.clear();
         self.unfrozen_flows.extend(0..active.len() as u32);
@@ -240,7 +254,7 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
     // enter step 0.
     let mut entered = vec![-1i64; n];
 
-    let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
+    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
     let mut seq = 0u64;
     macro_rules! push {
         ($t:expr, $ev:expr) => {{
@@ -254,7 +268,7 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
     }
 
     let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut wf = WaterFill::new(plan.num_links());
+    let mut wf = WaterFill::new(plan);
     let mut now = 0.0f64;
     let mut completion = 0.0f64;
     let mut events = 0u64;
@@ -434,6 +448,46 @@ mod tests {
         let slow = simulate_flow(&s, &t, m, &NetParams::default().with_bandwidth_gbps(200.0));
         let fast = simulate_flow(&s, &t, m, &NetParams::default().with_bandwidth_gbps(3200.0));
         assert!(fast.completion_s < slow.completion_s / 8.0);
+    }
+
+    #[test]
+    fn symmetric_fast_path_is_bit_identical_to_water_filling() {
+        // Same injected flow set, recomputed with and without the fast
+        // path: rates must match bit for bit (the fast path is only a
+        // short-circuit of the uniform first round).
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let plan = SimPlan::build(&s, &t);
+        let p = params();
+        let cap = p.link_bw_bps / 8.0;
+        for step in 0..plan.num_steps() {
+            let mut fast = WaterFill::new(&plan);
+            let mut slow = WaterFill::new(&plan);
+            slow.symmetric_ok = false;
+            assert!(fast.symmetric_ok);
+            let mut active_f: Vec<ActiveFlow> = Vec::new();
+            let mut active_s: Vec<ActiveFlow> = Vec::new();
+            for node in 0..plan.n() {
+                for &mi in plan.injections(node, step) {
+                    for (wf, active) in
+                        [(&mut fast, &mut active_f), (&mut slow, &mut active_s)]
+                    {
+                        active.push(ActiveFlow {
+                            msg: mi,
+                            remaining: plan.bytes(mi as usize, 1 << 20),
+                            rate: 0.0,
+                        });
+                        wf.inject(plan.route(mi as usize));
+                    }
+                }
+            }
+            fast.recompute(&mut active_f, &plan, cap);
+            slow.recompute(&mut active_s, &plan, cap);
+            for (a, b) in active_f.iter().zip(&active_s) {
+                assert_eq!(a.msg, b.msg);
+                assert_eq!(a.rate.to_bits(), b.rate.to_bits(), "step {step}");
+            }
+        }
     }
 
     #[test]

@@ -13,27 +13,66 @@
 //! * The completion time is the last delivery.
 //!
 //! [`flow`] models each message as a fluid flow with **max-min fair**
-//! bandwidth sharing, recomputed whenever the active flow set changes —
+//! bandwidth sharing, recomputed whenever the active flow set changes
+//! (with a closed-form fast path for the uniform-congestion steady state) —
 //! accurate for the steady, step-synchronized traffic these collectives
 //! generate and fast enough for 4096-node × 128 MiB sweeps. [`packet`]
-//! models MTU-sized packets with store-and-forward FIFO queueing per link —
-//! the ground-truth mode used at small scale to cross-validate the flow
-//! model (see `rust/tests/sim_crosscheck.rs`).
+//! models MTU-sized packets with per-link FIFO **batch** scheduling: each
+//! message's packets occupy a link as one contiguous busy interval, so heap
+//! traffic is `O(messages × hops)` and the ground-truth mode cross-validates
+//! the flow model up to 8×8 / 4×4×4 tori (see
+//! `rust/tests/sim_crosscheck.rs`); the pre-overhaul per-packet engine
+//! survives as [`packet::reference`], the drift oracle.
 //!
 //! Both modes execute against a precompiled [`SimPlan`] ([`plan`]): the
 //! schedule→routes structure is flattened once per `(schedule, torus)` and
-//! reused across every message size (and across sweep threads). Use
+//! reused across every message size (and across sweep threads). Registry
+//! consumers additionally share plans across invocations through the
+//! process-wide [`cache::PlanCache`], keyed by `(algo, variant, dims)`. Use
 //! [`simulate`] for one-off runs, [`simulate_plan`] when sweeping a ladder.
 
+pub mod cache;
 pub mod flow;
 pub mod packet;
 pub mod plan;
 
+pub use cache::{PlanCache, PlanKey};
 pub use plan::SimPlan;
 
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
+
+/// A heap entry for the discrete-event engines: min-heap by time, FIFO
+/// tie-break by push sequence (`BinaryHeap` is a max-heap, so the ordering
+/// is reversed). The event payload never participates in the ordering.
+#[derive(Clone, Copy)]
+pub(crate) struct Timed<E> {
+    pub t: f64,
+    pub seq: u64,
+    pub ev: E,
+}
+
+impl<E> PartialEq for Timed<E> {
+    fn eq(&self, other: &Self) -> bool {
+        self.t == other.t && self.seq == other.seq
+    }
+}
+impl<E> Eq for Timed<E> {}
+impl<E> Ord for Timed<E> {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        other
+            .t
+            .partial_cmp(&self.t)
+            .unwrap_or(std::cmp::Ordering::Equal)
+            .then(other.seq.cmp(&self.seq))
+    }
+}
+impl<E> PartialOrd for Timed<E> {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
 
 /// Simulation fidelity mode.
 #[derive(Clone, Copy, Debug)]

@@ -1,55 +1,55 @@
-//! Packet-level discrete-event simulation: MTU-sized packets,
-//! store-and-forward, FIFO per directed link.
+//! Packet-level simulation with per-link FIFO **batch** scheduling.
 //!
-//! The ground-truth mode: no fluid approximation, every packet queues
-//! individually. Quadratic-ish in message size, so it is used at small
-//! scale to cross-validate [`super::flow`] (the sweep workhorse). Consumes
-//! the same precompiled [`SimPlan`] as the flow mode, so a cross-validation
-//! ladder shares one plan across both modes and every size.
+//! The ground-truth mode: messages are split into MTU-sized packets that
+//! serialize on every link of their route (store-and-forward per packet,
+//! cut-through across the message). The engine exploits that each directed
+//! link is a serial FIFO chain: once a message's head packet reaches the
+//! front of a link's queue, its packets occupy the link back-to-back, so
+//! the whole batch is scheduled as **one contiguous busy interval** instead
+//! of one heap event per packet — heap traffic is `O(messages × hops)`
+//! rather than `O(packets × hops)`, which is what extends flow-vs-packet
+//! cross-validation from ring-9 scale to 8×8 and 4×4×4 tori (and beyond).
+//!
+//! Per hop the recurrence is (all links run at the same rate `cap`):
+//!
+//! * `start = max(head_arrival, link_free)`, link busy until
+//!   `start + total/cap`;
+//! * the head packet reaches the next hop at `start + head/cap + per_hop`
+//!   (`head` = first-packet bytes, the largest packet of the batch, so
+//!   downstream contiguity is preserved — packets can never be wanted
+//!   before they arrive);
+//! * the tail arrives at the destination `per_hop` after the last link
+//!   finishes the batch.
+//!
+//! Compared with the pre-overhaul per-packet engine (kept below as
+//! [`reference`]), the only behavioural difference is at *partial* overlap
+//! on a contended link: the reference interleaves foreign packets into a
+//! batch mid-message, the batched engine serializes whole messages in
+//! head-arrival FIFO order. Under the step-synchronized traffic of these
+//! collectives the two agree exactly in the common case (equal-time
+//! contention already serialized whole messages via heap order) and within
+//! a few percent elsewhere (`rust/tests/sim_crosscheck.rs` pins the drift).
+//! Byte accounting is `f64` end to end — the old engine narrowed per-packet
+//! sizes to `f32` (lossy for fractional payloads such as `m/3` pieces).
+//!
+//! Consumes the same precompiled [`SimPlan`] as [`super::flow`], so a
+//! cross-validation ladder shares one plan across both modes and every
+//! size.
 
 use super::plan::SimPlan;
-use super::SimResult;
+use super::{SimResult, Timed};
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
-use std::cmp::Ordering;
 use std::collections::BinaryHeap;
 
 #[derive(Clone, Copy, Debug)]
 enum Event {
     /// Node enters step `k`.
     StepStart { node: u32, step: u32 },
-    /// A packet of message `msg` is ready to enter hop `hop` of its route
-    /// (`hop == route.len()` means it reached the destination).
-    Packet { msg: u32, hop: u16, bytes: f32 },
-}
-
-#[derive(Clone, Copy)]
-struct Timed {
-    t: f64,
-    seq: u64,
-    ev: Event,
-}
-
-impl PartialEq for Timed {
-    fn eq(&self, other: &Self) -> bool {
-        self.t == other.t && self.seq == other.seq
-    }
-}
-impl Eq for Timed {}
-impl Ord for Timed {
-    fn cmp(&self, other: &Self) -> Ordering {
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
-    }
-}
-impl PartialOrd for Timed {
-    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
-        Some(self.cmp(other))
-    }
+    /// Message `msg`'s batch head is ready to enter hop `hop` of its route
+    /// (`hop == route.len()` means the tail reached the destination).
+    Batch { msg: u32, hop: u16 },
 }
 
 /// Convenience wrapper: build the plan and simulate. Ladder-style callers
@@ -65,7 +65,7 @@ pub fn simulate_packet(
 }
 
 /// Packet-level simulation of an `m_bytes` collective against a precompiled
-/// plan.
+/// plan (batched engine, see module docs).
 pub fn simulate_packet_plan(
     plan: &SimPlan,
     m_bytes: u64,
@@ -83,13 +83,8 @@ pub fn simulate_packet_plan(
 
     let mut received = vec![0u32; n * nsteps];
     let mut entered = vec![-1i64; n];
-    // remaining packets per message
-    let mut pkts_left: Vec<u32> = (0..plan.num_msgs())
-        .map(|i| ((plan.bytes(i, m_bytes) / mtu as f64).ceil() as u32).max(1))
-        .collect();
-
     let mut free_at = vec![0f64; plan.num_links()];
-    let mut heap: BinaryHeap<Timed> = BinaryHeap::new();
+    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
     let mut seq = 0u64;
     macro_rules! push {
         ($t:expr, $ev:expr) => {{
@@ -110,15 +105,7 @@ pub fn simulate_packet_plan(
             Event::StepStart { node, step } => {
                 entered[node as usize] = step as i64;
                 for &mi in plan.injections(node as usize, step as usize) {
-                    // split the message into packets, all ready now; FIFO
-                    // on the first link serializes them.
-                    let full = pkts_left[mi as usize];
-                    let mut left = plan.bytes(mi as usize, m_bytes);
-                    for _ in 0..full {
-                        let sz = left.min(mtu as f64);
-                        left -= sz.min(left);
-                        push!(now, Event::Packet { msg: mi, hop: 0, bytes: sz as f32 });
-                    }
+                    push!(now, Event::Batch { msg: mi, hop: 0 });
                 }
                 let k = step as usize;
                 if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
@@ -127,34 +114,40 @@ pub fn simulate_packet_plan(
                     push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                 }
             }
-            Event::Packet { msg, hop, bytes } => {
+            Event::Batch { msg, hop } => {
                 let route = plan.route(msg as usize);
                 if hop as usize == route.len() {
-                    // packet arrived at destination
-                    pkts_left[msg as usize] -= 1;
-                    if pkts_left[msg as usize] == 0 {
-                        completion = completion.max(now);
-                        let m = plan.msg(msg as usize);
-                        let k = m.step as usize;
-                        received[m.dst as usize * nsteps + k] += 1;
-                        if received[m.dst as usize * nsteps + k]
-                            == plan.expected(m.dst as usize, k)
-                            && entered[m.dst as usize] == k as i64
-                            && k + 1 < nsteps
-                        {
-                            push!(
-                                now + params.alpha_s,
-                                Event::StepStart { node: m.dst, step: m.step + 1 }
-                            );
-                        }
+                    // tail packet arrived at the destination
+                    completion = completion.max(now);
+                    let m = plan.msg(msg as usize);
+                    let k = m.step as usize;
+                    received[m.dst as usize * nsteps + k] += 1;
+                    if received[m.dst as usize * nsteps + k] == plan.expected(m.dst as usize, k)
+                        && entered[m.dst as usize] == k as i64
+                        && k + 1 < nsteps
+                    {
+                        push!(
+                            now + params.alpha_s,
+                            Event::StepStart { node: m.dst, step: m.step + 1 }
+                        );
                     }
                 } else {
-                    // serialize on the next link (FIFO), then propagate
+                    // claim the link for the whole batch (FIFO by head
+                    // arrival: heap order is (time, push seq))
+                    let total = plan.bytes(msg as usize, m_bytes);
                     let l = route[hop as usize] as usize;
                     let start = now.max(free_at[l]);
-                    let end = start + bytes as f64 / cap;
-                    free_at[l] = end;
-                    push!(end + per_hop, Event::Packet { msg, hop: hop + 1, bytes });
+                    let batch_end = start + total / cap;
+                    free_at[l] = batch_end;
+                    if hop as usize + 1 == route.len() {
+                        // tail arrives per_hop after the batch serializes
+                        push!(batch_end + per_hop, Event::Batch { msg, hop: hop + 1 });
+                    } else {
+                        // cut-through: the head packet frees up for the
+                        // next hop after its own serialization only
+                        let head = total.min(mtu as f64);
+                        push!(start + head / cap + per_hop, Event::Batch { msg, hop: hop + 1 });
+                    }
                 }
             }
         }
@@ -163,31 +156,152 @@ pub fn simulate_packet_plan(
     SimResult { completion_s: completion, messages: plan.num_msgs(), events }
 }
 
+pub mod reference {
+    //! The pre-overhaul per-packet engine: one heap event per packet per
+    //! hop. Kept as the drift oracle for the batched engine (tests bound
+    //! batched-vs-reference divergence) and as the baseline
+    //! `bench_simplan` measures the batching speedup against. Packet sizes
+    //! are `f64` here too — the old `f32` narrowing is fixed in both
+    //! engines.
+
+    use super::*;
+
+    #[derive(Clone, Copy, Debug)]
+    enum RefEvent {
+        StepStart { node: u32, step: u32 },
+        Packet { msg: u32, hop: u16, bytes: f64 },
+    }
+
+    /// Per-packet simulation of an `m_bytes` collective against a
+    /// precompiled plan.
+    pub fn simulate_packet_reference_plan(
+        plan: &SimPlan,
+        m_bytes: u64,
+        params: &NetParams,
+        mtu: u32,
+    ) -> SimResult {
+        assert!(mtu > 0);
+        let n = plan.n();
+        let nsteps = plan.num_steps();
+        if nsteps == 0 {
+            return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+        }
+        let cap = params.link_bw_bps / 8.0;
+        let per_hop = params.per_hop_s();
+
+        let mut received = vec![0u32; n * nsteps];
+        let mut entered = vec![-1i64; n];
+        let mut pkts_left: Vec<u32> = (0..plan.num_msgs())
+            .map(|i| ((plan.bytes(i, m_bytes) / mtu as f64).ceil() as u32).max(1))
+            .collect();
+
+        let mut free_at = vec![0f64; plan.num_links()];
+        let mut heap: BinaryHeap<Timed<RefEvent>> = BinaryHeap::new();
+        let mut seq = 0u64;
+        macro_rules! push {
+            ($t:expr, $ev:expr) => {{
+                seq += 1;
+                heap.push(Timed { t: $t, seq, ev: $ev });
+            }};
+        }
+        for r in 0..n {
+            push!(params.alpha_s, RefEvent::StepStart { node: r as u32, step: 0 });
+        }
+
+        let mut completion = 0.0f64;
+        let mut events = 0u64;
+
+        while let Some(Timed { t: now, ev, .. }) = heap.pop() {
+            events += 1;
+            match ev {
+                RefEvent::StepStart { node, step } => {
+                    entered[node as usize] = step as i64;
+                    for &mi in plan.injections(node as usize, step as usize) {
+                        let full = pkts_left[mi as usize];
+                        let mut left = plan.bytes(mi as usize, m_bytes);
+                        for _ in 0..full {
+                            let sz = left.min(mtu as f64);
+                            left -= sz.min(left);
+                            push!(now, RefEvent::Packet { msg: mi, hop: 0, bytes: sz });
+                        }
+                    }
+                    let k = step as usize;
+                    if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
+                        && k + 1 < nsteps
+                    {
+                        push!(
+                            now + params.alpha_s,
+                            RefEvent::StepStart { node, step: step + 1 }
+                        );
+                    }
+                }
+                RefEvent::Packet { msg, hop, bytes } => {
+                    let route = plan.route(msg as usize);
+                    if hop as usize == route.len() {
+                        pkts_left[msg as usize] -= 1;
+                        if pkts_left[msg as usize] == 0 {
+                            completion = completion.max(now);
+                            let m = plan.msg(msg as usize);
+                            let k = m.step as usize;
+                            received[m.dst as usize * nsteps + k] += 1;
+                            if received[m.dst as usize * nsteps + k]
+                                == plan.expected(m.dst as usize, k)
+                                && entered[m.dst as usize] == k as i64
+                                && k + 1 < nsteps
+                            {
+                                push!(
+                                    now + params.alpha_s,
+                                    RefEvent::StepStart { node: m.dst, step: m.step + 1 }
+                                );
+                            }
+                        }
+                    } else {
+                        let l = route[hop as usize] as usize;
+                        let start = now.max(free_at[l]);
+                        let end = start + bytes / cap;
+                        free_at[l] = end;
+                        push!(end + per_hop, RefEvent::Packet { msg, hop: hop + 1, bytes });
+                    }
+                }
+            }
+        }
+
+        SimResult { completion_s: completion, messages: plan.num_msgs(), events }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::agpattern::latency_allreduce;
     use crate::algo::rings::{trivance, Order};
+    use crate::blockset::BlockSet;
+    use crate::schedule::{Kind, Piece, RouteHint, Send};
     use crate::sim::flow::simulate_flow;
+
+    fn single_send(n: u32, n_blocks: u32, to: u32, blocks: BlockSet) -> Schedule {
+        let mut s = Schedule::new("one", n, n_blocks);
+        let st = s.push_step();
+        st.push(
+            0,
+            Send {
+                to,
+                pieces: vec![Piece {
+                    blocks,
+                    contrib: BlockSet::singleton(0, n),
+                    kind: Kind::Reduce,
+                }],
+                route: RouteHint::Minimal,
+            },
+        );
+        s
+    }
 
     #[test]
     fn single_hop_message_matches_closed_form() {
         let n = 4u32;
         let t = Torus::ring(n);
-        let mut s = Schedule::new("one", n, n);
-        let st = s.push_step();
-        st.push(
-            0,
-            crate::schedule::Send {
-                to: 1,
-                pieces: vec![crate::schedule::Piece {
-                    blocks: crate::blockset::BlockSet::full(n),
-                    contrib: crate::blockset::BlockSet::singleton(0, n),
-                    kind: crate::schedule::Kind::Reduce,
-                }],
-                route: crate::schedule::RouteHint::Minimal,
-            },
-        );
+        let s = single_send(n, n, 1, BlockSet::full(n));
         let p = NetParams::default();
         let m = 64 * 1024u64;
         let r = simulate_packet(&s, &t, m, &p, 4096);
@@ -206,20 +320,7 @@ mod tests {
         // + 3·per_hop, far less than 3×ser(msg).
         let n = 9u32;
         let t = Torus::ring(n);
-        let mut s = Schedule::new("hop3", n, n);
-        let st = s.push_step();
-        st.push(
-            0,
-            crate::schedule::Send {
-                to: 3,
-                pieces: vec![crate::schedule::Piece {
-                    blocks: crate::blockset::BlockSet::full(n),
-                    contrib: crate::blockset::BlockSet::singleton(0, n),
-                    kind: crate::schedule::Kind::Reduce,
-                }],
-                route: crate::schedule::RouteHint::Minimal,
-            },
-        );
+        let s = single_send(n, n, 3, BlockSet::full(n));
         let p = NetParams::default();
         let m = 256 * 1024u64;
         let r = simulate_packet(&s, &t, m, &p, 4096);
@@ -232,6 +333,84 @@ mod tests {
             r.completion_s
         );
         assert!(r.completion_s < p.alpha_s + 3.0 * ser_msg);
+    }
+
+    #[test]
+    fn f64_bytes_survive_non_mtu_multiples_and_fractional_payloads() {
+        // regression for the old `sz as f32` narrowing: a fractional
+        // per-message payload (one block of three at m = 1 MiB + 1 →
+        // 349525.666… bytes) must match the closed form to 1e-12; an f32
+        // packet size is ~2e-8 off relative.
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let p = NetParams::default();
+        let m = (1u64 << 20) + 1;
+        // whole-vector message, size not a multiple of the MTU
+        let r = simulate_packet(&single_send(n, n, 1, BlockSet::full(n)), &t, m, &p, 4096);
+        let expect = p.alpha_s + m as f64 * 8.0 / p.link_bw_bps + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-12,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        // fractional payload: 3 blocks, message carries one of them
+        let s3 = single_send(n, 3, 1, BlockSet::singleton(0, 3));
+        let r = simulate_packet(&s3, &t, m, &p, 4096);
+        let bytes = m as f64 / 3.0;
+        let expect = p.alpha_s + bytes * 8.0 / p.link_bw_bps + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-12,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        // and the reference engine agrees to float-rounding precision on a
+        // lone message (bit-identity is impossible here: the reference
+        // accumulates one rounded `sz/cap` per packet, the batched engine
+        // divides once — ~11 ulps apart on this 86-packet message)
+        let plan = SimPlan::build(&s3, &t);
+        let a = simulate_packet_plan(&plan, m, &p, 4096);
+        let b = reference::simulate_packet_reference_plan(&plan, m, &p, 4096);
+        let rel = (a.completion_s - b.completion_s).abs() / b.completion_s;
+        assert!(rel < 1e-12, "batched {} vs reference {}", a.completion_s, b.completion_s);
+    }
+
+    #[test]
+    fn mtu_larger_than_message_is_one_packet() {
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let s = single_send(n, n, 1, BlockSet::full(n));
+        let p = NetParams::default();
+        let r = simulate_packet(&s, &t, 100, &p, 1 << 20);
+        let expect = p.alpha_s + 100.0 * 8.0 / p.link_bw_bps + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < 1e-12,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+    }
+
+    #[test]
+    fn zero_byte_collective_still_pays_latency() {
+        // m = 0: every message is one empty packet; completion is pure
+        // latency (α + hops·per_hop), no division blow-ups.
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let s = single_send(n, n, 1, BlockSet::full(n));
+        let p = NetParams::default();
+        let r = simulate_packet(&s, &t, 0, &p, 4096);
+        let expect = p.alpha_s + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < 1e-15,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        let rr = reference::simulate_packet_reference_plan(
+            &SimPlan::build(&s, &t),
+            0,
+            &p,
+            4096,
+        );
+        assert_eq!(r.completion_s.to_bits(), rr.completion_s.to_bits());
     }
 
     #[test]
@@ -264,5 +443,26 @@ mod tests {
             assert_eq!(a.completion_s.to_bits(), b.completion_s.to_bits(), "m={m}");
             assert_eq!(a.events, b.events);
         }
+    }
+
+    #[test]
+    fn batched_heap_traffic_is_message_granular() {
+        // events scale with messages × hops, not packets: growing the
+        // message size must not grow the event count.
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let plan = SimPlan::build(&s, &t);
+        let p = NetParams::default();
+        let small = simulate_packet_plan(&plan, 4096, &p, 4096);
+        let large = simulate_packet_plan(&plan, 8 << 20, &p, 4096);
+        assert_eq!(small.events, large.events);
+        // and stays far below the reference engine's per-packet traffic
+        let r = reference::simulate_packet_reference_plan(&plan, 8 << 20, &p, 4096);
+        assert!(
+            large.events * 100 <= r.events,
+            "batched {} vs reference {}",
+            large.events,
+            r.events
+        );
     }
 }

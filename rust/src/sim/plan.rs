@@ -196,6 +196,13 @@ impl SimPlan {
         &self.link_ids[self.link_off[link] as usize..self.link_off[link + 1] as usize]
     }
 
+    /// Does any message have an empty route (a co-located src/dst pair)?
+    /// Registry-built schedules never produce these; the flow simulator's
+    /// symmetric-step fast path is gated on their absence.
+    pub fn has_zero_hop_routes(&self) -> bool {
+        self.msgs.iter().any(|m| m.route_len == 0)
+    }
+
     /// Serialization lower bound (seconds) of the whole collective at
     /// `m_bytes` under `params`: the most-loaded link's total payload at
     /// line rate. A cheap sanity anchor for both simulator modes.

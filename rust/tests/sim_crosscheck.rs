@@ -4,13 +4,16 @@
 //! The flow mode (max-min fluid) is the sweep workhorse; the packet mode is
 //! the ground truth. The property tests here pin their agreement for every
 //! registry algorithm on small topologies, so a rewrite of the flow model's
-//! water-filling (incremental or otherwise) cannot silently diverge. The
-//! plan-reuse and parallelism invariants are *exact* (bit-identical): those
-//! layers only restructure the computation, never the arithmetic.
+//! water-filling (incremental or otherwise) cannot silently diverge — and
+//! the batched packet engine is itself pinned against the per-packet
+//! reference engine it replaced. The plan-reuse, plan-cache, and
+//! parallelism invariants are *exact* (bit-identical): those layers only
+//! restructure the computation, never the arithmetic.
 
 use trivance::algo::{build, Algo, Variant};
 use trivance::cost::NetParams;
-use trivance::harness::sweep::{run_sweep_threads, size_ladder};
+use trivance::harness::sweep::{build_all, build_all_uncached, run_sweep_threads, size_ladder};
+use trivance::sim::packet::reference::simulate_packet_reference_plan;
 use trivance::sim::{simulate_plan, SimMode, SimPlan};
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
@@ -86,6 +89,106 @@ fn exhaustive_ring9_registry_within_tight_tolerance() {
                     f.completion_s,
                     k.completion_s
                 );
+            }
+        }
+    }
+}
+
+#[test]
+fn crossvalidation_8x8_and_4x4x4_full_registry() {
+    // The batched packet engine makes packet-mode ground truth tractable at
+    // 64-node scale: the fluid model must track it within 10% for every
+    // registry algorithm on the 8×8 and 4×4×4 tori (all configurations are
+    // native there — no virtual padding). Measured worst case is 8.8%
+    // (recdoub-L on 8×8 at 256 KiB); see tools/pysim.
+    let p = NetParams::default();
+    for dims in [vec![8u32, 8], vec![4, 4, 4]] {
+        let t = Torus::new(&dims);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                assert!(!b.padded, "{algo:?} {variant:?} should be native on {dims:?}");
+                let plan = SimPlan::build(&b.net, &t);
+                for m in [4096u64, 256 << 10, 1 << 20] {
+                    let f = simulate_plan(&plan, m, &p, SimMode::Flow);
+                    let k = simulate_plan(&plan, m, &p, SimMode::Packet { mtu: 4096 });
+                    let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
+                    assert!(
+                        rel < 0.10,
+                        "{algo:?} {variant:?} {dims:?} m={m}: flow {} packet {} rel {rel:.3}",
+                        f.completion_s,
+                        k.completion_s
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn batched_packet_engine_tracks_the_reference_engine() {
+    // The batched engine serializes whole messages FIFO where the reference
+    // interleaves packets at partial overlaps; for registry traffic the two
+    // must stay within a few percent (measured worst case 4.2%: trivance-B
+    // on ring-8 at 256 KiB) and agree exactly when contention is
+    // step-synchronized.
+    let p = NetParams::default();
+    for dims in [vec![8u32], vec![9], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                let plan = SimPlan::build(&b.net, &t);
+                for m in [4096u64, 256 << 10] {
+                    let a = simulate_plan(&plan, m, &p, SimMode::Packet { mtu: 4096 });
+                    let r = simulate_packet_reference_plan(&plan, m, &p, 4096);
+                    let rel = (a.completion_s - r.completion_s).abs() / r.completion_s;
+                    assert!(
+                        rel < 0.06,
+                        "{algo:?} {variant:?} {dims:?} m={m}: batched {} reference {} rel {rel:.4}",
+                        a.completion_s,
+                        r.completion_s
+                    );
+                    assert!(a.events <= r.events, "batching must never add heap events");
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_cache_on_and_off_are_bit_identical() {
+    // Cached plans are shared Arcs of the same deterministic build — flow
+    // results (and event counts) must match a fresh-build sweep bit for bit.
+    let p = NetParams::default();
+    let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+    for dims in [vec![9u32], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        let cached = build_all(&t, &algos);
+        let fresh = build_all_uncached(&t, &algos);
+        assert_eq!(cached.len(), fresh.len());
+        for (c, f) in cached.iter().zip(&fresh) {
+            assert_eq!(c.algo, f.algo);
+            for (cp, fp) in c.plans.iter().zip(&f.plans) {
+                assert_eq!(cp.num_msgs(), fp.num_msgs());
+                for m in [4096u64, 256 << 10] {
+                    let a = simulate_plan(cp, m, &p, SimMode::Flow);
+                    let b = simulate_plan(fp, m, &p, SimMode::Flow);
+                    assert_eq!(
+                        a.completion_s.to_bits(),
+                        b.completion_s.to_bits(),
+                        "{:?} {dims:?} m={m}",
+                        c.algo
+                    );
+                    assert_eq!(a.events, b.events);
+                }
+            }
+        }
+        // a second cached build must hand out the same shared plans
+        let again = build_all(&t, &algos);
+        for (c, a) in cached.iter().zip(&again) {
+            for (cp, ap) in c.plans.iter().zip(&a.plans) {
+                assert!(std::sync::Arc::ptr_eq(cp, ap), "{:?} {dims:?}", c.algo);
             }
         }
     }

@@ -1,0 +1,144 @@
+"""Self-checks: pin mirror.py against the closed forms and tolerances that
+the Rust test suite asserts TODAY (pre-overhaul), using the reference
+per-packet engine. Run before trusting any batched-engine measurement."""
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+beta = 8.0 / P["bw"]
+ph = per_hop(P)
+fails = []
+
+
+def chk(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+# --- plan shape: trivance ring9 (sim/plan.rs tests) ---
+t9 = Torus([9])
+s9 = latency_allreduce(trivance(9, "inc"))
+p9 = Plan(s9, t9)
+chk("plan ring9 steps", p9.nsteps == 2)
+step0 = [m for m in p9.msgs if m[2] == 0]
+chk("plan ring9 step0 msgs", len(step0) == 18, f"got {len(step0)}")
+chk("plan ring9 step0 routes", all(len(m[4]) == 1 for m in step0))
+chk(
+    "plan ring9 step1 routes",
+    all(len(m[4]) == 3 for m in p9.msgs if m[2] == 1),
+)
+chk("plan ring9 rel", all(abs(m[3] - 1.0) < 1e-9 for m in p9.msgs))
+
+# --- flow closed forms (sim/flow.rs tests) ---
+# single message 0->1 on ring4
+s1 = Schedule("one", 4, 4)
+st = s1.push_step()
+st[0].append(Send(1, [(frozenset(range(4)), "reduce")], MIN))
+f, _ = simulate_flow(Plan(s1, Torus([4])), 1 << 20, P)
+exp = P["alpha"] + (1 << 20) * beta + ph
+chk("flow single message", abs(f - exp) < 1e-12, f"{f} vs {exp}")
+
+# trivance ring9 latency closed form
+f, _ = simulate_flow(p9, 1 << 20, P)
+exp = 2 * P["alpha"] + 4.0 * (1 << 20) * beta + 4.0 * ph
+chk("flow trivance ring9", abs(f - exp) < exp * 1e-9, f"{f} vs {exp}")
+
+# alpha-dominated small messages, ring27
+t27 = Torus([27])
+p27 = Plan(latency_allreduce(trivance(27, "inc")), t27)
+f, _ = simulate_flow(p27, 32, P)
+chk("flow ring27 alpha-bound", 4.5e-6 < f < 7.5e-6, f"{f}")
+
+# asymmetric load closed form (incremental_state_survives_asymmetric_load)
+s6 = Schedule("asym", 6, 6)
+st = s6.push_step()
+for src, to in [(0, 2), (1, 2), (4, 5)]:
+    st[src].append(Send(to, [(frozenset(range(6)), "reduce")], MIN))
+f, _ = simulate_flow(Plan(s6, Torus([6])), 1 << 20, P)
+exp = P["alpha"] + 2.0 * (1 << 20) * beta + 2.0 * ph
+chk("flow asymmetric", abs(f - exp) < exp * 1e-6, f"{f} vs {exp}")
+
+# --- reference packet closed forms (sim/packet.rs tests) ---
+s1b = Schedule("one", 4, 4)
+st = s1b.push_step()
+st[0].append(Send(1, [(frozenset(range(4)), "reduce")], MIN))
+k, _ = simulate_packet_ref(Plan(s1b, Torus([4])), 64 * 1024, P, 4096)
+exp = P["alpha"] + 64 * 1024 * beta + ph
+chk("ref packet single hop", abs(k - exp) < 1e-12, f"{k} vs {exp}")
+
+s3 = Schedule("hop3", 9, 9)
+st = s3.push_step()
+st[0].append(Send(3, [(frozenset(range(9)), "reduce")], MIN))
+k, _ = simulate_packet_ref(Plan(s3, Torus([9])), 256 * 1024, P, 4096)
+exp = P["alpha"] + 256 * 1024 * beta + 2 * 4096 * beta + 3 * ph
+chk("ref packet 3-hop pipeline", abs(k - exp) < exp * 1e-9, f"{k} vs {exp}")
+
+# --- flow vs ref packet: trivance ring9 (10%, sim/packet.rs test) ---
+for m in [4096, 64 * 1024, 1 << 20]:
+    r = crosscheck([9], "trivance", "L", m, engine=simulate_packet_ref)
+    chk(f"flow/ref trivance ring9 m={m}", r[0] < 0.1, f"rel={r[0]:.4f}")
+
+# --- exhaustive ring9 matrix at 10% with ref engine (sim_crosscheck) ---
+for algo in ["trivance", "bruck", "bucket"]:
+    for variant in VARIANTS:
+        for m in [4096, 256 << 10]:
+            r = crosscheck([9], algo, variant, m, engine=simulate_packet_ref)
+            chk(
+                f"ref ring9 {algo}-{variant} m={m}",
+                r[0] < 0.10,
+                f"rel={r[0]:.4f}",
+            )
+
+# --- property-set sample at 0.25 with ref engine ---
+for dims in [[8], [9], [3, 3]]:
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            for m in [4096, 256 << 10]:
+                r = crosscheck(dims, algo, variant, m, engine=simulate_packet_ref)
+                if r is None:
+                    continue
+                chk(
+                    f"ref {dims} {algo}-{variant} m={m}",
+                    r[0] < 0.25,
+                    f"rel={r[0]:.4f}",
+                )
+
+# --- registry shape claims (registry.rs tests) ---
+b = build("trivance", "L", Torus([9, 9]))
+chk("trivance 9x9 L steps", b.net.num_steps() == 4)
+b = build("trivance", "L", Torus([3, 3, 3]))
+chk("trivance 3x3x3 L steps", b.net.num_steps() == 3)
+b = build("trivance", "L", Torus([3, 3]))
+chk("trivance 3x3 L n_blocks", b.net.n_blocks == 18)
+b = build("bucket", "B", Torus([3, 3]))
+chk("bucket 3x3 B n_blocks", b.net.n_blocks == 36)
+b = build("swing", "L", Torus([9]))
+chk("swing ring9 padded", b.padded and b.net.n == 9)
+
+# bandwidth data volume (Lemma 4.1)
+for n in [9, 27]:
+    s = bandwidth_allreduce(trivance(n, "dec"))
+    sent = s.node_sent_rel_bytes(0)
+    exp = 2.0 * (1.0 - 1.0 / n)
+    chk(f"lemma41 n={n}", abs(sent - exp) < 1e-9, f"{sent} vs {exp}")
+
+# hierarchical volume on 3x3
+t33 = Torus([3, 3])
+hp = [trivance(3, "dec"), trivance(3, "dec")]
+hs = hierarchical_bandwidth(t33, hp, [0, 1], "t")
+exp = 2.0 * (1.0 - 1.0 / 9.0)
+chk(
+    "hierarchical volume 3x3",
+    all(abs(hs.node_sent_rel_bytes(r) - exp) < 1e-9 for r in range(9)),
+)
+
+print()
+if fails:
+    print(f"{len(fails)} FAILURES: {fails}")
+    sys.exit(1)
+print("all mirror self-checks passed")

@@ -1,0 +1,152 @@
+"""Measure the batched packet engine against the reference per-packet
+engine and against the flow model on every topology the Rust tests assert:
+
+1. batched == ref exactly when there is no partial-overlap contention
+   (single-message closed forms);
+2. batched-vs-ref drift across the registry (how far message-granular FIFO
+   moves completions);
+3. flow-vs-batched rel error on ring9 (Rust bound: 10%), the property set
+   (0.25), and the new 8x8 / 4x4x4 acceptance matrix (target: 10%);
+4. event-count reduction (the >=3x events/sec claim's basis) on ring-27 at
+   1 MiB.
+"""
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+beta = 8.0 / P["bw"]
+ph = per_hop(P)
+fails = []
+
+
+def chk(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+# --- 1. closed forms with the batched engine (Rust packet.rs tests) ---
+s1 = Schedule("one", 4, 4)
+st = s1.push_step()
+st[0].append(Send(1, [(frozenset(range(4)), "reduce")], MIN))
+k, _ = simulate_packet_batched(Plan(s1, Torus([4])), 64 * 1024, P, 4096)
+exp = P["alpha"] + 64 * 1024 * beta + ph
+chk("batched single hop", abs(k - exp) < 1e-12, f"{k} vs {exp}")
+
+s3 = Schedule("hop3", 9, 9)
+st = s3.push_step()
+st[0].append(Send(3, [(frozenset(range(9)), "reduce")], MIN))
+k, _ = simulate_packet_batched(Plan(s3, Torus([9])), 256 * 1024, P, 4096)
+exp = P["alpha"] + 256 * 1024 * beta + 2 * 4096 * beta + 3 * ph
+chk("batched 3-hop pipeline", abs(k - exp) < exp * 1e-9, f"{k} vs {exp}")
+
+# f64 regression shape: 1 MiB + 1 on a single hop
+m = (1 << 20) + 1
+k, _ = simulate_packet_batched(Plan(s1, Torus([4])), m, P, 4096)
+exp = P["alpha"] + m * beta + ph
+chk("batched 1MiB+1 closed form", abs(k - exp) < exp * 1e-12, f"{k} vs {exp}")
+
+# MTU larger than message
+k, _ = simulate_packet_batched(Plan(s1, Torus([4])), 100, P, 1 << 20)
+exp = P["alpha"] + 100 * beta + ph
+chk("batched MTU>message", abs(k - exp) < 1e-12, f"{k} vs {exp}")
+
+# zero-byte collective
+k, _ = simulate_packet_batched(Plan(s1, Torus([4])), 0, P, 4096)
+exp = P["alpha"] + ph
+chk("batched zero bytes", abs(k - exp) < 1e-15, f"{k} vs {exp}")
+
+# lone fractional multi-packet message: batched's single total/cap division
+# vs reference's per-packet rounded accumulation differ by a few ulps, never
+# more (the Rust test asserts rel < 1e-12, not bit equality)
+s_frac = Schedule("frac", 4, 3)
+st = s_frac.push_step()
+st[0].append(Send(1, [(frozenset([0]), "reduce")], MIN))
+pf = Plan(s_frac, Torus([4]))
+a, _ = simulate_packet_batched(pf, (1 << 20) + 1, P, 4096)
+b, _ = simulate_packet_ref(pf, (1 << 20) + 1, P, 4096)
+chk(
+    "batched vs ref lone fractional message",
+    abs(a - b) / b < 1e-12,
+    f"rel={abs(a - b) / b:.3e}",
+)
+
+# --- 2. batched vs ref drift across registry ---
+print("\n== batched vs reference drift ==")
+worst = (0.0, None)
+for dims in [[8], [9], [27], [3, 3]]:
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            t = Torus(dims)
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            plan = Plan(b.net, t)
+            for m in [4096, 256 << 10]:
+                r, _ = simulate_packet_ref(plan, m, P, 4096)
+                n, _ = simulate_packet_batched(plan, m, P, 4096)
+                rel = abs(n - r) / r if r > 0 else 0.0
+                if rel > worst[0]:
+                    worst = (rel, (dims, algo, variant, m))
+                if rel > 0.02:
+                    print(f"  drift {rel:.4f}: {dims} {algo}-{variant} m={m}")
+print(f"worst batched-vs-ref drift: {worst[0]:.4f} at {worst[1]}")
+
+# --- 3a. flow vs batched, ring9 exhaustive (Rust bound 10%) ---
+print("\n== flow vs batched: ring9 matrix (bound 0.10) ==")
+for algo in ["trivance", "bruck", "bucket"]:
+    for variant in VARIANTS:
+        for m in [4096, 256 << 10]:
+            r = crosscheck([9], algo, variant, m)
+            chk(f"ring9 {algo}-{variant} m={m}", r[0] < 0.10, f"rel={r[0]:.4f}")
+
+# trivance ring9 at packet.rs sizes incl 1 MiB
+for m in [4096, 64 * 1024, 1 << 20]:
+    r = crosscheck([9], "trivance", "L", m)
+    chk(f"ring9 trivance-L m={m}", r[0] < 0.10, f"rel={r[0]:.4f}")
+
+# --- 3b. property set (bound 0.25) ---
+print("\n== flow vs batched: property topologies (bound 0.25) ==")
+for dims in [[8], [9], [3, 3]]:
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            for m in [4096, 32 << 10, 256 << 10]:
+                r = crosscheck(dims, algo, variant, m)
+                if r is None:
+                    continue
+                chk(f"{dims} {algo}-{variant} m={m}", r[0] < 0.25, f"rel={r[0]:.4f}")
+
+# --- 3c. acceptance matrix: 8x8 and 4x4x4, full registry ---
+print("\n== flow vs batched: 8x8 / 4x4x4 acceptance (target 0.10) ==")
+for dims in [[8, 8], [4, 4, 4]]:
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            for m in [4096, 256 << 10, 1 << 20]:
+                r = crosscheck(dims, algo, variant, m)
+                if r is None:
+                    print(f"  (unsupported: {dims} {algo}-{variant})")
+                    continue
+                mark = "ok " if r[0] < 0.10 else "OVER"
+                print(
+                    f"[{mark}] {dims} {algo}-{variant} m={m}: rel={r[0]:.4f} "
+                    f"(flow {r[1]:.3e} packet {r[2]:.3e})"
+                )
+
+# --- 4. event counts ring-27 at 1 MiB ---
+print("\n== event counts: ring27 trivance-L, 1 MiB, mtu 4096 ==")
+t = Torus([27])
+b = build("trivance", "L", t)
+plan = Plan(b.net, t)
+r, re = simulate_packet_ref(plan, 1 << 20, P, 4096)
+n, ne = simulate_packet_batched(plan, 1 << 20, P, 4096)
+print(f"ref events={re} batched events={ne} ratio={re/ne:.1f}x  drift={(abs(n-r)/r):.5f}")
+
+print()
+if fails:
+    print(f"{len(fails)} FAILURES: {fails}")
+    sys.exit(1)
+print("batched-engine eval: all asserted bounds hold")

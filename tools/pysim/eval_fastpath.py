@@ -1,0 +1,226 @@
+"""Verify the symmetric-step fast path is bit-identical to generic
+water-filling across the registry, and that batched-engine event counts are
+message-size independent."""
+
+import struct
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+import mirror
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+fails = []
+
+
+def bits(x):
+    return struct.pack("<d", x)
+
+
+# --- monkey-patch a fast-path variant of the flow recompute ---
+def simulate_flow_fast(plan, m_bytes, params):
+    """Same as mirror.simulate_flow but with the closed-form uniform-split
+    short-circuit (mirrors rust/src/sim/flow.rs WaterFill::recompute)."""
+    n, nsteps = plan.n, plan.nsteps
+    if nsteps == 0:
+        return 0.0, 0
+    cap = params["bw"] / 8.0
+    ph = per_hop(params)
+    symmetric_ok = all(len(m[4]) > 0 for m in plan.msgs)
+
+    import heapq
+
+    received = [0] * (n * nsteps)
+    entered = [-1] * n
+    heap = []
+    seq = 0
+
+    def push(t, ev):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, ev))
+
+    for r in range(n):
+        push(params["alpha"], ("step", r, 0))
+
+    active = []
+    nactive = [0] * plan.num_links
+    touched = []
+    in_touched = [False] * plan.num_links
+    residual = [0.0] * plan.num_links
+    unfrozen = [0] * plan.num_links
+    now = 0.0
+    completion = 0.0
+    events = 0
+    need_recompute = False
+
+    def wf_inject(route):
+        for l in route:
+            if not in_touched[l]:
+                in_touched[l] = True
+                touched.append(l)
+            nactive[l] += 1
+
+    def wf_drain(route):
+        for l in route:
+            nactive[l] -= 1
+
+    def recompute():
+        nonlocal touched
+        keep = []
+        for l in touched:
+            if nactive[l] == 0:
+                in_touched[l] = False
+            else:
+                residual[l] = cap
+                unfrozen[l] = nactive[l]
+                keep.append(l)
+        touched = keep
+
+        # fast path
+        if symmetric_ok and touched:
+            c = nactive[touched[0]]
+            if all(nactive[l] == c for l in touched):
+                share = cap / c
+                for f in active:
+                    f[2] = share
+                return
+
+        unfrozen_flows = list(range(len(active)))
+        while unfrozen_flows:
+            min_share = float("inf")
+            for l in touched:
+                if unfrozen[l] > 0:
+                    share = residual[l] / unfrozen[l]
+                    if share < min_share:
+                        min_share = share
+            if min_share == float("inf"):
+                for fi in unfrozen_flows:
+                    active[fi][2] = cap
+                break
+            freeze = []
+            i = 0
+            while i < len(unfrozen_flows):
+                fi = unfrozen_flows[i]
+                share = float("inf")
+                for l in plan.msgs[active[fi][0]][4]:
+                    s = residual[l] / max(unfrozen[l], 1)
+                    if s < share:
+                        share = s
+                if share <= min_share * (1.0 + SHARE_EPS):
+                    freeze.append(fi)
+                    unfrozen_flows[i] = unfrozen_flows[-1]
+                    unfrozen_flows.pop()
+                else:
+                    i += 1
+            if not freeze:
+                for fi in unfrozen_flows:
+                    active[fi][2] = min_share
+                break
+            for fi in freeze:
+                active[fi][2] = min_share
+                for l in plan.msgs[active[fi][0]][4]:
+                    residual[l] -= min_share
+                    if residual[l] < 0.0:
+                        residual[l] = 0.0
+                    unfrozen[l] -= 1
+
+    while True:
+        t_event = heap[0][0] if heap else float("inf")
+        t_drain = float("inf")
+        for f in active:
+            if f[2] > 0.0:
+                t = now + f[1] / f[2]
+                if t < t_drain:
+                    t_drain = t
+        t_next = min(t_event, t_drain)
+        if t_next == float("inf"):
+            break
+        dt = t_next - now
+        if dt > 0.0:
+            for f in active:
+                f[1] -= f[2] * dt
+        now = t_next
+
+        i = 0
+        while i < len(active):
+            f = active[i]
+            if f[1] <= f[2] * TIME_EPS + 1e-9 * TIME_EPS or f[1] <= 1e-7:
+                active[i] = active[-1]
+                active.pop()
+                src, dst, k, rel, route = plan.msgs[f[0]]
+                wf_drain(route)
+                push(now + len(route) * ph, ("deliv", dst, k))
+                need_recompute = True
+            else:
+                i += 1
+
+        while heap and heap[0][0] <= now + max(TIME_EPS, now * 1e-12):
+            _, _, ev = heapq.heappop(heap)
+            events += 1
+            if ev[0] == "step":
+                _, node, step = ev
+                entered[node] = step
+                for mi in plan.injections(node, step):
+                    active.append([mi, plan.bytes(mi, m_bytes), 0.0])
+                    wf_inject(plan.msgs[mi][4])
+                    need_recompute = True
+                if (
+                    plan.expected_count(node, step) == received[node * nsteps + step]
+                    and step + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", node, step + 1))
+            else:
+                _, node, k = ev
+                completion = max(completion, now)
+                received[node * nsteps + k] += 1
+                if (
+                    received[node * nsteps + k] == plan.expected_count(node, k)
+                    and entered[node] == k
+                    and k + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", node, k + 1))
+
+        if need_recompute:
+            recompute()
+            need_recompute = False
+
+    return completion, events
+
+
+print("== fast path vs generic water-filling: bitwise comparison ==")
+worst = None
+for dims in [[8], [9], [27], [3, 3], [8, 8], [4, 4, 4]]:
+    t = Torus(dims)
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            plan = Plan(b.net, t)
+            for m in [32, 4096, 256 << 10, 1 << 20]:
+                a, ae = simulate_flow(plan, m, P)
+                f, fe = simulate_flow_fast(plan, m, P)
+                same = bits(a) == bits(f) and ae == fe
+                if not same:
+                    fails.append((dims, algo, variant, m))
+                    print(f"[FAIL] {dims} {algo}-{variant} m={m}: {a} vs {f}")
+print(f"checked; {len(fails)} mismatches")
+
+print("\n== batched engine: event count is message-size independent ==")
+for dims in [[9], [8, 8]]:
+    t = Torus(dims)
+    b = build("trivance", "L", t)
+    plan = Plan(b.net, t)
+    counts = set()
+    for m in [4096, 1 << 20, 8 << 20]:
+        _, e = simulate_packet_batched(plan, m, P, 4096)
+        counts.add(e)
+    print(f"{dims}: events {counts}")
+    if len(counts) != 1:
+        fails.append(("events", dims))
+
+if fails:
+    print(f"\n{len(fails)} FAILURES")
+    sys.exit(1)
+print("\nfast-path bit-identity and event invariance verified")

@@ -1,0 +1,1094 @@
+"""Python mirror of the trivance Rust schedule builders + simulators.
+
+This container ships no rustc/cargo (see CHANGES.md, PR 1), so behavioural
+changes to the simulator are validated here: the mirror re-implements, with
+matching event ordering and float arithmetic, every layer needed to compute
+flow-mode and packet-mode completions for the full algorithm registry:
+
+  blockset (as Python sets) -> ExchangeAg ring builders -> agpattern
+  (latency cut-propagation fixpoint, Reduce-Scatter tree reversal) ->
+  multidim (ProductAg / reflection / concurrent slices / hierarchical) ->
+  registry build (incl. virtual padding) -> torus routing -> SimPlan ->
+  {flow water-filling, reference per-packet engine, batched packet engine}.
+
+`check.py` pins the mirror against the closed-form expectations of the Rust
+unit tests, then measures the batched-engine drift and flow-vs-packet
+tolerances that the Rust test suite asserts.
+
+Only message byte totals matter for simulation, but block sets are carried
+as real sets end to end because the latency-variant cut propagation and the
+Reduce-Scatter tree reversal operate on them.
+"""
+
+import heapq
+from itertools import product as iproduct
+
+MIN = ("min",)
+
+
+def directed(dim, dr):
+    return ("dir", dim, dr)
+
+
+# ---------------------------------------------------------------- topology
+
+
+class Torus:
+    def __init__(self, dims):
+        assert dims and all(d >= 2 for d in dims)
+        self.dims = list(dims)
+        self.strides = []
+        acc = 1
+        for d in dims:
+            self.strides.append(acc)
+            acc *= d
+        self.n = acc
+
+    def ndims(self):
+        return len(self.dims)
+
+    def num_links(self):
+        return self.n * len(self.dims) * 2
+
+    def link_index(self, node, dim, dr):
+        return (node * len(self.dims) + dim) * 2 + (1 if dr > 0 else 0)
+
+    def coords(self, rank):
+        c = []
+        r = rank
+        for d in self.dims:
+            c.append(r % d)
+            r //= d
+        return c
+
+    def rank(self, coords):
+        return sum(c * s for c, s in zip(coords, self.strides))
+
+    def coord(self, rank, dim):
+        return (rank // self.strides[dim]) % self.dims[dim]
+
+    def neighbor(self, rank, dim, offset):
+        a = self.dims[dim]
+        c = self.coord(rank, dim)
+        nc = (c + offset) % a
+        return rank - c * self.strides[dim] + nc * self.strides[dim]
+
+    def route(self, src, dst):
+        links = []
+        cur = src
+        for d in range(len(self.dims)):
+            a = self.dims[d]
+            cs, cd = self.coord(cur, d), self.coord(dst, d)
+            if cs == cd:
+                continue
+            fwd = (cd - cs) % a
+            bwd = a - fwd
+            if fwd < bwd:
+                dr = 1
+            elif bwd < fwd:
+                dr = -1
+            else:
+                dr = 1 if cs % 2 == 0 else -1
+            for _ in range(min(fwd, bwd)):
+                links.append(self.link_index(cur, d, dr))
+                cur = self.neighbor(cur, d, dr)
+        assert cur == dst
+        return links
+
+    def route_directed(self, src, dst, dim, dr):
+        a = self.dims[dim]
+        cs, cd = self.coord(src, dim), self.coord(dst, dim)
+        hops = (cd - cs) % a if dr > 0 else (cs - cd) % a
+        links = []
+        cur = src
+        for _ in range(hops):
+            links.append(self.link_index(cur, dim, dr))
+            cur = self.neighbor(cur, dim, dr)
+        assert cur == dst
+        return links
+
+    def product_set(self, ranges):
+        # ranges[d] = set of coords in dim d -> set of ranks
+        out = set()
+        for combo in iproduct(*[sorted(r) for r in ranges]):
+            out.add(self.rank(list(combo)))
+        return out
+
+
+# ------------------------------------------------------------ util
+
+
+def ceil_log(base, n):
+    s, v = 0, 1
+    while v < n:
+        v *= base
+        s += 1
+    return s
+
+
+def floor_log(base, n):
+    s, v = 0, base
+    while v <= n:
+        v *= base
+        s += 1
+    return s
+
+
+def is_power_of(base, n):
+    return n >= 1 and base ** floor_log(base, n) == n
+
+
+# ------------------------------------------------------------ AG patterns
+
+
+class AgSend:
+    __slots__ = ("src", "to", "blocks", "route")
+
+    def __init__(self, src, to, blocks, route):
+        self.src, self.to, self.blocks, self.route = src, to, blocks, route
+
+
+class ExchangeAg:
+    def __init__(self, name, n, num_steps, peers):
+        self.name, self.n = name, n
+        held = [{r} for r in range(n)]
+        self.sends_by_step = []
+        for k in range(num_steps):
+            pending = [set() for _ in range(n)]
+            step = []
+            for r in range(n):
+                for to, route in peers(k, r):
+                    if to == r:
+                        continue
+                    blocks = held[r] - held[to] - pending[to]
+                    if not blocks:
+                        continue
+                    pending[to] |= blocks
+                    step.append(AgSend(r, to, frozenset(blocks), route))
+            for r in range(n):
+                held[r] |= pending[r]
+            self.sends_by_step.append(step)
+
+    def num_steps(self):
+        return len(self.sends_by_step)
+
+    def sends(self, k):
+        return self.sends_by_step[k]
+
+    def is_complete(self):
+        held = [{r} for r in range(self.n)]
+        for step in self.sends_by_step:
+            for s in step:
+                held[s.to] |= s.blocks
+        return all(len(h) == self.n for h in held)
+
+
+def ordered(k, steps, order):
+    return k if order == "inc" else steps - 1 - k
+
+
+def trivance(n, order):
+    s = floor_log(3, n)
+    dists = [3 ** k for k in range(s)]
+    if not is_power_of(3, n):
+        dists.append(-(-(n - 3 ** s) // 2))  # div_ceil
+    if order == "dec":
+        dists = dists[::-1]
+    steps = len(dists)
+
+    def peers(k, r):
+        d = dists[k]
+        return [((r + d) % n, MIN), ((r - d) % n, MIN)]
+
+    return ExchangeAg(f"trivance(n={n})", n, steps, peers)
+
+
+def bruck(n, order, unidirectional):
+    steps = ceil_log(3, n)
+    route = directed(0, 1) if unidirectional else MIN
+
+    def peers(k, r):
+        p = 3 ** ordered(k, steps, order)
+        return [((r + p) % n, route), ((r + 2 * p) % n, route)]
+
+    return ExchangeAg(f"bruck(n={n})", n, steps, peers)
+
+
+def recdoub(n, order):
+    assert is_power_of(2, n)
+    steps = ceil_log(2, n)
+
+    def peers(k, r):
+        d = 1 << ordered(k, steps, order)
+        return [(r ^ d, MIN)]
+
+    return ExchangeAg(f"recdoub(n={n})", n, steps, peers)
+
+
+def swing_rho(k):
+    v = (1 - (-2) ** (k + 1)) // 3
+    return v
+
+
+def swing_peer(r, k, n):
+    rho = swing_rho(k)
+    p = r + rho if r % 2 == 0 else r - rho
+    return p % n
+
+
+def swing(n, order):
+    assert is_power_of(2, n)
+    steps = ceil_log(2, n)
+
+    def peers(k, r):
+        return [(swing_peer(r, ordered(k, steps, order), n), MIN)]
+
+    return ExchangeAg(f"swing(n={n})", n, steps, peers)
+
+
+def hamiltonian(n):
+    return ExchangeAg(f"ring(n={n})", n, n - 1, lambda k, r: [((r + 1) % n, MIN)])
+
+
+class ProductAg:
+    """Product/interleave lifting of per-dimension ring patterns."""
+
+    def __init__(self, name, torus, patterns, step_dims):
+        self.name, self.torus = name, torus
+        assert len(patterns) == torus.ndims()
+        self.ring_sends = [[p.sends(k) for k in range(p.num_steps())] for p in patterns]
+        self.ring_held = [simulate_held(p) for p in patterns]
+        self.step_dims = step_dims
+
+    @staticmethod
+    def round_robin(dims_steps, start):
+        d = len(dims_steps)
+        remaining = list(dims_steps)
+        total = sum(dims_steps)
+        out = []
+        i = start
+        while len(out) < total:
+            if remaining[i % d] > 0:
+                remaining[i % d] -= 1
+                out.append(i % d)
+            i += 1
+        return out
+
+    @staticmethod
+    def sequential(dims_steps, start):
+        d = len(dims_steps)
+        out = []
+        for i in range(d):
+            dim = (start + i) % d
+            out.extend([dim] * dims_steps[dim])
+        return out
+
+    def num_steps(self):
+        return len(self.step_dims)
+
+    @property
+    def n(self):
+        return self.torus.n
+
+    def sends(self, k):
+        d = self.step_dims[k]
+        t = sum(1 for x in self.step_dims[:k] if x == d)
+        ndims = self.torus.ndims()
+        t_of = [sum(1 for x in self.step_dims[:k] if x == e) for e in range(ndims)]
+        out = []
+        for rs in self.ring_sends[d][t]:
+            for r in range(self.torus.n):
+                if self.torus.coord(r, d) != rs.src:
+                    continue
+                c = self.torus.coords(r)
+                c[d] = rs.to
+                dst = self.torus.rank(c)
+                ranges = []
+                for e in range(ndims):
+                    if e == d:
+                        ranges.append(rs.blocks)
+                    else:
+                        ranges.append(self.ring_held[e][t_of[e]][self.torus.coord(r, e)])
+                blocks = self.torus.product_set(ranges)
+                if not blocks:
+                    continue
+                route = rs.route if rs.route == MIN else directed(d, rs.route[2])
+                out.append(AgSend(r, dst, frozenset(blocks), route))
+        return out
+
+    def is_complete(self):
+        held = [{r} for r in range(self.n)]
+        for k in range(self.num_steps()):
+            for s in self.sends(k):
+                held[s.to] |= s.blocks
+        return all(len(h) == self.n for h in held)
+
+
+def simulate_held(p):
+    n = p.n
+    held = [[{r} for r in range(n)]]
+    for k in range(p.num_steps()):
+        nxt = [set(h) for h in held[k]]
+        for s in p.sends(k):
+            nxt[s.to] |= s.blocks
+        held.append(nxt)
+    return held
+
+
+# ------------------------------------------------------------ schedule IR
+# A Send mirrors only what the SimPlan consumes: destination, pieces as
+# (blocks_set, kind), and the route hint. steps[k][src] = [Send, ...].
+
+
+class Send:
+    __slots__ = ("to", "pieces", "route")
+
+    def __init__(self, to, pieces, route):
+        self.to, self.pieces, self.route = to, pieces, route
+
+    def rel_bytes(self, n_blocks):
+        return sum(len(b) for b, _ in self.pieces) / n_blocks
+
+
+class Schedule:
+    def __init__(self, name, n, n_blocks):
+        self.name, self.n, self.n_blocks = name, n, n_blocks
+        self.steps = []
+
+    def push_step(self):
+        self.steps.append([[] for _ in range(self.n)])
+        return self.steps[-1]
+
+    def num_steps(self):
+        return len(self.steps)
+
+    def concat(self, other):
+        assert self.n == other.n and self.n_blocks == other.n_blocks
+        for st in other.steps:
+            mine = self.push_step()
+            for src in range(self.n):
+                mine[src].extend(st[src])
+
+    def node_sent_rel_bytes(self, node):
+        return sum(
+            snd.rel_bytes(self.n_blocks) for st in self.steps for snd in st[node]
+        )
+
+
+def allgather_schedule(p):
+    s = Schedule(f"ag", p.n, p.n)
+    for k in range(p.num_steps()):
+        st = s.push_step()
+        for ag in p.sends(k):
+            if not ag.blocks:
+                continue
+            st[ag.src].append(Send(ag.to, [(ag.blocks, "set")], ag.route))
+    return s
+
+
+def latency_allreduce(p):
+    n = p.n
+    steps = []
+    for k in range(p.num_steps()):
+        steps.append(
+            [
+                {"src": m.src, "to": m.to, "parts": [m.blocks], "route": m.route}
+                for m in p.sends(k)
+                if m.blocks
+            ]
+        )
+    while True:
+        state = [[(frozenset([r]), None)] for r in range(n)]
+        fixes = {}
+        for k in range(len(steps)):
+            for msg in steps[k]:
+                for part in msg["parts"]:
+                    for atom, prov in state[msg["src"]]:
+                        inter = atom & part
+                        if not inter or inter == atom:
+                            continue
+                        assert prov is not None, "own atoms are singletons"
+                        v = fixes.setdefault(prov, [])
+                        if part not in v:
+                            v.append(part)
+            for mi, msg in enumerate(steps[k]):
+                for pi, part in enumerate(msg["parts"]):
+                    state[msg["to"]].append((part, (k, mi, pi)))
+        if not fixes:
+            break
+        by_msg = {}
+        for (step, umi, upi), bs in fixes.items():
+            by_msg.setdefault((step, umi), []).append((upi, bs))
+        for (step, umi), splits in by_msg.items():
+            splits.sort(key=lambda x: x[0])
+            msg = steps[step][umi]
+            new_parts = []
+            for pi, part in enumerate(msg["parts"]):
+                pieces = [part]
+                hit = [b for upi, bs in splits if upi == pi for b in bs]
+                if hit:
+                    # Rust takes the *first* matching split entry only
+                    bounds = next(bs for upi, bs in splits if upi == pi)
+                    for b in bounds:
+                        nxt = []
+                        for pp in pieces:
+                            a = pp & b
+                            rest = pp - a
+                            if a:
+                                nxt.append(a)
+                            if rest:
+                                nxt.append(rest)
+                        pieces = nxt
+                new_parts.extend(pieces)
+            msg["parts"] = new_parts
+
+    s = Schedule("lat", n, n)
+    full = frozenset(range(n))
+    for step_msgs in steps:
+        st = s.push_step()
+        for msg in step_msgs:
+            st[msg["src"]].append(
+                Send(msg["to"], [(full, "reduce") for _ in msg["parts"]], msg["route"])
+            )
+    return s
+
+
+def reduce_scatter_schedule(p):
+    n = p.n
+    s_total = p.num_steps()
+    edges = [[] for _ in range(n)]
+    for k in range(s_total):
+        sends = p.sends(k)
+        for ag in sends:
+            for b in ag.blocks:
+                edges[b].append((k, ag.src, ag.to))
+    rs = Schedule("rs", n, n)
+    for _ in range(s_total):
+        rs.push_step()
+    groups = {}
+    for b in range(n):
+        subtree = {}
+        for t, u, v in reversed(edges[b]):
+            sub_v = subtree.pop(v, frozenset([v])) | {v}
+            groups.setdefault((s_total - 1 - t, v, u), []).append(b)
+            subtree[u] = subtree.get(u, frozenset([u])) | sub_v
+    for (t, src, dst) in sorted(groups):
+        blocks = frozenset(groups[(t, src, dst)])
+        rs.steps[t][src].append(Send(dst, [(blocks, "reduce")], MIN))
+    return rs
+
+
+def bandwidth_allreduce(p):
+    s = reduce_scatter_schedule(p)
+    s.concat(allgather_schedule(p))
+    return s
+
+
+def reflection_map(t):
+    out = []
+    for r in range(t.n):
+        c = [(a - x) % a for x, a in zip(t.coords(r), t.dims)]
+        out.append(t.rank(c))
+    return out
+
+
+def permute_schedule(s, mp):
+    assert s.n == s.n_blocks
+    out = Schedule(s.name + "-mirror", s.n, s.n_blocks)
+    for step in s.steps:
+        st = out.push_step()
+        for src in range(s.n):
+            for snd in step[src]:
+                pieces = [
+                    (frozenset(mp[b] for b in blocks), kind) for blocks, kind in snd.pieces
+                ]
+                route = snd.route
+                if route != MIN:
+                    route = directed(route[1], -route[2])
+                st[mp[src]].append(Send(mp[snd.to], pieces, route))
+    return out
+
+
+def concurrent_slices(slices, name):
+    n, nb = slices[0].n, slices[0].n_blocks
+    out = Schedule(name, n, len(slices) * nb)
+    for c, sl in enumerate(slices):
+        assert sl.n == n and sl.n_blocks == nb
+        while len(out.steps) < len(sl.steps):
+            out.push_step()
+        off = c * nb
+        for k, step in enumerate(sl.steps):
+            for src in range(n):
+                for snd in step[src]:
+                    pieces = [
+                        (frozenset(b + off for b in blocks), kind)
+                        for blocks, kind in snd.pieces
+                    ]
+                    out.steps[k][src].append(Send(snd.to, pieces, snd.route))
+    return out
+
+
+def virtual_pad_network(vs, n_real):
+    nv = vs.n
+    host = lambda v: (v * n_real) // nv
+    out = Schedule(vs.name + "-padded", n_real, vs.n_blocks)
+    for step in vs.steps:
+        st = out.push_step()
+        for src in range(nv):
+            hsrc = host(src)
+            for snd in step[src]:
+                hdst = host(snd.to)
+                if hsrc == hdst:
+                    continue
+                st[hsrc].append(Send(hdst, snd.pieces, snd.route))
+    return out
+
+
+def collapse_torus(s, vtorus, torus):
+    def host(v):
+        cs = [
+            (c * a) // av
+            for c, (av, a) in zip(vtorus.coords(v), zip(vtorus.dims, torus.dims))
+        ]
+        return torus.rank(cs)
+
+    out = Schedule(s.name + "-padded", torus.n, s.n_blocks)
+    for step in s.steps:
+        st = out.push_step()
+        for src in range(vtorus.n):
+            hsrc = host(src)
+            for snd in step[src]:
+                hdst = host(snd.to)
+                if hsrc == hdst:
+                    continue
+                st[hsrc].append(Send(hdst, snd.pieces, snd.route))
+    return out
+
+
+# ------------------------------------------------------------ hierarchical
+
+
+def lift_phase(out, torus, phase, dim, processed):
+    ndims = torus.ndims()
+
+    def lift_blocks(x, ring):
+        cnt = 1
+        ranges = []
+        for e in range(ndims):
+            if e == dim:
+                ranges.append(ring)
+            elif e in processed:
+                ranges.append(frozenset([torus.coord(x, e)]))
+            else:
+                ranges.append(frozenset(range(torus.dims[e])))
+        return torus.product_set(ranges)
+
+    for ring_step in phase.steps:
+        st = out.push_step()
+        for ring_src in range(phase.n):
+            for snd in ring_step[ring_src]:
+                for x in range(torus.n):
+                    if torus.coord(x, dim) != ring_src:
+                        continue
+                    c = torus.coords(x)
+                    c[dim] = snd.to
+                    dst = torus.rank(c)
+                    pieces = [
+                        (frozenset(lift_blocks(x, blocks)), kind)
+                        for blocks, kind in snd.pieces
+                    ]
+                    route = snd.route
+                    if route != MIN:
+                        route = directed(dim, route[2])
+                    st[x].append(Send(dst, pieces, route))
+
+
+def hierarchical_bandwidth(torus, patterns, dim_order, name):
+    out = Schedule(name, torus.n, torus.n)
+    processed = []
+    for d in dim_order:
+        rs = reduce_scatter_schedule(patterns[d])
+        lift_phase(out, torus, rs, d, processed)
+        processed.append(d)
+    for d in reversed(dim_order):
+        processed.remove(d)
+        ag = allgather_schedule(patterns[d])
+        lift_phase(out, torus, ag, d, processed)
+    return out
+
+
+# ------------------------------------------------------------ registry
+
+ALGOS = ["trivance", "bruck", "bruck-unidir", "swing", "recdoub", "bucket"]
+VARIANTS = ["L", "B"]
+
+
+def ring_pattern(algo, n, order):
+    if algo == "trivance":
+        p = trivance(n, order)
+        return p if p.is_complete() else None
+    if algo == "bruck":
+        p = bruck(n, order, False)
+        return p if p.is_complete() else None
+    if algo == "bruck-unidir":
+        p = bruck(n, order, True)
+        return p if p.is_complete() else None
+    if algo == "swing":
+        return swing(n, order) if is_power_of(2, n) else None
+    if algo == "recdoub":
+        return recdoub(n, order) if is_power_of(2, n) else None
+    if algo == "bucket":
+        return hamiltonian(n)
+    raise ValueError(algo)
+
+
+def derive(p, variant):
+    return latency_allreduce(p) if variant == "L" else bandwidth_allreduce(p)
+
+
+def mirrored_family(algo):
+    return algo in ("swing", "recdoub", "bucket")
+
+
+class Built:
+    def __init__(self, net, padded):
+        self.net, self.padded = net, padded
+
+
+def build(algo, variant, torus):
+    d = torus.ndims()
+    order = "inc" if variant == "L" else "dec"
+    native = [ring_pattern(algo, a, order) for a in torus.dims]
+    if all(p is not None for p in native):
+        dims_steps = [p.num_steps() for p in native]
+        slices = []
+        single_port_l = mirrored_family(algo) and variant == "L"
+        if d == 1 and (not mirrored_family(algo) or single_port_l):
+            slices.append(derive(native[0], variant))
+        elif single_port_l:
+            sd = ProductAg.sequential(dims_steps, 0)
+            prod = ProductAg(algo, torus, native, sd)
+            slices.append(derive(prod, variant))
+        else:
+            for start in range(d):
+                if variant == "B" and d >= 2:
+                    dim_order = [(start + i) % d for i in range(d)]
+                    sched = hierarchical_bandwidth(torus, native, dim_order, algo)
+                else:
+                    if mirrored_family(algo):
+                        sd = ProductAg.sequential(dims_steps, start)
+                    else:
+                        sd = ProductAg.round_robin(dims_steps, start)
+                    if d == 1:
+                        pat = native[0]
+                    else:
+                        pat = ProductAg(algo, torus, native, sd)
+                    sched = derive(pat, variant)
+                if mirrored_family(algo):
+                    mirror = permute_schedule(sched, reflection_map(torus))
+                    slices.append(sched)
+                    slices.append(mirror)
+                else:
+                    slices.append(sched)
+        if len(slices) == 1:
+            merged = slices[0]
+        else:
+            merged = concurrent_slices(slices, algo)
+        return Built(merged, False)
+
+    pad_base = 2 if algo in ("swing", "recdoub") else 3
+    padded_dims = [pad_base ** ceil_log(pad_base, a) for a in torus.dims]
+    if padded_dims == torus.dims:
+        return None
+    vtorus = Torus(padded_dims)
+    inner = build(algo, variant, vtorus)
+    if inner is None:
+        return None
+    # Rust pads from inner.exec; padding never nests here (the padded size
+    # is always natively supported), so inner.net == inner.exec.
+    if d == 1:
+        net = virtual_pad_network(inner.net, torus.n)
+    else:
+        net = collapse_torus(inner.net, vtorus, torus)
+    return Built(net, True)
+
+
+# ------------------------------------------------------------ SimPlan
+
+
+class Plan:
+    def __init__(self, schedule, torus):
+        assert schedule.n == torus.n
+        self.n = schedule.n
+        self.nsteps = schedule.num_steps()
+        self.num_links = torus.num_links()
+        self.msgs = []  # (src, dst, step, rel_bytes, route)
+        for k, step in enumerate(schedule.steps):
+            for src in range(self.n):
+                for snd in step[src]:
+                    rel = snd.rel_bytes(schedule.n_blocks)
+                    if rel <= 0.0:
+                        continue
+                    if snd.route == MIN:
+                        route = torus.route(src, snd.to)
+                    else:
+                        route = torus.route_directed(src, snd.to, snd.route[1], snd.route[2])
+                    self.msgs.append((src, snd.to, k, rel, route))
+        self.inject = {}
+        self.expected = {}
+        for i, (src, dst, k, rel, route) in enumerate(self.msgs):
+            self.inject.setdefault((src, k), []).append(i)
+            self.expected[(dst, k)] = self.expected.get((dst, k), 0) + 1
+
+    def injections(self, node, step):
+        return self.inject.get((node, step), [])
+
+    def expected_count(self, node, step):
+        return self.expected.get((node, step), 0)
+
+    def bytes(self, i, m_bytes):
+        return self.msgs[i][3] * float(m_bytes)
+
+    def bottleneck_serialization_s(self, m_bytes, params):
+        load = [0.0] * self.num_links
+        for (src, dst, k, rel, route) in self.msgs:
+            b = rel * float(m_bytes)
+            for l in route:
+                load[l] += b
+        return max(load, default=0.0) * 8.0 / params["bw"]
+
+
+DEFAULT_PARAMS = {"alpha": 1.5e-6, "bw": 800e9, "link_lat": 100e-9, "hop_lat": 100e-9}
+
+
+def per_hop(p):
+    return p["link_lat"] + p["hop_lat"]
+
+
+# ------------------------------------------------------------ flow simulator
+
+TIME_EPS = 1e-15
+SHARE_EPS = 1e-12
+
+
+def simulate_flow(plan, m_bytes, params):
+    n, nsteps = plan.n, plan.nsteps
+    if nsteps == 0:
+        return 0.0, 0
+    cap = params["bw"] / 8.0
+    ph = per_hop(params)
+
+    received = [0] * (n * nsteps)
+    entered = [-1] * n
+    heap = []
+    seq = 0
+
+    def push(t, ev):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, ev))
+
+    for r in range(n):
+        push(params["alpha"], ("step", r, 0))
+
+    active = []  # [msg, remaining, rate]
+    nactive = [0] * plan.num_links
+    touched = []
+    in_touched = [False] * plan.num_links
+    residual = [0.0] * plan.num_links
+    unfrozen = [0] * plan.num_links
+    now = 0.0
+    completion = 0.0
+    events = 0
+    need_recompute = False
+
+    def wf_inject(route):
+        for l in route:
+            if not in_touched[l]:
+                in_touched[l] = True
+                touched.append(l)
+            nactive[l] += 1
+
+    def wf_drain(route):
+        for l in route:
+            nactive[l] -= 1
+
+    def recompute():
+        nonlocal touched
+        keep = []
+        for l in touched:
+            if nactive[l] == 0:
+                in_touched[l] = False
+            else:
+                residual[l] = cap
+                unfrozen[l] = nactive[l]
+                keep.append(l)
+        touched = keep
+
+        unfrozen_flows = list(range(len(active)))
+        while unfrozen_flows:
+            min_share = float("inf")
+            for l in touched:
+                if unfrozen[l] > 0:
+                    share = residual[l] / unfrozen[l]
+                    if share < min_share:
+                        min_share = share
+            if min_share == float("inf"):
+                for fi in unfrozen_flows:
+                    active[fi][2] = cap
+                break
+            freeze = []
+            i = 0
+            while i < len(unfrozen_flows):
+                fi = unfrozen_flows[i]
+                share = float("inf")
+                for l in plan.msgs[active[fi][0]][4]:
+                    s = residual[l] / max(unfrozen[l], 1)
+                    if s < share:
+                        share = s
+                if share <= min_share * (1.0 + SHARE_EPS):
+                    freeze.append(fi)
+                    unfrozen_flows[i] = unfrozen_flows[-1]
+                    unfrozen_flows.pop()
+                else:
+                    i += 1
+            if not freeze:
+                for fi in unfrozen_flows:
+                    active[fi][2] = min_share
+                break
+            for fi in freeze:
+                active[fi][2] = min_share
+                for l in plan.msgs[active[fi][0]][4]:
+                    residual[l] -= min_share
+                    if residual[l] < 0.0:
+                        residual[l] = 0.0
+                    unfrozen[l] -= 1
+
+    while True:
+        t_event = heap[0][0] if heap else float("inf")
+        t_drain = float("inf")
+        for f in active:
+            if f[2] > 0.0:
+                t = now + f[1] / f[2]
+                if t < t_drain:
+                    t_drain = t
+        t_next = min(t_event, t_drain)
+        if t_next == float("inf"):
+            break
+        dt = t_next - now
+        if dt > 0.0:
+            for f in active:
+                f[1] -= f[2] * dt
+        now = t_next
+
+        i = 0
+        while i < len(active):
+            f = active[i]
+            if f[1] <= f[2] * TIME_EPS + 1e-9 * TIME_EPS or f[1] <= 1e-7:
+                active[i] = active[-1]
+                active.pop()
+                src, dst, k, rel, route = plan.msgs[f[0]]
+                wf_drain(route)
+                push(now + len(route) * ph, ("deliv", dst, k))
+                need_recompute = True
+            else:
+                i += 1
+
+        while heap and heap[0][0] <= now + max(TIME_EPS, now * 1e-12):
+            _, _, ev = heapq.heappop(heap)
+            events += 1
+            if ev[0] == "step":
+                _, node, step = ev
+                entered[node] = step
+                for mi in plan.injections(node, step):
+                    active.append([mi, plan.bytes(mi, m_bytes), 0.0])
+                    wf_inject(plan.msgs[mi][4])
+                    need_recompute = True
+                if (
+                    plan.expected_count(node, step) == received[node * nsteps + step]
+                    and step + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", node, step + 1))
+            else:
+                _, node, k = ev
+                completion = max(completion, now)
+                received[node * nsteps + k] += 1
+                if (
+                    received[node * nsteps + k] == plan.expected_count(node, k)
+                    and entered[node] == k
+                    and k + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", node, k + 1))
+
+        if need_recompute:
+            recompute()
+            need_recompute = False
+
+    return completion, events
+
+
+# ---------------------------------------------- reference packet simulator
+# Mirror of the pre-overhaul per-packet engine (one heap event per packet
+# per hop), with f64 packet sizes (the f32 narrowing is a Rust-level detail
+# that Python cannot reproduce; its effect is bounded separately).
+
+
+def simulate_packet_ref(plan, m_bytes, params, mtu):
+    n, nsteps = plan.n, plan.nsteps
+    if nsteps == 0:
+        return 0.0, 0
+    cap = params["bw"] / 8.0
+    ph = per_hop(params)
+
+    received = [0] * (n * nsteps)
+    entered = [-1] * n
+    pkts_left = []
+    for i in range(len(plan.msgs)):
+        b = plan.bytes(i, m_bytes)
+        pkts_left.append(max(int(-(-b // mtu)), 1))
+    free_at = [0.0] * plan.num_links
+    heap = []
+    seq = 0
+
+    def push(t, ev):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, ev))
+
+    for r in range(n):
+        push(params["alpha"], ("step", r, 0))
+
+    completion = 0.0
+    events = 0
+    while heap:
+        now, _, ev = heapq.heappop(heap)
+        events += 1
+        if ev[0] == "step":
+            _, node, step = ev
+            entered[node] = step
+            for mi in plan.injections(node, step):
+                full = pkts_left[mi]
+                left = plan.bytes(mi, m_bytes)
+                for _ in range(full):
+                    sz = min(left, float(mtu))
+                    left -= min(sz, left)
+                    push(now, ("pkt", mi, 0, sz))
+            if (
+                plan.expected_count(node, step) == received[node * nsteps + step]
+                and step + 1 < nsteps
+            ):
+                push(now + params["alpha"], ("step", node, step + 1))
+        else:
+            _, mi, hop, sz = ev
+            src, dst, k, rel, route = plan.msgs[mi]
+            if hop == len(route):
+                pkts_left[mi] -= 1
+                if pkts_left[mi] == 0:
+                    completion = max(completion, now)
+                    received[dst * nsteps + k] += 1
+                    if (
+                        received[dst * nsteps + k] == plan.expected_count(dst, k)
+                        and entered[dst] == k
+                        and k + 1 < nsteps
+                    ):
+                        push(now + params["alpha"], ("step", dst, k + 1))
+            else:
+                l = route[hop]
+                start = max(now, free_at[l])
+                end = start + sz / cap
+                free_at[l] = end
+                push(end + ph, ("pkt", mi, hop + 1, sz))
+    return completion, events
+
+
+# ------------------------------------------------ batched packet simulator
+# The overhauled engine: each message's packets on a link are one contiguous
+# busy interval; heap traffic is O(messages x hops). Must stay in sync with
+# rust/src/sim/packet.rs.
+
+
+def simulate_packet_batched(plan, m_bytes, params, mtu):
+    n, nsteps = plan.n, plan.nsteps
+    if nsteps == 0:
+        return 0.0, 0
+    cap = params["bw"] / 8.0
+    ph = per_hop(params)
+
+    received = [0] * (n * nsteps)
+    entered = [-1] * n
+    free_at = [0.0] * plan.num_links
+    heap = []
+    seq = 0
+
+    def push(t, ev):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, ev))
+
+    for r in range(n):
+        push(params["alpha"], ("step", r, 0))
+
+    completion = 0.0
+    events = 0
+    while heap:
+        now, _, ev = heapq.heappop(heap)
+        events += 1
+        if ev[0] == "step":
+            _, node, step = ev
+            entered[node] = step
+            for mi in plan.injections(node, step):
+                push(now, ("batch", mi, 0))
+            if (
+                plan.expected_count(node, step) == received[node * nsteps + step]
+                and step + 1 < nsteps
+            ):
+                push(now + params["alpha"], ("step", node, step + 1))
+        else:
+            _, mi, hop = ev
+            src, dst, k, rel, route = plan.msgs[mi]
+            if hop == len(route):
+                completion = max(completion, now)
+                received[dst * nsteps + k] += 1
+                if (
+                    received[dst * nsteps + k] == plan.expected_count(dst, k)
+                    and entered[dst] == k
+                    and k + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", dst, k + 1))
+            else:
+                total = plan.bytes(mi, m_bytes)
+                l = route[hop]
+                start = max(now, free_at[l])
+                batch_end = start + total / cap
+                free_at[l] = batch_end
+                if hop + 1 == len(route):
+                    # last link: the tail packet arrives per_hop after the
+                    # batch fully serializes
+                    push(batch_end + ph, ("batch", mi, hop + 1))
+                else:
+                    # cut-through: the head packet is available at the next
+                    # link one head-serialization + per_hop after the batch
+                    # starts; contiguity downstream is guaranteed because
+                    # every link runs at the same rate and the head packet
+                    # is the largest (the only short packet is the tail).
+                    head = min(total, float(mtu))
+                    push(start + head / cap + ph, ("batch", mi, hop + 1))
+    return completion, events
+
+
+# ------------------------------------------------------------ registry sweep
+
+
+def crosscheck(dims, algo, variant, m, mtu=4096, params=None, engine=simulate_packet_batched):
+    params = params or DEFAULT_PARAMS
+    t = Torus(dims)
+    b = build(algo, variant, t)
+    if b is None:
+        return None
+    plan = Plan(b.net, t)
+    f, _ = simulate_flow(plan, m, params)
+    k, _ = engine(plan, m, params, mtu)
+    if k <= 0.0:
+        return ("ZERO", f, k)
+    rel = abs(f - k) / k
+    return (rel, f, k)
