@@ -101,7 +101,23 @@ fn net_params(args: &Args) -> Result<NetParams, String> {
     if let Some(a) = args.get("alpha-us") {
         p.alpha_s = a.parse::<f64>().map_err(|e| format!("bad --alpha-us: {e}"))? * 1e-6;
     }
+    p.validate();
     Ok(p)
+}
+
+/// Parse `--mode flow|packet` (+ `--mtu` for packet mode).
+fn parse_mode(args: &Args) -> Result<SimMode, String> {
+    match args.get("mode").unwrap_or("flow") {
+        "flow" => Ok(SimMode::Flow),
+        "packet" => Ok(SimMode::Packet {
+            mtu: args
+                .get("mtu")
+                .map(|s| s.parse().map_err(|e| format!("bad --mtu: {e}")))
+                .transpose()?
+                .unwrap_or(4096),
+        }),
+        other => Err(format!("unknown --mode {other:?}")),
+    }
 }
 
 const USAGE: &str = "\
@@ -112,19 +128,27 @@ USAGE:
                     [--no-plan-cache]
   trivance simulate --topo 8x8 [--algo A] [--variant L|B] [--size 1MiB]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
+  trivance scenarios [--topo 4x4x4] [--quick] [--max-size 4MiB] [--threads N]
+                    [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
+                    [--no-plan-cache]
   trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
-                    [--no-plan-cache]
+                    [--no-plan-cache] [--no-scenarios]
   trivance validate --topo 27 [--algo A]
   trivance verify   --topo 9  [--algo A] [--block-len 8] [--pjrt]
   trivance pattern  --n 9 [--algo trivance|bruck]
   trivance optimality --topo 81
   trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
 
+scenarios sweeps the registry under named network-model presets (uniform /
+hetero-dims / straggler / faulty) and renders per-scenario tables relative
+to Trivance; bench-sweep includes the same presets as per-scenario rows in
+BENCH_sweep.json (schema v2) unless --no-scenarios.
+
 --threads 0 (default) uses every core; sweep results are identical for any
 thread count. Simulation plans are shared process-wide via a cache keyed by
-(algo, variant, dims); --no-plan-cache forces fresh builds (results are
-bit-identical either way).
+(algo, variant, dims, net-model fingerprint); --no-plan-cache forces fresh
+builds (results are bit-identical either way).
 
 IDs: table1 table2 fig6a fig6b fig7a fig7b fig8 fig9 fig10
 Algorithms: trivance bruck bruck-unidir swing recdoub bucket
@@ -149,6 +173,7 @@ fn run(argv: Vec<String>) -> Result<(), String> {
     let args = Args::parse(rest)?;
     match cmd.as_str() {
         "figures" => figures(&args),
+        "scenarios" => scenarios_cmd(&args),
         "bench-sweep" => bench_sweep_cmd(&args),
         "simulate" => simulate_cmd(&args),
         "validate" => validate_cmd(&args),
@@ -218,10 +243,56 @@ fn figures(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// Sweep the registry under the named network-model presets (uniform /
+/// hetero-dims / straggler / faulty) and render per-scenario tables
+/// relative to Trivance.
+fn scenarios_cmd(args: &Args) -> Result<(), String> {
+    use crate::harness::scenarios::{presets, run_scenarios};
+    use crate::harness::sweep::size_ladder;
+    let quick = args.has("quick");
+    let torus = match args.get("topo") {
+        Some(t) => parse_topo(t)?,
+        None if quick => Torus::new(&[3, 3]),
+        None => Torus::new(&[4, 4, 4]),
+    };
+    let max = args
+        .get("max-size")
+        .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --max-size {s:?}")))
+        .transpose()?
+        .unwrap_or(if quick { 256 << 10 } else { 4 << 20 });
+    let threads = parse_threads(args)?;
+    apply_plan_cache_flag(args);
+    let params = net_params(args)?;
+    let mode = parse_mode(args)?;
+    let sizes = size_ladder(max);
+
+    eprintln!(
+        "[scenarios] {:?} ({} nodes), {} sizes up to {}, 4 presets ...",
+        torus.dims(),
+        torus.n(),
+        sizes.len(),
+        fmt::bytes(max),
+    );
+    let t0 = std::time::Instant::now();
+    let sweep = run_scenarios(&torus, &Algo::ALL, &sizes, &params, &presets(), threads, mode);
+    println!(
+        "{}",
+        sweep.render(&format!(
+            "Scenario sweep — {:?} ({} nodes), completion relative to Trivance",
+            torus.dims(),
+            torus.n()
+        ))
+    );
+    println!("done in {:.1}s; {}", t0.elapsed().as_secs_f64(), plan_cache_stats());
+    Ok(())
+}
+
 /// Full-registry sweep with wall-clock accounting; writes the
 /// machine-readable `BENCH_sweep.json` perf record (the acceptance artifact
-/// future PRs diff against).
+/// future PRs diff against). Schema v2 adds per-scenario rows from the
+/// named presets (`--no-scenarios` skips them).
 fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
+    use crate::harness::scenarios::{presets, run_scenarios};
     use crate::harness::sweep::{run_sweep_timed, size_ladder, write_bench_json};
     let torus = match args.get("topo") {
         Some(t) => parse_topo(t)?,
@@ -247,8 +318,15 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
     );
     let t0 = std::time::Instant::now();
     let (sweep, timing) = run_sweep_timed(&torus, &Algo::ALL, &sizes, &params, threads);
+    let scenario_sweep = if args.has("no-scenarios") {
+        None
+    } else {
+        eprintln!("[bench-sweep] scenario presets ...");
+        Some(run_scenarios(&torus, &Algo::ALL, &sizes, &params, &presets(), threads, SimMode::Flow))
+    };
     let wall = t0.elapsed().as_secs_f64();
-    write_bench_json(out, &sweep, &timing).map_err(|e| format!("writing {out}: {e}"))?;
+    write_bench_json(out, &sweep, &timing, scenario_sweep.as_ref())
+        .map_err(|e| format!("writing {out}: {e}"))?;
 
     println!("{}", sweep.render("bench-sweep — completion relative to Trivance"));
     println!(
@@ -267,17 +345,7 @@ fn simulate_cmd(args: &Args) -> Result<(), String> {
         .transpose()?
         .unwrap_or(1 << 20);
     let params = net_params(args)?;
-    let mode = match args.get("mode").unwrap_or("flow") {
-        "flow" => SimMode::Flow,
-        "packet" => SimMode::Packet {
-            mtu: args
-                .get("mtu")
-                .map(|s| s.parse().map_err(|e| format!("bad --mtu: {e}")))
-                .transpose()?
-                .unwrap_or(4096),
-        },
-        other => return Err(format!("unknown --mode {other:?}")),
-    };
+    let mode = parse_mode(args)?;
     let algos: Vec<Algo> = match args.get("algo") {
         Some(a) => vec![parse_algo(a)?],
         None => Algo::ALL.to_vec(),

@@ -6,6 +6,19 @@
 //! crossing the bottleneck link in step `k` — extracted from the actual
 //! schedule routed on the actual topology by
 //! [`crate::schedule::analysis::analyze`].
+//!
+//! ## Heterogeneous links
+//!
+//! [`NetParams`] describes the *base* fabric (the paper's uniform SST
+//! configuration). Under a per-link [`crate::net::NetModel`], the step
+//! bottleneck generalizes from `β · max_l bytes_l` to
+//! `max_l bytes_l · 8 / bw_l` — the most *time-expensive* link, not the
+//! most loaded one. [`crate::schedule::analysis::analyze_with_model`] bakes
+//! the per-link scales (and down-link detours) into the returned
+//! [`ScheduleStats`], so [`eq1_completion_time`] applied to those stats
+//! already prices the heterogeneous bottleneck; [`eq1_with_hops_model`]
+//! additionally prices per-link propagation/processing scales. On a
+//! uniform model both collapse bit-identically to the classic forms.
 
 pub mod optimality;
 
@@ -41,8 +54,40 @@ impl Default for NetParams {
 
 impl NetParams {
     pub fn with_bandwidth_gbps(mut self, gbps: f64) -> Self {
+        assert!(
+            gbps.is_finite() && gbps > 0.0,
+            "NetParams bandwidth must be finite and > 0 Gb/s, got {gbps} \
+             (zero or negative bandwidth makes β infinite or negative)"
+        );
         self.link_bw_bps = gbps * 1e9;
         self
+    }
+
+    /// Panic with a clear diagnostic on parameters that would silently
+    /// poison every downstream time: non-positive bandwidth (infinite β),
+    /// negative or non-finite latencies. Called by the simulator entry
+    /// points and the CLI parameter builder.
+    pub fn validate(&self) {
+        assert!(
+            self.link_bw_bps.is_finite() && self.link_bw_bps > 0.0,
+            "NetParams::link_bw_bps must be finite and > 0, got {}",
+            self.link_bw_bps
+        );
+        assert!(
+            self.alpha_s.is_finite() && self.alpha_s >= 0.0,
+            "NetParams::alpha_s must be finite and >= 0, got {}",
+            self.alpha_s
+        );
+        assert!(
+            self.link_latency_s.is_finite() && self.link_latency_s >= 0.0,
+            "NetParams::link_latency_s must be finite and >= 0, got {}",
+            self.link_latency_s
+        );
+        assert!(
+            self.hop_latency_s.is_finite() && self.hop_latency_s >= 0.0,
+            "NetParams::hop_latency_s must be finite and >= 0, got {}",
+            self.hop_latency_s
+        );
     }
 
     /// β: transmission time per byte (seconds).
@@ -72,6 +117,21 @@ pub fn eq1_with_hops(stats: &ScheduleStats, m_bytes: u64, p: &NetParams) -> f64 
         .steps
         .iter()
         .map(|s| s.max_hops as f64 * p.per_hop_s())
+        .sum();
+    eq1_completion_time(stats, m_bytes, p) + hop
+}
+
+/// [`eq1_with_hops`] for stats produced by
+/// [`crate::schedule::analysis::analyze_with_model`]: the per-step hop term
+/// prices each route's *scaled* propagation and processing latencies
+/// (`max_route_lat_rel · link_latency + max_route_proc_rel ·
+/// hop_latency`) instead of `max_hops · per_hop`. The transmission term is
+/// already heterogeneity-aware through the scaled `tx_delay_rel`.
+pub fn eq1_with_hops_model(stats: &ScheduleStats, m_bytes: u64, p: &NetParams) -> f64 {
+    let hop: f64 = stats
+        .steps
+        .iter()
+        .map(|s| s.max_route_lat_rel * p.link_latency_s + s.max_route_proc_rel * p.hop_latency_s)
         .sum();
     eq1_completion_time(stats, m_bytes, p) + hop
 }
@@ -148,6 +208,63 @@ mod tests {
         assert!((o.theta - 2.0).abs() < 1e-9, "theta {}", o.theta);
         assert!((o.lambda - 2.0).abs() < 1e-9);
         assert!((o.delta - (1.0 - 1.0 / 27.0)).abs() < 1e-9);
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth must be finite and > 0")]
+    fn zero_bandwidth_rejected() {
+        let _ = NetParams::default().with_bandwidth_gbps(0.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "link_latency_s must be finite and >= 0")]
+    fn negative_latency_rejected() {
+        let mut p = NetParams::default();
+        p.link_latency_s = -1e-9;
+        p.validate();
+    }
+
+    #[test]
+    fn eq1_model_collapses_to_classic_on_uniform() {
+        let t = crate::topology::Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = NetParams::default();
+        let m = 1u64 << 20;
+        let classic = analyze(&s, &t);
+        let model = crate::net::NetModel::uniform(&t);
+        let stats = crate::schedule::analysis::analyze_with_model(&s, &model);
+        // transmission term is bit-identical; the hop term regroups the
+        // same product (h·(a+b) vs h·a + h·b), so compare to relative eps
+        assert_eq!(
+            eq1_completion_time(&classic, m, &p).to_bits(),
+            eq1_completion_time(&stats, m, &p).to_bits()
+        );
+        let a = eq1_with_hops(&classic, m, &p);
+        let b = eq1_with_hops_model(&stats, m, &p);
+        assert!((a - b).abs() <= a * 1e-12, "{a} vs {b}");
+    }
+
+    #[test]
+    fn eq1_model_prices_straggled_bottleneck() {
+        // slowing every link in one ring direction must raise the Eq. 1
+        // estimate: the bottleneck is now bytes/bw on the slowed links
+        let t = crate::topology::Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let p = NetParams::default();
+        let m = 1u64 << 20;
+        let mut model = crate::net::NetModel::uniform(&t);
+        for node in 0..t.n() {
+            let l = t.link_index(crate::topology::Link { node, dim: 0, dir: 1 });
+            model.set_class(l, crate::net::LinkClass::slowdown(4.0));
+        }
+        let base = analyze(&s, &t);
+        let stats = crate::schedule::analysis::analyze_with_model(&s, &model);
+        let slow = eq1_completion_time(&stats, m, &p);
+        let fast = eq1_completion_time(&base, m, &p);
+        assert!(slow > fast, "straggled {slow} must exceed uniform {fast}");
+        // every step's bottleneck sits on a 4x-slower link: tx scales by 4
+        let expect = 2.0 * p.alpha_s + 4.0 * (fast - 2.0 * p.alpha_s);
+        assert!((slow - expect).abs() < expect * 1e-9, "{slow} vs {expect}");
     }
 
     #[test]

@@ -3,12 +3,14 @@
 //! Every figure takes a `threads` knob (`0` = all cores) that is forwarded
 //! to the parallel sweep engine; results are identical for any value.
 //! Sweeps share simulation plans through the process-wide
-//! [`crate::sim::PlanCache`], so `fig8`'s six per-bandwidth sweeps compile
-//! each `(algo, variant)` plan once, and a `figures --all` run reuses plans
-//! across figures that revisit a topology (results are bit-identical with
-//! the cache disabled via `--no-plan-cache`).
+//! [`crate::sim::PlanCache`]; `fig8` evaluates its whole `(bandwidth,
+//! size, algo)` grid as **one** task pool over shared plans
+//! ([`run_sweep_multi`]) instead of six sequential sweeps, and a
+//! `figures --all` run reuses plans across figures that revisit a topology
+//! (results are bit-identical with the cache disabled via
+//! `--no-plan-cache`).
 
-use super::sweep::{run_sweep_threads, size_ladder};
+use super::sweep::{run_sweep_multi, run_sweep_threads, size_ladder};
 use crate::algo::Algo;
 use crate::cost::NetParams;
 use crate::topology::Torus;
@@ -82,19 +84,13 @@ pub fn fig8(quick: bool, threads: usize) -> String {
             .chain(bandwidths.iter().map(|b| format!("{b:.0} Gb/s Δ%")))
             .collect::<Vec<_>>(),
     );
-    // one sweep per bandwidth
-    let sweeps: Vec<_> = bandwidths
+    // one build, one task pool over the whole (bandwidth, size, algo) grid
+    // (plans are bandwidth-independent, so every sweep shares them)
+    let params_list: Vec<NetParams> = bandwidths
         .iter()
-        .map(|&bw| {
-            run_sweep_threads(
-                &t,
-                &POW2_ALGOS,
-                &sizes,
-                &NetParams::default().with_bandwidth_gbps(bw),
-                threads,
-            )
-        })
+        .map(|&bw| NetParams::default().with_bandwidth_gbps(bw))
         .collect();
+    let sweeps = run_sweep_multi(&t, &POW2_ALGOS, &sizes, &params_list, threads);
     for (si, &m) in sizes.iter().enumerate() {
         let mut row = vec![fmt::bytes(m)];
         for sw in &sweeps {

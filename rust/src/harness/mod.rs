@@ -19,6 +19,7 @@
 
 pub mod sweep;
 pub mod figures;
+pub mod scenarios;
 pub mod tables;
 pub mod pattern;
 pub mod train;

@@ -1,0 +1,399 @@
+//! Scenario harness: named [`NetModel`] presets swept over the algorithm
+//! registry — the tooling that answers "does Trivance's congestion
+//! advantage survive a degraded fabric?" with tables instead of
+//! hand-waving.
+//!
+//! A [`Scenario`] names one network condition; [`presets`] provides the
+//! four canonical ones:
+//!
+//! | name          | fabric                                                  |
+//! |---------------|---------------------------------------------------------|
+//! | `uniform`     | the paper's §6 homogeneous network (baseline)           |
+//! | `hetero-dims` | dimension `d` at `2^-d` bandwidth (TPU-style fast/slow) |
+//! | `straggler`   | 2 deterministic links slowed 4x                         |
+//! | `faulty`      | 1 deterministic link down, traffic rerouted             |
+//!
+//! [`run_scenarios`] evaluates the whole `(scenario, algo, size)` grid as
+//! **one** task pool under a single [`crate::util::par::par_map`] — not one
+//! sweep per scenario — so thread utilization is flat across the grid and
+//! results are bit-identical for any thread count. Plans are shared
+//! through the process-wide [`PlanCache`] keyed by the scenario model's
+//! fingerprint: the `uniform` scenario reuses (and is bit-identical to)
+//! the plain sweep's plans, while any heterogeneous scenario gets its own
+//! entries — never a false hit.
+
+use crate::algo::{build, Algo, BuiltCollective, Variant};
+use crate::cost::NetParams;
+use crate::net::NetModel;
+use crate::sim::{simulate_plan, PlanCache, PlanKey, SimMode, SimPlan};
+use crate::topology::Torus;
+use crate::util::{fmt, par};
+use std::sync::Arc;
+
+use super::sweep::{completion_key, BestPoint};
+
+/// Seed behind the deterministic straggler link picks (mirrored in
+/// `tools/pysim`).
+pub const STRAGGLER_SEED: u64 = 0x5EED_0001;
+/// Seed behind the deterministic faulty link picks.
+pub const FAULTY_SEED: u64 = 0x5EED_0002;
+
+/// How a scenario derives its [`NetModel`] from the topology.
+#[derive(Clone, Debug)]
+pub enum ScenarioKind {
+    /// The paper's homogeneous fabric.
+    Uniform,
+    /// Dimension `d` runs at `2^-d` of the base bandwidth.
+    HeteroDims,
+    /// `k` deterministic links slowed by `factor`.
+    Straggler { k: usize, factor: f64 },
+    /// `k` deterministic links down (selection keeps the graph strongly
+    /// connected; traffic detours).
+    Faulty { k: usize },
+}
+
+/// A named network condition to sweep the registry under.
+#[derive(Clone, Debug)]
+pub struct Scenario {
+    pub name: String,
+    pub desc: String,
+    pub kind: ScenarioKind,
+}
+
+impl Scenario {
+    /// Instantiate the scenario's network model on `torus`.
+    pub fn model(&self, torus: &Torus) -> NetModel {
+        match &self.kind {
+            ScenarioKind::Uniform => NetModel::uniform(torus),
+            ScenarioKind::HeteroDims => {
+                let scales: Vec<f64> =
+                    (0..torus.ndims()).map(|d| 1.0 / (1u64 << d) as f64).collect();
+                NetModel::hetero_dims(torus, &scales)
+            }
+            ScenarioKind::Straggler { k, factor } => {
+                NetModel::straggler(torus, *k, *factor, STRAGGLER_SEED)
+            }
+            ScenarioKind::Faulty { k } => NetModel::faulty(torus, *k, FAULTY_SEED),
+        }
+    }
+}
+
+/// The four canonical presets (module docs).
+pub fn presets() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "uniform".into(),
+            desc: "paper §6 homogeneous fabric (baseline)".into(),
+            kind: ScenarioKind::Uniform,
+        },
+        Scenario {
+            name: "hetero-dims".into(),
+            desc: "dimension d at 2^-d bandwidth".into(),
+            kind: ScenarioKind::HeteroDims,
+        },
+        Scenario {
+            name: "straggler".into(),
+            desc: "2 links slowed 4x".into(),
+            kind: ScenarioKind::Straggler { k: 2, factor: 4.0 },
+        },
+        Scenario {
+            name: "faulty".into(),
+            desc: "1 link down, traffic rerouted".into(),
+            kind: ScenarioKind::Faulty { k: 1 },
+        },
+    ]
+}
+
+/// Full scenario-sweep result: `points[scenario][size][algo]`, each cell
+/// the best variant's completion ([`BestPoint`], shared with the plain
+/// sweep engine).
+pub struct ScenarioSweep {
+    pub torus: Torus,
+    pub sizes: Vec<u64>,
+    pub algos: Vec<Algo>,
+    pub scenarios: Vec<Scenario>,
+    /// Per scenario: did a non-uniform preset instantiate to the uniform
+    /// model on this topology (e.g. hetero-dims on a 1-D ring)? Flagged in
+    /// the report so a baseline copy is never mistaken for a degraded run.
+    pub degenerate: Vec<bool>,
+    pub points: Vec<Vec<Vec<BestPoint>>>,
+}
+
+/// Sweep `scenarios × algos × sizes` on `torus` as one parallel task pool
+/// (module docs). Unsupported algorithms are skipped, as in the figures.
+pub fn run_scenarios(
+    torus: &Torus,
+    algos: &[Algo],
+    sizes: &[u64],
+    params: &NetParams,
+    scenarios: &[Scenario],
+    threads: usize,
+    mode: SimMode,
+) -> ScenarioSweep {
+    params.validate();
+    // Build each algorithm's variants once — the schedules do not depend on
+    // the network model, only their routed plans do.
+    let built: Vec<(Algo, Vec<BuiltCollective>)> = algos
+        .iter()
+        .filter_map(|&algo| {
+            let variants: Vec<BuiltCollective> = Variant::ALL
+                .iter()
+                .filter_map(|&v| build(algo, v, torus).ok())
+                .collect();
+            (!variants.is_empty()).then_some((algo, variants))
+        })
+        .collect();
+
+    // Per scenario: instantiate the model and resolve plans through the
+    // fingerprint-keyed cache. A preset can degenerate to the uniform
+    // model on some topologies (hetero-dims on a ring has nothing to
+    // scale) — record that so the report says so instead of presenting a
+    // baseline copy as a degraded fabric.
+    let cache = PlanCache::global();
+    let models: Vec<NetModel> = scenarios.iter().map(|sc| sc.model(torus)).collect();
+    let degenerate: Vec<bool> = scenarios
+        .iter()
+        .zip(&models)
+        .map(|(sc, model)| {
+            !matches!(sc.kind, ScenarioKind::Uniform) && model.is_uniform()
+        })
+        .collect();
+    let plans: Vec<Vec<Vec<Arc<SimPlan>>>> = models
+        .iter()
+        .map(|model| {
+            let fp = model.fingerprint();
+            built
+                .iter()
+                .map(|(algo, variants)| {
+                    variants
+                        .iter()
+                        .map(|b| {
+                            cache.get_or_build(
+                                PlanKey::with_net_fp(*algo, b.variant, torus.dims(), fp),
+                                || SimPlan::build_with_model(&b.net, model),
+                            )
+                        })
+                        .collect()
+                })
+                .collect()
+        })
+        .collect();
+
+    // One task per (scenario, size, algo) cell, fanned out together.
+    let tasks: Vec<(usize, usize, usize)> = (0..scenarios.len())
+        .flat_map(|ci| {
+            (0..sizes.len()).flat_map(move |si| (0..built.len()).map(move |ai| (ci, si, ai)))
+        })
+        .collect();
+    let evaluated: Vec<BestPoint> = par::par_map(&tasks, threads, |_, &(ci, si, ai)| {
+        built[ai]
+            .1
+            .iter()
+            .zip(&plans[ci][ai])
+            .map(|(b, plan)| BestPoint {
+                completion_s: simulate_plan(plan, sizes[si], params, mode).completion_s,
+                variant: b.variant,
+            })
+            .min_by(|a, b| completion_key(a.completion_s).total_cmp(&completion_key(b.completion_s)))
+            .expect("variant set is non-empty")
+    });
+
+    let mut it = evaluated.into_iter();
+    let points: Vec<Vec<Vec<BestPoint>>> = (0..scenarios.len())
+        .map(|_| {
+            (0..sizes.len())
+                .map(|_| (0..built.len()).map(|_| it.next().expect("grid arity")).collect())
+                .collect()
+        })
+        .collect();
+
+    ScenarioSweep {
+        torus: torus.clone(),
+        sizes: sizes.to_vec(),
+        algos: built.iter().map(|(a, _)| *a).collect(),
+        scenarios: scenarios.to_vec(),
+        degenerate,
+        points,
+    }
+}
+
+impl ScenarioSweep {
+    fn trivance_idx(&self) -> usize {
+        self.algos
+            .iter()
+            .position(|&a| a == Algo::Trivance)
+            .expect("scenario sweep must include trivance")
+    }
+
+    /// Completion of `algo` relative to Trivance in scenario `ci` at size
+    /// index `si` (`>1` = Trivance faster).
+    pub fn rel_to_trivance(&self, ci: usize, algo: Algo, si: usize) -> f64 {
+        let ti = self.trivance_idx();
+        let ai = self.algos.iter().position(|&a| a == algo).expect("algo in sweep");
+        self.points[ci][si][ai].completion_s / self.points[ci][si][ti].completion_s
+    }
+
+    /// Markdown report: one relative-to-Trivance table per scenario, plus a
+    /// cross-scenario summary of the best existing approach vs Trivance.
+    pub fn render(&self, title: &str) -> String {
+        let ti = self.trivance_idx();
+        let mut out = format!("### {title}\n\n");
+        for (ci, sc) in self.scenarios.iter().enumerate() {
+            let tag = if self.degenerate[ci] {
+                " — NO-OP on this topology (identical to uniform)"
+            } else {
+                ""
+            };
+            out.push_str(&format!("#### scenario `{}` — {}{}\n\n", sc.name, sc.desc, tag));
+            let mut header = vec!["size".to_string()];
+            for &a in &self.algos {
+                header.push(a.label().to_string());
+                if a != Algo::Trivance {
+                    header.push(format!("{} Δ%", a.label()));
+                }
+            }
+            let mut t = fmt::Table::new(header);
+            for (si, &m) in self.sizes.iter().enumerate() {
+                let base = self.points[ci][si][ti].completion_s;
+                let mut row = vec![fmt::bytes(m)];
+                for (ai, _) in self.algos.iter().enumerate() {
+                    let p = &self.points[ci][si][ai];
+                    row.push(format!("{} ({})", fmt::secs(p.completion_s), p.variant.label()));
+                    if ai != ti {
+                        let rel = (p.completion_s / base - 1.0) * 100.0;
+                        row.push(format!("{rel:+.1}%"));
+                    }
+                }
+                t.row(row);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        // summary: best existing approach relative to Trivance, per scenario
+        let mut t = fmt::Table::new(
+            std::iter::once("size".to_string())
+                .chain(self.scenarios.iter().map(|s| format!("{} Δ%", s.name)))
+                .collect::<Vec<_>>(),
+        );
+        for (si, &m) in self.sizes.iter().enumerate() {
+            let mut row = vec![fmt::bytes(m)];
+            for ci in 0..self.scenarios.len() {
+                let best_rel = self
+                    .algos
+                    .iter()
+                    .filter(|&&a| a != Algo::Trivance)
+                    .map(|&a| self.rel_to_trivance(ci, a, si))
+                    .fold(f64::INFINITY, f64::min);
+                row.push(format!("{:+.1}%", (best_rel - 1.0) * 100.0));
+            }
+            t.row(row);
+        }
+        out.push_str("#### best existing approach relative to Trivance, per scenario\n\n");
+        out.push_str(&t.render());
+        out.push_str("\npositive = Trivance faster than every existing approach at that point\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_cover_the_four_conditions() {
+        let p = presets();
+        assert_eq!(p.len(), 4);
+        let names: Vec<&str> = p.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["uniform", "hetero-dims", "straggler", "faulty"]);
+        let t = Torus::new(&[3, 3]);
+        assert!(p[0].model(&t).is_uniform());
+        for sc in &p[1..] {
+            assert!(!sc.model(&t).is_uniform(), "{} must not be uniform", sc.name);
+        }
+    }
+
+    #[test]
+    fn scenario_grid_shape_and_uniform_baseline() {
+        let t = Torus::new(&[3, 3]);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket, Algo::Swing];
+        let sizes = [4096u64, 256 << 10];
+        let p = NetParams::default();
+        let sw = run_scenarios(&t, &algos, &sizes, &p, &presets(), 0, SimMode::Flow);
+        assert_eq!(sw.scenarios.len(), 4);
+        assert!(sw.degenerate.iter().all(|&d| !d), "no preset degenerates on 3x3");
+        assert_eq!(sw.points.len(), 4);
+        assert_eq!(sw.points[0].len(), sizes.len());
+        assert!(sw.algos.len() >= 4);
+        // the uniform scenario is bit-identical to the plain sweep
+        let plain = crate::harness::sweep::run_sweep(&t, &algos, &sizes, &p);
+        for si in 0..sizes.len() {
+            for ai in 0..sw.algos.len() {
+                assert_eq!(
+                    sw.points[0][si][ai].completion_s.to_bits(),
+                    plain.points[si][ai].completion_s.to_bits(),
+                    "uniform scenario diverged at ({si}, {ai})"
+                );
+            }
+        }
+        // degraded scenarios are never faster than uniform at the same point
+        for ci in 1..4 {
+            for si in 0..sizes.len() {
+                for ai in 0..sw.algos.len() {
+                    assert!(
+                        sw.points[ci][si][ai].completion_s
+                            >= sw.points[0][si][ai].completion_s * (1.0 - 1e-9),
+                        "scenario {ci} sped up ({si}, {ai})"
+                    );
+                }
+            }
+        }
+        let md = sw.render("scenarios test");
+        for name in ["uniform", "hetero-dims", "straggler", "faulty", "Δ%"] {
+            assert!(md.contains(name), "missing {name} in\n{md}");
+        }
+    }
+
+    #[test]
+    fn hetero_dims_degenerates_to_uniform_on_rings_and_is_flagged() {
+        // a ring has one dimension, so the 2^-d ratio ladder is [1.0]: the
+        // report must flag the copy of the baseline instead of presenting
+        // it as a degraded fabric
+        let t = Torus::ring(9);
+        let sw = run_scenarios(
+            &t,
+            &[Algo::Trivance, Algo::Bruck],
+            &[4096],
+            &NetParams::default(),
+            &presets(),
+            1,
+            SimMode::Flow,
+        );
+        assert_eq!(sw.degenerate, [false, true, false, false]);
+        assert_eq!(
+            sw.points[1][0][0].completion_s.to_bits(),
+            sw.points[0][0][0].completion_s.to_bits(),
+            "degenerate hetero-dims must equal the uniform baseline"
+        );
+        assert!(sw.render("r").contains("NO-OP on this topology"));
+    }
+
+    #[test]
+    fn scenario_sweep_is_thread_count_invariant() {
+        let t = Torus::ring(9);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+        let sizes = [4096u64, 64 << 10];
+        let p = NetParams::default();
+        let seq = run_scenarios(&t, &algos, &sizes, &p, &presets(), 1, SimMode::Flow);
+        let par4 = run_scenarios(&t, &algos, &sizes, &p, &presets(), 4, SimMode::Flow);
+        for ci in 0..seq.scenarios.len() {
+            for si in 0..sizes.len() {
+                for ai in 0..seq.algos.len() {
+                    assert_eq!(
+                        seq.points[ci][si][ai].completion_s.to_bits(),
+                        par4.points[ci][si][ai].completion_s.to_bits()
+                    );
+                }
+            }
+        }
+    }
+}

@@ -100,7 +100,7 @@ pub struct BestPoint {
 /// model bug) must lose every comparison deterministically instead of
 /// panicking mid-sweep — and `total_cmp` alone ranks a *negative* NaN
 /// below every finite time, which would crown the broken variant.
-fn completion_key(v: f64) -> f64 {
+pub(crate) fn completion_key(v: f64) -> f64 {
     if v.is_nan() {
         f64::INFINITY
     } else {
@@ -226,6 +226,47 @@ pub fn run_sweep_timed(
     (sweep, timing)
 }
 
+/// Sweep one topology under **several** parameter sets (e.g. `fig8`'s
+/// bandwidth ladder) as a single task pool: the algorithms are built (and
+/// their plans compiled/cached) once — plans are parameter-independent —
+/// and the whole `(params, size, algo)` grid fans out under one
+/// [`par::par_map`], so thread utilization stays flat across the grid
+/// instead of draining per bandwidth. Each returned [`Sweep`] is
+/// bit-identical to a standalone [`run_sweep_threads`] with those params.
+pub fn run_sweep_multi(
+    torus: &Torus,
+    algos: &[Algo],
+    sizes: &[u64],
+    params_list: &[NetParams],
+    threads: usize,
+) -> Vec<Sweep> {
+    let built = build_all(torus, algos);
+    let tasks: Vec<(usize, usize, usize)> = (0..params_list.len())
+        .flat_map(|pi| {
+            (0..sizes.len()).flat_map(move |si| (0..built.len()).map(move |ai| (pi, si, ai)))
+        })
+        .collect();
+    let evaluated: Vec<BestPoint> = par::par_map(&tasks, threads, |_, &(pi, si, ai)| {
+        best_point(&built[ai], sizes[si], &params_list[pi])
+    });
+    let algos_built: Vec<Algo> = built.iter().map(|b| b.algo).collect();
+    let mut it = evaluated.into_iter();
+    params_list
+        .iter()
+        .map(|_| {
+            let points: Vec<Vec<BestPoint>> = (0..sizes.len())
+                .map(|_| (0..built.len()).map(|_| it.next().expect("grid arity")).collect())
+                .collect();
+            Sweep {
+                torus: torus.clone(),
+                sizes: sizes.to_vec(),
+                algos: algos_built.clone(),
+                points,
+            }
+        })
+        .collect()
+}
+
 impl Sweep {
     fn trivance_idx(&self) -> usize {
         self.algos
@@ -294,10 +335,19 @@ impl Sweep {
 /// (`BENCH_sweep.json`): per-point completion *and* wall-clock, plus the
 /// build/sim split — everything a future PR needs to compare performance
 /// trajectories. Hand-rolled JSON (no serde in the vendored registry).
-pub fn bench_json(sweep: &Sweep, timing: &SweepTiming) -> String {
+///
+/// Schema `v2` keeps every `v1` field (so artifact diffs across PRs stay
+/// comparable) and adds a `scenarios` array with per-scenario completion
+/// rows from the [`crate::harness::scenarios`] presets (empty when the
+/// caller skipped the scenario pass).
+pub fn bench_json(
+    sweep: &Sweep,
+    timing: &SweepTiming,
+    scenarios: Option<&crate::harness::scenarios::ScenarioSweep>,
+) -> String {
     let mut out = String::new();
     out.push_str("{\n");
-    out.push_str("  \"schema\": \"trivance.bench_sweep.v1\",\n");
+    out.push_str("  \"schema\": \"trivance.bench_sweep.v2\",\n");
     let dims: Vec<String> = sweep.torus.dims().iter().map(|d| d.to_string()).collect();
     out.push_str(&format!("  \"topo\": [{}],\n", dims.join(", ")));
     out.push_str(&format!("  \"nodes\": {},\n", sweep.torus.n()));
@@ -335,7 +385,40 @@ pub fn bench_json(sweep: &Sweep, timing: &SweepTiming) -> String {
             ));
         }
     }
-    out.push_str("\n  ]\n}\n");
+    out.push_str("\n  ],\n");
+    out.push_str("  \"scenarios\": [");
+    if let Some(sc) = scenarios {
+        let mut first_sc = true;
+        for (ci, scenario) in sc.scenarios.iter().enumerate() {
+            if !first_sc {
+                out.push(',');
+            }
+            first_sc = false;
+            let name = scenario.name.replace('\\', "\\\\").replace('"', "\\\"");
+            out.push_str(&format!("\n    {{\"name\": \"{name}\", \"points\": [\n"));
+            let mut first = true;
+            for (si, &m) in sc.sizes.iter().enumerate() {
+                for (ai, a) in sc.algos.iter().enumerate() {
+                    if !first {
+                        out.push_str(",\n");
+                    }
+                    first = false;
+                    let p = &sc.points[ci][si][ai];
+                    out.push_str(&format!(
+                        "      {{\"algo\": \"{}\", \"variant\": \"{}\", \
+                         \"size_bytes\": {}, \"completion_s\": {:e}}}",
+                        a.label(),
+                        p.variant.label(),
+                        m,
+                        p.completion_s,
+                    ));
+                }
+            }
+            out.push_str("\n    ]}");
+        }
+        out.push_str("\n  ");
+    }
+    out.push_str("]\n}\n");
     out
 }
 
@@ -344,8 +427,9 @@ pub fn write_bench_json(
     path: &str,
     sweep: &Sweep,
     timing: &SweepTiming,
+    scenarios: Option<&crate::harness::scenarios::ScenarioSweep>,
 ) -> std::io::Result<()> {
-    std::fs::write(path, bench_json(sweep, timing))
+    std::fs::write(path, bench_json(sweep, timing, scenarios))
 }
 
 #[cfg(test)]
@@ -402,11 +486,58 @@ mod tests {
         assert_eq!(timing.point_wall_s.len(), 2);
         assert_eq!(timing.point_wall_s[0].len(), s.algos.len());
         assert!(timing.total_wall_s() >= timing.sim_wall_s);
-        let json = bench_json(&s, &timing);
-        assert!(json.contains("\"schema\": \"trivance.bench_sweep.v1\""));
+        let json = bench_json(&s, &timing, None);
+        assert!(json.contains("\"schema\": \"trivance.bench_sweep.v2\""));
         assert!(json.contains("\"algo\": \"trivance\""));
         assert!(json.contains("\"size_bytes\": 4096"));
+        assert!(json.contains("\"scenarios\": []"));
         // crude structural sanity: one point object per grid cell
         assert_eq!(json.matches("\"completion_s\"").count(), 4);
+    }
+
+    #[test]
+    fn json_scenarios_section_renders_rows() {
+        use crate::harness::scenarios::{presets, run_scenarios};
+        use crate::sim::SimMode;
+        let t = Torus::ring(9);
+        let algos = [Algo::Trivance, Algo::Bruck];
+        let sizes = [4096u64];
+        let p = NetParams::default();
+        let (s, timing) = run_sweep_timed(&t, &algos, &sizes, &p, 1);
+        let sc = run_scenarios(&t, &algos, &sizes, &p, &presets(), 1, SimMode::Flow);
+        let json = bench_json(&s, &timing, Some(&sc));
+        for name in ["uniform", "hetero-dims", "straggler", "faulty"] {
+            assert!(json.contains(&format!("\"name\": \"{name}\"")), "missing {name}");
+        }
+        // v1 fields survive in v2
+        for field in ["\"topo\"", "\"sizes\"", "\"points\"", "\"build_wall_s\"", "\"wall_s\""] {
+            assert!(json.contains(field), "missing v1 field {field}");
+        }
+    }
+
+    #[test]
+    fn multi_params_sweep_matches_standalone_sweeps() {
+        let t = Torus::ring(8);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+        let sizes = [32u64, 256 << 10];
+        let params: Vec<NetParams> = [200.0, 3200.0]
+            .iter()
+            .map(|&bw| NetParams::default().with_bandwidth_gbps(bw))
+            .collect();
+        let multi = run_sweep_multi(&t, &algos, &sizes, &params, 3);
+        assert_eq!(multi.len(), params.len());
+        for (sw, p) in multi.iter().zip(&params) {
+            let standalone = run_sweep_threads(&t, &algos, &sizes, p, 1);
+            for si in 0..sizes.len() {
+                for ai in 0..standalone.algos.len() {
+                    assert_eq!(
+                        sw.points[si][ai].completion_s.to_bits(),
+                        standalone.points[si][ai].completion_s.to_bits(),
+                        "bw point ({si}, {ai})"
+                    );
+                    assert_eq!(sw.points[si][ai].variant, standalone.points[si][ai].variant);
+                }
+            }
+        }
     }
 }

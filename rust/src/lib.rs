@@ -5,6 +5,11 @@
 //!
 //! * [`topology`] — bidirectional rings and D-dimensional tori with minimal
 //!   routing, the network substrate all schedules execute on.
+//! * [`net`] — the heterogeneous per-link network model: a [`net::LinkClass`]
+//!   scale table (bandwidth / latency / processing relative to the base
+//!   [`cost::NetParams`]) plus a down set with deterministic detour routing.
+//!   The uniform model reproduces the paper's homogeneous fabric bit for
+//!   bit; named degradation presets live in [`harness::scenarios`].
 //! * [`blockset`] — cyclic interval arithmetic over the rank/block space.
 //! * [`schedule`] — the schedule IR (steps → sends → pieces), plus a static
 //!   validator that proves contributor-set disjointness and coverage for any
@@ -42,6 +47,7 @@
 pub mod util;
 pub mod blockset;
 pub mod topology;
+pub mod net;
 pub mod schedule;
 pub mod agpattern;
 pub mod algo;

@@ -1,0 +1,504 @@
+//! Heterogeneous per-link network model.
+//!
+//! The paper's SST configuration (§6) is a perfectly uniform fabric — one
+//! bandwidth, one latency for every directed link — and that is what
+//! [`crate::cost::NetParams`] describes. Real direct-connect tori are not
+//! uniform: TPU-style systems mix fast intra-dimension links with slower
+//! wrap/inter-dimension ones, links degrade (stragglers) and fail outright.
+//! A [`NetModel`] layers that heterogeneity on top of a [`Torus`]:
+//!
+//! * a per-link [`LinkClass`] table of *scale factors* relative to the base
+//!   `NetParams` — bandwidth, propagation latency, and hop-processing
+//!   multipliers. Keeping the table relative (instead of absolute) means
+//!   one simulation plan serves every base bandwidth (`fig8`'s sweep) and
+//!   the uniform model (`all scales == 1.0`) is **bit-identical** to the
+//!   model-less path: `x * 1.0 == x` exactly in IEEE-754.
+//! * an optional *down set* of failed directed links. Route resolution
+//!   ([`NetModel::route`]) keeps the nominal torus route whenever it avoids
+//!   the down set and otherwise detours via a deterministic BFS shortest
+//!   path ([`NetModel::route_avoiding`]).
+//!
+//! Every consumer that used to hard-code uniformity threads the model
+//! through: [`crate::sim::SimPlan`] carries the per-link scale columns,
+//! both simulator engines serialize at each link's own rate,
+//! [`crate::schedule::analysis::analyze_with_model`] picks the Eq. 1
+//! bottleneck as `max_k bytes_k / bw_link`, and the plan cache keys on
+//! [`NetModel::fingerprint`] so a changed link table can never produce a
+//! false cache hit. The scenario presets built from this model live in
+//! [`crate::harness::scenarios`].
+//!
+//! The Python mirror of this module (`tools/pysim/mirror.py`, `NetModel`)
+//! must stay in lockstep — including the [`SplitMix64`] draws behind the
+//! deterministic straggler/faulty link picks and the BFS tie-breaks
+//! (neighbor order: dimension ascending, direction `+1` before `-1`).
+
+use crate::schedule::RouteHint;
+use crate::topology::{Link, Torus};
+use crate::util::rng::SplitMix64;
+use std::collections::VecDeque;
+
+/// Per-link scale factors relative to the base [`crate::cost::NetParams`].
+/// `UNIFORM` (all `1.0`) reproduces the paper's homogeneous fabric exactly.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkClass {
+    /// Bandwidth multiplier (`0.25` = a 4x-slower straggler link).
+    pub bw_scale: f64,
+    /// Propagation-latency multiplier.
+    pub lat_scale: f64,
+    /// Hop-processing-latency multiplier.
+    pub proc_scale: f64,
+}
+
+impl LinkClass {
+    pub const UNIFORM: LinkClass =
+        LinkClass { bw_scale: 1.0, lat_scale: 1.0, proc_scale: 1.0 };
+
+    /// Validated constructor: a zero/negative/non-finite bandwidth scale
+    /// would silently produce infinite or negative serialization times
+    /// downstream, so construction rejects it loudly.
+    pub fn new(bw_scale: f64, lat_scale: f64, proc_scale: f64) -> LinkClass {
+        assert!(
+            bw_scale.is_finite() && bw_scale > 0.0,
+            "LinkClass bandwidth scale must be finite and > 0, got {bw_scale}"
+        );
+        assert!(
+            lat_scale.is_finite() && lat_scale >= 0.0,
+            "LinkClass latency scale must be finite and >= 0, got {lat_scale}"
+        );
+        assert!(
+            proc_scale.is_finite() && proc_scale >= 0.0,
+            "LinkClass processing scale must be finite and >= 0, got {proc_scale}"
+        );
+        LinkClass { bw_scale, lat_scale, proc_scale }
+    }
+
+    /// A link slowed by `factor` (bandwidth only).
+    pub fn slowdown(factor: f64) -> LinkClass {
+        assert!(
+            factor.is_finite() && factor > 0.0,
+            "LinkClass slowdown factor must be finite and > 0, got {factor}"
+        );
+        LinkClass::new(1.0 / factor, 1.0, 1.0)
+    }
+
+    pub fn is_uniform(&self) -> bool {
+        self.bw_scale == 1.0 && self.lat_scale == 1.0 && self.proc_scale == 1.0
+    }
+}
+
+/// A torus plus its per-link link-class table and down set (module docs).
+#[derive(Clone, Debug)]
+pub struct NetModel {
+    torus: Torus,
+    classes: Vec<LinkClass>,
+    down: Vec<bool>,
+    num_down: usize,
+}
+
+impl NetModel {
+    /// The paper's homogeneous fabric: every link `LinkClass::UNIFORM`, no
+    /// down links. Reproduces the model-less code paths bit for bit.
+    pub fn uniform(torus: &Torus) -> NetModel {
+        let num_links = torus.num_links();
+        NetModel {
+            torus: torus.clone(),
+            classes: vec![LinkClass::UNIFORM; num_links],
+            down: vec![false; num_links],
+            num_down: 0,
+        }
+    }
+
+    /// Per-dimension bandwidth ratios (TPU-style fast/slow dimensions):
+    /// every link along dimension `d` gets bandwidth scale `dim_bw_scale[d]`.
+    pub fn hetero_dims(torus: &Torus, dim_bw_scale: &[f64]) -> NetModel {
+        assert_eq!(
+            dim_bw_scale.len(),
+            torus.ndims(),
+            "hetero_dims: one bandwidth scale per dimension"
+        );
+        let mut m = NetModel::uniform(torus);
+        for node in 0..torus.n() {
+            for (d, &s) in dim_bw_scale.iter().enumerate() {
+                for dir in [1i8, -1] {
+                    let idx = torus.link_index(Link { node, dim: d as u8, dir });
+                    m.classes[idx] = LinkClass::new(s, 1.0, 1.0);
+                }
+            }
+        }
+        m
+    }
+
+    /// `k` deterministic-random links slowed by `factor` (bandwidth only).
+    pub fn straggler(torus: &Torus, k: usize, factor: f64, seed: u64) -> NetModel {
+        let mut m = NetModel::uniform(torus);
+        for l in pick_links(torus, k, seed, false) {
+            m.classes[l] = LinkClass::slowdown(factor);
+        }
+        m
+    }
+
+    /// `k` deterministic-random links taken down; the selection rejects any
+    /// link whose removal would disconnect the directed link graph, so
+    /// every pair stays routable.
+    pub fn faulty(torus: &Torus, k: usize, seed: u64) -> NetModel {
+        let mut m = NetModel::uniform(torus);
+        for l in pick_links(torus, k, seed, true) {
+            m.down[l] = true;
+            m.num_down += 1;
+        }
+        m
+    }
+
+    pub fn torus(&self) -> &Torus {
+        &self.torus
+    }
+
+    /// Override one link's class (dense link index).
+    pub fn set_class(&mut self, link: usize, class: LinkClass) {
+        self.classes[link] = class;
+    }
+
+    /// Mark one link up/down (dense link index). Routability is checked at
+    /// route resolution, not here: [`route_avoiding`](Self::route_avoiding)
+    /// panics with a clear message if a needed pair becomes disconnected.
+    pub fn set_down(&mut self, link: usize, down: bool) {
+        if self.down[link] != down {
+            self.down[link] = down;
+            if down {
+                self.num_down += 1;
+            } else {
+                self.num_down -= 1;
+            }
+        }
+    }
+
+    pub fn class(&self, link: usize) -> &LinkClass {
+        &self.classes[link]
+    }
+
+    pub fn bw_scale(&self, link: usize) -> f64 {
+        self.classes[link].bw_scale
+    }
+
+    pub fn lat_scale(&self, link: usize) -> f64 {
+        self.classes[link].lat_scale
+    }
+
+    pub fn proc_scale(&self, link: usize) -> f64 {
+        self.classes[link].proc_scale
+    }
+
+    pub fn is_down(&self, link: usize) -> bool {
+        self.down[link]
+    }
+
+    pub fn num_down(&self) -> usize {
+        self.num_down
+    }
+
+    /// Is this exactly the paper's homogeneous fabric? Gates the simulator
+    /// fast paths and the legacy (bit-identical) arithmetic.
+    pub fn is_uniform(&self) -> bool {
+        self.num_down == 0 && self.classes.iter().all(LinkClass::is_uniform)
+    }
+
+    /// Cache fingerprint of the link table + down set. `0` is reserved for
+    /// the uniform model (any dims — the topology is already part of
+    /// [`crate::sim::PlanKey`]); heterogeneous models hash their class bits
+    /// and down links FNV-1a style with the low bit forced to 1, so a
+    /// hetero model can never collide with uniform.
+    pub fn fingerprint(&self) -> u64 {
+        if self.is_uniform() {
+            return 0;
+        }
+        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
+        let mut h = FNV_OFFSET;
+        let mut mix = |v: u64| {
+            h ^= v;
+            h = h.wrapping_mul(FNV_PRIME);
+        };
+        for &d in self.torus.dims() {
+            mix(d as u64);
+        }
+        for c in &self.classes {
+            mix(c.bw_scale.to_bits());
+            mix(c.lat_scale.to_bits());
+            mix(c.proc_scale.to_bits());
+        }
+        for (l, &down) in self.down.iter().enumerate() {
+            if down {
+                mix(l as u64);
+            }
+        }
+        h | 1
+    }
+
+    /// Resolve a route under this model: the nominal torus route (minimal
+    /// or directed per the hint) when it avoids every down link, otherwise
+    /// a BFS shortest-path detour. With an empty down set this is exactly
+    /// the torus routing the plans always used.
+    pub fn route(&self, src: u32, dst: u32, hint: RouteHint) -> Vec<Link> {
+        let nominal = match hint {
+            RouteHint::Minimal => self.torus.route(src, dst),
+            RouteHint::Directed { dim, dir } => {
+                self.torus.route_directed(src, dst, dim as usize, dir)
+            }
+        };
+        if self.num_down == 0
+            || !nominal.iter().any(|&l| self.down[self.torus.link_index(l)])
+        {
+            return nominal;
+        }
+        self.route_avoiding(src, dst)
+    }
+
+    /// Deterministic BFS shortest path skipping down links (neighbor order:
+    /// dimension ascending, direction `+1` before `-1`; FIFO queue — keep
+    /// in lockstep with the pysim mirror).
+    pub fn route_avoiding(&self, src: u32, dst: u32) -> Vec<Link> {
+        if src == dst {
+            return Vec::new();
+        }
+        let n = self.torus.n() as usize;
+        let mut parent: Vec<i64> = vec![-2; n]; // -2 unvisited, -1 source
+        let mut parent_link: Vec<Link> = vec![Link { node: 0, dim: 0, dir: 1 }; n];
+        parent[src as usize] = -1;
+        let mut queue = VecDeque::new();
+        queue.push_back(src);
+        while let Some(u) = queue.pop_front() {
+            for d in 0..self.torus.ndims() {
+                for dir in [1i8, -1] {
+                    let link = Link { node: u, dim: d as u8, dir };
+                    if self.down[self.torus.link_index(link)] {
+                        continue;
+                    }
+                    let v = self.torus.neighbor(u, d, dir as i64);
+                    if parent[v as usize] != -2 {
+                        continue;
+                    }
+                    parent[v as usize] = u as i64;
+                    parent_link[v as usize] = link;
+                    queue.push_back(v);
+                }
+            }
+        }
+        assert!(
+            parent[dst as usize] != -2,
+            "NetModel: down links disconnect {src} -> {dst}"
+        );
+        let mut links = Vec::new();
+        let mut cur = dst;
+        while parent[cur as usize] != -1 {
+            links.push(parent_link[cur as usize]);
+            cur = parent[cur as usize] as u32;
+        }
+        links.reverse();
+        links
+    }
+}
+
+/// Is the directed link graph minus `down` still strongly connected?
+pub fn strongly_connected(torus: &Torus, down: &[bool]) -> bool {
+    for transpose in [false, true] {
+        let mut seen = vec![false; torus.n() as usize];
+        seen[0] = true;
+        let mut stack = vec![0u32];
+        let mut count = 1usize;
+        while let Some(u) = stack.pop() {
+            for d in 0..torus.ndims() {
+                for dir in [1i8, -1] {
+                    // forward edge u->v over link (u, d, dir); transposed
+                    // edge v->u over link (v, d, dir) with v = u - dir
+                    let (v, l) = if transpose {
+                        let v = torus.neighbor(u, d, -(dir as i64));
+                        (v, torus.link_index(Link { node: v, dim: d as u8, dir }))
+                    } else {
+                        let v = torus.neighbor(u, d, dir as i64);
+                        (v, torus.link_index(Link { node: u, dim: d as u8, dir }))
+                    };
+                    if down[l] || seen[v as usize] {
+                        continue;
+                    }
+                    seen[v as usize] = true;
+                    count += 1;
+                    stack.push(v);
+                }
+            }
+        }
+        if count != torus.n() as usize {
+            return false;
+        }
+    }
+    true
+}
+
+/// Draw `k` distinct links deterministically from `seed`; with
+/// `keep_connected`, reject draws that would disconnect the link graph.
+fn pick_links(torus: &Torus, k: usize, seed: u64, keep_connected: bool) -> Vec<usize> {
+    let num_links = torus.num_links();
+    assert!(k < num_links, "cannot pick {k} of {num_links} links");
+    let mut rng = SplitMix64::new(seed);
+    let mut down = vec![false; num_links];
+    let mut chosen = Vec::with_capacity(k);
+    let mut attempts = 0usize;
+    while chosen.len() < k {
+        attempts += 1;
+        assert!(attempts <= 64 * k + 1024, "link picking stalled (k={k}, seed={seed})");
+        let l = rng.below(num_links as u64) as usize;
+        if down[l] {
+            continue;
+        }
+        down[l] = true;
+        if keep_connected && !strongly_connected(torus, &down) {
+            down[l] = false;
+            continue;
+        }
+        chosen.push(l);
+    }
+    chosen.sort_unstable();
+    chosen
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn uniform_model_is_uniform_and_routes_nominally() {
+        let t = Torus::ring(9);
+        let m = NetModel::uniform(&t);
+        assert!(m.is_uniform());
+        assert_eq!(m.fingerprint(), 0);
+        for (src, dst) in [(0u32, 3u32), (7, 2), (4, 4)] {
+            assert_eq!(m.route(src, dst, RouteHint::Minimal), t.route(src, dst));
+        }
+    }
+
+    #[test]
+    fn hetero_dims_scales_per_dimension() {
+        let t = Torus::new(&[3, 3]);
+        let m = NetModel::hetero_dims(&t, &[1.0, 0.5]);
+        assert!(!m.is_uniform());
+        for node in 0..t.n() {
+            for dir in [1i8, -1] {
+                let l0 = t.link_index(Link { node, dim: 0, dir });
+                let l1 = t.link_index(Link { node, dim: 1, dir });
+                assert_eq!(m.bw_scale(l0), 1.0);
+                assert_eq!(m.bw_scale(l1), 0.5);
+            }
+        }
+    }
+
+    #[test]
+    fn fingerprints_separate_models() {
+        let t = Torus::new(&[3, 3]);
+        let uniform = NetModel::uniform(&t);
+        let straggled = NetModel::straggler(&t, 2, 4.0, 1);
+        let faulty = NetModel::faulty(&t, 1, 1);
+        let hetero = NetModel::hetero_dims(&t, &[1.0, 0.5]);
+        let fps = [
+            uniform.fingerprint(),
+            straggled.fingerprint(),
+            faulty.fingerprint(),
+            hetero.fingerprint(),
+        ];
+        for i in 0..fps.len() {
+            for j in i + 1..fps.len() {
+                assert_ne!(fps[i], fps[j], "fingerprint collision {i} vs {j}");
+            }
+        }
+        // deterministic: same preset, same fingerprint
+        assert_eq!(
+            NetModel::straggler(&t, 2, 4.0, 1).fingerprint(),
+            straggled.fingerprint()
+        );
+        // different seed, different selection (with overwhelming likelihood
+        // on 36 links), different fingerprint
+        assert_ne!(
+            NetModel::straggler(&t, 2, 4.0, 2).fingerprint(),
+            straggled.fingerprint()
+        );
+    }
+
+    #[test]
+    fn detour_avoids_down_links_and_connects() {
+        let t = Torus::ring(9);
+        let mut m = NetModel::uniform(&t);
+        // take down 0 -> 1 (forward): 0's +1 route to 3 must detour
+        let l = t.link_index(Link { node: 0, dim: 0, dir: 1 });
+        m.set_down(l, true);
+        assert!(!m.is_uniform());
+        let route = m.route(0, 3, RouteHint::Minimal);
+        // walk it: connects 0 -> 3, never crosses the down link
+        let mut cur = 0u32;
+        for link in &route {
+            assert_eq!(link.node, cur);
+            assert!(!m.is_down(t.link_index(*link)), "route crosses a down link");
+            cur = t.neighbor(cur, link.dim as usize, link.dir as i64);
+        }
+        assert_eq!(cur, 3);
+        // unaffected pairs keep their nominal route
+        assert_eq!(m.route(1, 3, RouteHint::Minimal), t.route(1, 3));
+        // directed routes detour too when blocked
+        let dr = m.route(0, 2, RouteHint::Directed { dim: 0, dir: 1 });
+        let mut cur = 0u32;
+        for link in &dr {
+            assert!(!m.is_down(t.link_index(*link)));
+            cur = t.neighbor(cur, link.dim as usize, link.dir as i64);
+        }
+        assert_eq!(cur, 2);
+    }
+
+    #[test]
+    fn faulty_preset_stays_strongly_connected() {
+        for dims in [vec![9u32], vec![3, 3], vec![4, 4]] {
+            let t = Torus::new(&dims);
+            for k in [1usize, 2, 3] {
+                let m = NetModel::faulty(&t, k, 0xDEAD);
+                assert_eq!(m.num_down(), k);
+                assert!(strongly_connected(&t, &m.down));
+                // every pair remains routable
+                for src in 0..t.n() {
+                    for dst in 0..t.n() {
+                        let r = m.route_avoiding(src, dst);
+                        assert_eq!(r.is_empty(), src == dst);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn bfs_route_is_minimal_without_faults() {
+        let t = Torus::new(&[5, 5]);
+        let m = NetModel::uniform(&t);
+        for src in 0..t.n() {
+            for dst in 0..t.n() {
+                assert_eq!(
+                    m.route_avoiding(src, dst).len() as u32,
+                    t.distance(src, dst),
+                    "{src}->{dst}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    #[should_panic(expected = "bandwidth scale must be finite and > 0")]
+    fn zero_bandwidth_class_rejected() {
+        let _ = LinkClass::new(0.0, 1.0, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "latency scale must be finite and >= 0")]
+    fn negative_latency_class_rejected() {
+        let _ = LinkClass::new(1.0, -0.5, 1.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "slowdown factor must be finite and > 0")]
+    fn nan_slowdown_rejected() {
+        let _ = LinkClass::slowdown(f64::NAN);
+    }
+}

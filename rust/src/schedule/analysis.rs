@@ -5,15 +5,26 @@
 //! congestion `c_k` ("number of chunks sharing a link") by actually routing
 //! every message on the topology and accounting per-link byte loads; the
 //! bottleneck link determines the step's transmission term.
+//!
+//! [`analyze`] runs on the uniform fabric; [`analyze_with_model`] runs
+//! under a heterogeneous [`NetModel`] — messages detour around down links,
+//! the bottleneck is the most *time-expensive* link (`load / bw_scale`,
+//! still in units of `m` at the base bandwidth), and the per-step route
+//! latency maxima carry the per-link propagation/processing scales for
+//! [`crate::cost::eq1_with_hops_model`]. On a uniform model the two are
+//! bit-identical.
 
-use super::{RouteHint, Schedule};
+use super::Schedule;
+use crate::net::NetModel;
 use crate::topology::Torus;
 
 /// Per-step figures, all byte quantities in units of the vector size `m`.
 #[derive(Clone, Debug)]
 pub struct StepStats {
-    /// Max over links of the summed payload crossing it (⇒ the step's
-    /// transmission delay is `beta * m * max_link_rel`).
+    /// Max over links of the summed payload crossing it, divided by the
+    /// link's bandwidth scale (⇒ the step's transmission delay is
+    /// `beta * m * max_link_rel`). On a uniform fabric this is simply the
+    /// most-loaded link's payload.
     pub max_link_rel: f64,
     /// Max messages sharing one link (the paper's `c_k` chunk count).
     pub max_link_msgs: u32,
@@ -23,6 +34,12 @@ pub struct StepStats {
     pub total_rel: f64,
     /// Longest route (hops) of any message in the step.
     pub max_hops: u32,
+    /// Max over messages of the route's summed propagation-latency scales
+    /// (`== max_hops` on a uniform fabric).
+    pub max_route_lat_rel: f64,
+    /// Max over messages of the route's summed processing-latency scales
+    /// (`== max_hops` on a uniform fabric).
+    pub max_route_proc_rel: f64,
     /// Number of messages.
     pub messages: usize,
 }
@@ -39,8 +56,16 @@ pub struct ScheduleStats {
     pub tx_delay_rel: f64,
 }
 
-/// Analyze `s` on topology `t`.
+/// Analyze `s` on topology `t` (uniform fabric).
 pub fn analyze(s: &Schedule, t: &Torus) -> ScheduleStats {
+    analyze_with_model(s, &NetModel::uniform(t))
+}
+
+/// Analyze `s` under a heterogeneous [`NetModel`]: routes detour around
+/// down links, and the per-step bottleneck is the most time-expensive link
+/// (`load / bw_scale`). Bit-identical to [`analyze`] on a uniform model.
+pub fn analyze_with_model(s: &Schedule, model: &NetModel) -> ScheduleStats {
+    let t = model.torus();
     assert_eq!(s.n, t.n(), "schedule/topology node count mismatch");
     let mut steps = Vec::with_capacity(s.steps.len());
     let mut loads = vec![0f64; t.num_links()];
@@ -51,6 +76,8 @@ pub fn analyze(s: &Schedule, t: &Torus) -> ScheduleStats {
         let mut max_msg_rel = 0f64;
         let mut total_rel = 0f64;
         let mut max_hops = 0u32;
+        let mut max_route_lat_rel = 0f64;
+        let mut max_route_proc_rel = 0f64;
         let mut messages = 0usize;
         for (src, sends) in step.sends.iter().enumerate() {
             for send in sends {
@@ -61,21 +88,26 @@ pub fn analyze(s: &Schedule, t: &Torus) -> ScheduleStats {
                 messages += 1;
                 max_msg_rel = max_msg_rel.max(rel);
                 total_rel += rel;
-                let route = match send.route {
-                    RouteHint::Minimal => t.route(src as u32, send.to),
-                    RouteHint::Directed { dim, dir } => {
-                        t.route_directed(src as u32, send.to, dim as usize, dir)
-                    }
-                };
+                let route = model.route(src as u32, send.to, send.route);
                 max_hops = max_hops.max(route.len() as u32);
+                let mut lat_rel = 0f64;
+                let mut proc_rel = 0f64;
                 for link in route {
                     let idx = t.link_index(link);
                     loads[idx] += rel;
                     counts[idx] += 1;
+                    lat_rel += model.lat_scale(idx);
+                    proc_rel += model.proc_scale(idx);
                 }
+                max_route_lat_rel = max_route_lat_rel.max(lat_rel);
+                max_route_proc_rel = max_route_proc_rel.max(proc_rel);
             }
         }
-        let max_link_rel = loads.iter().copied().fold(0f64, f64::max);
+        let max_link_rel = loads
+            .iter()
+            .enumerate()
+            .map(|(idx, &ld)| ld / model.bw_scale(idx))
+            .fold(0f64, f64::max);
         let max_link_msgs = counts.iter().copied().max().unwrap_or(0);
         steps.push(StepStats {
             max_link_rel,
@@ -83,6 +115,8 @@ pub fn analyze(s: &Schedule, t: &Torus) -> ScheduleStats {
             max_msg_rel,
             total_rel,
             max_hops,
+            max_route_lat_rel,
+            max_route_proc_rel,
             messages,
         });
     }
@@ -103,7 +137,7 @@ impl ScheduleStats {
 mod tests {
     use super::*;
     use crate::blockset::BlockSet;
-    use crate::schedule::{Kind, Piece, Send};
+    use crate::schedule::{Kind, Piece, RouteHint, Send};
 
     #[test]
     fn analyze_neighbor_exchange() {
@@ -160,6 +194,50 @@ mod tests {
         assert_eq!(stats.steps[0].max_link_msgs, 2);
         assert!((stats.steps[0].max_link_rel - 2.0).abs() < 1e-12);
         assert_eq!(stats.steps[0].max_hops, 2);
+    }
+
+    #[test]
+    fn model_analysis_scales_bottleneck_and_detours() {
+        // 4-ring neighbor exchange: uniformly one full vector per link
+        let n = 4;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("x", n, n);
+        let st = s.push_step();
+        for r in 0..n {
+            st.push(
+                r,
+                Send {
+                    to: (r + 1) % n,
+                    pieces: vec![Piece {
+                        blocks: BlockSet::full(n),
+                        contrib: BlockSet::singleton(r, n),
+                        kind: Kind::Reduce,
+                    }],
+                    route: RouteHint::Minimal,
+                },
+            );
+        }
+        // uniform model is bit-identical to plain analyze
+        let plain = analyze(&s, &t);
+        let uni = analyze_with_model(&s, &NetModel::uniform(&t));
+        assert_eq!(plain.tx_delay_rel.to_bits(), uni.tx_delay_rel.to_bits());
+        assert_eq!(
+            plain.steps[0].max_route_lat_rel.to_bits(),
+            uni.steps[0].max_route_lat_rel.to_bits()
+        );
+        // slow 0->1 by 2x: that link's relative cost doubles
+        let mut m = NetModel::uniform(&t);
+        let l01 = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        m.set_class(l01, crate::net::LinkClass::slowdown(2.0));
+        let slow = analyze_with_model(&s, &m);
+        assert!((slow.steps[0].max_link_rel - 2.0).abs() < 1e-12);
+        // down 0->1: the 0->1 message detours the long way (3 hops), and
+        // every load sits on an unscaled link again
+        let mut f = NetModel::uniform(&t);
+        f.set_down(l01, true);
+        let det = analyze_with_model(&s, &f);
+        assert_eq!(det.steps[0].max_hops, 3);
+        assert!((det.steps[0].max_route_lat_rel - 3.0).abs() < 1e-12);
     }
 
     #[test]

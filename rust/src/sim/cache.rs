@@ -15,6 +15,15 @@
 //! flow results match with the cache on and off). The CLI exposes
 //! `--no-plan-cache` (via [`PlanCache::set_enabled`]) to force fresh
 //! builds, e.g. when benchmarking plan compilation itself.
+//!
+//! Since plans bake in the [`crate::net::NetModel`] (per-link scale columns
+//! *and* down-link detour routes), the key also carries the model's
+//! [`crate::net::NetModel::fingerprint`]. Without it, a scenario sweep
+//! that changed the link table or the down set would silently reuse a plan
+//! routed for a different network — the classic silent-correctness trap of
+//! adding faults to a cached-plan world. `PlanKey::new` keys the uniform
+//! model (fingerprint `0`); heterogeneous callers use
+//! [`PlanKey::with_net_fp`].
 
 use super::SimPlan;
 use crate::algo::{Algo, Variant};
@@ -28,11 +37,21 @@ pub struct PlanKey {
     pub algo: Algo,
     pub variant: Variant,
     pub dims: Vec<u32>,
+    /// [`crate::net::NetModel::fingerprint`] of the link table + down set
+    /// the plan was routed for (`0` = the uniform model).
+    pub net_fp: u64,
 }
 
 impl PlanKey {
+    /// Key for a plan on the uniform (paper §6) network model.
     pub fn new(algo: Algo, variant: Variant, dims: &[u32]) -> Self {
-        PlanKey { algo, variant, dims: dims.to_vec() }
+        PlanKey::with_net_fp(algo, variant, dims, 0)
+    }
+
+    /// Key for a plan under a heterogeneous [`crate::net::NetModel`] —
+    /// pass the model's `fingerprint()`.
+    pub fn with_net_fp(algo: Algo, variant: Variant, dims: &[u32], net_fp: u64) -> Self {
+        PlanKey { algo, variant, dims: dims.to_vec(), net_fp }
     }
 }
 
@@ -156,6 +175,41 @@ mod tests {
         assert_ne!(b.num_steps(), a.num_steps()); // B has RS+AG phases
         assert_eq!(c.n(), 9);
         assert!(!Arc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn net_fingerprint_separates_cache_entries() {
+        use crate::net::NetModel;
+        let cache = PlanCache::new();
+        let t = Torus::new(&[3, 3]);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        let uniform = NetModel::uniform(&t);
+        let straggled = NetModel::straggler(&t, 2, 4.0, 7);
+        let ku = PlanKey::with_net_fp(
+            Algo::Trivance,
+            Variant::Latency,
+            t.dims(),
+            uniform.fingerprint(),
+        );
+        let ks = PlanKey::with_net_fp(
+            Algo::Trivance,
+            Variant::Latency,
+            t.dims(),
+            straggled.fingerprint(),
+        );
+        assert_ne!(ku, ks, "hetero model must not share the uniform key");
+        let a = cache.get_or_build(ku, || SimPlan::build_with_model(&b.net, &uniform));
+        let s = cache.get_or_build(ks, || SimPlan::build_with_model(&b.net, &straggled));
+        assert!(!Arc::ptr_eq(&a, &s));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.misses(), 2);
+        assert_eq!(cache.hits(), 0);
+        // the uniform fingerprint is the legacy key: a plain `new` key hits
+        let legacy = cache.get_or_build(
+            PlanKey::new(Algo::Trivance, Variant::Latency, t.dims()),
+            || panic!("uniform fingerprint must hit the legacy key"),
+        );
+        assert!(Arc::ptr_eq(&a, &legacy));
     }
 
     #[test]

@@ -33,6 +33,17 @@
 //! loads diverge (padded configurations, drain transients). The fast path
 //! computes the identical f64 division the generic first round would, so
 //! flow results are bit-identical either way.
+//!
+//! ## Heterogeneous links
+//!
+//! Under a non-uniform [`crate::net::NetModel`] each link has its own
+//! capacity (`cap · bw_scale`, from the plan's scale columns) and the
+//! water-filling fills against those per-link residuals; deliveries pay the
+//! route's *summed* per-link forwarding latencies. The symmetric fast path
+//! is gated on the plan actually being uniform — equal flow counts on
+//! unequal links are not an equal split. Uniform plans run the exact
+//! legacy arithmetic (`cap · 1.0 == cap`), so results are bit-identical to
+//! the pre-NetModel simulator.
 
 use super::plan::SimPlan;
 use super::{SimResult, Timed};
@@ -75,9 +86,11 @@ struct WaterFill {
     /// Scratch: indices into the active-flow list.
     unfrozen_flows: Vec<u32>,
     freeze_buf: Vec<u32>,
-    /// Whether the symmetric-step fast path may fire: every message in the
-    /// plan crosses at least one link (a zero-hop flow is never link-bound
-    /// and must take the generic infinite-share branch).
+    /// Whether the symmetric-step fast path may fire: the plan must be
+    /// uniform (equal flow counts on *unequal* links are not an equal
+    /// split) and every message must cross at least one link (a zero-hop
+    /// flow is never link-bound and must take the generic infinite-share
+    /// branch).
     symmetric_ok: bool,
 }
 
@@ -92,7 +105,7 @@ impl WaterFill {
             unfrozen: vec![0; num_links],
             unfrozen_flows: Vec::new(),
             freeze_buf: Vec::new(),
-            symmetric_ok: !plan.has_zero_hop_routes(),
+            symmetric_ok: plan.is_uniform() && !plan.has_zero_hop_routes(),
         }
     }
 
@@ -118,8 +131,9 @@ impl WaterFill {
     /// round computes the global minimum fair share over the touched links,
     /// freezes every flow whose bottleneck equals it (two-phase, so the
     /// round's selection is order-independent), and subtracts the frozen
-    /// bandwidth from the links crossed.
-    fn recompute(&mut self, active: &mut [ActiveFlow], plan: &SimPlan, cap: f64) {
+    /// bandwidth from the links crossed. `cap` is the base (uniform)
+    /// capacity, `caps` the per-link capacities (`== cap` on uniform plans).
+    fn recompute(&mut self, active: &mut [ActiveFlow], plan: &SimPlan, cap: f64, caps: &[f64]) {
         // Compact the touched list and (re)initialize per-link state for
         // links still carrying active flows.
         let mut touched = std::mem::take(&mut self.touched);
@@ -129,7 +143,7 @@ impl WaterFill {
                 self.in_touched[li] = false;
                 false
             } else {
-                self.residual[li] = cap;
+                self.residual[li] = caps[li];
                 self.unfrozen[li] = self.nactive[li];
                 true
             }
@@ -246,8 +260,9 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
     if nsteps == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
-    let cap = params.link_bw_bps / 8.0; // bytes per second per link
-    let per_hop = params.per_hop_s();
+    let cap = params.link_bw_bps / 8.0; // base bytes per second per link
+    let caps = plan.link_caps(params); // per-link (== cap when uniform)
+    let msg_hop_lat = plan.msg_hop_lat(params);
 
     let mut received = vec![0u32; n * nsteps];
     // Per node: the step it has entered (sends injected); -1 = about to
@@ -309,7 +324,7 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
                 let route = plan.route(f.msg as usize);
                 wf.drain(route);
                 let m = plan.msg(f.msg as usize);
-                let arrive = now + route.len() as f64 * per_hop;
+                let arrive = now + msg_hop_lat[f.msg as usize];
                 push!(arrive, Event::Delivery { node: m.dst, step: m.step });
                 need_recompute = true;
             } else {
@@ -360,7 +375,7 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
         }
 
         if need_recompute {
-            wf.recompute(&mut active, plan, cap);
+            wf.recompute(&mut active, plan, cap, &caps);
             need_recompute = false;
         }
     }
@@ -460,6 +475,7 @@ mod tests {
         let plan = SimPlan::build(&s, &t);
         let p = params();
         let cap = p.link_bw_bps / 8.0;
+        let caps = plan.link_caps(&p);
         for step in 0..plan.num_steps() {
             let mut fast = WaterFill::new(&plan);
             let mut slow = WaterFill::new(&plan);
@@ -481,8 +497,8 @@ mod tests {
                     }
                 }
             }
-            fast.recompute(&mut active_f, &plan, cap);
-            slow.recompute(&mut active_s, &plan, cap);
+            fast.recompute(&mut active_f, &plan, cap, &caps);
+            slow.recompute(&mut active_s, &plan, cap, &caps);
             for (a, b) in active_f.iter().zip(&active_s) {
                 assert_eq!(a.msg, b.msg);
                 assert_eq!(a.rate.to_bits(), b.rate.to_bits(), "step {step}");
@@ -509,6 +525,55 @@ mod tests {
             assert_eq!(via_plan.messages, direct.messages);
             assert_eq!(via_plan.events, direct.events);
         }
+    }
+
+    #[test]
+    fn straggled_link_slows_its_flow_by_the_factor() {
+        // one neighbor message over a 4x-slowed link: α + 4·bytes/cap +
+        // per_hop, exactly
+        use crate::net::{LinkClass, NetModel};
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("one", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            crate::schedule::Send {
+                to: 1,
+                pieces: vec![crate::schedule::Piece {
+                    blocks: crate::blockset::BlockSet::full(n),
+                    contrib: crate::blockset::BlockSet::singleton(0, n),
+                    kind: crate::schedule::Kind::Reduce,
+                }],
+                route: crate::schedule::RouteHint::Minimal,
+            },
+        );
+        let mut model = NetModel::uniform(&t);
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        model.set_class(l, LinkClass::slowdown(4.0));
+        let p = params();
+        let m = 1u64 << 20;
+        let plan = SimPlan::build_with_model(&s, &model);
+        let r = simulate_flow_plan(&plan, m, &p);
+        let expect = p.alpha_s + 4.0 * m as f64 * 8.0 / p.link_bw_bps + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        // scaled per-link latencies are paid too
+        let mut lat = NetModel::uniform(&t);
+        lat.set_class(l, LinkClass::new(1.0, 3.0, 2.0));
+        let rl = simulate_flow_plan(&SimPlan::build_with_model(&s, &lat), m, &p);
+        let expect_lat = p.alpha_s
+            + m as f64 * 8.0 / p.link_bw_bps
+            + 3.0 * p.link_latency_s
+            + 2.0 * p.hop_latency_s;
+        assert!(
+            (rl.completion_s - expect_lat).abs() < expect_lat * 1e-9,
+            "got {} expect {expect_lat}",
+            rl.completion_s
+        );
     }
 
     #[test]

@@ -24,12 +24,29 @@
 //! `rust/tests/sim_crosscheck.rs`); the pre-overhaul per-packet engine
 //! survives as [`packet::reference`], the drift oracle.
 //!
+//! ## Network models
+//!
+//! Both engines price each link individually. A plan built through
+//! [`SimPlan::build`] (or [`simulate`]) runs the paper's **uniform**
+//! fabric: every link at `NetParams` rate and latency — the legacy
+//! arithmetic, bit for bit. A plan built against a heterogeneous
+//! [`crate::net::NetModel`] ([`SimPlan::build_with_model`],
+//! [`simulate_model`]) carries per-link bandwidth/latency scale columns
+//! and routes detoured around down links; the flow water-filling fills
+//! per-link capacities, and the packet engine serializes each batch at the
+//! link's own rate with a tail-arrival carry so a fast link downstream of
+//! a slow one can never ship bytes before they arrive. Named degradation
+//! scenarios (stragglers, per-dimension ratios, faults) live in
+//! [`crate::harness::scenarios`].
+//!
 //! Both modes execute against a precompiled [`SimPlan`] ([`plan`]): the
-//! schedule→routes structure is flattened once per `(schedule, torus)` and
-//! reused across every message size (and across sweep threads). Registry
-//! consumers additionally share plans across invocations through the
-//! process-wide [`cache::PlanCache`], keyed by `(algo, variant, dims)`. Use
-//! [`simulate`] for one-off runs, [`simulate_plan`] when sweeping a ladder.
+//! schedule→routes structure is flattened once per `(schedule, torus,
+//! model)` and reused across every message size (and across sweep
+//! threads). Registry consumers additionally share plans across
+//! invocations through the process-wide [`cache::PlanCache`], keyed by
+//! `(algo, variant, dims, net fingerprint)`. Use [`simulate`] /
+//! [`simulate_model`] for one-off runs, [`simulate_plan`] when sweeping a
+//! ladder.
 
 pub mod cache;
 pub mod flow;
@@ -40,12 +57,17 @@ pub use cache::{PlanCache, PlanKey};
 pub use plan::SimPlan;
 
 use crate::cost::NetParams;
+use crate::net::NetModel;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 
 /// A heap entry for the discrete-event engines: min-heap by time, FIFO
 /// tie-break by push sequence (`BinaryHeap` is a max-heap, so the ordering
 /// is reversed). The event payload never participates in the ordering.
+/// Times must never be NaN (`total_cmp` would otherwise sort a NaN event
+/// deterministically but *wrongly* — after every finite time — so the
+/// debug assertion catches the corrupted model at the source instead of
+/// letting the heap silently scramble).
 #[derive(Clone, Copy)]
 pub(crate) struct Timed<E> {
     pub t: f64,
@@ -61,11 +83,11 @@ impl<E> PartialEq for Timed<E> {
 impl<E> Eq for Timed<E> {}
 impl<E> Ord for Timed<E> {
     fn cmp(&self, other: &Self) -> std::cmp::Ordering {
-        other
-            .t
-            .partial_cmp(&self.t)
-            .unwrap_or(std::cmp::Ordering::Equal)
-            .then(other.seq.cmp(&self.seq))
+        debug_assert!(
+            !self.t.is_nan() && !other.t.is_nan(),
+            "NaN event time in the DES heap"
+        );
+        other.t.total_cmp(&self.t).then(other.seq.cmp(&self.seq))
     }
 }
 impl<E> PartialOrd for Timed<E> {
@@ -108,6 +130,19 @@ pub fn simulate(
     simulate_plan(&SimPlan::build(schedule, torus), m_bytes, params, mode)
 }
 
+/// [`simulate`] under a heterogeneous [`NetModel`] (per-link bandwidth and
+/// latency scales, down-link detours). With a uniform model this is
+/// bit-identical to [`simulate`].
+pub fn simulate_model(
+    schedule: &Schedule,
+    model: &NetModel,
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+) -> SimResult {
+    simulate_plan(&SimPlan::build_with_model(schedule, model), m_bytes, params, mode)
+}
+
 /// Simulate an `m_bytes` collective against a precompiled plan.
 pub fn simulate_plan(
     plan: &SimPlan,
@@ -115,6 +150,7 @@ pub fn simulate_plan(
     params: &NetParams,
     mode: SimMode,
 ) -> SimResult {
+    params.validate();
     match mode {
         SimMode::Flow => flow::simulate_flow_plan(plan, m_bytes, params),
         SimMode::Packet { mtu } => packet::simulate_packet_plan(plan, m_bytes, params, mtu),

@@ -10,15 +10,20 @@
 //! rather than `O(packets × hops)`, which is what extends flow-vs-packet
 //! cross-validation from ring-9 scale to 8×8 and 4×4×4 tori (and beyond).
 //!
-//! Per hop the recurrence is (all links run at the same rate `cap`):
+//! Per hop the recurrence is (each link `l` serializes at its own rate
+//! `cap_l` and charges its own forwarding latency `hop_l`, both from the
+//! plan's [`crate::net::NetModel`] scale columns — scalar `cap`/`per_hop`
+//! on a uniform model):
 //!
 //! * `start = max(head_arrival, link_free)`, link busy until
-//!   `start + total/cap`;
-//! * the head packet reaches the next hop at `start + head/cap + per_hop`
+//!   `max(start + total/cap_l, tail_arrival)` — the batch cannot finish
+//!   serializing before its last byte arrived from upstream. On a uniform
+//!   model the serialization term always dominates, so the `max` is the
+//!   exact legacy value; it matters when a slow link feeds a faster one;
+//! * the head packet reaches the next hop at `start + head/cap_l + hop_l`
 //!   (`head` = first-packet bytes, the largest packet of the batch, so
-//!   downstream contiguity is preserved — packets can never be wanted
-//!   before they arrive);
-//! * the tail arrives at the destination `per_hop` after the last link
+//!   with the tail-arrival carry the schedule can never outrun the bytes);
+//! * the tail arrives at the destination `hop_l` after the last link
 //!   finishes the batch.
 //!
 //! Compared with the pre-overhaul per-packet engine (kept below as
@@ -49,7 +54,9 @@ enum Event {
     StepStart { node: u32, step: u32 },
     /// Message `msg`'s batch head is ready to enter hop `hop` of its route
     /// (`hop == route.len()` means the tail reached the destination).
-    Batch { msg: u32, hop: u16 },
+    /// `ready` is when the batch's *last* byte is available at this hop
+    /// (the tail-arrival carry of the module docs).
+    Batch { msg: u32, hop: u16, ready: f64 },
 }
 
 /// Convenience wrapper: build the plan and simulate. Ladder-style callers
@@ -78,8 +85,8 @@ pub fn simulate_packet_plan(
     if nsteps == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
-    let cap = params.link_bw_bps / 8.0; // bytes/s
-    let per_hop = params.per_hop_s();
+    let caps = plan.link_caps(params); // per-link bytes/s
+    let hops = plan.link_hop_lat(params); // per-link forwarding latency
 
     let mut received = vec![0u32; n * nsteps];
     let mut entered = vec![-1i64; n];
@@ -105,7 +112,8 @@ pub fn simulate_packet_plan(
             Event::StepStart { node, step } => {
                 entered[node as usize] = step as i64;
                 for &mi in plan.injections(node as usize, step as usize) {
-                    push!(now, Event::Batch { msg: mi, hop: 0 });
+                    // the whole payload is local at injection: ready = now
+                    push!(now, Event::Batch { msg: mi, hop: 0, ready: now });
                 }
                 let k = step as usize;
                 if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
@@ -114,7 +122,7 @@ pub fn simulate_packet_plan(
                     push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                 }
             }
-            Event::Batch { msg, hop } => {
+            Event::Batch { msg, hop, ready } => {
                 let route = plan.route(msg as usize);
                 if hop as usize == route.len() {
                     // tail packet arrived at the destination
@@ -133,20 +141,25 @@ pub fn simulate_packet_plan(
                     }
                 } else {
                     // claim the link for the whole batch (FIFO by head
-                    // arrival: heap order is (time, push seq))
+                    // arrival: heap order is (time, push seq)); the batch
+                    // cannot finish before its last byte arrived (`ready`)
                     let total = plan.bytes(msg as usize, m_bytes);
                     let l = route[hop as usize] as usize;
                     let start = now.max(free_at[l]);
-                    let batch_end = start + total / cap;
+                    let batch_end = (start + total / caps[l]).max(ready);
                     free_at[l] = batch_end;
+                    let tail_ready = batch_end + hops[l];
                     if hop as usize + 1 == route.len() {
-                        // tail arrives per_hop after the batch serializes
-                        push!(batch_end + per_hop, Event::Batch { msg, hop: hop + 1 });
+                        // tail arrives hop_l after the batch serializes
+                        push!(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
                     } else {
                         // cut-through: the head packet frees up for the
                         // next hop after its own serialization only
                         let head = total.min(mtu as f64);
-                        push!(start + head / cap + per_hop, Event::Batch { msg, hop: hop + 1 });
+                        push!(
+                            start + head / caps[l] + hops[l],
+                            Event::Batch { msg, hop: hop + 1, ready: tail_ready }
+                        );
                     }
                 }
             }
@@ -162,7 +175,9 @@ pub mod reference {
     //! batched-vs-reference divergence) and as the baseline
     //! `bench_simplan` measures the batching speedup against. Packet sizes
     //! are `f64` here too — the old `f32` narrowing is fixed in both
-    //! engines.
+    //! engines. Store-and-forward per packet is naturally correct under
+    //! heterogeneous link rates, so this engine consumes the same per-link
+    //! capacity/latency columns and stays the oracle for NetModel runs.
 
     use super::*;
 
@@ -186,8 +201,8 @@ pub mod reference {
         if nsteps == 0 {
             return SimResult { completion_s: 0.0, messages: 0, events: 0 };
         }
-        let cap = params.link_bw_bps / 8.0;
-        let per_hop = params.per_hop_s();
+        let caps = plan.link_caps(params);
+        let hops = plan.link_hop_lat(params);
 
         let mut received = vec![0u32; n * nsteps];
         let mut entered = vec![-1i64; n];
@@ -258,9 +273,9 @@ pub mod reference {
                     } else {
                         let l = route[hop as usize] as usize;
                         let start = now.max(free_at[l]);
-                        let end = start + bytes / cap;
+                        let end = start + bytes / caps[l];
                         free_at[l] = end;
-                        push!(end + per_hop, RefEvent::Packet { msg, hop: hop + 1, bytes });
+                        push!(end + hops[l], RefEvent::Packet { msg, hop: hop + 1, bytes });
                     }
                 }
             }
@@ -372,6 +387,36 @@ mod tests {
         let b = reference::simulate_packet_reference_plan(&plan, m, &p, 4096);
         let rel = (a.completion_s - b.completion_s).abs() / b.completion_s;
         assert!(rel < 1e-12, "batched {} vs reference {}", a.completion_s, b.completion_s);
+    }
+
+    #[test]
+    fn batch_cannot_outrun_bytes_across_rate_increase() {
+        // 3-hop message whose first link is 4x slower: the two fast
+        // downstream links are tail-arrival-bound, so completion is the
+        // slow serialization plus the route latency — without the
+        // tail-arrival carry the batch would "teleport" off the slow link.
+        use crate::net::{LinkClass, NetModel};
+        let n = 9u32;
+        let t = Torus::ring(n);
+        let s = single_send(n, n, 3, BlockSet::full(n));
+        let mut model = NetModel::uniform(&t);
+        let l0 = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        model.set_class(l0, LinkClass::slowdown(4.0));
+        let p = NetParams::default();
+        let m = 256 * 1024u64;
+        let plan = SimPlan::build_with_model(&s, &model);
+        let r = simulate_packet_plan(&plan, m, &p, 4096);
+        let ser = m as f64 * 8.0 / p.link_bw_bps;
+        let expect = p.alpha_s + 4.0 * ser + 3.0 * p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        // the per-packet reference agrees to within two packet times
+        let rr = reference::simulate_packet_reference_plan(&plan, m, &p, 4096);
+        let rel = (r.completion_s - rr.completion_s).abs() / rr.completion_s;
+        assert!(rel < 0.01, "batched {} vs reference {}", r.completion_s, rr.completion_s);
     }
 
     #[test]

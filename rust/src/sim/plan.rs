@@ -22,9 +22,17 @@
 //! * `injections(node, step)` and `msgs_on_link(link)` are CSR adjacency
 //!   lists; the latter exists for link-centric consumers (congestion
 //!   accounting, future incremental schedulers).
+//! * Heterogeneity ([`crate::net::NetModel`]) is baked in as three
+//!   per-link *scale* columns (bandwidth / propagation / processing,
+//!   relative to the [`NetParams`] base) plus routes resolved with
+//!   down-link detours. The columns are still size- *and*
+//!   parameter-independent, so one plan serves every message size and
+//!   every base bandwidth; [`SimPlan::build`] is the uniform special case
+//!   (all scales `1.0`) and stays bit-identical to the pre-NetModel plans.
 
 use crate::cost::NetParams;
-use crate::schedule::{RouteHint, Schedule};
+use crate::net::NetModel;
+use crate::schedule::Schedule;
 use crate::topology::Torus;
 
 /// One flattened message: everything size-independent about it.
@@ -58,13 +66,31 @@ pub struct SimPlan {
     /// CSR offsets/ids: messages whose route crosses each link.
     link_off: Vec<u32>,
     link_ids: Vec<u32>,
+    /// Per-link bandwidth multipliers relative to `NetParams::link_bw_bps`
+    /// (all `1.0` for uniform models).
+    link_bw_scale: Vec<f64>,
+    /// Per-link propagation-latency multipliers.
+    link_lat_scale: Vec<f64>,
+    /// Per-link processing-latency multipliers.
+    link_proc_scale: Vec<f64>,
+    /// True iff the plan was built against the uniform model — gates the
+    /// simulators' legacy (bit-identical) arithmetic and fast paths.
+    uniform: bool,
 }
 
 impl SimPlan {
-    /// Flatten `schedule` routed on `torus` into a plan. Cost is one route
-    /// resolution per message; the result is reused for every message size
-    /// (and across threads).
+    /// Flatten `schedule` routed on `torus` into a plan (uniform fabric).
+    /// Cost is one route resolution per message; the result is reused for
+    /// every message size (and across threads).
     pub fn build(schedule: &Schedule, torus: &Torus) -> SimPlan {
+        SimPlan::build_with_model(schedule, &NetModel::uniform(torus))
+    }
+
+    /// Flatten `schedule` under a heterogeneous [`NetModel`]: routes detour
+    /// around down links and the model's per-link scale columns are carried
+    /// into the plan. With a uniform model this is exactly [`SimPlan::build`].
+    pub fn build_with_model(schedule: &Schedule, model: &NetModel) -> SimPlan {
+        let torus = model.torus();
         assert_eq!(schedule.n, torus.n(), "schedule/topology mismatch");
         let n = schedule.n as usize;
         let nsteps = schedule.steps.len();
@@ -79,12 +105,7 @@ impl SimPlan {
                     if rel <= 0.0 {
                         continue;
                     }
-                    let route = match snd.route {
-                        RouteHint::Minimal => torus.route(src as u32, snd.to),
-                        RouteHint::Directed { dim, dir } => {
-                            torus.route_directed(src as u32, snd.to, dim as usize, dir)
-                        }
-                    };
+                    let route = model.route(src as u32, snd.to, snd.route);
                     let route_off = route_links.len() as u32;
                     route_links.extend(route.into_iter().map(|l| torus.link_index(l) as u32));
                     let route_len = route_links.len() as u32 - route_off;
@@ -141,7 +162,52 @@ impl SimPlan {
             expected,
             link_off,
             link_ids,
+            link_bw_scale: (0..num_links).map(|l| model.bw_scale(l)).collect(),
+            link_lat_scale: (0..num_links).map(|l| model.lat_scale(l)).collect(),
+            link_proc_scale: (0..num_links).map(|l| model.proc_scale(l)).collect(),
+            uniform: model.is_uniform(),
         }
+    }
+
+    /// Was this plan built against the uniform (paper §6) network model?
+    pub fn is_uniform(&self) -> bool {
+        self.uniform
+    }
+
+    /// Bandwidth multiplier of dense link `link`.
+    pub fn link_bw_scale(&self, link: usize) -> f64 {
+        self.link_bw_scale[link]
+    }
+
+    /// Per-link capacities in bytes/s under `params` (each exactly the
+    /// scalar `link_bw_bps / 8` on a uniform plan: `cap * 1.0 == cap`).
+    pub fn link_caps(&self, params: &NetParams) -> Vec<f64> {
+        let cap = params.link_bw_bps / 8.0;
+        self.link_bw_scale.iter().map(|&s| cap * s).collect()
+    }
+
+    /// Per-link forwarding latency (scaled propagation + processing) under
+    /// `params`; exactly `per_hop_s()` everywhere on a uniform plan.
+    pub fn link_hop_lat(&self, params: &NetParams) -> Vec<f64> {
+        self.link_lat_scale
+            .iter()
+            .zip(&self.link_proc_scale)
+            .map(|(&ls, &ps)| ls * params.link_latency_s + ps * params.hop_latency_s)
+            .collect()
+    }
+
+    /// Total route forwarding latency per message. Uniform plans keep the
+    /// historical `hops * per_hop` product so flow results stay
+    /// bit-identical; heterogeneous plans sum the per-link latencies.
+    pub fn msg_hop_lat(&self, params: &NetParams) -> Vec<f64> {
+        if self.uniform {
+            let per_hop = params.per_hop_s();
+            return self.msgs.iter().map(|m| m.route_len as f64 * per_hop).collect();
+        }
+        let hop = self.link_hop_lat(params);
+        (0..self.msgs.len())
+            .map(|i| self.route(i).iter().map(|&l| hop[l as usize]).sum())
+            .collect()
     }
 
     pub fn n(&self) -> usize {
@@ -204,8 +270,9 @@ impl SimPlan {
     }
 
     /// Serialization lower bound (seconds) of the whole collective at
-    /// `m_bytes` under `params`: the most-loaded link's total payload at
-    /// line rate. A cheap sanity anchor for both simulator modes.
+    /// `m_bytes` under `params`: the most time-expensive link's total
+    /// payload at its own line rate (`load / bw_scale` at the base β). A
+    /// cheap sanity anchor for both simulator modes.
     pub fn bottleneck_serialization_s(&self, m_bytes: u64, params: &NetParams) -> f64 {
         let mut load = vec![0f64; self.num_links];
         for (i, m) in self.msgs.iter().enumerate() {
@@ -214,7 +281,11 @@ impl SimPlan {
                 load[l as usize] += b;
             }
         }
-        load.into_iter().fold(0f64, f64::max) * params.beta_per_byte()
+        load.into_iter()
+            .enumerate()
+            .map(|(l, ld)| ld / self.link_bw_scale[l])
+            .fold(0f64, f64::max)
+            * params.beta_per_byte()
     }
 }
 
@@ -282,6 +353,34 @@ mod tests {
                 .map(|(r, k)| p.expected(r, k))
                 .sum();
         assert_eq!(expected_total as usize, p.num_msgs());
+    }
+
+    #[test]
+    fn model_plan_carries_scales_and_detours() {
+        use crate::net::{LinkClass, NetModel};
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        let mut model = NetModel::uniform(&t);
+        model.set_class(l, LinkClass::slowdown(4.0));
+        let p = SimPlan::build_with_model(&s, &model);
+        assert!(!p.is_uniform());
+        assert_eq!(p.link_bw_scale(l), 0.25);
+        // uniform model produces the identical plan surface as build()
+        let u = SimPlan::build_with_model(&s, &NetModel::uniform(&t));
+        let b = SimPlan::build(&s, &t);
+        assert!(u.is_uniform() && b.is_uniform());
+        assert_eq!(u.num_msgs(), b.num_msgs());
+        for i in 0..u.num_msgs() {
+            assert_eq!(u.route(i), b.route(i));
+        }
+        // a down link never appears in any route
+        let mut faulty = NetModel::uniform(&t);
+        faulty.set_down(l, true);
+        let pf = SimPlan::build_with_model(&s, &faulty);
+        for i in 0..pf.num_msgs() {
+            assert!(!pf.route(i).contains(&(l as u32)), "msg {i} crosses the down link");
+        }
     }
 
     #[test]

@@ -9,12 +9,21 @@
 //! reference engine it replaced. The plan-reuse, plan-cache, and
 //! parallelism invariants are *exact* (bit-identical): those layers only
 //! restructure the computation, never the arithmetic.
+//!
+//! NetModel invariants (bounds measured via `tools/pysim/eval_netmodel.py`,
+//! this container's toolchain-less protocol): the uniform model is
+//! bit-identical to the model-less path for every engine; slowing a used
+//! link never speeds a non-padded collective up; faulty-link reroutes keep
+//! flow-vs-packet inside 10%; and the plan cache keys on the model
+//! fingerprint, so a changed link table or down set can never hit a stale
+//! plan.
 
 use trivance::algo::{build, Algo, Variant};
 use trivance::cost::NetParams;
 use trivance::harness::sweep::{build_all, build_all_uncached, run_sweep_threads, size_ladder};
+use trivance::net::{LinkClass, NetModel};
 use trivance::sim::packet::reference::simulate_packet_reference_plan;
-use trivance::sim::{simulate_plan, SimMode, SimPlan};
+use trivance::sim::{simulate_plan, PlanCache, PlanKey, SimMode, SimPlan};
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
 
@@ -239,6 +248,181 @@ fn parallel_sweep_bit_identical_for_any_thread_count() {
                 assert_eq!(sw.points[si][ai].variant, baseline.points[si][ai].variant);
             }
         }
+    }
+}
+
+#[test]
+fn uniform_netmodel_is_bit_identical_across_registry() {
+    // A plan built through NetModel::uniform must reproduce the seed
+    // (model-less) flow AND packet results bit for bit, on ring-9, ring-27
+    // and 4x4x4, for every registry algorithm — cached and uncached.
+    let p = NetParams::default();
+    for dims in [vec![9u32], vec![27], vec![4, 4, 4]] {
+        let t = Torus::new(&dims);
+        let model = NetModel::uniform(&t);
+        assert_eq!(model.fingerprint(), 0);
+        let cache = PlanCache::new();
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                let seed_plan = SimPlan::build(&b.net, &t);
+                let model_plan = SimPlan::build_with_model(&b.net, &model);
+                assert!(model_plan.is_uniform());
+                // and through the fingerprint-keyed cache: first a miss,
+                // then a hit handing back the same plan
+                let key = PlanKey::with_net_fp(algo, variant, t.dims(), model.fingerprint());
+                let cached = cache.get_or_build(key.clone(), || {
+                    SimPlan::build_with_model(&b.net, &model)
+                });
+                let cached_hit = cache.get_or_build(key, || panic!("must hit"));
+                assert!(std::sync::Arc::ptr_eq(&cached, &cached_hit));
+                for m in [4096u64, 256 << 10] {
+                    for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
+                        let a = simulate_plan(&seed_plan, m, &p, mode);
+                        let c = simulate_plan(&model_plan, m, &p, mode);
+                        let h = simulate_plan(&cached_hit, m, &p, mode);
+                        assert_eq!(
+                            a.completion_s.to_bits(),
+                            c.completion_s.to_bits(),
+                            "{algo:?} {variant:?} {dims:?} m={m} {mode:?}"
+                        );
+                        assert_eq!(a.events, c.events);
+                        assert_eq!(a.completion_s.to_bits(), h.completion_s.to_bits());
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn straggled_used_link_never_speeds_a_collective_up() {
+    // Slow each link the schedule actually uses by 4x, one at a time: the
+    // flow completion must never drop below the uniform completion.
+    // Non-padded configurations are exactly monotone; virtually-padded ones
+    // (lumpy traffic) are allowed the <0.1% fluid artifact measured in
+    // tools/pysim (worst -0.074%, recdoub-B ring-9).
+    let p = NetParams::default();
+    for dims in [vec![9u32], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                let base_plan = SimPlan::build(&b.net, &t);
+                let tol = if b.padded { 1e-3 } else { 1e-12 };
+                let used: std::collections::BTreeSet<u32> = (0..base_plan.num_msgs())
+                    .flat_map(|i| base_plan.route(i).iter().copied())
+                    .collect();
+                let sizes = [4096u64, 256 << 10];
+                let f0: Vec<f64> = sizes
+                    .iter()
+                    .map(|&m| simulate_plan(&base_plan, m, &p, SimMode::Flow).completion_s)
+                    .collect();
+                for &l in &used {
+                    let mut model = NetModel::uniform(&t);
+                    model.set_class(l as usize, LinkClass::slowdown(4.0));
+                    let plan = SimPlan::build_with_model(&b.net, &model);
+                    for (mi, &m) in sizes.iter().enumerate() {
+                        let f1 = simulate_plan(&plan, m, &p, SimMode::Flow).completion_s;
+                        assert!(
+                            f1 >= f0[mi] * (1.0 - tol),
+                            "{algo:?} {variant:?} {dims:?} m={m}: slowing link {l} \
+                             sped up {} -> {f1}",
+                            f0[mi]
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn faulty_link_reroute_keeps_flow_and_packet_within_10pct() {
+    // 1-2 down links with detoured routes: the fluid model must still
+    // track packet ground truth within 10% across the registry (measured
+    // worst 6.9%, recdoub-L 4x4, tools/pysim/eval_netmodel.py) — and no
+    // route may cross a down link.
+    let p = NetParams::default();
+    for (dims, ks) in [(vec![3u32, 3], vec![1usize, 2]), (vec![4, 4], vec![1])] {
+        let t = Torus::new(&dims);
+        for &k in &ks {
+            let model = NetModel::faulty(&t, k, trivance::harness::scenarios::FAULTY_SEED);
+            assert_eq!(model.num_down(), k);
+            for algo in Algo::ALL {
+                for variant in Variant::ALL {
+                    let Ok(b) = build(algo, variant, &t) else { continue };
+                    let plan = SimPlan::build_with_model(&b.net, &model);
+                    for i in 0..plan.num_msgs() {
+                        for &l in plan.route(i) {
+                            assert!(
+                                !model.is_down(l as usize),
+                                "{algo:?} {variant:?}: route crosses down link {l}"
+                            );
+                        }
+                    }
+                    for m in [4096u64, 256 << 10] {
+                        let f = simulate_plan(&plan, m, &p, SimMode::Flow);
+                        let pk = simulate_plan(&plan, m, &p, SimMode::Packet { mtu: 4096 });
+                        assert!(pk.completion_s > 0.0);
+                        let rel = (f.completion_s - pk.completion_s).abs() / pk.completion_s;
+                        assert!(
+                            rel < 0.10,
+                            "{algo:?} {variant:?} {dims:?} k={k} m={m}: flow {} vs packet {} \
+                             (rel {rel:.3})",
+                            f.completion_s,
+                            pk.completion_s
+                        );
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn plan_cache_misses_when_the_net_model_changes() {
+    // The silent-correctness trap the fingerprint exists for: same
+    // (algo, variant, dims), different link table or down set, must never
+    // share a plan.
+    let t = Torus::new(&[3, 3]);
+    let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+    let models = [
+        NetModel::uniform(&t),
+        NetModel::hetero_dims(&t, &[1.0, 0.5]),
+        NetModel::straggler(&t, 2, 4.0, trivance::harness::scenarios::STRAGGLER_SEED),
+        NetModel::faulty(&t, 1, trivance::harness::scenarios::FAULTY_SEED),
+    ];
+    let cache = PlanCache::new();
+    let plans: Vec<_> = models
+        .iter()
+        .map(|model| {
+            cache.get_or_build(
+                PlanKey::with_net_fp(
+                    Algo::Trivance,
+                    Variant::Latency,
+                    t.dims(),
+                    model.fingerprint(),
+                ),
+                || SimPlan::build_with_model(&b.net, model),
+            )
+        })
+        .collect();
+    assert_eq!(cache.len(), 4, "each model must occupy its own entry");
+    assert_eq!(cache.misses(), 4);
+    assert_eq!(cache.hits(), 0, "no false hits across models");
+    for i in 0..plans.len() {
+        for j in i + 1..plans.len() {
+            assert!(!std::sync::Arc::ptr_eq(&plans[i], &plans[j]));
+        }
+    }
+    // and the hetero plans genuinely differ from uniform in behaviour
+    let p = NetParams::default();
+    let m = 256 << 10;
+    let f0 = simulate_plan(&plans[0], m, &p, SimMode::Flow).completion_s;
+    for plan in &plans[1..] {
+        let f = simulate_plan(plan, m, &p, SimMode::Flow).completion_s;
+        assert!(f > f0, "degraded model must be slower at {m} B: {f} vs {f0}");
     }
 }
 

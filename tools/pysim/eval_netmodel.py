@@ -1,0 +1,171 @@
+"""NetModel (heterogeneous per-link network) validation — the
+toolchain-less protocol for the NetModel PR, same role eval_batched.py
+played for the packet-engine overhaul.
+
+Asserted bounds (measured 2026-07 in this container; the Rust tests pin the
+same semantics, so these are the numbers the Rust suite is expected to
+reproduce):
+
+1. A uniform NetModel is **bit-identical** to the model-less path for every
+   engine (flow / batched packet / reference packet) across the registry.
+2. Straggler monotonicity: slowing any used link x4 never decreases the
+   flow completion on non-padded configurations (padded configurations are
+   allowed a <0.1% fluid artifact — recdoub-B on ring-9 measures -0.074%).
+3. Faulty-link reroute: with 1-2 down links ([3,3] k=1,2; [4,4] k=1), every
+   route avoids the down links and flow-vs-batched-packet drift stays <10%
+   (measured worst 0.069).
+4. Hetero-dims: flow-vs-packet drift <6% on per-dimension bandwidth ratios
+   (measured worst 0.035).
+5. Batched-vs-reference drift under hetero models stays <15% (measured
+   worst 0.113, swing-L ring-8 straggler; uniform bound remains the 6% of
+   eval_batched.py).
+"""
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+STRAGGLER_SEED = 0x5EED0001
+FAULTY_SEED = 0x5EED0002
+fails = []
+
+
+def chk(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+# --- 1. uniform NetModel is bit-identical to the model-less path ---
+print("== uniform NetModel bit-identity ==")
+for dims in [[9], [3, 3]]:
+    t = Torus(dims)
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            base = Plan(b.net, t)
+            um = Plan(b.net, t, NetModel.uniform(t))
+            for m in [4096, 256 << 10]:
+                for name, run in [
+                    ("flow", lambda p: simulate_flow(p, m, P)),
+                    ("batched", lambda p: simulate_packet_batched(p, m, P, 4096)),
+                    ("ref", lambda p: simulate_packet_ref(p, m, P, 4096)),
+                ]:
+                    a, ae = run(base)
+                    c, ce = run(um)
+                    chk(
+                        f"uniform {dims} {algo}-{variant} {name} m={m}",
+                        a == c and ae == ce,
+                        f"{a} vs {c}",
+                    )
+
+# --- 2. straggler monotonicity ---
+print("== straggler monotonicity (each used link x4) ==")
+for dims in [[9], [3, 3]]:
+    t = Torus(dims)
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            base_plan = Plan(b.net, t)
+            used = sorted({l for msg in base_plan.msgs for l in msg[4]})
+            tol = 1e-3 if b.padded else 1e-12
+            for m in [4096, 256 << 10]:
+                f0, _ = simulate_flow(base_plan, m, P)
+                worst = 0.0
+                for l in used:
+                    mdl = NetModel.uniform(t)
+                    mdl.bw_scale[l] = 0.25
+                    f1, _ = simulate_flow(Plan(b.net, t, mdl), m, P)
+                    worst = min(worst, (f1 - f0) / f0)
+                chk(
+                    f"monotone {dims} {algo}-{variant} m={m} (padded={b.padded})",
+                    worst >= -tol,
+                    f"worst decrease {worst:.2e}",
+                )
+
+# --- 3. faulty-link reroute ---
+print("== faulty reroute: routes avoid down links, flow-vs-packet <10% ==")
+for dims, ks in [([3, 3], [1, 2]), ([4, 4], [1])]:
+    t = Torus(dims)
+    for k in ks:
+        mdl = NetModel.faulty(t, k, FAULTY_SEED)
+        chk(f"faulty {dims} k={k} connected", strongly_connected(t, mdl.down))
+        for algo in ALGOS:
+            for variant in VARIANTS:
+                b = build(algo, variant, t)
+                if b is None:
+                    continue
+                plan = Plan(b.net, t, mdl)
+                clean = not any(mdl.down[l] for msg in plan.msgs for l in msg[4])
+                chk(f"faulty {dims} k={k} {algo}-{variant} routes clean", clean)
+                for m in [4096, 256 << 10]:
+                    f, _ = simulate_flow(plan, m, P)
+                    p, _ = simulate_packet_batched(plan, m, P, 4096)
+                    rel = abs(f - p) / p
+                    chk(
+                        f"faulty {dims} k={k} {algo}-{variant} m={m}",
+                        rel < 0.10,
+                        f"rel={rel:.4f}",
+                    )
+
+# --- 4. hetero-dims flow-vs-packet ---
+print("== hetero-dims flow-vs-packet <6% ==")
+for dims, scales in [([3, 3], [1.0, 0.5]), ([4, 4], [1.0, 0.5]), ([3, 3, 3], [1.0, 0.5, 0.25])]:
+    t = Torus(dims)
+    mdl = NetModel.hetero_dims(t, scales)
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            plan = Plan(b.net, t, mdl)
+            for m in [4096, 256 << 10]:
+                f, _ = simulate_flow(plan, m, P)
+                p, _ = simulate_packet_batched(plan, m, P, 4096)
+                rel = abs(f - p) / p
+                chk(
+                    f"hetero {dims} {algo}-{variant} m={m}",
+                    rel < 0.06,
+                    f"rel={rel:.4f}",
+                )
+
+# --- 5. batched vs reference under hetero models ---
+print("== batched-vs-reference hetero drift <15% ==")
+worst = 0.0
+for dims in [[9], [8], [3, 3]]:
+    t = Torus(dims)
+    models = [
+        ("straggler1", NetModel.straggler(t, 1, 4.0, STRAGGLER_SEED)),
+        ("faulty1", NetModel.faulty(t, 1, FAULTY_SEED)),
+    ]
+    for name, mdl in models:
+        for algo in ALGOS:
+            for variant in VARIANTS:
+                b = build(algo, variant, t)
+                if b is None:
+                    continue
+                plan = Plan(b.net, t, mdl)
+                for m in [4096, 256 << 10]:
+                    a, _ = simulate_packet_batched(plan, m, P, 4096)
+                    r, _ = simulate_packet_ref(plan, m, P, 4096)
+                    rel = abs(a - r) / r
+                    worst = max(worst, rel)
+                    chk(
+                        f"drift {dims} {name} {algo}-{variant} m={m}",
+                        rel < 0.15,
+                        f"rel={rel:.4f}",
+                    )
+print(f"worst batched-vs-reference hetero drift: {worst:.4f}")
+
+print()
+if fails:
+    print(f"{len(fails)} FAILURES: {fails}")
+    sys.exit(1)
+print("netmodel eval: all asserted bounds hold")

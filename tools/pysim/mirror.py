@@ -21,6 +21,7 @@ Reduce-Scatter tree reversal operate on them.
 """
 
 import heapq
+from collections import deque
 from itertools import product as iproduct
 
 MIN = ("min",)
@@ -113,6 +114,163 @@ class Torus:
         for combo in iproduct(*[sorted(r) for r in ranges]):
             out.add(self.rank(list(combo)))
         return out
+
+
+# ------------------------------------------------------------ net model
+# Mirror of rust/src/net/mod.rs: per-link scale columns relative to the base
+# NetParams, an optional down set, and detour routing around down links.
+# Keep presets, the SplitMix64 draws, and the BFS in lockstep with Rust.
+
+MASK64 = (1 << 64) - 1
+
+
+class SplitMix64:
+    """Mirror of rust/src/util/rng.rs (used for deterministic link picks)."""
+
+    def __init__(self, seed):
+        self.state = seed & MASK64
+
+    def next_u64(self):
+        self.state = (self.state + 0x9E3779B97F4A7C15) & MASK64
+        z = self.state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK64
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK64
+        return z ^ (z >> 31)
+
+    def below(self, bound):
+        return (self.next_u64() * bound) >> 64
+
+
+def strongly_connected(torus, down):
+    """Is the directed link graph minus `down` still strongly connected?"""
+    for transpose in (False, True):
+        seen = [False] * torus.n
+        seen[0] = True
+        stack = [0]
+        count = 1
+        while stack:
+            u = stack.pop()
+            for d in range(torus.ndims()):
+                for dr in (1, -1):
+                    if transpose:
+                        v = torus.neighbor(u, d, -dr)
+                        l = torus.link_index(v, d, dr)
+                    else:
+                        v = torus.neighbor(u, d, dr)
+                        l = torus.link_index(u, d, dr)
+                    if down[l] or seen[v]:
+                        continue
+                    seen[v] = True
+                    count += 1
+                    stack.append(v)
+        if count != torus.n:
+            return False
+    return True
+
+
+def pick_links(torus, k, seed, keep_connected):
+    rng = SplitMix64(seed)
+    chosen = []
+    down = [False] * torus.num_links()
+    attempts = 0
+    while len(chosen) < k:
+        attempts += 1
+        assert attempts <= 64 * k + 1024, "link picking stalled"
+        l = rng.below(torus.num_links())
+        if down[l]:
+            continue
+        down[l] = True
+        if keep_connected and not strongly_connected(torus, down):
+            down[l] = False
+            continue
+        chosen.append(l)
+    chosen.sort()
+    return chosen
+
+
+class NetModel:
+    def __init__(self, torus):
+        num_links = torus.num_links()
+        self.torus = torus
+        self.bw_scale = [1.0] * num_links
+        self.lat_scale = [1.0] * num_links
+        self.proc_scale = [1.0] * num_links
+        self.down = [False] * num_links
+
+    def is_uniform(self):
+        return (
+            not any(self.down)
+            and all(s == 1.0 for s in self.bw_scale)
+            and all(s == 1.0 for s in self.lat_scale)
+            and all(s == 1.0 for s in self.proc_scale)
+        )
+
+    @staticmethod
+    def uniform(torus):
+        return NetModel(torus)
+
+    @staticmethod
+    def hetero_dims(torus, dim_bw_scale):
+        m = NetModel(torus)
+        for node in range(torus.n):
+            for d in range(torus.ndims()):
+                for dr in (1, -1):
+                    m.bw_scale[torus.link_index(node, d, dr)] = dim_bw_scale[d]
+        return m
+
+    @staticmethod
+    def straggler(torus, k, factor, seed):
+        m = NetModel(torus)
+        for l in pick_links(torus, k, seed, keep_connected=False):
+            m.bw_scale[l] = 1.0 / factor
+        return m
+
+    @staticmethod
+    def faulty(torus, k, seed):
+        m = NetModel(torus)
+        for l in pick_links(torus, k, seed, keep_connected=True):
+            m.down[l] = True
+        return m
+
+    def route(self, src, dst, hint):
+        if hint == MIN:
+            nominal = self.torus.route(src, dst)
+        else:
+            nominal = self.torus.route_directed(src, dst, hint[1], hint[2])
+        if not any(self.down[l] for l in nominal):
+            return nominal
+        return self.route_avoiding(src, dst)
+
+    def route_avoiding(self, src, dst):
+        """Deterministic BFS shortest path skipping down links (neighbor
+        order: dim ascending, +1 before -1; FIFO queue)."""
+        if src == dst:
+            return []
+        t = self.torus
+        parent = [-2] * t.n  # -2 = unvisited, -1 = source
+        parent_link = [0] * t.n
+        parent[src] = -1
+        q = deque([src])
+        while q:
+            u = q.popleft()
+            for d in range(t.ndims()):
+                for dr in (1, -1):
+                    l = t.link_index(u, d, dr)
+                    if self.down[l]:
+                        continue
+                    v = t.neighbor(u, d, dr)
+                    if parent[v] != -2:
+                        continue
+                    parent[v] = u
+                    parent_link[v] = l
+                    q.append(v)
+        assert parent[dst] != -2, f"down links disconnect {src}->{dst}"
+        links = []
+        cur = dst
+        while parent[cur] != -1:
+            links.append(parent_link[cur])
+            cur = parent[cur]
+        return links[::-1]
 
 
 # ------------------------------------------------------------ util
@@ -717,11 +875,18 @@ def build(algo, variant, torus):
 
 
 class Plan:
-    def __init__(self, schedule, torus):
+    def __init__(self, schedule, torus, model=None):
         assert schedule.n == torus.n
+        if model is None:
+            model = NetModel.uniform(torus)
+        assert model.torus.dims == torus.dims
         self.n = schedule.n
         self.nsteps = schedule.num_steps()
         self.num_links = torus.num_links()
+        self.bw_scale = list(model.bw_scale)
+        self.lat_scale = list(model.lat_scale)
+        self.proc_scale = list(model.proc_scale)
+        self.uniform = model.is_uniform()
         self.msgs = []  # (src, dst, step, rel_bytes, route)
         for k, step in enumerate(schedule.steps):
             for src in range(self.n):
@@ -729,10 +894,7 @@ class Plan:
                     rel = snd.rel_bytes(schedule.n_blocks)
                     if rel <= 0.0:
                         continue
-                    if snd.route == MIN:
-                        route = torus.route(src, snd.to)
-                    else:
-                        route = torus.route_directed(src, snd.to, snd.route[1], snd.route[2])
+                    route = model.route(src, snd.to, snd.route)
                     self.msgs.append((src, snd.to, k, rel, route))
         self.inject = {}
         self.expected = {}
@@ -755,7 +917,35 @@ class Plan:
             b = rel * float(m_bytes)
             for l in route:
                 load[l] += b
-        return max(load, default=0.0) * 8.0 / params["bw"]
+        worst = max(
+            (load[l] / self.bw_scale[l] for l in range(self.num_links)),
+            default=0.0,
+        )
+        return worst * 8.0 / params["bw"]
+
+
+def link_caps(plan, params):
+    """Per-link capacity in bytes/s (== the scalar cap when uniform)."""
+    cap = params["bw"] / 8.0
+    return [cap * s for s in plan.bw_scale]
+
+
+def link_hop_lat(plan, params):
+    """Per-link forwarding latency (propagation + processing, scaled)."""
+    return [
+        ls * params["link_lat"] + ps * params["hop_lat"]
+        for ls, ps in zip(plan.lat_scale, plan.proc_scale)
+    ]
+
+
+def msg_hop_lat(plan, params):
+    """Total route forwarding latency per message. Uniform plans keep the
+    historical `hops * per_hop` product so results stay bit-identical."""
+    ph = per_hop(params)
+    if plan.uniform:
+        return [len(m[4]) * ph for m in plan.msgs]
+    hop = link_hop_lat(plan, params)
+    return [sum(hop[l] for l in m[4]) for m in plan.msgs]
 
 
 DEFAULT_PARAMS = {"alpha": 1.5e-6, "bw": 800e9, "link_lat": 100e-9, "hop_lat": 100e-9}
@@ -776,7 +966,8 @@ def simulate_flow(plan, m_bytes, params):
     if nsteps == 0:
         return 0.0, 0
     cap = params["bw"] / 8.0
-    ph = per_hop(params)
+    caps = link_caps(plan, params)
+    mhl = msg_hop_lat(plan, params)
 
     received = [0] * (n * nsteps)
     entered = [-1] * n
@@ -820,7 +1011,7 @@ def simulate_flow(plan, m_bytes, params):
             if nactive[l] == 0:
                 in_touched[l] = False
             else:
-                residual[l] = cap
+                residual[l] = caps[l]
                 unfrozen[l] = nactive[l]
                 keep.append(l)
         touched = keep
@@ -889,7 +1080,7 @@ def simulate_flow(plan, m_bytes, params):
                 active.pop()
                 src, dst, k, rel, route = plan.msgs[f[0]]
                 wf_drain(route)
-                push(now + len(route) * ph, ("deliv", dst, k))
+                push(now + mhl[f[0]], ("deliv", dst, k))
                 need_recompute = True
             else:
                 i += 1
@@ -937,8 +1128,8 @@ def simulate_packet_ref(plan, m_bytes, params, mtu):
     n, nsteps = plan.n, plan.nsteps
     if nsteps == 0:
         return 0.0, 0
-    cap = params["bw"] / 8.0
-    ph = per_hop(params)
+    caps = link_caps(plan, params)
+    hops = link_hop_lat(plan, params)
 
     received = [0] * (n * nsteps)
     entered = [-1] * n
@@ -995,9 +1186,9 @@ def simulate_packet_ref(plan, m_bytes, params, mtu):
             else:
                 l = route[hop]
                 start = max(now, free_at[l])
-                end = start + sz / cap
+                end = start + sz / caps[l]
                 free_at[l] = end
-                push(end + ph, ("pkt", mi, hop + 1, sz))
+                push(end + hops[l], ("pkt", mi, hop + 1, sz))
     return completion, events
 
 
@@ -1011,8 +1202,8 @@ def simulate_packet_batched(plan, m_bytes, params, mtu):
     n, nsteps = plan.n, plan.nsteps
     if nsteps == 0:
         return 0.0, 0
-    cap = params["bw"] / 8.0
-    ph = per_hop(params)
+    caps = link_caps(plan, params)
+    hops = link_hop_lat(plan, params)
 
     received = [0] * (n * nsteps)
     entered = [-1] * n
@@ -1037,14 +1228,16 @@ def simulate_packet_batched(plan, m_bytes, params, mtu):
             _, node, step = ev
             entered[node] = step
             for mi in plan.injections(node, step):
-                push(now, ("batch", mi, 0))
+                # ready = when the batch's last byte is available here (the
+                # whole payload is local at injection)
+                push(now, ("batch", mi, 0, now))
             if (
                 plan.expected_count(node, step) == received[node * nsteps + step]
                 and step + 1 < nsteps
             ):
                 push(now + params["alpha"], ("step", node, step + 1))
         else:
-            _, mi, hop = ev
+            _, mi, hop, ready = ev
             src, dst, k, rel, route = plan.msgs[mi]
             if hop == len(route):
                 completion = max(completion, now)
@@ -1059,33 +1252,39 @@ def simulate_packet_batched(plan, m_bytes, params, mtu):
                 total = plan.bytes(mi, m_bytes)
                 l = route[hop]
                 start = max(now, free_at[l])
-                batch_end = start + total / cap
+                # the batch cannot finish serializing before its last byte
+                # arrived from upstream (`ready`); on a uniform model the
+                # serialization term always dominates, so the max is exact
+                # legacy behaviour
+                batch_end = max(start + total / caps[l], ready)
                 free_at[l] = batch_end
+                tail_ready = batch_end + hops[l]
                 if hop + 1 == len(route):
                     # last link: the tail packet arrives per_hop after the
                     # batch fully serializes
-                    push(batch_end + ph, ("batch", mi, hop + 1))
+                    push(tail_ready, ("batch", mi, hop + 1, tail_ready))
                 else:
                     # cut-through: the head packet is available at the next
                     # link one head-serialization + per_hop after the batch
-                    # starts; contiguity downstream is guaranteed because
-                    # every link runs at the same rate and the head packet
-                    # is the largest (the only short packet is the tail).
+                    # starts (the head packet is the largest — the only
+                    # short packet is the tail — so with `ready` carrying
+                    # the tail arrival downstream the schedule never
+                    # outruns the bytes, even across rate changes).
                     head = min(total, float(mtu))
-                    push(start + head / cap + ph, ("batch", mi, hop + 1))
+                    push(start + head / caps[l] + hops[l], ("batch", mi, hop + 1, tail_ready))
     return completion, events
 
 
 # ------------------------------------------------------------ registry sweep
 
 
-def crosscheck(dims, algo, variant, m, mtu=4096, params=None, engine=simulate_packet_batched):
+def crosscheck(dims, algo, variant, m, mtu=4096, params=None, engine=simulate_packet_batched, model=None):
     params = params or DEFAULT_PARAMS
     t = Torus(dims)
     b = build(algo, variant, t)
     if b is None:
         return None
-    plan = Plan(b.net, t)
+    plan = Plan(b.net, t, model)
     f, _ = simulate_flow(plan, m, params)
     k, _ = engine(plan, m, params, mtu)
     if k <= 0.0:
