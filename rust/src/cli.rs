@@ -9,6 +9,9 @@
 //! trivance pattern  --n 9 [--algo trivance|bruck]
 //! trivance optimality --topo 81
 //! trivance train-demo [--workers 9] [--steps 200] [--lr 0.5]
+//! trivance tune     [--topo 8x8]... [--quick] [--out tuner_table.json]
+//! trivance recommend --topo 8x8 --size 1MiB [--scenario uniform]
+//! trivance replay   [--topo 8x8] [--quick] [--table tuner_table.json]
 //! ```
 
 use crate::algo::{build, Algo, Variant};
@@ -134,6 +137,14 @@ USAGE:
   trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
                     [--no-plan-cache] [--no-scenarios]
+  trivance tune     [--topo 8x8]... [--quick] [--max-size 128MiB] [--threads N]
+                    [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
+                    [--out tuner_table.json] [--no-plan-cache]
+  trivance recommend --topo 8x8 --size 1MiB [--scenario uniform]
+                    [--table tuner_table.json]
+  trivance replay   [--topo 8x8] [--quick] [--calls 160] [--table tuner_table.json]
+                    [--threads N] [--bw-gbps 800] [--alpha-us 1.5]
+                    [--mode flow|packet] [--mtu 4096] [--no-plan-cache]
   trivance validate --topo 27 [--algo A]
   trivance verify   --topo 9  [--algo A] [--block-len 8] [--pjrt]
   trivance pattern  --n 9 [--algo trivance|bruck]
@@ -144,6 +155,15 @@ scenarios sweeps the registry under named network-model presets (uniform /
 hetero-dims / straggler / faulty) and renders per-scenario tables relative
 to Trivance; bench-sweep includes the same presets as per-scenario rows in
 BENCH_sweep.json (schema v2) unless --no-scenarios.
+
+tune distills the same scenario sweeps into a decision table (per-(topo,
+scenario) size-ladder winners, fingerprinted against the network model and
+the tuning parameters); recommend answers "which algorithm for this size
+right now" from that table in O(1); replay runs the built-in workload
+traces (data-parallel / tensor-parallel / mixed) under every preset and
+scores table-driven selection against the per-call oracle and every
+fixed-algorithm baseline. Without --table, replay tunes its topology
+in-memory first.
 
 --threads 0 (default) uses every core; sweep results are identical for any
 thread count. Simulation plans are shared process-wide via a cache keyed by
@@ -175,6 +195,9 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "figures" => figures(&args),
         "scenarios" => scenarios_cmd(&args),
         "bench-sweep" => bench_sweep_cmd(&args),
+        "tune" => tune_cmd(&args),
+        "recommend" => recommend_cmd(&args),
+        "replay" => replay_cmd(&args),
         "simulate" => simulate_cmd(&args),
         "validate" => validate_cmd(&args),
         "verify" => verify_cmd(&args),
@@ -334,6 +357,174 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
         timing.build_wall_s, timing.sim_wall_s, wall, timing.threads
     );
     println!("{}", plan_cache_stats());
+    Ok(())
+}
+
+/// Distill scenario sweeps over one or more topologies into a decision
+/// table and write it as JSON (`trivance tune`).
+fn tune_cmd(args: &Args) -> Result<(), String> {
+    use crate::harness::scenarios::presets;
+    use crate::tuner::{tune, tune_ladder};
+    let quick = args.has("quick");
+    let topo_flags = args.getall("topo");
+    let topos: Vec<Torus> = if topo_flags.is_empty() {
+        if quick {
+            vec![Torus::new(&[3, 3])]
+        } else {
+            vec![
+                Torus::ring(9),
+                Torus::ring(27),
+                Torus::new(&[3, 3]),
+                Torus::new(&[8, 8]),
+                Torus::new(&[4, 4, 4]),
+            ]
+        }
+    } else {
+        topo_flags.iter().map(|&s| parse_topo(s)).collect::<Result<_, _>>()?
+    };
+    let max = args
+        .get("max-size")
+        .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --max-size {s:?}")))
+        .transpose()?
+        .unwrap_or(if quick { 256 << 10 } else { 128 << 20 });
+    if max < 32 {
+        return Err(format!("--max-size must be >= 32 B (the tune ladder starts at 32), got {max}"));
+    }
+    let threads = parse_threads(args)?;
+    apply_plan_cache_flag(args);
+    let params = net_params(args)?;
+    let mode = parse_mode(args)?;
+    let out = args.get("out").unwrap_or("tuner_table.json");
+
+    eprintln!(
+        "[tune] {} topolog{}, {} ladder sizes up to {}, {} presets ...",
+        topos.len(),
+        if topos.len() == 1 { "y" } else { "ies" },
+        tune_ladder(max).len(),
+        fmt::bytes(max),
+        presets().len(),
+    );
+    let t0 = std::time::Instant::now();
+    let table = tune(&topos, &presets(), max, &params, threads, mode);
+    std::fs::write(out, table.to_json()).map_err(|e| format!("writing {out}: {e}"))?;
+    println!("{}", table.render());
+    println!("wrote {out}; done in {:.1}s; {}", t0.elapsed().as_secs_f64(), plan_cache_stats());
+    Ok(())
+}
+
+/// O(1) lookup into a tuned decision table (`trivance recommend`).
+fn recommend_cmd(args: &Args) -> Result<(), String> {
+    use crate::harness::scenarios::presets;
+    use crate::tuner::DecisionTable;
+    let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
+    let bytes = args
+        .get("size")
+        .ok_or("--size required")
+        .and_then(|s| fmt::parse_size(s).ok_or("bad --size"))
+        .map_err(|e| e.to_string())?;
+    let scenario_name = args.get("scenario").unwrap_or("uniform");
+    let path = args.get("table").unwrap_or("tuner_table.json");
+    let text = std::fs::read_to_string(path)
+        .map_err(|e| format!("reading {path}: {e} — run `trivance tune` first"))?;
+    let table = DecisionTable::from_json(&text)?;
+    let scenario = presets()
+        .into_iter()
+        .find(|s| s.name == scenario_name)
+        .ok_or_else(|| {
+            format!(
+                "unknown --scenario {scenario_name:?} (known: {})",
+                presets().iter().map(|s| s.name.clone()).collect::<Vec<_>>().join(", ")
+            )
+        })?;
+    let model = scenario.model(&torus);
+    let rec = table.recommend(torus.dims(), &model, bytes).map_err(|e| e.to_string())?;
+    println!(
+        "{}-{} for {} on {:?} (scenario {}, nearest tuned size {}, tuned at {:.0} Gb/s / α {:.2} µs)",
+        rec.algo.label(),
+        rec.variant.label(),
+        fmt::bytes(bytes),
+        torus.dims(),
+        rec.scenario,
+        fmt::bytes(rec.table_bytes),
+        table.params.link_bw_bps / 1e9,
+        table.params.alpha_s * 1e6,
+    );
+    Ok(())
+}
+
+/// Replay the built-in workload traces under every scenario preset and
+/// score selection policies against the per-call oracle
+/// (`trivance replay`).
+fn replay_cmd(args: &Args) -> Result<(), String> {
+    use crate::harness::scenarios::presets;
+    use crate::tuner::{builtin_traces, replay, tune, DecisionTable};
+    let quick = args.has("quick");
+    let torus = match args.get("topo") {
+        Some(t) => parse_topo(t)?,
+        None if quick => Torus::new(&[3, 3]),
+        None => Torus::new(&[8, 8]),
+    };
+    let threads = parse_threads(args)?;
+    apply_plan_cache_flag(args);
+    let params = net_params(args)?;
+    let mode = parse_mode(args)?;
+    let calls: usize = args
+        .get("calls")
+        .map(|s| s.parse().map_err(|e| format!("bad --calls: {e}")))
+        .transpose()?
+        .unwrap_or(if quick { 40 } else { 160 });
+    if calls == 0 {
+        return Err("--calls must be >= 1 (an empty trace has no oracle to regret against)".into());
+    }
+    let scenarios = presets();
+
+    let table = match args.get("table") {
+        Some(path) => {
+            let text = std::fs::read_to_string(path)
+                .map_err(|e| format!("reading {path}: {e} — run `trivance tune` first"))?;
+            eprintln!("[replay] using decision table {path}");
+            DecisionTable::from_json(&text)?
+        }
+        None => {
+            let max = if quick { 256 << 10 } else { 128 << 20 };
+            eprintln!("[replay] no --table given: tuning {:?} in-memory first ...", torus.dims());
+            tune(&[torus.clone()], &scenarios, max, &params, threads, mode)
+        }
+    };
+    // Cap traces at the table's tuned range so every replayed size has a
+    // tuned row (stale tables for this topology are rejected by replay).
+    let cap = table
+        .topos
+        .iter()
+        .find(|t| t.dims == torus.dims())
+        .and_then(|t| t.sizes.last().copied())
+        .ok_or_else(|| {
+            format!(
+                "decision table has no row for {:?} — re-run `trivance tune --topo ...`",
+                torus.dims()
+            )
+        })?;
+    let traces = builtin_traces(calls, cap);
+
+    eprintln!(
+        "[replay] {:?} ({} nodes), {} traces x {} collectives, {} presets ...",
+        torus.dims(),
+        torus.n(),
+        traces.len(),
+        calls,
+        scenarios.len(),
+    );
+    let t0 = std::time::Instant::now();
+    let report = replay(&torus, &scenarios, &traces, &table, &params, threads, mode)?;
+    println!(
+        "{}",
+        report.render(&format!(
+            "Workload replay — {:?} ({} nodes), selection policies vs per-call oracle",
+            torus.dims(),
+            torus.n()
+        ))
+    );
+    println!("done in {:.1}s; {}", t0.elapsed().as_secs_f64(), plan_cache_stats());
     Ok(())
 }
 

@@ -10,7 +10,7 @@
 //! (results are bit-identical with the cache disabled via
 //! `--no-plan-cache`).
 
-use super::sweep::{run_sweep_multi, run_sweep_threads, size_ladder};
+use super::sweep::{best_existing_rel, run_sweep_multi, run_sweep_threads, size_ladder};
 use crate::algo::Algo;
 use crate::cost::NetParams;
 use crate::topology::Torus;
@@ -94,13 +94,9 @@ pub fn fig8(quick: bool, threads: usize) -> String {
     for (si, &m) in sizes.iter().enumerate() {
         let mut row = vec![fmt::bytes(m)];
         for sw in &sweeps {
-            // best existing (non-Trivance) relative to Trivance
-            let best_rel = sw
-                .algos
-                .iter()
-                .filter(|&&al| al != Algo::Trivance)
-                .map(|&al| sw.rel_to_trivance(al, si))
-                .fold(f64::INFINITY, f64::min);
+            // best existing (non-Trivance) relative to Trivance, via the
+            // shared grid-engine helper
+            let best_rel = best_existing_rel(&sw.algos, &sw.points[si]);
             row.push(format!("{:+.1}%", (best_rel - 1.0) * 100.0));
         }
         table.row(row);

@@ -14,9 +14,13 @@
 //! | `faulty`      | 1 deterministic link down, traffic rerouted             |
 //!
 //! [`run_scenarios`] evaluates the whole `(scenario, algo, size)` grid as
-//! **one** task pool under a single [`crate::util::par::par_map`] — not one
+//! **one** task pool through the shared grid engine
+//! ([`crate::harness::sweep::eval_grid`], scenario = outer axis) — not one
 //! sweep per scenario — so thread utilization is flat across the grid and
-//! results are bit-identical for any thread count. Plans are shared
+//! results are bit-identical for any thread count; the per-scenario tables
+//! render through the same shared
+//! [`crate::harness::sweep::render_points_table`] as the figures and the
+//! tuner. Plans are shared
 //! through the process-wide [`PlanCache`] keyed by the scenario model's
 //! fingerprint: the `uniform` scenario reuses (and is bit-identical to)
 //! the plain sweep's plans, while any heterogeneous scenario gets its own
@@ -25,12 +29,12 @@
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
 use crate::net::NetModel;
-use crate::sim::{simulate_plan, PlanCache, PlanKey, SimMode, SimPlan};
+use crate::sim::{PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
 use crate::topology::Torus;
-use crate::util::{fmt, par};
+use crate::util::fmt;
 use std::sync::Arc;
 
-use super::sweep::{completion_key, BestPoint};
+use super::sweep::{best_existing_rel, best_point_of, eval_grid, render_points_table, BestPoint};
 
 /// Seed behind the deterministic straggler link picks (mirrored in
 /// `tools/pysim`).
@@ -119,20 +123,27 @@ pub struct ScenarioSweep {
     pub points: Vec<Vec<Vec<BestPoint>>>,
 }
 
-/// Sweep `scenarios × algos × sizes` on `torus` as one parallel task pool
-/// (module docs). Unsupported algorithms are skipped, as in the figures.
-pub fn run_scenarios(
+/// Per-scenario plan/scratch lattice: each algorithm's variants built
+/// **once** (schedules do not depend on the network model), plans resolved
+/// per scenario model through the fingerprint-keyed global [`PlanCache`],
+/// and the hoisted per-`(plan, params)` [`SimScratch`] columns — the one
+/// construction shared by [`run_scenarios`] and the tuner's replay engine.
+pub(crate) struct ScenarioPlans {
+    pub built: Vec<(Algo, Vec<BuiltCollective>)>,
+    /// `plans[scenario][algo][variant]`, index-aligned with `built`.
+    pub plans: Vec<Vec<Vec<Arc<SimPlan>>>>,
+    /// `scratches[scenario][algo][variant]`, index-aligned with `plans`.
+    pub scratches: Vec<Vec<Vec<SimScratch>>>,
+}
+
+/// Build the [`ScenarioPlans`] lattice for `models` on `torus` (see the
+/// struct docs). Unsupported algorithms are skipped, as in the figures.
+pub(crate) fn build_scenario_plans(
     torus: &Torus,
     algos: &[Algo],
-    sizes: &[u64],
+    models: &[NetModel],
     params: &NetParams,
-    scenarios: &[Scenario],
-    threads: usize,
-    mode: SimMode,
-) -> ScenarioSweep {
-    params.validate();
-    // Build each algorithm's variants once — the schedules do not depend on
-    // the network model, only their routed plans do.
+) -> ScenarioPlans {
     let built: Vec<(Algo, Vec<BuiltCollective>)> = algos
         .iter()
         .filter_map(|&algo| {
@@ -143,21 +154,7 @@ pub fn run_scenarios(
             (!variants.is_empty()).then_some((algo, variants))
         })
         .collect();
-
-    // Per scenario: instantiate the model and resolve plans through the
-    // fingerprint-keyed cache. A preset can degenerate to the uniform
-    // model on some topologies (hetero-dims on a ring has nothing to
-    // scale) — record that so the report says so instead of presenting a
-    // baseline copy as a degraded fabric.
     let cache = PlanCache::global();
-    let models: Vec<NetModel> = scenarios.iter().map(|sc| sc.model(torus)).collect();
-    let degenerate: Vec<bool> = scenarios
-        .iter()
-        .zip(&models)
-        .map(|(sc, model)| {
-            !matches!(sc.kind, ScenarioKind::Uniform) && model.is_uniform()
-        })
-        .collect();
     let plans: Vec<Vec<Vec<Arc<SimPlan>>>> = models
         .iter()
         .map(|model| {
@@ -178,34 +175,57 @@ pub fn run_scenarios(
                 .collect()
         })
         .collect();
-
-    // One task per (scenario, size, algo) cell, fanned out together.
-    let tasks: Vec<(usize, usize, usize)> = (0..scenarios.len())
-        .flat_map(|ci| {
-            (0..sizes.len()).flat_map(move |si| (0..built.len()).map(move |ai| (ci, si, ai)))
-        })
-        .collect();
-    let evaluated: Vec<BestPoint> = par::par_map(&tasks, threads, |_, &(ci, si, ai)| {
-        built[ai]
-            .1
-            .iter()
-            .zip(&plans[ci][ai])
-            .map(|(b, plan)| BestPoint {
-                completion_s: simulate_plan(plan, sizes[si], params, mode).completion_s,
-                variant: b.variant,
-            })
-            .min_by(|a, b| completion_key(a.completion_s).total_cmp(&completion_key(b.completion_s)))
-            .expect("variant set is non-empty")
-    });
-
-    let mut it = evaluated.into_iter();
-    let points: Vec<Vec<Vec<BestPoint>>> = (0..scenarios.len())
-        .map(|_| {
-            (0..sizes.len())
-                .map(|_| (0..built.len()).map(|_| it.next().expect("grid arity")).collect())
+    let scratches: Vec<Vec<Vec<SimScratch>>> = plans
+        .iter()
+        .map(|per_algo| {
+            per_algo
+                .iter()
+                .map(|ps| ps.iter().map(|p| SimScratch::new(p, params)).collect())
                 .collect()
         })
         .collect();
+    ScenarioPlans { built, plans, scratches }
+}
+
+/// Sweep `scenarios × algos × sizes` on `torus` as one parallel task pool
+/// (module docs). Unsupported algorithms are skipped, as in the figures.
+pub fn run_scenarios(
+    torus: &Torus,
+    algos: &[Algo],
+    sizes: &[u64],
+    params: &NetParams,
+    scenarios: &[Scenario],
+    threads: usize,
+    mode: SimMode,
+) -> ScenarioSweep {
+    params.validate();
+    // Per scenario: instantiate the model. A preset can degenerate to the
+    // uniform model on some topologies (hetero-dims on a ring has nothing
+    // to scale) — record that so the report says so instead of presenting
+    // a baseline copy as a degraded fabric.
+    let models: Vec<NetModel> = scenarios.iter().map(|sc| sc.model(torus)).collect();
+    let degenerate: Vec<bool> = scenarios
+        .iter()
+        .zip(&models)
+        .map(|(sc, model)| {
+            !matches!(sc.kind, ScenarioKind::Uniform) && model.is_uniform()
+        })
+        .collect();
+    let ScenarioPlans { built, plans, scratches } =
+        build_scenario_plans(torus, algos, &models, params);
+
+    // One task per (scenario, size, algo) cell through the shared grid
+    // engine (sweep::eval_grid) — no private unflatten twin.
+    let points = eval_grid(scenarios.len(), sizes.len(), built.len(), threads, |ci, si, ai| {
+        best_point_of(
+            &built[ai].1,
+            &plans[ci][ai],
+            &scratches[ci][ai],
+            sizes[si],
+            params,
+            mode,
+        )
+    });
 
     ScenarioSweep {
         torus: torus.clone(),
@@ -233,10 +253,10 @@ impl ScenarioSweep {
         self.points[ci][si][ai].completion_s / self.points[ci][si][ti].completion_s
     }
 
-    /// Markdown report: one relative-to-Trivance table per scenario, plus a
+    /// Markdown report: one relative-to-Trivance table per scenario
+    /// (through the shared [`render_points_table`] grid renderer), plus a
     /// cross-scenario summary of the best existing approach vs Trivance.
     pub fn render(&self, title: &str) -> String {
-        let ti = self.trivance_idx();
         let mut out = format!("### {title}\n\n");
         for (ci, sc) in self.scenarios.iter().enumerate() {
             let tag = if self.degenerate[ci] {
@@ -245,28 +265,7 @@ impl ScenarioSweep {
                 ""
             };
             out.push_str(&format!("#### scenario `{}` — {}{}\n\n", sc.name, sc.desc, tag));
-            let mut header = vec!["size".to_string()];
-            for &a in &self.algos {
-                header.push(a.label().to_string());
-                if a != Algo::Trivance {
-                    header.push(format!("{} Δ%", a.label()));
-                }
-            }
-            let mut t = fmt::Table::new(header);
-            for (si, &m) in self.sizes.iter().enumerate() {
-                let base = self.points[ci][si][ti].completion_s;
-                let mut row = vec![fmt::bytes(m)];
-                for (ai, _) in self.algos.iter().enumerate() {
-                    let p = &self.points[ci][si][ai];
-                    row.push(format!("{} ({})", fmt::secs(p.completion_s), p.variant.label()));
-                    if ai != ti {
-                        let rel = (p.completion_s / base - 1.0) * 100.0;
-                        row.push(format!("{rel:+.1}%"));
-                    }
-                }
-                t.row(row);
-            }
-            out.push_str(&t.render());
+            out.push_str(&render_points_table(&self.sizes, &self.algos, &self.points[ci]));
             out.push('\n');
         }
         // summary: best existing approach relative to Trivance, per scenario
@@ -278,12 +277,7 @@ impl ScenarioSweep {
         for (si, &m) in self.sizes.iter().enumerate() {
             let mut row = vec![fmt::bytes(m)];
             for ci in 0..self.scenarios.len() {
-                let best_rel = self
-                    .algos
-                    .iter()
-                    .filter(|&&a| a != Algo::Trivance)
-                    .map(|&a| self.rel_to_trivance(ci, a, si))
-                    .fold(f64::INFINITY, f64::min);
+                let best_rel = best_existing_rel(&self.algos, &self.points[ci][si]);
                 row.push(format!("{:+.1}%", (best_rel - 1.0) * 100.0));
             }
             t.row(row);

@@ -4,9 +4,14 @@
 //! plotting convention: positive % = Trivance is faster).
 //!
 //! The grid of `(algo, variant, size)` points is fanned out across threads
-//! with [`crate::util::par::par_map`]; every point reuses the precompiled
-//! plans, and results are reassembled in input order, so a parallel sweep is
-//! bit-identical to the sequential one. Plans are obtained through the
+//! with [`crate::util::par::par_map`] through one shared grid engine
+//! ([`eval_grid`], whose outer axis generalizes to `fig8`'s parameter
+//! sets, the scenario presets, and the tuner's traces — all consumers
+//! share one unflatten and one table renderer,
+//! [`render_points_table`]); every point reuses the precompiled plans
+//! *and* the per-`(plan, params)` scratch columns hoisted to the sweep
+//! layer ([`build_scratches`]), and results are reassembled in input
+//! order, so a parallel sweep is bit-identical to the sequential one. Plans are obtained through the
 //! process-wide [`PlanCache`] (keyed `(algo, variant, dims)`), so repeated
 //! sweeps over one topology — figure reruns, `fig8`'s per-bandwidth grid —
 //! skip schedule flattening entirely; cached and uncached sweeps are
@@ -17,7 +22,7 @@
 
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
-use crate::sim::{simulate_plan, PlanCache, PlanKey, SimMode, SimPlan};
+use crate::sim::{simulate_plan_scratch, PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
 use crate::topology::Torus;
 use crate::util::{fmt, par};
 use std::sync::Arc;
@@ -29,7 +34,11 @@ pub fn size_ladder(max: u64) -> Vec<u64> {
     let mut m = 32u64;
     while m <= max {
         v.push(m);
-        m *= 4;
+        // a caller-supplied max near u64::MAX must terminate, not wrap
+        match m.checked_mul(4) {
+            Some(next) => m = next,
+            None => break,
+        }
     }
     v
 }
@@ -108,17 +117,49 @@ pub(crate) fn completion_key(v: f64) -> f64 {
     }
 }
 
-fn best_point(built: &BuiltAlgo, m_bytes: u64, params: &NetParams) -> BestPoint {
-    built
-        .variants
+/// The single point-evaluation path every grid consumer shares: simulate
+/// each variant against its plan + hoisted scratch and keep the first
+/// minimum (NaN-safe). `variants`, `plans`, and `scratches` are
+/// index-aligned.
+pub(crate) fn best_point_of(
+    variants: &[BuiltCollective],
+    plans: &[Arc<SimPlan>],
+    scratches: &[SimScratch],
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+) -> BestPoint {
+    variants
         .iter()
-        .zip(&built.plans)
-        .map(|(b, plan)| BestPoint {
-            completion_s: simulate_plan(plan, m_bytes, params, SimMode::Flow).completion_s,
+        .zip(plans)
+        .zip(scratches)
+        .map(|((b, plan), scratch)| BestPoint {
+            completion_s: simulate_plan_scratch(plan, scratch, m_bytes, params, mode)
+                .completion_s,
             variant: b.variant,
         })
         .min_by(|a, b| completion_key(a.completion_s).total_cmp(&completion_key(b.completion_s)))
-        .unwrap()
+        .expect("variant set is non-empty")
+}
+
+fn best_point(
+    built: &BuiltAlgo,
+    scratches: &[SimScratch],
+    m_bytes: u64,
+    params: &NetParams,
+) -> BestPoint {
+    best_point_of(&built.variants, &built.plans, scratches, m_bytes, params, SimMode::Flow)
+}
+
+/// Per-variant [`SimScratch`] columns for one parameter set, index-aligned
+/// with each [`BuiltAlgo`]'s plans — the per-`(plan, params)` state hoisted
+/// out of the simulator calls, built once per sweep instead of once per
+/// grid point.
+pub fn build_scratches(built: &[BuiltAlgo], params: &NetParams) -> Vec<Vec<SimScratch>> {
+    built
+        .iter()
+        .map(|b| b.plans.iter().map(|p| SimScratch::new(p, params)).collect())
+        .collect()
 }
 
 /// Completion time of the best variant at one message size (plan-reusing).
@@ -129,7 +170,95 @@ pub fn best_completion(
     params: &NetParams,
 ) -> BestPoint {
     debug_assert_eq!(built.plans[0].n(), torus.n() as usize);
-    best_point(built, m_bytes, params)
+    let scratches: Vec<SimScratch> =
+        built.plans.iter().map(|p| SimScratch::new(p, params)).collect();
+    best_point(built, &scratches, m_bytes, params)
+}
+
+/// Evaluate an `(outer × size × algo)` grid as **one** task pool under a
+/// single [`par::par_map`] and unflatten to `[outer][size][algo]` — the
+/// shared grid engine behind [`run_sweep_timed`], [`run_sweep_multi`], the
+/// scenario harness, and the tuner. The outer axis is whatever varies
+/// beyond the classic sweep: parameter sets for `fig8`, network-model
+/// scenarios, replay traces. Results are reassembled in input order, so
+/// the grid is bit-identical for any thread count.
+pub fn eval_grid<R, F>(
+    n_outer: usize,
+    n_sizes: usize,
+    n_algos: usize,
+    threads: usize,
+    f: F,
+) -> Vec<Vec<Vec<R>>>
+where
+    R: Send,
+    F: Fn(usize, usize, usize) -> R + Sync,
+{
+    let tasks: Vec<(usize, usize, usize)> = (0..n_outer)
+        .flat_map(|oi| {
+            (0..n_sizes).flat_map(move |si| (0..n_algos).map(move |ai| (oi, si, ai)))
+        })
+        .collect();
+    let evaluated = par::par_map(&tasks, threads, |_, &(oi, si, ai)| f(oi, si, ai));
+    let mut it = evaluated.into_iter();
+    (0..n_outer)
+        .map(|_| {
+            (0..n_sizes)
+                .map(|_| (0..n_algos).map(|_| it.next().expect("grid arity")).collect())
+                .collect()
+        })
+        .collect()
+}
+
+/// Index of Trivance in an algorithm list (every relative table is anchored
+/// on it).
+pub(crate) fn trivance_idx_of(algos: &[Algo]) -> usize {
+    algos
+        .iter()
+        .position(|&a| a == Algo::Trivance)
+        .expect("sweep must include trivance")
+}
+
+/// Render one `[size][algo]` block as the completion + relative-to-Trivance
+/// markdown table (positive % = Trivance faster, the paper's plotting
+/// convention) — the one table shape the figures, scenario reports, and
+/// tuner all share.
+pub fn render_points_table(sizes: &[u64], algos: &[Algo], points: &[Vec<BestPoint>]) -> String {
+    let ti = trivance_idx_of(algos);
+    let mut header = vec!["size".to_string()];
+    for &a in algos {
+        header.push(a.label().to_string());
+        if a != Algo::Trivance {
+            header.push(format!("{} Δ%", a.label()));
+        }
+    }
+    let mut t = fmt::Table::new(header);
+    for (si, &m) in sizes.iter().enumerate() {
+        let base = points[si][ti].completion_s;
+        let mut row = vec![fmt::bytes(m)];
+        for (ai, _a) in algos.iter().enumerate() {
+            let p = &points[si][ai];
+            row.push(format!("{} ({})", fmt::secs(p.completion_s), p.variant.label()));
+            if ai != ti {
+                let rel = (p.completion_s / base - 1.0) * 100.0;
+                row.push(format!("{rel:+.1}%"));
+            }
+        }
+        t.row(row);
+    }
+    t.render()
+}
+
+/// Best *existing* (non-Trivance) completion relative to Trivance across
+/// one `[algo]` row (`>1` = Trivance faster than every existing approach) —
+/// shared by `fig8`, the scenario summary, and the tuner report.
+pub fn best_existing_rel(algos: &[Algo], row: &[BestPoint]) -> f64 {
+    let base = row[trivance_idx_of(algos)].completion_s;
+    algos
+        .iter()
+        .enumerate()
+        .filter(|&(_, &a)| a != Algo::Trivance)
+        .map(|(ai, _)| row[ai].completion_s / base)
+        .fold(f64::INFINITY, f64::min)
 }
 
 /// Full sweep result: `points[size_idx][algo_idx]`.
@@ -184,36 +313,31 @@ pub fn run_sweep_timed(
 ) -> (Sweep, SweepTiming) {
     let t_build = Instant::now();
     let built = build_all(torus, algos);
+    // Hoisted per-(plan, params) scratch: built once here, shared by every
+    // grid point (previously rebuilt inside each simulate_plan call).
+    let scratches = build_scratches(&built, params);
     let build_wall_s = t_build.elapsed().as_secs_f64();
 
-    // One task per (size, algo) grid point; the per-point work (simulating
-    // each variant and taking the min) is untouched by parallelism, so the
-    // result is bit-identical for every thread count.
-    let tasks: Vec<(usize, usize)> = (0..sizes.len())
-        .flat_map(|si| (0..built.len()).map(move |ai| (si, ai)))
-        .collect();
-    let threads_used = par::resolve_threads(threads).min(tasks.len().max(1));
+    // One task per (size, algo) grid point through the shared grid engine;
+    // the per-point work (simulating each variant and taking the min) is
+    // untouched by parallelism, so the result is bit-identical for every
+    // thread count.
+    let threads_used = par::resolve_threads(threads).min((sizes.len() * built.len()).max(1));
     let t_sim = Instant::now();
-    let evaluated: Vec<(BestPoint, f64)> = par::par_map(&tasks, threads, |_, &(si, ai)| {
-        let t0 = Instant::now();
-        let bp = best_point(&built[ai], sizes[si], params);
-        (bp, t0.elapsed().as_secs_f64())
-    });
+    let grid: Vec<Vec<Vec<(BestPoint, f64)>>> =
+        eval_grid(1, sizes.len(), built.len(), threads, |_, si, ai| {
+            let t0 = Instant::now();
+            let bp = best_point(&built[ai], &scratches[ai], sizes[si], params);
+            (bp, t0.elapsed().as_secs_f64())
+        });
     let sim_wall_s = t_sim.elapsed().as_secs_f64();
 
     let mut points: Vec<Vec<BestPoint>> = Vec::with_capacity(sizes.len());
     let mut point_wall_s: Vec<Vec<f64>> = Vec::with_capacity(sizes.len());
-    let mut it = evaluated.into_iter();
-    for _ in 0..sizes.len() {
-        let mut row = Vec::with_capacity(built.len());
-        let mut wrow = Vec::with_capacity(built.len());
-        for _ in 0..built.len() {
-            let (bp, w) = it.next().expect("grid arity");
-            row.push(bp);
-            wrow.push(w);
-        }
-        points.push(row);
-        point_wall_s.push(wrow);
+    for row in grid.into_iter().next().expect("one outer cell") {
+        let (bps, walls): (Vec<BestPoint>, Vec<f64>) = row.into_iter().unzip();
+        points.push(bps);
+        point_wall_s.push(walls);
     }
 
     let sweep = Sweep {
@@ -241,67 +365,38 @@ pub fn run_sweep_multi(
     threads: usize,
 ) -> Vec<Sweep> {
     let built = build_all(torus, algos);
-    let tasks: Vec<(usize, usize, usize)> = (0..params_list.len())
-        .flat_map(|pi| {
-            (0..sizes.len()).flat_map(move |si| (0..built.len()).map(move |ai| (pi, si, ai)))
-        })
-        .collect();
-    let evaluated: Vec<BestPoint> = par::par_map(&tasks, threads, |_, &(pi, si, ai)| {
-        best_point(&built[ai], sizes[si], &params_list[pi])
-    });
+    // scratch per (params, algo, variant): plans are parameter-independent,
+    // the hoisted capacity/latency columns are not
+    let scratches: Vec<Vec<Vec<SimScratch>>> =
+        params_list.iter().map(|p| build_scratches(&built, p)).collect();
     let algos_built: Vec<Algo> = built.iter().map(|b| b.algo).collect();
-    let mut it = evaluated.into_iter();
-    params_list
-        .iter()
-        .map(|_| {
-            let points: Vec<Vec<BestPoint>> = (0..sizes.len())
-                .map(|_| (0..built.len()).map(|_| it.next().expect("grid arity")).collect())
-                .collect();
-            Sweep {
-                torus: torus.clone(),
-                sizes: sizes.to_vec(),
-                algos: algos_built.clone(),
-                points,
-            }
+    let grid = eval_grid(params_list.len(), sizes.len(), built.len(), threads, |pi, si, ai| {
+        best_point(&built[ai], &scratches[pi][ai], sizes[si], &params_list[pi])
+    });
+    grid.into_iter()
+        .map(|points| Sweep {
+            torus: torus.clone(),
+            sizes: sizes.to_vec(),
+            algos: algos_built.clone(),
+            points,
         })
         .collect()
 }
 
 impl Sweep {
     fn trivance_idx(&self) -> usize {
-        self.algos
-            .iter()
-            .position(|&a| a == Algo::Trivance)
-            .expect("sweep must include trivance")
+        trivance_idx_of(&self.algos)
     }
 
     /// Markdown table: completion per algorithm (variant-tagged) and
     /// relative % vs Trivance (positive = Trivance faster, the paper's
-    /// y-axis).
+    /// y-axis). One title wrapper around the shared
+    /// [`render_points_table`].
     pub fn render(&self, title: &str) -> String {
-        let ti = self.trivance_idx();
-        let mut header = vec!["size".to_string()];
-        for &a in &self.algos {
-            header.push(a.label().to_string());
-            if a != Algo::Trivance {
-                header.push(format!("{} Δ%", a.label()));
-            }
-        }
-        let mut t = fmt::Table::new(header);
-        for (si, &m) in self.sizes.iter().enumerate() {
-            let base = self.points[si][ti].completion_s;
-            let mut row = vec![fmt::bytes(m)];
-            for (ai, _a) in self.algos.iter().enumerate() {
-                let p = &self.points[si][ai];
-                row.push(format!("{} ({})", fmt::secs(p.completion_s), p.variant.label()));
-                if ai != ti {
-                    let rel = (p.completion_s / base - 1.0) * 100.0;
-                    row.push(format!("{rel:+.1}%"));
-                }
-            }
-            t.row(row);
-        }
-        format!("### {title}\n\n{}", t.render())
+        format!(
+            "### {title}\n\n{}",
+            render_points_table(&self.sizes, &self.algos, &self.points)
+        )
     }
 
     /// The winner (algorithm index) at each size.
@@ -512,6 +607,68 @@ mod tests {
         // v1 fields survive in v2
         for field in ["\"topo\"", "\"sizes\"", "\"points\"", "\"build_wall_s\"", "\"wall_s\""] {
             assert!(json.contains(field), "missing v1 field {field}");
+        }
+    }
+
+    #[test]
+    fn eval_grid_preserves_input_order_for_any_thread_count() {
+        for threads in [1usize, 3, 0] {
+            let grid = eval_grid(2, 3, 4, threads, |o, s, a| 100 * o + 10 * s + a);
+            assert_eq!(grid.len(), 2);
+            for (o, outer) in grid.iter().enumerate() {
+                assert_eq!(outer.len(), 3);
+                for (s, row) in outer.iter().enumerate() {
+                    assert_eq!(row.len(), 4);
+                    for (a, &v) in row.iter().enumerate() {
+                        assert_eq!(v, 100 * o + 10 * s + a, "threads={threads}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn best_existing_rel_matches_per_algo_relatives() {
+        let t = Torus::ring(8);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+        let s = run_sweep(&t, &algos, &[32, 8 << 20], &NetParams::default());
+        for si in 0..s.sizes.len() {
+            let expect = algos
+                .iter()
+                .filter(|&&a| a != Algo::Trivance)
+                .map(|&a| s.rel_to_trivance(a, si))
+                .fold(f64::INFINITY, f64::min);
+            let got = best_existing_rel(&s.algos, &s.points[si]);
+            assert_eq!(got.to_bits(), expect.to_bits(), "size idx {si}");
+        }
+    }
+
+    #[test]
+    fn scratch_hoisted_sweep_is_bit_identical_to_fresh_scratch() {
+        // the hoisted scratch is exactly what simulate_plan builds per call
+        use crate::sim::{simulate_plan, SimMode};
+        let t = Torus::new(&[3, 3]);
+        let p = NetParams::default();
+        let built = build_all(&t, &[Algo::Trivance, Algo::Bucket]);
+        let scratches = build_scratches(&built, &p);
+        for (b, ss) in built.iter().zip(&scratches) {
+            for m in [32u64, 256 << 10] {
+                let hoisted = best_point(b, ss, m, &p);
+                let per_call = b
+                    .variants
+                    .iter()
+                    .zip(&b.plans)
+                    .map(|(v, plan)| BestPoint {
+                        completion_s: simulate_plan(plan, m, &p, SimMode::Flow).completion_s,
+                        variant: v.variant,
+                    })
+                    .min_by(|a, b| {
+                        completion_key(a.completion_s).total_cmp(&completion_key(b.completion_s))
+                    })
+                    .unwrap();
+                assert_eq!(hoisted.completion_s.to_bits(), per_call.completion_s.to_bits());
+                assert_eq!(hoisted.variant, per_call.variant);
+            }
         }
     }
 

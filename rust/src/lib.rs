@@ -37,8 +37,15 @@
 //!   reductions through the AOT-compiled PJRT kernels ([`runtime`]).
 //! * [`harness`] — regeneration of every table and figure in the paper; the
 //!   sweep grid fans out across threads ([`util::par`]) with deterministic,
-//!   bit-identical results, and `trivance bench-sweep` emits the
+//!   bit-identical results through one shared grid engine
+//!   ([`harness::sweep::eval_grid`]), and `trivance bench-sweep` emits the
 //!   `BENCH_sweep.json` performance record.
+//! * [`tuner`] — offline sweeps distilled into servable per-`(topology,
+//!   scenario, size)` algorithm-selection tables
+//!   ([`tuner::DecisionTable`], O(1) lookups, NetModel-fingerprint
+//!   staleness detection) plus synthetic workload traces and a replay
+//!   engine scoring table-driven selection against the per-call oracle
+//!   (`trivance tune` / `recommend` / `replay`).
 //!
 //! Python/JAX/Pallas exist only on the build path (`python/compile`), which
 //! AOT-lowers the reduction kernels and the demo train step to HLO text in
@@ -56,4 +63,5 @@ pub mod sim;
 pub mod exec;
 pub mod runtime;
 pub mod harness;
+pub mod tuner;
 pub mod cli;

@@ -45,7 +45,7 @@
 //! legacy arithmetic (`cap · 1.0 == cap`), so results are bit-identical to
 //! the pre-NetModel simulator.
 
-use super::plan::SimPlan;
+use super::plan::{SimPlan, SimScratch};
 use super::{SimResult, Timed};
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
@@ -253,16 +253,29 @@ pub fn simulate_flow(
 }
 
 /// Flow-level simulation of an `m_bytes` collective against a precompiled
-/// plan.
+/// plan. Builds the per-`(plan, params)` scratch internally — ladder/replay
+/// callers should build one [`SimScratch`] and use
+/// [`simulate_flow_plan_scratch`] (bit-identical).
 pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> SimResult {
+    simulate_flow_plan_scratch(plan, m_bytes, params, &SimScratch::new(plan, params))
+}
+
+/// [`simulate_flow_plan`] against a precomputed [`SimScratch`].
+pub fn simulate_flow_plan_scratch(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    scratch: &SimScratch,
+) -> SimResult {
+    debug_assert!(scratch.matches(plan), "scratch built for a different plan");
     let n = plan.n();
     let nsteps = plan.num_steps();
     if nsteps == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
     let cap = params.link_bw_bps / 8.0; // base bytes per second per link
-    let caps = plan.link_caps(params); // per-link (== cap when uniform)
-    let msg_hop_lat = plan.msg_hop_lat(params);
+    let caps = &scratch.caps; // per-link (== cap when uniform)
+    let msg_hop_lat = &scratch.msg_hop_lat;
 
     let mut received = vec![0u32; n * nsteps];
     // Per node: the step it has entered (sends injected); -1 = about to
@@ -375,7 +388,7 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
         }
 
         if need_recompute {
-            wf.recompute(&mut active, plan, cap, &caps);
+            wf.recompute(&mut active, plan, cap, caps);
             need_recompute = false;
         }
     }

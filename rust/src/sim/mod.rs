@@ -54,7 +54,7 @@ pub mod packet;
 pub mod plan;
 
 pub use cache::{PlanCache, PlanKey};
-pub use plan::SimPlan;
+pub use plan::{SimPlan, SimScratch};
 
 use crate::cost::NetParams;
 use crate::net::NetModel;
@@ -143,7 +143,11 @@ pub fn simulate_model(
     simulate_plan(&SimPlan::build_with_model(schedule, model), m_bytes, params, mode)
 }
 
-/// Simulate an `m_bytes` collective against a precompiled plan.
+/// Simulate an `m_bytes` collective against a precompiled plan. Builds the
+/// per-`(plan, params)` [`SimScratch`] internally; ladder/replay callers
+/// should build the scratch once and call [`simulate_plan_scratch`]
+/// (bit-identical — the scratch holds exactly the columns this path
+/// computes per call).
 pub fn simulate_plan(
     plan: &SimPlan,
     m_bytes: u64,
@@ -154,6 +158,25 @@ pub fn simulate_plan(
     match mode {
         SimMode::Flow => flow::simulate_flow_plan(plan, m_bytes, params),
         SimMode::Packet { mtu } => packet::simulate_packet_plan(plan, m_bytes, params, mtu),
+    }
+}
+
+/// [`simulate_plan`] against a precomputed [`SimScratch`] — the sweep/replay
+/// hot path, which no longer rebuilds the per-link capacity and latency
+/// columns per collective.
+pub fn simulate_plan_scratch(
+    plan: &SimPlan,
+    scratch: &SimScratch,
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+) -> SimResult {
+    params.validate();
+    match mode {
+        SimMode::Flow => flow::simulate_flow_plan_scratch(plan, m_bytes, params, scratch),
+        SimMode::Packet { mtu } => {
+            packet::simulate_packet_plan_scratch(plan, m_bytes, params, mtu, scratch)
+        }
     }
 }
 

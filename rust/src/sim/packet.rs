@@ -41,7 +41,7 @@
 //! cross-validation ladder shares one plan across both modes and every
 //! size.
 
-use super::plan::SimPlan;
+use super::plan::{SimPlan, SimScratch};
 use super::{SimResult, Timed};
 use crate::cost::NetParams;
 use crate::schedule::Schedule;
@@ -72,21 +72,35 @@ pub fn simulate_packet(
 }
 
 /// Packet-level simulation of an `m_bytes` collective against a precompiled
-/// plan (batched engine, see module docs).
+/// plan (batched engine, see module docs). Builds the per-`(plan, params)`
+/// scratch internally — ladder/replay callers should build one
+/// [`SimScratch`] and use [`simulate_packet_plan_scratch`] (bit-identical).
 pub fn simulate_packet_plan(
     plan: &SimPlan,
     m_bytes: u64,
     params: &NetParams,
     mtu: u32,
 ) -> SimResult {
+    simulate_packet_plan_scratch(plan, m_bytes, params, mtu, &SimScratch::new(plan, params))
+}
+
+/// [`simulate_packet_plan`] against a precomputed [`SimScratch`].
+pub fn simulate_packet_plan_scratch(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+    scratch: &SimScratch,
+) -> SimResult {
     assert!(mtu > 0);
+    debug_assert!(scratch.matches(plan), "scratch built for a different plan");
     let n = plan.n();
     let nsteps = plan.num_steps();
     if nsteps == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
-    let caps = plan.link_caps(params); // per-link bytes/s
-    let hops = plan.link_hop_lat(params); // per-link forwarding latency
+    let caps = &scratch.caps; // per-link bytes/s
+    let hops = &scratch.link_hop_lat; // per-link forwarding latency
 
     let mut received = vec![0u32; n * nsteps];
     let mut entered = vec![-1i64; n];

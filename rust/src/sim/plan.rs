@@ -289,6 +289,48 @@ impl SimPlan {
     }
 }
 
+/// Precomputed per-`(plan, params)` simulator scratch: the per-link
+/// capacity/latency columns and per-message route latencies that both
+/// engines previously rebuilt on every `simulate_plan` call. Sweeps and
+/// trace replays build one `SimScratch` per `(plan, params)` pair and reuse
+/// it across every message size ([`crate::sim::simulate_plan_scratch`]).
+/// The columns are exactly what the per-call path computes
+/// ([`SimPlan::link_caps`] / [`SimPlan::link_hop_lat`] /
+/// [`SimPlan::msg_hop_lat`]), so scratch-based runs are **bit-identical**
+/// to scratch-less ones. All three columns are built eagerly even though
+/// each engine reads only two — the spare column is `O(links)` /
+/// `O(messages)`, dominated by the simulation that follows on the only
+/// paths that build scratch per call (one-off CLI runs); sweeps and
+/// replays amortize it across the whole ladder.
+#[derive(Clone, Debug)]
+pub struct SimScratch {
+    /// Per-link capacity in bytes/s.
+    pub(crate) caps: Vec<f64>,
+    /// Per-link forwarding latency (scaled propagation + processing).
+    pub(crate) link_hop_lat: Vec<f64>,
+    /// Per-message total route forwarding latency.
+    pub(crate) msg_hop_lat: Vec<f64>,
+}
+
+impl SimScratch {
+    /// Precompute the columns for one `(plan, params)` pair.
+    pub fn new(plan: &SimPlan, params: &NetParams) -> SimScratch {
+        SimScratch {
+            caps: plan.link_caps(params),
+            link_hop_lat: plan.link_hop_lat(params),
+            msg_hop_lat: plan.msg_hop_lat(params),
+        }
+    }
+
+    /// Does this scratch's shape match `plan`? (A mismatched pair would
+    /// silently price the wrong links — asserted by the engines.)
+    pub(crate) fn matches(&self, plan: &SimPlan) -> bool {
+        self.caps.len() == plan.num_links()
+            && self.link_hop_lat.len() == plan.num_links()
+            && self.msg_hop_lat.len() == plan.num_msgs()
+    }
+}
+
 /// Exclusive prefix sum; returns (offsets with trailing total, a working
 /// copy of the offsets to use as fill cursors).
 fn prefix_sum(counts: &[u32]) -> (Vec<u32>, Vec<u32>) {

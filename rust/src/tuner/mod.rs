@@ -1,0 +1,36 @@
+//! `tuner` — online algorithm selection distilled from offline sweeps.
+//!
+//! The paper's headline claim is regime-dependent: Trivance wins
+//! latency-bound message sizes while bandwidth-optimal schedules win huge
+//! ones, and the crossover moves with topology, fabric health, and base
+//! bandwidth. A deployment therefore needs a *selector* — the per-size
+//! choice the paper's evaluation sweeps over by hand. This subsystem is
+//! that selector, the first rung of the serving story:
+//!
+//! * [`table`] — [`table::tune`] sweeps `(topology, scenario preset, algo,
+//!   size)` through the shared grid engine and distills the winners into a
+//!   [`DecisionTable`]: O(1) [`DecisionTable::recommend`] lookups, JSON
+//!   round-tripping, [`crate::net::NetModel`]-fingerprint staleness
+//!   detection, and [`crate::cost::NetParams`] provenance.
+//! * [`workload`] — deterministic synthetic traces (data-parallel /
+//!   tensor-parallel / mixed, [`crate::util::rng::SplitMix64`]-seeded) and
+//!   the [`workload::replay`] engine scoring table-driven selection against
+//!   the per-call oracle and every fixed-algorithm baseline.
+//!
+//! CLI: `trivance tune`, `trivance recommend`, `trivance replay`.
+//! Acceptance (pinned by `tools/pysim/eval_tuner.py`, mirrored math):
+//! table-driven selection lands within 5% of the per-call oracle on every
+//! built-in trace × scenario preset (measured worst +0.94%) and strictly
+//! beats every fixed-algorithm policy on the mixed trace.
+
+pub mod table;
+pub mod workload;
+
+pub use table::{
+    distill, ladder_index, tune, tune_ladder, Choice, DecisionTable, Recommendation,
+    RecommendError, ScenarioTable, TopoTable,
+};
+pub use workload::{
+    builtin_traces, generate, replay, PolicyOutcome, ReplayCell, ReplayReport, Trace,
+    TRACE_NAMES,
+};

@@ -1,0 +1,515 @@
+//! Decision tables: offline scenario sweeps distilled into a servable
+//! per-`(topology, scenario, size)` algorithm choice.
+//!
+//! [`tune`] runs the full `(scenario, algo, size)` grid of
+//! [`crate::harness::scenarios::run_scenarios`] (one parallel task pool per
+//! topology, plans shared through the process-wide
+//! [`crate::sim::PlanCache`]) over the **tune ladder** — `32·2^k`, twice as
+//! dense as the paper's `×4` sweep axis, so a production message size is
+//! never more than a quarter-decade in log-space from a tuned point — and
+//! [`distill`]s each sweep into per-size winners. The result is a
+//! [`DecisionTable`]:
+//!
+//! * [`DecisionTable::recommend`] answers "which algorithm do I run right
+//!   now" in O(1): topology row, scenario row matched by the live
+//!   [`NetModel`]'s [`NetModel::fingerprint`], then a pure-integer
+//!   nearest-in-log-space ladder lookup ([`ladder_index`] — midpoints
+//!   `32·2^k·√2` tested as `2·b²` against powers of two, no float log).
+//! * A model whose link table or down set matches **no** tuned scenario is
+//!   rejected ([`RecommendError::StaleModel`]) instead of silently served a
+//!   winner tuned for a different fabric — the same stale-plan trap the
+//!   plan cache's fingerprint key closes.
+//! * Tables serialize to JSON with the crate's hand-rolled writer and load
+//!   back through [`crate::util::json`]; floats round-trip bit-exactly
+//!   (Rust's shortest-representation formatter) and the stored
+//!   [`NetParams`] are fingerprinted so a table tuned at 800 Gb/s is never
+//!   consulted for a 200 Gb/s fabric ([`DecisionTable::params_match`]).
+//!
+//! The decision-table math is mirrored in `tools/pysim/mirror.py`
+//! (`tune_ladder` / `ladder_index` / `distill_winners`) — keep them in
+//! lockstep; `eval_tuner.py` pins the acceptance bounds.
+
+use crate::algo::{Algo, Variant};
+use crate::cost::NetParams;
+use crate::harness::scenarios::{run_scenarios, Scenario, ScenarioSweep};
+use crate::harness::sweep::completion_key;
+use crate::net::NetModel;
+use crate::sim::SimMode;
+use crate::topology::Torus;
+use crate::util::{fmt, json};
+
+/// Schema tag of the serialized table.
+pub const SCHEMA: &str = "trivance.tuner.v1";
+
+/// One tuned choice: the winning algorithm and variant at a ladder point.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Choice {
+    pub algo: Algo,
+    pub variant: Variant,
+}
+
+impl Choice {
+    pub fn label(&self) -> String {
+        format!("{}-{}", self.algo.label(), self.variant.label())
+    }
+
+    fn parse(s: &str) -> Option<Choice> {
+        let (a, v) = s.rsplit_once('-')?;
+        let algo = Algo::parse(a)?;
+        let variant = match v {
+            "L" => Variant::Latency,
+            "B" => Variant::Bandwidth,
+            _ => return None,
+        };
+        Some(Choice { algo, variant })
+    }
+}
+
+/// Winners of one scenario on one topology, aligned with the owning
+/// [`TopoTable`]'s ladder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ScenarioTable {
+    pub scenario: String,
+    /// [`NetModel::fingerprint`] of the fabric this row was tuned for
+    /// (`0` = uniform).
+    pub net_fp: u64,
+    pub winners: Vec<Choice>,
+}
+
+/// All scenario rows of one topology, sharing one tune ladder.
+#[derive(Clone, Debug, PartialEq)]
+pub struct TopoTable {
+    pub dims: Vec<u32>,
+    pub sizes: Vec<u64>,
+    pub scenarios: Vec<ScenarioTable>,
+}
+
+/// The distilled decision table (module docs).
+#[derive(Clone, Debug)]
+pub struct DecisionTable {
+    /// The base network parameters the winners were tuned under.
+    pub params: NetParams,
+    pub topos: Vec<TopoTable>,
+}
+
+/// A resolved recommendation.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Recommendation {
+    pub algo: Algo,
+    pub variant: Variant,
+    /// Name of the matched scenario row.
+    pub scenario: String,
+    /// The tuned ladder size the decision was read from.
+    pub table_bytes: u64,
+}
+
+/// Why a lookup could not be served.
+#[derive(Clone, Debug, PartialEq)]
+pub enum RecommendError {
+    /// No tuned row for this topology.
+    UnknownTopo { dims: Vec<u32> },
+    /// The live model's fingerprint matches no tuned scenario: the table
+    /// is stale for this fabric (re-run `trivance tune`).
+    StaleModel { dims: Vec<u32>, fingerprint: u64 },
+}
+
+impl std::fmt::Display for RecommendError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RecommendError::UnknownTopo { dims } => {
+                write!(f, "decision table has no row for topology {dims:?} — re-run `trivance tune --topo ...`")
+            }
+            RecommendError::StaleModel { dims, fingerprint } => {
+                write!(
+                    f,
+                    "decision table is stale for {dims:?}: live NetModel fingerprint {fingerprint:#x} \
+                     matches no tuned scenario — re-run `trivance tune`"
+                )
+            }
+        }
+    }
+}
+
+/// The tuner's distillation ladder: `32·2^k` up to `max` (inclusive) —
+/// twice as dense as the paper's `×4` sweep axis ([`crate::harness::sweep::size_ladder`]).
+pub fn tune_ladder(max: u64) -> Vec<u64> {
+    let mut v = Vec::new();
+    let mut m = 32u64;
+    while m <= max {
+        v.push(m);
+        // a caller-supplied max near u64::MAX must terminate, not wrap
+        match m.checked_mul(2) {
+            Some(next) => m = next,
+            None => break,
+        }
+    }
+    v
+}
+
+/// O(1) nearest-in-log-space index into the `32·2^k` tune ladder, clamped
+/// to `[0, len)`. The boundary between index `k` and `k+1` is the geometric
+/// midpoint `32·2^k·√2`, tested in pure integer arithmetic:
+/// `round(log2(b/32)) = (⌊log2(2·b²)⌋ − 10) / 2` (floor-division identity
+/// `⌊x/2⌋ = ⌊⌊x⌋/2⌋`; the square is taken in u128 and the doubling folded
+/// into the exponent — `⌊log2(2x)⌋ = ⌊log2 x⌋ + 1` — so the full u64 size
+/// range indexes exactly, `u64::MAX` included). Mirrored in
+/// `tools/pysim/mirror.py::ladder_index`.
+pub fn ladder_index(bytes: u64, len: usize) -> usize {
+    assert!(len > 0, "empty ladder");
+    let b = bytes.max(1) as u128;
+    let l = (128 - (b * b).leading_zeros()) as usize; // ⌊log2(2·b²)⌋
+    let idx = if l < 10 { 0 } else { (l - 10) / 2 };
+    idx.min(len - 1)
+}
+
+/// Distill one topology's scenario sweep into its [`TopoTable`]: the winner
+/// at each `(scenario, size)` cell is the first minimum across algorithms
+/// of the best-variant completion — the same NaN-safe tie-break as
+/// [`crate::harness::sweep::Sweep::winners`].
+pub fn distill(torus: &Torus, sweep: &ScenarioSweep) -> TopoTable {
+    let scenarios = sweep
+        .scenarios
+        .iter()
+        .enumerate()
+        .map(|(ci, sc)| {
+            let winners = (0..sweep.sizes.len())
+                .map(|si| {
+                    let row = &sweep.points[ci][si];
+                    let ai = row
+                        .iter()
+                        .enumerate()
+                        .min_by(|a, b| {
+                            completion_key(a.1.completion_s)
+                                .total_cmp(&completion_key(b.1.completion_s))
+                        })
+                        .expect("non-empty algo row")
+                        .0;
+                    Choice { algo: sweep.algos[ai], variant: row[ai].variant }
+                })
+                .collect();
+            ScenarioTable {
+                scenario: sc.name.clone(),
+                net_fp: sc.model(torus).fingerprint(),
+                winners,
+            }
+        })
+        .collect();
+    TopoTable { dims: torus.dims().to_vec(), sizes: sweep.sizes.clone(), scenarios }
+}
+
+/// Run the offline sweep over every `(topology, scenario, algo, ladder
+/// size)` cell and distill it into a [`DecisionTable`]. Plans are shared
+/// through the global [`crate::sim::PlanCache`] (keyed by each scenario
+/// model's fingerprint), so repeated tunes in one process re-simulate but
+/// never re-flatten.
+pub fn tune(
+    topos: &[Torus],
+    scenarios: &[Scenario],
+    max_size: u64,
+    params: &NetParams,
+    threads: usize,
+    mode: SimMode,
+) -> DecisionTable {
+    params.validate();
+    assert!(
+        max_size >= 32,
+        "tune: max_size must be >= 32 B (got {max_size}) — the tune ladder starts at 32"
+    );
+    let sizes = tune_ladder(max_size);
+    let topo_tables = topos
+        .iter()
+        .map(|torus| {
+            let sweep =
+                run_scenarios(torus, &Algo::ALL, &sizes, params, scenarios, threads, mode);
+            distill(torus, &sweep)
+        })
+        .collect();
+    DecisionTable { params: *params, topos: topo_tables }
+}
+
+impl DecisionTable {
+    /// The tuned rows for `(dims, model)`: topology matched exactly,
+    /// scenario matched by the model's fingerprint (module docs).
+    pub fn scenario_row(
+        &self,
+        dims: &[u32],
+        model: &NetModel,
+    ) -> Result<(&TopoTable, &ScenarioTable), RecommendError> {
+        let topo = self
+            .topos
+            .iter()
+            .find(|t| t.dims == dims)
+            .ok_or_else(|| RecommendError::UnknownTopo { dims: dims.to_vec() })?;
+        let fp = model.fingerprint();
+        let sc = topo
+            .scenarios
+            .iter()
+            .find(|s| s.net_fp == fp)
+            .ok_or_else(|| RecommendError::StaleModel { dims: dims.to_vec(), fingerprint: fp })?;
+        Ok((topo, sc))
+    }
+
+    /// O(1) lookup: which algorithm (and variant) to run for an `bytes`
+    /// AllReduce on `dims` under the live `model`.
+    pub fn recommend(
+        &self,
+        dims: &[u32],
+        model: &NetModel,
+        bytes: u64,
+    ) -> Result<Recommendation, RecommendError> {
+        let (topo, sc) = self.scenario_row(dims, model)?;
+        let idx = ladder_index(bytes, topo.sizes.len());
+        let c = sc.winners[idx];
+        Ok(Recommendation {
+            algo: c.algo,
+            variant: c.variant,
+            scenario: sc.scenario.clone(),
+            table_bytes: topo.sizes[idx],
+        })
+    }
+
+    /// Were the winners tuned under exactly these base parameters?
+    /// (Bit-compared: a table tuned at another bandwidth has different
+    /// crossovers and must not be consulted.)
+    pub fn params_match(&self, params: &NetParams) -> bool {
+        self.params.alpha_s.to_bits() == params.alpha_s.to_bits()
+            && self.params.link_bw_bps.to_bits() == params.link_bw_bps.to_bits()
+            && self.params.link_latency_s.to_bits() == params.link_latency_s.to_bits()
+            && self.params.hop_latency_s.to_bits() == params.hop_latency_s.to_bits()
+    }
+
+    /// Hand-rolled JSON (schema [`SCHEMA`]). Floats print with Rust's
+    /// shortest round-trip formatter; fingerprints as decimal strings (u64
+    /// does not fit in a JSON double).
+    pub fn to_json(&self) -> String {
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str(&format!("  \"schema\": \"{SCHEMA}\",\n"));
+        out.push_str(&format!(
+            "  \"params\": {{\"alpha_s\": {}, \"link_bw_bps\": {}, \
+             \"link_latency_s\": {}, \"hop_latency_s\": {}}},\n",
+            self.params.alpha_s,
+            self.params.link_bw_bps,
+            self.params.link_latency_s,
+            self.params.hop_latency_s
+        ));
+        out.push_str("  \"topos\": [");
+        let mut first_topo = true;
+        for topo in &self.topos {
+            if !first_topo {
+                out.push(',');
+            }
+            first_topo = false;
+            let dims: Vec<String> = topo.dims.iter().map(|d| d.to_string()).collect();
+            let sizes: Vec<String> = topo.sizes.iter().map(|s| s.to_string()).collect();
+            out.push_str(&format!(
+                "\n    {{\n      \"dims\": [{}],\n      \"sizes\": [{}],\n      \"scenarios\": [",
+                dims.join(", "),
+                sizes.join(", ")
+            ));
+            let mut first_sc = true;
+            for sc in &topo.scenarios {
+                if !first_sc {
+                    out.push(',');
+                }
+                first_sc = false;
+                let winners: Vec<String> =
+                    sc.winners.iter().map(|c| format!("\"{}\"", c.label())).collect();
+                out.push_str(&format!(
+                    "\n        {{\"name\": \"{}\", \"net_fp\": \"{}\", \"winners\": [{}]}}",
+                    json::escape(&sc.scenario),
+                    sc.net_fp,
+                    winners.join(", ")
+                ));
+            }
+            out.push_str("\n      ]\n    }");
+        }
+        out.push_str("\n  ]\n}\n");
+        out
+    }
+
+    /// Parse a table serialized by [`DecisionTable::to_json`], validating
+    /// the schema tag, the `32·2^k` ladder shape [`ladder_index`] assumes,
+    /// and the winner/ladder alignment.
+    pub fn from_json(text: &str) -> Result<DecisionTable, String> {
+        let doc = json::parse(text)?;
+        let schema = doc.get("schema").and_then(|s| s.as_str()).unwrap_or("");
+        if schema != SCHEMA {
+            return Err(format!("unsupported decision-table schema {schema:?} (want {SCHEMA})"));
+        }
+        let p = doc.get("params").ok_or("missing params")?;
+        let field = |k: &str| -> Result<f64, String> {
+            p.get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| format!("missing params.{k}"))
+        };
+        let params = NetParams {
+            alpha_s: field("alpha_s")?,
+            link_bw_bps: field("link_bw_bps")?,
+            link_latency_s: field("link_latency_s")?,
+            hop_latency_s: field("hop_latency_s")?,
+        };
+        // reject (rather than panic on) a corrupted file: same predicates
+        // as NetParams::validate
+        if !(params.link_bw_bps.is_finite() && params.link_bw_bps > 0.0)
+            || !(params.alpha_s.is_finite() && params.alpha_s >= 0.0)
+            || !(params.link_latency_s.is_finite() && params.link_latency_s >= 0.0)
+            || !(params.hop_latency_s.is_finite() && params.hop_latency_s >= 0.0)
+        {
+            return Err("decision table carries invalid network parameters".into());
+        }
+        let mut topos = Vec::new();
+        for topo in doc.get("topos").and_then(|t| t.as_arr()).ok_or("missing topos")? {
+            let dims: Vec<u32> = topo
+                .get("dims")
+                .and_then(|d| d.as_arr())
+                .ok_or("missing dims")?
+                .iter()
+                .map(|v| v.as_u64().map(|d| d as u32).ok_or("bad dim"))
+                .collect::<Result<_, _>>()?;
+            let sizes: Vec<u64> = topo
+                .get("sizes")
+                .and_then(|s| s.as_arr())
+                .ok_or("missing sizes")?
+                .iter()
+                .map(|v| v.as_u64().ok_or("bad size"))
+                .collect::<Result<_, _>>()?;
+            if sizes.is_empty()
+                || sizes[0] != 32
+                || sizes.windows(2).any(|w| w[1] != w[0] * 2)
+            {
+                return Err(format!(
+                    "sizes {sizes:?} is not the 32·2^k tune ladder recommend() indexes into"
+                ));
+            }
+            let mut scenarios = Vec::new();
+            for sc in topo
+                .get("scenarios")
+                .and_then(|s| s.as_arr())
+                .ok_or("missing scenarios")?
+            {
+                let name = sc
+                    .get("name")
+                    .and_then(|n| n.as_str())
+                    .ok_or("missing scenario name")?
+                    .to_string();
+                let net_fp: u64 = sc
+                    .get("net_fp")
+                    .and_then(|f| f.as_str())
+                    .ok_or("missing net_fp")?
+                    .parse()
+                    .map_err(|e| format!("bad net_fp: {e}"))?;
+                let winners: Vec<Choice> = sc
+                    .get("winners")
+                    .and_then(|w| w.as_arr())
+                    .ok_or("missing winners")?
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .and_then(Choice::parse)
+                            .ok_or_else(|| format!("bad winner {v:?}"))
+                    })
+                    .collect::<Result<_, _>>()?;
+                if winners.len() != sizes.len() {
+                    return Err(format!(
+                        "scenario {name:?}: {} winners for {} ladder sizes",
+                        winners.len(),
+                        sizes.len()
+                    ));
+                }
+                scenarios.push(ScenarioTable { scenario: name, net_fp, winners });
+            }
+            topos.push(TopoTable { dims, sizes, scenarios });
+        }
+        Ok(DecisionTable { params, topos })
+    }
+
+    /// Markdown summary: per topology, each scenario's winner as collapsed
+    /// size ranges.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for topo in &self.topos {
+            out.push_str(&format!(
+                "#### decision table — {:?} ({} ladder points up to {})\n\n",
+                topo.dims,
+                topo.sizes.len(),
+                fmt::bytes(*topo.sizes.last().expect("non-empty ladder"))
+            ));
+            let mut t = fmt::Table::new(vec!["scenario", "size range → algorithm"]);
+            for sc in &topo.scenarios {
+                let mut segs: Vec<String> = Vec::new();
+                let mut start = 0usize;
+                for i in 1..=sc.winners.len() {
+                    if i == sc.winners.len() || sc.winners[i] != sc.winners[start] {
+                        let lo = fmt::bytes(topo.sizes[start]);
+                        let range = if start == i - 1 {
+                            lo
+                        } else {
+                            format!("{lo}–{}", fmt::bytes(topo.sizes[i - 1]))
+                        };
+                        segs.push(format!("{range} → {}", sc.winners[start].label()));
+                        start = i;
+                    }
+                }
+                t.row(vec![sc.scenario.clone(), segs.join("; ")]);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tune_ladder_shape() {
+        let v = tune_ladder(128 << 20);
+        assert_eq!(v[0], 32);
+        assert_eq!(v[1], 64);
+        assert_eq!(*v.last().unwrap(), 128 << 20);
+        assert_eq!(v.len(), 23);
+    }
+
+    #[test]
+    fn ladder_index_is_exact_log_rounding() {
+        let n = tune_ladder(128 << 20).len();
+        // every ladder point maps to itself
+        for (i, m) in tune_ladder(128 << 20).iter().enumerate() {
+            assert_eq!(ladder_index(*m, n), i, "ladder point {m}");
+        }
+        // geometric midpoints 32·2^k·√2: below rounds down, above up
+        for (k, below, above) in [(0usize, 45u64, 46u64), (1, 90, 91), (2, 181, 182)] {
+            assert_eq!(ladder_index(below, n), k);
+            assert_eq!(ladder_index(above, n), k + 1);
+        }
+        // clamping
+        assert_eq!(ladder_index(0, 5), 0);
+        assert_eq!(ladder_index(1, 5), 0);
+        assert_eq!(ladder_index(u64::MAX, 5), 4);
+        // ladders tuned past 2 GiB index exactly (u128 square, no clamp)
+        let big = tune_ladder(8 << 30);
+        assert_eq!(big.len(), 29);
+        for (i, m) in big.iter().enumerate() {
+            assert_eq!(ladder_index(*m, big.len()), i, "big ladder point {m}");
+        }
+        assert_eq!(ladder_index((4u64 << 30) + 1, big.len()), 27);
+        assert_eq!(ladder_index(u64::MAX, big.len()), 28);
+    }
+
+    #[test]
+    fn choice_labels_round_trip() {
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let c = Choice { algo, variant };
+                assert_eq!(Choice::parse(&c.label()), Some(c), "{}", c.label());
+            }
+        }
+        assert_eq!(Choice::parse("bruck-unidir-B").unwrap().algo, Algo::BruckUnidir);
+        assert!(Choice::parse("nope-L").is_none());
+        assert!(Choice::parse("trivance-X").is_none());
+        assert!(Choice::parse("trivance").is_none());
+    }
+}

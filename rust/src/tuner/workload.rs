@@ -1,0 +1,428 @@
+//! Synthetic multi-collective workload traces and the replay engine that
+//! scores selection policies against them.
+//!
+//! A [`Trace`] is a deterministic sequence of AllReduce message sizes —
+//! SplitMix64-generated from a fixed per-trace seed, so every run (and the
+//! Python mirror) sees the same workload:
+//!
+//! | name              | shape                                                    |
+//! |-------------------|----------------------------------------------------------|
+//! | `data-parallel`   | DDP gradient buckets: 4–64 MiB, bandwidth-dominated      |
+//! | `tensor-parallel` | layer-wise activation reductions: 64 KiB–4 MiB, the      |
+//! |                   | crossover regime where selection is hardest              |
+//! | `mixed`           | inference + training mix: many tiny latency-bound calls  |
+//! |                   | interleaved with large gradient buckets — no fixed       |
+//! |                   | algorithm wins both ends                                 |
+//!
+//! Each draw picks a weighted base size then a `×{3/4, 1, 5/4}` jitter, so
+//! most replayed sizes sit **between** tuned ladder points — the replay
+//! exercises the table's nearest-point rounding, not just exact hits.
+//!
+//! [`replay`] runs every trace through the simulators under three policy
+//! families — per-call **oracle** (lower bound), **table**-driven
+//! ([`DecisionTable::recommend`]), and **fixed-algorithm** (best variant
+//! per call, the strongest fixed baseline) — on every scenario preset, as
+//! one `(scenario, size, algo)` grid through the shared
+//! [`crate::harness::sweep::eval_grid`] engine with hoisted
+//! [`crate::sim::SimScratch`] columns (a trace never rebuilds
+//! per-collective scratch), on the same plan/scratch lattice the scenario
+//! sweep tunes on ([`crate::harness::scenarios`]'s `build_scenario_plans`).
+//! The report carries total completion and regret-vs-oracle per cell;
+//! `tools/pysim/eval_tuner.py` pins the acceptance bounds (table within 5%
+//! of oracle everywhere, strictly ahead of every fixed policy on the mixed
+//! trace — measured worst regret +0.94%).
+
+use crate::algo::{Algo, Variant};
+use crate::cost::NetParams;
+use crate::harness::scenarios::{build_scenario_plans, Scenario, ScenarioKind, ScenarioPlans};
+use crate::harness::sweep::{completion_key, eval_grid};
+use crate::net::NetModel;
+use crate::sim::{simulate_plan_scratch, SimMode};
+use crate::topology::Torus;
+use crate::util::fmt;
+use crate::util::rng::SplitMix64;
+
+use super::table::{ladder_index, DecisionTable};
+
+/// A deterministic workload trace (module docs).
+#[derive(Clone, Debug)]
+pub struct Trace {
+    pub name: &'static str,
+    pub desc: &'static str,
+    pub sizes: Vec<u64>,
+}
+
+/// `(name, description, seed, weighted base sizes)` per built-in trace.
+/// Keep in lockstep with `tools/pysim/mirror.py::TRACE_MIX`/`TRACE_SEEDS`.
+const TRACE_SPECS: [(&str, &str, u64, &[(u64, u64)]); 3] = [
+    (
+        "data-parallel",
+        "DDP gradient buckets (4-64 MiB, bandwidth-dominated)",
+        0x7A0E_0001,
+        &[(4 << 20, 2), (16 << 20, 3), (32 << 20, 3), (64 << 20, 2)],
+    ),
+    (
+        "tensor-parallel",
+        "layer-wise activation reductions (64 KiB-4 MiB, crossover regime)",
+        0x7A0E_0002,
+        &[(64 << 10, 2), (256 << 10, 3), (1 << 20, 3), (4 << 20, 2)],
+    ),
+    (
+        "mixed",
+        "inference+training mix (32 B token syncs to 64 MiB gradient buckets)",
+        0x7A0E_0003,
+        &[
+            (32, 3),
+            (512, 3),
+            (8 << 10, 3),
+            (64 << 10, 2),
+            (1 << 20, 2),
+            (16 << 20, 1),
+            (64 << 20, 1),
+        ],
+    ),
+];
+
+/// Names of the built-in traces, in replay order.
+pub const TRACE_NAMES: [&str; 3] = ["data-parallel", "tensor-parallel", "mixed"];
+
+/// Generate one named trace: `calls` draws, each a weighted base size and a
+/// `×{3/4, 1, 5/4}` jitter (two SplitMix64 draws per call, weight first),
+/// clamped to `[1, max_bytes]`. `None` for an unknown name.
+pub fn generate(name: &str, calls: usize, max_bytes: u64) -> Option<Trace> {
+    let &(name, desc, seed, mix) = TRACE_SPECS.iter().find(|(n, ..)| *n == name)?;
+    let total_w: u64 = mix.iter().map(|&(_, w)| w).sum();
+    let mut rng = SplitMix64::new(seed);
+    let sizes = (0..calls)
+        .map(|_| {
+            let w = rng.below(total_w);
+            let mut acc = 0u64;
+            let mut base = mix.last().expect("non-empty mix").0;
+            for &(b, wt) in mix {
+                acc += wt;
+                if w < acc {
+                    base = b;
+                    break;
+                }
+            }
+            let j = rng.below(3); // 0,1,2 -> x3/4, x1, x5/4
+            (base * (3 + j) / 4).clamp(1, max_bytes)
+        })
+        .collect();
+    Some(Trace { name, desc, sizes })
+}
+
+/// All built-in traces at the given call count and size cap.
+pub fn builtin_traces(calls: usize, max_bytes: u64) -> Vec<Trace> {
+    TRACE_NAMES
+        .iter()
+        .map(|n| generate(n, calls, max_bytes).expect("built-in trace"))
+        .collect()
+}
+
+/// One policy's accounting for one `(trace, scenario)` cell.
+#[derive(Clone, Debug)]
+pub struct PolicyOutcome {
+    /// `oracle`, `table`, or `fixed:<algo>`.
+    pub label: String,
+    /// Total completion of the whole trace (seconds).
+    pub total_s: f64,
+    /// `total_s / oracle_total − 1` (0 for the oracle row).
+    pub regret: f64,
+}
+
+/// All policies on one `(trace, scenario)` cell.
+#[derive(Clone, Debug)]
+pub struct ReplayCell {
+    pub scenario: String,
+    /// The preset instantiated to the uniform model on this topology.
+    pub degenerate: bool,
+    /// Oracle first, table second, then one `fixed:<algo>` per algorithm.
+    pub outcomes: Vec<PolicyOutcome>,
+}
+
+impl ReplayCell {
+    fn outcome(&self, label: &str) -> Option<&PolicyOutcome> {
+        self.outcomes.iter().find(|o| o.label == label)
+    }
+
+    /// The table policy's regret vs the oracle.
+    pub fn table_regret(&self) -> f64 {
+        self.outcome("table").expect("table row").regret
+    }
+
+    /// Is the table policy strictly ahead of every fixed-algorithm policy?
+    pub fn table_beats_every_fixed(&self) -> bool {
+        let table = self.outcome("table").expect("table row").total_s;
+        self.outcomes
+            .iter()
+            .filter(|o| o.label.starts_with("fixed:"))
+            .all(|o| table < o.total_s)
+    }
+}
+
+/// Full replay result: `cells[trace][scenario]`.
+#[derive(Clone, Debug)]
+pub struct ReplayReport {
+    pub dims: Vec<u32>,
+    pub traces: Vec<Trace>,
+    pub scenarios: Vec<String>,
+    pub cells: Vec<Vec<ReplayCell>>,
+}
+
+/// Replay every trace under every scenario on `torus`, scoring the oracle,
+/// the table, and every fixed-algorithm policy (module docs). Fails if the
+/// table was tuned under different [`NetParams`] or has no row for this
+/// topology/scenario — stale tables are rejected, never silently served.
+pub fn replay(
+    torus: &Torus,
+    scenarios: &[Scenario],
+    traces: &[Trace],
+    table: &DecisionTable,
+    params: &NetParams,
+    threads: usize,
+    mode: SimMode,
+) -> Result<ReplayReport, String> {
+    params.validate();
+    if let Some(t) = traces.iter().find(|t| t.sizes.is_empty()) {
+        return Err(format!(
+            "trace {:?} is empty — an empty trace has no oracle total to regret against",
+            t.name
+        ));
+    }
+    if !table.params_match(params) {
+        return Err(format!(
+            "decision table was tuned under different network parameters \
+             (table: {:.3e} bps / α {:.3e}s; requested: {:.3e} bps / α {:.3e}s) — re-run `trivance tune`",
+            table.params.link_bw_bps, table.params.alpha_s, params.link_bw_bps, params.alpha_s
+        ));
+    }
+
+    // Build each algorithm once; per-scenario plans through the
+    // fingerprint-keyed global cache, with hoisted scratch columns — the
+    // same lattice the scenario sweep (and therefore `tune`) ran on.
+    let models: Vec<NetModel> = scenarios.iter().map(|sc| sc.model(torus)).collect();
+    let ScenarioPlans { built, plans, scratches } =
+        build_scenario_plans(torus, &Algo::ALL, &models, params);
+
+    // Resolve each scenario's table row up front (fingerprint checked once
+    // per scenario, not once per collective).
+    let rows: Vec<&super::table::ScenarioTable> = models
+        .iter()
+        .map(|model| {
+            table
+                .scenario_row(torus.dims(), model)
+                .map(|(_, sc)| sc)
+                .map_err(|e| e.to_string())
+        })
+        .collect::<Result<_, _>>()?;
+    let topo_sizes = &table
+        .topos
+        .iter()
+        .find(|t| t.dims == torus.dims())
+        .expect("scenario_row verified the topo")
+        .sizes;
+    // A hand-edited or mismatched table could name winners this topology
+    // cannot build — reject up front instead of panicking mid-accounting.
+    for row in &rows {
+        for c in &row.winners {
+            let buildable = built
+                .iter()
+                .any(|(a, vs)| *a == c.algo && vs.iter().any(|b| b.variant == c.variant));
+            if !buildable {
+                return Err(format!(
+                    "decision table winner {} (scenario {}) is not buildable on {:?} — \
+                     re-run `trivance tune` for this topology",
+                    c.label(),
+                    row.scenario,
+                    torus.dims()
+                ));
+            }
+        }
+    }
+
+    // Distinct sizes across all traces; one (scenario, size, algo) grid.
+    let mut distinct: Vec<u64> = traces.iter().flat_map(|t| t.sizes.iter().copied()).collect();
+    distinct.sort_unstable();
+    distinct.dedup();
+    let grid = eval_grid(scenarios.len(), distinct.len(), built.len(), threads, |ci, si, ai| {
+        built[ai]
+            .1
+            .iter()
+            .zip(&plans[ci][ai])
+            .zip(&scratches[ci][ai])
+            .map(|((b, plan), scratch)| {
+                (
+                    b.variant,
+                    simulate_plan_scratch(plan, scratch, distinct[si], params, mode)
+                        .completion_s,
+                )
+            })
+            .collect::<Vec<(Variant, f64)>>()
+    });
+
+    // Policy accounting per (trace, scenario).
+    let cells: Vec<Vec<ReplayCell>> = traces
+        .iter()
+        .map(|trace| {
+            scenarios
+                .iter()
+                .enumerate()
+                .map(|(ci, sc)| {
+                    let mut oracle = 0.0f64;
+                    let mut table_total = 0.0f64;
+                    let mut fixed = vec![0.0f64; built.len()];
+                    for &s in &trace.sizes {
+                        let si = distinct.binary_search(&s).expect("distinct covers trace");
+                        let mut best_all = f64::INFINITY;
+                        for (ai, _) in built.iter().enumerate() {
+                            let best = grid[ci][si][ai]
+                                .iter()
+                                .map(|&(_, c)| completion_key(c))
+                                .fold(f64::INFINITY, f64::min);
+                            fixed[ai] += best;
+                            if best < best_all {
+                                best_all = best;
+                            }
+                        }
+                        oracle += best_all;
+                        let choice = rows[ci].winners[ladder_index(s, topo_sizes.len())];
+                        let ai = built
+                            .iter()
+                            .position(|(a, _)| *a == choice.algo)
+                            .expect("tuned winner is a built algorithm");
+                        let &(_, c) = grid[ci][si][ai]
+                            .iter()
+                            .find(|(v, _)| *v == choice.variant)
+                            .expect("tuned winner variant was built");
+                        table_total += c;
+                    }
+                    let mut outcomes = vec![
+                        PolicyOutcome { label: "oracle".into(), total_s: oracle, regret: 0.0 },
+                        PolicyOutcome {
+                            label: "table".into(),
+                            total_s: table_total,
+                            regret: table_total / oracle - 1.0,
+                        },
+                    ];
+                    for ((algo, _), &total) in built.iter().zip(&fixed) {
+                        outcomes.push(PolicyOutcome {
+                            label: format!("fixed:{}", algo.label()),
+                            total_s: total,
+                            regret: total / oracle - 1.0,
+                        });
+                    }
+                    let degenerate =
+                        !matches!(sc.kind, ScenarioKind::Uniform) && models[ci].is_uniform();
+                    ReplayCell { scenario: sc.name.clone(), degenerate, outcomes }
+                })
+                .collect()
+        })
+        .collect();
+
+    Ok(ReplayReport {
+        dims: torus.dims().to_vec(),
+        traces: traces.to_vec(),
+        scenarios: scenarios.iter().map(|s| s.name.clone()).collect(),
+        cells,
+    })
+}
+
+impl ReplayReport {
+    /// Worst table-vs-oracle regret across every `(trace, scenario)` cell.
+    pub fn worst_table_regret(&self) -> f64 {
+        self.cells
+            .iter()
+            .flatten()
+            .map(|c| c.table_regret())
+            .fold(f64::NEG_INFINITY, f64::max)
+    }
+
+    /// Does the table policy strictly beat every fixed-algorithm policy on
+    /// the named trace, in every scenario?
+    pub fn strictly_beats_fixed_on(&self, trace: &str) -> bool {
+        self.traces
+            .iter()
+            .zip(&self.cells)
+            .filter(|(t, _)| t.name == trace)
+            .flat_map(|(_, cells)| cells.iter())
+            .all(|c| c.table_beats_every_fixed())
+    }
+
+    /// Markdown report: per trace, one `policy × scenario` table of total
+    /// completion and regret-vs-oracle, plus the acceptance summary.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("### {title}\n\n");
+        for (ti, trace) in self.traces.iter().enumerate() {
+            out.push_str(&format!(
+                "#### trace `{}` — {} ({} collectives)\n\n",
+                trace.name,
+                trace.desc,
+                trace.sizes.len()
+            ));
+            let mut header = vec!["policy".to_string()];
+            for (ci, name) in self.scenarios.iter().enumerate() {
+                let tag = if self.cells[ti][ci].degenerate { " (=uniform)" } else { "" };
+                header.push(format!("{name}{tag}"));
+            }
+            let mut t = fmt::Table::new(header);
+            let n_policies = self.cells[ti][0].outcomes.len();
+            for pi in 0..n_policies {
+                let mut row = vec![self.cells[ti][0].outcomes[pi].label.clone()];
+                for cell in &self.cells[ti] {
+                    let o = &cell.outcomes[pi];
+                    if o.label == "oracle" {
+                        row.push(fmt::secs(o.total_s));
+                    } else {
+                        row.push(format!("{} ({:+.2}%)", fmt::secs(o.total_s), o.regret * 100.0));
+                    }
+                }
+                t.row(row);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        out.push_str(&format!(
+            "table-driven worst regret vs per-call oracle: {:+.2}%\n",
+            self.worst_table_regret() * 100.0
+        ));
+        if self.traces.iter().any(|t| t.name == "mixed") {
+            out.push_str(&format!(
+                "mixed trace: table strictly beats every fixed-algorithm policy in every scenario: {}\n",
+                if self.strictly_beats_fixed_on("mixed") { "yes" } else { "NO" }
+            ));
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn traces_are_deterministic_and_bounded() {
+        for name in TRACE_NAMES {
+            let a = generate(name, 160, 128 << 20).unwrap();
+            let b = generate(name, 160, 128 << 20).unwrap();
+            assert_eq!(a.sizes, b.sizes, "{name}");
+            assert_eq!(a.sizes.len(), 160);
+            assert!(a.sizes.iter().all(|&s| (1..=128 << 20).contains(&s)));
+            // jitter keeps the distinct set small enough to replay exactly
+            let mut d = a.sizes.clone();
+            d.sort_unstable();
+            d.dedup();
+            assert!(d.len() <= 3 * 7, "{name}: {} distinct", d.len());
+            let capped = generate(name, 160, 256 << 10).unwrap();
+            assert!(capped.sizes.iter().all(|&s| s <= 256 << 10));
+        }
+        assert!(generate("nope", 10, 1024).is_none());
+    }
+
+    #[test]
+    fn mixed_trace_spans_both_regimes() {
+        let t = generate("mixed", 160, 128 << 20).unwrap();
+        assert!(t.sizes.iter().any(|&s| s <= 1024), "latency-bound calls present");
+        assert!(t.sizes.iter().any(|&s| s >= 8 << 20), "bandwidth-bound calls present");
+    }
+}

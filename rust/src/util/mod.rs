@@ -3,12 +3,14 @@
 //! The offline vendored registry ships neither `rand`, `criterion`,
 //! `proptest`, nor `rayon`, so this module provides the minimal equivalents
 //! used across the crate: a SplitMix64 PRNG, a tiny benchmark harness, a
-//! randomized property-test driver, a scoped-thread parallel map, and
-//! table/byte formatting helpers.
+//! randomized property-test driver, a scoped-thread parallel map,
+//! table/byte formatting helpers, and a minimal JSON reader matching the
+//! hand-rolled writers.
 
 pub mod rng;
 pub mod bench;
 pub mod fmt;
+pub mod json;
 pub mod par;
 pub mod prop;
 

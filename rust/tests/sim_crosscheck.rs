@@ -23,7 +23,7 @@ use trivance::cost::NetParams;
 use trivance::harness::sweep::{build_all, build_all_uncached, run_sweep_threads, size_ladder};
 use trivance::net::{LinkClass, NetModel};
 use trivance::sim::packet::reference::simulate_packet_reference_plan;
-use trivance::sim::{simulate_plan, PlanCache, PlanKey, SimMode, SimPlan};
+use trivance::sim::{simulate_plan, simulate_plan_scratch, PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
 
@@ -423,6 +423,84 @@ fn plan_cache_misses_when_the_net_model_changes() {
     for plan in &plans[1..] {
         let f = simulate_plan(plan, m, &p, SimMode::Flow).completion_s;
         assert!(f > f0, "degraded model must be slower at {m} B: {f} vs {f0}");
+    }
+}
+
+#[test]
+fn hoisted_scratch_is_bit_identical_for_both_engines() {
+    // the per-(plan, params) scratch hoisted to the sweep/replay layer is
+    // exactly what the per-call path computes — flow and packet results
+    // must match bit for bit, on uniform and heterogeneous models
+    let p = NetParams::default();
+    for dims in [vec![9u32], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        let models = [
+            NetModel::uniform(&t),
+            NetModel::straggler(&t, 2, 4.0, trivance::harness::scenarios::STRAGGLER_SEED),
+        ];
+        for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                for model in &models {
+                    let plan = SimPlan::build_with_model(&b.net, model);
+                    let scratch = SimScratch::new(&plan, &p);
+                    for m in [4096u64, 256 << 10] {
+                        for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
+                            let fresh = simulate_plan(&plan, m, &p, mode);
+                            let hoisted = simulate_plan_scratch(&plan, &scratch, m, &p, mode);
+                            assert_eq!(
+                                fresh.completion_s.to_bits(),
+                                hoisted.completion_s.to_bits(),
+                                "{algo:?} {variant:?} {dims:?} m={m} {mode:?}"
+                            );
+                            assert_eq!(fresh.events, hoisted.events);
+                            assert_eq!(fresh.messages, hoisted.messages);
+                        }
+                    }
+                }
+            }
+        }
+    }
+}
+
+#[test]
+#[cfg_attr(debug_assertions, ignore = "scale smoke runs release-mode only (CI crosscheck step)")]
+fn scale_smoke_16x16_and_8x8x8_flow_sweep_points() {
+    // ROADMAP "next rung" scale: one flow-mode sweep point each on the
+    // 16×16 and 8×8×8 tori. Gated to release builds — `cargo test -q`
+    // (debug) skips it, the CI `cargo test --release --test sim_crosscheck`
+    // step runs it.
+    let p = NetParams::default();
+    for dims in [vec![16u32, 16], vec![8, 8, 8]] {
+        let t = Torus::new(&dims);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Swing, Algo::Bucket];
+        let s = run_sweep_threads(&t, &algos, &[32, 1 << 20], &p, 0);
+        assert_eq!(s.algos.len(), algos.len(), "all four native on {dims:?}");
+        // every point is finite and positive, and the larger size costs
+        // more for every algorithm
+        for si in 0..s.sizes.len() {
+            for ai in 0..s.algos.len() {
+                let c = s.points[si][ai].completion_s;
+                assert!(c.is_finite() && c > 0.0, "{dims:?} ({si}, {ai}): {c}");
+            }
+        }
+        for ai in 0..s.algos.len() {
+            assert!(
+                s.points[1][ai].completion_s > s.points[0][ai].completion_s,
+                "{dims:?}: 1 MiB not slower than 32 B for {:?}",
+                s.algos[ai]
+            );
+        }
+        // the paper's latency-regime claim survives at this scale: nothing
+        // beats Trivance at 32 B
+        for &a in &s.algos {
+            if a != Algo::Trivance {
+                assert!(
+                    s.rel_to_trivance(a, 0) >= 0.999,
+                    "{a:?} beat trivance at 32 B on {dims:?}"
+                );
+            }
+        }
     }
 }
 

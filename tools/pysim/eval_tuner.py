@@ -1,0 +1,130 @@
+"""Tuner (decision-table + workload replay) validation — the
+toolchain-less protocol for the tuner PR, same role eval_netmodel.py
+played for the NetModel PR. Runtime ~6 minutes (the 8x8 scenario sweeps
+dominate; straggler/faulty fabrics disable the flow fast path).
+
+Asserted bounds (measured 2026-07 in this container; the Rust tuner tests
+pin the same semantics on the small topologies, and `trivance replay`
+reports the same accounting):
+
+1. `ladder_index` is the exact nearest-in-log-space index into the 32*2^k
+   tune ladder (integer midpoint arithmetic, O(1)), and maps every ladder
+   point to itself.
+2. Trace generators are deterministic (SplitMix64, fixed per-trace seeds),
+   clamp to the requested cap, and keep the distinct-size set small enough
+   to replay exactly (<= 3 sizes per mix row).
+3. Distilled winners at ladder sizes agree with a fresh per-size sweep
+   (first-minimum tie-breaks, matching Rust's min_by).
+4. Replay acceptance (ring-8, ring-9, and the replay default 8x8; every
+   built-in trace x scenario preset): the table-driven policy lands within
+   5% of the per-call oracle (measured worst 0.94%, ring-9
+   tensor-parallel), and on the mixed trace it beats every fixed-algorithm
+   policy strictly (worst margin on 8x8: bucket +14.3% vs table +0.0%,
+   straggler).
+"""
+
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+fails = []
+
+
+def chk(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+# --- 1. ladder_index: exact nearest-in-log-space, O(1) ---
+print("== ladder_index ==")
+ladder = tune_ladder(128 << 20)
+chk("ladder shape", ladder[0] == 32 and ladder[-1] == 128 << 20 and len(ladder) == 23)
+chk(
+    "ladder points map to themselves",
+    all(ladder_index(m, len(ladder)) == i for i, m in enumerate(ladder)),
+)
+# geometric midpoints: 32*2^k*sqrt(2) — below rounds down, above rounds up
+import math
+
+ok = True
+for k in range(len(ladder) - 1):
+    mid = ladder[k] * math.sqrt(2.0)
+    lo, hi = int(math.floor(mid)), int(math.ceil(mid))
+    if ladder_index(lo, len(ladder)) != k or ladder_index(hi, len(ladder)) != k + 1:
+        ok = False
+chk("midpoint boundaries exact", ok)
+chk("clamps", ladder_index(0, 5) == 0 and ladder_index(1 << 62, 5) == 4)
+
+# --- 2. trace generators ---
+print("== trace generators ==")
+for name in TRACE_NAMES:
+    a = gen_trace(name, 160, 128 << 20)
+    b = gen_trace(name, 160, 128 << 20)
+    chk(f"{name} deterministic", a == b)
+    chk(f"{name} in range", all(1 <= s <= 128 << 20 for s in a))
+    chk(
+        f"{name} distinct bounded",
+        len(set(a)) <= 3 * len(TRACE_MIX[name]),
+        f"{len(set(a))} distinct",
+    )
+    capped = gen_trace(name, 160, 256 << 10)
+    chk(f"{name} cap respected", max(capped) <= 256 << 10)
+mixed = gen_trace("mixed", 160, 128 << 20)
+chk("mixed spans both regimes", min(mixed) <= 1024 and max(mixed) >= 8 << 20)
+
+# --- 3. distilled winners == fresh sweep winners ---
+print("== distillation vs fresh sweep ==")
+for dims in [[9], [3, 3]]:
+    t = Torus(dims)
+    lad = tune_ladder(4 << 20)
+    for sc in SCENARIO_NAMES:
+        model = scenario_model(sc, t)
+        wins = distill_winners(t, model, lad, P)
+        built = build_variant_plans(t, model)
+        fresh = [winner_at(built, m, P)[:2] for m in lad]
+        chk(f"winners {dims} {sc}", wins == fresh)
+
+# --- 4. replay acceptance ---
+print("== replay acceptance (<=5% regret; mixed beats every fixed) ==")
+worst_regret = (0.0, "")
+for dims in [[8], [9], [8, 8]]:
+    t = Torus(dims)
+    lad = tune_ladder(128 << 20)
+    winners = {}
+    for sc in SCENARIO_NAMES:
+        winners[sc] = distill_winners(t, scenario_model(sc, t), lad, P)
+    for trace in TRACE_NAMES:
+        sizes = gen_trace(trace, 160, 128 << 20)
+        for sc in SCENARIO_NAMES:
+            totals = replay_totals(
+                t, scenario_model(sc, t), sizes, winners[sc], lad, P
+            )
+            oracle = totals["oracle"]
+            regret = totals["table"] / oracle - 1.0
+            if regret > worst_regret[0]:
+                worst_regret = (regret, f"{dims} {trace} {sc}")
+            chk(
+                f"regret {dims} {trace} {sc}",
+                regret <= 0.05,
+                f"table +{regret * 100:.2f}% vs oracle",
+            )
+            if trace == "mixed":
+                fixed = {k[6:]: v for k, v in totals.items() if k.startswith("fixed:")}
+                beaten = all(totals["table"] < v for v in fixed.values())
+                margin = min(v / oracle - 1.0 for v in fixed.values())
+                chk(
+                    f"mixed strict-beat {dims} {sc}",
+                    beaten,
+                    f"best fixed +{margin * 100:.2f}%",
+                )
+print(f"worst table regret: +{worst_regret[0] * 100:.2f}% ({worst_regret[1]})")
+
+print()
+if fails:
+    print(f"{len(fails)} FAILURES: {fails}")
+    sys.exit(1)
+print("tuner eval: all asserted bounds hold")

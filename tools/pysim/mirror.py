@@ -1275,6 +1275,185 @@ def simulate_packet_batched(plan, m_bytes, params, mtu):
     return completion, events
 
 
+# ------------------------------------------------------------ tuner mirror
+# Mirror of rust/src/tuner/{table,workload}.rs: the decision-table math
+# (ladder indexing, winner distillation, trace generation, replay policy
+# accounting). Keep seeds, weighted draws, and tie-breaks in lockstep.
+
+STRAGGLER_SEED = 0x5EED0001
+FAULTY_SEED = 0x5EED0002
+SCENARIO_NAMES = ["uniform", "hetero-dims", "straggler", "faulty"]
+
+
+def scenario_model(name, torus):
+    """Mirror of harness::scenarios presets (same seeds/parameters)."""
+    if name == "uniform":
+        return NetModel.uniform(torus)
+    if name == "hetero-dims":
+        return NetModel.hetero_dims(torus, [1.0 / (1 << d) for d in range(torus.ndims())])
+    if name == "straggler":
+        return NetModel.straggler(torus, 2, 4.0, STRAGGLER_SEED)
+    if name == "faulty":
+        return NetModel.faulty(torus, 1, FAULTY_SEED)
+    raise ValueError(name)
+
+
+def size_ladder(max_bytes):
+    v, m = [], 32
+    while m <= max_bytes:
+        v.append(m)
+        m *= 4
+    return v
+
+
+def tune_ladder(max_bytes):
+    """The tuner's distillation ladder: 32*2^k — twice as dense as the
+    paper's x4 sweep axis, so a size landing between sweep points is never
+    more than a quarter-decade from the winner the table stored."""
+    v, m = [], 32
+    while m <= max_bytes:
+        v.append(m)
+        m *= 2
+    return v
+
+
+def ladder_index(nbytes, n):
+    """O(1) nearest-in-log-space index into the 32*2^k tune ladder:
+    boundaries sit at the geometric midpoints 32*2^k*sqrt(2), tested with
+    pure integer arithmetic (2*b^2 vs 2^(11+2k); Rust squares in u128 and
+    folds the doubling into the exponent so the full u64 size range —
+    u64::MAX included — indexes exactly). Mirror of
+    tuner::table::ladder_index."""
+    b = max(nbytes, 1)
+    l = (b * b).bit_length()  # floor(log2(2 b^2)) = floor(log2 b^2) + 1
+    idx = 0 if l < 10 else (l - 10) // 2
+    return min(idx, n - 1)
+
+
+def completion_key(v):
+    return float("inf") if v != v else v
+
+
+def build_variant_plans(torus, model, algos=None):
+    """plans[algo] = [(variant, Plan), ...] for every supported algo, in
+    registry order (mirrors harness::sweep::build_all + scenario plans)."""
+    out = []
+    for algo in algos or ALGOS:
+        vs = []
+        for variant in VARIANTS:
+            b = build(algo, variant, torus)
+            if b is not None:
+                vs.append((variant, Plan(b.net, torus, model)))
+        if vs:
+            out.append((algo, vs))
+    return out
+
+
+def best_variant(plans, m, params):
+    """(completion, variant) of the best variant — first minimum, matching
+    Rust's min_by over Variant::ALL order."""
+    best = None
+    for variant, plan in plans:
+        c, _ = simulate_flow(plan, m, params)
+        if best is None or completion_key(c) < completion_key(best[0]):
+            best = (c, variant)
+    return best
+
+
+def winner_at(built, m, params):
+    """(algo, variant, completion): first-minimum across algos of the
+    best-variant completion (mirrors Sweep::winners tie-break)."""
+    win = None
+    for algo, plans in built:
+        c, v = best_variant(plans, m, params)
+        if win is None or completion_key(c) < completion_key(win[2]):
+            win = (algo, v, c)
+    return win
+
+
+def distill_winners(torus, model, sizes, params, algos=None):
+    """Per-ladder-size (algo, variant) winners — one DecisionTable row."""
+    built = build_variant_plans(torus, model, algos)
+    return [winner_at(built, m, params)[:2] for m in sizes]
+
+
+# --- workload traces (tuner::workload) ---
+
+TRACE_SEEDS = {"data-parallel": 0x7A0E0001, "tensor-parallel": 0x7A0E0002, "mixed": 0x7A0E0003}
+TRACE_MIX = {
+    "data-parallel": [(4 << 20, 2), (16 << 20, 3), (32 << 20, 3), (64 << 20, 2)],
+    "tensor-parallel": [(64 << 10, 2), (256 << 10, 3), (1 << 20, 3), (4 << 20, 2)],
+    "mixed": [
+        (32, 3),
+        (512, 3),
+        (8 << 10, 3),
+        (64 << 10, 2),
+        (1 << 20, 2),
+        (16 << 20, 1),
+        (64 << 20, 1),
+    ],
+}
+TRACE_NAMES = ["data-parallel", "tensor-parallel", "mixed"]
+
+
+def gen_trace(name, calls, max_bytes):
+    """Deterministic synthetic trace: weighted base-size draw + x{3/4, 1,
+    5/4} jitter, clamped to max_bytes. Mirror of tuner::workload::generate
+    (same SplitMix64 draw order: weight then jitter)."""
+    mix = TRACE_MIX[name]
+    total_w = sum(w for _, w in mix)
+    rng = SplitMix64(TRACE_SEEDS[name])
+    sizes = []
+    for _ in range(calls):
+        w = rng.below(total_w)
+        acc = 0
+        base = mix[-1][0]
+        for b, wt in mix:
+            acc += wt
+            if w < acc:
+                base = b
+                break
+        j = rng.below(3)  # 0,1,2 -> x3/4, x1, x5/4
+        size = base * (3 + j) // 4
+        size = max(1, min(size, max_bytes))
+        sizes.append(size)
+    return sizes
+
+
+def replay_totals(torus, model, sizes, table_winners, ladder_sizes, params, algos=None):
+    """Total completion per policy over a trace. Returns dict:
+    {"oracle": t, "table": t, "fixed:<algo>": t}. `table_winners` is the
+    distilled per-ladder-size (algo, variant) list for this scenario."""
+    built = build_variant_plans(torus, model, algos)
+    distinct = sorted(set(sizes))
+    counts = {s: sizes.count(s) for s in distinct}
+    comp = {}  # (algo, variant, size) -> completion
+    for algo, plans in built:
+        for variant, plan in plans:
+            for s in distinct:
+                comp[(algo, variant, s)] = simulate_flow(plan, s, params)[0]
+    totals = {"oracle": 0.0, "table": 0.0}
+    for algo, plans in built:
+        totals["fixed:" + algo] = 0.0
+    for s in distinct:
+        cnt = counts[s]
+        per_algo_best = {}
+        for algo, plans in built:
+            best = None
+            for variant, _ in plans:
+                c = comp[(algo, variant, s)]
+                if best is None or completion_key(c) < completion_key(best):
+                    best = c
+            per_algo_best[algo] = best
+            totals["fixed:" + algo] += cnt * best
+        totals["oracle"] += cnt * min(
+            (per_algo_best[a] for a, _ in built), key=completion_key
+        )
+        wa, wv = table_winners[ladder_index(s, len(ladder_sizes))]
+        totals["table"] += cnt * comp[(wa, wv, s)]
+    return totals
+
+
 # ------------------------------------------------------------ registry sweep
 
 
