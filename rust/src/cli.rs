@@ -133,13 +133,13 @@ USAGE:
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
   trivance scenarios [--topo 4x4x4] [--quick] [--max-size 4MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
-                    [--no-plan-cache]
+                    [--no-plan-cache] [--static-only]
   trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
                     [--no-plan-cache] [--no-scenarios]
   trivance tune     [--topo 8x8]... [--quick] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
-                    [--out tuner_table.json] [--no-plan-cache]
+                    [--out tuner_table.json] [--no-plan-cache] [--dynamic]
   trivance recommend --topo 8x8 --size 1MiB [--scenario uniform]
                     [--table tuner_table.json]
   trivance replay   [--topo 8x8] [--quick] [--calls 160] [--table tuner_table.json]
@@ -151,10 +151,15 @@ USAGE:
   trivance optimality --topo 81
   trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
 
-scenarios sweeps the registry under named network-model presets (uniform /
-hetero-dims / straggler / faulty) and renders per-scenario tables relative
-to Trivance; bench-sweep includes the same presets as per-scenario rows in
-BENCH_sweep.json (schema v2) unless --no-scenarios.
+scenarios sweeps the registry under named network-model presets — the four
+static ones (uniform / hetero-dims / straggler / faulty) plus the dynamic
+family (flap / brownout / mid-fault-detour / mid-fault-rewrite: links that
+fail and recover mid-collective, asymmetric brownouts, and a permanent
+mid-collective link death answered by detour routing vs fault-aware
+schedule rewriting) — and renders per-scenario tables relative to Trivance
+plus a rewrite-vs-detour comparison; --static-only restricts to the four
+static presets. bench-sweep includes the static presets as per-scenario
+rows in BENCH_sweep.json (schema v2) unless --no-scenarios.
 
 tune distills the same scenario sweeps into a decision table (per-(topo,
 scenario) size-ladder winners, fingerprinted against the network model and
@@ -163,7 +168,11 @@ right now" from that table in O(1); replay runs the built-in workload
 traces (data-parallel / tensor-parallel / mixed) under every preset and
 scores table-driven selection against the per-call oracle and every
 fixed-algorithm baseline. Without --table, replay tunes its topology
-in-memory first.
+in-memory first. tune --dynamic additionally tunes the dynamic presets
+(tables carry a timeline fingerprint per row, so a static-tuned table is
+rejected as stale for a dynamic lookup and vice versa); recommend --scenario
+accepts the dynamic preset names and sizes above the tuned ladder are
+refused (OutOfRange) instead of extrapolated.
 
 --threads 0 (default) uses every core; sweep results are identical for any
 thread count. Simulation plans are shared process-wide via a cache keyed by
@@ -270,7 +279,7 @@ fn figures(args: &Args) -> Result<(), String> {
 /// hetero-dims / straggler / faulty) and render per-scenario tables
 /// relative to Trivance.
 fn scenarios_cmd(args: &Args) -> Result<(), String> {
-    use crate::harness::scenarios::{presets, run_scenarios};
+    use crate::harness::scenarios::{all_presets, presets, run_scenarios};
     use crate::harness::sweep::size_ladder;
     let quick = args.has("quick");
     let torus = match args.get("topo") {
@@ -288,16 +297,19 @@ fn scenarios_cmd(args: &Args) -> Result<(), String> {
     let params = net_params(args)?;
     let mode = parse_mode(args)?;
     let sizes = size_ladder(max);
+    let scenario_set = if args.has("static-only") { presets() } else { all_presets() };
 
     eprintln!(
-        "[scenarios] {:?} ({} nodes), {} sizes up to {}, 4 presets ...",
+        "[scenarios] {:?} ({} nodes), {} sizes up to {}, {} presets ...",
         torus.dims(),
         torus.n(),
         sizes.len(),
         fmt::bytes(max),
+        scenario_set.len(),
     );
     let t0 = std::time::Instant::now();
-    let sweep = run_scenarios(&torus, &Algo::ALL, &sizes, &params, &presets(), threads, mode);
+    let sweep =
+        run_scenarios(&torus, &Algo::ALL, &sizes, &params, &scenario_set, threads, mode)?;
     println!(
         "{}",
         sweep.render(&format!(
@@ -345,7 +357,15 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
         None
     } else {
         eprintln!("[bench-sweep] scenario presets ...");
-        Some(run_scenarios(&torus, &Algo::ALL, &sizes, &params, &presets(), threads, SimMode::Flow))
+        Some(run_scenarios(
+            &torus,
+            &Algo::ALL,
+            &sizes,
+            &params,
+            &presets(),
+            threads,
+            SimMode::Flow,
+        )?)
     };
     let wall = t0.elapsed().as_secs_f64();
     write_bench_json(out, &sweep, &timing, scenario_sweep.as_ref())
@@ -363,7 +383,7 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
 /// Distill scenario sweeps over one or more topologies into a decision
 /// table and write it as JSON (`trivance tune`).
 fn tune_cmd(args: &Args) -> Result<(), String> {
-    use crate::harness::scenarios::presets;
+    use crate::harness::scenarios::{all_presets, presets};
     use crate::tuner::{tune, tune_ladder};
     let quick = args.has("quick");
     let topo_flags = args.getall("topo");
@@ -395,6 +415,7 @@ fn tune_cmd(args: &Args) -> Result<(), String> {
     let params = net_params(args)?;
     let mode = parse_mode(args)?;
     let out = args.get("out").unwrap_or("tuner_table.json");
+    let scenario_set = if args.has("dynamic") { all_presets() } else { presets() };
 
     eprintln!(
         "[tune] {} topolog{}, {} ladder sizes up to {}, {} presets ...",
@@ -402,10 +423,10 @@ fn tune_cmd(args: &Args) -> Result<(), String> {
         if topos.len() == 1 { "y" } else { "ies" },
         tune_ladder(max).len(),
         fmt::bytes(max),
-        presets().len(),
+        scenario_set.len(),
     );
     let t0 = std::time::Instant::now();
-    let table = tune(&topos, &presets(), max, &params, threads, mode);
+    let table = tune(&topos, &scenario_set, max, &params, threads, mode)?;
     std::fs::write(out, table.to_json()).map_err(|e| format!("writing {out}: {e}"))?;
     println!("{}", table.render());
     println!("wrote {out}; done in {:.1}s; {}", t0.elapsed().as_secs_f64(), plan_cache_stats());
@@ -414,7 +435,7 @@ fn tune_cmd(args: &Args) -> Result<(), String> {
 
 /// O(1) lookup into a tuned decision table (`trivance recommend`).
 fn recommend_cmd(args: &Args) -> Result<(), String> {
-    use crate::harness::scenarios::presets;
+    use crate::harness::scenarios::all_presets;
     use crate::tuner::DecisionTable;
     let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
     let bytes = args
@@ -427,25 +448,28 @@ fn recommend_cmd(args: &Args) -> Result<(), String> {
     let text = std::fs::read_to_string(path)
         .map_err(|e| format!("reading {path}: {e} — run `trivance tune` first"))?;
     let table = DecisionTable::from_json(&text)?;
-    let scenario = presets()
+    let scenario = all_presets()
         .into_iter()
         .find(|s| s.name == scenario_name)
         .ok_or_else(|| {
             format!(
                 "unknown --scenario {scenario_name:?} (known: {})",
-                presets().iter().map(|s| s.name.clone()).collect::<Vec<_>>().join(", ")
+                all_presets().iter().map(|s| s.name.clone()).collect::<Vec<_>>().join(", ")
             )
         })?;
     let model = scenario.model(&torus);
-    let rec = table.recommend(torus.dims(), &model, bytes).map_err(|e| e.to_string())?;
+    let rec = table
+        .recommend_dyn(torus.dims(), &model, scenario.dyn_fingerprint(&torus), bytes)
+        .map_err(|e| e.to_string())?;
     println!(
-        "{}-{} for {} on {:?} (scenario {}, nearest tuned size {}, tuned at {:.0} Gb/s / α {:.2} µs)",
+        "{}-{} for {} on {:?} (scenario {}, nearest tuned size {}{}, tuned at {:.0} Gb/s / α {:.2} µs)",
         rec.algo.label(),
         rec.variant.label(),
         fmt::bytes(bytes),
         torus.dims(),
         rec.scenario,
         fmt::bytes(rec.table_bytes),
+        if rec.clamped { ", clamped to the 32 B latency floor" } else { "" },
         table.params.link_bw_bps / 1e9,
         table.params.alpha_s * 1e6,
     );
@@ -488,7 +512,7 @@ fn replay_cmd(args: &Args) -> Result<(), String> {
         None => {
             let max = if quick { 256 << 10 } else { 128 << 20 };
             eprintln!("[replay] no --table given: tuning {:?} in-memory first ...", torus.dims());
-            tune(&[torus.clone()], &scenarios, max, &params, threads, mode)
+            tune(&[torus.clone()], &scenarios, max, &params, threads, mode)?
         }
     };
     // Cap traces at the table's tuned range so every replayed size has a

@@ -136,6 +136,24 @@ pub fn eq1_with_hops_model(stats: &ScheduleStats, m_bytes: u64, p: &NetParams) -
     eq1_completion_time(stats, m_bytes, p) + hop
 }
 
+/// Eq. 1 + hop bounds of a collective under a time-varying fabric: apply
+/// [`eq1_with_hops_model`] to the
+/// [`crate::schedule::analysis::analyze_timeline_envelope`] pair. Returns
+/// `(best, worst)` — the true dynamic cost lies between them (each degraded
+/// window covers only part of the collective's lifetime), which is the
+/// analytic sanity anchor for the timeline simulators. Stall time of down
+/// windows is *not* in the bound (module docs of the envelope).
+pub fn eq1_envelope(
+    envelope: &(ScheduleStats, ScheduleStats),
+    m_bytes: u64,
+    p: &NetParams,
+) -> (f64, f64) {
+    (
+        eq1_with_hops_model(&envelope.0, m_bytes, p),
+        eq1_with_hops_model(&envelope.1, m_bytes, p),
+    )
+}
+
 /// Measured optimality factors of a schedule (Tables 1 and 2 definitions):
 /// Λ relative to ⌈log₃ n⌉ steps, Δ relative to 2m transmitted per node, Θ
 /// relative to m·β/D transmission delay.
@@ -265,6 +283,75 @@ mod tests {
         // every step's bottleneck sits on a 4x-slower link: tx scales by 4
         let expect = 2.0 * p.alpha_s + 4.0 * (fast - 2.0 * p.alpha_s);
         assert!((slow - expect).abs() < expect * 1e-9, "{slow} vs {expect}");
+    }
+
+    #[test]
+    fn eq1_envelope_brackets_the_dynamic_simulation() {
+        // single neighbor message with a mid-serialization 2x brownout
+        // window: the DES under the timeline must land strictly inside the
+        // envelope's (best, worst) Eq. 1 + hops bracket — in both
+        // directions (degrade-then-recover AND recover-from-degraded).
+        use crate::net::{Epoch, LinkClass, Mutation, NetModel, Timeline};
+        use crate::schedule::analysis::analyze_timeline_envelope;
+        use crate::schedule::{Kind, Piece, RouteHint, Schedule, Send};
+        use crate::sim::{simulate_plan_timeline, SimMode, SimPlan, SimScratch};
+        let n = 4u32;
+        let t = crate::topology::Torus::ring(n);
+        let mut s = Schedule::new("one", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            Send {
+                to: 1,
+                pieces: vec![Piece {
+                    blocks: crate::blockset::BlockSet::full(n),
+                    contrib: crate::blockset::BlockSet::singleton(0, n),
+                    kind: Kind::Reduce,
+                }],
+                route: RouteHint::Minimal,
+            },
+        );
+        let p = NetParams::default();
+        let m = 1u64 << 20;
+        let ser = m as f64 * p.beta_per_byte();
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        // pristine base, degrade mid-flight then recover
+        let base = NetModel::uniform(&t);
+        let tl = Timeline::new(vec![
+            Epoch {
+                t: p.alpha_s + 0.25 * ser,
+                mutations: vec![Mutation::SetClass {
+                    link: l as u32,
+                    class: LinkClass::slowdown(2.0),
+                }],
+            },
+            Epoch {
+                t: p.alpha_s + 0.5 * ser,
+                mutations: vec![Mutation::SetClass { link: l as u32, class: *base.class(l) }],
+            },
+        ]);
+        let plan = SimPlan::build_with_model(&s, &base);
+        let scratch = SimScratch::new(&plan, &p);
+        let dyn_c =
+            simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl).completion_s;
+        let env = analyze_timeline_envelope(&s, &base, &tl).unwrap();
+        let (lo, hi) = eq1_envelope(&env, m, &p);
+        assert!(lo < dyn_c && dyn_c < hi, "dynamic {dyn_c} outside envelope [{lo}, {hi}]");
+        // recovery direction: degraded base, timeline upgrades the link —
+        // the best side must fold the upgrade in or the bracket breaks
+        let mut degraded = NetModel::uniform(&t);
+        degraded.set_class(l, LinkClass::slowdown(2.0));
+        let tl = Timeline::new(vec![Epoch {
+            t: p.alpha_s + 0.25 * 2.0 * ser,
+            mutations: vec![Mutation::SetClass { link: l as u32, class: LinkClass::UNIFORM }],
+        }]);
+        let plan = SimPlan::build_with_model(&s, &degraded);
+        let scratch = SimScratch::new(&plan, &p);
+        let dyn_c =
+            simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl).completion_s;
+        let env = analyze_timeline_envelope(&s, &degraded, &tl).unwrap();
+        let (lo, hi) = eq1_envelope(&env, m, &p);
+        assert!(lo < dyn_c && dyn_c < hi, "recovery {dyn_c} outside [{lo}, {hi}]");
     }
 
     #[test]

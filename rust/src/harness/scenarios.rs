@@ -28,21 +28,27 @@
 
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
-use crate::net::NetModel;
-use crate::sim::{PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
-use crate::topology::Torus;
+use crate::net::{pick_links, Epoch, LinkClass, Mutation, NetModel, Timeline};
+use crate::schedule::rewrite::{rewrite_for_fault, Fault};
+use crate::sim::{simulate_plan_timeline, PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
+use crate::topology::{Link, Torus};
 use crate::util::fmt;
 use std::sync::Arc;
 
-use super::sweep::{best_existing_rel, best_point_of, eval_grid, render_points_table, BestPoint};
+use super::sweep::{
+    best_existing_rel, completion_key, eval_grid, render_points_table, BestPoint,
+};
 
 /// Seed behind the deterministic straggler link picks (mirrored in
 /// `tools/pysim`).
 pub const STRAGGLER_SEED: u64 = 0x5EED_0001;
 /// Seed behind the deterministic faulty link picks.
 pub const FAULTY_SEED: u64 = 0x5EED_0002;
+/// Seed behind the deterministic flap link pick (dynamic preset family).
+pub const FLAP_SEED: u64 = 0x5EED_0003;
 
-/// How a scenario derives its [`NetModel`] from the topology.
+/// How a scenario derives its [`NetModel`] (and, for the dynamic family,
+/// its [`Timeline`] / [`Fault`]) from the topology.
 #[derive(Clone, Debug)]
 pub enum ScenarioKind {
     /// The paper's homogeneous fabric.
@@ -54,6 +60,24 @@ pub enum ScenarioKind {
     /// `k` deterministic links down (selection keeps the graph strongly
     /// connected; traffic detours).
     Faulty { k: usize },
+    /// **Dynamic**: one deterministic link goes down mid-collective and
+    /// recovers — traffic over it stalls and resumes (timeline window
+    /// `[α + mβ/4, α + 9mβ/4)`, scaled to the message so every sweep size
+    /// sees a comparable outage fraction).
+    Flap,
+    /// **Dynamic**: every `+1`-direction link of dimension 0 browns out to
+    /// `0.25×` bandwidth for the serialization phase (`[α, α + 4mβ)`) while
+    /// the `-1` direction stays clean — the *time-windowed* sibling of the
+    /// static [`NetModel::asymmetric_dims`] (up ≠ down) fabric.
+    Brownout,
+    /// **Dynamic**: one physical cable — both directed links of the
+    /// `faulty` preset's seeded edge — dies for good before step 1.
+    /// `rewrite = false` keeps the schedule and detour-routes the
+    /// survivors' messages ([`SimPlan::build_faulted`]); `rewrite = true`
+    /// rewrites the remaining steps' send/reduce sets instead
+    /// ([`crate::schedule::rewrite`]). Both rows in one table = the
+    /// rewrite-vs-detour comparison.
+    MidFault { rewrite: bool },
 }
 
 /// A named network condition to sweep the registry under.
@@ -65,7 +89,9 @@ pub struct Scenario {
 }
 
 impl Scenario {
-    /// Instantiate the scenario's network model on `torus`.
+    /// Instantiate the scenario's *base* network model on `torus` (the
+    /// fabric at t = 0; dynamic presets start pristine and degrade through
+    /// their timeline or fault).
     pub fn model(&self, torus: &Torus) -> NetModel {
         match &self.kind {
             ScenarioKind::Uniform => NetModel::uniform(torus),
@@ -78,11 +104,135 @@ impl Scenario {
                 NetModel::straggler(torus, *k, *factor, STRAGGLER_SEED)
             }
             ScenarioKind::Faulty { k } => NetModel::faulty(torus, *k, FAULTY_SEED),
+            ScenarioKind::Flap
+            | ScenarioKind::Brownout
+            | ScenarioKind::MidFault { .. } => NetModel::uniform(torus),
         }
+    }
+
+    /// The scenario's capacity [`Timeline`] for an `m_bytes` collective
+    /// (empty for static presets and for mid-fault, whose failure is a
+    /// schedule-level event). Windows scale with `m·β` so every sweep size
+    /// sees a comparable degradation fraction; mirrored in `tools/pysim`.
+    pub fn timeline(&self, torus: &Torus, params: &NetParams, m_bytes: u64) -> Timeline {
+        let ser = m_bytes as f64 * params.beta_per_byte();
+        match &self.kind {
+            ScenarioKind::Flap => {
+                let l = pick_links(torus, 1, FLAP_SEED, false)[0] as u32;
+                // early-opening window: bandwidth-optimal variants finish in
+                // well under m·β of serialization, so an outage starting at
+                // α + m·β would miss them entirely (measured in pysim)
+                let t0 = params.alpha_s + 0.25 * ser;
+                let t1 = t0 + 2.0 * ser;
+                if t1 <= t0 {
+                    return Timeline::empty(); // zero-byte collective: no window
+                }
+                Timeline::new(vec![
+                    Epoch { t: t0, mutations: vec![Mutation::SetDown { link: l, down: true }] },
+                    Epoch { t: t1, mutations: vec![Mutation::SetDown { link: l, down: false }] },
+                ])
+            }
+            ScenarioKind::Brownout => {
+                if ser <= 0.0 {
+                    return Timeline::empty();
+                }
+                let class = LinkClass::new(0.25, 1.0, 1.0);
+                let links: Vec<u32> = (0..torus.n())
+                    .map(|node| torus.link_index(Link { node, dim: 0, dir: 1 }) as u32)
+                    .collect();
+                let degrade = links
+                    .iter()
+                    .map(|&link| Mutation::SetClass { link, class })
+                    .collect();
+                let recover = links
+                    .iter()
+                    .map(|&link| Mutation::SetClass { link, class: LinkClass::UNIFORM })
+                    .collect();
+                Timeline::new(vec![
+                    Epoch { t: params.alpha_s, mutations: degrade },
+                    Epoch { t: params.alpha_s + 4.0 * ser, mutations: recover },
+                ])
+            }
+            _ => Timeline::empty(),
+        }
+    }
+
+    /// The scenario's permanent [`Fault`], if it is a mid-fault preset:
+    /// one physical **cable** dies — both directed links of the (seeded)
+    /// `faulty`-preset edge. A real cable failure takes out both
+    /// directions, and it is the regime where the rewrite-vs-detour
+    /// comparison is interesting: with a bidirectional cut every crossing
+    /// message must detour the long way in *both* directions, colliding
+    /// with the steps' own traffic.
+    pub fn fault(&self, torus: &Torus) -> Option<Fault> {
+        match self.kind {
+            ScenarioKind::MidFault { .. } => {
+                let l = torus.link_at(pick_links(torus, 1, FAULTY_SEED, true)[0]);
+                let r = torus.reverse_link(l);
+                Some(Fault {
+                    step: 1,
+                    down_links: vec![torus.link_index(l), torus.link_index(r)],
+                    dead_nodes: Vec::new(),
+                })
+            }
+            _ => None,
+        }
+    }
+
+    /// Is this one of the dynamic (time-varying / mid-fault) presets?
+    pub fn is_dynamic(&self) -> bool {
+        matches!(
+            self.kind,
+            ScenarioKind::Flap | ScenarioKind::Brownout | ScenarioKind::MidFault { .. }
+        )
+    }
+
+    /// Identity fingerprint of the scenario's *dynamic* condition on this
+    /// topology — `0` for static presets. Stored in the tuner's
+    /// [`crate::tuner::DecisionTable`] rows so a table tuned on static
+    /// fabrics rejects a dynamic lookup (timeline-stale) and vice versa,
+    /// and mixed into [`PlanKey::timeline_fp`] for fault-routed plans.
+    ///
+    /// Timeline presets hash their **canonical mutation schedule** (the
+    /// timeline instantiated at a fixed reference size under the default
+    /// parameters), not just the preset tag: editing a window coefficient
+    /// or degradation scale changes the fingerprint, so a table tuned
+    /// before the edit is rejected as stale instead of silently served.
+    pub fn dyn_fingerprint(&self, torus: &Torus) -> u64 {
+        // Reference size for the canonical timeline hash. Window *times*
+        // scale linearly with m·β, so any fixed size captures every
+        // coefficient; 1 MiB keeps the epoch times well away from float
+        // denormals.
+        const CANONICAL_SIZE: u64 = 1 << 20;
+        let mut h = crate::util::Fnv::new();
+        match self.kind {
+            ScenarioKind::Uniform
+            | ScenarioKind::HeteroDims
+            | ScenarioKind::Straggler { .. }
+            | ScenarioKind::Faulty { .. } => return 0,
+            ScenarioKind::Flap => {
+                h.mix(1);
+                h.mix(
+                    self.timeline(torus, &NetParams::default(), CANONICAL_SIZE).fingerprint(),
+                );
+            }
+            ScenarioKind::Brownout => {
+                h.mix(2);
+                h.mix(
+                    self.timeline(torus, &NetParams::default(), CANONICAL_SIZE).fingerprint(),
+                );
+            }
+            ScenarioKind::MidFault { rewrite } => {
+                h.mix(3);
+                h.mix(rewrite as u64);
+                h.mix(self.fault(torus).expect("mid-fault has a fault").fingerprint());
+            }
+        }
+        h.finish_nonzero()
     }
 }
 
-/// The four canonical presets (module docs).
+/// The four canonical static presets (module docs).
 pub fn presets() -> Vec<Scenario> {
     vec![
         Scenario {
@@ -106,6 +256,43 @@ pub fn presets() -> Vec<Scenario> {
             kind: ScenarioKind::Faulty { k: 1 },
         },
     ]
+}
+
+/// The dynamic preset family: time-varying fabrics and mid-collective
+/// faults (module docs of [`crate::net::timeline`] and
+/// [`crate::schedule::rewrite`]).
+pub fn dynamic_presets() -> Vec<Scenario> {
+    vec![
+        Scenario {
+            name: "flap".into(),
+            desc: "1 link down mid-collective, then recovers (traffic stalls)".into(),
+            kind: ScenarioKind::Flap,
+        },
+        Scenario {
+            name: "brownout".into(),
+            desc: "dim-0 +dir links at 0.25x for the serialization phase (asymmetric)".into(),
+            kind: ScenarioKind::Brownout,
+        },
+        Scenario {
+            name: "mid-fault-detour".into(),
+            desc: "1 cable (both directions) dies before step 1; schedule kept, traffic detoured"
+                .into(),
+            kind: ScenarioKind::MidFault { rewrite: false },
+        },
+        Scenario {
+            name: "mid-fault-rewrite".into(),
+            desc: "1 cable dies before step 1; remaining steps rewritten (shrink+substitute)"
+                .into(),
+            kind: ScenarioKind::MidFault { rewrite: true },
+        },
+    ]
+}
+
+/// Static + dynamic presets — what `trivance scenarios` sweeps by default.
+pub fn all_presets() -> Vec<Scenario> {
+    let mut v = presets();
+    v.extend(dynamic_presets());
+    v
 }
 
 /// Full scenario-sweep result: `points[scenario][size][algo]`, each cell
@@ -136,14 +323,22 @@ pub(crate) struct ScenarioPlans {
     pub scratches: Vec<Vec<Vec<SimScratch>>>,
 }
 
-/// Build the [`ScenarioPlans`] lattice for `models` on `torus` (see the
+/// Build the [`ScenarioPlans`] lattice for `scenarios` on `torus` (see the
 /// struct docs). Unsupported algorithms are skipped, as in the figures.
+/// Static and pure-timeline scenarios plan on their base model (a capacity
+/// timeline never changes routes, so e.g. `flap` *shares* the uniform
+/// plan); mid-fault scenarios plan through [`SimPlan::build_faulted`] —
+/// with the schedule first passed through
+/// [`crate::schedule::rewrite::rewrite_for_fault`] for the rewrite
+/// strategy — under a [`PlanKey`] carrying the fault/strategy fingerprint.
+/// Errs (instead of panicking mid-sweep) when a model partitions the
+/// fabric or a rewrite cannot recover.
 pub(crate) fn build_scenario_plans(
     torus: &Torus,
     algos: &[Algo],
-    models: &[NetModel],
+    scenarios: &[Scenario],
     params: &NetParams,
-) -> ScenarioPlans {
+) -> Result<ScenarioPlans, String> {
     let built: Vec<(Algo, Vec<BuiltCollective>)> = algos
         .iter()
         .filter_map(|&algo| {
@@ -155,26 +350,84 @@ pub(crate) fn build_scenario_plans(
         })
         .collect();
     let cache = PlanCache::global();
-    let plans: Vec<Vec<Vec<Arc<SimPlan>>>> = models
-        .iter()
-        .map(|model| {
-            let fp = model.fingerprint();
-            built
-                .iter()
-                .map(|(algo, variants)| {
-                    variants
-                        .iter()
-                        .map(|b| {
-                            cache.get_or_build(
-                                PlanKey::with_net_fp(*algo, b.variant, torus.dims(), fp),
-                                || SimPlan::build_with_model(&b.net, model),
-                            )
-                        })
-                        .collect()
-                })
-                .collect()
-        })
-        .collect();
+    let mut plans: Vec<Vec<Vec<Arc<SimPlan>>>> = Vec::with_capacity(scenarios.len());
+    for sc in scenarios {
+        let model = sc.model(torus);
+        let fp = model.fingerprint();
+        let fault = sc.fault(torus);
+        // scenario-level invariants, hoisted out of the (algo, variant)
+        // loop: the post-fault model clone and the dynamic fingerprint
+        // (whose MidFault arm re-runs the connectivity-checked link pick)
+        let post = fault.as_ref().map(|f| f.apply(&model));
+        let dyn_fp = sc.dyn_fingerprint(torus);
+        // a padded build under the rewrite strategy falls back to detour —
+        // its plan is byte-identical to the detour scenario's, so it must
+        // share that cache entry, not occupy a second one under the
+        // rewrite fingerprint
+        let detour_fp = match sc.kind {
+            ScenarioKind::MidFault { rewrite: true } => Scenario {
+                name: String::new(),
+                desc: String::new(),
+                kind: ScenarioKind::MidFault { rewrite: false },
+            }
+            .dyn_fingerprint(torus),
+            _ => dyn_fp,
+        };
+        let mut per_algo: Vec<Vec<Arc<SimPlan>>> = Vec::with_capacity(built.len());
+        for (algo, variants) in &built {
+            let mut per_variant: Vec<Arc<SimPlan>> = Vec::with_capacity(variants.len());
+            for b in variants {
+                let plan = match &fault {
+                    None => cache
+                        .try_get_or_build(
+                            PlanKey::with_net_fp(*algo, b.variant, torus.dims(), fp),
+                            || SimPlan::try_build_with_model(&b.net, &model),
+                        )
+                        .map_err(|e| {
+                            format!("scenario {:?} ({algo:?} {:?}): {e}", sc.name, b.variant)
+                        })?,
+                    Some(fault) => {
+                        let post = post.as_ref().expect("post model built with the fault");
+                        // Padded builds keep virtual contributor sets the
+                        // rewrite algebra cannot track — they fall back to
+                        // detour routing (rewrite == detour in the table,
+                        // sharing the detour plan's cache entry).
+                        let is_rewrite =
+                            matches!(sc.kind, ScenarioKind::MidFault { rewrite: true })
+                                && !b.padded;
+                        let key = PlanKey::with_fps(
+                            *algo,
+                            b.variant,
+                            torus.dims(),
+                            fp,
+                            if is_rewrite { dyn_fp } else { detour_fp },
+                        );
+                        cache
+                            .try_get_or_build(key, || -> Result<SimPlan, String> {
+                                let schedule = if is_rewrite {
+                                    rewrite_for_fault(&b.net, &model, fault)?
+                                } else {
+                                    b.net.clone()
+                                };
+                                SimPlan::build_faulted(
+                                    &schedule,
+                                    &model,
+                                    post,
+                                    fault.step as u32,
+                                )
+                                .map_err(|e| e.to_string())
+                            })
+                            .map_err(|e| {
+                                format!("scenario {:?} ({algo:?} {:?}): {e}", sc.name, b.variant)
+                            })?
+                    }
+                };
+                per_variant.push(plan);
+            }
+            per_algo.push(per_variant);
+        }
+        plans.push(per_algo);
+    }
     let scratches: Vec<Vec<Vec<SimScratch>>> = plans
         .iter()
         .map(|per_algo| {
@@ -184,11 +437,39 @@ pub(crate) fn build_scenario_plans(
                 .collect()
         })
         .collect();
-    ScenarioPlans { built, plans, scratches }
+    Ok(ScenarioPlans { built, plans, scratches })
+}
+
+/// The scenario grid's per-cell evaluation: simulate every variant under
+/// the scenario's timeline (empty = the exact static path) and keep the
+/// first minimum — the timeline-aware sibling of
+/// [`crate::harness::sweep::best_point_of`].
+fn best_point_dyn(
+    variants: &[BuiltCollective],
+    plans: &[Arc<SimPlan>],
+    scratches: &[SimScratch],
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+    timeline: &Timeline,
+) -> BestPoint {
+    variants
+        .iter()
+        .zip(plans)
+        .zip(scratches)
+        .map(|((b, plan), scratch)| BestPoint {
+            completion_s: simulate_plan_timeline(plan, scratch, m_bytes, params, mode, timeline)
+                .completion_s,
+            variant: b.variant,
+        })
+        .min_by(|a, b| completion_key(a.completion_s).total_cmp(&completion_key(b.completion_s)))
+        .expect("variant set is non-empty")
 }
 
 /// Sweep `scenarios × algos × sizes` on `torus` as one parallel task pool
 /// (module docs). Unsupported algorithms are skipped, as in the figures.
+/// Errs on a partitioned fabric or an unrecoverable rewrite instead of
+/// panicking mid-sweep (surfaced by the `scenarios` CLI).
 pub fn run_scenarios(
     torus: &Torus,
     algos: &[Algo],
@@ -197,44 +478,56 @@ pub fn run_scenarios(
     scenarios: &[Scenario],
     threads: usize,
     mode: SimMode,
-) -> ScenarioSweep {
+) -> Result<ScenarioSweep, String> {
     params.validate();
     // Per scenario: instantiate the model. A preset can degenerate to the
     // uniform model on some topologies (hetero-dims on a ring has nothing
     // to scale) — record that so the report says so instead of presenting
-    // a baseline copy as a degraded fabric.
+    // a baseline copy as a degraded fabric. Dynamic presets never
+    // degenerate: their degradation lives in the timeline/fault.
     let models: Vec<NetModel> = scenarios.iter().map(|sc| sc.model(torus)).collect();
     let degenerate: Vec<bool> = scenarios
         .iter()
         .zip(&models)
         .map(|(sc, model)| {
-            !matches!(sc.kind, ScenarioKind::Uniform) && model.is_uniform()
+            !matches!(sc.kind, ScenarioKind::Uniform)
+                && !sc.is_dynamic()
+                && model.is_uniform()
         })
         .collect();
     let ScenarioPlans { built, plans, scratches } =
-        build_scenario_plans(torus, algos, &models, params);
+        build_scenario_plans(torus, algos, scenarios, params)?;
 
     // One task per (scenario, size, algo) cell through the shared grid
-    // engine (sweep::eval_grid) — no private unflatten twin.
+    // engine (sweep::eval_grid) — no private unflatten twin. Timelines
+    // depend only on (scenario, size), so they are instantiated once per
+    // pair here instead of once per grid cell (the flap pick would
+    // otherwise re-run per algorithm); static cells get the empty timeline
+    // and take the exact static path.
+    let timelines: Vec<Vec<Timeline>> = scenarios
+        .iter()
+        .map(|sc| sizes.iter().map(|&m| sc.timeline(torus, params, m)).collect())
+        .collect();
     let points = eval_grid(scenarios.len(), sizes.len(), built.len(), threads, |ci, si, ai| {
-        best_point_of(
+        best_point_dyn(
             &built[ai].1,
             &plans[ci][ai],
             &scratches[ci][ai],
             sizes[si],
             params,
             mode,
+            &timelines[ci][si],
         )
     });
 
-    ScenarioSweep {
+    Ok(ScenarioSweep {
         torus: torus.clone(),
         sizes: sizes.to_vec(),
         algos: built.iter().map(|(a, _)| *a).collect(),
         scenarios: scenarios.to_vec(),
         degenerate,
         points,
-    }
+    })
 }
 
 impl ScenarioSweep {
@@ -285,6 +578,37 @@ impl ScenarioSweep {
         out.push_str("#### best existing approach relative to Trivance, per scenario\n\n");
         out.push_str(&t.render());
         out.push_str("\npositive = Trivance faster than every existing approach at that point\n");
+
+        // rewrite-vs-detour comparison when both mid-fault rows are present
+        let detour = self.scenarios.iter().position(|s| s.name == "mid-fault-detour");
+        let rewrite = self.scenarios.iter().position(|s| s.name == "mid-fault-rewrite");
+        if let (Some(di), Some(ri)) = (detour, rewrite) {
+            let mut t = fmt::Table::new(
+                std::iter::once("size".to_string())
+                    .chain(self.algos.iter().map(|a| format!("{} Δ%", a.label())))
+                    .collect::<Vec<_>>(),
+            );
+            for (si, &m) in self.sizes.iter().enumerate() {
+                let mut row = vec![fmt::bytes(m)];
+                for ai in 0..self.algos.len() {
+                    let rel = self.points[di][si][ai].completion_s
+                        / self.points[ri][si][ai].completion_s
+                        - 1.0;
+                    row.push(format!("{:+.1}%", rel * 100.0));
+                }
+                t.row(row);
+            }
+            out.push_str("\n#### fault-aware schedule rewriting vs detour-only routing (mid-fault)\n\n");
+            out.push_str(&t.render());
+            out.push_str(
+                "\npositive = rewriting the schedule beats keeping it and detouring. \
+                 Measured shape: rewriting wins where the remaining schedule re-crosses \
+                 the dead cable step after step (ring bucket-B: one blocked crossing per \
+                 neighbor step); for shallow schedules the single detour overlaps into \
+                 spare capacity and detour-in-place stays at parity or better. \
+                 Virtually-padded builds fall back to detour, showing +0.0%.\n",
+            );
+        }
         out
     }
 }
@@ -312,7 +636,7 @@ mod tests {
         let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket, Algo::Swing];
         let sizes = [4096u64, 256 << 10];
         let p = NetParams::default();
-        let sw = run_scenarios(&t, &algos, &sizes, &p, &presets(), 0, SimMode::Flow);
+        let sw = run_scenarios(&t, &algos, &sizes, &p, &presets(), 0, SimMode::Flow).unwrap();
         assert_eq!(sw.scenarios.len(), 4);
         assert!(sw.degenerate.iter().all(|&d| !d), "no preset degenerates on 3x3");
         assert_eq!(sw.points.len(), 4);
@@ -361,7 +685,8 @@ mod tests {
             &presets(),
             1,
             SimMode::Flow,
-        );
+        )
+        .unwrap();
         assert_eq!(sw.degenerate, [false, true, false, false]);
         assert_eq!(
             sw.points[1][0][0].completion_s.to_bits(),
@@ -372,13 +697,76 @@ mod tests {
     }
 
     #[test]
+    fn dynamic_presets_cover_the_family_and_degrade() {
+        let d = dynamic_presets();
+        let names: Vec<&str> = d.iter().map(|s| s.name.as_str()).collect();
+        assert_eq!(names, ["flap", "brownout", "mid-fault-detour", "mid-fault-rewrite"]);
+        let t = Torus::new(&[3, 3]);
+        let p = NetParams::default();
+        for sc in &d {
+            assert!(sc.is_dynamic());
+            assert!(sc.model(&t).is_uniform(), "{}: dynamic presets start pristine", sc.name);
+            assert_ne!(sc.dyn_fingerprint(&t), 0, "{}", sc.name);
+            // flap/brownout carry a timeline; mid-fault carries a fault
+            let has_tl = !sc.timeline(&t, &p, 256 << 10).is_empty();
+            let has_fault = sc.fault(&t).is_some();
+            assert!(has_tl ^ has_fault, "{}: exactly one dynamic mechanism", sc.name);
+        }
+        // distinct fingerprints across the family
+        for i in 0..d.len() {
+            for j in i + 1..d.len() {
+                assert_ne!(d[i].dyn_fingerprint(&t), d[j].dyn_fingerprint(&t));
+            }
+        }
+    }
+
+    #[test]
+    fn dynamic_sweep_runs_and_degrades_at_bandwidth_sizes() {
+        let t = Torus::new(&[3, 3]);
+        let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
+        let sizes = [4096u64, 1 << 20];
+        let p = NetParams::default();
+        let sw =
+            run_scenarios(&t, &algos, &sizes, &p, &all_presets(), 0, SimMode::Flow).unwrap();
+        assert_eq!(sw.scenarios.len(), 8);
+        assert!(sw.degenerate.iter().all(|&x| !x), "nothing degenerates on 3x3");
+        let uniform_ci = 0usize;
+        for (ci, sc) in sw.scenarios.iter().enumerate().skip(4) {
+            for si in 0..sizes.len() {
+                for ai in 0..sw.algos.len() {
+                    let dynamic = sw.points[ci][si][ai].completion_s;
+                    let base = sw.points[uniform_ci][si][ai].completion_s;
+                    assert!(
+                        dynamic >= base * (1.0 - 1e-9),
+                        "{} sped up ({si},{ai}): {dynamic} < {base}",
+                        sc.name
+                    );
+                }
+            }
+            // at 1 MiB every dynamic preset visibly degrades trivance
+            let ti = sw.algos.iter().position(|&a| a == Algo::Trivance).unwrap();
+            assert!(
+                sw.points[ci][1][ti].completion_s
+                    > sw.points[uniform_ci][1][ti].completion_s * 1.0001,
+                "{} had no effect at 1 MiB",
+                sc.name
+            );
+        }
+        let md = sw.render("dynamic test");
+        for needle in ["flap", "brownout", "mid-fault-detour", "mid-fault-rewrite",
+                       "rewriting vs detour"] {
+            assert!(md.contains(needle), "missing {needle} in\n{md}");
+        }
+    }
+
+    #[test]
     fn scenario_sweep_is_thread_count_invariant() {
         let t = Torus::ring(9);
         let algos = [Algo::Trivance, Algo::Bruck, Algo::Bucket];
         let sizes = [4096u64, 64 << 10];
         let p = NetParams::default();
-        let seq = run_scenarios(&t, &algos, &sizes, &p, &presets(), 1, SimMode::Flow);
-        let par4 = run_scenarios(&t, &algos, &sizes, &p, &presets(), 4, SimMode::Flow);
+        let seq = run_scenarios(&t, &algos, &sizes, &p, &presets(), 1, SimMode::Flow).unwrap();
+        let par4 = run_scenarios(&t, &algos, &sizes, &p, &presets(), 4, SimMode::Flow).unwrap();
         for ci in 0..seq.scenarios.len() {
             for si in 0..sizes.len() {
                 for ai in 0..seq.algos.len() {

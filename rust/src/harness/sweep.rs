@@ -599,7 +599,7 @@ mod tests {
         let sizes = [4096u64];
         let p = NetParams::default();
         let (s, timing) = run_sweep_timed(&t, &algos, &sizes, &p, 1);
-        let sc = run_scenarios(&t, &algos, &sizes, &p, &presets(), 1, SimMode::Flow);
+        let sc = run_scenarios(&t, &algos, &sizes, &p, &presets(), 1, SimMode::Flow).unwrap();
         let json = bench_json(&s, &timing, Some(&sc));
         for name in ["uniform", "hetero-dims", "straggler", "faulty"] {
             assert!(json.contains(&format!("\"name\": \"{name}\"")), "missing {name}");

@@ -7,9 +7,13 @@
 //!   routing, the network substrate all schedules execute on.
 //! * [`net`] — the heterogeneous per-link network model: a [`net::LinkClass`]
 //!   scale table (bandwidth / latency / processing relative to the base
-//!   [`cost::NetParams`]) plus a down set with deterministic detour routing.
-//!   The uniform model reproduces the paper's homogeneous fabric bit for
-//!   bit; named degradation presets live in [`harness::scenarios`].
+//!   [`cost::NetParams`]) plus a down set with deterministic detour routing,
+//!   and [`net::Timeline`] — deterministic *mid-collective* fabric mutations
+//!   (brownouts, flaps, asymmetric degradation) both simulator engines
+//!   honor. The uniform model (and the empty timeline) reproduces the
+//!   paper's homogeneous fabric bit for bit; named degradation presets —
+//!   static and dynamic — live in [`harness::scenarios`], and fault-aware
+//!   schedule rewriting in [`schedule::rewrite`].
 //! * [`blockset`] — cyclic interval arithmetic over the rank/block space.
 //! * [`schedule`] — the schedule IR (steps → sends → pieces), plus a static
 //!   validator that proves contributor-set disjointness and coverage for any

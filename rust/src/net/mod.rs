@@ -32,10 +32,37 @@
 //! deterministic straggler/faulty link picks and the BFS tie-breaks
 //! (neighbor order: dimension ascending, direction `+1` before `-1`).
 
+pub mod timeline;
+
+pub use timeline::{Epoch, Mutation, Timeline};
+
 use crate::schedule::RouteHint;
 use crate::topology::{Link, Torus};
 use crate::util::rng::SplitMix64;
 use std::collections::VecDeque;
+
+/// The down set disconnects `src` from `dst`: no route avoids it. Returned
+/// (not panicked) by [`NetModel::try_route_avoiding`] so a partitioned
+/// fabric surfaces as a clean error through plan building, analysis, the
+/// `faulty` preset, and the `scenarios` CLI instead of a panic mid-sweep.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Unreachable {
+    pub src: u32,
+    pub dst: u32,
+}
+
+impl std::fmt::Display for Unreachable {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "down links disconnect node {} from node {}: the fabric is partitioned \
+             (no route avoids the down set)",
+            self.src, self.dst
+        )
+    }
+}
+
+impl std::error::Error for Unreachable {}
 
 /// Per-link scale factors relative to the base [`crate::cost::NetParams`].
 /// `UNIFORM` (all `1.0`) reproduces the paper's homogeneous fabric exactly.
@@ -137,6 +164,26 @@ impl NetModel {
         m
     }
 
+    /// Asymmetric per-direction bandwidth (up ≠ down): every link along
+    /// dimension `d` gets `up_scale[d]` in the `+1` direction and
+    /// `down_scale[d]` in the `-1` direction. Models degraded cable
+    /// directions (a real failure mode the symmetric presets cannot
+    /// express); `up == down == 1.0` everywhere is the uniform fabric.
+    pub fn asymmetric_dims(torus: &Torus, up_scale: &[f64], down_scale: &[f64]) -> NetModel {
+        assert_eq!(up_scale.len(), torus.ndims(), "asymmetric_dims: one up scale per dim");
+        assert_eq!(down_scale.len(), torus.ndims(), "asymmetric_dims: one down scale per dim");
+        let mut m = NetModel::uniform(torus);
+        for node in 0..torus.n() {
+            for d in 0..torus.ndims() {
+                for (dir, s) in [(1i8, up_scale[d]), (-1, down_scale[d])] {
+                    let idx = torus.link_index(Link { node, dim: d as u8, dir });
+                    m.classes[idx] = LinkClass::new(s, 1.0, 1.0);
+                }
+            }
+        }
+        m
+    }
+
     /// `k` deterministic-random links taken down; the selection rejects any
     /// link whose removal would disconnect the directed link graph, so
     /// every pair stays routable.
@@ -211,34 +258,29 @@ impl NetModel {
         if self.is_uniform() {
             return 0;
         }
-        const FNV_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
-        const FNV_PRIME: u64 = 0x0000_0100_0000_01b3;
-        let mut h = FNV_OFFSET;
-        let mut mix = |v: u64| {
-            h ^= v;
-            h = h.wrapping_mul(FNV_PRIME);
-        };
+        let mut h = crate::util::Fnv::new();
         for &d in self.torus.dims() {
-            mix(d as u64);
+            h.mix(d as u64);
         }
         for c in &self.classes {
-            mix(c.bw_scale.to_bits());
-            mix(c.lat_scale.to_bits());
-            mix(c.proc_scale.to_bits());
+            h.mix(c.bw_scale.to_bits());
+            h.mix(c.lat_scale.to_bits());
+            h.mix(c.proc_scale.to_bits());
         }
         for (l, &down) in self.down.iter().enumerate() {
             if down {
-                mix(l as u64);
+                h.mix(l as u64);
             }
         }
-        h | 1
+        h.finish_nonzero()
     }
 
     /// Resolve a route under this model: the nominal torus route (minimal
     /// or directed per the hint) when it avoids every down link, otherwise
     /// a BFS shortest-path detour. With an empty down set this is exactly
-    /// the torus routing the plans always used.
-    pub fn route(&self, src: u32, dst: u32, hint: RouteHint) -> Vec<Link> {
+    /// the torus routing the plans always used. Errs when the down set
+    /// disconnects the pair.
+    pub fn try_route(&self, src: u32, dst: u32, hint: RouteHint) -> Result<Vec<Link>, Unreachable> {
         let nominal = match hint {
             RouteHint::Minimal => self.torus.route(src, dst),
             RouteHint::Directed { dim, dir } => {
@@ -248,17 +290,24 @@ impl NetModel {
         if self.num_down == 0
             || !nominal.iter().any(|&l| self.down[self.torus.link_index(l)])
         {
-            return nominal;
+            return Ok(nominal);
         }
-        self.route_avoiding(src, dst)
+        self.try_route_avoiding(src, dst)
+    }
+
+    /// [`try_route`](Self::try_route), panicking on a partitioned fabric —
+    /// for callers that already validated connectivity (the presets do).
+    pub fn route(&self, src: u32, dst: u32, hint: RouteHint) -> Vec<Link> {
+        self.try_route(src, dst, hint).unwrap_or_else(|e| panic!("NetModel: {e}"))
     }
 
     /// Deterministic BFS shortest path skipping down links (neighbor order:
     /// dimension ascending, direction `+1` before `-1`; FIFO queue — keep
-    /// in lockstep with the pysim mirror).
-    pub fn route_avoiding(&self, src: u32, dst: u32) -> Vec<Link> {
+    /// in lockstep with the pysim mirror). Errs with [`Unreachable`] when
+    /// the down set disconnects the pair.
+    pub fn try_route_avoiding(&self, src: u32, dst: u32) -> Result<Vec<Link>, Unreachable> {
         if src == dst {
-            return Vec::new();
+            return Ok(Vec::new());
         }
         let n = self.torus.n() as usize;
         let mut parent: Vec<i64> = vec![-2; n]; // -2 unvisited, -1 source
@@ -283,10 +332,9 @@ impl NetModel {
                 }
             }
         }
-        assert!(
-            parent[dst as usize] != -2,
-            "NetModel: down links disconnect {src} -> {dst}"
-        );
+        if parent[dst as usize] == -2 {
+            return Err(Unreachable { src, dst });
+        }
         let mut links = Vec::new();
         let mut cur = dst;
         while parent[cur as usize] != -1 {
@@ -294,7 +342,54 @@ impl NetModel {
             cur = parent[cur as usize] as u32;
         }
         links.reverse();
-        links
+        Ok(links)
+    }
+
+    /// [`try_route_avoiding`](Self::try_route_avoiding), panicking on a
+    /// partitioned fabric.
+    pub fn route_avoiding(&self, src: u32, dst: u32) -> Vec<Link> {
+        self.try_route_avoiding(src, dst).unwrap_or_else(|e| panic!("NetModel: {e}"))
+    }
+
+    /// BFS hop distance from `src` to `dst` avoiding the down set — the
+    /// per-pair oracle [`distances_to`](Self::distances_to) (the bulk
+    /// metric [`crate::schedule::rewrite`] actually uses) is validated
+    /// against in tests.
+    pub fn distance_avoiding(&self, src: u32, dst: u32) -> Result<usize, Unreachable> {
+        Ok(self.try_route_avoiding(src, dst)?.len())
+    }
+
+    /// Hop distance from **every** node to `dst` avoiding the down set
+    /// (`None` = unreachable): one reverse-direction BFS instead of one
+    /// forward BFS per source — the bulk donor-selection metric of
+    /// [`crate::schedule::rewrite`]'s cleanup (which otherwise scans
+    /// `O(nodes × blocks)` donor candidates per receiver). Agrees with
+    /// [`distance_avoiding`](Self::distance_avoiding) exactly: shortest
+    /// path *lengths* are search-order independent.
+    pub fn distances_to(&self, dst: u32) -> Vec<Option<usize>> {
+        let n = self.torus.n() as usize;
+        let mut dist: Vec<Option<usize>> = vec![None; n];
+        dist[dst as usize] = Some(0);
+        let mut queue = VecDeque::new();
+        queue.push_back(dst);
+        while let Some(v) = queue.pop_front() {
+            let dv = dist[v as usize].expect("queued nodes have distances");
+            for d in 0..self.torus.ndims() {
+                for dir in [1i8, -1] {
+                    // u reaches v over link (u, d, dir) with neighbor(u) = v
+                    let u = self.torus.neighbor(v, d, -(dir as i64));
+                    let link = Link { node: u, dim: d as u8, dir };
+                    if self.down[self.torus.link_index(link)] {
+                        continue;
+                    }
+                    if dist[u as usize].is_none() {
+                        dist[u as usize] = Some(dv + 1);
+                        queue.push_back(u);
+                    }
+                }
+            }
+        }
+        dist
     }
 }
 
@@ -335,7 +430,9 @@ pub fn strongly_connected(torus: &Torus, down: &[bool]) -> bool {
 
 /// Draw `k` distinct links deterministically from `seed`; with
 /// `keep_connected`, reject draws that would disconnect the link graph.
-fn pick_links(torus: &Torus, k: usize, seed: u64, keep_connected: bool) -> Vec<usize> {
+/// Public so the scenario presets (static *and* dynamic/timeline families)
+/// share one seeded pick — mirrored in `tools/pysim`.
+pub fn pick_links(torus: &Torus, k: usize, seed: u64, keep_connected: bool) -> Vec<usize> {
     let num_links = torus.num_links();
     assert!(k < num_links, "cannot pick {k} of {num_links} links");
     let mut rng = SplitMix64::new(seed);
@@ -470,6 +567,26 @@ mod tests {
     }
 
     #[test]
+    fn distances_to_agrees_with_per_pair_bfs() {
+        let t = Torus::new(&[3, 3]);
+        let mut m = NetModel::uniform(&t);
+        // cut one cable so the down set actually matters
+        let l = t.link_index(Link { node: 0, dim: 0, dir: 1 });
+        m.set_down(l, true);
+        m.set_down(t.link_index(t.reverse_link(t.link_at(l))), true);
+        for dst in 0..t.n() {
+            let bulk = m.distances_to(dst);
+            for src in 0..t.n() {
+                assert_eq!(
+                    bulk[src as usize],
+                    m.distance_avoiding(src, dst).ok(),
+                    "{src}->{dst}"
+                );
+            }
+        }
+    }
+
+    #[test]
     fn bfs_route_is_minimal_without_faults() {
         let t = Torus::new(&[5, 5]);
         let m = NetModel::uniform(&t);
@@ -482,6 +599,41 @@ mod tests {
                 );
             }
         }
+    }
+
+    #[test]
+    fn partitioned_fabric_returns_unreachable_not_garbage() {
+        // Isolate node 1 on a ring: cut its forward in-link (0 -> 1) and
+        // its backward in-link (2 -> 1). Every route *to* node 1 must
+        // resolve to a clean Unreachable, while unrelated pairs still work.
+        let t = Torus::ring(9);
+        let mut m = NetModel::uniform(&t);
+        m.set_down(t.link_index(Link { node: 0, dim: 0, dir: 1 }), true);
+        m.set_down(t.link_index(Link { node: 2, dim: 0, dir: -1 }), true);
+        assert!(!strongly_connected(&t, &m.down));
+        let err = m.try_route_avoiding(0, 1).unwrap_err();
+        assert_eq!(err, Unreachable { src: 0, dst: 1 });
+        assert!(err.to_string().contains("partitioned"), "{err}");
+        assert_eq!(m.try_route(5, 1, RouteHint::Minimal), Err(Unreachable { src: 5, dst: 1 }));
+        // node 1 can still send (its out-links are up), and bystanders route
+        assert!(m.try_route_avoiding(1, 4).is_ok());
+        assert!(m.try_route(3, 7, RouteHint::Minimal).is_ok());
+    }
+
+    #[test]
+    fn asymmetric_dims_scales_directions_independently() {
+        let t = Torus::new(&[3, 3]);
+        let m = NetModel::asymmetric_dims(&t, &[0.5, 1.0], &[1.0, 0.25]);
+        assert!(!m.is_uniform());
+        for node in 0..t.n() {
+            assert_eq!(m.bw_scale(t.link_index(Link { node, dim: 0, dir: 1 })), 0.5);
+            assert_eq!(m.bw_scale(t.link_index(Link { node, dim: 0, dir: -1 })), 1.0);
+            assert_eq!(m.bw_scale(t.link_index(Link { node, dim: 1, dir: 1 })), 1.0);
+            assert_eq!(m.bw_scale(t.link_index(Link { node, dim: 1, dir: -1 })), 0.25);
+        }
+        // symmetric scales reproduce hetero_dims exactly
+        let sym = NetModel::asymmetric_dims(&t, &[1.0, 0.5], &[1.0, 0.5]);
+        assert_eq!(sym.fingerprint(), NetModel::hetero_dims(&t, &[1.0, 0.5]).fingerprint());
     }
 
     #[test]

@@ -1,0 +1,187 @@
+//! Time-varying fabrics: a deterministic schedule of [`NetModel`] capacity
+//! mutations applied *during* a collective.
+//!
+//! PR 3's `NetModel` degrades links statically — the fabric the plan was
+//! routed for is the fabric the whole collective runs on. Real fabrics
+//! change mid-collective: links brown out and recover, one direction of a
+//! cable degrades while the other stays clean, a link flaps. A
+//! [`Timeline`] is the deterministic description of those changes: a sorted
+//! list of [`Epoch`]s, each applying a batch of [`Mutation`]s at an
+//! absolute simulation time.
+//!
+//! Semantics, by engine:
+//!
+//! * [`crate::sim::flow`] pushes one event per epoch and **re-water-fills**
+//!   when it fires: per-link capacities (and forwarding latencies) switch to
+//!   the new values and every active flow's max-min fair rate is recomputed.
+//!   A link taken down ([`Mutation::SetDown`]) has capacity zero — flows
+//!   crossing it stall at rate 0 and resume on recovery.
+//! * [`crate::sim::packet`] needs no epoch events: rates are pre-scheduled,
+//!   so a batch's busy interval is **split at epoch boundaries** — bytes
+//!   serialize at each window's own rate, zero-rate (down) windows pass no
+//!   bytes, and the hop latency charged is the one in force when the batch
+//!   finishes the link.
+//!
+//! Routing does **not** change with a timeline: a capacity mutation never
+//! reroutes traffic (the plan's routes are fixed at build time). A link that
+//! *fails for good* mid-collective is a schedule-level event, not a capacity
+//! event — that case is [`crate::schedule::rewrite`]'s job (fault-aware
+//! schedule rewriting / detour planning via
+//! [`crate::sim::SimPlan::build_faulted`]), because traffic still routed
+//! over a dead link would otherwise stall forever. The engines enforce this:
+//! a timeline that leaves bytes stranded on a permanently-down link panics
+//! with a clear diagnostic instead of reporting a bogus completion.
+//!
+//! The **empty timeline is the static fabric**: every simulator entry point
+//! short-circuits to the exact pre-timeline code path (same float ops, same
+//! event counts), so static results are bit-identical by construction —
+//! `rust/tests/sim_crosscheck.rs` asserts it across the registry.
+//!
+//! Mirrored in `tools/pysim/mirror.py` (`Timeline`, the `*_dyn` engines);
+//! keep the window arithmetic and the epoch application order in lockstep.
+
+use super::LinkClass;
+
+/// One capacity mutation applied at an epoch boundary.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Mutation {
+    /// Replace one link's [`LinkClass`] (bandwidth / latency / processing
+    /// scales relative to the base `NetParams`). `LinkClass::UNIFORM`
+    /// restores the pristine link.
+    SetClass { link: u32, class: LinkClass },
+    /// Take one link down (capacity 0) or bring it back up. Traffic routed
+    /// over a down link stalls until recovery — permanent failures belong
+    /// to [`crate::schedule::rewrite`], not the timeline (module docs).
+    SetDown { link: u32, down: bool },
+}
+
+impl Mutation {
+    /// The dense link index this mutation targets.
+    pub fn link(&self) -> u32 {
+        match *self {
+            Mutation::SetClass { link, .. } => link,
+            Mutation::SetDown { link, .. } => link,
+        }
+    }
+}
+
+/// A batch of mutations applied atomically at time `t` (seconds).
+#[derive(Clone, Debug, PartialEq)]
+pub struct Epoch {
+    pub t: f64,
+    pub mutations: Vec<Mutation>,
+}
+
+/// A deterministic schedule of fabric mutations (module docs). Epochs are
+/// kept sorted by time; mutations within an epoch apply in list order.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Timeline {
+    epochs: Vec<Epoch>,
+}
+
+impl Timeline {
+    /// The static fabric: no mutations, bit-identical simulation.
+    pub fn empty() -> Timeline {
+        Timeline { epochs: Vec::new() }
+    }
+
+    /// Build a timeline from epochs; sorts by time. Epoch times must be
+    /// finite and non-negative (prefer expressing the t = 0 state in the
+    /// `NetModel` itself; a 0-time epoch exists for degenerate windows,
+    /// e.g. a brownout under `α = 0`).
+    pub fn new(mut epochs: Vec<Epoch>) -> Timeline {
+        for e in &epochs {
+            assert!(
+                e.t.is_finite() && e.t >= 0.0,
+                "Timeline epoch time must be finite and >= 0, got {}",
+                e.t
+            );
+        }
+        epochs.sort_by(|a, b| a.t.total_cmp(&b.t));
+        Timeline { epochs }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.epochs.is_empty()
+    }
+
+    pub fn epochs(&self) -> &[Epoch] {
+        &self.epochs
+    }
+
+    /// Cache/staleness fingerprint of the mutation schedule. `0` is
+    /// reserved for the empty timeline (the static fabric); non-empty
+    /// timelines hash times and mutations FNV-1a style with the low bit
+    /// forced to 1, so a dynamic timeline can never collide with static.
+    pub fn fingerprint(&self) -> u64 {
+        if self.epochs.is_empty() {
+            return 0;
+        }
+        let mut h = crate::util::Fnv::new();
+        for e in &self.epochs {
+            h.mix(e.t.to_bits());
+            for m in &e.mutations {
+                match *m {
+                    Mutation::SetClass { link, class } => {
+                        h.mix(1);
+                        h.mix(link as u64);
+                        h.mix(class.bw_scale.to_bits());
+                        h.mix(class.lat_scale.to_bits());
+                        h.mix(class.proc_scale.to_bits());
+                    }
+                    Mutation::SetDown { link, down } => {
+                        h.mix(2);
+                        h.mix(link as u64);
+                        h.mix(down as u64);
+                    }
+                }
+            }
+        }
+        h.finish_nonzero()
+    }
+
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slow(link: u32, factor: f64) -> Mutation {
+        Mutation::SetClass { link, class: LinkClass::slowdown(factor) }
+    }
+
+    #[test]
+    fn empty_timeline_is_static() {
+        let t = Timeline::empty();
+        assert!(t.is_empty());
+        assert_eq!(t.fingerprint(), 0);
+        assert!(t.epochs().is_empty());
+    }
+
+    #[test]
+    fn epochs_sort_by_time_and_fingerprints_separate() {
+        let a = Timeline::new(vec![
+            Epoch { t: 2e-6, mutations: vec![slow(3, 4.0)] },
+            Epoch { t: 1e-6, mutations: vec![Mutation::SetDown { link: 3, down: true }] },
+        ]);
+        assert_eq!(a.epochs()[0].t, 1e-6);
+        assert_eq!(a.epochs()[1].t, 2e-6);
+        let b = Timeline::new(vec![Epoch { t: 1e-6, mutations: vec![slow(3, 4.0)] }]);
+        assert_ne!(a.fingerprint(), 0);
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        // deterministic
+        assert_eq!(b.fingerprint(), b.clone().fingerprint());
+    }
+
+    #[test]
+    #[should_panic(expected = "epoch time must be finite and >= 0")]
+    fn negative_time_epoch_rejected() {
+        let _ = Timeline::new(vec![Epoch { t: -1e-9, mutations: vec![] }]);
+    }
+
+    #[test]
+    #[should_panic(expected = "epoch time must be finite and >= 0")]
+    fn nan_time_epoch_rejected() {
+        let _ = Timeline::new(vec![Epoch { t: f64::NAN, mutations: vec![] }]);
+    }
+}

@@ -15,7 +15,7 @@
 //! bit-identical.
 
 use super::Schedule;
-use crate::net::NetModel;
+use crate::net::{LinkClass, Mutation, NetModel, Timeline, Unreachable};
 use crate::topology::Torus;
 
 /// Per-step figures, all byte quantities in units of the vector size `m`.
@@ -64,7 +64,18 @@ pub fn analyze(s: &Schedule, t: &Torus) -> ScheduleStats {
 /// Analyze `s` under a heterogeneous [`NetModel`]: routes detour around
 /// down links, and the per-step bottleneck is the most time-expensive link
 /// (`load / bw_scale`). Bit-identical to [`analyze`] on a uniform model.
+/// Panics on a partitioned fabric — use [`try_analyze_with_model`] to
+/// surface that as an error.
 pub fn analyze_with_model(s: &Schedule, model: &NetModel) -> ScheduleStats {
+    try_analyze_with_model(s, model).unwrap_or_else(|e| panic!("analyze: {e}"))
+}
+
+/// [`analyze_with_model`], returning [`Unreachable`] when the model's down
+/// set disconnects a pair the schedule needs.
+pub fn try_analyze_with_model(
+    s: &Schedule,
+    model: &NetModel,
+) -> Result<ScheduleStats, Unreachable> {
     let t = model.torus();
     assert_eq!(s.n, t.n(), "schedule/topology node count mismatch");
     let mut steps = Vec::with_capacity(s.steps.len());
@@ -88,7 +99,7 @@ pub fn analyze_with_model(s: &Schedule, model: &NetModel) -> ScheduleStats {
                 messages += 1;
                 max_msg_rel = max_msg_rel.max(rel);
                 total_rel += rel;
-                let route = model.route(src as u32, send.to, send.route);
+                let route = model.try_route(src as u32, send.to, send.route)?;
                 max_hops = max_hops.max(route.len() as u32);
                 let mut lat_rel = 0f64;
                 let mut proc_rel = 0f64;
@@ -124,7 +135,63 @@ pub fn analyze_with_model(s: &Schedule, model: &NetModel) -> ScheduleStats {
         .map(|r| s.node_sent_rel_bytes(r))
         .fold(0f64, f64::max);
     let tx_delay_rel = steps.iter().map(|st| st.max_link_rel).sum();
-    ScheduleStats { steps, max_node_sent_rel, tx_delay_rel }
+    Ok(ScheduleStats { steps, max_node_sent_rel, tx_delay_rel })
+}
+
+/// Analytic envelope of a schedule under a time-varying fabric: stats on
+/// the **best** and **worst static projections** of the timeline — per
+/// link, the maximum bandwidth scale / minimum latency scales over every
+/// state the timeline visits (base state included) on the best side, and
+/// the symmetric minima/maxima on the worst side. A timeline can *upgrade*
+/// a link above its base class (e.g. a recovery preset on a degraded
+/// fabric), so the best side must fold the mutations in too — the base
+/// model alone is not a lower envelope.
+/// [`crate::cost::eq1_with_hops_model`] applied to the pair brackets the
+/// true dynamic Eq. 1 cost: the real collective sees each state for only
+/// part of its lifetime. Down windows ([`Mutation::SetDown`]) contribute
+/// their surrounding class scales, not an infinite cost — stall time is
+/// the simulator's to measure, a static formula cannot bound it.
+pub fn analyze_timeline_envelope(
+    s: &Schedule,
+    base: &NetModel,
+    timeline: &Timeline,
+) -> Result<(ScheduleStats, ScheduleStats), Unreachable> {
+    if timeline.is_empty() {
+        // both envelope sides ARE the base analysis — don't run it twice
+        let best = try_analyze_with_model(s, base)?;
+        let worst = best.clone();
+        return Ok((best, worst));
+    }
+    let mut best_model = base.clone();
+    let mut worst_model = base.clone();
+    for e in timeline.epochs() {
+        for m in &e.mutations {
+            if let Mutation::SetClass { link, class } = *m {
+                let l = link as usize;
+                let b = *best_model.class(l);
+                best_model.set_class(
+                    l,
+                    LinkClass::new(
+                        b.bw_scale.max(class.bw_scale),
+                        b.lat_scale.min(class.lat_scale),
+                        b.proc_scale.min(class.proc_scale),
+                    ),
+                );
+                let w = *worst_model.class(l);
+                worst_model.set_class(
+                    l,
+                    LinkClass::new(
+                        w.bw_scale.min(class.bw_scale),
+                        w.lat_scale.max(class.lat_scale),
+                        w.proc_scale.max(class.proc_scale),
+                    ),
+                );
+            }
+        }
+    }
+    let best = try_analyze_with_model(s, &best_model)?;
+    let worst = try_analyze_with_model(s, &worst_model)?;
+    Ok((best, worst))
 }
 
 impl ScheduleStats {
@@ -238,6 +305,87 @@ mod tests {
         let det = analyze_with_model(&s, &f);
         assert_eq!(det.steps[0].max_hops, 3);
         assert!((det.steps[0].max_route_lat_rel - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn partitioned_model_errs_instead_of_panicking() {
+        use crate::topology::Link;
+        let n = 4;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("x", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            Send {
+                to: 1,
+                pieces: vec![Piece {
+                    blocks: BlockSet::full(n),
+                    contrib: BlockSet::singleton(0, n),
+                    kind: Kind::Reduce,
+                }],
+                route: RouteHint::Minimal,
+            },
+        );
+        let mut m = NetModel::uniform(&t);
+        m.set_down(t.link_index(Link { node: 0, dim: 0, dir: 1 }), true);
+        m.set_down(t.link_index(Link { node: 2, dim: 0, dir: -1 }), true);
+        let err = try_analyze_with_model(&s, &m).unwrap_err();
+        assert_eq!((err.src, err.dst), (0, 1));
+    }
+
+    #[test]
+    fn timeline_envelope_brackets_the_static_cases() {
+        use crate::net::{Epoch, LinkClass, Mutation, Timeline};
+        use crate::topology::Link;
+        let n = 4;
+        let t = Torus::ring(n);
+        let mut s = Schedule::new("x", n, n);
+        let st = s.push_step();
+        for r in 0..n {
+            st.push(
+                r,
+                Send {
+                    to: (r + 1) % n,
+                    pieces: vec![Piece {
+                        blocks: BlockSet::full(n),
+                        contrib: BlockSet::singleton(r, n),
+                        kind: Kind::Reduce,
+                    }],
+                    route: RouteHint::Minimal,
+                },
+            );
+        }
+        let base = NetModel::uniform(&t);
+        let l = t.link_index(Link { node: 0, dim: 0, dir: 1 });
+        // slow 4x, then recover: worst projection pins the link at 4x slow
+        let tl = Timeline::new(vec![
+            Epoch {
+                t: 1e-6,
+                mutations: vec![Mutation::SetClass { link: l as u32, class: LinkClass::slowdown(4.0) }],
+            },
+            Epoch {
+                t: 2e-6,
+                mutations: vec![Mutation::SetClass { link: l as u32, class: LinkClass::UNIFORM }],
+            },
+        ]);
+        let (best, worst) = analyze_timeline_envelope(&s, &base, &tl).unwrap();
+        assert!((best.steps[0].max_link_rel - 1.0).abs() < 1e-12);
+        assert!((worst.steps[0].max_link_rel - 4.0).abs() < 1e-12);
+        // empty timeline: envelope degenerates to the base on both sides
+        let (b2, w2) = analyze_timeline_envelope(&s, &base, &Timeline::empty()).unwrap();
+        assert_eq!(b2.tx_delay_rel.to_bits(), w2.tx_delay_rel.to_bits());
+        // a timeline can UPGRADE a link above its base class (recovery on a
+        // degraded fabric): the best side must fold that in, the worst side
+        // keeps the degraded base
+        let mut degraded = NetModel::uniform(&t);
+        degraded.set_class(l, LinkClass::slowdown(4.0));
+        let recover = Timeline::new(vec![Epoch {
+            t: 1e-6,
+            mutations: vec![Mutation::SetClass { link: l as u32, class: LinkClass::UNIFORM }],
+        }]);
+        let (b3, w3) = analyze_timeline_envelope(&s, &degraded, &recover).unwrap();
+        assert!((b3.steps[0].max_link_rel - 1.0).abs() < 1e-12, "best folds the upgrade in");
+        assert!((w3.steps[0].max_link_rel - 4.0).abs() < 1e-12, "worst keeps the degraded base");
     }
 
     #[test]

@@ -31,6 +31,7 @@
 
 pub mod validate;
 pub mod analysis;
+pub mod rewrite;
 
 use crate::blockset::BlockSet;
 

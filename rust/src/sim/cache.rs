@@ -40,18 +40,39 @@ pub struct PlanKey {
     /// [`crate::net::NetModel::fingerprint`] of the link table + down set
     /// the plan was routed for (`0` = the uniform model).
     pub net_fp: u64,
+    /// Fingerprint of the *dynamic* condition the plan was built for —
+    /// `0` for static plans. Pure-capacity timelines leave routes (and
+    /// therefore plans) unchanged and keep `0` so they **share** the static
+    /// plan; fault-aware plans ([`SimPlan::build_faulted`] detour or
+    /// rewrite) carry the fault/strategy fingerprint here so a mid-fault
+    /// plan can never be served where a static one was meant (or vice
+    /// versa).
+    pub timeline_fp: u64,
 }
 
 impl PlanKey {
     /// Key for a plan on the uniform (paper §6) network model.
     pub fn new(algo: Algo, variant: Variant, dims: &[u32]) -> Self {
-        PlanKey::with_net_fp(algo, variant, dims, 0)
+        PlanKey::with_fps(algo, variant, dims, 0, 0)
     }
 
     /// Key for a plan under a heterogeneous [`crate::net::NetModel`] —
     /// pass the model's `fingerprint()`.
     pub fn with_net_fp(algo: Algo, variant: Variant, dims: &[u32], net_fp: u64) -> Self {
-        PlanKey { algo, variant, dims: dims.to_vec(), net_fp }
+        PlanKey::with_fps(algo, variant, dims, net_fp, 0)
+    }
+
+    /// Key for a plan under a dynamic condition (mid-collective fault,
+    /// rewrite strategy): `net_fp` identifies the base model,
+    /// `timeline_fp` the dynamic condition (`0` = static).
+    pub fn with_fps(
+        algo: Algo,
+        variant: Variant,
+        dims: &[u32],
+        net_fp: u64,
+        timeline_fp: u64,
+    ) -> Self {
+        PlanKey { algo, variant, dims: dims.to_vec(), net_fp, timeline_fp }
     }
 }
 
@@ -82,17 +103,31 @@ impl PlanCache {
     /// wins and every caller shares that plan (builds are deterministic,
     /// so the discarded duplicate is identical).
     pub fn get_or_build(&self, key: PlanKey, build: impl FnOnce() -> SimPlan) -> Arc<SimPlan> {
+        self.try_get_or_build::<std::convert::Infallible>(key, || Ok(build()))
+            .unwrap_or_else(|e| match e {})
+    }
+
+    /// [`get_or_build`](Self::get_or_build) with a fallible builder: a
+    /// build error (e.g. [`crate::net::Unreachable`] from a partitioned
+    /// fabric) surfaces to the caller and nothing is cached. Hits never
+    /// invoke the builder, so a key that was built successfully once keeps
+    /// serving its plan.
+    pub fn try_get_or_build<E>(
+        &self,
+        key: PlanKey,
+        build: impl FnOnce() -> Result<SimPlan, E>,
+    ) -> Result<Arc<SimPlan>, E> {
         if self.disabled.load(Ordering::Relaxed) {
             self.misses.fetch_add(1, Ordering::Relaxed);
-            return Arc::new(build());
+            return Ok(Arc::new(build()?));
         }
         if let Some(plan) = self.lock().get(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Arc::clone(plan);
+            return Ok(Arc::clone(plan));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
-        let plan = Arc::new(build());
-        Arc::clone(self.lock().entry(key).or_insert(plan))
+        let plan = Arc::new(build()?);
+        Ok(Arc::clone(self.lock().entry(key).or_insert(plan)))
     }
 
     /// Lock the map, shrugging off poisoning: the map only ever holds

@@ -48,6 +48,7 @@
 use super::plan::{SimPlan, SimScratch};
 use super::{SimResult, Timed};
 use crate::cost::NetParams;
+use crate::net::{Mutation, Timeline};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 use std::collections::BinaryHeap;
@@ -63,6 +64,9 @@ enum Event {
     StepStart { node: u32, step: u32 },
     /// A message has fully arrived at its destination.
     Delivery { node: u32, step: u32 },
+    /// A [`Timeline`] epoch fires: apply its mutations and re-water-fill.
+    /// Never pushed by the static engine.
+    Epoch { idx: u32 },
 }
 
 struct ActiveFlow {
@@ -384,6 +388,7 @@ pub fn simulate_flow_plan_scratch(
                         push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                     }
                 }
+                Event::Epoch { .. } => unreachable!("static flow engine pushes no epochs"),
             }
         }
 
@@ -393,6 +398,185 @@ pub fn simulate_flow_plan_scratch(
         }
     }
 
+    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
+}
+
+/// [`simulate_flow_plan_scratch`] under a [`Timeline`] of fabric mutations:
+/// one [`Event::Epoch`] per timeline epoch switches the per-link capacities
+/// and forwarding latencies and triggers a max-min **re-water-fill**, so
+/// every active flow's rate reflects the fabric in force right now. A link
+/// taken down has capacity 0 — its flows stall at rate 0 and resume on
+/// recovery. With an empty timeline this *is* the static engine (same code
+/// path, bit-identical).
+///
+/// Panics if the timeline leaves flows stranded on a permanently-down link:
+/// a completion time that silently dropped undelivered messages would be
+/// wrong, and permanent faults belong to [`crate::schedule::rewrite`].
+pub fn simulate_flow_plan_timeline(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    scratch: &SimScratch,
+    timeline: &Timeline,
+) -> SimResult {
+    if timeline.is_empty() {
+        return simulate_flow_plan_scratch(plan, m_bytes, params, scratch);
+    }
+    debug_assert!(scratch.matches(plan), "scratch built for a different plan");
+    let n = plan.n();
+    let nsteps = plan.num_steps();
+    if nsteps == 0 {
+        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+    }
+    let cap = params.link_bw_bps / 8.0;
+    // Mutable per-link state seeded from the scratch columns: the class
+    // value (`caps_up`), the down flag, and the effective capacity the
+    // water-filling sees (`caps_eff` — 0 while down).
+    let mut caps_up: Vec<f64> = scratch.caps.clone();
+    let mut caps_eff: Vec<f64> = scratch.caps.clone();
+    let mut down: Vec<bool> = vec![false; plan.num_links()];
+    let mut link_hop: Vec<f64> = scratch.link_hop_lat.clone();
+
+    let mut received = vec![0u32; n * nsteps];
+    let mut entered = vec![-1i64; n];
+
+    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    macro_rules! push {
+        ($t:expr, $ev:expr) => {{
+            seq += 1;
+            heap.push(Timed { t: $t, seq, ev: $ev });
+        }};
+    }
+    for r in 0..n {
+        push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+    }
+    for (ei, e) in timeline.epochs().iter().enumerate() {
+        push!(e.t, Event::Epoch { idx: ei as u32 });
+    }
+
+    let mut active: Vec<ActiveFlow> = Vec::new();
+    let mut wf = WaterFill::new(plan);
+    // Rates change mid-flight and capacities diverge per link: the
+    // closed-form symmetric shortcut no longer applies.
+    wf.symmetric_ok = false;
+    let mut now = 0.0f64;
+    let mut completion = 0.0f64;
+    let mut events = 0u64;
+    let mut need_recompute = false;
+
+    loop {
+        let t_event = heap.peek().map(|e| e.t).unwrap_or(f64::INFINITY);
+        let mut t_drain = f64::INFINITY;
+        for f in &active {
+            if f.rate > 0.0 {
+                let t = now + f.remaining / f.rate;
+                if t < t_drain {
+                    t_drain = t;
+                }
+            }
+        }
+        let t_next = t_event.min(t_drain);
+        if !t_next.is_finite() {
+            break;
+        }
+        let dt = t_next - now;
+        if dt > 0.0 {
+            for f in active.iter_mut() {
+                f.remaining -= f.rate * dt;
+            }
+        }
+        now = t_next;
+
+        let mut i = 0;
+        while i < active.len() {
+            if active[i].remaining <= active[i].rate * TIME_EPS + 1e-9 * TIME_EPS
+                || active[i].remaining <= 1e-7
+            {
+                let f = active.swap_remove(i);
+                let route = plan.route(f.msg as usize);
+                wf.drain(route);
+                let m = plan.msg(f.msg as usize);
+                // per-link forwarding latencies in force at drain time
+                let lat: f64 = route.iter().map(|&l| link_hop[l as usize]).sum();
+                push!(now + lat, Event::Delivery { node: m.dst, step: m.step });
+                need_recompute = true;
+            } else {
+                i += 1;
+            }
+        }
+
+        while let Some(top) = heap.peek() {
+            if top.t > now + TIME_EPS.max(now * 1e-12) {
+                break;
+            }
+            let Timed { ev, .. } = heap.pop().unwrap();
+            events += 1;
+            match ev {
+                Event::StepStart { node, step } => {
+                    entered[node as usize] = step as i64;
+                    for &mi in plan.injections(node as usize, step as usize) {
+                        active.push(ActiveFlow {
+                            msg: mi,
+                            remaining: plan.bytes(mi as usize, m_bytes),
+                            rate: 0.0,
+                        });
+                        wf.inject(plan.route(mi as usize));
+                        need_recompute = true;
+                    }
+                    let k = step as usize;
+                    if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
+                        && k + 1 < nsteps
+                    {
+                        push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
+                    }
+                }
+                Event::Delivery { node, step } => {
+                    completion = completion.max(now);
+                    let k = step as usize;
+                    received[node as usize * nsteps + k] += 1;
+                    if received[node as usize * nsteps + k] == plan.expected(node as usize, k)
+                        && entered[node as usize] == k as i64
+                        && k + 1 < nsteps
+                    {
+                        push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
+                    }
+                }
+                Event::Epoch { idx } => {
+                    for m in &timeline.epochs()[idx as usize].mutations {
+                        match *m {
+                            Mutation::SetClass { link, class } => {
+                                let l = link as usize;
+                                caps_up[l] = cap * class.bw_scale;
+                                link_hop[l] = class.lat_scale * params.link_latency_s
+                                    + class.proc_scale * params.hop_latency_s;
+                                caps_eff[l] = if down[l] { 0.0 } else { caps_up[l] };
+                            }
+                            Mutation::SetDown { link, down: d } => {
+                                let l = link as usize;
+                                down[l] = d;
+                                caps_eff[l] = if d { 0.0 } else { caps_up[l] };
+                            }
+                        }
+                    }
+                    need_recompute = true;
+                }
+            }
+        }
+
+        if need_recompute {
+            wf.recompute(&mut active, plan, cap, &caps_eff);
+            need_recompute = false;
+        }
+    }
+
+    assert!(
+        active.is_empty(),
+        "timeline leaves {} flow(s) stranded on a down link (bytes in flight, no \
+         recovery epoch) — permanent faults need schedule rewriting \
+         (schedule::rewrite / SimPlan::build_faulted), not a capacity timeline",
+        active.len()
+    );
     SimResult { completion_s: completion, messages: plan.num_msgs(), events }
 }
 
@@ -587,6 +771,103 @@ mod tests {
             "got {} expect {expect_lat}",
             rl.completion_s
         );
+    }
+
+    fn one_msg_schedule(n: u32, to: u32) -> Schedule {
+        let mut s = Schedule::new("one", n, n);
+        let st = s.push_step();
+        st.push(
+            0,
+            crate::schedule::Send {
+                to,
+                pieces: vec![crate::schedule::Piece {
+                    blocks: crate::blockset::BlockSet::full(n),
+                    contrib: crate::blockset::BlockSet::singleton(0, n),
+                    kind: crate::schedule::Kind::Reduce,
+                }],
+                route: crate::schedule::RouteHint::Minimal,
+            },
+        );
+        s
+    }
+
+    #[test]
+    fn flap_outage_adds_exactly_the_window() {
+        // one neighbor flow; its link goes down for a window inside the
+        // serialization: completion = α + ser + window + per_hop, exactly
+        use crate::net::{Epoch, Mutation, Timeline};
+        let t = Torus::ring(4);
+        let s = one_msg_schedule(4, 1);
+        let p = params();
+        let m = 1u64 << 20;
+        let plan = SimPlan::build(&s, &t);
+        let scratch = SimScratch::new(&plan, &p);
+        let cap = p.link_bw_bps / 8.0;
+        let ser = m as f64 / cap;
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 }) as u32;
+        let (t0, t1) = (p.alpha_s + 0.25 * ser, p.alpha_s + 0.5 * ser);
+        let tl = Timeline::new(vec![
+            Epoch { t: t0, mutations: vec![Mutation::SetDown { link: l, down: true }] },
+            Epoch { t: t1, mutations: vec![Mutation::SetDown { link: l, down: false }] },
+        ]);
+        let r = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &tl);
+        let expect = p.alpha_s + ser + (t1 - t0) + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        // and a timeline that never recovers strands the flow: loud panic
+        let dead = Timeline::new(vec![Epoch {
+            t: t0,
+            mutations: vec![Mutation::SetDown { link: l, down: true }],
+        }]);
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            simulate_flow_plan_timeline(&plan, m, &p, &scratch, &dead)
+        }));
+        assert!(panicked.is_err(), "stranded traffic must panic, not misreport");
+    }
+
+    #[test]
+    fn brownout_slows_exactly_by_the_window_deficit() {
+        // 2x slowdown over a window of length w inside the serialization
+        // phase costs exactly w extra (half the bytes of the window are
+        // deferred): completion = α + ser + w + per_hop
+        use crate::net::{Epoch, LinkClass, Mutation, Timeline};
+        let t = Torus::ring(4);
+        let s = one_msg_schedule(4, 1);
+        let p = params();
+        let m = 1u64 << 20;
+        let plan = SimPlan::build(&s, &t);
+        let scratch = SimScratch::new(&plan, &p);
+        let cap = p.link_bw_bps / 8.0;
+        let ser = m as f64 / cap;
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 }) as u32;
+        let w = 0.25 * ser;
+        let tl = Timeline::new(vec![
+            Epoch {
+                t: p.alpha_s + 0.25 * ser,
+                mutations: vec![Mutation::SetClass { link: l, class: LinkClass::slowdown(2.0) }],
+            },
+            Epoch {
+                t: p.alpha_s + 0.25 * ser + w,
+                mutations: vec![Mutation::SetClass { link: l, class: LinkClass::UNIFORM }],
+            },
+        ]);
+        let r = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &tl);
+        // during the window the flow drains at cap/2, deferring 0.5·cap·w
+        // bytes — recovered at full rate afterwards: exactly 0.5·w extra
+        let expect = p.alpha_s + ser + 0.5 * w + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "got {} expect {expect}",
+            r.completion_s
+        );
+        // empty timeline delegates to the static engine bit for bit
+        let stat = simulate_flow_plan_scratch(&plan, m, &p, &scratch);
+        let empt = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &Timeline::empty());
+        assert_eq!(stat.completion_s.to_bits(), empt.completion_s.to_bits());
+        assert_eq!(stat.events, empt.events);
     }
 
     #[test]

@@ -57,7 +57,7 @@ pub use cache::{PlanCache, PlanKey};
 pub use plan::{SimPlan, SimScratch};
 
 use crate::cost::NetParams;
-use crate::net::NetModel;
+use crate::net::{NetModel, Timeline};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 
@@ -176,6 +176,30 @@ pub fn simulate_plan_scratch(
         SimMode::Flow => flow::simulate_flow_plan_scratch(plan, m_bytes, params, scratch),
         SimMode::Packet { mtu } => {
             packet::simulate_packet_plan_scratch(plan, m_bytes, params, mtu, scratch)
+        }
+    }
+}
+
+/// [`simulate_plan_scratch`] under a [`Timeline`] of mid-collective fabric
+/// mutations: the flow engine re-water-fills at every epoch, the packet
+/// engine splits busy intervals at epoch boundaries. An **empty** timeline
+/// short-circuits to [`simulate_plan_scratch`] — the static path, bit for
+/// bit (`sim_crosscheck.rs` pins this across the registry).
+pub fn simulate_plan_timeline(
+    plan: &SimPlan,
+    scratch: &SimScratch,
+    m_bytes: u64,
+    params: &NetParams,
+    mode: SimMode,
+    timeline: &Timeline,
+) -> SimResult {
+    params.validate();
+    match mode {
+        SimMode::Flow => {
+            flow::simulate_flow_plan_timeline(plan, m_bytes, params, scratch, timeline)
+        }
+        SimMode::Packet { mtu } => {
+            packet::simulate_packet_plan_timeline(plan, m_bytes, params, mtu, scratch, timeline)
         }
     }
 }

@@ -44,6 +44,7 @@
 use super::plan::{SimPlan, SimScratch};
 use super::{SimResult, Timed};
 use crate::cost::NetParams;
+use crate::net::{Mutation, Timeline};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 use std::collections::BinaryHeap;
@@ -172,6 +173,220 @@ pub fn simulate_packet_plan_scratch(
                         let head = total.min(mtu as f64);
                         push!(
                             start + head / caps[l] + hops[l],
+                            Event::Batch { msg, hop: hop + 1, ready: tail_ready }
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
+}
+
+/// One piecewise-constant change point of a link's state under a
+/// [`Timeline`]: from `t` on, the link serializes at `cap` bytes/s (`0.0`
+/// while down) and charges `hop` seconds of forwarding latency.
+#[derive(Clone, Copy, Debug)]
+struct TrackPoint {
+    t: f64,
+    cap: f64,
+    hop: f64,
+}
+
+/// Per-link change tracks for the links a timeline touches (`None` =
+/// static link, scalar arithmetic — identical to the no-timeline engine).
+fn build_tracks(
+    plan: &SimPlan,
+    params: &NetParams,
+    scratch: &SimScratch,
+    timeline: &Timeline,
+) -> Vec<Option<Vec<TrackPoint>>> {
+    let base_cap = params.link_bw_bps / 8.0;
+    let mut tracks: Vec<Option<Vec<TrackPoint>>> = vec![None; plan.num_links()];
+    let mut cur_up: Vec<f64> = scratch.caps.clone();
+    let mut cur_hop: Vec<f64> = scratch.link_hop_lat.clone();
+    let mut cur_down: Vec<bool> = vec![false; plan.num_links()];
+    for e in timeline.epochs() {
+        for m in &e.mutations {
+            let l = m.link() as usize;
+            match *m {
+                Mutation::SetClass { class, .. } => {
+                    cur_up[l] = base_cap * class.bw_scale;
+                    cur_hop[l] = class.lat_scale * params.link_latency_s
+                        + class.proc_scale * params.hop_latency_s;
+                }
+                Mutation::SetDown { down, .. } => cur_down[l] = down,
+            }
+            let cap = if cur_down[l] { 0.0 } else { cur_up[l] };
+            if tracks[l].is_none() {
+                tracks[l] = Some(Vec::new());
+            }
+            tracks[l].as_mut().expect("just inserted").push(TrackPoint {
+                t: e.t,
+                cap,
+                hop: cur_hop[l],
+            });
+        }
+    }
+    tracks
+}
+
+/// When does a serialization of `bytes` starting at `start` finish on a
+/// link whose rate follows `track` (initial rate `cap0`)? The busy interval
+/// is **split at each change point**: bytes drain at each window's rate,
+/// zero-rate (down) windows pass nothing. Panics if the track ends at rate
+/// 0 with bytes left — the stranded-traffic diagnostic of the module docs.
+fn serialize_end(track: Option<&[TrackPoint]>, cap0: f64, start: f64, bytes: f64) -> f64 {
+    let Some(track) = track else {
+        return start + bytes / cap0;
+    };
+    if bytes <= 0.0 {
+        // an empty batch occupies the link for zero time even mid-outage
+        // (`start + 0.0 / cap` is exactly `start` on the static path too)
+        return start;
+    }
+    // state in force at `start` (an epoch exactly at `start` applies, as in
+    // the flow engine's equal-time event batching)
+    let mut rate = cap0;
+    let mut idx = 0usize;
+    while idx < track.len() && track[idx].t <= start {
+        rate = track[idx].cap;
+        idx += 1;
+    }
+    let mut remaining = bytes;
+    let mut cur = start;
+    loop {
+        let next_t = if idx < track.len() { track[idx].t } else { f64::INFINITY };
+        if rate > 0.0 {
+            let fin = cur + remaining / rate;
+            if fin <= next_t {
+                return fin;
+            }
+            remaining -= rate * (next_t - cur);
+            if remaining < 0.0 {
+                remaining = 0.0;
+            }
+        } else {
+            assert!(
+                next_t.is_finite(),
+                "timeline leaves a link down for good with {remaining} bytes in \
+                 flight — permanent faults need schedule rewriting \
+                 (schedule::rewrite / SimPlan::build_faulted), not a capacity timeline"
+            );
+        }
+        cur = next_t;
+        rate = track[idx].cap;
+        idx += 1;
+    }
+}
+
+/// The forwarding latency in force on a link at time `t`.
+fn hop_at(track: Option<&[TrackPoint]>, hop0: f64, t: f64) -> f64 {
+    let Some(track) = track else { return hop0 };
+    let mut h = hop0;
+    for p in track {
+        if p.t <= t {
+            h = p.hop;
+        } else {
+            break;
+        }
+    }
+    h
+}
+
+/// [`simulate_packet_plan_scratch`] under a [`Timeline`]: each batch's busy
+/// interval is split at the timeline's epoch boundaries ([`serialize_end`]),
+/// so a link that slows, browns out, or flaps mid-batch serializes exactly
+/// the bytes each window's rate allows; the hop latency charged is the one
+/// in force when the batch leaves the link. With an empty timeline this *is*
+/// the static engine (same code path, bit-identical).
+pub fn simulate_packet_plan_timeline(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+    scratch: &SimScratch,
+    timeline: &Timeline,
+) -> SimResult {
+    if timeline.is_empty() {
+        return simulate_packet_plan_scratch(plan, m_bytes, params, mtu, scratch);
+    }
+    assert!(mtu > 0);
+    debug_assert!(scratch.matches(plan), "scratch built for a different plan");
+    let n = plan.n();
+    let nsteps = plan.num_steps();
+    if nsteps == 0 {
+        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+    }
+    let caps = &scratch.caps;
+    let hops = &scratch.link_hop_lat;
+    let tracks = build_tracks(plan, params, scratch, timeline);
+
+    let mut received = vec![0u32; n * nsteps];
+    let mut entered = vec![-1i64; n];
+    let mut free_at = vec![0f64; plan.num_links()];
+    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
+    let mut seq = 0u64;
+    macro_rules! push {
+        ($t:expr, $ev:expr) => {{
+            seq += 1;
+            heap.push(Timed { t: $t, seq, ev: $ev });
+        }};
+    }
+    for r in 0..n {
+        push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+    }
+
+    let mut completion = 0.0f64;
+    let mut events = 0u64;
+
+    while let Some(Timed { t: now, ev, .. }) = heap.pop() {
+        events += 1;
+        match ev {
+            Event::StepStart { node, step } => {
+                entered[node as usize] = step as i64;
+                for &mi in plan.injections(node as usize, step as usize) {
+                    push!(now, Event::Batch { msg: mi, hop: 0, ready: now });
+                }
+                let k = step as usize;
+                if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
+                    && k + 1 < nsteps
+                {
+                    push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
+                }
+            }
+            Event::Batch { msg, hop, ready } => {
+                let route = plan.route(msg as usize);
+                if hop as usize == route.len() {
+                    completion = completion.max(now);
+                    let m = plan.msg(msg as usize);
+                    let k = m.step as usize;
+                    received[m.dst as usize * nsteps + k] += 1;
+                    if received[m.dst as usize * nsteps + k] == plan.expected(m.dst as usize, k)
+                        && entered[m.dst as usize] == k as i64
+                        && k + 1 < nsteps
+                    {
+                        push!(
+                            now + params.alpha_s,
+                            Event::StepStart { node: m.dst, step: m.step + 1 }
+                        );
+                    }
+                } else {
+                    let total = plan.bytes(msg as usize, m_bytes);
+                    let l = route[hop as usize] as usize;
+                    let start = now.max(free_at[l]);
+                    let track = tracks[l].as_deref();
+                    let batch_end = serialize_end(track, caps[l], start, total).max(ready);
+                    free_at[l] = batch_end;
+                    let tail_ready = batch_end + hop_at(track, hops[l], batch_end);
+                    if hop as usize + 1 == route.len() {
+                        push!(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
+                    } else {
+                        let head = total.min(mtu as f64);
+                        let head_end = serialize_end(track, caps[l], start, head);
+                        push!(
+                            head_end + hop_at(track, hops[l], head_end),
                             Event::Batch { msg, hop: hop + 1, ready: tail_ready }
                         );
                     }
@@ -470,6 +685,68 @@ mod tests {
             4096,
         );
         assert_eq!(r.completion_s.to_bits(), rr.completion_s.to_bits());
+    }
+
+    #[test]
+    fn busy_interval_splits_exactly_at_epoch_boundaries() {
+        // single-hop, single-batch message with a mid-serialization outage
+        // window: the batch's busy interval stretches by exactly the
+        // window; a 2x brownout window w defers half its bytes (w/2 extra)
+        use crate::net::{Epoch, LinkClass, Mutation, Timeline};
+        let n = 4u32;
+        let t = Torus::ring(n);
+        let s = single_send(n, n, 1, BlockSet::full(n));
+        let p = NetParams::default();
+        let m = 1u64 << 20;
+        let plan = SimPlan::build(&s, &t);
+        let scratch = SimScratch::new(&plan, &p);
+        let cap = p.link_bw_bps / 8.0;
+        let ser = m as f64 / cap;
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 }) as u32;
+        let (t0, t1) = (p.alpha_s + 0.25 * ser, p.alpha_s + 0.5 * ser);
+        let outage = Timeline::new(vec![
+            Epoch { t: t0, mutations: vec![Mutation::SetDown { link: l, down: true }] },
+            Epoch { t: t1, mutations: vec![Mutation::SetDown { link: l, down: false }] },
+        ]);
+        let r = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &outage);
+        let expect = p.alpha_s + ser + (t1 - t0) + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "outage: got {} expect {expect}",
+            r.completion_s
+        );
+        let brown = Timeline::new(vec![
+            Epoch {
+                t: t0,
+                mutations: vec![Mutation::SetClass { link: l, class: LinkClass::slowdown(2.0) }],
+            },
+            Epoch {
+                t: t1,
+                mutations: vec![Mutation::SetClass { link: l, class: LinkClass::UNIFORM }],
+            },
+        ]);
+        let r = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &brown);
+        let expect = p.alpha_s + ser + 0.5 * (t1 - t0) + p.per_hop_s();
+        assert!(
+            (r.completion_s - expect).abs() < expect * 1e-9,
+            "brownout: got {} expect {expect}",
+            r.completion_s
+        );
+        // empty timeline delegates to the static engine bit for bit
+        let stat = simulate_packet_plan_scratch(&plan, m, &p, 4096, &scratch);
+        let empt =
+            simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &Timeline::empty());
+        assert_eq!(stat.completion_s.to_bits(), empt.completion_s.to_bits());
+        assert_eq!(stat.events, empt.events);
+        // a permanent outage with bytes in flight panics loudly
+        let dead = Timeline::new(vec![Epoch {
+            t: t0,
+            mutations: vec![Mutation::SetDown { link: l, down: true }],
+        }]);
+        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &dead)
+        }));
+        assert!(panicked.is_err(), "stranded traffic must panic, not misreport");
     }
 
     #[test]

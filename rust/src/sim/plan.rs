@@ -31,7 +31,7 @@
 //!   (all scales `1.0`) and stays bit-identical to the pre-NetModel plans.
 
 use crate::cost::NetParams;
-use crate::net::NetModel;
+use crate::net::{NetModel, Unreachable};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 
@@ -89,7 +89,56 @@ impl SimPlan {
     /// Flatten `schedule` under a heterogeneous [`NetModel`]: routes detour
     /// around down links and the model's per-link scale columns are carried
     /// into the plan. With a uniform model this is exactly [`SimPlan::build`].
+    /// Panics on a partitioned fabric — use
+    /// [`try_build_with_model`](Self::try_build_with_model) to surface that
+    /// as an error instead.
     pub fn build_with_model(schedule: &Schedule, model: &NetModel) -> SimPlan {
+        SimPlan::try_build_with_model(schedule, model)
+            .unwrap_or_else(|e| panic!("SimPlan: {e}"))
+    }
+
+    /// [`build_with_model`](Self::build_with_model), returning
+    /// [`Unreachable`] when the model's down set disconnects a
+    /// (src, dst) pair the schedule needs.
+    pub fn try_build_with_model(
+        schedule: &Schedule,
+        model: &NetModel,
+    ) -> Result<SimPlan, Unreachable> {
+        SimPlan::build_routed(schedule, model, model, schedule.steps.len() as u32)
+    }
+
+    /// Flatten a schedule hit by a fault *between* steps: messages in steps
+    /// `< fault_step` route on the pre-fault `base` model (the fabric they
+    /// actually ran on), messages in steps `>= fault_step` route on the
+    /// post-fault `post` model (detouring around — or, for a rewritten
+    /// schedule, already avoiding — the newly down links). Scale columns
+    /// come from `base`: a fault changes reachability, not the surviving
+    /// links' rates. With `fault_step >= num_steps` or `post == base` this
+    /// is exactly [`try_build_with_model`](Self::try_build_with_model).
+    pub fn build_faulted(
+        schedule: &Schedule,
+        base: &NetModel,
+        post: &NetModel,
+        fault_step: u32,
+    ) -> Result<SimPlan, Unreachable> {
+        assert_eq!(
+            base.torus().dims(),
+            post.torus().dims(),
+            "build_faulted: pre/post models must share the topology"
+        );
+        SimPlan::build_routed(schedule, base, post, fault_step)
+    }
+
+    /// Shared flattening core: `class_model` supplies the scale columns and
+    /// the routes of steps `< switch_step`; `route_model` routes steps
+    /// `>= switch_step`.
+    fn build_routed(
+        schedule: &Schedule,
+        class_model: &NetModel,
+        route_model: &NetModel,
+        switch_step: u32,
+    ) -> Result<SimPlan, Unreachable> {
+        let model = class_model;
         let torus = model.torus();
         assert_eq!(schedule.n, torus.n(), "schedule/topology mismatch");
         let n = schedule.n as usize;
@@ -99,13 +148,14 @@ impl SimPlan {
         let mut msgs: Vec<PlanMsg> = Vec::new();
         let mut route_links: Vec<u32> = Vec::new();
         for (k, step) in schedule.steps.iter().enumerate() {
+            let router = if (k as u32) < switch_step { class_model } else { route_model };
             for (src, sends) in step.sends.iter().enumerate() {
                 for snd in sends {
                     let rel = snd.rel_bytes(schedule.n_blocks);
                     if rel <= 0.0 {
                         continue;
                     }
-                    let route = model.route(src as u32, snd.to, snd.route);
+                    let route = router.try_route(src as u32, snd.to, snd.route)?;
                     let route_off = route_links.len() as u32;
                     route_links.extend(route.into_iter().map(|l| torus.link_index(l) as u32));
                     let route_len = route_links.len() as u32 - route_off;
@@ -151,7 +201,7 @@ impl SimPlan {
             }
         }
 
-        SimPlan {
+        Ok(SimPlan {
             n,
             nsteps,
             num_links,
@@ -165,8 +215,12 @@ impl SimPlan {
             link_bw_scale: (0..num_links).map(|l| model.bw_scale(l)).collect(),
             link_lat_scale: (0..num_links).map(|l| model.lat_scale(l)).collect(),
             link_proc_scale: (0..num_links).map(|l| model.proc_scale(l)).collect(),
+            // The class model decides uniformity: build_faulted only changes
+            // *routes* (scale columns stay all-1.0 on a uniform base), and
+            // the engines' uniform fast paths assume equal capacities and
+            // latencies, not any particular routing.
             uniform: model.is_uniform(),
-        }
+        })
     }
 
     /// Was this plan built against the uniform (paper §6) network model?
@@ -423,6 +477,53 @@ mod tests {
         for i in 0..pf.num_msgs() {
             assert!(!pf.route(i).contains(&(l as u32)), "msg {i} crosses the down link");
         }
+    }
+
+    #[test]
+    fn faulted_plan_routes_pre_and_post_steps_differently() {
+        use crate::net::NetModel;
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let base = NetModel::uniform(&t);
+        let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        let mut post = NetModel::uniform(&t);
+        post.set_down(l, true);
+        // fault before step 1: step-0 routes may still cross the link,
+        // step-1 routes must not
+        let p = SimPlan::build_faulted(&s, &base, &post, 1).unwrap();
+        assert!(p.is_uniform(), "scale columns stay uniform across a fault");
+        let nominal = SimPlan::build(&s, &t);
+        let mut post_crossings = 0usize;
+        for i in 0..p.num_msgs() {
+            let m = p.msg(i);
+            if m.step < 1 {
+                assert_eq!(p.route(i), nominal.route(i), "pre-fault step rerouted");
+            } else {
+                assert!(!p.route(i).contains(&(l as u32)), "post-fault msg {i} crosses the dead link");
+                if nominal.route(i).contains(&(l as u32)) {
+                    post_crossings += 1;
+                }
+            }
+        }
+        assert!(post_crossings > 0, "the dead link carried step-1 traffic nominally");
+        // fault after the last step is exactly the plain build
+        let noop = SimPlan::build_faulted(&s, &base, &post, s.steps.len() as u32).unwrap();
+        for i in 0..noop.num_msgs() {
+            assert_eq!(noop.route(i), nominal.route(i));
+        }
+    }
+
+    #[test]
+    fn partitioned_model_surfaces_unreachable_from_try_build() {
+        use crate::net::NetModel;
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let mut m = NetModel::uniform(&t);
+        // isolate node 1's inbound links
+        m.set_down(t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 }), true);
+        m.set_down(t.link_index(crate::topology::Link { node: 2, dim: 0, dir: -1 }), true);
+        let err = SimPlan::try_build_with_model(&s, &m).unwrap_err();
+        assert_eq!(err.dst, 1, "some sender cannot reach the isolated node: {err}");
     }
 
     #[test]

@@ -68,6 +68,27 @@ impl Torus {
         (l.node as usize * self.dims.len() + d) * 2 + dirbit
     }
 
+    /// Inverse of [`link_index`](Self::link_index): the directed link at
+    /// dense index `idx`.
+    pub fn link_at(&self, idx: usize) -> Link {
+        debug_assert!(idx < self.num_links());
+        let dirbit = idx & 1;
+        let rest = idx / 2;
+        let dim = (rest % self.dims.len()) as u8;
+        let node = (rest / self.dims.len()) as u32;
+        Link { node, dim, dir: if dirbit == 1 { 1 } else { -1 } }
+    }
+
+    /// The opposite-direction link of the same physical cable: a real
+    /// cable failure takes out **both** directed links of an edge.
+    pub fn reverse_link(&self, l: Link) -> Link {
+        Link {
+            node: self.neighbor(l.node, l.dim as usize, l.dir as i64),
+            dim: l.dim,
+            dir: -l.dir,
+        }
+    }
+
     pub fn coords(&self, rank: u32) -> Vec<u32> {
         let mut c = Vec::with_capacity(self.dims.len());
         let mut r = rank as u64;
@@ -305,6 +326,21 @@ mod tests {
             }
         }
         assert!(seen.iter().all(|&b| b));
+    }
+
+    #[test]
+    fn link_at_inverts_link_index_and_reverse_pairs_up() {
+        let t = Torus::new(&[3, 4]);
+        for idx in 0..t.num_links() {
+            let l = t.link_at(idx);
+            assert_eq!(t.link_index(l), idx);
+            let r = t.reverse_link(l);
+            assert_ne!(t.link_index(r), idx);
+            // reversing twice is the identity
+            assert_eq!(t.link_index(t.reverse_link(r)), idx);
+            // both ends of one physical cable
+            assert_eq!(t.neighbor(r.node, r.dim as usize, r.dir as i64), l.node);
+        }
     }
 
     #[test]

@@ -73,6 +73,12 @@ pub struct ScenarioTable {
     /// [`NetModel::fingerprint`] of the fabric this row was tuned for
     /// (`0` = uniform).
     pub net_fp: u64,
+    /// [`crate::harness::scenarios::Scenario::dyn_fingerprint`] of the
+    /// dynamic condition this row was tuned for (`0` = static fabric). A
+    /// lookup under a live timeline/fault must match it, so a table tuned
+    /// on static fabrics is *timeline-stale* for a dynamic one — rejected,
+    /// never silently served.
+    pub timeline_fp: u64,
     pub winners: Vec<Choice>,
 }
 
@@ -101,6 +107,12 @@ pub struct Recommendation {
     pub scenario: String,
     /// The tuned ladder size the decision was read from.
     pub table_bytes: u64,
+    /// True when the requested size sat *below* the ladder floor (32 B) and
+    /// was clamped to the 32 B row — the documented sub-floor behaviour:
+    /// everything under 32 B is pure-latency-bound, so the 32 B winner
+    /// applies. Sizes *above* the tuned maximum are never clamped
+    /// ([`RecommendError::OutOfRange`]).
+    pub clamped: bool,
 }
 
 /// Why a lookup could not be served.
@@ -108,9 +120,15 @@ pub struct Recommendation {
 pub enum RecommendError {
     /// No tuned row for this topology.
     UnknownTopo { dims: Vec<u32> },
-    /// The live model's fingerprint matches no tuned scenario: the table
-    /// is stale for this fabric (re-run `trivance tune`).
-    StaleModel { dims: Vec<u32>, fingerprint: u64 },
+    /// The live `(model, dynamic-condition)` fingerprint pair matches no
+    /// tuned scenario row: the table is stale for this fabric (re-run
+    /// `trivance tune`). `timeline_fp == 0` means the lookup was static.
+    StaleModel { dims: Vec<u32>, fingerprint: u64, timeline_fp: u64 },
+    /// The requested size lies above the tuned ladder's maximum: the
+    /// nearest-in-log-space index would silently extrapolate the last
+    /// winner arbitrarily far, so the lookup is refused instead (re-tune
+    /// with a larger `--max-size`).
+    OutOfRange { dims: Vec<u32>, bytes: u64, max: u64 },
 }
 
 impl std::fmt::Display for RecommendError {
@@ -119,11 +137,20 @@ impl std::fmt::Display for RecommendError {
             RecommendError::UnknownTopo { dims } => {
                 write!(f, "decision table has no row for topology {dims:?} — re-run `trivance tune --topo ...`")
             }
-            RecommendError::StaleModel { dims, fingerprint } => {
+            RecommendError::StaleModel { dims, fingerprint, timeline_fp } => {
                 write!(
                     f,
-                    "decision table is stale for {dims:?}: live NetModel fingerprint {fingerprint:#x} \
+                    "decision table is stale for {dims:?}: live NetModel fingerprint \
+                     {fingerprint:#x} (dynamic-condition fingerprint {timeline_fp:#x}) \
                      matches no tuned scenario — re-run `trivance tune`"
+                )
+            }
+            RecommendError::OutOfRange { dims, bytes, max } => {
+                write!(
+                    f,
+                    "requested size {bytes} B exceeds the tuned ladder's maximum {max} B for \
+                     {dims:?} — the table has no signal there; re-run `trivance tune` with a \
+                     larger --max-size"
                 )
             }
         }
@@ -190,6 +217,7 @@ pub fn distill(torus: &Torus, sweep: &ScenarioSweep) -> TopoTable {
             ScenarioTable {
                 scenario: sc.name.clone(),
                 net_fp: sc.model(torus).fingerprint(),
+                timeline_fp: sc.dyn_fingerprint(torus),
                 winners,
             }
         })
@@ -209,7 +237,7 @@ pub fn tune(
     params: &NetParams,
     threads: usize,
     mode: SimMode,
-) -> DecisionTable {
+) -> Result<DecisionTable, String> {
     params.validate();
     assert!(
         max_size >= 32,
@@ -220,20 +248,34 @@ pub fn tune(
         .iter()
         .map(|torus| {
             let sweep =
-                run_scenarios(torus, &Algo::ALL, &sizes, params, scenarios, threads, mode);
-            distill(torus, &sweep)
+                run_scenarios(torus, &Algo::ALL, &sizes, params, scenarios, threads, mode)?;
+            Ok(distill(torus, &sweep))
         })
-        .collect();
-    DecisionTable { params: *params, topos: topo_tables }
+        .collect::<Result<_, String>>()?;
+    Ok(DecisionTable { params: *params, topos: topo_tables })
 }
 
 impl DecisionTable {
-    /// The tuned rows for `(dims, model)`: topology matched exactly,
-    /// scenario matched by the model's fingerprint (module docs).
+    /// The tuned rows for `(dims, model)` on a *static* fabric: topology
+    /// matched exactly, scenario matched by the model's fingerprint
+    /// (module docs).
     pub fn scenario_row(
         &self,
         dims: &[u32],
         model: &NetModel,
+    ) -> Result<(&TopoTable, &ScenarioTable), RecommendError> {
+        self.scenario_row_dyn(dims, model, 0)
+    }
+
+    /// [`scenario_row`](Self::scenario_row) under a dynamic condition:
+    /// the row must match **both** the model fingerprint and the dynamic
+    /// (timeline/fault) fingerprint — a table tuned on static fabrics is
+    /// timeline-stale for a live dynamic one, and vice versa.
+    pub fn scenario_row_dyn(
+        &self,
+        dims: &[u32],
+        model: &NetModel,
+        timeline_fp: u64,
     ) -> Result<(&TopoTable, &ScenarioTable), RecommendError> {
         let topo = self
             .topos
@@ -244,20 +286,46 @@ impl DecisionTable {
         let sc = topo
             .scenarios
             .iter()
-            .find(|s| s.net_fp == fp)
-            .ok_or_else(|| RecommendError::StaleModel { dims: dims.to_vec(), fingerprint: fp })?;
+            .find(|s| s.net_fp == fp && s.timeline_fp == timeline_fp)
+            .ok_or(RecommendError::StaleModel {
+                dims: dims.to_vec(),
+                fingerprint: fp,
+                timeline_fp,
+            })?;
         Ok((topo, sc))
     }
 
-    /// O(1) lookup: which algorithm (and variant) to run for an `bytes`
-    /// AllReduce on `dims` under the live `model`.
+    /// O(1) lookup: which algorithm (and variant) to run for a `bytes`
+    /// AllReduce on `dims` under the live (static) `model`. Sizes below the
+    /// 32 B ladder floor clamp to the 32 B row (`clamped` is set — the
+    /// sub-floor regime is pure-latency-bound, where the 32 B winner
+    /// applies); sizes above the tuned maximum return
+    /// [`RecommendError::OutOfRange`] instead of extrapolating.
     pub fn recommend(
         &self,
         dims: &[u32],
         model: &NetModel,
         bytes: u64,
     ) -> Result<Recommendation, RecommendError> {
-        let (topo, sc) = self.scenario_row(dims, model)?;
+        self.recommend_dyn(dims, model, 0, bytes)
+    }
+
+    /// [`recommend`](Self::recommend) under a dynamic condition — pass the
+    /// live scenario's
+    /// [`crate::harness::scenarios::Scenario::dyn_fingerprint`].
+    pub fn recommend_dyn(
+        &self,
+        dims: &[u32],
+        model: &NetModel,
+        timeline_fp: u64,
+        bytes: u64,
+    ) -> Result<Recommendation, RecommendError> {
+        let (topo, sc) = self.scenario_row_dyn(dims, model, timeline_fp)?;
+        let max = *topo.sizes.last().expect("non-empty ladder");
+        if bytes > max {
+            return Err(RecommendError::OutOfRange { dims: dims.to_vec(), bytes, max });
+        }
+        let clamped = bytes < topo.sizes[0];
         let idx = ladder_index(bytes, topo.sizes.len());
         let c = sc.winners[idx];
         Ok(Recommendation {
@@ -265,6 +333,7 @@ impl DecisionTable {
             variant: c.variant,
             scenario: sc.scenario.clone(),
             table_bytes: topo.sizes[idx],
+            clamped,
         })
     }
 
@@ -316,9 +385,11 @@ impl DecisionTable {
                 let winners: Vec<String> =
                     sc.winners.iter().map(|c| format!("\"{}\"", c.label())).collect();
                 out.push_str(&format!(
-                    "\n        {{\"name\": \"{}\", \"net_fp\": \"{}\", \"winners\": [{}]}}",
+                    "\n        {{\"name\": \"{}\", \"net_fp\": \"{}\", \
+                     \"timeline_fp\": \"{}\", \"winners\": [{}]}}",
                     json::escape(&sc.scenario),
                     sc.net_fp,
+                    sc.timeline_fp,
                     winners.join(", ")
                 ));
             }
@@ -399,6 +470,15 @@ impl DecisionTable {
                     .ok_or("missing net_fp")?
                     .parse()
                     .map_err(|e| format!("bad net_fp: {e}"))?;
+                // absent in pre-dynamic tables: those rows were all static
+                let timeline_fp: u64 = match sc.get("timeline_fp") {
+                    None => 0,
+                    Some(v) => v
+                        .as_str()
+                        .ok_or("bad timeline_fp")?
+                        .parse()
+                        .map_err(|e| format!("bad timeline_fp: {e}"))?,
+                };
                 let winners: Vec<Choice> = sc
                     .get("winners")
                     .and_then(|w| w.as_arr())
@@ -417,7 +497,7 @@ impl DecisionTable {
                         sizes.len()
                     ));
                 }
-                scenarios.push(ScenarioTable { scenario: name, net_fp, winners });
+                scenarios.push(ScenarioTable { scenario: name, net_fp, timeline_fp, winners });
             }
             topos.push(TopoTable { dims, sizes, scenarios });
         }

@@ -37,7 +37,7 @@ use crate::cost::NetParams;
 use crate::harness::scenarios::{build_scenario_plans, Scenario, ScenarioKind, ScenarioPlans};
 use crate::harness::sweep::{completion_key, eval_grid};
 use crate::net::NetModel;
-use crate::sim::{simulate_plan_scratch, SimMode};
+use crate::sim::{simulate_plan_timeline, SimMode};
 use crate::topology::Torus;
 use crate::util::fmt;
 use crate::util::rng::SplitMix64;
@@ -203,16 +203,19 @@ pub fn replay(
     // same lattice the scenario sweep (and therefore `tune`) ran on.
     let models: Vec<NetModel> = scenarios.iter().map(|sc| sc.model(torus)).collect();
     let ScenarioPlans { built, plans, scratches } =
-        build_scenario_plans(torus, &Algo::ALL, &models, params);
+        build_scenario_plans(torus, &Algo::ALL, scenarios, params)?;
 
     // Resolve each scenario's table row up front (fingerprint checked once
-    // per scenario, not once per collective).
+    // per scenario, not once per collective). Dynamic scenarios match on
+    // their timeline fingerprint too — a static-tuned table is stale for
+    // them and vice versa.
     let rows: Vec<&super::table::ScenarioTable> = models
         .iter()
-        .map(|model| {
+        .zip(scenarios)
+        .map(|(model, sc)| {
             table
-                .scenario_row(torus.dims(), model)
-                .map(|(_, sc)| sc)
+                .scenario_row_dyn(torus.dims(), model, sc.dyn_fingerprint(torus))
+                .map(|(_, row)| row)
                 .map_err(|e| e.to_string())
         })
         .collect::<Result<_, _>>()?;
@@ -245,7 +248,13 @@ pub fn replay(
     let mut distinct: Vec<u64> = traces.iter().flat_map(|t| t.sizes.iter().copied()).collect();
     distinct.sort_unstable();
     distinct.dedup();
+    // timelines depend only on (scenario, size): one per pair, not per cell
+    let timelines: Vec<Vec<crate::net::Timeline>> = scenarios
+        .iter()
+        .map(|sc| distinct.iter().map(|&m| sc.timeline(torus, params, m)).collect())
+        .collect();
     let grid = eval_grid(scenarios.len(), distinct.len(), built.len(), threads, |ci, si, ai| {
+        let timeline = &timelines[ci][si];
         built[ai]
             .1
             .iter()
@@ -254,7 +263,7 @@ pub fn replay(
             .map(|((b, plan), scratch)| {
                 (
                     b.variant,
-                    simulate_plan_scratch(plan, scratch, distinct[si], params, mode)
+                    simulate_plan_timeline(plan, scratch, distinct[si], params, mode, timeline)
                         .completion_s,
                 )
             })
@@ -312,8 +321,9 @@ pub fn replay(
                             regret: total / oracle - 1.0,
                         });
                     }
-                    let degenerate =
-                        !matches!(sc.kind, ScenarioKind::Uniform) && models[ci].is_uniform();
+                    let degenerate = !matches!(sc.kind, ScenarioKind::Uniform)
+                        && !sc.is_dynamic()
+                        && models[ci].is_uniform();
                     ReplayCell { scenario: sc.name.clone(), degenerate, outcomes }
                 })
                 .collect()

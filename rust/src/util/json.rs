@@ -6,9 +6,11 @@
 //! strict recursive-descent parser over the subset the writers emit —
 //! objects, arrays, double-quoted strings with the standard escapes,
 //! numbers parsed as `f64` via `str::parse` (round-trip-exact for every
-//! value Rust's own float formatter printed, and for integers below 2^53),
+//! value Rust's own float formatter printed — `-0.0` and extreme exponents
+//! included, property-pinned below — and for integers below 2^53),
 //! `true`/`false`/`null` — with a depth limit instead of unbounded
-//! recursion. It is **not** a general-purpose validator: surrogate pairs in
+//! recursion. Bare `NaN`/`Infinity` tokens are rejected with a targeted
+//! error before they can reach Rust's (permissive) float parser. It is **not** a general-purpose validator: surrogate pairs in
 //! `\u` escapes are passed through as-is and duplicate object keys are kept
 //! in order (last `get` match wins is *not* implemented; `get` returns the
 //! first).
@@ -113,6 +115,14 @@ fn parse_value(bytes: &[u8], pos: &mut usize, depth: usize) -> Result<Json, Stri
         Some(b't') => parse_lit(bytes, pos, "true", Json::Bool(true)),
         Some(b'f') => parse_lit(bytes, pos, "false", Json::Bool(false)),
         Some(b'n') => parse_lit(bytes, pos, "null", Json::Null),
+        // Bare IEEE tokens some writers emit are NOT JSON — reject them
+        // with a targeted message instead of the generic "bad number" the
+        // digit scanner would produce (Rust's f64 parser would otherwise
+        // happily accept "NaN"/"inf" if they reached it).
+        Some(b'N') | Some(b'I') | Some(b'i') => Err(format!(
+            "bare NaN/Infinity at byte {} — JSON has no non-finite numbers",
+            *pos
+        )),
         Some(_) => parse_number(bytes, pos),
     }
 }
@@ -130,6 +140,11 @@ fn parse_number(bytes: &[u8], pos: &mut usize) -> Result<Json, String> {
     let start = *pos;
     if matches!(bytes.get(*pos), Some(b'-')) {
         *pos += 1;
+        if matches!(bytes.get(*pos), Some(b'N') | Some(b'I') | Some(b'i')) {
+            return Err(format!(
+                "bare NaN/Infinity at byte {start} — JSON has no non-finite numbers"
+            ));
+        }
     }
     while *pos < bytes.len()
         && matches!(bytes[*pos], b'0'..=b'9' | b'.' | b'e' | b'E' | b'+' | b'-')
@@ -306,6 +321,156 @@ mod tests {
         assert!(parse("1e999").is_err(), "non-finite numbers rejected");
         let deep = "[".repeat(100) + &"]".repeat(100);
         assert!(parse(&deep).is_err(), "depth limit enforced");
+    }
+
+    #[test]
+    fn bare_nan_and_infinity_tokens_rejected_with_clear_error() {
+        // Rust's f64 parser accepts "NaN"/"inf"/"Infinity", so these must
+        // never reach it — and the error must say what happened, not the
+        // generic empty-number message.
+        for doc in [
+            "NaN", "-NaN", "Infinity", "-Infinity", "inf", "-inf",
+            "[1, NaN]", "{\"a\": Infinity}", "{\"a\": -Infinity}",
+        ] {
+            let err = parse(doc).unwrap_err();
+            assert!(
+                err.contains("NaN/Infinity"),
+                "{doc:?}: error should name the token class, got {err:?}"
+            );
+        }
+    }
+
+    #[test]
+    fn negative_zero_and_extreme_exponents_round_trip_bit_exactly() {
+        // -0.0 must keep its sign bit through the round trip
+        let z = parse("-0.0").unwrap().as_f64().unwrap();
+        assert_eq!(z.to_bits(), (-0.0f64).to_bits());
+        assert_ne!(z.to_bits(), 0.0f64.to_bits());
+        // the writer prints -0.0 as "-0": still sign-exact on re-parse
+        assert_eq!(
+            parse(&format!("{}", -0.0f64)).unwrap().as_f64().unwrap().to_bits(),
+            (-0.0f64).to_bits()
+        );
+        // extreme magnitudes: largest/smallest normals and subnormals
+        for v in [
+            f64::MAX,
+            -f64::MAX,
+            f64::MIN_POSITIVE,
+            5e-324,            // smallest subnormal
+            -5e-324,
+            1.7976931348623157e308,
+            2.2250738585072014e-308,
+        ] {
+            for s in [format!("{v}"), format!("{v:e}")] {
+                assert_eq!(
+                    parse(&s).unwrap().as_f64().unwrap().to_bits(),
+                    v.to_bits(),
+                    "{s}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn property_random_finite_floats_round_trip_bit_exactly() {
+        // random bit patterns (filtered to finite values) must survive
+        // write -> parse with the exact same bits — the invariant the
+        // tuner tables and BENCH records rely on
+        crate::util::prop::check(
+            0x150B_0001,
+            500,
+            |r| f64::from_bits(r.next_u64()),
+            |&v| {
+                if !v.is_finite() {
+                    return Ok(()); // writers never emit non-finite values
+                }
+                for s in [format!("{v}"), format!("{v:e}")] {
+                    let got = parse(&s)
+                        .map_err(|e| format!("{s}: {e}"))?
+                        .as_f64()
+                        .ok_or_else(|| format!("{s}: not a number"))?;
+                    if got.to_bits() != v.to_bits() {
+                        return Err(format!("{s}: {got} != {v}"));
+                    }
+                }
+                Ok(())
+            },
+        );
+    }
+
+    #[test]
+    fn property_random_documents_round_trip() {
+        // random nested documents rendered with the writers' conventions
+        // must parse back equal (and re-render to a fixpoint)
+        fn gen_value(r: &mut crate::util::SplitMix64, depth: u32) -> Json {
+            match if depth >= 3 { r.below(4) } else { r.below(6) } {
+                0 => Json::Null,
+                1 => Json::Bool(r.below(2) == 1),
+                2 => {
+                    // finite doubles, occasionally integral / signed-zero
+                    let v = match r.below(4) {
+                        0 => r.below(1 << 20) as f64,
+                        1 => -0.0,
+                        _ => loop {
+                            let v = f64::from_bits(r.next_u64());
+                            if v.is_finite() {
+                                break v;
+                            }
+                        },
+                    };
+                    Json::Num(v)
+                }
+                3 => Json::Str(
+                    (0..r.below(8))
+                        .map(|_| *r.choose(&['a', '"', '\\', '\n', '\t', 'µ', 'z']))
+                        .collect(),
+                ),
+                4 => Json::Arr((0..r.below(4)).map(|_| gen_value(r, depth + 1)).collect()),
+                _ => Json::Obj(
+                    (0..r.below(4))
+                        .map(|i| (format!("k{i}"), gen_value(r, depth + 1)))
+                        .collect(),
+                ),
+            }
+        }
+        fn render(v: &Json) -> String {
+            match v {
+                Json::Null => "null".into(),
+                Json::Bool(b) => b.to_string(),
+                Json::Num(x) => format!("{x}"),
+                Json::Str(s) => format!("\"{}\"", escape(s)),
+                Json::Arr(items) => format!(
+                    "[{}]",
+                    items.iter().map(render).collect::<Vec<_>>().join(", ")
+                ),
+                Json::Obj(members) => format!(
+                    "{{{}}}",
+                    members
+                        .iter()
+                        .map(|(k, v)| format!("\"{}\": {}", escape(k), render(v)))
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                ),
+            }
+        }
+        crate::util::prop::check(
+            0x150B_0002,
+            200,
+            |r| gen_value(r, 0),
+            |v| {
+                let doc = render(v);
+                let parsed = parse(&doc).map_err(|e| format!("{doc}: {e}"))?;
+                // Num(-0.0) == Num(0.0) under f64 PartialEq, so compare the
+                // re-render (which is bit-faithful) as the fixpoint check
+                if render(&parsed) != doc {
+                    return Err(format!("not a fixpoint: {doc} -> {}", render(&parsed)));
+                }
+                if parsed != *v {
+                    return Err(format!("value changed through {doc}"));
+                }
+                Ok(())
+            },
+        );
     }
 
     #[test]

@@ -16,6 +16,39 @@ pub mod prop;
 
 pub use rng::SplitMix64;
 
+/// FNV-1a fingerprint accumulator — the one hash behind every persisted
+/// fingerprint in the crate ([`crate::net::NetModel::fingerprint`],
+/// [`crate::net::Timeline::fingerprint`],
+/// [`crate::schedule::rewrite::Fault::fingerprint`], the scenario
+/// dynamic-condition fingerprints). Those values live in tuner JSON tables
+/// and [`crate::sim::PlanKey`]s, so all producers must share one
+/// implementation: a divergent copy would silently break cross-component
+/// staleness comparisons.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(u64);
+
+impl Fnv {
+    const OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+    const PRIME: u64 = 0x0000_0100_0000_01b3;
+
+    #[allow(clippy::new_without_default)]
+    pub fn new() -> Fnv {
+        Fnv(Self::OFFSET)
+    }
+
+    pub fn mix(&mut self, v: u64) {
+        self.0 ^= v;
+        self.0 = self.0.wrapping_mul(Self::PRIME);
+    }
+
+    /// The accumulated hash with the low bit forced to 1 — for fingerprint
+    /// namespaces where `0` is reserved (uniform model, empty timeline,
+    /// static scenario).
+    pub fn finish_nonzero(self) -> u64 {
+        self.0 | 1
+    }
+}
+
 /// `⌈log_base(n)⌉` for integers (`n >= 1`, `base >= 2`).
 pub fn ceil_log(base: u64, n: u64) -> u32 {
     assert!(base >= 2 && n >= 1);

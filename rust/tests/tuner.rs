@@ -38,7 +38,7 @@ fn json_round_trip_is_bit_identical() {
         hop_latency_s: 101.3e-9,
     };
     let topos = [Torus::ring(9), Torus::new(&[3, 3])];
-    let table = tune(&topos, &presets(), 256 << 10, &params, 0, SimMode::Flow);
+    let table = tune(&topos, &presets(), 256 << 10, &params, 0, SimMode::Flow).unwrap();
     let json = table.to_json();
     let parsed = DecisionTable::from_json(&json).expect("own output parses");
     // serialize → parse → serialize is a fixpoint (bit identity for every
@@ -79,9 +79,9 @@ fn recommend_matches_a_fresh_sweep_on_ring9_ring27_and_3x3() {
     let p = NetParams::default();
     for dims in [vec![9u32], vec![27], vec![3, 3]] {
         let t = Torus::new(&dims);
-        let table = tune(&[t.clone()], &presets(), 256 << 10, &p, 0, SimMode::Flow);
+        let table = tune(&[t.clone()], &presets(), 256 << 10, &p, 0, SimMode::Flow).unwrap();
         let sizes = tune_ladder(256 << 10);
-        let sweep = run_scenarios(&t, &Algo::ALL, &sizes, &p, &presets(), 0, SimMode::Flow);
+        let sweep = run_scenarios(&t, &Algo::ALL, &sizes, &p, &presets(), 0, SimMode::Flow).unwrap();
         for (ci, sc) in sweep.scenarios.iter().enumerate() {
             let model = sc.model(&t);
             for (si, &m) in sweep.sizes.iter().enumerate() {
@@ -108,7 +108,7 @@ fn recommend_matches_a_fresh_sweep_on_ring9_ring27_and_3x3() {
 fn stale_net_model_fingerprint_is_rejected() {
     let t = Torus::new(&[3, 3]);
     let p = NetParams::default();
-    let table = tune(&[t.clone()], &presets(), 64 << 10, &p, 0, SimMode::Flow);
+    let table = tune(&[t.clone()], &presets(), 64 << 10, &p, 0, SimMode::Flow).unwrap();
     // every tuned preset resolves
     for sc in presets() {
         table
@@ -120,9 +120,10 @@ fn stale_net_model_fingerprint_is_rejected() {
     // silently served a winner tuned for another network
     let stranger = NetModel::straggler(&t, 2, 4.0, 0xBEEF);
     match table.recommend(t.dims(), &stranger, 4096) {
-        Err(RecommendError::StaleModel { fingerprint, dims }) => {
+        Err(RecommendError::StaleModel { fingerprint, dims, timeline_fp }) => {
             assert_eq!(fingerprint, stranger.fingerprint());
             assert_eq!(dims, t.dims().to_vec());
+            assert_eq!(timeline_fp, 0, "static lookup");
         }
         other => panic!("expected StaleModel, got {other:?}"),
     }
@@ -140,7 +141,7 @@ fn ladder_trace_replay_is_exactly_the_oracle() {
     // per-call winner itself: totals must match the oracle bit for bit
     let t = Torus::ring(9);
     let p = NetParams::default();
-    let table = tune(&[t.clone()], &presets(), 1 << 20, &p, 0, SimMode::Flow);
+    let table = tune(&[t.clone()], &presets(), 1 << 20, &p, 0, SimMode::Flow).unwrap();
     let trace = Trace { name: "ladder", desc: "tuned points", sizes: tune_ladder(1 << 20) };
     let report = replay(&t, &presets(), &[trace], &table, &p, 0, SimMode::Flow).unwrap();
     for cells in &report.cells {
@@ -168,7 +169,7 @@ fn replay_acceptance_bounds_on_ring8_and_ring9() {
     let p = NetParams::default();
     for dims in [vec![8u32], vec![9]] {
         let t = Torus::new(&dims);
-        let table = tune(&[t.clone()], &presets(), 128 << 20, &p, 0, SimMode::Flow);
+        let table = tune(&[t.clone()], &presets(), 128 << 20, &p, 0, SimMode::Flow).unwrap();
         let traces = builtin_traces(160, 128 << 20);
         let report = replay(&t, &presets(), &traces, &table, &p, 0, SimMode::Flow).unwrap();
         let worst = report.worst_table_regret();
@@ -196,7 +197,7 @@ fn replay_acceptance_bounds_on_ring8_and_ring9() {
 fn replay_rejects_mismatched_params_and_missing_topo() {
     let t = Torus::ring(8);
     let p = NetParams::default();
-    let table = tune(&[t.clone()], &presets(), 64 << 10, &p, 0, SimMode::Flow);
+    let table = tune(&[t.clone()], &presets(), 64 << 10, &p, 0, SimMode::Flow).unwrap();
     let traces = builtin_traces(10, 64 << 10);
     // a table tuned at 800 Gb/s must not be consulted at 200 Gb/s
     let other = NetParams::default().with_bandwidth_gbps(200.0);
@@ -205,6 +206,105 @@ fn replay_rejects_mismatched_params_and_missing_topo() {
     // and a topology with no tuned row is an error, not a guess
     let t9 = Torus::ring(9);
     assert!(replay(&t9, &presets(), &traces, &table, &p, 1, SimMode::Flow).is_err());
+}
+
+#[test]
+fn recommend_boundaries_clamp_below_and_reject_above() {
+    // ISSUE 5 satellite: extrapolation semantics. Below the 32 B ladder
+    // floor the lookup clamps (documented: sub-floor is pure-latency-bound,
+    // the 32 B winner applies, `clamped` is set); above the tuned maximum
+    // it refuses with OutOfRange instead of silently serving the last
+    // winner arbitrarily far out of range.
+    let t = Torus::new(&[3, 3]);
+    let p = NetParams::default();
+    let max = 64u64 << 10;
+    let table = tune(&[t.clone()], &presets(), max, &p, 0, SimMode::Flow).unwrap();
+    let model = NetModel::uniform(&t);
+    // 31 B: clamped to the 32 B row
+    let r31 = table.recommend(t.dims(), &model, 31).unwrap();
+    assert!(r31.clamped);
+    assert_eq!(r31.table_bytes, 32);
+    // 32 B: exact floor, not clamped
+    let r32 = table.recommend(t.dims(), &model, 32).unwrap();
+    assert!(!r32.clamped);
+    assert_eq!(r32.table_bytes, 32);
+    assert_eq!((r31.algo, r31.variant), (r32.algo, r32.variant));
+    // max: exact ceiling
+    let rmax = table.recommend(t.dims(), &model, max).unwrap();
+    assert!(!rmax.clamped);
+    assert_eq!(rmax.table_bytes, max);
+    // max + 1: refused, with the offending size and bound in the error
+    match table.recommend(t.dims(), &model, max + 1) {
+        Err(RecommendError::OutOfRange { bytes, max: m, .. }) => {
+            assert_eq!(bytes, max + 1);
+            assert_eq!(m, max);
+        }
+        other => panic!("expected OutOfRange, got {other:?}"),
+    }
+    assert!(table
+        .recommend(t.dims(), &model, max + 1)
+        .unwrap_err()
+        .to_string()
+        .contains("exceeds the tuned ladder"));
+}
+
+#[test]
+fn static_table_is_timeline_stale_for_dynamic_lookups_and_vice_versa() {
+    use trivance::harness::scenarios::{all_presets, dynamic_presets};
+    let t = Torus::new(&[3, 3]);
+    let p = NetParams::default();
+    let static_table = tune(&[t.clone()], &presets(), 64 << 10, &p, 0, SimMode::Flow).unwrap();
+    // a live dynamic condition (flap) must be rejected by a static-tuned
+    // table even though its *base model* is uniform — the timeline
+    // fingerprint is part of the row identity
+    let flap = dynamic_presets().into_iter().find(|s| s.name == "flap").unwrap();
+    let model = flap.model(&t);
+    assert_eq!(model.fingerprint(), 0, "flap's base model is uniform");
+    match static_table.recommend_dyn(t.dims(), &model, flap.dyn_fingerprint(&t), 4096) {
+        Err(RecommendError::StaleModel { fingerprint, timeline_fp, .. }) => {
+            // both halves of the row identity are reported separately
+            assert_eq!(fingerprint, 0, "flap's base model is uniform");
+            assert_eq!(timeline_fp, flap.dyn_fingerprint(&t));
+        }
+        other => panic!("expected timeline-stale rejection, got {other:?}"),
+    }
+    // a table tuned WITH the dynamic presets serves them...
+    let dyn_table = tune(&[t.clone()], &all_presets(), 64 << 10, &p, 0, SimMode::Flow).unwrap();
+    for sc in all_presets() {
+        dyn_table
+            .recommend_dyn(t.dims(), &sc.model(&t), sc.dyn_fingerprint(&t), 4096)
+            .unwrap_or_else(|e| panic!("{}: {e}", sc.name));
+    }
+    // ...and round-trips its timeline fingerprints through JSON bit-exactly
+    let parsed = DecisionTable::from_json(&dyn_table.to_json()).unwrap();
+    assert_eq!(parsed.topos, dyn_table.topos);
+    // a *static* lookup against the flap row's base model still resolves
+    // to the uniform row (timeline_fp 0), not the flap row
+    let rec = parsed.recommend(t.dims(), &NetModel::uniform(&t), 4096).unwrap();
+    assert_eq!(rec.scenario, "uniform");
+}
+
+#[test]
+fn pre_dynamic_tables_parse_with_zero_timeline_fp() {
+    // backward compat: tables written before the timeline_fp field default
+    // every row to static
+    let doc = r#"{
+  "schema": "trivance.tuner.v1",
+  "params": {"alpha_s": 1.5e-6, "link_bw_bps": 800000000000, "link_latency_s": 1e-7, "hop_latency_s": 1e-7},
+  "topos": [
+    {
+      "dims": [9],
+      "sizes": [32, 64],
+      "scenarios": [
+        {"name": "uniform", "net_fp": "0", "winners": ["trivance-L", "trivance-L"]}
+      ]
+    }
+  ]
+}"#;
+    let table = DecisionTable::from_json(doc).unwrap();
+    assert_eq!(table.topos[0].scenarios[0].timeline_fp, 0);
+    let t = Torus::ring(9);
+    assert!(table.recommend(t.dims(), &NetModel::uniform(&t), 40).is_ok());
 }
 
 #[test]

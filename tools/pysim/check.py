@@ -38,7 +38,7 @@ chk("plan ring9 rel", all(abs(m[3] - 1.0) < 1e-9 for m in p9.msgs))
 # single message 0->1 on ring4
 s1 = Schedule("one", 4, 4)
 st = s1.push_step()
-st[0].append(Send(1, [(frozenset(range(4)), "reduce")], MIN))
+st[0].append(Send(1, [(frozenset(range(4)), "reduce", frozenset())], MIN))
 f, _ = simulate_flow(Plan(s1, Torus([4])), 1 << 20, P)
 exp = P["alpha"] + (1 << 20) * beta + ph
 chk("flow single message", abs(f - exp) < 1e-12, f"{f} vs {exp}")
@@ -58,7 +58,7 @@ chk("flow ring27 alpha-bound", 4.5e-6 < f < 7.5e-6, f"{f}")
 s6 = Schedule("asym", 6, 6)
 st = s6.push_step()
 for src, to in [(0, 2), (1, 2), (4, 5)]:
-    st[src].append(Send(to, [(frozenset(range(6)), "reduce")], MIN))
+    st[src].append(Send(to, [(frozenset(range(6)), "reduce", frozenset())], MIN))
 f, _ = simulate_flow(Plan(s6, Torus([6])), 1 << 20, P)
 exp = P["alpha"] + 2.0 * (1 << 20) * beta + 2.0 * ph
 chk("flow asymmetric", abs(f - exp) < exp * 1e-6, f"{f} vs {exp}")
@@ -66,14 +66,14 @@ chk("flow asymmetric", abs(f - exp) < exp * 1e-6, f"{f} vs {exp}")
 # --- reference packet closed forms (sim/packet.rs tests) ---
 s1b = Schedule("one", 4, 4)
 st = s1b.push_step()
-st[0].append(Send(1, [(frozenset(range(4)), "reduce")], MIN))
+st[0].append(Send(1, [(frozenset(range(4)), "reduce", frozenset())], MIN))
 k, _ = simulate_packet_ref(Plan(s1b, Torus([4])), 64 * 1024, P, 4096)
 exp = P["alpha"] + 64 * 1024 * beta + ph
 chk("ref packet single hop", abs(k - exp) < 1e-12, f"{k} vs {exp}")
 
 s3 = Schedule("hop3", 9, 9)
 st = s3.push_step()
-st[0].append(Send(3, [(frozenset(range(9)), "reduce")], MIN))
+st[0].append(Send(3, [(frozenset(range(9)), "reduce", frozenset())], MIN))
 k, _ = simulate_packet_ref(Plan(s3, Torus([9])), 256 * 1024, P, 4096)
 exp = P["alpha"] + 256 * 1024 * beta + 2 * 4096 * beta + 3 * ph
 chk("ref packet 3-hop pipeline", abs(k - exp) < exp * 1e-9, f"{k} vs {exp}")

@@ -32,14 +32,14 @@ def chk(name, cond, detail=""):
 # --- 1. closed forms with the batched engine (Rust packet.rs tests) ---
 s1 = Schedule("one", 4, 4)
 st = s1.push_step()
-st[0].append(Send(1, [(frozenset(range(4)), "reduce")], MIN))
+st[0].append(Send(1, [(frozenset(range(4)), "reduce", frozenset())], MIN))
 k, _ = simulate_packet_batched(Plan(s1, Torus([4])), 64 * 1024, P, 4096)
 exp = P["alpha"] + 64 * 1024 * beta + ph
 chk("batched single hop", abs(k - exp) < 1e-12, f"{k} vs {exp}")
 
 s3 = Schedule("hop3", 9, 9)
 st = s3.push_step()
-st[0].append(Send(3, [(frozenset(range(9)), "reduce")], MIN))
+st[0].append(Send(3, [(frozenset(range(9)), "reduce", frozenset())], MIN))
 k, _ = simulate_packet_batched(Plan(s3, Torus([9])), 256 * 1024, P, 4096)
 exp = P["alpha"] + 256 * 1024 * beta + 2 * 4096 * beta + 3 * ph
 chk("batched 3-hop pipeline", abs(k - exp) < exp * 1e-9, f"{k} vs {exp}")
@@ -65,7 +65,7 @@ chk("batched zero bytes", abs(k - exp) < 1e-15, f"{k} vs {exp}")
 # more (the Rust test asserts rel < 1e-12, not bit equality)
 s_frac = Schedule("frac", 4, 3)
 st = s_frac.push_step()
-st[0].append(Send(1, [(frozenset([0]), "reduce")], MIN))
+st[0].append(Send(1, [(frozenset([0]), "reduce", frozenset())], MIN))
 pf = Plan(s_frac, Torus([4]))
 a, _ = simulate_packet_batched(pf, (1 << 20) + 1, P, 4096)
 b, _ = simulate_packet_ref(pf, (1 << 20) + 1, P, 4096)

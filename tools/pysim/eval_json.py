@@ -1,0 +1,102 @@
+"""Mirror of the util::json hardening properties (ISSUE 5 satellite).
+
+Python's float parsing/printing implements the same IEEE-754
+shortest-round-trip contract as Rust's, so the bit-exactness properties
+asserted by `rust/src/util/json.rs`'s property tests are validated here
+without a Rust toolchain:
+
+  * random finite f64 bit patterns survive format -> parse bit-exactly
+    (both positional and exponent notation);
+  * -0.0 keeps its sign bit, the extreme normals/subnormals round-trip;
+  * bare NaN/Infinity tokens are *rejected* (Python's json module accepts
+    them by default — `parse_constant` raising mirrors the Rust reader's
+    strictness), and deep nesting is bounded.
+"""
+
+import json
+import math
+import struct
+import sys
+
+FAILED = []
+
+
+def check(name, ok, detail=""):
+    print(f"[{'ok ' if ok else 'FAIL'}] {name} {detail}")
+    if not ok:
+        FAILED.append(name)
+
+
+def bits(x):
+    return struct.unpack("<Q", struct.pack("<d", x))[0]
+
+
+# SplitMix64 — same generator as the Rust property test (seed included).
+MASK = (1 << 64) - 1
+
+
+def splitmix(seed):
+    state = seed
+    while True:
+        state = (state + 0x9E3779B97F4A7C15) & MASK
+        z = state
+        z = ((z ^ (z >> 30)) * 0xBF58476D1CE4E5B9) & MASK
+        z = ((z ^ (z >> 27)) * 0x94D049BB133111EB) & MASK
+        yield z ^ (z >> 31)
+
+
+rng = splitmix(0x150B0001)
+checked = 0
+bad = 0
+for _ in range(500):
+    v = struct.unpack("<d", struct.pack("<Q", next(rng)))[0]
+    if not math.isfinite(v):
+        continue
+    checked += 1
+    # Python's repr is the shortest round-trip form (same contract as the
+    # Rust writers' `{}` formatter); exponent-notation round-trips are a
+    # Rust-formatter property (`{:e}` there is shortest too) covered by the
+    # Rust-side property test — Python's f"{v:e}" is fixed-6-digit and
+    # cannot mirror it.
+    if bits(float(repr(v))) != bits(v):
+        bad += 1
+    # exponent notation with explicitly sufficient digits must also be
+    # bit-exact through the parser (17 significant digits always round-trip)
+    if bits(float(f"{v:.17e}")) != bits(v):
+        bad += 1
+check("random finite floats round-trip bit-exactly", bad == 0, f"{checked} checked")
+
+z = float("-0.0")
+check("-0.0 keeps its sign bit", bits(float(repr(z))) == bits(z))
+for v in (1.7976931348623157e308, 5e-324, -5e-324, 2.2250738585072014e-308):
+    check(f"extreme magnitude {v!r} round-trips", bits(float(repr(v))) == bits(v))
+
+# NaN / Infinity rejection (mirroring the Rust reader's strictness)
+def reject_constant(name):
+    raise ValueError(f"bare {name} is not JSON")
+
+
+for doc in ("NaN", "Infinity", "-Infinity", "[1, NaN]", '{"a": -Infinity}'):
+    try:
+        json.loads(doc, parse_constant=reject_constant)
+        check(f"reject {doc!r}", False)
+    except ValueError:
+        check(f"reject {doc!r}", True)
+
+# depth contract mirror: the Rust reader caps nesting at 64, and every
+# artifact this repo writes stays within it — a 64-deep document must
+# parse; the cap itself (65+ rejected) is a Rust-side property the Rust
+# unit tests pin (Python's json has no such cap, so only the in-contract
+# side can be mirrored here)
+v = json.loads("[" * 64 + "]" * 64)
+depth = 0
+while isinstance(v, list) and v:
+    v = v[0]
+    depth += 1
+check("64-deep documents (the Rust reader's cap) parse", depth == 63 and v == [])
+
+print()
+if FAILED:
+    print(f"eval_json: {len(FAILED)} FAILURES: {FAILED}")
+    sys.exit(1)
+print("json eval: all asserted properties hold")

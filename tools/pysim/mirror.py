@@ -219,6 +219,18 @@ class NetModel:
         return m
 
     @staticmethod
+    def asymmetric_dims(torus, up_scale, down_scale):
+        """Per-direction bandwidth scales (mirror of
+        NetModel::asymmetric_dims): +1 links of dim d at up_scale[d], -1
+        links at down_scale[d]."""
+        m = NetModel(torus)
+        for node in range(torus.n):
+            for d in range(torus.ndims()):
+                m.bw_scale[torus.link_index(node, d, 1)] = up_scale[d]
+                m.bw_scale[torus.link_index(node, d, -1)] = down_scale[d]
+        return m
+
+    @staticmethod
     def straggler(torus, k, factor, seed):
         m = NetModel(torus)
         for l in pick_links(torus, k, seed, keep_connected=False):
@@ -271,6 +283,35 @@ class NetModel:
             links.append(parent_link[cur])
             cur = parent[cur]
         return links[::-1]
+
+    def distance_avoiding(self, src, dst):
+        """BFS hop distance avoiding the down set (None if unreachable) —
+        mirror of NetModel::distance_avoiding (rewrite donor metric)."""
+        try:
+            return len(self.route_avoiding(src, dst))
+        except AssertionError:
+            return None
+
+    def distances_to(self, dst):
+        """Hop distance from every node to `dst` avoiding the down set
+        (None = unreachable): one reverse BFS — mirror of
+        NetModel::distances_to (the rewrite cleanup's bulk donor metric;
+        shortest-path lengths agree with distance_avoiding exactly)."""
+        t = self.torus
+        dist = [None] * t.n
+        dist[dst] = 0
+        q = deque([dst])
+        while q:
+            v = q.popleft()
+            for d in range(t.ndims()):
+                for dr in (1, -1):
+                    u = t.neighbor(v, d, -dr)
+                    if self.down[t.link_index(u, d, dr)]:
+                        continue
+                    if dist[u] is None:
+                        dist[u] = dist[v] + 1
+                        q.append(u)
+        return dist
 
 
 # ------------------------------------------------------------ util
@@ -494,8 +535,10 @@ def simulate_held(p):
 
 
 # ------------------------------------------------------------ schedule IR
-# A Send mirrors only what the SimPlan consumes: destination, pieces as
-# (blocks_set, kind), and the route hint. steps[k][src] = [Send, ...].
+# A Send mirrors what the SimPlan consumes — destination, pieces, route
+# hint — plus (since the dynamic-fabrics PR) each piece's *contributor set*,
+# which the fault-rewrite mirror's shrink/substitute algebra operates on.
+# Pieces are (blocks_set, kind, contrib_set); steps[k][src] = [Send, ...].
 
 
 class Send:
@@ -505,7 +548,7 @@ class Send:
         self.to, self.pieces, self.route = to, pieces, route
 
     def rel_bytes(self, n_blocks):
-        return sum(len(b) for b, _ in self.pieces) / n_blocks
+        return sum(len(b) for b, _k, _c in self.pieces) / n_blocks
 
 
 class Schedule:
@@ -534,13 +577,14 @@ class Schedule:
 
 
 def allgather_schedule(p):
+    full = frozenset(range(p.n))
     s = Schedule(f"ag", p.n, p.n)
     for k in range(p.num_steps()):
         st = s.push_step()
         for ag in p.sends(k):
             if not ag.blocks:
                 continue
-            st[ag.src].append(Send(ag.to, [(ag.blocks, "set")], ag.route))
+            st[ag.src].append(Send(ag.to, [(ag.blocks, "set", full)], ag.route))
     return s
 
 
@@ -606,12 +650,19 @@ def latency_allreduce(p):
         st = s.push_step()
         for msg in step_msgs:
             st[msg["src"]].append(
-                Send(msg["to"], [(full, "reduce") for _ in msg["parts"]], msg["route"])
+                Send(
+                    msg["to"],
+                    [(full, "reduce", part) for part in msg["parts"]],
+                    msg["route"],
+                )
             )
     return s
 
 
 def reduce_scatter_schedule(p):
+    # Tree-reversal RS with real contributor sets (the subtree each sender
+    # forwards), piece-merged per adjacent equal contrib exactly as Rust's
+    # agpattern::reduce_scatter_schedule does.
     n = p.n
     s_total = p.num_steps()
     edges = [[] for _ in range(n)]
@@ -623,16 +674,23 @@ def reduce_scatter_schedule(p):
     rs = Schedule("rs", n, n)
     for _ in range(s_total):
         rs.push_step()
-    groups = {}
+    groups = {}  # (t, src, dst) -> [(b, contrib_frozenset)], block-ascending
     for b in range(n):
         subtree = {}
         for t, u, v in reversed(edges[b]):
             sub_v = subtree.pop(v, frozenset([v])) | {v}
-            groups.setdefault((s_total - 1 - t, v, u), []).append(b)
+            groups.setdefault((s_total - 1 - t, v, u), []).append((b, sub_v))
             subtree[u] = subtree.get(u, frozenset([u])) | sub_v
     for (t, src, dst) in sorted(groups):
-        blocks = frozenset(groups[(t, src, dst)])
-        rs.steps[t][src].append(Send(dst, [(blocks, "reduce")], MIN))
+        raw = sorted(groups[(t, src, dst)], key=lambda x: x[0])
+        pieces = []
+        for b, contrib in raw:
+            if pieces and pieces[-1][2] == contrib:
+                blocks, kind, c = pieces[-1]
+                pieces[-1] = (blocks | {b}, kind, c)
+            else:
+                pieces.append((frozenset([b]), "reduce", contrib))
+        rs.steps[t][src].append(Send(dst, pieces, MIN))
     return rs
 
 
@@ -658,7 +716,12 @@ def permute_schedule(s, mp):
         for src in range(s.n):
             for snd in step[src]:
                 pieces = [
-                    (frozenset(mp[b] for b in blocks), kind) for blocks, kind in snd.pieces
+                    (
+                        frozenset(mp[b] for b in blocks),
+                        kind,
+                        frozenset(mp[c] for c in contrib),
+                    )
+                    for blocks, kind, contrib in snd.pieces
                 ]
                 route = snd.route
                 if route != MIN:
@@ -679,8 +742,8 @@ def concurrent_slices(slices, name):
             for src in range(n):
                 for snd in step[src]:
                     pieces = [
-                        (frozenset(b + off for b in blocks), kind)
-                        for blocks, kind in snd.pieces
+                        (frozenset(b + off for b in blocks), kind, contrib)
+                        for blocks, kind, contrib in snd.pieces
                     ]
                     out.steps[k][src].append(Send(snd.to, pieces, snd.route))
     return out
@@ -730,7 +793,6 @@ def lift_phase(out, torus, phase, dim, processed):
     ndims = torus.ndims()
 
     def lift_blocks(x, ring):
-        cnt = 1
         ranges = []
         for e in range(ndims):
             if e == dim:
@@ -741,6 +803,20 @@ def lift_phase(out, torus, phase, dim, processed):
                 ranges.append(frozenset(range(torus.dims[e])))
         return torus.product_set(ranges)
 
+    def lift_contrib(x, ring):
+        # contributors: processed dims full, `dim` from the ring set, rest
+        # pinned to x (mirror of hierarchical::Lift::contrib)
+        ranges = []
+        for e in range(ndims):
+            if e == dim:
+                ranges.append(ring)
+            elif e in processed:
+                ranges.append(frozenset(range(torus.dims[e])))
+            else:
+                ranges.append(frozenset([torus.coord(x, e)]))
+        return torus.product_set(ranges)
+
+    full_n = frozenset(range(torus.n))
     for ring_step in phase.steps:
         st = out.push_step()
         for ring_src in range(phase.n):
@@ -752,8 +828,12 @@ def lift_phase(out, torus, phase, dim, processed):
                     c[dim] = snd.to
                     dst = torus.rank(c)
                     pieces = [
-                        (frozenset(lift_blocks(x, blocks)), kind)
-                        for blocks, kind in snd.pieces
+                        (
+                            frozenset(lift_blocks(x, blocks)),
+                            kind,
+                            full_n if kind == "set" else frozenset(lift_contrib(x, contrib)),
+                        )
+                        for blocks, kind, contrib in snd.pieces
                     ]
                     route = snd.route
                     if route != MIN:
@@ -875,11 +955,16 @@ def build(algo, variant, torus):
 
 
 class Plan:
-    def __init__(self, schedule, torus, model=None):
+    def __init__(self, schedule, torus, model=None, route_model=None, switch_step=None):
+        """`route_model`/`switch_step` mirror SimPlan::build_faulted: steps
+        >= switch_step route on route_model (post-fault), earlier steps on
+        `model` (pre-fault); scale columns always come from `model`."""
         assert schedule.n == torus.n
         if model is None:
             model = NetModel.uniform(torus)
         assert model.torus.dims == torus.dims
+        if route_model is None:
+            route_model, switch_step = model, schedule.num_steps()
         self.n = schedule.n
         self.nsteps = schedule.num_steps()
         self.num_links = torus.num_links()
@@ -889,12 +974,13 @@ class Plan:
         self.uniform = model.is_uniform()
         self.msgs = []  # (src, dst, step, rel_bytes, route)
         for k, step in enumerate(schedule.steps):
+            router = model if k < switch_step else route_model
             for src in range(self.n):
                 for snd in step[src]:
                     rel = snd.rel_bytes(schedule.n_blocks)
                     if rel <= 0.0:
                         continue
-                    route = model.route(src, snd.to, snd.route)
+                    route = router.route(src, snd.to, snd.route)
                     self.msgs.append((src, snd.to, k, rel, route))
         self.inject = {}
         self.expected = {}
@@ -1273,6 +1359,626 @@ def simulate_packet_batched(plan, m_bytes, params, mtu):
                     head = min(total, float(mtu))
                     push(start + head / caps[l] + hops[l], ("batch", mi, hop + 1, tail_ready))
     return completion, events
+
+
+# ------------------------------------------------------- dynamic fabrics
+# Mirror of rust/src/net/timeline.rs + the *_timeline engines (flow epochs
+# / packet busy-interval splitting), SimPlan::build_faulted (see Plan), and
+# schedule::rewrite. Keep epoch application order, donor selection, and the
+# preset window arithmetic in lockstep with Rust.
+
+
+class Timeline:
+    """Epochs: [(t, [mutation, ...])] sorted by t. Mutations:
+    ("class", link, bw_scale, lat_scale, proc_scale) | ("down", link, flag)."""
+
+    def __init__(self, epochs):
+        for t, _ in epochs:
+            assert t >= 0.0
+        self.epochs = sorted(epochs, key=lambda e: e[0])
+
+    def is_empty(self):
+        return not self.epochs
+
+
+EMPTY_TIMELINE = Timeline([])
+
+
+def simulate_flow_dyn(plan, m_bytes, params, timeline):
+    """Flow engine under a timeline: one epoch event per epoch, rates
+    re-water-filled with the capacities in force (down = capacity 0, flows
+    stall). Mirror of flow::simulate_flow_plan_timeline."""
+    if timeline.is_empty():
+        return simulate_flow(plan, m_bytes, params)
+    n, nsteps = plan.n, plan.nsteps
+    if nsteps == 0:
+        return 0.0, 0
+    cap = params["bw"] / 8.0
+    caps_up = link_caps(plan, params)
+    caps_eff = list(caps_up)
+    down = [False] * plan.num_links
+    link_hop = link_hop_lat(plan, params)
+
+    received = [0] * (n * nsteps)
+    entered = [-1] * n
+    heap = []
+    seq = 0
+
+    def push(t, ev):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, ev))
+
+    for r in range(n):
+        push(params["alpha"], ("step", r, 0))
+    for ei, (t, _) in enumerate(timeline.epochs):
+        push(t, ("epoch", ei, 0))
+
+    active = []  # [msg, remaining, rate]
+    nactive = [0] * plan.num_links
+    touched = []
+    in_touched = [False] * plan.num_links
+    residual = [0.0] * plan.num_links
+    unfrozen = [0] * plan.num_links
+    now = 0.0
+    completion = 0.0
+    events = 0
+    need_recompute = False
+
+    def wf_inject(route):
+        for l in route:
+            if not in_touched[l]:
+                in_touched[l] = True
+                touched.append(l)
+            nactive[l] += 1
+
+    def wf_drain(route):
+        for l in route:
+            nactive[l] -= 1
+
+    def recompute():
+        nonlocal touched
+        keep = []
+        for l in touched:
+            if nactive[l] == 0:
+                in_touched[l] = False
+            else:
+                residual[l] = caps_eff[l]
+                unfrozen[l] = nactive[l]
+                keep.append(l)
+        touched = keep
+        unfrozen_flows = list(range(len(active)))
+        while unfrozen_flows:
+            min_share = float("inf")
+            for l in touched:
+                if unfrozen[l] > 0:
+                    share = residual[l] / unfrozen[l]
+                    if share < min_share:
+                        min_share = share
+            if min_share == float("inf"):
+                for fi in unfrozen_flows:
+                    active[fi][2] = cap
+                break
+            freeze = []
+            i = 0
+            while i < len(unfrozen_flows):
+                fi = unfrozen_flows[i]
+                share = float("inf")
+                for l in plan.msgs[active[fi][0]][4]:
+                    s = residual[l] / max(unfrozen[l], 1)
+                    if s < share:
+                        share = s
+                if share <= min_share * (1.0 + SHARE_EPS):
+                    freeze.append(fi)
+                    unfrozen_flows[i] = unfrozen_flows[-1]
+                    unfrozen_flows.pop()
+                else:
+                    i += 1
+            if not freeze:
+                for fi in unfrozen_flows:
+                    active[fi][2] = min_share
+                break
+            for fi in freeze:
+                active[fi][2] = min_share
+                for l in plan.msgs[active[fi][0]][4]:
+                    residual[l] -= min_share
+                    if residual[l] < 0.0:
+                        residual[l] = 0.0
+                    unfrozen[l] -= 1
+
+    while True:
+        t_event = heap[0][0] if heap else float("inf")
+        t_drain = float("inf")
+        for f in active:
+            if f[2] > 0.0:
+                t = now + f[1] / f[2]
+                if t < t_drain:
+                    t_drain = t
+        t_next = min(t_event, t_drain)
+        if t_next == float("inf"):
+            break
+        dt = t_next - now
+        if dt > 0.0:
+            for f in active:
+                f[1] -= f[2] * dt
+        now = t_next
+
+        i = 0
+        while i < len(active):
+            f = active[i]
+            if f[1] <= f[2] * TIME_EPS + 1e-9 * TIME_EPS or f[1] <= 1e-7:
+                active[i] = active[-1]
+                active.pop()
+                src, dst, k, rel, route = plan.msgs[f[0]]
+                wf_drain(route)
+                lat = sum(link_hop[l] for l in route)
+                push(now + lat, ("deliv", dst, k))
+                need_recompute = True
+            else:
+                i += 1
+
+        while heap and heap[0][0] <= now + max(TIME_EPS, now * 1e-12):
+            _, _, ev = heapq.heappop(heap)
+            events += 1
+            if ev[0] == "step":
+                _, node, step = ev
+                entered[node] = step
+                for mi in plan.injections(node, step):
+                    active.append([mi, plan.bytes(mi, m_bytes), 0.0])
+                    wf_inject(plan.msgs[mi][4])
+                    need_recompute = True
+                if (
+                    plan.expected_count(node, step) == received[node * nsteps + step]
+                    and step + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", node, step + 1))
+            elif ev[0] == "deliv":
+                _, node, k = ev
+                completion = max(completion, now)
+                received[node * nsteps + k] += 1
+                if (
+                    received[node * nsteps + k] == plan.expected_count(node, k)
+                    and entered[node] == k
+                    and k + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", node, k + 1))
+            else:  # epoch
+                _, ei, _ = ev
+                for m in timeline.epochs[ei][1]:
+                    if m[0] == "class":
+                        _, l, bw, lat, proc = m
+                        caps_up[l] = cap * bw
+                        link_hop[l] = lat * params["link_lat"] + proc * params["hop_lat"]
+                        caps_eff[l] = 0.0 if down[l] else caps_up[l]
+                    else:
+                        _, l, flag = m
+                        down[l] = flag
+                        caps_eff[l] = 0.0 if flag else caps_up[l]
+                need_recompute = True
+
+        if need_recompute:
+            recompute()
+            need_recompute = False
+
+    assert not active, f"timeline leaves {len(active)} flow(s) stranded"
+    return completion, events
+
+
+def _build_tracks(plan, params, timeline):
+    """Per-link (t, cap, hop) change tracks for mutated links (None =
+    static). Mirror of packet::build_tracks."""
+    base_cap = params["bw"] / 8.0
+    tracks = [None] * plan.num_links
+    cur_up = link_caps(plan, params)
+    cur_hop = link_hop_lat(plan, params)
+    cur_down = [False] * plan.num_links
+    for t, muts in timeline.epochs:
+        for m in muts:
+            l = m[1]
+            if m[0] == "class":
+                _, _, bw, lat, proc = m
+                cur_up[l] = base_cap * bw
+                cur_hop[l] = lat * params["link_lat"] + proc * params["hop_lat"]
+            else:
+                cur_down[l] = m[2]
+            cap = 0.0 if cur_down[l] else cur_up[l]
+            if tracks[l] is None:
+                tracks[l] = []
+            tracks[l].append((t, cap, cur_hop[l]))
+    return tracks
+
+
+def _serialize_end(track, cap0, start, nbytes):
+    if track is None:
+        return start + nbytes / cap0
+    if nbytes <= 0.0:
+        return start
+    rate = cap0
+    idx = 0
+    while idx < len(track) and track[idx][0] <= start:
+        rate = track[idx][1]
+        idx += 1
+    remaining = nbytes
+    cur = start
+    while True:
+        next_t = track[idx][0] if idx < len(track) else float("inf")
+        if rate > 0.0:
+            fin = cur + remaining / rate
+            if fin <= next_t:
+                return fin
+            remaining -= rate * (next_t - cur)
+            if remaining < 0.0:
+                remaining = 0.0
+        else:
+            assert next_t != float("inf"), "timeline leaves a link down for good"
+        cur = next_t
+        rate = track[idx][1]
+        idx += 1
+
+
+def _hop_at(track, hop0, t):
+    if track is None:
+        return hop0
+    h = hop0
+    for pt, _, ph in track:
+        if pt <= t:
+            h = ph
+        else:
+            break
+    return h
+
+
+def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline):
+    """Batched packet engine under a timeline: busy intervals split at
+    epoch boundaries. Mirror of packet::simulate_packet_plan_timeline."""
+    if timeline.is_empty():
+        return simulate_packet_batched(plan, m_bytes, params, mtu)
+    n, nsteps = plan.n, plan.nsteps
+    if nsteps == 0:
+        return 0.0, 0
+    caps = link_caps(plan, params)
+    hops = link_hop_lat(plan, params)
+    tracks = _build_tracks(plan, params, timeline)
+
+    received = [0] * (n * nsteps)
+    entered = [-1] * n
+    free_at = [0.0] * plan.num_links
+    heap = []
+    seq = 0
+
+    def push(t, ev):
+        nonlocal seq
+        seq += 1
+        heapq.heappush(heap, (t, seq, ev))
+
+    for r in range(n):
+        push(params["alpha"], ("step", r, 0))
+
+    completion = 0.0
+    events = 0
+    while heap:
+        now, _, ev = heapq.heappop(heap)
+        events += 1
+        if ev[0] == "step":
+            _, node, step = ev
+            entered[node] = step
+            for mi in plan.injections(node, step):
+                push(now, ("batch", mi, 0, now))
+            if (
+                plan.expected_count(node, step) == received[node * nsteps + step]
+                and step + 1 < nsteps
+            ):
+                push(now + params["alpha"], ("step", node, step + 1))
+        else:
+            _, mi, hop, ready = ev
+            src, dst, k, rel, route = plan.msgs[mi]
+            if hop == len(route):
+                completion = max(completion, now)
+                received[dst * nsteps + k] += 1
+                if (
+                    received[dst * nsteps + k] == plan.expected_count(dst, k)
+                    and entered[dst] == k
+                    and k + 1 < nsteps
+                ):
+                    push(now + params["alpha"], ("step", dst, k + 1))
+            else:
+                total = plan.bytes(mi, m_bytes)
+                l = route[hop]
+                start = max(now, free_at[l])
+                batch_end = max(_serialize_end(tracks[l], caps[l], start, total), ready)
+                free_at[l] = batch_end
+                tail_ready = batch_end + _hop_at(tracks[l], hops[l], batch_end)
+                if hop + 1 == len(route):
+                    push(tail_ready, ("batch", mi, hop + 1, tail_ready))
+                else:
+                    head = min(total, float(mtu))
+                    head_end = _serialize_end(tracks[l], caps[l], start, head)
+                    push(
+                        head_end + _hop_at(tracks[l], hops[l], head_end),
+                        ("batch", mi, hop + 1, tail_ready),
+                    )
+    return completion, events
+
+
+# --------------------------------------------------- fault-aware rewriting
+# Mirror of rust/src/schedule/rewrite.rs.
+
+
+class Fault:
+    def __init__(self, step, down_links=(), dead_nodes=()):
+        self.step = step
+        self.down_links = list(down_links)
+        self.dead_nodes = list(dead_nodes)
+
+    @staticmethod
+    def link(step, link):
+        return Fault(step, [link])
+
+    def apply(self, base):
+        post = NetModel(base.torus)
+        post.bw_scale = list(base.bw_scale)
+        post.lat_scale = list(base.lat_scale)
+        post.proc_scale = list(base.proc_scale)
+        post.down = list(base.down)
+        t = base.torus
+        for l in self.down_links:
+            post.down[l] = True
+        for node in self.dead_nodes:
+            for d in range(t.ndims()):
+                for dr in (1, -1):
+                    post.down[t.link_index(node, d, dr)] = True
+                    nb = t.neighbor(node, d, -dr)
+                    post.down[t.link_index(nb, d, dr)] = True
+        return post
+
+
+def _max_cover(atoms, target):
+    cover = set()
+    for a in atoms:
+        if a <= target:
+            cover |= a
+    return frozenset(cover)
+
+
+def rewrite_for_fault(s, base, fault):
+    """Shrink-and-substitute schedule rewrite (see schedule::rewrite).
+    Returns a new Schedule; raises ValueError on unrecoverable faults or
+    virtual (padded) contributor spaces."""
+    torus = base.torus
+    assert s.n == torus.n
+    n, nb = s.n, s.n_blocks
+    for step in s.steps:
+        for sends in step:
+            for snd in sends:
+                for _b, _k, contrib in snd.pieces:
+                    if any(c >= n for c in contrib):
+                        raise ValueError("padded (virtual) contributor space")
+    post = fault.apply(base)
+    dead = [False] * n
+    for v in fault.dead_nodes:
+        dead[v] = True
+
+    full = frozenset(range(n))
+    # state[r][b] = list of atoms; totals cached separately
+    state = [[[frozenset([r])] for _ in range(nb)] for r in range(n)]
+
+    def total(r, b):
+        t = set()
+        for a in state[r][b]:
+            t |= a
+        return t
+
+    def absorb(r, b, kind, contrib):
+        if kind == "reduce":
+            state[r][b].append(contrib)
+        else:
+            state[r][b] = [full]
+
+    out = Schedule(s.name + "+rewrite", n, nb)
+    for k, step in enumerate(s.steps):
+        snapshot = [[list(cell) for cell in row] for row in state]
+        new_step = out.push_step()
+        for src in range(n):
+            for snd in step[src]:
+                if k < fault.step:
+                    keep = snd
+                elif dead[src] or dead[snd.to]:
+                    keep = None
+                else:
+                    nominal = base.route(src, snd.to, snd.route)
+                    if any(post.down[l] for l in nominal):
+                        keep = None
+                    else:
+                        keep = _shrink_send(snd, snapshot[src], n, full)
+                if keep is not None:
+                    for blocks, kind, contrib in keep.pieces:
+                        for b in blocks:
+                            absorb(keep.to, b, kind, contrib)
+                    new_step[src].append(keep)
+
+    snapshot = [[list(cell) for cell in row] for row in state]
+    cleanup = [[] for _ in range(n)]
+    any_cleanup = False
+    for r in range(n):
+        if dead[r]:
+            continue
+        dist_to_r = post.distances_to(r)
+        set_groups = []  # [(donor, [blocks])]
+        reduce_groups = []  # [(donor, contrib, [blocks])]
+        for b in range(nb):
+            held = total(r, b)
+            if held == full:
+                continue
+            missing = full - held
+            set_donor = None  # (dist, donor)
+            for d in range(n):
+                if d == r or dead[d]:
+                    continue
+                dt = set()
+                for a in snapshot[d][b]:
+                    dt |= a
+                if dt != full:
+                    continue
+                dist = dist_to_r[d]
+                if dist is None:
+                    continue
+                if set_donor is None or dist < set_donor[0]:
+                    set_donor = (dist, d)
+            if set_donor is not None:
+                d = set_donor[1]
+                for g in set_groups:
+                    if g[0] == d:
+                        g[1].append(b)
+                        break
+                else:
+                    set_groups.append((d, [b]))
+                continue
+            m = missing
+            while m:
+                best = None  # (len, dist, donor, cover)
+                for d in range(n):
+                    if d == r or dead[d]:
+                        continue
+                    cover = _max_cover(snapshot[d][b], m)
+                    if not cover:
+                        continue
+                    dist = dist_to_r[d]
+                    if dist is None:
+                        continue
+                    if best is None or len(cover) > best[0] or (
+                        len(cover) == best[0] and dist < best[1]
+                    ):
+                        best = (len(cover), dist, d, cover)
+                if best is None:
+                    raise ValueError(
+                        f"unrecoverable: node {r} block {b} missing {sorted(m)}"
+                    )
+                _, _, d, cover = best
+                m = m - cover
+                for g in reduce_groups:
+                    if g[0] == d and g[1] == cover:
+                        g[2].append(b)
+                        break
+                else:
+                    reduce_groups.append((d, cover, [b]))
+        for d, blocks in set_groups:
+            any_cleanup = True
+            cleanup[d].append(Send(r, [(frozenset(blocks), "set", full)], MIN))
+        for d, contrib, blocks in reduce_groups:
+            any_cleanup = True
+            cleanup[d].append(Send(r, [(frozenset(blocks), "reduce", contrib)], MIN))
+    if any_cleanup:
+        st = out.push_step()
+        for src in range(n):
+            for snd in cleanup[src]:
+                for blocks, kind, contrib in snd.pieces:
+                    for b in blocks:
+                        absorb(snd.to, b, kind, contrib)
+                st[src].append(snd)
+
+    for r in range(n):
+        if dead[r]:
+            continue
+        for b in range(nb):
+            if total(r, b) != full:
+                raise ValueError(f"internal rewrite error: node {r} block {b}")
+    return out
+
+
+def _shrink_send(snd, sender_cells, n, full):
+    pieces = []
+    for blocks, kind, contrib in snd.pieces:
+        if kind == "reduce":
+            groups = []  # [(cover, [blocks])]
+            for b in sorted(blocks):
+                cover = _max_cover(sender_cells[b], contrib)
+                if not cover:
+                    continue
+                for g in groups:
+                    if g[0] == cover:
+                        g[1].append(b)
+                        break
+                else:
+                    groups.append((cover, [b]))
+            for cover, bs in groups:
+                pieces.append((frozenset(bs), "reduce", cover))
+        else:
+            kept = [
+                b
+                for b in sorted(blocks)
+                if frozenset().union(*sender_cells[b]) == full
+            ]
+            if kept:
+                pieces.append((frozenset(kept), "set", contrib))
+    if not pieces:
+        return None
+    return Send(snd.to, pieces, snd.route)
+
+
+# ----------------------------------------------------- dynamic presets
+# Mirror of harness::scenarios dynamic_presets window arithmetic.
+
+FLAP_SEED = 0x5EED0003
+DYNAMIC_NAMES = ["flap", "brownout", "mid-fault-detour", "mid-fault-rewrite"]
+
+
+def dynamic_timeline(name, torus, params, m_bytes):
+    ser = m_bytes * 8.0 / params["bw"]
+    if name == "flap":
+        l = pick_links(torus, 1, FLAP_SEED, keep_connected=False)[0]
+        t0 = params["alpha"] + 0.25 * ser
+        t1 = t0 + 2.0 * ser
+        if t1 <= t0:
+            return EMPTY_TIMELINE
+        return Timeline([(t0, [("down", l, True)]), (t1, [("down", l, False)])])
+    if name == "brownout":
+        if ser <= 0.0:
+            return EMPTY_TIMELINE
+        degrade = [
+            ("class", torus.link_index(node, 0, 1), 0.25, 1.0, 1.0)
+            for node in range(torus.n)
+        ]
+        recover = [
+            ("class", torus.link_index(node, 0, 1), 1.0, 1.0, 1.0)
+            for node in range(torus.n)
+        ]
+        return Timeline([(params["alpha"], degrade), (params["alpha"] + 4.0 * ser, recover)])
+    return EMPTY_TIMELINE
+
+
+def link_at(torus, idx):
+    """Inverse of Torus.link_index (mirror of Torus::link_at)."""
+    dirbit = idx & 1
+    rest = idx // 2
+    dim = rest % torus.ndims()
+    node = rest // torus.ndims()
+    return node, dim, 1 if dirbit == 1 else -1
+
+
+def midfault_fault(torus):
+    """One physical cable (both directed links of the seeded faulty edge)
+    dies before step 1 — mirror of Scenario::fault for MidFault."""
+    idx = pick_links(torus, 1, FAULTY_SEED, keep_connected=True)[0]
+    node, dim, dr = link_at(torus, idx)
+    rev = torus.link_index(torus.neighbor(node, dim, dr), dim, -dr)
+    return Fault(1, [idx, rev])
+
+
+def midfault_plans(torus, algo, variant, params=None):
+    """(detour_plan, rewrite_plan, padded) for one registry build under the
+    mid-fault preset (rewrite falls back to detour for padded builds)."""
+    b = build(algo, variant, torus)
+    if b is None:
+        return None
+    base = NetModel.uniform(torus)
+    fault = midfault_fault(torus)
+    post = fault.apply(base)
+    detour = Plan(b.net, torus, base, route_model=post, switch_step=fault.step)
+    if b.padded:
+        return detour, detour, True
+    rw = rewrite_for_fault(b.net, base, fault)
+    rewrite = Plan(rw, torus, base, route_model=post, switch_step=fault.step)
+    return detour, rewrite, False
 
 
 # ------------------------------------------------------------ tuner mirror
