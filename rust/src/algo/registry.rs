@@ -80,6 +80,21 @@ impl Variant {
     }
 }
 
+/// The virtual-padding embedding of a padded [`BuiltCollective`]: which
+/// padded (virtual) torus the `exec` schedule runs on and which real node
+/// hosts each virtual rank. This is what lets `schedule::rewrite` operate
+/// on padded Bruck/Trivance schedules: the rewrite machine runs in virtual
+/// space on `exec` and the result is collapsed back through `hosts`.
+#[derive(Clone, Debug)]
+pub struct Padding {
+    /// Dimensions of the padded virtual torus `exec` runs over.
+    pub vdims: Vec<u32>,
+    /// `hosts[v]` = real rank hosting virtual rank `v` (per-coordinate
+    /// `⌊c·a/av⌋`, which for rings is `⌊v·n/nv⌋` — the same map
+    /// `virtual_pad_network` collapses the network schedule with).
+    pub hosts: Vec<u32>,
+}
+
 /// A built collective: execution + network schedules (see module docs).
 #[derive(Clone, Debug)]
 pub struct BuiltCollective {
@@ -90,11 +105,21 @@ pub struct BuiltCollective {
     pub net: Schedule,
     /// True when the collective was embedded via virtual padding.
     pub padded: bool,
+    /// The padding map when `padded` (virtual dims + host assignment).
+    pub padding: Option<Padding>,
 }
 
 impl BuiltCollective {
     fn plain(name: String, algo: Algo, variant: Variant, s: Schedule) -> Self {
-        BuiltCollective { name, algo, variant, net: s.clone(), exec: s, padded: false }
+        BuiltCollective {
+            name,
+            algo,
+            variant,
+            net: s.clone(),
+            exec: s,
+            padded: false,
+            padding: None,
+        }
     }
 
     /// Validate the execution schedule (disjointness + coverage).
@@ -263,11 +288,17 @@ pub fn build(algo: Algo, variant: Variant, torus: &Torus) -> Result<BuiltCollect
     let inner = build(algo, variant, &vtorus)?;
     // Per-dimension host mapping ⌊c·a/av⌋ composes into the rank map used
     // by virtual_pad_network only for rings; for tori map per dimension.
+    let hosts = padding_hosts(&vtorus, torus);
     let net = if d == 1 {
         virtual_pad_network(&inner.exec, torus.n())
     } else {
         // Build an explicit host map per rank and collapse.
-        collapse_torus(&inner.exec, &vtorus, torus)
+        collapse_by_hosts(
+            &inner.exec,
+            &hosts,
+            torus.n(),
+            format!("{}-padded({:?})", inner.exec.name, torus.dims()),
+        )
     };
     Ok(BuiltCollective {
         name: format!("{name} (padded {:?})", padded_dims),
@@ -276,33 +307,41 @@ pub fn build(algo: Algo, variant: Variant, torus: &Torus) -> Result<BuiltCollect
         exec: inner.exec,
         net,
         padded: true,
+        padding: Some(Padding { vdims: padded_dims, hosts }),
     })
 }
 
-/// Collapse a schedule over `vtorus` onto `torus` by mapping each virtual
-/// coordinate `c` to host coordinate `⌊c·a/av⌋` per dimension; co-hosted
-/// messages are dropped (local moves).
-fn collapse_torus(s: &Schedule, vtorus: &Torus, torus: &Torus) -> Schedule {
-    let host = |v: u32| -> u32 {
-        let cs: Vec<u32> = vtorus
-            .coords(v)
-            .iter()
-            .zip(vtorus.dims().iter().zip(torus.dims()))
-            .map(|(&c, (&av, &a))| ((c as u64 * a as u64) / av as u64) as u32)
-            .collect();
-        torus.rank(&cs)
-    };
-    let mut out = Schedule::new(
-        format!("{}-padded({:?})", s.name, torus.dims()),
-        torus.n(),
-        s.n_blocks,
-    );
+/// The host map of a virtual-padding embedding: `hosts[v]` = real rank of
+/// virtual rank `v`, per-coordinate `⌊c·a/av⌋`.
+fn padding_hosts(vtorus: &Torus, torus: &Torus) -> Vec<u32> {
+    (0..vtorus.n())
+        .map(|v| {
+            let cs: Vec<u32> = vtorus
+                .coords(v)
+                .iter()
+                .zip(vtorus.dims().iter().zip(torus.dims()))
+                .map(|(&c, (&av, &a))| ((c as u64 * a as u64) / av as u64) as u32)
+                .collect();
+            torus.rank(&cs)
+        })
+        .collect()
+}
+
+/// Collapse a virtual-space schedule onto the real torus through a host
+/// map: endpoints become their hosts, co-hosted messages are dropped
+/// (local memory moves). Steps are kept even when fully local — the
+/// virtual algorithm synchronizes on them, so step counting stays
+/// faithful. Used both for the registry's padded `net` schedules and for
+/// collapsing *rewritten* virtual schedules in `schedule::rewrite`.
+pub fn collapse_by_hosts(s: &Schedule, hosts: &[u32], n_real: u32, name: String) -> Schedule {
+    assert_eq!(hosts.len(), s.n as usize, "host map must cover every virtual rank");
+    let mut out = Schedule::new(name, n_real, s.n_blocks);
     for step in &s.steps {
         let st = out.push_step();
         for (src, sends) in step.sends.iter().enumerate() {
-            let hsrc = host(src as u32);
+            let hsrc = hosts[src];
             for snd in sends {
-                let hdst = host(snd.to);
+                let hdst = hosts[snd.to as usize];
                 if hsrc == hdst {
                     continue;
                 }
@@ -357,6 +396,39 @@ mod tests {
         b.validate().unwrap(); // exec schedule over 16 virtual nodes
         assert_eq!(b.exec.n, 16);
         assert_eq!(b.net.n, 9);
+    }
+
+    #[test]
+    fn padding_map_collapses_exec_to_the_shipped_net() {
+        // 1-D: the recorded host map must reproduce virtual_pad_network's
+        // collapse message for message (rewrite relies on this equivalence)
+        let b = build(Algo::Swing, Variant::Latency, &Torus::ring(9)).unwrap();
+        let pad = b.padding.as_ref().expect("padded build records its map");
+        assert_eq!(pad.vdims, vec![16]);
+        assert_eq!(pad.hosts.len(), b.exec.n as usize);
+        let again = collapse_by_hosts(&b.exec, &pad.hosts, 9, b.net.name.clone());
+        assert_eq!(again.num_steps(), b.net.num_steps());
+        for (a, n) in again.steps.iter().zip(&b.net.steps) {
+            for (sa, sn) in a.sends.iter().zip(&n.sends) {
+                assert_eq!(sa.len(), sn.len());
+                for (x, y) in sa.iter().zip(sn) {
+                    assert_eq!(x.to, y.to);
+                    assert_eq!(x.pieces, y.pieces);
+                }
+            }
+        }
+        // 2-D padded case records the map too
+        let b2 = build(Algo::Trivance, Variant::Latency, &Torus::new(&[4, 4])).unwrap();
+        assert!(b2.padded);
+        let pad2 = b2.padding.as_ref().unwrap();
+        assert_eq!(pad2.vdims, vec![9, 9]);
+        assert_eq!(pad2.hosts.len(), 81);
+        assert!(pad2.hosts.iter().all(|&h| h < 16));
+        // native builds carry no map
+        assert!(build(Algo::Trivance, Variant::Latency, &Torus::ring(9))
+            .unwrap()
+            .padding
+            .is_none());
     }
 
     #[test]

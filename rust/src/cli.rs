@@ -134,6 +134,7 @@ USAGE:
   trivance scenarios [--topo 4x4x4] [--quick] [--max-size 4MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
                     [--no-plan-cache] [--static-only]
+                    [--online [--table tuner_table.json]]
   trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
                     [--no-plan-cache] [--no-scenarios]
@@ -158,8 +159,16 @@ fail and recover mid-collective, asymmetric brownouts, and a permanent
 mid-collective link death answered by detour routing vs fault-aware
 schedule rewriting) — and renders per-scenario tables relative to Trivance
 plus a rewrite-vs-detour comparison; --static-only restricts to the four
-static presets. bench-sweep includes the static presets as per-scenario
-rows in BENCH_sweep.json (schema v2) unless --no-scenarios.
+static presets. scenarios --online instead replays the seeded two-fault
+timeline (a cable dies mid-step-1, a second fault lands during the rewrite's
+cleanup) through the online fault-response controller and scores
+always-detour vs always-rewrite vs the tuned nearest-scenario policy vs the
+per-event oracle; strategies that cannot complete (partitioned fabric,
+stranded traffic) render `—` instead of aborting — permanent-fault
+strandedness is a typed error end to end. --table supplies a tuned
+(--dynamic) table for the policy's algorithm-switch advice. bench-sweep
+includes the static presets as per-scenario rows in BENCH_sweep.json
+(schema v2) unless --no-scenarios.
 
 tune distills the same scenario sweeps into a decision table (per-(topo,
 scenario) size-ladder winners, fingerprinted against the network model and
@@ -279,8 +288,9 @@ fn figures(args: &Args) -> Result<(), String> {
 /// hetero-dims / straggler / faulty) and render per-scenario tables
 /// relative to Trivance.
 fn scenarios_cmd(args: &Args) -> Result<(), String> {
-    use crate::harness::scenarios::{all_presets, presets, run_scenarios};
+    use crate::harness::scenarios::{all_presets, presets, run_online, run_scenarios};
     use crate::harness::sweep::size_ladder;
+    use crate::tuner::DecisionTable;
     let quick = args.has("quick");
     let torus = match args.get("topo") {
         Some(t) => parse_topo(t)?,
@@ -297,6 +307,38 @@ fn scenarios_cmd(args: &Args) -> Result<(), String> {
     let params = net_params(args)?;
     let mode = parse_mode(args)?;
     let sizes = size_ladder(max);
+
+    if args.has("online") {
+        let table = args
+            .get("table")
+            .map(|path| -> Result<DecisionTable, String> {
+                let text = std::fs::read_to_string(path).map_err(|e| {
+                    format!("reading {path}: {e} — run `trivance tune --dynamic` first")
+                })?;
+                DecisionTable::from_json(&text)
+            })
+            .transpose()?;
+        eprintln!(
+            "[scenarios] online two-fault replay on {:?} ({} nodes), {} sizes up to {} ...",
+            torus.dims(),
+            torus.n(),
+            sizes.len(),
+            fmt::bytes(max),
+        );
+        let t0 = std::time::Instant::now();
+        let sweep = run_online(&torus, &Algo::ALL, &sizes, &params, table.as_ref(), mode)?;
+        println!(
+            "{}",
+            sweep.render(&format!(
+                "Online fault response — {:?} ({} nodes), seeded two-fault timeline",
+                torus.dims(),
+                torus.n()
+            ))
+        );
+        println!("done in {:.1}s; {}", t0.elapsed().as_secs_f64(), plan_cache_stats());
+        return Ok(());
+    }
+
     let scenario_set = if args.has("static-only") { presets() } else { all_presets() };
 
     eprintln!(

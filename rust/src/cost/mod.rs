@@ -330,10 +330,11 @@ mod tests {
                 mutations: vec![Mutation::SetClass { link: l as u32, class: *base.class(l) }],
             },
         ]);
-        let plan = SimPlan::build_with_model(&s, &base);
+        let plan = SimPlan::try_build_with_model(&s, &base).unwrap();
         let scratch = SimScratch::new(&plan, &p);
-        let dyn_c =
-            simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl).completion_s;
+        let dyn_c = simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl)
+            .unwrap()
+            .completion_s;
         let env = analyze_timeline_envelope(&s, &base, &tl).unwrap();
         let (lo, hi) = eq1_envelope(&env, m, &p);
         assert!(lo < dyn_c && dyn_c < hi, "dynamic {dyn_c} outside envelope [{lo}, {hi}]");
@@ -345,10 +346,11 @@ mod tests {
             t: p.alpha_s + 0.25 * 2.0 * ser,
             mutations: vec![Mutation::SetClass { link: l as u32, class: LinkClass::UNIFORM }],
         }]);
-        let plan = SimPlan::build_with_model(&s, &degraded);
+        let plan = SimPlan::try_build_with_model(&s, &degraded).unwrap();
         let scratch = SimScratch::new(&plan, &p);
-        let dyn_c =
-            simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl).completion_s;
+        let dyn_c = simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl)
+            .unwrap()
+            .completion_s;
         let env = analyze_timeline_envelope(&s, &degraded, &tl).unwrap();
         let (lo, hi) = eq1_envelope(&env, m, &p);
         assert!(lo < dyn_c && dyn_c < hi, "recovery {dyn_c} outside [{lo}, {hi}]");

@@ -29,9 +29,14 @@
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
 use crate::net::{pick_links, Epoch, LinkClass, Mutation, NetModel, Timeline};
-use crate::schedule::rewrite::{rewrite_for_fault, Fault};
-use crate::sim::{simulate_plan_timeline, PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
+use crate::schedule::online::{respond, step_time_estimates, Action, FaultEvent, Response};
+use crate::schedule::rewrite::{rewrite_collective_for_faults, Fault};
+use crate::sim::{
+    simulate_plan, simulate_plan_timeline, PlanCache, PlanKey, SimMode, SimPlan, SimScratch,
+};
 use crate::topology::{Link, Torus};
+use crate::tuner::online::OnlineSelector;
+use crate::tuner::table::{tune_ladder, DecisionTable, TopoTable};
 use crate::util::fmt;
 use std::sync::Arc;
 
@@ -360,19 +365,6 @@ pub(crate) fn build_scenario_plans(
         // (whose MidFault arm re-runs the connectivity-checked link pick)
         let post = fault.as_ref().map(|f| f.apply(&model));
         let dyn_fp = sc.dyn_fingerprint(torus);
-        // a padded build under the rewrite strategy falls back to detour —
-        // its plan is byte-identical to the detour scenario's, so it must
-        // share that cache entry, not occupy a second one under the
-        // rewrite fingerprint
-        let detour_fp = match sc.kind {
-            ScenarioKind::MidFault { rewrite: true } => Scenario {
-                name: String::new(),
-                desc: String::new(),
-                kind: ScenarioKind::MidFault { rewrite: false },
-            }
-            .dyn_fingerprint(torus),
-            _ => dyn_fp,
-        };
         let mut per_algo: Vec<Vec<Arc<SimPlan>>> = Vec::with_capacity(built.len());
         for (algo, variants) in &built {
             let mut per_variant: Vec<Arc<SimPlan>> = Vec::with_capacity(variants.len());
@@ -388,24 +380,28 @@ pub(crate) fn build_scenario_plans(
                         })?,
                     Some(fault) => {
                         let post = post.as_ref().expect("post model built with the fault");
-                        // Padded builds keep virtual contributor sets the
-                        // rewrite algebra cannot track — they fall back to
-                        // detour routing (rewrite == detour in the table,
-                        // sharing the detour plan's cache entry).
+                        // Padded builds rewrite too: the machine runs on
+                        // the virtual exec schedule through the padding
+                        // host map and collapses back to the real torus
+                        // (rewrite_collective_for_faults), so rewrite is a
+                        // live strategy for every build in the table.
                         let is_rewrite =
-                            matches!(sc.kind, ScenarioKind::MidFault { rewrite: true })
-                                && !b.padded;
+                            matches!(sc.kind, ScenarioKind::MidFault { rewrite: true });
                         let key = PlanKey::with_fps(
                             *algo,
                             b.variant,
                             torus.dims(),
                             fp,
-                            if is_rewrite { dyn_fp } else { detour_fp },
+                            dyn_fp,
                         );
                         cache
                             .try_get_or_build(key, || -> Result<SimPlan, String> {
                                 let schedule = if is_rewrite {
-                                    rewrite_for_fault(&b.net, &model, fault)?
+                                    rewrite_collective_for_faults(
+                                        b,
+                                        &model,
+                                        std::slice::from_ref(fault),
+                                    )?
                                 } else {
                                     b.net.clone()
                                 };
@@ -459,6 +455,10 @@ fn best_point_dyn(
         .zip(scratches)
         .map(|((b, plan), scratch)| BestPoint {
             completion_s: simulate_plan_timeline(plan, scratch, m_bytes, params, mode, timeline)
+                // preset timelines never strand by construction: flaps
+                // recover, brownouts only slow, and mid-fault plans route
+                // on the post-fault model
+                .expect("scenario preset timelines never strand")
                 .completion_s,
             variant: b.variant,
         })
@@ -606,8 +606,276 @@ impl ScenarioSweep {
                  the dead cable step after step (ring bucket-B: one blocked crossing per \
                  neighbor step); for shallow schedules the single detour overlaps into \
                  spare capacity and detour-in-place stays at parity or better. \
-                 Virtually-padded builds fall back to detour, showing +0.0%.\n",
+                 Virtually-padded builds rewrite through their padding host map \
+                 (virtual-space shrink + substitute, collapsed back to the real \
+                 torus), so their rows are live comparisons too.\n",
             );
+        }
+        out
+    }
+}
+
+/// The online sweep's strategy columns, in render order: keep-and-detour,
+/// always-rewrite, the tuned nearest-scenario policy, and the per-event
+/// oracle.
+pub const ONLINE_STRATEGIES: [&str; 4] = ["detour", "rewrite", "policy", "oracle"];
+
+/// The seeded two-fault timeline the online sweep replays (the acceptance
+/// case): the `faulty`-preset cable dies mid-step-1, and a second fault
+/// lands at 0.98 of the schedule's estimated completion. On multi-dim
+/// tori the second fault is a full cable on the next dimension, half the
+/// torus away. On rings **any** further link fault would directionally
+/// partition the line left by the cable death, so the second fault is
+/// instead the death of the node just across the dead cable — removing an
+/// endpoint of the line keeps the survivors connected, which is the
+/// hardest *recoverable* ring sequence (bandwidth-variant schedules still
+/// hit the honest boundary: the endpoint's unspread contribution is lost
+/// late in the collective and the rewrite refuses). `ends` are the
+/// controller's [`step_time_estimates`] for the schedule under test, so
+/// every algorithm sees the faults at the same *schedule-relative* times.
+pub fn two_fault_events(torus: &Torus, ends: &[f64]) -> Vec<FaultEvent> {
+    let l1 = torus.link_at(pick_links(torus, 1, FAULTY_SEED, true)[0]);
+    let t1 = 0.5 * (ends[0] + ends[ends.len().min(2) - 1]);
+    let ev1 = FaultEvent::cable(t1, torus, torus.link_index(l1));
+    let t2 = ends.last().expect("non-empty schedule") * 0.98;
+    let ev2 = if torus.ndims() > 1 {
+        let far = Link {
+            node: (l1.node + torus.n() / 2) % torus.n(),
+            dim: ((l1.dim as usize + 1) % torus.ndims()) as u8,
+            dir: l1.dir,
+        };
+        FaultEvent::cable(t2, torus, torus.link_index(far))
+    } else {
+        FaultEvent::node(t2, torus.neighbor(l1.node, l1.dim as usize, l1.dir as i64))
+    };
+    vec![ev1, ev2]
+}
+
+/// Result of [`run_online`]: per strategy × size × algo, the best
+/// variant's completion under the online controller's response to the
+/// seeded two-fault timeline — `None` when no variant completed under that
+/// strategy (rewrite refused *and* detour partitioned, or traffic
+/// stranded).
+pub struct OnlineSweep {
+    pub torus: Torus,
+    pub sizes: Vec<u64>,
+    pub algos: Vec<Algo>,
+    /// `points[strategy][size][algo]`, strategies in [`ONLINE_STRATEGIES`]
+    /// order.
+    pub points: Vec<Vec<Vec<Option<f64>>>>,
+    /// The oracle's applied per-event action string for the winning
+    /// variant (`"RD"` = rewrite the first fault, detour the second), per
+    /// `(size, algo)`; empty when the oracle never completed.
+    pub oracle_actions: Vec<Vec<String>>,
+    /// The policy's algorithm-switch advice for the *next* collective, per
+    /// size (only when a tuned table supplied winners).
+    pub switches: Vec<Option<String>>,
+}
+
+/// Score the online controller on the seeded two-fault timeline
+/// ([`two_fault_events`]): for every `(size, algo, variant)` cell and each
+/// of the four strategies — always-detour (PR 5's keep-and-detour),
+/// always-rewrite, the tuned nearest-scenario **policy**
+/// ([`OnlineSelector`]), and the **oracle** (best completion over all
+/// per-event action combinations) — run [`respond`], compile the staged
+/// plan, and simulate. A strategy that cannot complete scores `None`,
+/// rendered `—`: on a ring the second fault *directionally partitions* the
+/// line left by the first cable death, which is exactly the regime where
+/// only the rewrite path survives.
+///
+/// `table` supplies the tuned winners behind the policy's algorithm-switch
+/// advice; without one the policy still acts (its action logic needs only
+/// the preset descriptors) but recommends no switch. Sequential and
+/// deterministic: the grid is tiny and the oracle is at most
+/// `2^events` controller runs per cell.
+pub fn run_online(
+    torus: &Torus,
+    algos: &[Algo],
+    sizes: &[u64],
+    params: &NetParams,
+    table: Option<&DecisionTable>,
+    mode: SimMode,
+) -> Result<OnlineSweep, String> {
+    params.validate();
+    let stub = DecisionTable {
+        params: *params,
+        topos: vec![TopoTable {
+            dims: torus.dims().to_vec(),
+            sizes: tune_ladder(sizes.iter().copied().max().unwrap_or(1 << 20)),
+            scenarios: Vec::new(),
+        }],
+    };
+    let selector = OnlineSelector::from_table(table.unwrap_or(&stub), torus)
+        .map_err(|e| e.to_string())?;
+    let base = NetModel::uniform(torus);
+    let built: Vec<(Algo, Vec<BuiltCollective>)> = algos
+        .iter()
+        .filter_map(|&algo| {
+            let variants: Vec<BuiltCollective> = Variant::ALL
+                .iter()
+                .filter_map(|&v| build(algo, v, torus).ok())
+                .collect();
+            (!variants.is_empty()).then_some((algo, variants))
+        })
+        .collect();
+    let nstrat = ONLINE_STRATEGIES.len();
+    let mut points = vec![vec![vec![None; built.len()]; sizes.len()]; nstrat];
+    let mut oracle_actions = vec![vec![String::new(); built.len()]; sizes.len()];
+    let mut switches: Vec<Option<String>> = vec![None; sizes.len()];
+    for (si, &m) in sizes.iter().enumerate() {
+        // the switch advice depends on the observed condition, not the
+        // algorithm: derive it once per size from the first build's stream
+        if let Some(b0) = built.first().and_then(|(_, vs)| vs.first()) {
+            let ends = step_time_estimates(&b0.net, &base, m, params);
+            if !ends.is_empty() {
+                let obs: Vec<crate::tuner::online::LinkObs> = two_fault_events(torus, &ends)
+                    .iter()
+                    .flat_map(|e| crate::tuner::online::obs_of_event(e, torus))
+                    .collect();
+                switches[si] =
+                    selector.select(torus, &obs, m, params).algo_switch.map(|c| c.label());
+            }
+        }
+        for (ai, (_, variants)) in built.iter().enumerate() {
+            let mut best_oracle: Option<(f64, String)> = None;
+            for b in variants {
+                let ends = step_time_estimates(&b.net, &base, m, params);
+                if ends.is_empty() {
+                    continue;
+                }
+                let events = two_fault_events(torus, &ends);
+                let eval = |pol: &mut dyn FnMut(&FaultEvent, usize) -> Action|
+                 -> Option<(f64, Response)> {
+                    let resp = respond(b, &base, &events, m, params, pol).ok()?;
+                    let plan = resp.build_plan(&base).ok()?;
+                    Some((simulate_plan(&plan, m, params, mode).completion_s, resp))
+                };
+                let keep = |slot: &mut Option<f64>, v: Option<f64>| {
+                    if let Some(x) = v {
+                        if slot.map_or(true, |c| x < c) {
+                            *slot = Some(x);
+                        }
+                    }
+                };
+                keep(
+                    &mut points[0][si][ai],
+                    eval(&mut |_, _| Action::Detour).map(|(t, _)| t),
+                );
+                keep(
+                    &mut points[1][si][ai],
+                    eval(&mut |_, _| Action::Rewrite).map(|(t, _)| t),
+                );
+                let mut pol = selector.policy(torus, m, params);
+                keep(&mut points[2][si][ai], eval(&mut pol).map(|(t, _)| t));
+                for mask in 0u32..(1u32 << events.len().min(16)) {
+                    let mut i = 0u32;
+                    let mut pol = |_: &FaultEvent, _: usize| {
+                        let a = if (mask >> i.min(31)) & 1 == 1 {
+                            Action::Rewrite
+                        } else {
+                            Action::Detour
+                        };
+                        i += 1;
+                        a
+                    };
+                    if let Some((tm, resp)) = eval(&mut pol) {
+                        if best_oracle.as_ref().map_or(true, |(bt, _)| tm < *bt) {
+                            let label: String = resp
+                                .actions
+                                .iter()
+                                .map(|&(_, a)| match a {
+                                    Action::Rewrite => 'R',
+                                    Action::Detour => 'D',
+                                })
+                                .collect();
+                            best_oracle = Some((tm, label));
+                        }
+                    }
+                }
+            }
+            if let Some((tm, label)) = best_oracle {
+                points[3][si][ai] = Some(tm);
+                oracle_actions[si][ai] = label;
+            }
+        }
+    }
+    Ok(OnlineSweep {
+        torus: torus.clone(),
+        sizes: sizes.to_vec(),
+        algos: built.iter().map(|(a, _)| *a).collect(),
+        points,
+        oracle_actions,
+        switches,
+    })
+}
+
+impl OnlineSweep {
+    /// Largest rewrite-over-detour margin across cells where both
+    /// strategies completed: `(detour/rewrite ratio, size, algo)`.
+    pub fn best_rewrite_margin(&self) -> Option<(f64, u64, Algo)> {
+        let mut best: Option<(f64, u64, Algo)> = None;
+        for (si, &m) in self.sizes.iter().enumerate() {
+            for (ai, &a) in self.algos.iter().enumerate() {
+                if let (Some(d), Some(r)) = (self.points[0][si][ai], self.points[1][si][ai]) {
+                    let ratio = d / r;
+                    if best.map_or(true, |(b, _, _)| ratio > b) {
+                        best = Some((ratio, m, a));
+                    }
+                }
+            }
+        }
+        best
+    }
+
+    /// Markdown report: one strategies table per size, the oracle's action
+    /// string, the policy-vs-oracle gap, and the headline
+    /// rewrite-over-detour margin.
+    pub fn render(&self, title: &str) -> String {
+        let mut out = format!("### {title}\n\n");
+        out.push_str(&format!(
+            "seeded two-fault timeline on {:?}: the faulty-preset cable dies \
+             mid-step-1, a second fault lands during cleanup (0.98 of estimated \
+             completion); `—` = the strategy could not complete (partitioned / \
+             stranded traffic).\n\n",
+            self.torus.dims()
+        ));
+        for (si, &m) in self.sizes.iter().enumerate() {
+            let sw = self.switches[si]
+                .as_ref()
+                .map_or(String::new(), |s| format!(" — policy switches the next collective to `{s}`"));
+            out.push_str(&format!("#### size {}{}\n\n", fmt::bytes(m), sw));
+            let mut t = fmt::Table::new(
+                std::iter::once("algo".to_string())
+                    .chain(ONLINE_STRATEGIES.iter().map(|s| s.to_string()))
+                    .chain(["policy vs oracle".to_string(), "oracle actions".to_string()])
+                    .collect::<Vec<_>>(),
+            );
+            for (ai, a) in self.algos.iter().enumerate() {
+                let cell = |v: Option<f64>| v.map_or("—".to_string(), fmt::secs);
+                let gap = match (self.points[2][si][ai], self.points[3][si][ai]) {
+                    (Some(p), Some(o)) if o > 0.0 => format!("{:+.1}%", (p / o - 1.0) * 100.0),
+                    _ => "—".to_string(),
+                };
+                t.row(vec![
+                    a.label().to_string(),
+                    cell(self.points[0][si][ai]),
+                    cell(self.points[1][si][ai]),
+                    cell(self.points[2][si][ai]),
+                    cell(self.points[3][si][ai]),
+                    gap,
+                    self.oracle_actions[si][ai].clone(),
+                ]);
+            }
+            out.push_str(&t.render());
+            out.push('\n');
+        }
+        if let Some((ratio, m, a)) = self.best_rewrite_margin() {
+            out.push_str(&format!(
+                "\nlargest rewrite-over-detour margin: {:.2}x ({} @ {})\n",
+                ratio,
+                a.label(),
+                fmt::bytes(m)
+            ));
         }
         out
     }
@@ -757,6 +1025,82 @@ mod tests {
                        "rewriting vs detour"] {
             assert!(md.contains(needle), "missing {needle} in\n{md}");
         }
+    }
+
+    #[test]
+    fn online_sweep_two_faults_complete_on_ring9_and_3x3() {
+        let p = NetParams::default();
+        for t in [Torus::ring(9), Torus::new(&[3, 3])] {
+            let sw = run_online(
+                &t,
+                &[Algo::Trivance, Algo::Bruck],
+                &[4096, 256 << 10],
+                &p,
+                None,
+                SimMode::Flow,
+            )
+            .unwrap();
+            for si in 0..sw.sizes.len() {
+                for ai in 0..sw.algos.len() {
+                    let at = format!("({si},{ai}) on {:?}", t.dims());
+                    assert!(sw.points[1][si][ai].is_some(), "rewrite incomplete at {at}");
+                    assert!(sw.points[2][si][ai].is_some(), "policy incomplete at {at}");
+                    let oracle = sw.points[3][si][ai].unwrap_or_else(|| panic!("oracle at {at}"));
+                    for strat in 0..3 {
+                        if let Some(v) = sw.points[strat][si][ai] {
+                            assert!(
+                                oracle <= v * (1.0 + 1e-9),
+                                "oracle beaten by {} at {at}",
+                                ONLINE_STRATEGIES[strat]
+                            );
+                        }
+                    }
+                    assert!(!sw.oracle_actions[si][ai].is_empty());
+                }
+            }
+            let md = sw.render("online test");
+            for needle in ["detour", "rewrite", "policy", "oracle", "two-fault"] {
+                assert!(md.contains(needle), "missing {needle} in\n{md}");
+            }
+        }
+    }
+
+    #[test]
+    fn online_rewrite_beats_detour_in_some_bucket() {
+        // the acceptance margin: on the ring the second fault directionally
+        // partitions the detour path, so only rewrite completes; the
+        // measured completion-vs-failure win is the strongest form of the
+        // "beats detour-in-place" acceptance bucket
+        let p = NetParams::default();
+        let ring = run_online(
+            &Torus::ring(9),
+            &[Algo::Trivance],
+            &[4096, 256 << 10],
+            &p,
+            None,
+            SimMode::Flow,
+        )
+        .unwrap();
+        let grid = run_online(
+            &Torus::new(&[3, 3]),
+            &[Algo::Trivance],
+            &[4096, 256 << 10],
+            &p,
+            None,
+            SimMode::Flow,
+        )
+        .unwrap();
+        let completion_win = (0..ring.sizes.len()).any(|si| {
+            ring.points[0][si][0].is_none() && ring.points[1][si][0].is_some()
+        });
+        let margin_win = [&ring, &grid]
+            .iter()
+            .filter_map(|sw| sw.best_rewrite_margin())
+            .any(|(ratio, _, _)| ratio > 1.0);
+        assert!(
+            completion_win || margin_win,
+            "rewrite must beat detour-in-place in at least one (topology, size) bucket"
+        );
     }
 
     #[test]

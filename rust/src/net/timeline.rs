@@ -29,8 +29,12 @@
 //! schedule rewriting / detour planning via
 //! [`crate::sim::SimPlan::build_faulted`]), because traffic still routed
 //! over a dead link would otherwise stall forever. The engines enforce this:
-//! a timeline that leaves bytes stranded on a permanently-down link panics
-//! with a clear diagnostic instead of reporting a bogus completion.
+//! a timeline that leaves bytes stranded on a permanently-down link returns
+//! the typed [`crate::sim::SimError::Stranded`] — carrying the blocked link
+//! and schedule step — instead of reporting a bogus completion (or
+//! aborting the process). The online controller
+//! ([`crate::schedule::online`]) is the recovery path: it turns the same
+//! permanent failure into a mid-collective rewrite or detour.
 //!
 //! The **empty timeline is the static fabric**: every simulator entry point
 //! short-circuits to the exact pre-timeline code path (same float ops, same

@@ -32,6 +32,7 @@
 pub mod validate;
 pub mod analysis;
 pub mod rewrite;
+pub mod online;
 
 use crate::blockset::BlockSet;
 
@@ -43,7 +44,7 @@ pub enum Kind {
 }
 
 /// A contiguous unit of payload within a message.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Piece {
     /// Which vector blocks this piece carries (block space `0..n_blocks`).
     pub blocks: BlockSet,
@@ -63,7 +64,7 @@ pub enum RouteHint {
 }
 
 /// One message from an implicit source (the index into `Step::sends`).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct Send {
     pub to: u32,
     pub pieces: Vec<Piece>,

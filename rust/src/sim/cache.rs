@@ -233,8 +233,10 @@ mod tests {
             straggled.fingerprint(),
         );
         assert_ne!(ku, ks, "hetero model must not share the uniform key");
-        let a = cache.get_or_build(ku, || SimPlan::build_with_model(&b.net, &uniform));
-        let s = cache.get_or_build(ks, || SimPlan::build_with_model(&b.net, &straggled));
+        let a = cache
+            .get_or_build(ku, || SimPlan::try_build_with_model(&b.net, &uniform).unwrap());
+        let s = cache
+            .get_or_build(ks, || SimPlan::try_build_with_model(&b.net, &straggled).unwrap());
         assert!(!Arc::ptr_eq(&a, &s));
         assert_eq!(cache.len(), 2);
         assert_eq!(cache.misses(), 2);

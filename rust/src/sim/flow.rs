@@ -46,7 +46,7 @@
 //! the pre-NetModel simulator.
 
 use super::plan::{SimPlan, SimScratch};
-use super::{SimResult, Timed};
+use super::{SimError, SimResult, Timed};
 use crate::cost::NetParams;
 use crate::net::{Mutation, Timeline};
 use crate::schedule::Schedule;
@@ -409,24 +409,26 @@ pub fn simulate_flow_plan_scratch(
 /// recovery. With an empty timeline this *is* the static engine (same code
 /// path, bit-identical).
 ///
-/// Panics if the timeline leaves flows stranded on a permanently-down link:
-/// a completion time that silently dropped undelivered messages would be
-/// wrong, and permanent faults belong to [`crate::schedule::rewrite`].
+/// Returns [`SimError::Stranded`] (carrying the blocked link and step) if
+/// the timeline leaves flows stranded on a permanently-down link: a
+/// completion time that silently dropped undelivered messages would be
+/// wrong, and permanent faults belong to [`crate::schedule::rewrite`] /
+/// [`crate::schedule::online`].
 pub fn simulate_flow_plan_timeline(
     plan: &SimPlan,
     m_bytes: u64,
     params: &NetParams,
     scratch: &SimScratch,
     timeline: &Timeline,
-) -> SimResult {
+) -> Result<SimResult, SimError> {
     if timeline.is_empty() {
-        return simulate_flow_plan_scratch(plan, m_bytes, params, scratch);
+        return Ok(simulate_flow_plan_scratch(plan, m_bytes, params, scratch));
     }
     debug_assert!(scratch.matches(plan), "scratch built for a different plan");
     let n = plan.n();
     let nsteps = plan.num_steps();
     if nsteps == 0 {
-        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+        return Ok(SimResult { completion_s: 0.0, messages: 0, events: 0 });
     }
     let cap = params.link_bw_bps / 8.0;
     // Mutable per-link state seeded from the scratch columns: the class
@@ -570,14 +572,20 @@ pub fn simulate_flow_plan_timeline(
         }
     }
 
-    assert!(
-        active.is_empty(),
-        "timeline leaves {} flow(s) stranded on a down link (bytes in flight, no \
-         recovery epoch) — permanent faults need schedule rewriting \
-         (schedule::rewrite / SimPlan::build_faulted), not a capacity timeline",
-        active.len()
-    );
-    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
+    if !active.is_empty() {
+        // Deterministic diagnostic: the lowest-id stranded message, and the
+        // first zero-capacity link on its route (the link its bytes are
+        // blocked on for good).
+        let f = active.iter().min_by_key(|f| f.msg).unwrap();
+        let route = plan.route(f.msg as usize);
+        let link = route
+            .iter()
+            .map(|&l| l as usize)
+            .find(|&l| caps_eff[l] == 0.0)
+            .unwrap_or_else(|| route.first().map(|&l| l as usize).unwrap_or(0));
+        return Err(SimError::Stranded { link, step: plan.msg(f.msg as usize).step });
+    }
+    Ok(SimResult { completion_s: completion, messages: plan.num_msgs(), events })
 }
 
 #[cfg(test)]
@@ -750,7 +758,7 @@ mod tests {
         model.set_class(l, LinkClass::slowdown(4.0));
         let p = params();
         let m = 1u64 << 20;
-        let plan = SimPlan::build_with_model(&s, &model);
+        let plan = SimPlan::try_build_with_model(&s, &model).unwrap();
         let r = simulate_flow_plan(&plan, m, &p);
         let expect = p.alpha_s + 4.0 * m as f64 * 8.0 / p.link_bw_bps + p.per_hop_s();
         assert!(
@@ -761,7 +769,7 @@ mod tests {
         // scaled per-link latencies are paid too
         let mut lat = NetModel::uniform(&t);
         lat.set_class(l, LinkClass::new(1.0, 3.0, 2.0));
-        let rl = simulate_flow_plan(&SimPlan::build_with_model(&s, &lat), m, &p);
+        let rl = simulate_flow_plan(&SimPlan::try_build_with_model(&s, &lat).unwrap(), m, &p);
         let expect_lat = p.alpha_s
             + m as f64 * 8.0 / p.link_bw_bps
             + 3.0 * p.link_latency_s
@@ -810,22 +818,22 @@ mod tests {
             Epoch { t: t0, mutations: vec![Mutation::SetDown { link: l, down: true }] },
             Epoch { t: t1, mutations: vec![Mutation::SetDown { link: l, down: false }] },
         ]);
-        let r = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &tl);
+        let r = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &tl).unwrap();
         let expect = p.alpha_s + ser + (t1 - t0) + p.per_hop_s();
         assert!(
             (r.completion_s - expect).abs() < expect * 1e-9,
             "got {} expect {expect}",
             r.completion_s
         );
-        // and a timeline that never recovers strands the flow: loud panic
+        // and a timeline that never recovers strands the flow: a typed
+        // error naming the blocked link and step, never a panic
         let dead = Timeline::new(vec![Epoch {
             t: t0,
             mutations: vec![Mutation::SetDown { link: l, down: true }],
         }]);
-        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            simulate_flow_plan_timeline(&plan, m, &p, &scratch, &dead)
-        }));
-        assert!(panicked.is_err(), "stranded traffic must panic, not misreport");
+        let err = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &dead).unwrap_err();
+        assert_eq!(err, SimError::Stranded { link: l as usize, step: 0 });
+        assert!(err.to_string().contains("stranded"), "{err}");
     }
 
     #[test]
@@ -854,7 +862,7 @@ mod tests {
                 mutations: vec![Mutation::SetClass { link: l, class: LinkClass::UNIFORM }],
             },
         ]);
-        let r = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &tl);
+        let r = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &tl).unwrap();
         // during the window the flow drains at cap/2, deferring 0.5·cap·w
         // bytes — recovered at full rate afterwards: exactly 0.5·w extra
         let expect = p.alpha_s + ser + 0.5 * w + p.per_hop_s();
@@ -865,7 +873,8 @@ mod tests {
         );
         // empty timeline delegates to the static engine bit for bit
         let stat = simulate_flow_plan_scratch(&plan, m, &p, &scratch);
-        let empt = simulate_flow_plan_timeline(&plan, m, &p, &scratch, &Timeline::empty());
+        let empt =
+            simulate_flow_plan_timeline(&plan, m, &p, &scratch, &Timeline::empty()).unwrap();
         assert_eq!(stat.completion_s.to_bits(), empt.completion_s.to_bits());
         assert_eq!(stat.events, empt.events);
     }

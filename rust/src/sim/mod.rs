@@ -30,7 +30,7 @@
 //! [`SimPlan::build`] (or [`simulate`]) runs the paper's **uniform**
 //! fabric: every link at `NetParams` rate and latency — the legacy
 //! arithmetic, bit for bit. A plan built against a heterogeneous
-//! [`crate::net::NetModel`] ([`SimPlan::build_with_model`],
+//! [`crate::net::NetModel`] ([`SimPlan::try_build_with_model`],
 //! [`simulate_model`]) carries per-link bandwidth/latency scale columns
 //! and routes detoured around down links; the flow water-filling fills
 //! per-link capacities, and the packet engine serializes each batch at the
@@ -57,9 +57,49 @@ pub use cache::{PlanCache, PlanKey};
 pub use plan::{SimPlan, SimScratch};
 
 use crate::cost::NetParams;
-use crate::net::{NetModel, Timeline};
+use crate::net::{NetModel, Timeline, Unreachable};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
+
+/// Typed simulator failure — the sim layer's replacement for its former
+/// abort paths. Every fallible entry point surfaces one of these instead of
+/// panicking, so the CLI (and the online controller) can report *what*
+/// failed and react.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SimError {
+    /// A [`Timeline`] left traffic permanently stranded on a down link:
+    /// `link` is the dense directed-link index the bytes are blocked on,
+    /// `step` the schedule step of (one of) the stranded message(s). A
+    /// link that fails *for good* is a schedule-level event — the fix is
+    /// [`crate::schedule::rewrite`] / [`crate::schedule::online`], not a
+    /// capacity timeline.
+    Stranded { link: usize, step: u32 },
+    /// The model's down set disconnects a (src, dst) pair the schedule
+    /// needs — no detour exists.
+    Unroutable(Unreachable),
+}
+
+impl std::fmt::Display for SimError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SimError::Stranded { link, step } => write!(
+                f,
+                "timeline leaves traffic stranded on down link {link} (step {step}): a \
+                 permanent failure needs a schedule rewrite or detour (schedule::rewrite / \
+                 schedule::online), not a capacity timeline"
+            ),
+            SimError::Unroutable(u) => write!(f, "{u}"),
+        }
+    }
+}
+
+impl std::error::Error for SimError {}
+
+impl From<Unreachable> for SimError {
+    fn from(u: Unreachable) -> SimError {
+        SimError::Unroutable(u)
+    }
+}
 
 /// A heap entry for the discrete-event engines: min-heap by time, FIFO
 /// tie-break by push sequence (`BinaryHeap` is a max-heap, so the ordering
@@ -132,15 +172,17 @@ pub fn simulate(
 
 /// [`simulate`] under a heterogeneous [`NetModel`] (per-link bandwidth and
 /// latency scales, down-link detours). With a uniform model this is
-/// bit-identical to [`simulate`].
+/// bit-identical to [`simulate`]. Returns [`SimError::Unroutable`] when the
+/// model's down set partitions a pair the schedule needs.
 pub fn simulate_model(
     schedule: &Schedule,
     model: &NetModel,
     m_bytes: u64,
     params: &NetParams,
     mode: SimMode,
-) -> SimResult {
-    simulate_plan(&SimPlan::build_with_model(schedule, model), m_bytes, params, mode)
+) -> Result<SimResult, SimError> {
+    let plan = SimPlan::try_build_with_model(schedule, model)?;
+    Ok(simulate_plan(&plan, m_bytes, params, mode))
 }
 
 /// Simulate an `m_bytes` collective against a precompiled plan. Builds the
@@ -184,7 +226,11 @@ pub fn simulate_plan_scratch(
 /// mutations: the flow engine re-water-fills at every epoch, the packet
 /// engine splits busy intervals at epoch boundaries. An **empty** timeline
 /// short-circuits to [`simulate_plan_scratch`] — the static path, bit for
-/// bit (`sim_crosscheck.rs` pins this across the registry).
+/// bit (`sim_crosscheck.rs` pins this across the registry). A timeline that
+/// leaves bytes stranded on a permanently-down link returns
+/// [`SimError::Stranded`] (never a panic): that case is a schedule-level
+/// fault and belongs to [`crate::schedule::rewrite`] /
+/// [`crate::schedule::online`].
 pub fn simulate_plan_timeline(
     plan: &SimPlan,
     scratch: &SimScratch,
@@ -192,7 +238,7 @@ pub fn simulate_plan_timeline(
     params: &NetParams,
     mode: SimMode,
     timeline: &Timeline,
-) -> SimResult {
+) -> Result<SimResult, SimError> {
     params.validate();
     match mode {
         SimMode::Flow => {

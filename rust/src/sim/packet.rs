@@ -42,7 +42,7 @@
 //! size.
 
 use super::plan::{SimPlan, SimScratch};
-use super::{SimResult, Timed};
+use super::{SimError, SimResult, Timed};
 use crate::cost::NetParams;
 use crate::net::{Mutation, Timeline};
 use crate::schedule::Schedule;
@@ -235,16 +235,17 @@ fn build_tracks(
 /// When does a serialization of `bytes` starting at `start` finish on a
 /// link whose rate follows `track` (initial rate `cap0`)? The busy interval
 /// is **split at each change point**: bytes drain at each window's rate,
-/// zero-rate (down) windows pass nothing. Panics if the track ends at rate
-/// 0 with bytes left — the stranded-traffic diagnostic of the module docs.
-fn serialize_end(track: Option<&[TrackPoint]>, cap0: f64, start: f64, bytes: f64) -> f64 {
+/// zero-rate (down) windows pass nothing. Returns `None` if the track ends
+/// at rate 0 with bytes left — stranded traffic, which the caller turns
+/// into a typed [`SimError::Stranded`] naming the link and step.
+fn serialize_end(track: Option<&[TrackPoint]>, cap0: f64, start: f64, bytes: f64) -> Option<f64> {
     let Some(track) = track else {
-        return start + bytes / cap0;
+        return Some(start + bytes / cap0);
     };
     if bytes <= 0.0 {
         // an empty batch occupies the link for zero time even mid-outage
         // (`start + 0.0 / cap` is exactly `start` on the static path too)
-        return start;
+        return Some(start);
     }
     // state in force at `start` (an epoch exactly at `start` applies, as in
     // the flow engine's equal-time event batching)
@@ -261,19 +262,15 @@ fn serialize_end(track: Option<&[TrackPoint]>, cap0: f64, start: f64, bytes: f64
         if rate > 0.0 {
             let fin = cur + remaining / rate;
             if fin <= next_t {
-                return fin;
+                return Some(fin);
             }
             remaining -= rate * (next_t - cur);
             if remaining < 0.0 {
                 remaining = 0.0;
             }
-        } else {
-            assert!(
-                next_t.is_finite(),
-                "timeline leaves a link down for good with {remaining} bytes in \
-                 flight — permanent faults need schedule rewriting \
-                 (schedule::rewrite / SimPlan::build_faulted), not a capacity timeline"
-            );
+        } else if !next_t.is_finite() {
+            // the link stays down for good with bytes left: stranded
+            return None;
         }
         cur = next_t;
         rate = track[idx].cap;
@@ -300,7 +297,9 @@ fn hop_at(track: Option<&[TrackPoint]>, hop0: f64, t: f64) -> f64 {
 /// so a link that slows, browns out, or flaps mid-batch serializes exactly
 /// the bytes each window's rate allows; the hop latency charged is the one
 /// in force when the batch leaves the link. With an empty timeline this *is*
-/// the static engine (same code path, bit-identical).
+/// the static engine (same code path, bit-identical). A timeline that
+/// leaves a batch permanently stranded on a down link returns
+/// [`SimError::Stranded`].
 pub fn simulate_packet_plan_timeline(
     plan: &SimPlan,
     m_bytes: u64,
@@ -308,16 +307,16 @@ pub fn simulate_packet_plan_timeline(
     mtu: u32,
     scratch: &SimScratch,
     timeline: &Timeline,
-) -> SimResult {
+) -> Result<SimResult, SimError> {
     if timeline.is_empty() {
-        return simulate_packet_plan_scratch(plan, m_bytes, params, mtu, scratch);
+        return Ok(simulate_packet_plan_scratch(plan, m_bytes, params, mtu, scratch));
     }
     assert!(mtu > 0);
     debug_assert!(scratch.matches(plan), "scratch built for a different plan");
     let n = plan.n();
     let nsteps = plan.num_steps();
     if nsteps == 0 {
-        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
+        return Ok(SimResult { completion_s: 0.0, messages: 0, events: 0 });
     }
     let caps = &scratch.caps;
     let hops = &scratch.link_hop_lat;
@@ -377,14 +376,19 @@ pub fn simulate_packet_plan_timeline(
                     let l = route[hop as usize] as usize;
                     let start = now.max(free_at[l]);
                     let track = tracks[l].as_deref();
-                    let batch_end = serialize_end(track, caps[l], start, total).max(ready);
+                    let stranded =
+                        || SimError::Stranded { link: l, step: plan.msg(msg as usize).step };
+                    let batch_end = serialize_end(track, caps[l], start, total)
+                        .ok_or_else(stranded)?
+                        .max(ready);
                     free_at[l] = batch_end;
                     let tail_ready = batch_end + hop_at(track, hops[l], batch_end);
                     if hop as usize + 1 == route.len() {
                         push!(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
                     } else {
                         let head = total.min(mtu as f64);
-                        let head_end = serialize_end(track, caps[l], start, head);
+                        let head_end =
+                            serialize_end(track, caps[l], start, head).ok_or_else(stranded)?;
                         push!(
                             head_end + hop_at(track, hops[l], head_end),
                             Event::Batch { msg, hop: hop + 1, ready: tail_ready }
@@ -395,7 +399,7 @@ pub fn simulate_packet_plan_timeline(
         }
     }
 
-    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
+    Ok(SimResult { completion_s: completion, messages: plan.num_msgs(), events })
 }
 
 pub mod reference {
@@ -633,7 +637,7 @@ mod tests {
         model.set_class(l0, LinkClass::slowdown(4.0));
         let p = NetParams::default();
         let m = 256 * 1024u64;
-        let plan = SimPlan::build_with_model(&s, &model);
+        let plan = SimPlan::try_build_with_model(&s, &model).unwrap();
         let r = simulate_packet_plan(&plan, m, &p, 4096);
         let ser = m as f64 * 8.0 / p.link_bw_bps;
         let expect = p.alpha_s + 4.0 * ser + 3.0 * p.per_hop_s();
@@ -708,7 +712,7 @@ mod tests {
             Epoch { t: t0, mutations: vec![Mutation::SetDown { link: l, down: true }] },
             Epoch { t: t1, mutations: vec![Mutation::SetDown { link: l, down: false }] },
         ]);
-        let r = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &outage);
+        let r = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &outage).unwrap();
         let expect = p.alpha_s + ser + (t1 - t0) + p.per_hop_s();
         assert!(
             (r.completion_s - expect).abs() < expect * 1e-9,
@@ -725,7 +729,7 @@ mod tests {
                 mutations: vec![Mutation::SetClass { link: l, class: LinkClass::UNIFORM }],
             },
         ]);
-        let r = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &brown);
+        let r = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &brown).unwrap();
         let expect = p.alpha_s + ser + 0.5 * (t1 - t0) + p.per_hop_s();
         assert!(
             (r.completion_s - expect).abs() < expect * 1e-9,
@@ -734,19 +738,19 @@ mod tests {
         );
         // empty timeline delegates to the static engine bit for bit
         let stat = simulate_packet_plan_scratch(&plan, m, &p, 4096, &scratch);
-        let empt =
-            simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &Timeline::empty());
+        let empt = simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &Timeline::empty())
+            .unwrap();
         assert_eq!(stat.completion_s.to_bits(), empt.completion_s.to_bits());
         assert_eq!(stat.events, empt.events);
-        // a permanent outage with bytes in flight panics loudly
+        // a permanent outage with bytes in flight is a typed error naming
+        // the blocked link and step, never a panic
         let dead = Timeline::new(vec![Epoch {
             t: t0,
             mutations: vec![Mutation::SetDown { link: l, down: true }],
         }]);
-        let panicked = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &dead)
-        }));
-        assert!(panicked.is_err(), "stranded traffic must panic, not misreport");
+        let err =
+            simulate_packet_plan_timeline(&plan, m, &p, 4096, &scratch, &dead).unwrap_err();
+        assert_eq!(err, SimError::Stranded { link: l as usize, step: 0 });
     }
 
     #[test]

@@ -83,28 +83,21 @@ impl SimPlan {
     /// Cost is one route resolution per message; the result is reused for
     /// every message size (and across threads).
     pub fn build(schedule: &Schedule, torus: &Torus) -> SimPlan {
-        SimPlan::build_with_model(schedule, &NetModel::uniform(torus))
+        SimPlan::try_build_with_model(schedule, &NetModel::uniform(torus))
+            .expect("uniform fabric routes are total")
     }
 
     /// Flatten `schedule` under a heterogeneous [`NetModel`]: routes detour
     /// around down links and the model's per-link scale columns are carried
     /// into the plan. With a uniform model this is exactly [`SimPlan::build`].
-    /// Panics on a partitioned fabric — use
-    /// [`try_build_with_model`](Self::try_build_with_model) to surface that
-    /// as an error instead.
-    pub fn build_with_model(schedule: &Schedule, model: &NetModel) -> SimPlan {
-        SimPlan::try_build_with_model(schedule, model)
-            .unwrap_or_else(|e| panic!("SimPlan: {e}"))
-    }
-
-    /// [`build_with_model`](Self::build_with_model), returning
-    /// [`Unreachable`] when the model's down set disconnects a
-    /// (src, dst) pair the schedule needs.
+    /// Returns [`Unreachable`] when the model's down set disconnects a
+    /// (src, dst) pair the schedule needs — surfaced as a typed error all
+    /// the way through [`crate::sim::SimError`], never a panic.
     pub fn try_build_with_model(
         schedule: &Schedule,
         model: &NetModel,
     ) -> Result<SimPlan, Unreachable> {
-        SimPlan::build_routed(schedule, model, model, schedule.steps.len() as u32)
+        SimPlan::build_staged(schedule, model, &[])
     }
 
     /// Flatten a schedule hit by a fault *between* steps: messages in steps
@@ -115,29 +108,44 @@ impl SimPlan {
     /// come from `base`: a fault changes reachability, not the surviving
     /// links' rates. With `fault_step >= num_steps` or `post == base` this
     /// is exactly [`try_build_with_model`](Self::try_build_with_model).
+    /// The two-stage special case of [`build_staged`](Self::build_staged).
     pub fn build_faulted(
         schedule: &Schedule,
         base: &NetModel,
         post: &NetModel,
         fault_step: u32,
     ) -> Result<SimPlan, Unreachable> {
-        assert_eq!(
-            base.torus().dims(),
-            post.torus().dims(),
-            "build_faulted: pre/post models must share the topology"
-        );
-        SimPlan::build_routed(schedule, base, post, fault_step)
+        SimPlan::build_staged(schedule, base, &[(fault_step, post)])
     }
 
-    /// Shared flattening core: `class_model` supplies the scale columns and
-    /// the routes of steps `< switch_step`; `route_model` routes steps
-    /// `>= switch_step`.
-    fn build_routed(
+    /// Flatten a schedule under a per-step-range **model stack**: each
+    /// `(from_step, model)` stage routes the steps `>= from_step` (up to the
+    /// next stage); steps before the first stage route on `class_model`.
+    /// This is how a *fault sequence* is priced: every fault contributes one
+    /// stage, so step `k`'s messages route on the fabric that was live when
+    /// step `k` ran. Scale columns (and the uniform flag) always come from
+    /// `class_model` — faults change reachability, not surviving links'
+    /// rates. An empty stack is exactly
+    /// [`try_build_with_model`](Self::try_build_with_model); one stage is
+    /// exactly [`build_faulted`](Self::build_faulted).
+    pub fn build_staged(
         schedule: &Schedule,
         class_model: &NetModel,
-        route_model: &NetModel,
-        switch_step: u32,
+        stages: &[(u32, &NetModel)],
     ) -> Result<SimPlan, Unreachable> {
+        for w in stages.windows(2) {
+            assert!(
+                w[0].0 <= w[1].0,
+                "build_staged: stages must be sorted by from_step"
+            );
+        }
+        for (_, m) in stages {
+            assert_eq!(
+                class_model.torus().dims(),
+                m.torus().dims(),
+                "build_staged: all stage models must share the topology"
+            );
+        }
         let model = class_model;
         let torus = model.torus();
         assert_eq!(schedule.n, torus.n(), "schedule/topology mismatch");
@@ -148,7 +156,15 @@ impl SimPlan {
         let mut msgs: Vec<PlanMsg> = Vec::new();
         let mut route_links: Vec<u32> = Vec::new();
         for (k, step) in schedule.steps.iter().enumerate() {
-            let router = if (k as u32) < switch_step { class_model } else { route_model };
+            // the last stage whose from_step covers step k routes it
+            let mut router: &NetModel = class_model;
+            for &(from, m) in stages {
+                if (k as u32) >= from {
+                    router = m;
+                } else {
+                    break;
+                }
+            }
             for (src, sends) in step.sends.iter().enumerate() {
                 for snd in sends {
                     let rel = snd.rel_bytes(schedule.n_blocks);
@@ -459,11 +475,11 @@ mod tests {
         let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
         let mut model = NetModel::uniform(&t);
         model.set_class(l, LinkClass::slowdown(4.0));
-        let p = SimPlan::build_with_model(&s, &model);
+        let p = SimPlan::try_build_with_model(&s, &model).unwrap();
         assert!(!p.is_uniform());
         assert_eq!(p.link_bw_scale(l), 0.25);
         // uniform model produces the identical plan surface as build()
-        let u = SimPlan::build_with_model(&s, &NetModel::uniform(&t));
+        let u = SimPlan::try_build_with_model(&s, &NetModel::uniform(&t)).unwrap();
         let b = SimPlan::build(&s, &t);
         assert!(u.is_uniform() && b.is_uniform());
         assert_eq!(u.num_msgs(), b.num_msgs());
@@ -473,7 +489,7 @@ mod tests {
         // a down link never appears in any route
         let mut faulty = NetModel::uniform(&t);
         faulty.set_down(l, true);
-        let pf = SimPlan::build_with_model(&s, &faulty);
+        let pf = SimPlan::try_build_with_model(&s, &faulty).unwrap();
         for i in 0..pf.num_msgs() {
             assert!(!pf.route(i).contains(&(l as u32)), "msg {i} crosses the down link");
         }
@@ -510,6 +526,50 @@ mod tests {
         let noop = SimPlan::build_faulted(&s, &base, &post, s.steps.len() as u32).unwrap();
         for i in 0..noop.num_msgs() {
             assert_eq!(noop.route(i), nominal.route(i));
+        }
+    }
+
+    #[test]
+    fn staged_plan_generalizes_faulted_and_routes_per_range() {
+        use crate::net::NetModel;
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let base = NetModel::uniform(&t);
+        let l0 = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 });
+        let l3 = t.link_index(crate::topology::Link { node: 3, dim: 0, dir: 1 });
+        let mut post1 = NetModel::uniform(&t);
+        post1.set_down(l0, true);
+        let mut post2 = post1.clone();
+        post2.set_down(l3, true);
+        // one stage == build_faulted, route for route
+        let faulted = SimPlan::build_faulted(&s, &base, &post1, 1).unwrap();
+        let staged = SimPlan::build_staged(&s, &base, &[(1, &post1)]).unwrap();
+        assert_eq!(faulted.num_msgs(), staged.num_msgs());
+        for i in 0..faulted.num_msgs() {
+            assert_eq!(faulted.route(i), staged.route(i));
+        }
+        // a two-stage stack routes each step range on its own fabric
+        // (bandwidth variant: 4 steps, so every range carries messages)
+        let sb = crate::agpattern::bandwidth_allreduce(&trivance(9, Order::Dec));
+        let two = SimPlan::build_staged(&sb, &base, &[(1, &post1), (2, &post2)]).unwrap();
+        assert!(two.is_uniform(), "scale columns stay on the class model");
+        let mut saw = [false; 3];
+        for i in 0..two.num_msgs() {
+            let step = two.msg(i).step;
+            saw[(step as usize).min(2)] = true;
+            if step >= 1 {
+                assert!(!two.route(i).contains(&(l0 as u32)));
+            }
+            if step >= 2 {
+                assert!(!two.route(i).contains(&(l3 as u32)));
+            }
+        }
+        assert_eq!(saw, [true; 3], "every stage range carried traffic");
+        // empty stack == the plain model build
+        let empty = SimPlan::build_staged(&s, &base, &[]).unwrap();
+        let plain = SimPlan::build(&s, &t);
+        for i in 0..empty.num_msgs() {
+            assert_eq!(empty.route(i), plain.route(i));
         }
     }
 

@@ -16,6 +16,12 @@
 //!   tensor-parallel / mixed, [`crate::util::rng::SplitMix64`]-seeded) and
 //!   the [`workload::replay`] engine scoring table-driven selection against
 //!   the per-call oracle and every fixed-algorithm baseline.
+//! * [`online`] — the live rung: link observations matched against the
+//!   tuned scenario family by nearest-descriptor distance, yielding a
+//!   rewrite / detour action for the in-flight collective plus an
+//!   algorithm switch for the next one, scored by
+//!   `trivance scenarios --online` against the oracle and the static
+//!   strategies.
 //!
 //! CLI: `trivance tune`, `trivance recommend`, `trivance replay`.
 //! Acceptance (pinned by `tools/pysim/eval_tuner.py`, mirrored math):
@@ -23,9 +29,14 @@
 //! built-in trace × scenario preset (measured worst +0.94%) and strictly
 //! beats every fixed-algorithm policy on the mixed trace.
 
+pub mod online;
 pub mod table;
 pub mod workload;
 
+pub use online::{
+    obs_of_event, preset_obs, ref_horizon, LinkObs, OnlineSelector, ScenarioFeatures,
+    Selection, SelectorRow,
+};
 pub use table::{
     distill, ladder_index, tune, tune_ladder, Choice, DecisionTable, Recommendation,
     RecommendError, ScenarioTable, TopoTable,

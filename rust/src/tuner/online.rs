@@ -1,0 +1,513 @@
+//! Online selector: the live half of the tuner. Matches a stream of link
+//! observations against the tuned scenario family by **nearest-scenario
+//! distance** in a small descriptor space — not the decision table's
+//! exact-fingerprint lookup, which (correctly) answers `StaleModel` for any
+//! condition it was not tuned on. A live controller cannot afford that
+//! refusal: a novel fault is *exactly* when it needs advice. So the
+//! selector embeds every tuned dynamic preset as a [`ScenarioFeatures`]
+//! vector, embeds the observed event stream the same way, and borrows the
+//! nearest preset's tuned judgment:
+//!
+//! * **action** for the in-flight collective — [`Action::Rewrite`] when the
+//!   observation is a permanent failure matched to a permanent-fault
+//!   scenario, [`Action::Detour`] for transient conditions (flap/brownout:
+//!   the fabric recovers, a rewrite would pay the cleanup step for
+//!   nothing) and for anything too far from every tuned scenario
+//!   (distance above [`OnlineSelector::threshold`] — honest fallback,
+//!   detour routing is always safe);
+//! * **algorithm switch** for the *next* collective — the matched
+//!   scenario's tuned winner at the message size (a collective cannot
+//!   change algorithm mid-flight; the recommendation is reported, scored
+//!   by the `scenarios --online` sweep, not simulated mid-run).
+//!
+//! Provenance still applies: a table distilled before timeline support
+//! ([`ScenarioTable::pre_dynamic`]) is refused at selector construction
+//! with the same [`RecommendError::PreDynamicTable`] the exact-match path
+//! returns — nearest-distance matching loosens *condition* identity, never
+//! provenance.
+//!
+//! Deterministic and simulation-free, like the controller it advises.
+//! Mirrored in `tools/pysim/mirror.py` (`ScenarioFeatures`,
+//! `OnlineSelector`); keep the descriptor arithmetic in lockstep.
+
+use crate::cost::NetParams;
+use crate::harness::scenarios::{dynamic_presets, Scenario};
+use crate::net::Mutation;
+use crate::schedule::online::{Action, FaultEvent};
+use crate::topology::{Link, Torus};
+use crate::tuner::table::{ladder_index, Choice, DecisionTable, RecommendError};
+
+/// One link-health observation: at time `t` (seconds since the collective
+/// started), `link`'s usable capacity was `cap_ratio` of pristine
+/// (`0.0` = down, `1.0` = recovered/healthy). The stream a monitoring
+/// plane would feed the controller.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkObs {
+    pub t: f64,
+    pub link: usize,
+    pub cap_ratio: f64,
+}
+
+/// Reference horizon for normalizing observation times: `α + 4·m·β`, the
+/// outer edge of the preset family's degradation windows (the brownout
+/// recovers at exactly this time). Mirrored in `tools/pysim`.
+pub fn ref_horizon(params: &NetParams, m_bytes: u64) -> f64 {
+    params.alpha_s + 4.0 * m_bytes as f64 * params.beta_per_byte()
+}
+
+/// A scenario (or observed event stream) embedded as a descriptor vector.
+/// Every component is in `[0, 1]`, so unweighted L2 distance is meaningful:
+///
+/// | component       | meaning                                              |
+/// |-----------------|------------------------------------------------------|
+/// | `frac_links`    | affected directed links / all directed links         |
+/// | `severity`      | worst capacity ratio seen (`0` = hard down)          |
+/// | `duration_frac` | mean degraded time per affected link / horizon       |
+/// | `permanent`     | `1` if any affected link never recovered             |
+/// | `when_frac`     | first degradation time / horizon                     |
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct ScenarioFeatures {
+    pub frac_links: f64,
+    pub severity: f64,
+    pub duration_frac: f64,
+    pub permanent: f64,
+    pub when_frac: f64,
+}
+
+impl ScenarioFeatures {
+    /// The healthy-fabric descriptor (no observations).
+    pub const PRISTINE: ScenarioFeatures = ScenarioFeatures {
+        frac_links: 0.0,
+        severity: 1.0,
+        duration_frac: 0.0,
+        permanent: 0.0,
+        when_frac: 1.0,
+    };
+
+    /// Summarize an observation stream (any order; sorted internally by
+    /// time) over `horizon` seconds.
+    pub fn of_obs(torus: &Torus, obs: &[LinkObs], horizon: f64) -> ScenarioFeatures {
+        if obs.is_empty() {
+            return ScenarioFeatures::PRISTINE;
+        }
+        let horizon = horizon.max(f64::MIN_POSITIVE);
+        let mut sorted: Vec<&LinkObs> = obs.iter().collect();
+        sorted.sort_by(|a, b| a.t.total_cmp(&b.t));
+        // per-link accumulator: (degraded-since, total degraded time,
+        // worst ratio, first degradation time)
+        #[derive(Clone, Copy)]
+        struct Acc {
+            since: Option<f64>,
+            total: f64,
+            worst: f64,
+            first: f64,
+        }
+        let mut acc: std::collections::BTreeMap<usize, Acc> = std::collections::BTreeMap::new();
+        for o in sorted {
+            if o.cap_ratio < 1.0 {
+                let a = acc.entry(o.link).or_insert(Acc {
+                    since: None,
+                    total: 0.0,
+                    worst: 1.0,
+                    first: o.t,
+                });
+                a.worst = a.worst.min(o.cap_ratio.max(0.0));
+                if a.since.is_none() {
+                    a.since = Some(o.t);
+                }
+            } else if let Some(a) = acc.get_mut(&o.link) {
+                if let Some(s) = a.since.take() {
+                    a.total += (o.t - s).max(0.0);
+                }
+            }
+        }
+        let mut severity = 1.0f64;
+        let mut when = f64::INFINITY;
+        let mut dur_sum = 0.0f64;
+        let mut permanent = false;
+        for a in acc.values() {
+            severity = severity.min(a.worst);
+            when = when.min(a.first);
+            let mut total = a.total;
+            if let Some(s) = a.since {
+                total += (horizon - s).max(0.0);
+                permanent = true;
+            }
+            dur_sum += (total / horizon).clamp(0.0, 1.0);
+        }
+        let n_aff = acc.len();
+        ScenarioFeatures {
+            frac_links: n_aff as f64 / torus.num_links() as f64,
+            severity,
+            duration_frac: if n_aff == 0 { 0.0 } else { dur_sum / n_aff as f64 },
+            permanent: if permanent { 1.0 } else { 0.0 },
+            when_frac: if when.is_finite() { (when / horizon).clamp(0.0, 1.0) } else { 1.0 },
+        }
+    }
+
+    /// Unweighted L2 distance in descriptor space.
+    pub fn dist(&self, other: &ScenarioFeatures) -> f64 {
+        let a = self.as_vec();
+        let b = other.as_vec();
+        a.iter().zip(&b).map(|(x, y)| (x - y) * (x - y)).sum::<f64>().sqrt()
+    }
+
+    fn as_vec(&self) -> [f64; 5] {
+        [self.frac_links, self.severity, self.duration_frac, self.permanent, self.when_frac]
+    }
+}
+
+/// A preset's canonical observation stream: its capacity timeline's
+/// mutations read as link-health samples, plus (for mid-fault presets) the
+/// permanent cable death observed at its step boundary (`step · α`, the
+/// latency-regime estimate — by then `step` latency-bound steps have run).
+pub fn preset_obs(
+    sc: &Scenario,
+    torus: &Torus,
+    params: &NetParams,
+    m_bytes: u64,
+) -> Vec<LinkObs> {
+    let mut obs = Vec::new();
+    for e in sc.timeline(torus, params, m_bytes).epochs() {
+        for mu in &e.mutations {
+            let cap_ratio = match mu {
+                Mutation::SetDown { down, .. } => {
+                    if *down {
+                        0.0
+                    } else {
+                        1.0
+                    }
+                }
+                Mutation::SetClass { class, .. } => class.bw_scale,
+            };
+            obs.push(LinkObs { t: e.t, link: mu.link() as usize, cap_ratio });
+        }
+    }
+    if let Some(f) = sc.fault(torus) {
+        let t = params.alpha_s * f.step as f64;
+        for &l in &f.down_links {
+            obs.push(LinkObs { t, link: l, cap_ratio: 0.0 });
+        }
+    }
+    obs
+}
+
+/// A [`FaultEvent`] read as link-health observations: each down link at
+/// ratio 0, each dead node as all of its incident directed links (both
+/// directions of every port) at ratio 0.
+pub fn obs_of_event(ev: &FaultEvent, torus: &Torus) -> Vec<LinkObs> {
+    let mut obs: Vec<LinkObs> = ev
+        .down_links
+        .iter()
+        .map(|&l| LinkObs { t: ev.t, link: l, cap_ratio: 0.0 })
+        .collect();
+    for &node in &ev.dead_nodes {
+        for dim in 0..torus.ndims() {
+            for dir in [-1i8, 1] {
+                let out = Link { node, dim: dim as u8, dir };
+                obs.push(LinkObs { t: ev.t, link: torus.link_index(out), cap_ratio: 0.0 });
+                obs.push(LinkObs {
+                    t: ev.t,
+                    link: torus.link_index(torus.reverse_link(out)),
+                    cap_ratio: 0.0,
+                });
+            }
+        }
+    }
+    obs
+}
+
+/// One embedded tuned scenario: its descriptor, whether its condition is
+/// permanent (fault) or transient (timeline), and the tuned per-size
+/// winners (empty when the table was not tuned on this preset).
+#[derive(Clone, Debug)]
+pub struct SelectorRow {
+    pub scenario: String,
+    pub features: ScenarioFeatures,
+    pub permanent: bool,
+    pub winners: Vec<Choice>,
+}
+
+/// What the selector decided for one observation stream.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Selection {
+    /// Nearest tuned scenario by descriptor distance.
+    pub scenario: String,
+    pub distance: f64,
+    /// `false` when the distance exceeded the threshold (action falls back
+    /// to [`Action::Detour`], no algorithm switch is recommended).
+    pub matched: bool,
+    /// What the in-flight collective should do about the event.
+    pub action: Action,
+    /// Tuned winner to switch to for the *next* collective, when matched
+    /// and the table carries winners for the matched scenario.
+    pub algo_switch: Option<Choice>,
+}
+
+/// Reference message size for embedding the preset family (the preset
+/// windows scale with `m·β`, so descriptors are nearly size-invariant;
+/// this matches the tuner's canonical fingerprint size).
+const CANONICAL_SIZE: u64 = 1 << 20;
+
+/// Distance beyond which an observation matches *no* tuned scenario and
+/// the selector falls back to detour. Descriptor components live in
+/// `[0, 1]`; 0.5 tolerates one component drifting halfway (e.g. a fault
+/// landing later than the preset's) without accepting a categorically
+/// different condition (permanent vs transient alone contributes 1.0).
+pub const DEFAULT_THRESHOLD: f64 = 0.5;
+
+/// The nearest-scenario policy distilled from a tuned [`DecisionTable`]
+/// (module docs). Construct once per (table, topology) with
+/// [`OnlineSelector::from_table`]; consult per event with
+/// [`OnlineSelector::select`] or hand [`OnlineSelector::policy`] straight
+/// to [`crate::schedule::online::respond`].
+#[derive(Clone, Debug)]
+pub struct OnlineSelector {
+    pub dims: Vec<u32>,
+    /// The tuned size ladder (for the algorithm-switch lookup).
+    pub sizes: Vec<u64>,
+    pub threshold: f64,
+    pub rows: Vec<SelectorRow>,
+}
+
+impl OnlineSelector {
+    /// Embed the dynamic preset family against `table`'s tuned rows for
+    /// `torus`. Errs [`RecommendError::UnknownTopo`] when the table has no
+    /// row for the topology and [`RecommendError::PreDynamicTable`] when a
+    /// matched row predates timeline support (provenance, module docs).
+    pub fn from_table(table: &DecisionTable, torus: &Torus) -> Result<OnlineSelector, RecommendError> {
+        let topo = table
+            .topos
+            .iter()
+            .find(|t| t.dims.as_slice() == torus.dims())
+            .ok_or_else(|| RecommendError::UnknownTopo { dims: torus.dims().to_vec() })?;
+        let mut rows = Vec::new();
+        for sc in dynamic_presets() {
+            let obs = preset_obs(&sc, torus, &table.params, CANONICAL_SIZE);
+            let features = ScenarioFeatures::of_obs(
+                torus,
+                &obs,
+                ref_horizon(&table.params, CANONICAL_SIZE),
+            );
+            let permanent = features.permanent >= 0.5;
+            let winners = match topo.scenarios.iter().find(|r| r.scenario == sc.name) {
+                Some(row) if row.pre_dynamic => {
+                    return Err(RecommendError::PreDynamicTable {
+                        dims: topo.dims.clone(),
+                        timeline_fp: sc.dyn_fingerprint(torus),
+                    });
+                }
+                Some(row) => row.winners.clone(),
+                None => Vec::new(),
+            };
+            rows.push(SelectorRow { scenario: sc.name, features, permanent, winners });
+        }
+        Ok(OnlineSelector {
+            dims: torus.dims().to_vec(),
+            sizes: topo.sizes.clone(),
+            threshold: DEFAULT_THRESHOLD,
+            rows,
+        })
+    }
+
+    /// Match an observation stream and decide (module docs). Deterministic:
+    /// ties in distance keep the first row (the preset family's order).
+    pub fn select(
+        &self,
+        torus: &Torus,
+        obs: &[LinkObs],
+        m_bytes: u64,
+        params: &NetParams,
+    ) -> Selection {
+        let f = ScenarioFeatures::of_obs(torus, obs, ref_horizon(params, m_bytes));
+        let (row, distance) = self
+            .rows
+            .iter()
+            .map(|r| (r, r.features.dist(&f)))
+            .min_by(|a, b| a.1.total_cmp(&b.1))
+            .expect("the dynamic preset family is never empty");
+        let matched = distance <= self.threshold;
+        let action = if matched && row.permanent && f.permanent >= 0.5 {
+            Action::Rewrite
+        } else {
+            Action::Detour
+        };
+        let algo_switch = if matched {
+            row.winners.get(ladder_index(m_bytes, self.sizes.len())).copied()
+        } else {
+            None
+        };
+        Selection { scenario: row.scenario.clone(), distance, matched, action, algo_switch }
+    }
+
+    /// The selector as a [`crate::schedule::online::respond`] policy
+    /// closure: accumulates each event's observations and re-selects, so a
+    /// second fault is judged against the full stream seen so far. One
+    /// hard rule sits above the fingerprint match: an event that kills a
+    /// node always rewrites — detouring cannot route around a dead
+    /// endpoint, so the nearest-scenario vote is irrelevant there.
+    pub fn policy<'a>(
+        &'a self,
+        torus: &'a Torus,
+        m_bytes: u64,
+        params: &'a NetParams,
+    ) -> impl FnMut(&FaultEvent, usize) -> Action + 'a {
+        let mut seen: Vec<LinkObs> = Vec::new();
+        move |ev, _step| {
+            seen.extend(obs_of_event(ev, torus));
+            // a dead node is never detourable — no route into it can
+            // exist — so rewrite strictly dominates regardless of which
+            // scenario the observation stream resembles
+            if !ev.dead_nodes.is_empty() {
+                return Action::Rewrite;
+            }
+            self.select(torus, &seen, m_bytes, params).action
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::{Algo, Variant};
+    use crate::net::NetModel;
+    use crate::tuner::table::{tune_ladder, ScenarioTable, TopoTable};
+
+    fn toy_table(t: &Torus, pre_dynamic: bool) -> DecisionTable {
+        let params = NetParams::default();
+        let sizes = tune_ladder(1 << 20);
+        let scenarios = dynamic_presets()
+            .iter()
+            .map(|sc| ScenarioTable {
+                scenario: sc.name.clone(),
+                net_fp: NetModel::uniform(t).fingerprint(),
+                timeline_fp: sc.dyn_fingerprint(t),
+                pre_dynamic,
+                winners: vec![
+                    Choice { algo: Algo::Trivance, variant: Variant::Latency };
+                    sizes.len()
+                ],
+            })
+            .collect();
+        DecisionTable {
+            params,
+            topos: vec![TopoTable { dims: t.dims().to_vec(), sizes, scenarios }],
+        }
+    }
+
+    #[test]
+    fn features_separate_transient_from_permanent_presets() {
+        let t = Torus::new(&[3, 3]);
+        let p = NetParams::default();
+        let fam = dynamic_presets();
+        let feats: Vec<ScenarioFeatures> = fam
+            .iter()
+            .map(|sc| {
+                ScenarioFeatures::of_obs(
+                    &t,
+                    &preset_obs(sc, &t, &p, CANONICAL_SIZE),
+                    ref_horizon(&p, CANONICAL_SIZE),
+                )
+            })
+            .collect();
+        // flap: one link hard down, recovers
+        assert_eq!(feats[0].permanent, 0.0);
+        assert_eq!(feats[0].severity, 0.0);
+        // brownout: many links softly degraded, recovers
+        assert_eq!(feats[1].permanent, 0.0);
+        assert!((feats[1].severity - 0.25).abs() < 1e-12);
+        assert!(feats[1].frac_links > feats[0].frac_links);
+        // mid-fault (both strategies share the physical condition): permanent
+        for f in &feats[2..] {
+            assert_eq!(f.permanent, 1.0);
+            assert_eq!(f.severity, 0.0);
+        }
+        assert!(feats[0].dist(&feats[2]) > 0.9, "flap vs cable death must be far apart");
+        assert!(feats[2].dist(&feats[3]) < 1e-12, "mid-fault strategies share features");
+    }
+
+    #[test]
+    fn selector_rewrites_on_permanent_faults_and_detours_on_transients() {
+        let t = Torus::new(&[3, 3]);
+        let p = NetParams::default();
+        let sel = OnlineSelector::from_table(&toy_table(&t, false), &t).unwrap();
+        assert_eq!(sel.rows.len(), 4);
+        let m = 256 << 10;
+        // a cable death observed mid-collective: nearest scenario is the
+        // mid-fault family, the observation is permanent -> rewrite + switch
+        let ev = FaultEvent::cable(p.alpha_s, &t, 0);
+        let s = sel.select(&t, &obs_of_event(&ev, &t), m, &p);
+        assert!(s.matched, "cable death must match the tuned family ({})", s.distance);
+        assert!(s.scenario.starts_with("mid-fault"));
+        assert_eq!(s.action, Action::Rewrite);
+        assert_eq!(
+            s.algo_switch,
+            Some(Choice { algo: Algo::Trivance, variant: Variant::Latency })
+        );
+        // a flap (down then recovered) is transient -> detour, no rewrite
+        let l = crate::net::pick_links(&t, 1, crate::harness::scenarios::FLAP_SEED, false)[0];
+        let ser = m as f64 * p.beta_per_byte();
+        let flap = [
+            LinkObs { t: p.alpha_s + 0.25 * ser, link: l, cap_ratio: 0.0 },
+            LinkObs { t: p.alpha_s + 2.25 * ser, link: l, cap_ratio: 1.0 },
+        ];
+        let s = sel.select(&t, &flap, m, &p);
+        assert!(s.matched);
+        assert_eq!(s.scenario, "flap");
+        assert_eq!(s.action, Action::Detour);
+        // nothing observed at all: pristine is far from every degraded
+        // preset -> unmatched, detour, no switch
+        let s = sel.select(&t, &[], m, &p);
+        assert!(!s.matched);
+        assert_eq!(s.action, Action::Detour);
+        assert_eq!(s.algo_switch, None);
+    }
+
+    #[test]
+    fn selector_refuses_pre_dynamic_provenance() {
+        let t = Torus::new(&[3, 3]);
+        let err = OnlineSelector::from_table(&toy_table(&t, true), &t).unwrap_err();
+        assert!(matches!(err, RecommendError::PreDynamicTable { .. }), "{err}");
+        let err = OnlineSelector::from_table(&toy_table(&t, false), &Torus::ring(5)).unwrap_err();
+        assert!(matches!(err, RecommendError::UnknownTopo { .. }), "{err}");
+    }
+
+    #[test]
+    fn dead_node_observations_cover_all_incident_links() {
+        let t = Torus::ring(9);
+        let obs = obs_of_event(&FaultEvent::node(1.0, 4), &t);
+        // a ring node has 2 outgoing + 2 incoming directed links
+        let mut links: Vec<usize> = obs.iter().map(|o| o.link).collect();
+        links.sort_unstable();
+        links.dedup();
+        assert_eq!(links.len(), 4);
+        assert!(obs.iter().all(|o| o.cap_ratio == 0.0));
+    }
+
+    #[test]
+    fn selector_policy_drives_the_controller() {
+        // 3x3 at 256 KiB: a mid-first-step cable death sits within the
+        // match threshold of the mid-fault fingerprint (measured d=0.484),
+        // so the policy rewrites. On ring-9 the same event is farther from
+        // the tuned fingerprint (d>1) and conservatively detours instead.
+        let t = Torus::new(&[3, 3]);
+        let sel = OnlineSelector::from_table(&toy_table(&t, false), &t).unwrap();
+        let b = crate::algo::build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        let base = NetModel::uniform(&t);
+        let p = NetParams::default();
+        let m = 256 * 1024u64;
+        let ends =
+            crate::schedule::online::step_time_estimates(&b.net, &base, m, &p);
+        let ev = FaultEvent::cable(0.5 * (ends[0] + ends[1]), &t, 0);
+        let resp = crate::schedule::online::respond(
+            &b,
+            &base,
+            &[ev],
+            m,
+            &p,
+            sel.policy(&t, m, &p),
+        )
+        .unwrap();
+        assert_eq!(resp.actions, vec![(1, Action::Rewrite)]);
+    }
+}

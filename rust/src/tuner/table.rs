@@ -79,6 +79,13 @@ pub struct ScenarioTable {
     /// on static fabrics is *timeline-stale* for a dynamic one — rejected,
     /// never silently served.
     pub timeline_fp: u64,
+    /// Provenance: true when this row was parsed from a JSON that predates
+    /// timeline support (no `timeline_fp` key). Such rows carry
+    /// `timeline_fp = 0`, which is also the legitimate "static condition"
+    /// fingerprint — so dynamic lookups against a pre-dynamic table are
+    /// rejected with [`RecommendError::PreDynamicTable`] (naming the
+    /// provenance) instead of a generic stale-model error.
+    pub pre_dynamic: bool,
     pub winners: Vec<Choice>,
 }
 
@@ -124,6 +131,12 @@ pub enum RecommendError {
     /// tuned scenario row: the table is stale for this fabric (re-run
     /// `trivance tune`). `timeline_fp == 0` means the lookup was static.
     StaleModel { dims: Vec<u32>, fingerprint: u64, timeline_fp: u64 },
+    /// A *dynamic* lookup was attempted against a table whose rows were
+    /// distilled before timeline support existed (their JSON carries no
+    /// `timeline_fp`): `0` there means "provenance unknown", not "matches
+    /// the empty timeline", so the lookup is refused by provenance instead
+    /// of pretending the static winners were tuned for this condition.
+    PreDynamicTable { dims: Vec<u32>, timeline_fp: u64 },
     /// The requested size lies above the tuned ladder's maximum: the
     /// nearest-in-log-space index would silently extrapolate the last
     /// winner arbitrarily far, so the lookup is refused instead (re-tune
@@ -143,6 +156,15 @@ impl std::fmt::Display for RecommendError {
                     "decision table is stale for {dims:?}: live NetModel fingerprint \
                      {fingerprint:#x} (dynamic-condition fingerprint {timeline_fp:#x}) \
                      matches no tuned scenario — re-run `trivance tune`"
+                )
+            }
+            RecommendError::PreDynamicTable { dims, timeline_fp } => {
+                write!(
+                    f,
+                    "decision table for {dims:?} was distilled before timeline support \
+                     (its rows carry no timeline_fp) and cannot serve a dynamic lookup \
+                     (live dynamic-condition fingerprint {timeline_fp:#x}) — re-run \
+                     `trivance tune` to regenerate the table with dynamic scenario rows"
                 )
             }
             RecommendError::OutOfRange { dims, bytes, max } => {
@@ -218,6 +240,7 @@ pub fn distill(torus: &Torus, sweep: &ScenarioSweep) -> TopoTable {
                 scenario: sc.name.clone(),
                 net_fp: sc.model(torus).fingerprint(),
                 timeline_fp: sc.dyn_fingerprint(torus),
+                pre_dynamic: false,
                 winners,
             }
         })
@@ -282,6 +305,15 @@ impl DecisionTable {
             .iter()
             .find(|t| t.dims == dims)
             .ok_or_else(|| RecommendError::UnknownTopo { dims: dims.to_vec() })?;
+        if timeline_fp != 0
+            && !topo.scenarios.is_empty()
+            && topo.scenarios.iter().all(|s| s.pre_dynamic)
+        {
+            return Err(RecommendError::PreDynamicTable {
+                dims: dims.to_vec(),
+                timeline_fp,
+            });
+        }
         let fp = model.fingerprint();
         let sc = topo
             .scenarios
@@ -470,14 +502,18 @@ impl DecisionTable {
                     .ok_or("missing net_fp")?
                     .parse()
                     .map_err(|e| format!("bad net_fp: {e}"))?;
-                // absent in pre-dynamic tables: those rows were all static
-                let timeline_fp: u64 = match sc.get("timeline_fp") {
-                    None => 0,
-                    Some(v) => v
-                        .as_str()
-                        .ok_or("bad timeline_fp")?
-                        .parse()
-                        .map_err(|e| format!("bad timeline_fp: {e}"))?,
+                // absent in pre-dynamic tables: parse as 0 but mark the
+                // provenance, so dynamic lookups are refused by name
+                // instead of treating 0 as "matches the empty timeline"
+                let (timeline_fp, pre_dynamic): (u64, bool) = match sc.get("timeline_fp") {
+                    None => (0, true),
+                    Some(v) => (
+                        v.as_str()
+                            .ok_or("bad timeline_fp")?
+                            .parse()
+                            .map_err(|e| format!("bad timeline_fp: {e}"))?,
+                        false,
+                    ),
                 };
                 let winners: Vec<Choice> = sc
                     .get("winners")
@@ -497,7 +533,13 @@ impl DecisionTable {
                         sizes.len()
                     ));
                 }
-                scenarios.push(ScenarioTable { scenario: name, net_fp, timeline_fp, winners });
+                scenarios.push(ScenarioTable {
+                    scenario: name,
+                    net_fp,
+                    timeline_fp,
+                    pre_dynamic,
+                    winners,
+                });
             }
             topos.push(TopoTable { dims, sizes, scenarios });
         }
@@ -577,6 +619,40 @@ mod tests {
         }
         assert_eq!(ladder_index((4u64 << 30) + 1, big.len()), 27);
         assert_eq!(ladder_index(u64::MAX, big.len()), 28);
+    }
+
+    #[test]
+    fn pre_dynamic_table_rejects_dynamic_lookups_by_provenance() {
+        // a table serialized before timeline support: no timeline_fp keys
+        let legacy = format!(
+            "{{\n  \"schema\": \"{SCHEMA}\",\n  \"params\": {{\"alpha_s\": 0.0000015, \
+             \"link_bw_bps\": 800000000000, \"link_latency_s\": 0.0000001, \
+             \"hop_latency_s\": 0.0000001}},\n  \"topos\": [\n    {{\"dims\": [9], \
+             \"sizes\": [32, 64], \"scenarios\": [\n      {{\"name\": \"uniform\", \
+             \"net_fp\": \"0\", \"winners\": [\"trivance-L\", \"trivance-L\"]}}\n    ]}}\n  ]\n}}\n"
+        );
+        let table = DecisionTable::from_json(&legacy).unwrap();
+        assert!(table.topos[0].scenarios[0].pre_dynamic);
+        assert_eq!(table.topos[0].scenarios[0].timeline_fp, 0);
+        let t = Torus::ring(9);
+        let model = NetModel::uniform(&t);
+        // static lookups still work (the rows WERE tuned for static fabrics)
+        let rec = table.recommend(&[9], &model, 64).unwrap();
+        assert_eq!(rec.algo, Algo::Trivance);
+        // any dynamic lookup is refused with the provenance-naming error
+        let err = table.recommend_dyn(&[9], &model, 0xBEEF, 64).unwrap_err();
+        assert_eq!(
+            err,
+            RecommendError::PreDynamicTable { dims: vec![9], timeline_fp: 0xBEEF }
+        );
+        assert!(err.to_string().contains("before timeline support"), "{err}");
+        // a freshly serialized table round-trips with provenance intact:
+        // its rows carry timeline_fp keys, so dynamic lookups fall through
+        // to normal fingerprint matching (StaleModel here, not provenance)
+        let rt = DecisionTable::from_json(&table.to_json()).unwrap();
+        assert!(!rt.topos[0].scenarios[0].pre_dynamic);
+        let err = rt.recommend_dyn(&[9], &model, 0xBEEF, 64).unwrap_err();
+        assert!(matches!(err, RecommendError::StaleModel { .. }), "{err:?}");
     }
 
     #[test]

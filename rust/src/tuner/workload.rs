@@ -264,6 +264,10 @@ pub fn replay(
                 (
                     b.variant,
                     simulate_plan_timeline(plan, scratch, distinct[si], params, mode, timeline)
+                        // replay runs the scenario presets, whose timelines
+                        // never strand (flaps recover, mid-fault plans
+                        // route on the post-fault model)
+                        .expect("scenario preset timelines never strand")
                         .completion_s,
                 )
             })

@@ -20,10 +20,11 @@
 
 use trivance::algo::{build, Algo, Variant};
 use trivance::cost::NetParams;
-use trivance::harness::scenarios::{dynamic_presets, ScenarioKind};
+use trivance::harness::scenarios::{dynamic_presets, two_fault_events, ScenarioKind};
 use trivance::harness::sweep::{build_all, build_all_uncached, run_sweep_threads, size_ladder};
 use trivance::net::{LinkClass, NetModel, Timeline};
-use trivance::schedule::rewrite::rewrite_for_fault;
+use trivance::schedule::online::{respond, step_time_estimates, Action, FaultEvent};
+use trivance::schedule::rewrite::{rewrite_collective_for_faults, rewrite_for_fault};
 use trivance::schedule::validate::validate_allreduce;
 use trivance::sim::packet::reference::simulate_packet_reference_plan;
 use trivance::sim::{
@@ -272,13 +273,13 @@ fn uniform_netmodel_is_bit_identical_across_registry() {
             for variant in Variant::ALL {
                 let Ok(b) = build(algo, variant, &t) else { continue };
                 let seed_plan = SimPlan::build(&b.net, &t);
-                let model_plan = SimPlan::build_with_model(&b.net, &model);
+                let model_plan = SimPlan::try_build_with_model(&b.net, &model).unwrap();
                 assert!(model_plan.is_uniform());
                 // and through the fingerprint-keyed cache: first a miss,
                 // then a hit handing back the same plan
                 let key = PlanKey::with_net_fp(algo, variant, t.dims(), model.fingerprint());
                 let cached = cache.get_or_build(key.clone(), || {
-                    SimPlan::build_with_model(&b.net, &model)
+                    SimPlan::try_build_with_model(&b.net, &model).unwrap()
                 });
                 let cached_hit = cache.get_or_build(key, || panic!("must hit"));
                 assert!(std::sync::Arc::ptr_eq(&cached, &cached_hit));
@@ -327,7 +328,7 @@ fn straggled_used_link_never_speeds_a_collective_up() {
                 for &l in &used {
                     let mut model = NetModel::uniform(&t);
                     model.set_class(l as usize, LinkClass::slowdown(4.0));
-                    let plan = SimPlan::build_with_model(&b.net, &model);
+                    let plan = SimPlan::try_build_with_model(&b.net, &model).unwrap();
                     for (mi, &m) in sizes.iter().enumerate() {
                         let f1 = simulate_plan(&plan, m, &p, SimMode::Flow).completion_s;
                         assert!(
@@ -358,7 +359,7 @@ fn faulty_link_reroute_keeps_flow_and_packet_within_10pct() {
             for algo in Algo::ALL {
                 for variant in Variant::ALL {
                     let Ok(b) = build(algo, variant, &t) else { continue };
-                    let plan = SimPlan::build_with_model(&b.net, &model);
+                    let plan = SimPlan::try_build_with_model(&b.net, &model).unwrap();
                     for i in 0..plan.num_msgs() {
                         for &l in plan.route(i) {
                             assert!(
@@ -410,7 +411,7 @@ fn plan_cache_misses_when_the_net_model_changes() {
                     t.dims(),
                     model.fingerprint(),
                 ),
-                || SimPlan::build_with_model(&b.net, model),
+                || SimPlan::try_build_with_model(&b.net, model).unwrap(),
             )
         })
         .collect();
@@ -448,7 +449,7 @@ fn hoisted_scratch_is_bit_identical_for_both_engines() {
             for variant in Variant::ALL {
                 let Ok(b) = build(algo, variant, &t) else { continue };
                 for model in &models {
-                    let plan = SimPlan::build_with_model(&b.net, model);
+                    let plan = SimPlan::try_build_with_model(&b.net, model).unwrap();
                     let scratch = SimScratch::new(&plan, &p);
                     for m in [4096u64, 256 << 10] {
                         for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
@@ -527,8 +528,8 @@ fn asymmetric_direction_model_prices_directions_independently() {
             for variant in Variant::ALL {
                 let Ok(b) = build(algo, variant, &t) else { continue };
                 let uni_plan = SimPlan::build(&b.net, &t);
-                let asym_plan = SimPlan::build_with_model(&b.net, &asym);
-                let both_plan = SimPlan::build_with_model(&b.net, &both);
+                let asym_plan = SimPlan::try_build_with_model(&b.net, &asym).unwrap();
+                let both_plan = SimPlan::try_build_with_model(&b.net, &both).unwrap();
                 for m in [4096u64, 256 << 10] {
                     let fu = simulate_plan(&uni_plan, m, &p, SimMode::Flow).completion_s;
                     let fa = simulate_plan(&asym_plan, m, &p, SimMode::Flow).completion_s;
@@ -576,7 +577,8 @@ fn empty_timeline_is_bit_identical_across_registry() {
                         for plan in [&fresh, &*cached] {
                             let scratch = SimScratch::new(plan, &p);
                             let s = simulate_plan_scratch(plan, &scratch, m, &p, mode);
-                            let d = simulate_plan_timeline(plan, &scratch, m, &p, mode, &empty);
+                            let d = simulate_plan_timeline(plan, &scratch, m, &p, mode, &empty)
+                                .expect("empty timeline cannot strand traffic");
                             assert_eq!(
                                 s.completion_s.to_bits(),
                                 d.completion_s.to_bits(),
@@ -620,11 +622,17 @@ fn dynamic_presets_keep_flow_and_packet_within_measured_bounds() {
                         Some(fault) => {
                             let base = NetModel::uniform(&t);
                             let post = fault.apply(&base);
+                            // padded builds rewrite through their padding
+                            // host map since PR 6 — no `!b.padded` gate
                             let rewrite =
-                                matches!(sc.kind, ScenarioKind::MidFault { rewrite: true })
-                                    && !b.padded;
+                                matches!(sc.kind, ScenarioKind::MidFault { rewrite: true });
                             let schedule = if rewrite {
-                                rewrite_for_fault(&b.net, &base, &fault).unwrap()
+                                rewrite_collective_for_faults(
+                                    &b,
+                                    &base,
+                                    std::slice::from_ref(&fault),
+                                )
+                                .unwrap()
                             } else {
                                 b.net.clone()
                             };
@@ -635,7 +643,8 @@ fn dynamic_presets_keep_flow_and_packet_within_measured_bounds() {
                     let scratch = SimScratch::new(&plan, &p);
                     for m in [4096u64, 256 << 10, 1 << 20] {
                         let tl = sc.timeline(&t, &p, m);
-                        let f = simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl);
+                        let f = simulate_plan_timeline(&plan, &scratch, m, &p, SimMode::Flow, &tl)
+                            .expect("preset timelines never strand");
                         let k = simulate_plan_timeline(
                             &plan,
                             &scratch,
@@ -643,7 +652,8 @@ fn dynamic_presets_keep_flow_and_packet_within_measured_bounds() {
                             &p,
                             SimMode::Packet { mtu: 4096 },
                             &tl,
-                        );
+                        )
+                        .expect("preset timelines never strand");
                         assert!(k.completion_s > 0.0);
                         let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
                         assert!(
@@ -716,6 +726,134 @@ fn midfault_rewrite_validates_and_beats_detour_where_crossings_repeat() {
     let fr = simulate_plan(&rp, m, &p, SimMode::Flow).completion_s;
     let rel = (fr - fd).abs() / fd;
     assert!(rel < 0.10, "trivance-L parity broke: detour {fd} vs rewrite {fr} ({rel:.3})");
+}
+
+#[test]
+fn online_two_fault_sequence_completes_in_both_engines() {
+    // ISSUE 6 acceptance: the seeded two-fault sequence (cable death
+    // mid-collective, then a node death across the cable on rings / a far
+    // cable on 2D+) completes under the online controller in BOTH engines
+    // on ring-9 and the 3x3 torus. The controller rewrites incrementally —
+    // the second rewrite runs against the already-rewritten schedule — and
+    // the staged plan routes every stage on its own post-fault model.
+    //
+    // Measured boundary (tools/pysim/eval_online.py): ring bandwidth
+    // variants cannot complete — the dead endpoint's contribution is still
+    // unspread that late in a Reduce-Scatter-style schedule, so the second
+    // rewrite refuses, the fallback detour cannot route around a dead
+    // node, and the failure surfaces as a typed plan-build error, never a
+    // panic.
+    let p = NetParams::default();
+    for dims in [vec![9u32], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        let base = NetModel::uniform(&t);
+        let ring = t.ndims() == 1;
+        for algo in [Algo::Trivance, Algo::Bruck] {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                let m = 256u64 << 10;
+                let ends = step_time_estimates(&b.net, &base, m, &p);
+                let events = two_fault_events(&t, &ends);
+                assert_eq!(events.len(), 2, "{dims:?}: seeded sequence is two faults");
+                let resp = respond(&b, &base, &events, m, &p, |_, _| Action::Rewrite)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
+                assert_eq!(
+                    resp.actions.len(),
+                    2,
+                    "{algo:?} {variant:?} {dims:?}: controller must see both faults"
+                );
+                if ring && variant == Variant::Bandwidth {
+                    assert_eq!(
+                        resp.actions[1].1,
+                        Action::Detour,
+                        "{algo:?} {dims:?}: unrecoverable late node death must \
+                         degrade to detour, not panic"
+                    );
+                    let err = resp.build_plan(&base).unwrap_err();
+                    let _ = err; // typed Unreachable: the dead node partitions
+                    continue;
+                }
+                assert!(
+                    resp.actions.iter().all(|(_, a)| *a == Action::Rewrite),
+                    "{algo:?} {variant:?} {dims:?}: rewrite policy fell back to detour"
+                );
+                let plan = resp
+                    .build_plan(&base)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e:?}"));
+                for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
+                    let r = simulate_plan(&plan, m, &p, mode);
+                    assert!(
+                        r.completion_s.is_finite() && r.completion_s > 0.0,
+                        "{algo:?} {variant:?} {dims:?} {mode:?}: {}",
+                        r.completion_s
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn fault_sequences_keep_flow_and_packet_within_measured_bounds() {
+    // ISSUE 6 satellite: flow-vs-packet crosscheck for multi-fault
+    // sequences — (a) the seeded cable death + second fault during cleanup,
+    // (b) a directed-link fault followed by a node death (node death after
+    // link rewrite). Bounds pinned from tools/pysim/eval_online.py:
+    // measured worst 0.044 on 3x3 and 0.033 on ring-9 at 256 KiB, asserted
+    // at 0.10 headroom. Ring bandwidth variants are excluded — their late
+    // node death is the measured unrecoverable boundary covered (typed) by
+    // online_two_fault_sequence_completes_in_both_engines.
+    let p = NetParams::default();
+    for dims in [vec![9u32], vec![3, 3]] {
+        let t = Torus::new(&dims);
+        let base = NetModel::uniform(&t);
+        let ring = t.ndims() == 1;
+        let bound = 0.10;
+        for algo in [Algo::Trivance, Algo::Bruck] {
+            for variant in Variant::ALL {
+                if ring && variant == Variant::Bandwidth {
+                    continue;
+                }
+                let Ok(b) = build(algo, variant, &t) else { continue };
+                let m = 256u64 << 10;
+                let ends = step_time_estimates(&b.net, &base, m, &p);
+                let last = *ends.last().unwrap();
+                // (b) link fault mid-step-1, node death late in the
+                // collective. On the ring the victim must be the node the
+                // dead link fed (any other death strands an unspread
+                // contribution — measured in eval_online.py); on 2D+ a far
+                // node exercises the reshuffle across dimensions.
+                let l = t.link_index(trivance::topology::Link { node: 0, dim: 0, dir: 1 });
+                let victim = if ring { 1 } else { t.n() / 2 };
+                let link_then_node = vec![
+                    FaultEvent::link(0.5 * (ends[0] + ends[ends.len().min(2) - 1]), l),
+                    FaultEvent::node(0.9 * last, victim),
+                ];
+                for (tag, events) in
+                    [("two-fault", two_fault_events(&t, &ends)), ("link+node", link_then_node)]
+                {
+                    let Ok(resp) = respond(&b, &base, &events, m, &p, |_, _| Action::Rewrite)
+                    else {
+                        panic!("{tag} {algo:?} {variant:?} {dims:?}: respond failed")
+                    };
+                    let plan = resp.build_plan(&base).unwrap_or_else(|e| {
+                        panic!("{tag} {algo:?} {variant:?} {dims:?}: {e:?}")
+                    });
+                    let f = simulate_plan(&plan, m, &p, SimMode::Flow);
+                    let k = simulate_plan(&plan, m, &p, SimMode::Packet { mtu: 4096 });
+                    assert!(k.completion_s > 0.0);
+                    let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
+                    assert!(
+                        rel < bound,
+                        "{tag} {algo:?} {variant:?} {dims:?}: flow {} vs packet {} \
+                         (rel {rel:.3} > {bound})",
+                        f.completion_s,
+                        k.completion_s
+                    );
+                }
+            }
+        }
+    }
 }
 
 #[test]

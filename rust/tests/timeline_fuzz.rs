@@ -1,0 +1,149 @@
+//! Seeded multi-fault timeline fuzzer (ISSUE 6 satellite).
+//!
+//! Draws random mutation timelines — permanent downs (t = 0 only, so
+//! strandedness is deterministic), transient flaps (down + recovery), and
+//! capacity brownouts at random times — and runs both engines on the same
+//! plan + timeline. The property: either both engines complete and agree
+//! within `FUZZ_TOL`, or both return the *same* typed [`SimError`]
+//! discriminant. One engine completing while the other strands (or a panic
+//! anywhere) is the bug class this fuzzer exists to catch.
+//!
+//! Deterministic and replicated in `tools/pysim/eval_online.py` (same
+//! `SplitMix64` seed and draw order — keep the generator in lockstep);
+//! `FUZZ_TOL` is pinned from the pysim measurement.
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::cost::NetParams;
+use trivance::net::{Epoch, LinkClass, Mutation, Timeline};
+use trivance::sim::{
+    simulate_plan, simulate_plan_timeline, SimError, SimMode, SimPlan, SimScratch,
+};
+use trivance::topology::Torus;
+use trivance::util::{prop, SplitMix64};
+
+/// Flow-vs-packet drift bound under fuzzed timelines. Random flap windows
+/// land mid-message where the fluid model reshares instantly but the packet
+/// engine's FIFO heads stall, so the bound is looser than the curated
+/// presets (measured worst 7.0%: a brownout+flap overlap on bucket-L
+/// ring-9 at 256 KiB, case 30 of tools/pysim/eval_online.py).
+const FUZZ_TOL: f64 = 0.20;
+
+/// One fuzzed mutation, times as fractions of the static completion.
+#[derive(Debug)]
+enum Ev {
+    /// Permanent down at t = 0 (may strand — both engines must agree).
+    Down { link: u32 },
+    /// Transient down at `at`, recovery at `until` (fractions, until > at).
+    Flap { link: u32, at: f64, until: f64 },
+    /// Capacity brownout: `slowdown`x slower from `at` onward.
+    Brown { link: u32, at: f64, slowdown: f64 },
+}
+
+fn gen_case(rng: &mut SplitMix64) -> (Vec<u32>, Algo, Variant, u64, Vec<Ev>) {
+    // Draw order is load-bearing: tools/pysim/eval_online.py replays these
+    // exact SplitMix64 draws to reproduce every case.
+    let topologies = [vec![9u32], vec![3, 3]];
+    let dims = rng.choose(&topologies).clone();
+    let t = Torus::new(&dims);
+    let algo = *rng.choose(&[Algo::Trivance, Algo::Bruck, Algo::Bucket]);
+    let variant = *rng.choose(&Variant::ALL);
+    let m = *rng.choose(&[4096u64, 256 << 10]);
+    let n_ev = rng.range(1, 3);
+    let mut evs = Vec::new();
+    for _ in 0..n_ev {
+        let link = rng.range(0, t.num_links() as u64 - 1) as u32;
+        match rng.range(0, 2) {
+            0 => evs.push(Ev::Down { link }),
+            1 => {
+                let at = 0.8 * rng.f64();
+                evs.push(Ev::Flap { link, at, until: at + 0.05 + 0.4 * rng.f64() });
+            }
+            _ => evs.push(Ev::Brown { link, at: 0.8 * rng.f64(), slowdown: 2.0 + 6.0 * rng.f64() }),
+        }
+    }
+    (dims, algo, variant, m, evs)
+}
+
+#[test]
+fn fuzzed_timelines_agree_or_fail_identically() {
+    let p = NetParams::default();
+    prop::check(0x0F5A_2206, 40, gen_case, |(dims, algo, variant, m, evs)| {
+        let t = Torus::new(dims);
+        let Ok(b) = build(*algo, *variant, &t) else {
+            return Ok(()); // unsupported configuration: nothing to check
+        };
+        let plan = SimPlan::build(&b.net, &t);
+        let scratch = SimScratch::new(&plan, &p);
+        let horizon = simulate_plan(&plan, *m, &p, SimMode::Flow).completion_s;
+        let mut epochs = Vec::new();
+        for ev in evs {
+            match *ev {
+                Ev::Down { link } => epochs
+                    .push(Epoch { t: 0.0, mutations: vec![Mutation::SetDown { link, down: true }] }),
+                Ev::Flap { link, at, until } => {
+                    epochs.push(Epoch {
+                        t: at * horizon,
+                        mutations: vec![Mutation::SetDown { link, down: true }],
+                    });
+                    epochs.push(Epoch {
+                        t: until * horizon,
+                        mutations: vec![Mutation::SetDown { link, down: false }],
+                    });
+                }
+                Ev::Brown { link, at, slowdown } => epochs.push(Epoch {
+                    t: at * horizon,
+                    mutations: vec![Mutation::SetClass {
+                        link,
+                        class: LinkClass::slowdown(slowdown),
+                    }],
+                }),
+            }
+        }
+        let tl = Timeline::new(epochs);
+        let f = simulate_plan_timeline(&plan, &scratch, *m, &p, SimMode::Flow, &tl);
+        let k = simulate_plan_timeline(&plan, &scratch, *m, &p, SimMode::Packet { mtu: 4096 }, &tl);
+        match (f, k) {
+            (Ok(f), Ok(k)) => {
+                if k.completion_s <= 0.0 {
+                    return Err(format!("packet completion {}", k.completion_s));
+                }
+                let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
+                if rel > FUZZ_TOL {
+                    return Err(format!(
+                        "flow {} vs packet {} (rel {rel:.3} > {FUZZ_TOL})",
+                        f.completion_s, k.completion_s
+                    ));
+                }
+                Ok(())
+            }
+            (Err(SimError::Stranded { .. }), Err(SimError::Stranded { .. })) => Ok(()),
+            (Err(SimError::Unroutable(_)), Err(SimError::Unroutable(_))) => Ok(()),
+            (f, k) => Err(format!("engines disagree on outcome: flow {f:?} vs packet {k:?}")),
+        }
+    });
+}
+
+#[test]
+fn stranding_timeline_returns_typed_error_not_a_panic() {
+    // The directed case: kill a link the schedule certainly uses, never
+    // recover it. Both engines must return SimError::Stranded carrying the
+    // blocked link, not abort or spin.
+    let p = NetParams::default();
+    let t = Torus::ring(9);
+    let b = build(Algo::Bucket, Variant::Bandwidth, &t).unwrap();
+    let plan = SimPlan::build(&b.net, &t);
+    let scratch = SimScratch::new(&plan, &p);
+    let link = plan.route(0)[0]; // first hop of the first message: used
+    let tl = Timeline::new(vec![Epoch {
+        t: 0.0,
+        mutations: vec![Mutation::SetDown { link, down: true }],
+    }]);
+    for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
+        match simulate_plan_timeline(&plan, &scratch, 4096, &p, mode, &tl) {
+            Err(SimError::Stranded { link: l, .. }) => {
+                assert_eq!(l, link as usize, "{mode:?}: wrong blocked link reported")
+            }
+            other => panic!("{mode:?}: expected Stranded, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,443 @@
+"""Online fault-response validation (ISSUE 6): controller, selector, fuzzer.
+
+No rustc in this container, so the acceptance bounds of the online PR are
+measured here against the mirror:
+
+  1. the seeded two-fault sequence (cable death mid-collective, then a
+     node death across the cable on rings / a far cable on 2D+) completes
+     under the online controller in BOTH engines on ring-9 and 3x3 for
+     trivance and bruck (ring bandwidth variants are the measured
+     boundary: the dead endpoint's contribution is still unspread that
+     late, the rewrite refuses, and the failure is typed); on the ring the
+     rewrite response completes where detour-in-place partitions — the
+     completion-vs-failure margin recorded per size bucket calibrates the
+     Rust test online_two_fault_sequence_completes_in_both_engines and
+     the `scenarios --online` sweep's headline;
+  2. flow-vs-packet drift for multi-fault sequences (two-fault, and a
+     directed-link fault followed by a late node death) stays within the
+     bounds asserted by sim_crosscheck's
+     fault_sequences_keep_flow_and_packet_within_measured_bounds;
+  3. the tuned nearest-scenario selector: descriptor separation of
+     transient vs permanent presets, rewrite-on-cable / detour-on-flap /
+     detour-on-unmatched decisions, dead-node observation coverage, and
+     the policy-driven response: on the ring it completes where blanket
+     detour partitions and matches the per-event oracle; on 3x3 it
+     completes (blanket detour is at parity or better there — recorded);
+  4. the seeded timeline fuzzer, replaying rust/tests/timeline_fuzz.rs
+     (same SplitMix64 seed 0x0F5A_2206 and draw order): both engines
+     complete within FUZZ_TOL or fail with the same typed error — the
+     measured worst drift pins FUZZ_TOL;
+  5. stranding returns the typed StrandedError carrying the blocked link
+     in both engines (never a bogus completion).
+"""
+
+import sys
+
+from mirror import (
+    DEFAULT_PARAMS as P,
+    FaultEvent,
+    NetModel,
+    Plan,
+    SplitMix64,
+    StrandedError,
+    Timeline,
+    Torus,
+    UnreachableError,
+    build,
+    features_dist,
+    features_of_obs,
+    link_at,
+    obs_of_event,
+    preset_obs,
+    ref_horizon,
+    respond,
+    select,
+    selector_policy,
+    selector_rows,
+    simulate_flow,
+    simulate_flow_dyn,
+    simulate_packet_batched,
+    simulate_packet_dyn,
+    step_time_estimates,
+    two_fault_events,
+    CANONICAL_SIZE,
+)
+
+FAILED = []
+
+
+def check(name, ok, detail=""):
+    print(f"[{'ok ' if ok else 'FAIL'}] {name} {detail}")
+    if not ok:
+        FAILED.append(name)
+
+
+ONLINE_ALGOS = ["trivance", "bruck"]
+VARIANTS = ["L", "B"]
+SIZES = [4096, 64 << 10, 256 << 10, 1 << 20]
+
+
+def completions(plan, m):
+    f, _ = simulate_flow(plan, m, P)
+    k, _ = simulate_packet_batched(plan, m, P, 4096)
+    return f, k
+
+
+def run_strategy(b, base, events, m, action):
+    """Completion (flow, packet) under a blanket policy, or None when the
+    response's plan cannot route (detour across a partition)."""
+    resp = respond(b, base, events, m, P, lambda ev, step: action)
+    try:
+        plan = resp.build_plan(base)
+    except UnreachableError:
+        return None, resp
+    try:
+        return completions(plan, m), resp
+    except (StrandedError, AssertionError):
+        return None, resp
+
+
+# ---------------- 1. two-fault acceptance + rewrite-vs-detour margins
+
+print("== 1. seeded two-fault sequence: controller completes, margins ==")
+best_margin = {}
+for dims in ([9], [3, 3]):
+    t = Torus(dims)
+    base = NetModel.uniform(t)
+    ring = t.ndims() == 1
+    for algo in ONLINE_ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            m0 = 256 << 10
+            ends = step_time_estimates(b.net, base, m0, P)
+            events = two_fault_events(t, ends)
+            check(f"two events {algo}-{variant} {dims}", len(events) == 2)
+            resp = respond(b, base, events, m0, P, lambda ev, step: "rewrite")
+            if ring and variant == "B":
+                # measured boundary: a Reduce-Scatter-style ring schedule
+                # still holds the dying endpoint's contribution unspread
+                # this late — the rewrite refuses, the fallback detour
+                # cannot route around a dead node, and the plan build
+                # fails *typed*, never with a panic
+                check(
+                    f"ring-B boundary degrades to detour {algo} {dims}",
+                    len(resp.actions) == 2 and resp.actions[1][1] == "detour",
+                    f"actions={resp.actions}",
+                )
+                try:
+                    plan = resp.build_plan(base)
+                    completions(plan, m0)
+                    check(f"ring-B boundary is typed {algo} {dims}", False)
+                except (UnreachableError, StrandedError) as e:
+                    check(
+                        f"ring-B boundary is typed {algo} {dims}",
+                        True,
+                        f"{type(e).__name__}: {e}",
+                    )
+                continue
+            check(
+                f"rewrite policy applied {algo}-{variant} {dims}",
+                len(resp.actions) == 2
+                and all(a == "rewrite" for _, a in resp.actions),
+                f"actions={resp.actions}",
+            )
+            plan = resp.build_plan(base)
+            f, k = completions(plan, m0)
+            check(
+                f"completes both engines {algo}-{variant} {dims}",
+                f > 0.0 and k > 0.0,
+                f"flow={f:.3e} packet={k:.3e}",
+            )
+            for m in SIZES:
+                ends_m = step_time_estimates(b.net, base, m, P)
+                ev_m = two_fault_events(t, ends_m)
+                rw, _ = run_strategy(b, base, ev_m, m, "rewrite")
+                dt, _ = run_strategy(b, base, ev_m, m, "detour")
+                if rw is None:
+                    check(f"rewrite survives {algo}-{variant} {dims} m={m}", False)
+                    continue
+                if dt is None:
+                    margin = None  # detour partitioned: rewrite wins outright
+                else:
+                    margin = dt[0] / rw[0] - 1.0
+                key = (tuple(dims), algo, variant)
+                cur = best_margin.get(key)
+                if margin is None:
+                    best_margin[key] = ("partition", m)
+                elif cur is None or (cur[0] != "partition" and margin > cur[0]):
+                    best_margin[key] = (margin, m)
+                mtxt = "detour-partitioned" if margin is None else f"{margin:+.3f}"
+                print(f"     {str(dims):>7} {algo}-{variant} m={m:>8}: detour/rewrite-1 = {mtxt}")
+
+for key, (margin, m) in sorted(best_margin.items()):
+    print(f"  best margin {key}: {margin} at m={m}")
+# the acceptance bucket: on the ring the dead node partitions every detour
+# plan, so the rewrite response completes where detour-in-place cannot —
+# the strongest completion-vs-failure form of "beats detour". On 3x3 both
+# complete and detour-in-place stays at parity or better (recorded above);
+# the single-fault rewrite wins live on ring bucket-B in eval_dynamic.
+check(
+    "ring-9: rewrite completes where detour-in-place partitions (every size)",
+    all(v[0] == "partition" for k, v in best_margin.items() if k[0] == (9,))
+    and any(k[0] == (9,) for k in best_margin),
+)
+check(
+    "3x3: both strategies complete on every bucket",
+    all(v[0] != "partition" for k, v in best_margin.items() if k[0] == (3, 3))
+    and any(k[0] == (3, 3) for k in best_margin),
+)
+
+# ---------------- 2. fault-sequence flow-vs-packet drift
+
+print("== 2. multi-fault sequence flow-vs-packet drift ==")
+worst_seq = {}
+for dims in ([9], [3, 3]):
+    t = Torus(dims)
+    base = NetModel.uniform(t)
+    ring = t.ndims() == 1
+    for algo in ONLINE_ALGOS:
+        for variant in VARIANTS:
+            if ring and variant == "B":
+                continue  # measured boundary (section 1): rewrite refuses
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            m = 256 << 10
+            ends = step_time_estimates(b.net, base, m, P)
+            last = ends[-1]
+            l0 = t.link_index(0, 0, 1)
+            # on the ring only a victim adjacent to the rewired link keeps
+            # the survivors' path connected; mid-torus victims are fine on 2D
+            victim = 1 if ring else t.n // 2
+            link_then_node = [
+                FaultEvent.link(0.5 * (ends[0] + ends[min(len(ends), 2) - 1]), l0),
+                FaultEvent.node(0.9 * last, victim),
+            ]
+            for tag, events in (
+                ("two-fault", two_fault_events(t, ends)),
+                ("link+node", link_then_node),
+            ):
+                resp = respond(b, base, events, m, P, lambda ev, step: "rewrite")
+                plan = resp.build_plan(base)
+                f, k = completions(plan, m)
+                rel = abs(f - k) / k
+                key = tuple(dims)
+                if rel > worst_seq.get(key, (0.0, None))[0]:
+                    worst_seq[key] = (rel, f"{tag} {algo}-{variant}")
+                print(f"     {tag:>9} {str(dims):>7} {algo}-{variant}: rel={rel:.4f}")
+for key, (rel, tag) in sorted(worst_seq.items()):
+    print(f"  worst sequence drift {key}: {rel:.4f} ({tag})")
+check(
+    "sequence drift bound (<0.10 both topologies) as pinned in sim_crosscheck",
+    worst_seq.get((3, 3), (0.0,))[0] < 0.10 and worst_seq.get((9,), (0.0,))[0] < 0.10,
+)
+
+# ---------------- 3. selector descriptors + policy
+
+print("== 3. nearest-scenario selector ==")
+t33 = Torus([3, 3])
+feats = [
+    features_of_obs(
+        t33,
+        preset_obs(name, t33, P, CANONICAL_SIZE),
+        ref_horizon(P, CANONICAL_SIZE),
+    )
+    for name in ("flap", "brownout", "mid-fault-detour", "mid-fault-rewrite")
+]
+check("flap transient + hard down", feats[0][3] == 0.0 and feats[0][1] == 0.0)
+check(
+    "brownout transient, soft, wider",
+    feats[1][3] == 0.0 and abs(feats[1][1] - 0.25) < 1e-12 and feats[1][0] > feats[0][0],
+)
+check("mid-fault permanent + hard down", all(f[3] == 1.0 and f[1] == 0.0 for f in feats[2:]))
+check("flap vs cable death far apart", features_dist(feats[0], feats[2]) > 0.9)
+check("mid-fault strategies share features", features_dist(feats[2], feats[3]) < 1e-12)
+
+rows = selector_rows(t33, P)
+m = 256 << 10
+ev = FaultEvent.cable(P["alpha"], t33, 0)
+name, d, matched, action = select(rows, t33, obs_of_event(ev, t33), m, P)
+check(
+    "cable death -> matched mid-fault, rewrite",
+    matched and name.startswith("mid-fault") and action == "rewrite",
+    f"{name} d={d:.3f}",
+)
+from mirror import pick_links, FLAP_SEED
+
+lf = pick_links(t33, 1, FLAP_SEED, keep_connected=False)[0]
+ser = m * 8.0 / P["bw"]
+flap_obs = [
+    (P["alpha"] + 0.25 * ser, lf, 0.0),
+    (P["alpha"] + 2.25 * ser, lf, 1.0),
+]
+name, d, matched, action = select(rows, t33, flap_obs, m, P)
+check("flap -> matched flap, detour", matched and name == "flap" and action == "detour",
+      f"{name} d={d:.3f}")
+name, d, matched, action = select(rows, t33, [], m, P)
+check("pristine -> unmatched, detour", not matched and action == "detour", f"d={d:.3f}")
+
+t9 = Torus([9])
+obs = obs_of_event(FaultEvent.node(1.0, 4), t9)
+links = sorted({o[1] for o in obs})
+check(
+    "dead node covers all incident directed links",
+    len(links) == 4 and all(o[2] == 0.0 for o in obs),
+)
+
+# policy-driven response on the seeded two-fault timeline. The dead-node
+# hard rule forces rewrite on the ring's second event (a dead node is never
+# detourable); the cable events go through the nearest-fingerprint match.
+# Measured: on ring-9 the policy (detour the cable, rewrite the node)
+# completes where blanket detour partitions AND matches the per-event
+# oracle — in particular it is no slower than blanket rewrite. On 3x3 the
+# first cable matches the mid-fault fingerprint (rewrite) while the second
+# lands at 98% of the reference horizon — outside the match threshold — so
+# the selector conservatively detours the tail; the response completes.
+# Blanket detour happens to be faster there (recorded, not asserted
+# against).
+for dims in ([9], [3, 3]):
+    t = Torus(dims)
+    base = NetModel.uniform(t)
+    ring = t.ndims() == 1
+    rows_t = selector_rows(t, P)
+    b = build("trivance", "L", t)
+    m0 = 256 << 10
+    ends = step_time_estimates(b.net, base, m0, P)
+    events = two_fault_events(t, ends)
+    resp = respond(b, base, events, m0, P, selector_policy(rows_t, t, m0, P))
+    if ring:
+        check(
+            "policy: dead-node hard rule forces rewrite on ring",
+            len(resp.actions) == 2 and resp.actions[1][1] == "rewrite",
+            f"actions={resp.actions}",
+        )
+    else:
+        check(
+            "policy on 3x3: rewrite matched cable, detour unmatched tail fault",
+            len(resp.actions) == 2
+            and resp.actions[0][1] == "rewrite"
+            and resp.actions[1][1] == "detour",
+            f"actions={resp.actions}",
+        )
+    pol_c = completions(resp.build_plan(base), m0)[0]
+    check(f"policy completes {dims}", pol_c > 0.0, f"policy={pol_c:.3e}")
+    dt, _ = run_strategy(b, base, events, m0, "detour")
+    rw, _ = run_strategy(b, base, events, m0, "rewrite")
+    if ring:
+        check(
+            "policy beats blanket detour on ring (completion vs partition)",
+            dt is None,
+        )
+        check(
+            "policy no slower than blanket rewrite on ring",
+            rw is not None and pol_c <= rw[0] * (1.0 + 1e-9),
+            f"policy={pol_c:.3e} rewrite={'partitioned' if rw is None else f'{rw[0]:.3e}'}",
+        )
+    else:
+        dtxt = "partitioned" if dt is None else f"{dt[0]:.3e}"
+        print(f"  3x3 policy={pol_c:.3e} vs blanket detour={dtxt} (informational)")
+
+# ---------------- 4. seeded fuzz replication (lockstep with timeline_fuzz.rs)
+
+print("== 4. fuzzed timelines (seed 0x0F5A_2206, 40 cases) ==")
+FUZZ_ALGOS = ["trivance", "bruck", "bucket"]
+
+
+def rng_range(rng, lo, hi):
+    return lo + rng.below(hi - lo + 1)
+
+
+def rng_f64(rng):
+    return (rng.next_u64() >> 11) / float(1 << 53)
+
+
+def rng_choose(rng, xs):
+    return xs[rng.below(len(xs))]
+
+
+rng = SplitMix64(0x0F5A_2206)
+worst_fuzz = (0.0, None)
+outcome_mismatch = 0
+for case in range(40):
+    dims = rng_choose(rng, [[9], [3, 3]])
+    t = Torus(dims)
+    algo = rng_choose(rng, FUZZ_ALGOS)
+    variant = rng_choose(rng, VARIANTS)
+    m = rng_choose(rng, [4096, 256 << 10])
+    n_ev = rng_range(rng, 1, 3)
+    evs = []
+    for _ in range(n_ev):
+        link = rng_range(rng, 0, t.num_links() - 1)
+        kind = rng_range(rng, 0, 2)
+        if kind == 0:
+            evs.append(("down", link))
+        elif kind == 1:
+            at = 0.8 * rng_f64(rng)
+            evs.append(("flap", link, at, at + 0.05 + 0.4 * rng_f64(rng)))
+        else:
+            evs.append(("brown", link, 0.8 * rng_f64(rng), 2.0 + 6.0 * rng_f64(rng)))
+    b = build(algo, variant, t)
+    if b is None:
+        continue
+    plan = Plan(b.net, t)
+    horizon = simulate_flow(plan, m, P)[0]
+    epochs = []
+    for e in evs:
+        if e[0] == "down":
+            epochs.append((0.0, [("down", e[1], True)]))
+        elif e[0] == "flap":
+            epochs.append((e[2] * horizon, [("down", e[1], True)]))
+            epochs.append((e[3] * horizon, [("down", e[1], False)]))
+        else:
+            epochs.append((e[2] * horizon, [("class", e[1], 1.0 / e[3], 1.0, 1.0)]))
+    tl = Timeline(epochs)
+
+    def run(engine):
+        try:
+            if engine == "flow":
+                return ("ok", simulate_flow_dyn(plan, m, P, tl)[0])
+            return ("ok", simulate_packet_dyn(plan, m, P, 4096, tl)[0])
+        except StrandedError:
+            return ("stranded", None)
+        except UnreachableError:
+            return ("unroutable", None)
+
+    fo = run("flow")
+    ko = run("packet")
+    if fo[0] != ko[0]:
+        outcome_mismatch += 1
+        print(f"  OUTCOME MISMATCH case {case}: flow={fo[0]} packet={ko[0]} "
+              f"({algo}-{variant} {dims} m={m} evs={evs})")
+    elif fo[0] == "ok":
+        rel = abs(fo[1] - ko[1]) / ko[1]
+        if rel > worst_fuzz[0]:
+            worst_fuzz = (rel, f"case {case}: {algo}-{variant} {dims} m={m} evs={evs}")
+check("fuzz: engines always agree on outcome class", outcome_mismatch == 0)
+print(f"  worst fuzz drift: {worst_fuzz[0]:.4f} ({worst_fuzz[1]})")
+check("fuzz drift within FUZZ_TOL=0.20 (pinned in timeline_fuzz.rs)", worst_fuzz[0] < 0.20)
+
+# ---------------- 5. stranding is typed in both engines
+
+print("== 5. typed stranding ==")
+t = Torus([9])
+b = build("bucket", "B", t)
+plan = Plan(b.net, t)
+link = plan.msgs[0][4][0]
+tl = Timeline([(0.0, [("down", link, True)])])
+for name, fn in (
+    ("flow", lambda: simulate_flow_dyn(plan, 4096, P, tl)),
+    ("packet", lambda: simulate_packet_dyn(plan, 4096, P, 4096, tl)),
+):
+    try:
+        fn()
+        check(f"stranded typed ({name})", False)
+    except StrandedError as e:
+        check(f"stranded typed ({name})", e.link == link, f"link={e.link} step={e.step}")
+
+print()
+if FAILED:
+    print(f"eval_online: {len(FAILED)} FAILURES: {FAILED}")
+    sys.exit(1)
+print("online eval: all asserted bounds hold")

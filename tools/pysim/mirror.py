@@ -765,25 +765,41 @@ def virtual_pad_network(vs, n_real):
     return out
 
 
-def collapse_torus(s, vtorus, torus):
-    def host(v):
-        cs = [
-            (c * a) // av
-            for c, (av, a) in zip(vtorus.coords(v), zip(vtorus.dims, torus.dims))
-        ]
-        return torus.rank(cs)
+def padding_hosts(vtorus, torus):
+    """hosts[v] = real rank hosting virtual rank v (per-coordinate floor
+    scaling). Mirror of registry::padding_hosts. For rings this reduces to
+    (v * n) // nv, so it matches virtual_pad_network's bit-identical map."""
+    return [
+        torus.rank(
+            [
+                (c * a) // av
+                for c, (av, a) in zip(vtorus.coords(v), zip(vtorus.dims, torus.dims))
+            ]
+        )
+        for v in range(vtorus.n)
+    ]
 
-    out = Schedule(s.name + "-padded", torus.n, s.n_blocks)
+
+def collapse_by_hosts(s, hosts, n_real, name):
+    """Collapse a virtual-space executable schedule onto real ranks via an
+    explicit host map (mirror of registry::collapse_by_hosts): co-hosted
+    sends drop (local moves), steps are kept even when they empty out."""
+    out = Schedule(name, n_real, s.n_blocks)
     for step in s.steps:
         st = out.push_step()
-        for src in range(vtorus.n):
-            hsrc = host(src)
+        for src in range(s.n):
+            hsrc = hosts[src]
             for snd in step[src]:
-                hdst = host(snd.to)
+                hdst = hosts[snd.to]
                 if hsrc == hdst:
                     continue
                 st[hsrc].append(Send(hdst, snd.pieces, snd.route))
     return out
+
+
+def collapse_torus(s, vtorus, torus):
+    hosts = padding_hosts(vtorus, torus)
+    return collapse_by_hosts(s, hosts, torus.n, s.name + "-padded")
 
 
 # ------------------------------------------------------------ hierarchical
@@ -889,8 +905,13 @@ def mirrored_family(algo):
 
 
 class Built:
-    def __init__(self, net, padded):
+    def __init__(self, net, padded, exec_s=None, hosts=None):
         self.net, self.padded = net, padded
+        # Mirror of registry::Built.exec / Built.padding.hosts: the
+        # pre-collapse executable schedule and its virtual->real host map
+        # (exec == net, hosts == None for natively supported sizes).
+        self.exec_s = exec_s if exec_s is not None else net
+        self.hosts = hosts
 
 
 def build(algo, variant, torus):
@@ -944,27 +965,51 @@ def build(algo, variant, torus):
         return None
     # Rust pads from inner.exec; padding never nests here (the padded size
     # is always natively supported), so inner.net == inner.exec.
+    hosts = padding_hosts(vtorus, torus)
     if d == 1:
         net = virtual_pad_network(inner.net, torus.n)
     else:
         net = collapse_torus(inner.net, vtorus, torus)
-    return Built(net, True)
+    return Built(net, True, exec_s=inner.net, hosts=hosts)
 
 
 # ------------------------------------------------------------ SimPlan
 
 
+class UnreachableError(Exception):
+    """Mirror of net::Unreachable (surfaced as SimError::Unroutable): the
+    model's down set disconnects a (src, dst) pair the schedule needs."""
+
+
+class StrandedError(Exception):
+    """Mirror of SimError::Stranded: a timeline left traffic permanently
+    blocked on a down link. Carries the blocked link and schedule step."""
+
+    def __init__(self, link, step):
+        super().__init__(f"traffic stranded on down link {link} (step {step})")
+        self.link, self.step = link, step
+
+
 class Plan:
-    def __init__(self, schedule, torus, model=None, route_model=None, switch_step=None):
+    def __init__(self, schedule, torus, model=None, route_model=None, switch_step=None, stages=None):
         """`route_model`/`switch_step` mirror SimPlan::build_faulted: steps
         >= switch_step route on route_model (post-fault), earlier steps on
-        `model` (pre-fault); scale columns always come from `model`."""
+        `model` (pre-fault); scale columns always come from `model`.
+        `stages` mirrors SimPlan::build_staged: [(from_step, NetModel), ...]
+        sorted by from_step — step k routes on the last stage whose
+        from_step <= k, else on `model` (one stage == build_faulted).
+        Unreachable pairs raise UnreachableError (typed, never silent)."""
         assert schedule.n == torus.n
         if model is None:
             model = NetModel.uniform(torus)
         assert model.torus.dims == torus.dims
-        if route_model is None:
-            route_model, switch_step = model, schedule.num_steps()
+        if stages is None:
+            if route_model is None:
+                route_model, switch_step = model, schedule.num_steps()
+            stages = [(switch_step, route_model)]
+        else:
+            assert route_model is None and switch_step is None
+            assert all(a[0] <= b[0] for a, b in zip(stages, stages[1:]))
         self.n = schedule.n
         self.nsteps = schedule.num_steps()
         self.num_links = torus.num_links()
@@ -974,13 +1019,21 @@ class Plan:
         self.uniform = model.is_uniform()
         self.msgs = []  # (src, dst, step, rel_bytes, route)
         for k, step in enumerate(schedule.steps):
-            router = model if k < switch_step else route_model
+            router = model
+            for frm, m in stages:
+                if k >= frm:
+                    router = m
+                else:
+                    break
             for src in range(self.n):
                 for snd in step[src]:
                     rel = snd.rel_bytes(schedule.n_blocks)
                     if rel <= 0.0:
                         continue
-                    route = router.route(src, snd.to, snd.route)
+                    try:
+                        route = router.route(src, snd.to, snd.route)
+                    except AssertionError as e:
+                        raise UnreachableError(str(e)) from None
                     self.msgs.append((src, snd.to, k, rel, route))
         self.inject = {}
         self.expected = {}
@@ -1560,7 +1613,13 @@ def simulate_flow_dyn(plan, m_bytes, params, timeline):
             recompute()
             need_recompute = False
 
-    assert not active, f"timeline leaves {len(active)} flow(s) stranded"
+    if active:
+        # Mirror of flow.rs stranded reporting: lowest-msg-id stranded flow,
+        # first zero-capacity link on its route, the message's step.
+        f = min(active, key=lambda fl: fl[0])
+        route = plan.msgs[f[0]][4]
+        link = next((l for l in route if caps_eff[l] == 0.0), route[0] if route else 0)
+        raise StrandedError(link, plan.msgs[f[0]][2])
     return completion, events
 
 
@@ -1589,6 +1648,8 @@ def _build_tracks(plan, params, timeline):
 
 
 def _serialize_end(track, cap0, start, nbytes):
+    """None = the track ends at rate 0 with bytes left (stranded); the
+    caller raises StrandedError with link + step context."""
     if track is None:
         return start + nbytes / cap0
     if nbytes <= 0.0:
@@ -1609,8 +1670,8 @@ def _serialize_end(track, cap0, start, nbytes):
             remaining -= rate * (next_t - cur)
             if remaining < 0.0:
                 remaining = 0.0
-        else:
-            assert next_t != float("inf"), "timeline leaves a link down for good"
+        elif next_t == float("inf"):
+            return None
         cur = next_t
         rate = track[idx][1]
         idx += 1
@@ -1685,7 +1746,10 @@ def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline):
                 total = plan.bytes(mi, m_bytes)
                 l = route[hop]
                 start = max(now, free_at[l])
-                batch_end = max(_serialize_end(tracks[l], caps[l], start, total), ready)
+                end = _serialize_end(tracks[l], caps[l], start, total)
+                if end is None:
+                    raise StrandedError(l, k)
+                batch_end = max(end, ready)
                 free_at[l] = batch_end
                 tail_ready = batch_end + _hop_at(tracks[l], hops[l], batch_end)
                 if hop + 1 == len(route):
@@ -1693,6 +1757,8 @@ def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline):
                 else:
                     head = min(total, float(mtu))
                     head_end = _serialize_end(tracks[l], caps[l], start, head)
+                    if head_end is None:
+                        raise StrandedError(l, k)
                     push(
                         head_end + _hop_at(tracks[l], hops[l], head_end),
                         ("batch", mi, hop + 1, tail_ready),
@@ -1713,6 +1779,10 @@ class Fault:
     @staticmethod
     def link(step, link):
         return Fault(step, [link])
+
+    @staticmethod
+    def node(step, node):
+        return Fault(step, dead_nodes=[node])
 
     def apply(self, base):
         post = NetModel(base.torus)
@@ -1741,22 +1811,35 @@ def _max_cover(atoms, target):
 
 
 def rewrite_for_fault(s, base, fault):
+    return rewrite_for_fault_hosted(s, base, fault, None)
+
+
+def rewrite_for_fault_hosted(s, base, fault, hosts=None):
     """Shrink-and-substitute schedule rewrite (see schedule::rewrite).
-    Returns a new Schedule; raises ValueError on unrecoverable faults or
-    virtual (padded) contributor spaces."""
+    Returns a new Schedule; raises ValueError on unrecoverable faults.
+    `hosts` translates virtual ranks of a padded executable schedule onto
+    the real torus (mirror of rewrite_for_fault_hosted); without it, a
+    virtual (padded) contributor space is refused."""
     torus = base.torus
-    assert s.n == torus.n
+    if hosts is None:
+        assert s.n == torus.n
+        real = lambda v: v
+    else:
+        assert len(hosts) == s.n
+        real = lambda v: hosts[v]
     n, nb = s.n, s.n_blocks
-    for step in s.steps:
-        for sends in step:
-            for snd in sends:
-                for _b, _k, contrib in snd.pieces:
-                    if any(c >= n for c in contrib):
-                        raise ValueError("padded (virtual) contributor space")
+    if hosts is None:
+        for step in s.steps:
+            for sends in step:
+                for snd in sends:
+                    for _b, _k, contrib in snd.pieces:
+                        if any(c >= n for c in contrib):
+                            raise ValueError("padded (virtual) contributor space")
     post = fault.apply(base)
-    dead = [False] * n
+    dead_real = [False] * torus.n
     for v in fault.dead_nodes:
-        dead[v] = True
+        dead_real[v] = True
+    dead = lambda v: dead_real[real(v)]
 
     full = frozenset(range(n))
     # state[r][b] = list of atoms; totals cached separately
@@ -1782,10 +1865,17 @@ def rewrite_for_fault(s, base, fault):
             for snd in step[src]:
                 if k < fault.step:
                     keep = snd
-                elif dead[src] or dead[snd.to]:
+                elif dead(src) or dead(snd.to):
                     keep = None
+                elif real(src) == real(snd.to):
+                    # co-hosted after padding collapse: a local move, never
+                    # blocked by the fabric — shrink only
+                    keep = _shrink_send(snd, snapshot[src], n, full)
                 else:
-                    nominal = base.route(src, snd.to, snd.route)
+                    try:
+                        nominal = base.route(real(src), real(snd.to), snd.route)
+                    except AssertionError as e:
+                        raise ValueError(f"nominal route unavailable: {e}") from None
                     if any(post.down[l] for l in nominal):
                         keep = None
                     else:
@@ -1800,9 +1890,9 @@ def rewrite_for_fault(s, base, fault):
     cleanup = [[] for _ in range(n)]
     any_cleanup = False
     for r in range(n):
-        if dead[r]:
+        if dead(r):
             continue
-        dist_to_r = post.distances_to(r)
+        dist_to_r = post.distances_to(real(r))
         set_groups = []  # [(donor, [blocks])]
         reduce_groups = []  # [(donor, contrib, [blocks])]
         for b in range(nb):
@@ -1812,14 +1902,14 @@ def rewrite_for_fault(s, base, fault):
             missing = full - held
             set_donor = None  # (dist, donor)
             for d in range(n):
-                if d == r or dead[d]:
+                if d == r or dead(d):
                     continue
                 dt = set()
                 for a in snapshot[d][b]:
                     dt |= a
                 if dt != full:
                     continue
-                dist = dist_to_r[d]
+                dist = dist_to_r[real(d)]
                 if dist is None:
                     continue
                 if set_donor is None or dist < set_donor[0]:
@@ -1837,12 +1927,12 @@ def rewrite_for_fault(s, base, fault):
             while m:
                 best = None  # (len, dist, donor, cover)
                 for d in range(n):
-                    if d == r or dead[d]:
+                    if d == r or dead(d):
                         continue
                     cover = _max_cover(snapshot[d][b], m)
                     if not cover:
                         continue
-                    dist = dist_to_r[d]
+                    dist = dist_to_r[real(d)]
                     if dist is None:
                         continue
                     if best is None or len(cover) > best[0] or (
@@ -1877,12 +1967,34 @@ def rewrite_for_fault(s, base, fault):
                 st[src].append(snd)
 
     for r in range(n):
-        if dead[r]:
+        if dead(r):
             continue
         for b in range(nb):
             if total(r, b) != full:
                 raise ValueError(f"internal rewrite error: node {r} block {b}")
     return out
+
+
+def rewrite_for_faults(s, base, faults, hosts=None):
+    """Iterative multi-fault rewrite (mirror of rewrite_for_faults_hosted):
+    each fault rewrites the current schedule — cleanup steps included —
+    against the model as degraded by the previous faults, then degrades the
+    model further."""
+    sched, model = s, base
+    for f in faults:
+        sched = rewrite_for_fault_hosted(sched, model, f, hosts)
+        model = f.apply(model)
+    return sched
+
+
+def rewrite_collective_for_faults(b, base, faults):
+    """Mirror of rewrite_collective_for_faults: native builds rewrite the
+    net schedule directly; padded builds rewrite the *executable* schedule
+    through the padding host map, then collapse back onto real ranks."""
+    if b.hosts is None:
+        return rewrite_for_faults(b.net, base, faults)
+    rw = rewrite_for_faults(b.exec_s, base, faults, b.hosts)
+    return collapse_by_hosts(rw, b.hosts, base.torus.n, b.net.name + "+rewrite")
 
 
 def _shrink_send(snd, sender_cells, n, full):
@@ -1966,7 +2078,8 @@ def midfault_fault(torus):
 
 def midfault_plans(torus, algo, variant, params=None):
     """(detour_plan, rewrite_plan, padded) for one registry build under the
-    mid-fault preset (rewrite falls back to detour for padded builds)."""
+    mid-fault preset. Since PR 6 padded builds genuinely rewrite through
+    their padding host map (no detour fallback)."""
     b = build(algo, variant, torus)
     if b is None:
         return None
@@ -1974,11 +2087,9 @@ def midfault_plans(torus, algo, variant, params=None):
     fault = midfault_fault(torus)
     post = fault.apply(base)
     detour = Plan(b.net, torus, base, route_model=post, switch_step=fault.step)
-    if b.padded:
-        return detour, detour, True
-    rw = rewrite_for_fault(b.net, base, fault)
+    rw = rewrite_collective_for_faults(b, base, [fault])
     rewrite = Plan(rw, torus, base, route_model=post, switch_step=fault.step)
-    return detour, rewrite, False
+    return detour, rewrite, b.padded
 
 
 # ------------------------------------------------------------ tuner mirror
@@ -2176,3 +2287,292 @@ def crosscheck(dims, algo, variant, m, mtu=4096, params=None, engine=simulate_pa
         return ("ZERO", f, k)
     rel = abs(f - k) / k
     return (rel, f, k)
+
+
+# ---------------------------------------------- online fault response
+# Mirror of rust/src/schedule/online.rs (controller) and
+# rust/src/tuner/online.rs (nearest-scenario selector). Keep estimator
+# arithmetic, event->step mapping, and descriptor math in lockstep.
+
+
+class FaultEvent:
+    def __init__(self, t, down_links=(), dead_nodes=()):
+        self.t = t
+        self.down_links = list(down_links)
+        self.dead_nodes = list(dead_nodes)
+
+    @staticmethod
+    def link(t, link):
+        return FaultEvent(t, [link])
+
+    @staticmethod
+    def cable(t, torus, link):
+        node, dim, dr = link_at(torus, link)
+        rev = torus.link_index(torus.neighbor(node, dim, dr), dim, -dr)
+        return FaultEvent(t, [link, rev])
+
+    @staticmethod
+    def node(t, node):
+        return FaultEvent(t, [], [node])
+
+
+def step_time_estimates(s, model, m_bytes, params):
+    """Cumulative estimated end time of each step (mirror of
+    schedule::online::step_time_estimates): alpha + busiest-link
+    serialization + longest route's hop latency; unroutable sends skip."""
+    return staged_step_time_estimates(s, model, [], m_bytes, params)
+
+
+def staged_step_time_estimates(s, base, stages, m_bytes, params):
+    """Mirror of schedule::online::staged_step_time_estimates: step k is
+    priced on the model of the last stage with from_step <= k (falling back
+    to `base`), so completed steps keep their pre-fault pricing."""
+    torus = base.torus
+    assert s.n == torus.n
+    ends = []
+    t = 0.0
+    for k, step in enumerate(s.steps):
+        model = base
+        for frm, mm in stages:
+            if k >= frm:
+                model = mm
+            else:
+                break
+        link_bytes = [0.0] * torus.num_links()
+        lat = 0.0
+        for src in range(s.n):
+            for snd in step[src]:
+                try:
+                    route = model.route(src, snd.to, snd.route)
+                except AssertionError:
+                    continue
+                nbytes = snd.rel_bytes(s.n_blocks) * m_bytes
+                hop_lat = 0.0
+                for l in route:
+                    link_bytes[l] += nbytes
+                    hop_lat += (
+                        model.lat_scale[l] * params["link_lat"]
+                        + model.proc_scale[l] * params["hop_lat"]
+                    )
+                if hop_lat > lat:
+                    lat = hop_lat
+        ser = max(
+            (b * 8.0 / params["bw"] / model.bw_scale[l] for l, b in enumerate(link_bytes)),
+            default=0.0,
+        )
+        t += params["alpha"] + ser + lat
+        ends.append(t)
+    return ends
+
+
+class Response:
+    def __init__(self, schedule, stages, actions):
+        self.schedule, self.stages, self.actions = schedule, stages, actions
+
+    def build_plan(self, base):
+        return Plan(self.schedule, base.torus, base, stages=self.stages)
+
+
+def respond(b, base, events, m_bytes, params, policy):
+    """Mirror of schedule::online::respond. `policy(event, step)` returns
+    "rewrite" or "detour"; a failed rewrite degrades to detour. Raises
+    ValueError on out-of-order events."""
+    hosts = b.hosts
+    n_real = base.torus.n
+    work = b.exec_s if hosts is not None else b.net
+
+    def collapse(s):
+        if hosts is not None:
+            return collapse_by_hosts(s, hosts, n_real, b.net.name + "+rewrite")
+        return s
+
+    net_sched = b.net
+    model = base
+    ends = step_time_estimates(net_sched, base, m_bytes, params)
+    stages = []
+    actions = []
+    prev_t = float("-inf")
+    last_step = 0
+    for ev in events:
+        if not ev.t >= prev_t:
+            raise ValueError(
+                f"online controller: fault events must be time-ordered ({ev.t} after {prev_t})"
+            )
+        prev_t = ev.t
+        if not ev.down_links and not ev.dead_nodes:
+            continue
+        if not ends:
+            break
+        if ev.t >= ends[-1]:
+            continue  # by the controller's clock the collective finished
+        step = next((i for i, e in enumerate(ends) if ev.t < e), len(ends))
+        step = max(step, last_step)
+        last_step = step
+        fault = Fault(step, ev.down_links, ev.dead_nodes)
+        applied = policy(ev, step)
+        if applied == "rewrite":
+            try:
+                work = rewrite_for_fault_hosted(work, model, fault, hosts)
+                net_sched = collapse(work)
+            except ValueError:
+                applied = "detour"  # unrecoverable rewrite: degrade honestly
+        model = fault.apply(model)
+        stages.append((step, model))
+        actions.append((step, applied))
+        ends = staged_step_time_estimates(net_sched, base, stages, m_bytes, params)
+    return Response(net_sched, stages, actions)
+
+
+def two_fault_events(torus, ends):
+    """Mirror of harness::scenarios::two_fault_events: the seeded cable
+    mid-early-step, then near the end a far cable on the next dimension
+    (2D+) or — on rings, where any further link fault would directionally
+    partition the line left by the cable death — the death of the node
+    just across the dead cable (removing a line endpoint keeps the
+    survivors connected)."""
+    idx = pick_links(torus, 1, FAULTY_SEED, keep_connected=True)[0]
+    node, dim, dr = link_at(torus, idx)
+    t1 = 0.5 * (ends[0] + ends[min(len(ends), 2) - 1])
+    ev1 = FaultEvent.cable(t1, torus, idx)
+    t2 = ends[-1] * 0.98
+    if torus.ndims() > 1:
+        far_node = (node + torus.n // 2) % torus.n
+        far_dim = (dim + 1) % torus.ndims()
+        ev2 = FaultEvent.cable(t2, torus, torus.link_index(far_node, far_dim, dr))
+    else:
+        ev2 = FaultEvent.node(t2, torus.neighbor(node, dim, dr))
+    return [ev1, ev2]
+
+
+# Selector descriptor math (mirror of tuner::online). Features are the
+# 5-vector (frac_links, severity, duration_frac, permanent, when_frac);
+# observations are (t, link, cap_ratio) tuples.
+
+PRISTINE_FEATURES = (0.0, 1.0, 0.0, 0.0, 1.0)
+CANONICAL_SIZE = 1 << 20
+SELECT_THRESHOLD = 0.5
+
+
+def ref_horizon(params, m_bytes):
+    return params["alpha"] + 4.0 * m_bytes * 8.0 / params["bw"]
+
+
+def features_of_obs(torus, obs, horizon):
+    """Mirror of ScenarioFeatures::of_obs (same accumulator semantics)."""
+    if not obs:
+        return PRISTINE_FEATURES
+    horizon = max(horizon, 2.2250738585072014e-308)
+    acc = {}  # link -> [since(None|t), total, worst, first]
+    for t, link, ratio in sorted(obs, key=lambda o: o[0]):
+        if ratio < 1.0:
+            a = acc.get(link)
+            if a is None:
+                a = [None, 0.0, 1.0, t]
+                acc[link] = a
+            a[2] = min(a[2], max(ratio, 0.0))
+            if a[0] is None:
+                a[0] = t
+        else:
+            a = acc.get(link)
+            if a is not None and a[0] is not None:
+                a[1] += max(t - a[0], 0.0)
+                a[0] = None
+    severity, when, dur_sum, permanent = 1.0, float("inf"), 0.0, False
+    for since, total, worst, first in acc.values():
+        severity = min(severity, worst)
+        when = min(when, first)
+        if since is not None:
+            total += max(horizon - since, 0.0)
+            permanent = True
+        dur_sum += min(max(total / horizon, 0.0), 1.0)
+    n_aff = len(acc)
+    return (
+        n_aff / torus.num_links(),
+        severity,
+        dur_sum / n_aff if n_aff else 0.0,
+        1.0 if permanent else 0.0,
+        min(max(when / horizon, 0.0), 1.0) if when != float("inf") else 1.0,
+    )
+
+
+def features_dist(a, b):
+    return sum((x - y) * (x - y) for x, y in zip(a, b)) ** 0.5
+
+
+def preset_obs(name, torus, params, m_bytes):
+    """A preset's canonical observation stream (mirror of
+    tuner::online::preset_obs): its timeline's mutations as samples, plus
+    the mid-fault cable death at its step boundary (step * alpha)."""
+    obs = []
+    tl = dynamic_timeline(name, torus, params, m_bytes)
+    for t, muts in tl.epochs:
+        for mu in muts:
+            if mu[0] == "down":
+                ratio = 0.0 if mu[2] else 1.0
+            else:  # ("class", l, bw, lat, proc)
+                ratio = mu[2]
+            obs.append((t, mu[1], ratio))
+    if name.startswith("mid-fault"):
+        f = midfault_fault(torus)
+        t = params["alpha"] * f.step
+        for l in f.down_links:
+            obs.append((t, l, 0.0))
+    return obs
+
+
+def obs_of_event(ev, torus):
+    """A FaultEvent as link-health observations (mirror of obs_of_event):
+    down links at ratio 0, dead nodes as all incident directed links."""
+    obs = [(ev.t, l, 0.0) for l in ev.down_links]
+    for node in ev.dead_nodes:
+        for dim in range(torus.ndims()):
+            for dr in (-1, 1):
+                obs.append((ev.t, torus.link_index(node, dim, dr), 0.0))
+                rev = torus.link_index(torus.neighbor(node, dim, dr), dim, -dr)
+                obs.append((ev.t, rev, 0.0))
+    return obs
+
+
+def selector_rows(torus, params):
+    """[(name, features, permanent)] for the dynamic preset family at the
+    canonical embedding size (mirror of OnlineSelector::from_table)."""
+    rows = []
+    for name in DYNAMIC_NAMES:
+        f = features_of_obs(
+            torus,
+            preset_obs(name, torus, params, CANONICAL_SIZE),
+            ref_horizon(params, CANONICAL_SIZE),
+        )
+        rows.append((name, f, f[3] >= 0.5))
+    return rows
+
+
+def select(rows, torus, obs, m_bytes, params):
+    """(scenario, distance, matched, action) — mirror of
+    OnlineSelector::select; distance ties keep the first row."""
+    f = features_of_obs(torus, obs, ref_horizon(params, m_bytes))
+    best = None
+    for name, rf, perm in rows:
+        d = features_dist(rf, f)
+        if best is None or d < best[1]:
+            best = (name, d, perm)
+    name, d, perm = best
+    matched = d <= SELECT_THRESHOLD
+    action = "rewrite" if matched and perm and f[3] >= 0.5 else "detour"
+    return name, d, matched, action
+
+
+def selector_policy(rows, torus, m_bytes, params):
+    """The selector as a respond() policy: accumulates observations so a
+    second fault is judged against the full stream seen so far. Hard rule
+    above the fingerprint match: node-death events always rewrite —
+    detouring cannot route around a dead endpoint."""
+    seen = []
+
+    def policy(ev, step):
+        seen.extend(obs_of_event(ev, torus))
+        if ev.dead_nodes:
+            return "rewrite"
+        return select(rows, torus, seen, m_bytes, params)[3]
+
+    return policy
