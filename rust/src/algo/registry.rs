@@ -377,6 +377,18 @@ mod tests {
     }
 
     #[test]
+    fn registry_statically_certifies_on_small_topologies() {
+        // ISSUE 7: every buildable collective must pass the full static
+        // verifier (dataflow proof + port legality + congestion gates),
+        // not just the disjointness/coverage validator above.
+        for t in [Torus::ring(8), Torus::ring(9), Torus::new(&[3, 3])] {
+            let rep = crate::verify::certify_registry(&t)
+                .unwrap_or_else(|e| panic!("{:?}: {e}", t.dims()));
+            assert!(rep.certs.len() >= 8, "{:?}: {} certs", t.dims(), rep.certs.len());
+        }
+    }
+
+    #[test]
     fn ring9_trivance_and_bruck() {
         let t = Torus::ring(9);
         for algo in [Algo::Trivance, Algo::Bruck, Algo::Bucket] {

@@ -5,7 +5,8 @@
 //! trivance simulate --topo 8x8 [--algo A] [--variant L|B] [--size BYTES]
 //!                   [--bw-gbps N] [--mode flow|packet] [--mtu BYTES]
 //! trivance validate --topo 27 [--algo A]
-//! trivance verify   --topo 9 [--algo A] [--block-len N] [--pjrt]
+//! trivance verify   [--topo 9]... [--all] [--out VERIFY_report.json] [--mutants]
+//!                   [--numeric [--algo A] [--block-len N] [--pjrt]]
 //! trivance pattern  --n 9 [--algo trivance|bruck]
 //! trivance optimality --topo 81
 //! trivance train-demo [--workers 9] [--steps 200] [--lr 0.5]
@@ -147,7 +148,8 @@ USAGE:
                     [--threads N] [--bw-gbps 800] [--alpha-us 1.5]
                     [--mode flow|packet] [--mtu 4096] [--no-plan-cache]
   trivance validate --topo 27 [--algo A]
-  trivance verify   --topo 9  [--algo A] [--block-len 8] [--pjrt]
+  trivance verify   [--topo 9]... [--all] [--out VERIFY_report.json]
+                    [--mutants] [--numeric [--algo A] [--block-len 8] [--pjrt]]
   trivance pattern  --n 9 [--algo trivance|bruck]
   trivance optimality --topo 81
   trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
@@ -182,6 +184,16 @@ in-memory first. tune --dynamic additionally tunes the dynamic presets
 rejected as stale for a dynamic lookup and vice versa); recommend --scenario
 accepts the dynamic preset names and sizes above the tuned ladder are
 refused (OutOfRange) instead of extrapolated.
+
+verify statically certifies every registry collective — dataflow proved
+exact (no missing or double-counted contribution), per-(node, step,
+direction) port usage within the fabric budget, per-algo congestion and
+latency/bandwidth optimality classification — without running a simulator;
+the default/--all topology set is the acceptance six (8, 9, 27, 3x3, 8x8,
+4x4x4). --out writes the machine-readable VERIFY_report.json; --mutants
+runs the seeded mutation-kill suite instead (the verifier must kill >= 95%
+of drop-a-send / swap-contributors / duplicate-a-reduce / shift-a-port
+mutants); --numeric is the legacy end-to-end numeric check on real vectors.
 
 --threads 0 (default) uses every core; sweep results are identical for any
 thread count. Simulation plans are shared process-wide via a cache keyed by
@@ -667,7 +679,50 @@ fn validate_cmd(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The six acceptance topologies `verify` certifies by default.
+const VERIFY_TOPOS: [&str; 6] = ["8", "9", "27", "3x3", "8x8", "4x4x4"];
+
 fn verify_cmd(args: &Args) -> Result<(), String> {
+    if args.has("numeric") {
+        return verify_numeric_cmd(args);
+    }
+    if args.has("mutants") {
+        let topos = [Torus::ring(8), Torus::ring(9), Torus::new(&[3, 3])];
+        let rep = crate::verify::mutate::run_mutation_suite(&topos, 0xC0FF_EE07, 8);
+        print!("{}", rep.render());
+        if rep.kill_rate() < 0.95 {
+            return Err(format!(
+                "mutation-kill rate {:.1}% below the 95% gate",
+                100.0 * rep.kill_rate()
+            ));
+        }
+        return Ok(());
+    }
+    let named = args.getall("topo");
+    let topos: Vec<Torus> = if named.is_empty() || args.has("all") {
+        VERIFY_TOPOS.iter().map(|s| parse_topo(s)).collect::<Result<_, _>>()?
+    } else {
+        named.iter().map(|s| parse_topo(s)).collect::<Result<_, _>>()?
+    };
+    let mut reports = Vec::new();
+    for t in &topos {
+        let rep = crate::verify::certify_registry(t)
+            .map_err(|e| format!("topology {:?}: {e}", t.dims()))?;
+        println!("{}", crate::verify::render_report(&rep));
+        reports.push(rep);
+    }
+    if let Some(path) = args.get("out") {
+        std::fs::write(path, crate::verify::report_json(&reports))
+            .map_err(|e| format!("writing {path}: {e}"))?;
+        println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// Legacy end-to-end numeric verification on real vectors
+/// (`verify --numeric`): executes the schedule through [`crate::exec`]
+/// and checks the float error against the tolerance model.
+fn verify_numeric_cmd(args: &Args) -> Result<(), String> {
     let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
     let block_len: usize = args
         .get("block-len")

@@ -30,6 +30,13 @@
 //!   power-of-two padding for arbitrary node counts.
 //! * [`cost`] — the congestion-aware Hockney cost model (paper Eq. 1) and the
 //!   optimality factors Λ/Δ/Θ of Tables 1 and 2.
+//! * [`verify`] — static schedule certification, no simulation: atom-level
+//!   dataflow proofs (exact full reduction, no double-counting), multiport
+//!   legality (per-(node, step, direction) port budgets), congestion
+//!   certificates (Trivance ≤ ⅓·Bruck on rings) and latency/bandwidth
+//!   optimality classification for every registry collective
+//!   (`trivance verify`), with a seeded mutation-kill suite
+//!   ([`verify::mutate`]) proving the verifier itself has teeth.
 //! * [`sim`] — the discrete-event network simulator substituting for SST:
 //!   flow-level (incremental max-min fair sharing with a closed-form
 //!   symmetric-step fast path) and packet-level modes (per-link FIFO batch
@@ -64,6 +71,7 @@ pub mod agpattern;
 pub mod algo;
 pub mod cost;
 pub mod sim;
+pub mod verify;
 pub mod exec;
 pub mod runtime;
 pub mod harness;

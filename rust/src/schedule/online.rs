@@ -282,6 +282,7 @@ mod tests {
     use crate::algo::{build, Algo, Variant};
     use crate::sim::{simulate_plan, SimMode};
     use crate::topology::{Link, Torus};
+    use crate::verify::{verify_dataflow, verify_dataflow_surviving, verify_plan};
 
     fn cable(t: &Torus, node: u32) -> usize {
         t.link_index(Link { node, dim: 0, dir: 1 })
@@ -312,6 +313,8 @@ mod tests {
         assert!(resp.stages.is_empty());
         assert!(resp.actions.is_empty());
         assert_eq!(resp.schedule.num_messages(), b.net.num_messages());
+        // the identity response re-verifies statically before simulation
+        verify_dataflow(&resp.schedule).unwrap_or_else(|e| panic!("{e}"));
         // and the compiled plan is the plain static plan (same routes)
         let plan = resp.build_plan(&base).unwrap();
         let r = simulate_plan(&plan, 4096, &p, SimMode::Flow);
@@ -348,9 +351,12 @@ mod tests {
             b.net.num_steps() + 2,
             "each rewrite appends a cleanup step"
         );
-        // survivor completeness is guaranteed internally by the rewriter
-        // (full validation would flag the dead node's missing blocks); what
-        // must hold is that nothing touches the dead node after the fault
+        // survivor completeness, proved statically: every rank except dead
+        // node 1 ends with the full reduction
+        let mut alive = vec![true; 9];
+        alive[1] = false;
+        verify_dataflow_surviving(&resp.schedule, &alive).unwrap_or_else(|e| panic!("{e}"));
+        // and nothing touches the dead node after the fault
         for step in resp.schedule.steps.iter().skip(resp.actions[1].0) {
             assert!(step.sends[1].is_empty(), "dead node still sends");
             for sends in &step.sends {
@@ -360,6 +366,7 @@ mod tests {
             }
         }
         let plan = resp.build_plan(&base).unwrap();
+        verify_plan(&plan, &t).unwrap_or_else(|e| panic!("{e}"));
         for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
             let r = simulate_plan(&plan, m, &p, mode);
             assert!(r.completion_s.is_finite() && r.completion_s > 0.0);
@@ -397,7 +404,11 @@ mod tests {
         let resp = respond(&b, &base, &[ev], m, &p, |_, _| Action::Rewrite).unwrap();
         assert_eq!(resp.actions, vec![(1, Action::Rewrite)]);
         assert_eq!(resp.schedule.n, 9, "response schedule lives on the real torus");
+        // the collapsed schedule merges co-hosted contributions and is not
+        // a real-rank reduction trace, but its compiled plan must still be
+        // a connected, topology-consistent route set
         let plan = resp.build_plan(&base).unwrap();
+        verify_plan(&plan, &t).unwrap_or_else(|e| panic!("{e}"));
         for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
             let r = simulate_plan(&plan, m, &p, mode);
             assert!(r.completion_s.is_finite() && r.completion_s > 0.0);

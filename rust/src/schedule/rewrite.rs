@@ -551,6 +551,7 @@ mod tests {
     use crate::algo::rings::{trivance, Order};
     use crate::algo::{build, Algo, Variant};
     use crate::topology::Torus;
+    use crate::verify::{verify_dataflow, verify_dataflow_surviving};
 
     fn down_link_of(t: &Torus, node: u32) -> usize {
         t.link_index(Link { node, dim: 0, dir: 1 })
@@ -563,8 +564,10 @@ mod tests {
         let base = NetModel::uniform(&t);
         let fault = Fault::link(1, down_link_of(&t, 0));
         let rw = rewrite_for_fault(&s, &base, &fault).unwrap();
-        // still a correct AllReduce (no node died)
+        // still a correct AllReduce (no node died) — both by the classic
+        // validator and the typed static dataflow proof
         validate_allreduce(&rw).unwrap_or_else(|e| panic!("{e}"));
+        verify_dataflow(&rw).unwrap_or_else(|e| panic!("{e}"));
         // post-fault steps never route over the dead link nominally
         let post = fault.apply(&base);
         for (k, step) in rw.steps.iter().enumerate().skip(fault.step) {
@@ -608,6 +611,8 @@ mod tests {
                         // the virtual rewrite is a complete AllReduce
                         validate_allreduce(&rw)
                             .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
+                        verify_dataflow(&rw)
+                            .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                         // and collapses onto the real torus with no send
                         // nominally crossing the dead link
                         let net = rewrite_collective_for_faults(
@@ -636,6 +641,8 @@ mod tests {
                         .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                     validate_allreduce(&rw)
                         .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
+                    verify_dataflow(&rw)
+                        .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                 }
             }
         }
@@ -658,7 +665,11 @@ mod tests {
                 }
             }
         }
-        // (survivor completeness is guaranteed internally by rewrite_for_fault)
+        // survivor completeness, proved statically: every living rank ends
+        // with the full reduction including dead node 4's contribution
+        let mut alive = vec![true; 9];
+        alive[4] = false;
+        verify_dataflow_surviving(&rw, &alive).unwrap_or_else(|e| panic!("{e}"));
     }
 
     #[test]
@@ -696,6 +707,7 @@ mod tests {
         let f2 = Fault::link(cleanup, down_link_of(&t, 4));
         let rw2 = rewrite_for_faults(&s, &base, &[f1.clone(), f2.clone()]).unwrap();
         validate_allreduce(&rw2).unwrap_or_else(|e| panic!("{e}"));
+        verify_dataflow(&rw2).unwrap_or_else(|e| panic!("{e}"));
         // identical to applying the second rewrite by hand against rw1 on
         // the post-f1 model
         let manual = rewrite_for_fault(&rw1, &f1.apply(&base), &f2).unwrap();
@@ -737,7 +749,10 @@ mod tests {
                 }
             }
         }
-        // (survivor completeness is guaranteed internally by the rewriter)
+        // survivor completeness, proved statically for dead node 1
+        let mut alive = vec![true; 9];
+        alive[1] = false;
+        verify_dataflow_surviving(&rw2, &alive).unwrap_or_else(|e| panic!("{e}"));
     }
 
     #[test]

@@ -324,6 +324,33 @@ mod tests {
     }
 
     #[test]
+    fn nesting_depth_boundary_is_exact_and_error_is_targeted() {
+        // ISSUE 7 satellite: pin the exact MAX_DEPTH boundary (mirrored in
+        // tools/pysim/eval_json.py). A scalar payload wrapped in exactly
+        // MAX_DEPTH brackets parses; one more level must fail with the
+        // targeted depth error, not a stack overflow or a generic message.
+        let ok = "[".repeat(MAX_DEPTH) + "1" + &"]".repeat(MAX_DEPTH);
+        let v = parse(&ok).unwrap_or_else(|e| panic!("{MAX_DEPTH} levels must parse: {e}"));
+        let mut cur = &v;
+        for _ in 0..MAX_DEPTH {
+            cur = &cur.as_arr().unwrap()[0];
+        }
+        assert_eq!(cur.as_f64(), Some(1.0));
+        let too_deep = "[".repeat(MAX_DEPTH + 1) + "1" + &"]".repeat(MAX_DEPTH + 1);
+        let err = parse(&too_deep).unwrap_err();
+        assert!(
+            err.contains("nesting deeper than"),
+            "error should name the depth limit, got {err:?}"
+        );
+        // same boundary through object nesting
+        let obj_ok = "{\"k\": ".repeat(MAX_DEPTH / 2) + "1" + &"}".repeat(MAX_DEPTH / 2);
+        parse(&obj_ok).unwrap_or_else(|e| panic!("object nesting within the limit: {e}"));
+        let obj_deep = "{\"k\": ".repeat(MAX_DEPTH + 1) + "1" + &"}".repeat(MAX_DEPTH + 1);
+        let err = parse(&obj_deep).unwrap_err();
+        assert!(err.contains("nesting deeper than"), "{err:?}");
+    }
+
+    #[test]
     fn bare_nan_and_infinity_tokens_rejected_with_clear_error() {
         // Rust's f64 parser accepts "NaN"/"inf"/"Infinity", so these must
         // never reach it — and the error must say what happened, not the

@@ -1,0 +1,306 @@
+//! Mutation testing of the static verifier: seeded schedule corruptors
+//! whose mutants the verifier must kill.
+//!
+//! A verifier that accepts everything is worse than none — it converts
+//! real defects into green checkmarks. This module proves the four
+//! analyses in [`super`] have teeth by corrupting known-good registry
+//! schedules in the four ways the ISSUE names and checking each mutant is
+//! rejected by dataflow or port analysis:
+//!
+//! - **drop-a-send**: remove one payload-carrying message → some rank
+//!   must end incomplete ([`VerifyError::MissingContribution`]).
+//! - **swap-contributors**: cyclically shift one Reduce piece's
+//!   contribution set → the sender no longer holds exactly that set, or
+//!   the receiver double-counts.
+//! - **duplicate-a-reduce**: inject a verbatim copy of a Reduce-carrying
+//!   send → the duplicate's contribution lands twice
+//!   ([`VerifyError::DoubleCount`]).
+//! - **shift-a-port**: flip one send onto the opposite-direction port by
+//!   replacing its route hint with an anti-natural `Directed` hint.
+//!   Applied to Trivance only: the paper's both-ports-busy property means
+//!   any wrongly-ported message collides with the traffic already on that
+//!   port ([`VerifyError::PortOvercommit`]). On single-message-per-step
+//!   schedules (Bucket, the halving-trees' latency variants) and on the
+//!   2-port Bruck family the flipped send is a *legal equivalent
+//!   schedule*, not a defect — measured in `tools/pysim` before pinning
+//!   this scope.
+//!
+//! Mutation targets are the registry's *native* builds (`net == exec`);
+//! padded builds collapse virtual ranks onto hosts, so a real-rank mutant
+//! would conflate verifier soundness with padding semantics. The runner
+//! is fully seeded ([`SplitMix64`]) and the acceptance gate
+//! (`trivance verify --mutants`, `rust/tests/verify_static.rs`) requires
+//! ≥ 95% kills; the pinned pysim measurement is 100% (720/720 across
+//! ring-8/ring-9/3×3).
+
+use super::{audit_ports, port_budget, verify_dataflow, VerifyError};
+use crate::algo::{build, Algo, Variant};
+use crate::schedule::{Kind, RouteHint, Schedule};
+use crate::topology::Torus;
+use crate::util::{fmt, SplitMix64};
+
+/// The four seeded corruption classes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum MutationKind {
+    DropSend,
+    SwapContributors,
+    DuplicateReduce,
+    ShiftPort,
+}
+
+impl MutationKind {
+    pub const ALL: [MutationKind; 4] = [
+        MutationKind::DropSend,
+        MutationKind::SwapContributors,
+        MutationKind::DuplicateReduce,
+        MutationKind::ShiftPort,
+    ];
+
+    pub fn label(self) -> &'static str {
+        match self {
+            MutationKind::DropSend => "drop-a-send",
+            MutationKind::SwapContributors => "swap-contributors",
+            MutationKind::DuplicateReduce => "duplicate-a-reduce",
+            MutationKind::ShiftPort => "shift-a-port",
+        }
+    }
+}
+
+/// Address of one mutation site: `(step, src, send index, aux)` where
+/// `aux` is the piece index (swap) or the movement dimension (shift).
+#[derive(Clone, Copy, Debug)]
+struct Site {
+    step: usize,
+    src: usize,
+    idx: usize,
+    aux: usize,
+}
+
+/// Enumerate every site where `kind` can be applied to `s` on `t`.
+fn sites(s: &Schedule, t: &Torus, kind: MutationKind) -> Vec<Site> {
+    let mut out = Vec::new();
+    for (step, st) in s.steps.iter().enumerate() {
+        for (src, sends) in st.sends.iter().enumerate() {
+            for (idx, snd) in sends.iter().enumerate() {
+                match kind {
+                    MutationKind::DropSend => {
+                        if snd.rel_bytes(s.n_blocks) > 0.0 {
+                            out.push(Site { step, src, idx, aux: 0 });
+                        }
+                    }
+                    MutationKind::SwapContributors => {
+                        for (aux, p) in snd.pieces.iter().enumerate() {
+                            let len = p.contrib.len();
+                            if p.kind == Kind::Reduce && len > 0 && len < u64::from(s.n) {
+                                out.push(Site { step, src, idx, aux });
+                            }
+                        }
+                    }
+                    MutationKind::DuplicateReduce => {
+                        if snd
+                            .pieces
+                            .iter()
+                            .any(|p| p.kind == Kind::Reduce && !p.contrib.is_empty())
+                        {
+                            out.push(Site { step, src, idx, aux: 0 });
+                        }
+                    }
+                    MutationKind::ShiftPort => {
+                        if snd.rel_bytes(s.n_blocks) <= 0.0 || snd.to as usize == src {
+                            continue;
+                        }
+                        let diff: Vec<usize> = (0..t.ndims())
+                            .filter(|&d| t.coord(src as u32, d) != t.coord(snd.to, d))
+                            .collect();
+                        if let [d] = diff[..] {
+                            out.push(Site { step, src, idx, aux: d });
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Apply one mutation, returning the corrupted clone.
+fn apply(s: &Schedule, t: &Torus, kind: MutationKind, site: Site) -> Schedule {
+    let mut m = s.clone();
+    let sends = &mut m.steps[site.step].sends[site.src];
+    match kind {
+        MutationKind::DropSend => {
+            sends.remove(site.idx);
+        }
+        MutationKind::SwapContributors => {
+            let p = &mut sends[site.idx].pieces[site.aux];
+            p.contrib = p.contrib.shift(1, s.n);
+        }
+        MutationKind::DuplicateReduce => {
+            let dup = sends[site.idx].clone();
+            sends.push(dup);
+        }
+        MutationKind::ShiftPort => {
+            let snd = &mut sends[site.idx];
+            // natural direction = the first hop of the minimal route;
+            // force the opposite port
+            let nat = t.route(site.src as u32, snd.to)[0].dir;
+            snd.route = RouteHint::Directed { dim: site.aux as u8, dir: -nat };
+        }
+    }
+    m
+}
+
+/// Per-class kill tally.
+#[derive(Clone, Copy, Debug)]
+pub struct ClassKill {
+    pub kind: MutationKind,
+    pub total: usize,
+    pub killed: usize,
+}
+
+/// Outcome of one mutation-suite run.
+#[derive(Clone, Debug)]
+pub struct KillReport {
+    pub per_class: Vec<ClassKill>,
+    /// Human-readable descriptions of every surviving mutant (empty when
+    /// the verifier is sound on the swept corpus).
+    pub survivors: Vec<String>,
+}
+
+impl KillReport {
+    pub fn total(&self) -> usize {
+        self.per_class.iter().map(|c| c.total).sum()
+    }
+
+    pub fn killed(&self) -> usize {
+        self.per_class.iter().map(|c| c.killed).sum()
+    }
+
+    pub fn kill_rate(&self) -> f64 {
+        let total = self.total();
+        if total == 0 {
+            return 1.0;
+        }
+        self.killed() as f64 / total as f64
+    }
+
+    /// Render the per-class table plus the total, for `verify --mutants`.
+    pub fn render(&self) -> String {
+        let mut table = fmt::Table::new(vec!["mutation", "mutants", "killed", "rate"]);
+        for c in &self.per_class {
+            table.row(vec![
+                c.kind.label().to_string(),
+                c.total.to_string(),
+                c.killed.to_string(),
+                format!("{:.1}%", 100.0 * c.killed as f64 / c.total.max(1) as f64),
+            ]);
+        }
+        let mut out = table.render();
+        out.push_str(&format!(
+            "\ntotal: {}/{} killed ({:.1}%)\n",
+            self.killed(),
+            self.total(),
+            100.0 * self.kill_rate()
+        ));
+        for s in &self.survivors {
+            out.push_str(&format!("SURVIVED: {s}\n"));
+        }
+        out
+    }
+}
+
+/// Would the verifier reject this mutant? Dataflow first (the cheap,
+/// topology-free proof), then port legality at the native budget.
+fn killed_by_verifier(m: &Schedule, t: &Torus, budget: u32) -> Option<VerifyError> {
+    if let Err(e) = verify_dataflow(m) {
+        return Some(e);
+    }
+    audit_ports(m, t, budget).err()
+}
+
+/// Run the seeded suite: for every native registry build on every topo,
+/// draw up to `per_class` sites per mutation class and check the verifier
+/// kills each mutant. Deterministic for a fixed `seed`.
+pub fn run_mutation_suite(topos: &[Torus], seed: u64, per_class: usize) -> KillReport {
+    let mut per: Vec<ClassKill> =
+        MutationKind::ALL.iter().map(|&kind| ClassKill { kind, total: 0, killed: 0 }).collect();
+    let mut survivors = Vec::new();
+    for t in topos {
+        for (ai, algo) in Algo::ALL.into_iter().enumerate() {
+            for (vi, variant) in Variant::ALL.into_iter().enumerate() {
+                let Ok(b) = build(algo, variant, t) else { continue };
+                if b.padded {
+                    continue; // mutation targets are native builds only
+                }
+                let budget = port_budget(algo, variant);
+                let mut rng = SplitMix64::new(
+                    seed ^ (u64::from(t.n()) * 131 + ai as u64 * 7 + vi as u64),
+                );
+                for (ki, &kind) in MutationKind::ALL.iter().enumerate() {
+                    if kind == MutationKind::ShiftPort && algo != Algo::Trivance {
+                        continue; // legal equivalent mutants elsewhere (module docs)
+                    }
+                    let ss = sites(&b.net, t, kind);
+                    if ss.is_empty() {
+                        continue;
+                    }
+                    for _ in 0..per_class.min(ss.len()) {
+                        let site = ss[rng.below(ss.len() as u64) as usize];
+                        let mutant = apply(&b.net, t, kind, site);
+                        per[ki].total += 1;
+                        match killed_by_verifier(&mutant, t, budget) {
+                            Some(_) => per[ki].killed += 1,
+                            None => survivors.push(format!(
+                                "{} {:?} {} at {site:?}",
+                                b.name,
+                                t.dims(),
+                                kind.label()
+                            )),
+                        }
+                    }
+                }
+            }
+        }
+    }
+    KillReport { per_class: per, survivors }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_class_enumerates_sites_on_trivance_ring9() {
+        let t = Torus::ring(9);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        for kind in MutationKind::ALL {
+            assert!(
+                !sites(&b.net, &t, kind).is_empty(),
+                "{}: no sites on trivance-L ring-9",
+                kind.label()
+            );
+        }
+    }
+
+    #[test]
+    fn mutants_differ_from_the_original() {
+        let t = Torus::ring(9);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        for kind in MutationKind::ALL {
+            let site = sites(&b.net, &t, kind)[0];
+            let m = apply(&b.net, &t, kind, site);
+            let identical = m.num_messages() == b.net.num_messages()
+                && m.steps.iter().zip(&b.net.steps).all(|(a, c)| a.sends == c.sends);
+            assert!(!identical, "{}: mutant identical to original", kind.label());
+        }
+    }
+
+    #[test]
+    fn ring8_suite_kills_every_mutant() {
+        // the full 3-topology sweep lives in rust/tests/verify_static.rs;
+        // this is the fast unit-level gate
+        let rep = run_mutation_suite(&[Torus::ring(8)], 0xC0FF_EE01, 4);
+        assert!(rep.total() >= 40, "suite too small: {}", rep.total());
+        assert_eq!(rep.killed(), rep.total(), "survivors: {:?}", rep.survivors);
+    }
+}

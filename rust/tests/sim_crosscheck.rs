@@ -33,6 +33,7 @@ use trivance::sim::{
 };
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
+use trivance::verify::{verify_dataflow, verify_dataflow_surviving, verify_plan};
 
 /// Tolerance of the fluid approximation against packet ground truth.
 ///
@@ -48,6 +49,9 @@ fn crosscheck(torus: &Torus, algo: Algo, variant: Variant, m: u64, mtu: u32) -> 
     };
     let p = NetParams::default();
     let plan = SimPlan::build(&b.net, torus);
+    // static certification gates every simulated configuration (ISSUE 7)
+    verify_dataflow(&b.exec).map_err(|e| format!("{algo:?} {variant:?}: {e}"))?;
+    verify_plan(&plan, torus).map_err(|e| format!("{algo:?} {variant:?}: {e}"))?;
     let f = simulate_plan(&plan, m, &p, SimMode::Flow);
     let k = simulate_plan(&plan, m, &p, SimMode::Packet { mtu });
     if k.completion_s <= 0.0 {
@@ -636,10 +640,21 @@ fn dynamic_presets_keep_flow_and_packet_within_measured_bounds() {
                             } else {
                                 b.net.clone()
                             };
+                            if rewrite && !b.padded {
+                                // rewrite outputs re-verify statically before
+                                // simulation (padded rewrites collapse
+                                // co-hosted contributions — plan audit only)
+                                verify_dataflow(&schedule).unwrap_or_else(|e| {
+                                    panic!("{} {algo:?} {variant:?} {dims:?}: {e}", sc.name)
+                                });
+                            }
                             SimPlan::build_faulted(&schedule, &base, &post, fault.step as u32)
                                 .unwrap()
                         }
                     };
+                    verify_plan(&plan, &t).unwrap_or_else(|e| {
+                        panic!("{} {algo:?} {variant:?} {dims:?}: {e}", sc.name)
+                    });
                     let scratch = SimScratch::new(&plan, &p);
                     for m in [4096u64, 256 << 10, 1 << 20] {
                         let tl = sc.timeline(&t, &p, m);
@@ -700,6 +715,7 @@ fn midfault_rewrite_validates_and_beats_detour_where_crossings_repeat() {
     assert!(!bucket.padded);
     let rewritten = rewrite_for_fault(&bucket.net, &base, &fault).unwrap();
     validate_allreduce(&rewritten).unwrap_or_else(|e| panic!("bucket-B: {e}"));
+    verify_dataflow(&rewritten).unwrap_or_else(|e| panic!("bucket-B: {e}"));
     let detour_plan =
         SimPlan::build_faulted(&bucket.net, &base, &post, fault.step as u32).unwrap();
     let rewrite_plan =
@@ -719,6 +735,7 @@ fn midfault_rewrite_validates_and_beats_detour_where_crossings_repeat() {
     let tri = build(Algo::Trivance, Variant::Latency, &t).unwrap();
     let rw_tri = rewrite_for_fault(&tri.net, &base, &fault).unwrap();
     validate_allreduce(&rw_tri).unwrap_or_else(|e| panic!("trivance-L: {e}"));
+    verify_dataflow(&rw_tri).unwrap_or_else(|e| panic!("trivance-L: {e}"));
     let dp = SimPlan::build_faulted(&tri.net, &base, &post, fault.step as u32).unwrap();
     let rp = SimPlan::build_faulted(&rw_tri, &base, &post, fault.step as u32).unwrap();
     let m = 1u64 << 20;
@@ -777,9 +794,21 @@ fn online_two_fault_sequence_completes_in_both_engines() {
                     resp.actions.iter().all(|(_, a)| *a == Action::Rewrite),
                     "{algo:?} {variant:?} {dims:?}: rewrite policy fell back to detour"
                 );
+                // survivor-aware static proof of the controller's output
+                // before either engine consumes it
+                let mut alive = vec![true; t.n() as usize];
+                for ev in &events {
+                    for &d in &ev.dead_nodes {
+                        alive[d as usize] = false;
+                    }
+                }
+                verify_dataflow_surviving(&resp.schedule, &alive)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                 let plan = resp
                     .build_plan(&base)
                     .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e:?}"));
+                verify_plan(&plan, &t)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                 for mode in [SimMode::Flow, SimMode::Packet { mtu: 4096 }] {
                     let r = simulate_plan(&plan, m, &p, mode);
                     assert!(
@@ -836,8 +865,20 @@ fn fault_sequences_keep_flow_and_packet_within_measured_bounds() {
                     else {
                         panic!("{tag} {algo:?} {variant:?} {dims:?}: respond failed")
                     };
+                    let mut alive = vec![true; t.n() as usize];
+                    for ev in &events {
+                        for &d in &ev.dead_nodes {
+                            alive[d as usize] = false;
+                        }
+                    }
+                    verify_dataflow_surviving(&resp.schedule, &alive).unwrap_or_else(|e| {
+                        panic!("{tag} {algo:?} {variant:?} {dims:?}: {e}")
+                    });
                     let plan = resp.build_plan(&base).unwrap_or_else(|e| {
                         panic!("{tag} {algo:?} {variant:?} {dims:?}: {e:?}")
+                    });
+                    verify_plan(&plan, &t).unwrap_or_else(|e| {
+                        panic!("{tag} {algo:?} {variant:?} {dims:?}: {e}")
                     });
                     let f = simulate_plan(&plan, m, &p, SimMode::Flow);
                     let k = simulate_plan(&plan, m, &p, SimMode::Packet { mtu: 4096 });

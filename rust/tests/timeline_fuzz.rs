@@ -20,6 +20,7 @@ use trivance::sim::{
 };
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
+use trivance::verify::{verify_dataflow, verify_plan};
 
 /// Flow-vs-packet drift bound under fuzzed timelines. Random flap windows
 /// land mid-message where the fluid model reshares instantly but the packet
@@ -73,6 +74,11 @@ fn fuzzed_timelines_agree_or_fail_identically() {
             return Ok(()); // unsupported configuration: nothing to check
         };
         let plan = SimPlan::build(&b.net, &t);
+        // static certification before any simulation (ISSUE 7): the build
+        // must be a provably exact AllReduce and the compiled plan a
+        // connected route set on this torus
+        verify_dataflow(&b.exec).map_err(|e| format!("static dataflow: {e}"))?;
+        verify_plan(&plan, &t).map_err(|e| format!("static plan audit: {e}"))?;
         let scratch = SimScratch::new(&plan, &p);
         let horizon = simulate_plan(&plan, *m, &p, SimMode::Flow).completion_s;
         let mut epochs = Vec::new();

@@ -1,0 +1,178 @@
+//! Static certification gate (ISSUE 7): `verify::certify_registry` must
+//! certify the whole registry on the acceptance topologies, reproduce the
+//! pinned ring congestion figures (Trivance-L exactly a third of
+//! unidirectional Bruck), classify the collectives as the paper's tables
+//! do, agree with `schedule::analysis` on the shared numerics, and kill
+//! ≥ 95% of seeded schedule mutants. Every pinned constant below was
+//! measured in `tools/pysim/eval_verify.py` — keep them in lockstep.
+
+use trivance::algo::{Algo, Variant};
+use trivance::schedule::analysis::analyze;
+use trivance::topology::Torus;
+use trivance::verify::mutate::run_mutation_suite;
+use trivance::verify::{certify_registry, report_json, OptClass};
+use trivance::util::json;
+
+/// The acceptance topologies: rings (native 8, padded 9 and 27), a square
+/// torus, a larger square, a cube.
+fn acceptance_topos() -> Vec<Torus> {
+    vec![
+        Torus::ring(8),
+        Torus::ring(9),
+        Torus::ring(27),
+        Torus::new(&[3, 3]),
+        Torus::new(&[8, 8]),
+        Torus::new(&[4, 4, 4]),
+    ]
+}
+
+#[test]
+fn full_registry_certifies_on_acceptance_topologies() {
+    // Pinned Σ⌈log₃⌉ bounds per topology (pysim: eval_verify.py).
+    let lat3: &[(&[u32], u32)] = &[
+        (&[8], 2),
+        (&[9], 2),
+        (&[27], 3),
+        (&[3, 3], 2),
+        (&[8, 8], 4),
+        (&[4, 4, 4], 6),
+    ];
+    for (t, &(dims, bound3)) in acceptance_topos().iter().zip(lat3) {
+        let rep = certify_registry(t)
+            .unwrap_or_else(|e| panic!("registry failed to certify on {dims:?}: {e}"));
+        assert!(rep.certs.len() >= 8, "{dims:?}: only {} collectives built", rep.certs.len());
+        let tri = rep
+            .find(Algo::Trivance, Variant::Latency)
+            .unwrap_or_else(|| panic!("{dims:?}: no trivance-L certificate"));
+        // the paper's headline: ⌈log₃⌉ steps, exactly, on every topology
+        assert_eq!(tri.optimality.lat_bound3, bound3, "{dims:?}");
+        assert_eq!(tri.optimality.steps as u32, bound3, "{dims:?}: trivance-L step count");
+        assert_eq!(tri.optimality.class, OptClass::Latency, "{dims:?}");
+        // one message per (node, dim, direction) port, every step
+        assert_eq!(tri.ports.max_port_msgs, 1, "{dims:?}: trivance-L port usage");
+    }
+}
+
+#[test]
+fn pinned_ring_congestion_and_classification() {
+    // (dims, trivance-L, bruck-L, bruck-unidir-L) tx_delay_rel — exact
+    // rationals, measured in pysim and stable under the uniform fabric.
+    let pinned: &[(u32, f64, f64, f64)] =
+        &[(8, 4.0, 6.0, 12.0), (9, 4.0, 6.0, 12.0), (27, 13.0, 21.0, 39.0)];
+    for &(n, tri_tx, bruck_tx, uni_tx) in pinned {
+        let t = Torus::ring(n);
+        let rep = certify_registry(&t).unwrap();
+        let tx = |algo| rep.find(algo, Variant::Latency).unwrap().congestion.tx_delay_rel;
+        assert!((tx(Algo::Trivance) - tri_tx).abs() < 1e-9, "ring-{n}: {}", tx(Algo::Trivance));
+        assert!((tx(Algo::Bruck) - bruck_tx).abs() < 1e-9, "ring-{n}: {}", tx(Algo::Bruck));
+        assert!(
+            (tx(Algo::BruckUnidir) - uni_tx).abs() < 1e-9,
+            "ring-{n}: {}",
+            tx(Algo::BruckUnidir)
+        );
+        // the §4 claim, exactly: Trivance-L = ⅓ · unidirectional Bruck
+        assert!(
+            (tx(Algo::Trivance) - uni_tx / 3.0).abs() < 1e-9,
+            "ring-{n}: trivance {} vs uni/3 {}",
+            tx(Algo::Trivance),
+            uni_tx / 3.0
+        );
+    }
+}
+
+#[test]
+fn bandwidth_classification_matches_the_paper_tables() {
+    // bucket-B meets the 2(n−1)/n bound on every acceptance topology;
+    // trivance-B meets it exactly where pysim measured it (powers of three
+    // per dimension) and misses it elsewhere.
+    let tri_b_optimal: &[(&[u32], bool)] = &[
+        (&[8], false),
+        (&[9], true),
+        (&[27], true),
+        (&[3, 3], true),
+        (&[8, 8], false),
+        (&[4, 4, 4], false),
+    ];
+    for (t, &(dims, tri_ok)) in acceptance_topos().iter().zip(tri_b_optimal) {
+        let rep = certify_registry(t).unwrap();
+        let bucket = rep.find(Algo::Bucket, Variant::Bandwidth).unwrap();
+        assert!(bucket.optimality.bandwidth_optimal, "{dims:?}: bucket-B not bw-optimal");
+        let tri = rep.find(Algo::Trivance, Variant::Bandwidth).unwrap();
+        assert_eq!(
+            tri.optimality.bandwidth_optimal, tri_ok,
+            "{dims:?}: trivance-B sent {} vs bound {}",
+            tri.optimality.max_node_sent_rel, tri.optimality.bw_lower_rel
+        );
+    }
+}
+
+#[test]
+fn congestion_audit_matches_schedule_analysis() {
+    // Two independent implementations of the same numerics: the verifier's
+    // congestion audit and schedule::analysis must agree bit-for-bit on
+    // tx_delay, and the optimality audit on max_node_sent.
+    for t in [Torus::ring(9), Torus::new(&[3, 3]), Torus::new(&[4, 4, 4])] {
+        let rep = certify_registry(&t).unwrap();
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Some(c) = rep.find(algo, variant) else { continue };
+                let b = trivance::algo::build(algo, variant, &t).unwrap();
+                let stats = analyze(&b.net, &t);
+                assert!(
+                    (c.congestion.tx_delay_rel - stats.tx_delay_rel).abs() < 1e-12,
+                    "{}: verifier {} vs analysis {}",
+                    c.name,
+                    c.congestion.tx_delay_rel,
+                    stats.tx_delay_rel
+                );
+                assert!(
+                    (c.optimality.max_node_sent_rel - stats.max_node_sent_rel).abs() < 1e-12,
+                    "{}: verifier {} vs analysis {}",
+                    c.name,
+                    c.optimality.max_node_sent_rel,
+                    stats.max_node_sent_rel
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn mutation_suite_kills_at_least_95_percent() {
+    // The CI release gate (`trivance verify --mutants`) runs the same
+    // sweep; pysim measured 100% (720/720) on these three topologies.
+    let topos = [Torus::ring(8), Torus::ring(9), Torus::new(&[3, 3])];
+    let rep = run_mutation_suite(&topos, 0xC0FF_EE07, 8);
+    assert!(rep.total() >= 100, "suite too small: {} mutants", rep.total());
+    assert!(
+        rep.kill_rate() >= 0.95,
+        "kill rate {:.1}% below the gate:\n{}",
+        100.0 * rep.kill_rate(),
+        rep.render()
+    );
+    assert!(rep.survivors.is_empty(), "survivors:\n{}", rep.render());
+}
+
+#[test]
+fn verify_report_round_trips_through_util_json() {
+    let reports: Vec<_> =
+        [Torus::ring(9), Torus::new(&[3, 3])].iter().map(|t| certify_registry(t).unwrap()).collect();
+    let doc = report_json(&reports);
+    let v = json::parse(&doc).unwrap_or_else(|e| panic!("{e}"));
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("trivance.verify.v1"));
+    let topos = v.get("topos").unwrap().as_arr().unwrap();
+    assert_eq!(topos.len(), 2);
+    for (tv, rep) in topos.iter().zip(&reports) {
+        let certs = tv.get("certs").unwrap().as_arr().unwrap();
+        assert_eq!(certs.len(), rep.certs.len());
+        for (cv, c) in certs.iter().zip(&rep.certs) {
+            assert_eq!(cv.get("collective").unwrap().as_str(), Some(c.name.as_str()));
+            let tx = cv.get("tx_delay_rel").unwrap().as_f64().unwrap();
+            assert!((tx - c.congestion.tx_delay_rel).abs() < 1e-9);
+            assert_eq!(
+                cv.get("class").unwrap().as_str(),
+                Some(c.optimality.class.label())
+            );
+        }
+    }
+}

@@ -95,6 +95,100 @@ while isinstance(v, list) and v:
     depth += 1
 check("64-deep documents (the Rust reader's cap) parse", depth == 63 and v == [])
 
+# Exact boundary mirror (ISSUE 7 satellite): replicate the Rust reader's
+# depth accounting — parse_value(depth) errors when depth > MAX_DEPTH and
+# containers recurse at depth + 1 — so the boundary itself is pinned in
+# lockstep with rust/src/util/json.rs's
+# nesting_depth_boundary_is_exact_and_error_is_targeted test: a scalar
+# wrapped in exactly 64 brackets parses, 65 must raise the targeted error.
+MAX_DEPTH = 64
+
+
+def mirror_parse(doc):
+    pos = [0]
+
+    def ws():
+        while pos[0] < len(doc) and doc[pos[0]] in " \t\n":
+            pos[0] += 1
+
+    def value(depth):
+        if depth > MAX_DEPTH:
+            raise ValueError(f"nesting deeper than {MAX_DEPTH}")
+        ws()
+        c = doc[pos[0]]
+        if c == "[":
+            pos[0] += 1
+            ws()
+            items = []
+            if doc[pos[0]] == "]":
+                pos[0] += 1
+                return items
+            items.append(value(depth + 1))
+            ws()
+            while doc[pos[0]] == ",":
+                pos[0] += 1
+                items.append(value(depth + 1))
+                ws()
+            assert doc[pos[0]] == "]"
+            pos[0] += 1
+            return items
+        if c == "{":
+            pos[0] += 1
+            ws()
+            obj = {}
+            if doc[pos[0]] == "}":
+                pos[0] += 1
+                return obj
+            while True:
+                ws()
+                assert doc[pos[0]] == '"'
+                end = doc.index('"', pos[0] + 1)
+                key = doc[pos[0] + 1:end]
+                pos[0] = end + 1
+                ws()
+                assert doc[pos[0]] == ":"
+                pos[0] += 1
+                obj[key] = value(depth + 1)
+                ws()
+                if doc[pos[0]] != ",":
+                    break
+                pos[0] += 1
+            assert doc[pos[0]] == "}"
+            pos[0] += 1
+            return obj
+        start = pos[0]
+        while pos[0] < len(doc) and doc[pos[0]] in "0123456789.eE+-":
+            pos[0] += 1
+        return float(doc[start:pos[0]])
+
+    return value(0)
+
+
+ok_doc = "[" * MAX_DEPTH + "1" + "]" * MAX_DEPTH
+v = mirror_parse(ok_doc)
+inner = v
+levels = 0
+while isinstance(inner, list):
+    inner = inner[0]
+    levels += 1
+check("scalar at exactly MAX_DEPTH brackets parses (mirror)",
+      levels == MAX_DEPTH and inner == 1.0)
+check("mirror agrees with the stdlib on the in-contract document",
+      v == json.loads(ok_doc))
+try:
+    mirror_parse("[" * (MAX_DEPTH + 1) + "1" + "]" * (MAX_DEPTH + 1))
+    check("MAX_DEPTH+1 brackets rejected (mirror)", False)
+except ValueError as e:
+    check("MAX_DEPTH+1 brackets rejected (mirror)", "nesting deeper than" in str(e))
+obj_ok = '{"k": ' * (MAX_DEPTH // 2) + "1" + "}" * (MAX_DEPTH // 2)
+check("object nesting within the limit parses (mirror)",
+      mirror_parse(obj_ok) == json.loads(obj_ok))
+try:
+    mirror_parse('{"k": ' * (MAX_DEPTH + 1) + "1" + "}" * (MAX_DEPTH + 1))
+    check("MAX_DEPTH+1 objects rejected (mirror)", False)
+except ValueError as e:
+    check("MAX_DEPTH+1 objects rejected (mirror)", "nesting deeper than" in str(e))
+
 print()
 if FAILED:
     print(f"eval_json: {len(FAILED)} FAILURES: {FAILED}")

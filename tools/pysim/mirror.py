@@ -2576,3 +2576,341 @@ def selector_policy(rows, torus, m_bytes, params):
         return select(rows, torus, seen, m_bytes, params)[3]
 
     return policy
+
+
+# ── static verification mirror (ISSUE 7: rust/src/verify/) ──────────────
+#
+# The dataflow lattice, port budgets, congestion sums and mutation
+# corruptors of rust/src/verify/{mod,mutate}.rs, kept in numeric lockstep;
+# eval_verify.py pins the registry certificates against these.
+
+VERIFY_EPS = 1e-9
+
+
+def verify_dataflow(s, alive=None):
+    """Mirror of verify::verify_dataflow — atom-level abstract
+    interpretation. Returns None on success or a (kind, detail) tuple with
+    kind in {malformed, unrealizable, double_count, missing}."""
+    n, nb = s.n, s.n_blocks
+    full = frozenset(range(n))
+    cells = [[([frozenset([r])], frozenset([r])) for _ in range(nb)]
+             for r in range(n)]
+    for k, step in enumerate(s.steps):
+        snap = [[cells[r][b] for b in range(nb)] for r in range(n)]
+        for src in range(n):
+            for snd in step[src]:
+                dst = snd.to
+                if dst == src or not (0 <= dst < n):
+                    return ("malformed", f"step {k} src {src} to {dst}")
+                for blocks, kind, contrib in snd.pieces:
+                    if not blocks:
+                        return ("malformed", f"step {k} empty piece")
+                    for b in blocks:
+                        if not (0 <= b < nb):
+                            return ("malformed", f"step {k} block {b}")
+                        s_atoms, s_total = snap[src][b]
+                        if kind == "reduce":
+                            if not contrib:
+                                return ("malformed",
+                                        f"step {k} empty contribution")
+                            if not contrib <= s_total:
+                                return ("unrealizable",
+                                        f"step {k} {src}->{dst} b{b}: "
+                                        "sender lacks the contribution")
+                            covered = sum(len(a) for a in s_atoms
+                                          if a <= contrib)
+                            if covered != len(contrib):
+                                return ("unrealizable",
+                                        f"step {k} {src}->{dst} b{b}: "
+                                        "splits an already-reduced atom")
+                            r_atoms, r_total = cells[dst][b]
+                            if r_total & contrib:
+                                return ("double_count",
+                                        f"step {k} {src}->{dst} b{b}")
+                            cells[dst][b] = (r_atoms + [contrib],
+                                             r_total | contrib)
+                        else:
+                            if contrib != full:
+                                return ("malformed",
+                                        f"step {k} Set contrib b{b}")
+                            if s_total != full:
+                                return ("unrealizable",
+                                        f"step {k} {src}->{dst} b{b}: "
+                                        "Set of an unfinished block")
+                            cells[dst][b] = ([full], full)
+    for r in range(n):
+        if alive is not None and not alive[r]:
+            continue
+        for b in range(nb):
+            if cells[r][b][1] != full:
+                return ("missing", f"node {r} b{b} missing "
+                        f"{n - len(cells[r][b][1])}")
+    return None
+
+
+def port_budget(algo, variant):
+    """Mirror of verify::port_budget."""
+    if algo in ("bruck", "bruck-unidir"):
+        return 2
+    if (algo, variant) == ("recdoub", "B"):
+        return 2
+    return 1
+
+
+def host_multiplicity(b):
+    """Mirror of verify::host_multiplicity."""
+    if b.hosts is None:
+        return 1
+    counts = {}
+    for h in b.hosts:
+        counts[h] = counts.get(h, 0) + 1
+    return max(counts.values())
+
+
+def _link_parts(torus, l):
+    dirbit = l % 2
+    rest = l // 2
+    dim = rest % torus.ndims()
+    node = rest // torus.ndims()
+    return node, dim, (1 if dirbit == 1 else -1)
+
+
+def audit_ports(s, torus, budget):
+    """Mirror of verify::audit_ports. Returns (max_port_msgs, err) where
+    err is None or a (kind, detail) tuple."""
+    model = NetModel.uniform(torus)
+    nb = s.n_blocks
+    max_used = 0
+    for k, step in enumerate(s.steps):
+        ports = {}
+        for src in range(s.n):
+            for snd in step[src]:
+                if snd.rel_bytes(nb) <= 0.0:
+                    continue
+                if snd.route != MIN:
+                    _tag, dim, dr = snd.route
+                    if dim >= torus.ndims():
+                        return max_used, ("malformed",
+                                          f"directed dim {dim}")
+                    if dr not in (1, -1):
+                        return max_used, ("malformed",
+                                          f"directed dir {dr}")
+                    for d in range(torus.ndims()):
+                        if d != dim and torus.coord(src, d) != \
+                                torus.coord(snd.to, d):
+                            return max_used, (
+                                "malformed",
+                                f"directed off-dim step {k} "
+                                f"{src}->{snd.to}")
+                route = model.route(src, snd.to, snd.route)
+                if route:
+                    key = route[0]
+                    ports[key] = ports.get(key, 0) + 1
+        for key, used in ports.items():
+            max_used = max(max_used, used)
+            if used > budget:
+                node, dim, dr = _link_parts(torus, key)
+                return max_used, ("port",
+                                  f"step {k} node {node} dim {dim} "
+                                  f"dir {dr:+d}: {used} > {budget}")
+    return max_used, None
+
+
+def audit_congestion(s, torus):
+    """Mirror of verify::audit_congestion: static per-link load under
+    nominal routes on the uniform fabric."""
+    model = NetModel.uniform(torus)
+    nb = s.n_blocks
+    tx_delay_rel = 0.0
+    max_link_rel = 0.0
+    max_link_msgs = 0
+    bytes_on_wire = 0.0
+    load_sum = 0.0
+    loaded_pairs = 0
+    messages = 0
+    for step in s.steps:
+        load = {}
+        count = {}
+        for src in range(s.n):
+            for snd in step[src]:
+                rel = snd.rel_bytes(nb)
+                if rel <= 0.0:
+                    continue
+                route = model.route(src, snd.to, snd.route)
+                messages += 1
+                bytes_on_wire += rel * len(route)
+                for l in route:
+                    load[l] = load.get(l, 0.0) + rel
+                    count[l] = count.get(l, 0) + 1
+        if load:
+            step_max = max(load.values())
+            tx_delay_rel += step_max
+            max_link_rel = max(max_link_rel, step_max)
+            max_link_msgs = max(max_link_msgs, max(count.values()))
+            load_sum += sum(load.values())
+            loaded_pairs += len(load)
+    mean = load_sum / loaded_pairs if loaded_pairs else 0.0
+    return dict(tx_delay_rel=tx_delay_rel, max_link_rel=max_link_rel,
+                max_link_msgs=max_link_msgs, mean_link_rel=mean,
+                bytes_on_wire_rel=bytes_on_wire, messages=messages)
+
+
+def audit_optimality(s, torus):
+    """Mirror of verify::audit_optimality."""
+    lat3 = sum(ceil_log(3, a) for a in torus.dims)
+    lat2 = sum(ceil_log(2, a) for a in torus.dims)
+    nb = s.n_blocks
+    sent = [0.0] * s.n
+    for step in s.steps:
+        for src in range(s.n):
+            for snd in step[src]:
+                sent[src] += snd.rel_bytes(nb)
+    max_sent = max(sent)
+    n = torus.n
+    bw_lb = 2.0 * (n - 1) / n
+    lat_opt = s.num_steps() <= lat3
+    bw_opt = max_sent <= bw_lb + VERIFY_EPS
+    klass = ("latency-optimal" if lat_opt
+             else "bandwidth-optimal" if bw_opt else "neither")
+    return dict(steps=s.num_steps(), lat_bound3=lat3, lat_bound2=lat2,
+                max_node_sent_rel=max_sent, bw_lower_rel=bw_lb,
+                latency_optimal=lat_opt, bandwidth_optimal=bw_opt,
+                klass=klass)
+
+
+def certify_collective(b, torus):
+    """Mirror of verify::certify_collective: dataflow on the exec
+    schedule, ports/congestion/optimality on the net schedule. Returns a
+    cert dict or raises AssertionError on any defect."""
+    err = verify_dataflow(b.exec_s)
+    assert err is None, f"{b.net.name}: dataflow {err}"
+    algo, variant = b.algo, b.variant
+    budget = port_budget(algo, variant) * host_multiplicity(b)
+    max_port, perr = audit_ports(b.net, torus, budget)
+    assert perr is None, f"{b.net.name}: ports {perr}"
+    return dict(name=b.net.name, algo=algo, variant=variant,
+                padded=b.padded, budget=budget, max_port_msgs=max_port,
+                congestion=audit_congestion(b.net, torus),
+                optimality=audit_optimality(b.net, torus))
+
+
+def certify_registry(torus):
+    """Mirror of verify::certify_registry, including the ring congestion
+    gates (Trivance-L ≤ ⅓·BruckUnidir-L and ≤ Bruck-L)."""
+    certs = {}
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, torus)
+            if b is None:
+                continue
+            b.algo, b.variant = algo, variant
+            certs[(algo, variant)] = certify_collective(b, torus)
+    tri = certs.get(("trivance", "L"))
+    if tri is not None:
+        assert tri["optimality"]["latency_optimal"], \
+            f"{torus.dims}: trivance-L not latency-optimal"
+        if torus.ndims() == 1:
+            tx = tri["congestion"]["tx_delay_rel"]
+            uni = certs[("bruck-unidir", "L")]["congestion"]["tx_delay_rel"]
+            bid = certs[("bruck", "L")]["congestion"]["tx_delay_rel"]
+            assert tx <= uni / 3.0 + VERIFY_EPS, \
+                f"{torus.dims}: trivance {tx} > uni/3 {uni / 3.0}"
+            assert tx <= bid + VERIFY_EPS, \
+                f"{torus.dims}: trivance {tx} > bruck {bid}"
+    return certs
+
+
+# Mutation corruptors — mirror of verify::mutate.
+MUTATION_KINDS = ["drop", "swap", "dup", "shift"]
+
+
+def mutation_sites(s, torus, kind):
+    out = []
+    for k, st in enumerate(s.steps):
+        for src in range(s.n):
+            for si, snd in enumerate(st[src]):
+                if kind == "drop":
+                    if snd.rel_bytes(s.n_blocks) > 0:
+                        out.append((k, src, si, 0))
+                elif kind == "swap":
+                    for pi, (_b, kd, c) in enumerate(snd.pieces):
+                        if kd == "reduce" and 0 < len(c) < s.n:
+                            out.append((k, src, si, pi))
+                elif kind == "dup":
+                    if any(kd == "reduce" and c
+                           for _b, kd, c in snd.pieces):
+                        out.append((k, src, si, 0))
+                elif kind == "shift":
+                    if snd.rel_bytes(s.n_blocks) <= 0:
+                        continue
+                    diff = [d for d in range(torus.ndims())
+                            if torus.coord(src, d) != torus.coord(snd.to, d)]
+                    if len(diff) == 1:
+                        out.append((k, src, si, diff[0]))
+    return out
+
+
+def _clone_schedule(s):
+    c = Schedule(s.name, s.n, s.n_blocks)
+    for st in s.steps:
+        new = c.push_step()
+        for src in range(s.n):
+            new[src] = [Send(x.to, list(x.pieces), x.route) for x in st[src]]
+    return c
+
+
+def apply_mutation(s, torus, kind, site):
+    m = _clone_schedule(s)
+    k, src, si, aux = site
+    if kind == "drop":
+        m.steps[k][src].pop(si)
+    elif kind == "swap":
+        snd = m.steps[k][src][si]
+        b, kd, c = snd.pieces[aux]
+        snd.pieces[aux] = (b, kd, frozenset((r + 1) % s.n for r in c))
+    elif kind == "dup":
+        snd = m.steps[k][src][si]
+        m.steps[k][src].append(Send(snd.to, list(snd.pieces), snd.route))
+    elif kind == "shift":
+        snd = m.steps[k][src][si]
+        model = NetModel.uniform(torus)
+        nat = model.route(src, snd.to, snd.route)
+        nat_dr = 1 if nat[0] % 2 == 1 else -1
+        m.steps[k][src][si] = Send(snd.to, list(snd.pieces),
+                                   directed(aux, -nat_dr))
+    return m
+
+
+def run_mutation_suite(topos, seed, per_class):
+    """Mirror of verify::mutate::run_mutation_suite: native builds only,
+    shift-a-port on trivance only. Returns (total, killed, survivors)."""
+    total = killed = 0
+    survivors = []
+    for torus in topos:
+        for ai, algo in enumerate(ALGOS):
+            for vi, variant in enumerate(VARIANTS):
+                b = build(algo, variant, torus)
+                if b is None or b.padded:
+                    continue
+                budget = port_budget(algo, variant)
+                rng = SplitMix64((seed ^ (torus.n * 131 + ai * 7 + vi))
+                                 & 0xFFFFFFFFFFFFFFFF)
+                for kind in MUTATION_KINDS:
+                    if kind == "shift" and algo != "trivance":
+                        continue
+                    ss = mutation_sites(b.net, torus, kind)
+                    if not ss:
+                        continue
+                    for _ in range(min(per_class, len(ss))):
+                        site = ss[rng.below(len(ss))]
+                        m = apply_mutation(b.net, torus, kind, site)
+                        err = verify_dataflow(m)
+                        if err is None:
+                            _mp, err = audit_ports(m, torus, budget)
+                        total += 1
+                        if err is not None:
+                            killed += 1
+                        else:
+                            survivors.append(
+                                (torus.dims, algo, variant, kind, site))
+    return total, killed, survivors
