@@ -5,7 +5,7 @@
 
 use trivance::algo::{build, Algo, Variant};
 use trivance::cost::NetParams;
-use trivance::exec::{verify_allreduce, NativeReducer, Reducer};
+use trivance::exec::{verify_allreduce, NativeReducer, Reducer, VectorReducer};
 use trivance::schedule::analysis::analyze;
 use trivance::sim::{simulate, SimMode};
 use trivance::topology::Torus;
@@ -66,6 +66,26 @@ fn main() {
     b1.run("sim-flow/32x32/bucket-B/8MiB", || {
         simulate(&bu32.net, &t32, 8 << 20, &p, SimMode::Flow).events
     });
+
+    println!("\n== reduction kernels: scalar vs vectorized (4M f32) ==");
+    let elems = 1usize << 22;
+    let mut rng = trivance::util::SplitMix64::new(0xBE7C);
+    let a0: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let bv: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let cv: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let kernels: [(&str, &dyn Reducer); 2] = [("scalar", &NativeReducer), ("vector", &VectorReducer)];
+    for (name, r) in kernels {
+        let mut acc = a0.clone();
+        b.run(&format!("reduce/add2/{name}/4M"), || {
+            r.add2_assign(&mut acc, &bv);
+            acc[0]
+        });
+        let mut acc = a0.clone();
+        b.run(&format!("reduce/add3/{name}/4M"), || {
+            r.add3_assign(&mut acc, &bv, &cv);
+            acc[0]
+        });
+    }
 
     println!("\n== numeric executor ==");
     let tv9 = build(Algo::Trivance, Variant::Latency, &Torus::ring(9)).unwrap();

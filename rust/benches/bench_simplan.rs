@@ -9,8 +9,11 @@
 use trivance::algo::{build, Algo, Variant};
 use trivance::cost::NetParams;
 use trivance::harness::sweep::{run_sweep_threads, size_ladder};
-use trivance::sim::packet::{reference, simulate_packet_plan};
-use trivance::sim::{flow::simulate_flow_plan, simulate, PlanCache, PlanKey, SimMode, SimPlan};
+use trivance::sim::packet::{reference, simulate_packet_plan, simulate_packet_plan_queue};
+use trivance::sim::{
+    flow::simulate_flow_plan, simulate, PlanCache, PlanKey, QueueKind, SimMode, SimPlan,
+    SimScratch,
+};
 use trivance::topology::Torus;
 use trivance::util::bench::Bencher;
 use trivance::util::par;
@@ -99,6 +102,30 @@ fn main() {
         batched_throughput / reference_throughput,
         re.events as f64 / be.events as f64,
         (be.completion_s - re.completion_s).abs() / re.completion_s,
+    );
+
+    println!("\n== event queue: heap vs calendar (8x8 trivance-B, 1 MiB packets) ==");
+    let tv88 = build(Algo::Trivance, Variant::Bandwidth, &t88).unwrap();
+    let plan88b = SimPlan::build(&tv88.net, &t88);
+    let scratch88 = SimScratch::new(&plan88b, &p);
+    for kind in [QueueKind::Heap, QueueKind::Calendar] {
+        b.run(&format!("packet/8x8/trivance-B/1MiB/{kind}"), || {
+            simulate_packet_plan_queue(&plan88b, 1 << 20, &p, 4096, &scratch88, kind).0.events
+        });
+    }
+    let (hres, _) =
+        simulate_packet_plan_queue(&plan88b, 1 << 20, &p, 4096, &scratch88, QueueKind::Heap);
+    let (cres, cs) =
+        simulate_packet_plan_queue(&plan88b, 1 << 20, &p, 4096, &scratch88, QueueKind::Calendar);
+    assert_eq!(hres.completion_s.to_bits(), cres.completion_s.to_bits());
+    println!(
+        "bit-identical across kinds: {} events | calendar: {} resizes, {} entries scanned \
+         over {} pops ({:.2}/pop)",
+        hres.events,
+        cs.resizes,
+        cs.scanned,
+        cs.pops,
+        cs.scanned as f64 / cs.pops.max(1) as f64,
     );
 
     println!("\n== sweep engine: 3x3x3 full registry, 32 B – 4 MiB ==");

@@ -17,7 +17,7 @@
 
 use crate::algo::{build, Algo, Variant};
 use crate::cost::{eq1_with_hops, measure_optimality, NetParams};
-use crate::exec::{f32_sum_tolerance, verify_allreduce, NativeReducer, Reducer};
+use crate::exec::{f32_sum_tolerance, verify_allreduce, NativeReducer, Reducer, VectorReducer};
 use crate::schedule::analysis::analyze;
 use crate::sim::{simulate, SimMode};
 use crate::topology::Torus;
@@ -138,6 +138,7 @@ USAGE:
                     [--online [--table tuner_table.json]]
   trivance bench-sweep [--topo 3x3x3] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--out BENCH_sweep.json]
+                    [--core-out BENCH_core.json] [--quick]
                     [--no-plan-cache] [--no-scenarios]
   trivance tune     [--topo 8x8]... [--quick] [--max-size 128MiB] [--threads N]
                     [--bw-gbps 800] [--alpha-us 1.5] [--mode flow|packet] [--mtu 4096]
@@ -149,7 +150,8 @@ USAGE:
                     [--mode flow|packet] [--mtu 4096] [--no-plan-cache]
   trivance validate --topo 27 [--algo A]
   trivance verify   [--topo 9]... [--all] [--out VERIFY_report.json]
-                    [--mutants] [--numeric [--algo A] [--block-len 8] [--pjrt]]
+                    [--mutants] [--numeric [--algo A] [--block-len 8] [--pjrt]
+                    [--reducer scalar|vector]]
   trivance pattern  --n 9 [--algo trivance|bruck]
   trivance optimality --topo 81
   trivance train-demo [--workers 9] [--steps 200] [--lr 0.5] [--log-every 20]
@@ -196,9 +198,18 @@ of drop-a-send / swap-contributors / duplicate-a-reduce / shift-a-port
 mutants); --numeric is the legacy end-to-end numeric check on real vectors.
 
 --threads 0 (default) uses every core; sweep results are identical for any
-thread count. Simulation plans are shared process-wide via a cache keyed by
-(algo, variant, dims, net-model fingerprint); --no-plan-cache forces fresh
-builds (results are bit-identical either way).
+thread count. Simulation plans are shared process-wide via a bounded LRU
+cache keyed by (algo, variant, dims, net-model fingerprint);
+--no-plan-cache forces fresh builds and --plan-cache-cap N bounds the
+cache (0 = unbounded) — results are bit-identical either way, eviction
+just rebuilds on the next lookup. --event-queue heap|calendar selects the
+packet engine's scheduler (default calendar, proven bit-identical to the
+heap); both knobs are accepted by every simulating subcommand. bench-sweep
+additionally runs the hot-path microbenchmarks (packet events/sec per
+queue kind with op counts, reducer kernel GB/s scalar vs vectorized) and
+writes them to BENCH_core.json; --quick shrinks the workload for the CI
+perf-smoke job. verify --numeric --reducer vector runs the end-to-end
+check through the vectorized reduction kernel (bit-identical to scalar).
 
 IDs: table1 table2 fig6a fig6b fig7a fig7b fig8 fig9 fig10
 Algorithms: trivance bruck bruck-unidir swing recdoub bucket
@@ -250,20 +261,35 @@ fn parse_threads(args: &Args) -> Result<usize, String> {
         .map(|t| t.unwrap_or(0))
 }
 
-/// Apply the `--no-plan-cache` knob to the process-wide plan cache.
-fn apply_plan_cache_flag(args: &Args) {
+/// Apply the process-wide engine knobs: `--no-plan-cache`,
+/// `--plan-cache-cap N` (0 = unbounded), and `--event-queue
+/// heap|calendar` (the packet engine's scheduler — bit-identical either
+/// way, so the knob is purely a performance selector).
+fn apply_engine_flags(args: &Args) -> Result<(), String> {
     if args.has("no-plan-cache") {
         crate::sim::PlanCache::global().set_enabled(false);
     }
+    if let Some(cap) = args.get("plan-cache-cap") {
+        let cap: usize = cap.parse().map_err(|e| format!("bad --plan-cache-cap: {e}"))?;
+        crate::sim::PlanCache::global().set_cap(cap);
+    }
+    if let Some(q) = args.get("event-queue") {
+        let kind = crate::sim::QueueKind::parse(q)
+            .ok_or_else(|| format!("unknown --event-queue {q:?} (heap or calendar)"))?;
+        crate::sim::events::set_default_kind(kind);
+    }
+    Ok(())
 }
 
 fn plan_cache_stats() -> String {
     let c = crate::sim::PlanCache::global();
     format!(
-        "plan cache: {} hits / {} misses, {} plans cached{}",
+        "plan cache: {} hits / {} misses / {} evictions, {} plans cached (cap {}){}",
         c.hits(),
         c.misses(),
+        c.evictions(),
         c.len(),
+        if c.cap() == 0 { "unbounded".to_string() } else { c.cap().to_string() },
         if c.is_enabled() { "" } else { " (disabled)" }
     )
 }
@@ -271,7 +297,7 @@ fn plan_cache_stats() -> String {
 fn figures(args: &Args) -> Result<(), String> {
     let quick = args.has("quick");
     let threads = parse_threads(args)?;
-    apply_plan_cache_flag(args);
+    apply_engine_flags(args)?;
     let ids: Vec<String> = if args.has("all") || args.getall("id").is_empty() {
         crate::harness::ALL_IDS.iter().map(|s| s.to_string()).collect()
     } else {
@@ -315,7 +341,7 @@ fn scenarios_cmd(args: &Args) -> Result<(), String> {
         .transpose()?
         .unwrap_or(if quick { 256 << 10 } else { 4 << 20 });
     let threads = parse_threads(args)?;
-    apply_plan_cache_flag(args);
+    apply_engine_flags(args)?;
     let params = net_params(args)?;
     let mode = parse_mode(args)?;
     let sizes = size_ladder(max);
@@ -382,18 +408,22 @@ fn scenarios_cmd(args: &Args) -> Result<(), String> {
 /// named presets (`--no-scenarios` skips them).
 fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
     use crate::harness::scenarios::{presets, run_scenarios};
-    use crate::harness::sweep::{run_sweep_timed, size_ladder, write_bench_json};
+    use crate::harness::sweep::{
+        run_core_bench, run_sweep_timed, size_ladder, write_bench_core_json, write_bench_json,
+    };
+    let quick = args.has("quick");
     let torus = match args.get("topo") {
         Some(t) => parse_topo(t)?,
+        None if quick => Torus::new(&[3, 3]),
         None => Torus::new(&[3, 3, 3]),
     };
     let max = args
         .get("max-size")
         .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --max-size {s:?}")))
         .transpose()?
-        .unwrap_or(128 << 20);
+        .unwrap_or(if quick { 1 << 20 } else { 128 << 20 });
     let threads = parse_threads(args)?;
-    apply_plan_cache_flag(args);
+    apply_engine_flags(args)?;
     let params = net_params(args)?;
     let out = args.get("out").unwrap_or("BENCH_sweep.json");
     let sizes = size_ladder(max);
@@ -425,9 +455,38 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
     write_bench_json(out, &sweep, &timing, scenario_sweep.as_ref())
         .map_err(|e| format!("writing {out}: {e}"))?;
 
+    // Raw-speed hot-path microbenchmarks: packet events/sec under each
+    // event-queue kind (heap vs calendar, with op counts) and reducer
+    // kernel GB/s (scalar vs vectorized) — the BENCH_core.json trajectory
+    // the CI perf-smoke job gates on.
+    eprintln!("[bench-sweep] core hot-path benchmarks ...");
+    let core = run_core_bench(quick);
+    let core_out = args.get("core-out").unwrap_or("BENCH_core.json");
+    write_bench_core_json(core_out, &core, Some((&sweep, &timing)))
+        .map_err(|e| format!("writing {core_out}: {e}"))?;
+    for q in &core.queues {
+        println!(
+            "event queue {:>8}: {:.3e} events/s ({} events, {} pushes, peak {}, \
+             {} resizes, {} scanned)",
+            q.kind.to_string(),
+            q.events_per_s,
+            q.events,
+            q.stats.pushes,
+            q.stats.peak_len,
+            q.stats.resizes,
+            q.stats.scanned,
+        );
+    }
+    for r in &core.reducers {
+        println!(
+            "reduce {:>8}: add2 {:.1} GB/s, add3 {:.1} GB/s",
+            r.name, r.add2_gbps, r.add3_gbps
+        );
+    }
+
     println!("{}", sweep.render("bench-sweep — completion relative to Trivance"));
     println!(
-        "build {:.3}s + sim {:.3}s = {:.3}s wall ({} threads); wrote {out}",
+        "build {:.3}s + sim {:.3}s = {:.3}s wall ({} threads); wrote {out} and {core_out}",
         timing.build_wall_s, timing.sim_wall_s, wall, timing.threads
     );
     println!("{}", plan_cache_stats());
@@ -465,7 +524,7 @@ fn tune_cmd(args: &Args) -> Result<(), String> {
         return Err(format!("--max-size must be >= 32 B (the tune ladder starts at 32), got {max}"));
     }
     let threads = parse_threads(args)?;
-    apply_plan_cache_flag(args);
+    apply_engine_flags(args)?;
     let params = net_params(args)?;
     let mode = parse_mode(args)?;
     let out = args.get("out").unwrap_or("tuner_table.json");
@@ -543,7 +602,7 @@ fn replay_cmd(args: &Args) -> Result<(), String> {
         None => Torus::new(&[8, 8]),
     };
     let threads = parse_threads(args)?;
-    apply_plan_cache_flag(args);
+    apply_engine_flags(args)?;
     let params = net_params(args)?;
     let mode = parse_mode(args)?;
     let calls: usize = args
@@ -607,6 +666,7 @@ fn replay_cmd(args: &Args) -> Result<(), String> {
 }
 
 fn simulate_cmd(args: &Args) -> Result<(), String> {
+    apply_engine_flags(args)?;
     let torus = parse_topo(args.get("topo").ok_or("--topo required")?)?;
     let m = args
         .get("size")
@@ -683,6 +743,7 @@ fn validate_cmd(args: &Args) -> Result<(), String> {
 const VERIFY_TOPOS: [&str; 6] = ["8", "9", "27", "3x3", "8x8", "4x4x4"];
 
 fn verify_cmd(args: &Args) -> Result<(), String> {
+    apply_engine_flags(args)?;
     if args.has("numeric") {
         return verify_numeric_cmd(args);
     }
@@ -736,7 +797,13 @@ fn verify_numeric_cmd(args: &Args) -> Result<(), String> {
         println!("reductions via PJRT ({})", rt.platform());
         &rt
     } else {
-        &NativeReducer
+        match args.get("reducer").unwrap_or("scalar") {
+            "scalar" => &NativeReducer,
+            // bit-identical to scalar (exec tests pin this), so the knob
+            // only selects the kernel, never the answer
+            "vector" => &VectorReducer,
+            other => return Err(format!("unknown --reducer {other:?} (scalar or vector)")),
+        }
     };
     let algos: Vec<Algo> = match args.get("algo") {
         Some(a) => vec![parse_algo(a)?],

@@ -19,13 +19,27 @@ use crate::schedule::{Kind, Schedule};
 
 /// The reduction backend. `add3` is Trivance's joint reduction (one fused
 /// pass over the accumulator and both incoming aggregates).
+///
+/// The `_assign` variants reduce *into* the accumulator; the defaults
+/// delegate to the allocating methods so external backends (PJRT) stay
+/// source-compatible, while in-process reducers override them to make
+/// [`run_allreduce`]'s inner sums allocation-free past the initial clone.
+/// Float addition is elementwise here, so every implementation must be
+/// **bit-identical** per element to the scalar oracle ([`NativeReducer`]) —
+/// `add3` is the left-associated `(a + b) + c`, never a re-association.
 pub trait Reducer {
     fn add2(&self, a: &[f32], b: &[f32]) -> Vec<f32>;
     fn add3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32>;
+    fn add2_assign(&self, acc: &mut Vec<f32>, b: &[f32]) {
+        *acc = self.add2(acc, b);
+    }
+    fn add3_assign(&self, acc: &mut Vec<f32>, b: &[f32], c: &[f32]) {
+        *acc = self.add3(acc, b, c);
+    }
 }
 
-/// Plain-Rust reducer (no artifacts needed); also the perf baseline the
-/// PJRT path is compared against in benches.
+/// Plain-Rust scalar reducer: the bit-level oracle every other backend is
+/// checked against (and the historical seed implementation).
 pub struct NativeReducer;
 
 impl Reducer for NativeReducer {
@@ -34,6 +48,79 @@ impl Reducer for NativeReducer {
     }
     fn add3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
         a.iter().zip(b).zip(c).map(|((x, y), z)| x + y + z).collect()
+    }
+}
+
+/// Number of f32 lanes per vectorized chunk (8 × f32 = one 256-bit
+/// register — AVX2 on x86-64, two NEON ops on aarch64).
+const LANES: usize = 8;
+
+/// Chunked, autovectorization-friendly reducer: explicit 8-wide chunks
+/// over fixed-size `[f32; 8]` views (no bounds checks in the hot loop, no
+/// unstable features) plus a scalar remainder tail. Elementwise adds in
+/// the same left-to-right association as [`NativeReducer`], so results are
+/// bit-identical — including NaN and −0.0 propagation (the tests pin
+/// this at every chunk-boundary size). The in-place `_assign` overrides
+/// skip the per-call allocation entirely.
+pub struct VectorReducer;
+
+impl VectorReducer {
+    #[inline]
+    fn add2_in(acc: &mut [f32], b: &[f32]) {
+        assert_eq!(acc.len(), b.len(), "reducer operand lengths");
+        let mut ai = acc.chunks_exact_mut(LANES);
+        let mut bi = b.chunks_exact(LANES);
+        for (ca, cb) in ai.by_ref().zip(bi.by_ref()) {
+            let ca: &mut [f32; LANES] = ca.try_into().expect("exact chunk");
+            let cb: &[f32; LANES] = cb.try_into().expect("exact chunk");
+            for (x, y) in ca.iter_mut().zip(cb) {
+                *x += *y;
+            }
+        }
+        for (x, y) in ai.into_remainder().iter_mut().zip(bi.remainder()) {
+            *x += *y;
+        }
+    }
+
+    #[inline]
+    fn add3_in(acc: &mut [f32], b: &[f32], c: &[f32]) {
+        assert_eq!(acc.len(), b.len(), "reducer operand lengths");
+        assert_eq!(acc.len(), c.len(), "reducer operand lengths");
+        let mut ai = acc.chunks_exact_mut(LANES);
+        let mut bi = b.chunks_exact(LANES);
+        let mut ci = c.chunks_exact(LANES);
+        for ((ca, cb), cc) in ai.by_ref().zip(bi.by_ref()).zip(ci.by_ref()) {
+            let ca: &mut [f32; LANES] = ca.try_into().expect("exact chunk");
+            let cb: &[f32; LANES] = cb.try_into().expect("exact chunk");
+            let cc: &[f32; LANES] = cc.try_into().expect("exact chunk");
+            for ((x, y), z) in ca.iter_mut().zip(cb).zip(cc) {
+                *x = *x + *y + *z;
+            }
+        }
+        for ((x, y), z) in
+            ai.into_remainder().iter_mut().zip(bi.remainder()).zip(ci.remainder())
+        {
+            *x = *x + *y + *z;
+        }
+    }
+}
+
+impl Reducer for VectorReducer {
+    fn add2(&self, a: &[f32], b: &[f32]) -> Vec<f32> {
+        let mut out = a.to_vec();
+        VectorReducer::add2_in(&mut out, b);
+        out
+    }
+    fn add3(&self, a: &[f32], b: &[f32], c: &[f32]) -> Vec<f32> {
+        let mut out = a.to_vec();
+        VectorReducer::add3_in(&mut out, b, c);
+        out
+    }
+    fn add2_assign(&self, acc: &mut Vec<f32>, b: &[f32]) {
+        VectorReducer::add2_in(acc, b);
+    }
+    fn add3_assign(&self, acc: &mut Vec<f32>, b: &[f32], c: &[f32]) {
+        VectorReducer::add3_in(acc, b, c);
     }
 }
 
@@ -54,17 +141,19 @@ struct Atom {
 }
 
 /// Sum a list of vectors with the reducer, preferring 3-way joint
-/// reductions (the Trivance fast path).
+/// reductions (the Trivance fast path). Accumulates in place via the
+/// `_assign` face — one allocation (the initial clone) per call, and the
+/// exact left-to-right association the seed used: `((p0 + p1) + p2) + …`.
 fn sum_all(reducer: &dyn Reducer, parts: &[&Vec<f32>]) -> Vec<f32> {
     assert!(!parts.is_empty());
     let mut acc: Vec<f32> = parts[0].clone();
     let mut i = 1;
     while i < parts.len() {
         if i + 1 < parts.len() {
-            acc = reducer.add3(&acc, parts[i], parts[i + 1]);
+            reducer.add3_assign(&mut acc, parts[i], parts[i + 1]);
             i += 2;
         } else {
-            acc = reducer.add2(&acc, parts[i]);
+            reducer.add2_assign(&mut acc, parts[i]);
             i += 1;
         }
     }
@@ -300,5 +389,110 @@ mod tests {
         // drop the last step: coverage must fail loudly
         b.exec.steps.pop();
         let _ = verify_allreduce(&b.exec, 2, 1, &NativeReducer);
+    }
+
+    /// Adversarial operand generator: mostly ordinary values, salted with
+    /// NaN, ±0.0, ±inf, subnormals, and magnitude cliffs — the inputs
+    /// where a re-associated kernel would diverge bitwise.
+    fn adversarial(len: usize, seed: u64) -> Vec<f32> {
+        let mut rng = crate::util::SplitMix64::new(seed);
+        (0..len)
+            .map(|i| match (i as u64).wrapping_add(rng.next_u64()) % 11 {
+                0 => f32::NAN,
+                1 => -0.0,
+                2 => 0.0,
+                3 => f32::INFINITY,
+                4 => f32::NEG_INFINITY,
+                5 => 1e-40,            // subnormal
+                6 => -1e-40,
+                7 => 3.4e38,           // near-max (inf on doubling)
+                8 => 1e-8,             // vanishes against O(1) addends
+                _ => rng.f32() * 2.0 - 1.0,
+            })
+            .collect()
+    }
+
+    fn assert_bits_eq(a: &[f32], b: &[f32], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(
+                x.to_bits(),
+                y.to_bits(),
+                "{what}: element {i}: {x} vs {y} (bits differ)"
+            );
+        }
+    }
+
+    #[test]
+    fn vector_reducer_is_bit_identical_at_every_chunk_boundary() {
+        // chunk-boundary sizes: below / at / above one 8-lane chunk and
+        // the 4096-element page used by the benches — with NaN, −0.0, inf,
+        // and subnormal operands, vector output must equal the scalar
+        // oracle bit for bit (allocating AND in-place faces)
+        for len in [1usize, 7, 8, 9, 4095, 4096, 4097] {
+            let a = adversarial(len, 0xA0 + len as u64);
+            let b = adversarial(len, 0xB0 + len as u64);
+            let c = adversarial(len, 0xC0 + len as u64);
+            let s2 = NativeReducer.add2(&a, &b);
+            let v2 = VectorReducer.add2(&a, &b);
+            assert_bits_eq(&s2, &v2, &format!("add2 len={len}"));
+            let s3 = NativeReducer.add3(&a, &b, &c);
+            let v3 = VectorReducer.add3(&a, &b, &c);
+            assert_bits_eq(&s3, &v3, &format!("add3 len={len}"));
+            let mut acc2 = a.clone();
+            VectorReducer.add2_assign(&mut acc2, &b);
+            assert_bits_eq(&s2, &acc2, &format!("add2_assign len={len}"));
+            let mut acc3 = a.clone();
+            VectorReducer.add3_assign(&mut acc3, &b, &c);
+            assert_bits_eq(&s3, &acc3, &format!("add3_assign len={len}"));
+            // NaN propagation is positional: a NaN operand yields NaN out
+            for (i, x) in a.iter().enumerate() {
+                if x.is_nan() {
+                    assert!(v2[i].is_nan() && v3[i].is_nan(), "len={len} elem {i}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn negative_zero_signs_match_the_scalar_oracle() {
+        // (−0.0) + (−0.0) = −0.0 but (−0.0) + 0.0 = +0.0: sign handling
+        // must be the hardware's, not a shortcut's — at sizes straddling
+        // the chunk tail so both code paths see every pattern
+        for len in [8usize, 9, 16, 23] {
+            let patterns = [(-0.0f32, -0.0f32), (-0.0, 0.0), (0.0, -0.0), (0.0, 0.0)];
+            for (pa, pb) in patterns {
+                let a = vec![pa; len];
+                let b = vec![pb; len];
+                let s = NativeReducer.add2(&a, &b);
+                let v = VectorReducer.add2(&a, &b);
+                assert_bits_eq(&s, &v, &format!("len={len} {pa:?}+{pb:?}"));
+                let s3 = NativeReducer.add3(&a, &b, &a);
+                let v3 = VectorReducer.add3(&a, &b, &a);
+                assert_bits_eq(&s3, &v3, &format!("add3 len={len} {pa:?}+{pb:?}"));
+            }
+        }
+    }
+
+    #[test]
+    fn registry_numerics_identical_under_vector_kernel() {
+        // the whole-executor claim: running the registry's schedules with
+        // the vector kernel reproduces the scalar oracle's max error
+        // exactly (elementwise adds in the same association ⇒ identical
+        // result vectors ⇒ identical error)
+        let t = Torus::ring(8);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let b = build(algo, variant, &t).unwrap();
+                let scalar = verify_allreduce(&b.exec, 4, 7, &NativeReducer);
+                let vector = verify_allreduce(&b.exec, 4, 7, &VectorReducer);
+                assert_eq!(
+                    scalar.to_bits(),
+                    vector.to_bits(),
+                    "{algo:?} {variant:?}: scalar {scalar} vs vector {vector}"
+                );
+                assert!(vector < f32_sum_tolerance(8), "{algo:?} {variant:?}: err {vector}");
+            }
+        }
     }
 }

@@ -22,7 +22,9 @@
 
 use crate::algo::{build, Algo, BuiltCollective, Variant};
 use crate::cost::NetParams;
-use crate::sim::{simulate_plan_scratch, PlanCache, PlanKey, SimMode, SimPlan, SimScratch};
+use crate::sim::{
+    simulate_plan_scratch, PlanCache, PlanKey, QueueKind, QueueStats, SimMode, SimPlan, SimScratch,
+};
 use crate::topology::Torus;
 use crate::util::{fmt, par};
 use std::sync::Arc;
@@ -525,6 +527,211 @@ pub fn write_bench_json(
     scenarios: Option<&crate::harness::scenarios::ScenarioSweep>,
 ) -> std::io::Result<()> {
     std::fs::write(path, bench_json(sweep, timing, scenarios))
+}
+
+/// One event-queue implementation's measured hot-loop throughput on the
+/// core packet workload ([`run_core_bench`]).
+pub struct QueueBench {
+    pub kind: QueueKind,
+    /// Simulator events processed per run (identical across kinds — the
+    /// calendar queue is proven bit-identical to the heap).
+    pub events: u64,
+    /// Best-of-N wall seconds for one full packet simulation.
+    pub wall_s: f64,
+    pub events_per_s: f64,
+    /// Queue op counts from the instrumented run (pushes/pops/peak/
+    /// resizes/scanned).
+    pub stats: QueueStats,
+}
+
+/// One reducer kernel's measured throughput. GB/s is computed over the
+/// summed *input operand* bytes (2 streams for `add2`, 3 for `add3`).
+pub struct ReduceBench {
+    pub name: &'static str,
+    pub add2_gbps: f64,
+    pub add3_gbps: f64,
+}
+
+/// The raw-speed metrics bundle behind `BENCH_core.json`
+/// ([`bench_core_json`]): packet events/sec under each [`QueueKind`] with
+/// op counts, and reducer kernel throughput, scalar vs vectorized.
+pub struct CoreBench {
+    pub quick: bool,
+    /// Packet workload: trivance-B on this torus at `m_bytes` / `mtu`.
+    pub dims: Vec<u32>,
+    pub m_bytes: u64,
+    pub mtu: u32,
+    pub queues: Vec<QueueBench>,
+    /// f32 elements per reducer operand buffer.
+    pub reduce_elems: usize,
+    pub reducers: Vec<ReduceBench>,
+}
+
+/// Measure the hot-path engines (see [`CoreBench`]). `quick` shrinks the
+/// workload and iteration counts for the CI perf-smoke job. Every number
+/// is best-of-N wall clock via [`crate::util::bench::Bencher`]; the two
+/// queue kinds are additionally asserted bit-identical on the workload
+/// before timing, so a throughput table can never paper over a divergence.
+pub fn run_core_bench(quick: bool) -> CoreBench {
+    use crate::exec::{NativeReducer, Reducer, VectorReducer};
+    use crate::sim::packet::simulate_packet_plan_queue;
+    use crate::util::bench::Bencher;
+    use crate::util::SplitMix64;
+
+    let params = NetParams::default();
+    let dims = vec![8u32, 8];
+    let torus = Torus::new(&dims);
+    let m: u64 = if quick { 256 << 10 } else { 1 << 20 };
+    let mtu = 4096u32;
+    let b = build(Algo::Trivance, Variant::Bandwidth, &torus).expect("trivance-B on 8x8");
+    let plan = SimPlan::build(&b.net, &torus);
+    let scratch = SimScratch::new(&plan, &params);
+    let bencher = if quick { Bencher::new(1, 3) } else { Bencher::new(2, 7) };
+
+    let mut queues = Vec::new();
+    let mut baseline: Option<(u64, u64)> = None;
+    for kind in [QueueKind::Heap, QueueKind::Calendar] {
+        let (res, stats) = simulate_packet_plan_queue(&plan, m, &params, mtu, &scratch, kind);
+        match baseline {
+            None => baseline = Some((res.completion_s.to_bits(), res.events)),
+            Some((bits, ev)) => {
+                assert_eq!(bits, res.completion_s.to_bits(), "queue kinds diverged");
+                assert_eq!(ev, res.events, "queue kinds diverged on event count");
+            }
+        }
+        let st = bencher.run(
+            &format!("packet 8x8 trivance-B {} ({kind} queue)", fmt::bytes(m)),
+            || simulate_packet_plan_queue(&plan, m, &params, mtu, &scratch, kind).0.events,
+        );
+        queues.push(QueueBench {
+            kind,
+            events: res.events,
+            wall_s: st.min_s,
+            events_per_s: res.events as f64 / st.min_s,
+            stats,
+        });
+    }
+
+    let elems: usize = if quick { 1 << 18 } else { 1 << 22 };
+    let mut rng = SplitMix64::new(0xBE7C);
+    let a0: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let bv: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let cv: Vec<f32> = (0..elems).map(|_| rng.f32()).collect();
+    let mut reducers = Vec::new();
+    let kernels: [(&'static str, &dyn Reducer); 2] =
+        [("scalar", &NativeReducer), ("vector", &VectorReducer)];
+    for (name, r) in kernels {
+        let mut acc = a0.clone();
+        let s2 = bencher.run(&format!("reduce add2 {name} ({elems} f32)"), || {
+            r.add2_assign(&mut acc, &bv);
+            acc[0]
+        });
+        let mut acc = a0.clone();
+        let s3 = bencher.run(&format!("reduce add3 {name} ({elems} f32)"), || {
+            r.add3_assign(&mut acc, &bv, &cv);
+            acc[0]
+        });
+        let gbps = |streams: f64, min_s: f64| streams * elems as f64 * 4.0 / min_s / 1e9;
+        reducers.push(ReduceBench {
+            name,
+            add2_gbps: gbps(2.0, s2.min_s),
+            add3_gbps: gbps(3.0, s3.min_s),
+        });
+    }
+
+    CoreBench { quick, dims, m_bytes: m, mtu, queues, reduce_elems: elems, reducers }
+}
+
+/// Render `BENCH_core.json` (schema `trivance.bench_core.v1`): the raw-
+/// speed trajectory record for the hot-path engines, diffed across PRs by
+/// the CI perf-smoke gate. `engine` is `"rust"` here; the checked-in
+/// baseline generated through the pysim mirror carries `"pysim-mirror"`,
+/// and the regression gate only compares same-engine records. Hand-rolled
+/// JSON (no serde in the vendored registry).
+pub fn bench_core_json(core: &CoreBench, sweep: Option<(&Sweep, &SweepTiming)>) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str("  \"schema\": \"trivance.bench_core.v1\",\n");
+    out.push_str("  \"engine\": \"rust\",\n");
+    out.push_str(&format!("  \"quick\": {},\n", core.quick));
+    let unix_s = std::time::SystemTime::now()
+        .duration_since(std::time::UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    out.push_str(&format!("  \"generated_unix_s\": {unix_s},\n"));
+    let dims: Vec<String> = core.dims.iter().map(|d| d.to_string()).collect();
+    out.push_str(&format!(
+        "  \"packet_workload\": {{\"topo\": [{}], \"algo\": \"trivance\", \
+         \"variant\": \"B\", \"size_bytes\": {}, \"mtu\": {}}},\n",
+        dims.join(", "),
+        core.m_bytes,
+        core.mtu,
+    ));
+    out.push_str("  \"event_queue\": [\n");
+    for (i, q) in core.queues.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"kind\": \"{}\", \"events\": {}, \"wall_s\": {:e}, \
+             \"events_per_s\": {:e}, \"pushes\": {}, \"pops\": {}, \"peak_len\": {}, \
+             \"resizes\": {}, \"scanned\": {}}}{}\n",
+            q.kind,
+            q.events,
+            q.wall_s,
+            q.events_per_s,
+            q.stats.pushes,
+            q.stats.pops,
+            q.stats.peak_len,
+            q.stats.resizes,
+            q.stats.scanned,
+            if i + 1 < core.queues.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ],\n");
+    out.push_str(&format!("  \"reduce\": {{\"elems\": {}, \"kernels\": [\n", core.reduce_elems));
+    for (i, r) in core.reducers.iter().enumerate() {
+        out.push_str(&format!(
+            "    {{\"name\": \"{}\", \"add2_gbps\": {:e}, \"add3_gbps\": {:e}}}{}\n",
+            r.name,
+            r.add2_gbps,
+            r.add3_gbps,
+            if i + 1 < core.reducers.len() { "," } else { "" },
+        ));
+    }
+    out.push_str("  ]},\n");
+    match sweep {
+        Some((s, t)) => {
+            let dims: Vec<String> = s.torus.dims().iter().map(|d| d.to_string()).collect();
+            out.push_str(&format!(
+                "  \"sweep\": {{\"topo\": [{}], \"build_wall_s\": {:e}, \
+                 \"sim_wall_s\": {:e}, \"threads\": {}}},\n",
+                dims.join(", "),
+                t.build_wall_s,
+                t.sim_wall_s,
+                t.threads,
+            ));
+        }
+        None => out.push_str("  \"sweep\": null,\n"),
+    }
+    let c = PlanCache::global();
+    out.push_str(&format!(
+        "  \"plan_cache\": {{\"hits\": {}, \"misses\": {}, \"evictions\": {}, \
+         \"cached\": {}, \"cap\": {}}}\n",
+        c.hits(),
+        c.misses(),
+        c.evictions(),
+        c.len(),
+        c.cap(),
+    ));
+    out.push_str("}\n");
+    out
+}
+
+/// Write [`bench_core_json`] to `path`.
+pub fn write_bench_core_json(
+    path: &str,
+    core: &CoreBench,
+    sweep: Option<(&Sweep, &SweepTiming)>,
+) -> std::io::Result<()> {
+    std::fs::write(path, bench_core_json(core, sweep))
 }
 
 #[cfg(test)]

@@ -16,6 +16,15 @@
 //! `--no-plan-cache` (via [`PlanCache::set_enabled`]) to force fresh
 //! builds, e.g. when benchmarking plan compilation itself.
 //!
+//! The cache is **bounded**: beyond [`PlanCache::cap`] entries
+//! (least-recently-used first, [`DEFAULT_CAP`] by default, `0` =
+//! unbounded via `--plan-cache-cap`) plans are evicted. Eviction is as
+//! identity-preserving as a miss — an evicted key simply rebuilds the
+//! deterministic plan on its next lookup — so long scenario sweeps over
+//! thousands of distinct `(model, timeline)` fingerprints no longer grow
+//! the process footprint without bound. [`PlanCache::evictions`] counts
+//! evicted plans for the bench-sweep report.
+//!
 //! Since plans bake in the [`crate::net::NetModel`] (per-link scale columns
 //! *and* down-link detour routes), the key also carries the model's
 //! [`crate::net::NetModel::fingerprint`]. Without it, a scenario sweep
@@ -28,8 +37,13 @@
 use super::SimPlan;
 use crate::algo::{Algo, Variant};
 use std::collections::HashMap;
-use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex, OnceLock};
+
+/// Default [`PlanCache`] capacity (plans). Generous — a full-registry sweep
+/// over a dozen topologies and a few hundred scenario fingerprints fits —
+/// but bounded, so unbounded fingerprint churn cannot leak plans forever.
+pub const DEFAULT_CAP: usize = 1024;
 
 /// Cache key: the deterministic inputs of a registry-built plan.
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
@@ -76,13 +90,38 @@ impl PlanKey {
     }
 }
 
+/// One cached plan plus its last-use tick (for LRU eviction).
+struct Slot {
+    plan: Arc<SimPlan>,
+    last_use: u64,
+}
+
 /// A concurrent plan cache (see module docs).
-#[derive(Default)]
 pub struct PlanCache {
-    map: Mutex<HashMap<PlanKey, Arc<SimPlan>>>,
+    map: Mutex<HashMap<PlanKey, Slot>>,
     hits: AtomicU64,
     misses: AtomicU64,
+    evictions: AtomicU64,
     disabled: AtomicBool,
+    /// Max cached plans; `0` = unbounded.
+    cap: AtomicUsize,
+    /// Monotone use counter: every hit or insert stamps the slot, eviction
+    /// removes the smallest stamp (least recently used).
+    tick: AtomicU64,
+}
+
+impl Default for PlanCache {
+    fn default() -> Self {
+        PlanCache {
+            map: Mutex::new(HashMap::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            disabled: AtomicBool::new(false),
+            cap: AtomicUsize::new(DEFAULT_CAP),
+            tick: AtomicU64::new(0),
+        }
+    }
 }
 
 impl PlanCache {
@@ -121,20 +160,64 @@ impl PlanCache {
             self.misses.fetch_add(1, Ordering::Relaxed);
             return Ok(Arc::new(build()?));
         }
-        if let Some(plan) = self.lock().get(&key) {
+        if let Some(slot) = self.lock().get_mut(&key) {
             self.hits.fetch_add(1, Ordering::Relaxed);
-            return Ok(Arc::clone(plan));
+            slot.last_use = self.tick.fetch_add(1, Ordering::Relaxed);
+            return Ok(Arc::clone(&slot.plan));
         }
         self.misses.fetch_add(1, Ordering::Relaxed);
         let plan = Arc::new(build()?);
-        Ok(Arc::clone(self.lock().entry(key).or_insert(plan)))
+        let last_use = self.tick.fetch_add(1, Ordering::Relaxed);
+        let mut map = self.lock();
+        let out = Arc::clone(&map.entry(key).or_insert(Slot { plan, last_use }).plan);
+        self.trim(&mut map);
+        Ok(out)
+    }
+
+    /// Evict least-recently-used slots until the map fits the cap. Called
+    /// with the lock held, after an insert or a cap change.
+    fn trim(&self, map: &mut HashMap<PlanKey, Slot>) {
+        let cap = self.cap.load(Ordering::Relaxed);
+        if cap == 0 {
+            return;
+        }
+        while map.len() > cap {
+            // O(n) scan per eviction: the cap is generous and overflow is
+            // one entry at a time, so this never shows up next to a plan
+            // build — and it needs no auxiliary order list to keep in sync.
+            let Some(oldest) =
+                map.iter().min_by_key(|(_, s)| s.last_use).map(|(k, _)| k.clone())
+            else {
+                return;
+            };
+            map.remove(&oldest);
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
     }
 
     /// Lock the map, shrugging off poisoning: the map only ever holds
     /// fully-built plans (inserts happen after `build()` returns), so a
     /// panic elsewhere cannot leave it in a broken state.
-    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<PlanKey, Arc<SimPlan>>> {
+    fn lock(&self) -> std::sync::MutexGuard<'_, HashMap<PlanKey, Slot>> {
         self.map.lock().unwrap_or_else(std::sync::PoisonError::into_inner)
+    }
+
+    /// Set the max number of cached plans (`0` = unbounded), evicting LRU
+    /// entries immediately if the cache is over the new cap.
+    pub fn set_cap(&self, cap: usize) {
+        self.cap.store(cap, Ordering::Relaxed);
+        let mut map = self.lock();
+        self.trim(&mut map);
+    }
+
+    /// Max cached plans (`0` = unbounded).
+    pub fn cap(&self) -> usize {
+        self.cap.load(Ordering::Relaxed)
+    }
+
+    /// Plans evicted by the LRU bound since process start.
+    pub fn evictions(&self) -> u64 {
+        self.evictions.load(Ordering::Relaxed)
     }
 
     /// Disable (or re-enable) caching; disabled lookups always build fresh.
@@ -261,6 +344,77 @@ mod tests {
         assert_eq!(cache.misses(), 2);
         cache.set_enabled(true);
         assert!(cache.is_enabled());
+    }
+
+    #[test]
+    fn lru_evicts_the_coldest_key_and_a_hit_refreshes_recency() {
+        let cache = PlanCache::new();
+        assert_eq!(cache.cap(), DEFAULT_CAP);
+        cache.set_cap(2);
+        let ka = PlanKey::new(Algo::Trivance, Variant::Latency, &[9]);
+        let kb = PlanKey::new(Algo::Bruck, Variant::Latency, &[9]);
+        let kc = PlanKey::new(Algo::Bucket, Variant::Latency, &[9]);
+        cache.get_or_build(ka.clone(), || plan_for(Algo::Trivance, Variant::Latency, &[9]));
+        cache.get_or_build(kb.clone(), || plan_for(Algo::Bruck, Variant::Latency, &[9]));
+        // touch A so B becomes the LRU entry
+        cache.get_or_build(ka.clone(), || panic!("A must still be cached"));
+        cache.get_or_build(kc, || plan_for(Algo::Bucket, Variant::Latency, &[9]));
+        assert_eq!(cache.len(), 2);
+        assert_eq!(cache.evictions(), 1);
+        // A survived (was refreshed); B was evicted and rebuilds on demand
+        cache.get_or_build(ka, || panic!("A must survive the eviction"));
+        let rebuilt_b =
+            cache.get_or_build(kb, || plan_for(Algo::Bruck, Variant::Latency, &[9]));
+        assert_eq!(rebuilt_b.n(), 9);
+        assert_eq!(cache.evictions(), 2, "rebuilding B evicts the new LRU entry");
+    }
+
+    #[test]
+    fn cap_zero_is_unbounded_and_set_cap_trims_immediately() {
+        let cache = PlanCache::new();
+        cache.set_cap(0);
+        for (algo, dims) in
+            [(Algo::Trivance, vec![9u32]), (Algo::Bruck, vec![9]), (Algo::Bucket, vec![9])]
+        {
+            cache.get_or_build(PlanKey::new(algo, Variant::Latency, &dims), || {
+                plan_for(algo, Variant::Latency, &dims)
+            });
+        }
+        assert_eq!(cache.len(), 3);
+        assert_eq!(cache.evictions(), 0);
+        cache.set_cap(1);
+        assert_eq!(cache.len(), 1, "lowering the cap evicts immediately");
+        assert_eq!(cache.evictions(), 2);
+    }
+
+    #[test]
+    fn evicted_key_rebuilds_bit_identically() {
+        // cached vs evicted-and-rebuilt vs cold plans must be functionally
+        // identical: the flow result of each is bit-for-bit the same
+        use crate::cost::NetParams;
+        use crate::sim::{simulate_plan, SimMode};
+        let p = NetParams::default();
+        let cold = plan_for(Algo::Trivance, Variant::Latency, &[9]);
+        let cache = PlanCache::new();
+        cache.set_cap(1);
+        let key = PlanKey::new(Algo::Trivance, Variant::Latency, &[9]);
+        let cached = cache
+            .get_or_build(key.clone(), || plan_for(Algo::Trivance, Variant::Latency, &[9]));
+        // push the key out with a different one, then rebuild it
+        cache.get_or_build(PlanKey::new(Algo::Bruck, Variant::Latency, &[9]), || {
+            plan_for(Algo::Bruck, Variant::Latency, &[9])
+        });
+        assert_eq!(cache.evictions(), 1);
+        let rebuilt =
+            cache.get_or_build(key, || plan_for(Algo::Trivance, Variant::Latency, &[9]));
+        assert!(!Arc::ptr_eq(&cached, &rebuilt));
+        for m in [4096u64, 1 << 20] {
+            let a = simulate_plan(&cold, m, &p, SimMode::Flow).completion_s;
+            let b = simulate_plan(&cached, m, &p, SimMode::Flow).completion_s;
+            let c = simulate_plan(&rebuilt, m, &p, SimMode::Flow).completion_s;
+            assert_eq!(a.to_bits(), b.to_bits(), "m={m}");
+            assert_eq!(b.to_bits(), c.to_bits(), "m={m}");
+        }
     }
 
     #[test]

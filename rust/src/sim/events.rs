@@ -1,0 +1,485 @@
+//! Pluggable event queues for the discrete-event engines.
+//!
+//! The packet engine's hot loop is `push`/`pop` on a priority queue ordered
+//! by `(time, push seq)`. A [`std::collections::BinaryHeap`] pays
+//! `O(log n)` comparisons per operation; a **calendar queue** (Brown 1988)
+//! buckets events by "day" (`⌊t / width⌋`) into a circular array of days
+//! and pays amortized `O(1)` per operation when the day width tracks the
+//! event density — which the self-resizing rule below keeps it doing.
+//!
+//! Correctness contract: **every pop returns the global `(t, seq)` minimum**,
+//! exactly as the heap does, so the two implementations are *bit-identical*
+//! — not approximately equal — for any simulation driven through
+//! [`EventQueue`]. The argument:
+//!
+//! * every event whose day is `d` lives in bucket `d % nbuckets` (both
+//!   `push` and the resize rebuild place it there, computing the day with
+//!   the **same float expression** `(t / width) as u64`);
+//! * `cur_day` never exceeds the day of the earliest pending event: `push`
+//!   lowers it when an earlier event arrives, `pop` only advances past a
+//!   day after scanning its bucket and finding no event *of that day*, and
+//!   the direct-search fallback resets it to the day of the true minimum;
+//! * therefore the first day whose bucket holds a matching event is the
+//!   globally earliest day, and the scan picks the `(t, seq)`-least event
+//!   of that day — which is the global minimum, since a smaller `t` implies
+//!   a smaller-or-equal day.
+//!
+//! Same-instant events (e.g. a `Batch` landing exactly when a `StepStart`
+//! fires) are ordered by the push sequence number, the same FIFO tiebreak
+//! [`Timed`]'s heap ordering uses; `tools/pysim/eval_core.py` proves the
+//! bit-identity across the full registry, timelines included, and the
+//! tests below pin the day-rollover ordering directly.
+
+use super::Timed;
+use std::collections::BinaryHeap;
+use std::sync::atomic::{AtomicU8, Ordering};
+
+/// Which event-queue implementation the packet engine schedules on.
+/// Selectable per call ([`crate::sim::packet::simulate_packet_plan_queue`])
+/// or process-wide via [`set_default_kind`] (the CLI's `--event-queue`
+/// knob). The default is [`QueueKind::Calendar`] — safe because the two are
+/// bit-identical; `--event-queue heap` restores the seed data structure.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum QueueKind {
+    /// `BinaryHeap<Timed<E>>` — the seed scheduler, `O(log n)` per op.
+    Heap,
+    /// Bucketed calendar queue — amortized `O(1)` per op.
+    Calendar,
+}
+
+impl QueueKind {
+    /// Parse a `--event-queue` value.
+    pub fn parse(s: &str) -> Option<QueueKind> {
+        match s {
+            "heap" => Some(QueueKind::Heap),
+            "calendar" => Some(QueueKind::Calendar),
+            _ => None,
+        }
+    }
+}
+
+impl std::fmt::Display for QueueKind {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            QueueKind::Heap => write!(f, "heap"),
+            QueueKind::Calendar => write!(f, "calendar"),
+        }
+    }
+}
+
+static DEFAULT_KIND: AtomicU8 = AtomicU8::new(1); // 0 = heap, 1 = calendar
+
+/// Set the process-wide default queue (the CLI's `--event-queue` flag).
+pub fn set_default_kind(kind: QueueKind) {
+    DEFAULT_KIND.store(
+        match kind {
+            QueueKind::Heap => 0,
+            QueueKind::Calendar => 1,
+        },
+        Ordering::Relaxed,
+    );
+}
+
+/// The process-wide default queue kind.
+pub fn default_kind() -> QueueKind {
+    match DEFAULT_KIND.load(Ordering::Relaxed) {
+        0 => QueueKind::Heap,
+        _ => QueueKind::Calendar,
+    }
+}
+
+/// Operation counters for one simulation's event queue — the raw material
+/// of the heap-vs-calendar comparison `bench-sweep` reports. `pushes` and
+/// `pops` are implementation-independent (the bit-identity makes them equal
+/// across kinds); `resizes` and `scanned` are calendar-only (`scanned` is
+/// the total entries examined during pops — the calendar's analogue of the
+/// heap's sift comparisons, and the number that stays `O(1)` per pop when
+/// the day width is healthy).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct QueueStats {
+    /// Events pushed.
+    pub pushes: u64,
+    /// Events popped.
+    pub pops: u64,
+    /// Peak queue length.
+    pub peak_len: u64,
+    /// Calendar rebuilds (bucket-count doublings/halvings). 0 for the heap.
+    pub resizes: u64,
+    /// Entries examined while scanning for minima. 0 for the heap.
+    pub scanned: u64,
+}
+
+/// The engines' event queue: one of the two [`QueueKind`]s behind a common
+/// `push`/`pop` face. Owns the FIFO-tiebreak sequence counter, so call
+/// sites just push `(t, ev)`.
+pub(crate) struct EventQueue<E> {
+    seq: u64,
+    stats: QueueStats,
+    imp: Imp<E>,
+}
+
+enum Imp<E> {
+    Heap(BinaryHeap<Timed<E>>),
+    Calendar(CalendarQueue<E>),
+}
+
+impl<E: Copy> EventQueue<E> {
+    pub(crate) fn new(kind: QueueKind) -> EventQueue<E> {
+        EventQueue {
+            seq: 0,
+            stats: QueueStats::default(),
+            imp: match kind {
+                QueueKind::Heap => Imp::Heap(BinaryHeap::new()),
+                QueueKind::Calendar => Imp::Calendar(CalendarQueue::new()),
+            },
+        }
+    }
+
+    pub(crate) fn push(&mut self, t: f64, ev: E) {
+        self.seq += 1;
+        let e = Timed { t, seq: self.seq, ev };
+        match &mut self.imp {
+            Imp::Heap(h) => h.push(e),
+            Imp::Calendar(c) => c.push(e),
+        }
+        self.stats.pushes += 1;
+        self.stats.peak_len = self.stats.peak_len.max(self.len() as u64);
+    }
+
+    pub(crate) fn pop(&mut self) -> Option<Timed<E>> {
+        let e = match &mut self.imp {
+            Imp::Heap(h) => h.pop(),
+            Imp::Calendar(c) => c.pop(),
+        };
+        if e.is_some() {
+            self.stats.pops += 1;
+        }
+        e
+    }
+
+    pub(crate) fn len(&self) -> usize {
+        match &self.imp {
+            Imp::Heap(h) => h.len(),
+            Imp::Calendar(c) => c.len,
+        }
+    }
+
+    pub(crate) fn stats(&self) -> QueueStats {
+        let mut s = self.stats;
+        if let Imp::Calendar(c) = &self.imp {
+            s.resizes = c.resizes;
+            s.scanned = c.scanned;
+        }
+        s
+    }
+}
+
+const MIN_BUCKETS: usize = 4;
+const INIT_WIDTH: f64 = 1e-6; // one day ≈ 1 µs — the engines' natural scale
+const MIN_WIDTH: f64 = 1e-12;
+
+/// The calendar proper: `buckets[d % nbuckets]` holds every pending event
+/// whose day is `d`, unsorted. Grows (doubles) when occupancy exceeds two
+/// events per bucket, shrinks (halves, floor [`MIN_BUCKETS`]) below half an
+/// event per bucket — the factor-4 hysteresis keeps resizes amortized away.
+/// Each rebuild re-derives the day width from the pending events' span so
+/// that a day holds ~2 events on average, which is what makes `pop`'s scan
+/// `O(1)` amortized.
+struct CalendarQueue<E> {
+    buckets: Vec<Vec<Timed<E>>>,
+    len: usize,
+    width: f64,
+    cur_day: u64,
+    resizes: u64,
+    scanned: u64,
+}
+
+impl<E: Copy> CalendarQueue<E> {
+    fn new() -> CalendarQueue<E> {
+        CalendarQueue {
+            buckets: vec![Vec::new(); MIN_BUCKETS],
+            len: 0,
+            width: INIT_WIDTH,
+            cur_day: 0,
+            resizes: 0,
+            scanned: 0,
+        }
+    }
+
+    /// The day of time `t` at the current width. The cast saturates for
+    /// astronomically large `t / width`, which only flattens those events
+    /// into one far-future day — ordering is still exact because the scan
+    /// compares `(t, seq)` directly.
+    #[inline]
+    fn day(&self, t: f64) -> u64 {
+        debug_assert!(!t.is_nan(), "NaN event time in the calendar queue");
+        (t / self.width) as u64
+    }
+
+    fn push(&mut self, e: Timed<E>) {
+        let d = self.day(e.t);
+        // an event earlier than the cursor (pushed at the current sim time
+        // while the cursor sits on a later day) rewinds the cursor — pops
+        // re-scan forward from it, so nothing is ever skipped
+        if self.len == 0 || d < self.cur_day {
+            self.cur_day = d;
+        }
+        let nb = self.buckets.len() as u64;
+        self.buckets[(d % nb) as usize].push(e);
+        self.len += 1;
+        if self.len > 2 * self.buckets.len() {
+            self.rebuild(self.buckets.len() * 2);
+        }
+    }
+
+    fn pop(&mut self) -> Option<Timed<E>> {
+        if self.len == 0 {
+            return None;
+        }
+        let nb = self.buckets.len();
+        for _ in 0..nb {
+            let b = (self.cur_day % nb as u64) as usize;
+            if let Some(i) = self.min_of_day_in(b, self.cur_day) {
+                return Some(self.take(b, i));
+            }
+            self.cur_day += 1;
+        }
+        // a full lap found nothing: the earliest event is > nbuckets days
+        // out (a latency gap wider than the calendar). Find it directly and
+        // jump the cursor to its day.
+        let (b, i, t) = self.global_min();
+        self.cur_day = self.day(t);
+        Some(self.take(b, i))
+    }
+
+    /// Index of the `(t, seq)`-least entry of day `d` in bucket `b`, if any.
+    fn min_of_day_in(&mut self, b: usize, d: u64) -> Option<usize> {
+        let mut best: Option<(f64, u64, usize)> = None;
+        let width = self.width;
+        let mut scanned = 0u64;
+        for (i, e) in self.buckets[b].iter().enumerate() {
+            scanned += 1;
+            if (e.t / width) as u64 != d {
+                continue;
+            }
+            let better = match best {
+                None => true,
+                Some((bt, bs, _)) => e.t.total_cmp(&bt).then(e.seq.cmp(&bs)).is_lt(),
+            };
+            if better {
+                best = Some((e.t, e.seq, i));
+            }
+        }
+        self.scanned += scanned;
+        best.map(|(_, _, i)| i)
+    }
+
+    /// Locate the globally `(t, seq)`-least entry (the fallback path).
+    fn global_min(&mut self) -> (usize, usize, f64) {
+        let mut best: Option<(usize, usize)> = None;
+        let mut bt = 0.0f64;
+        let mut bs = 0u64;
+        let mut scanned = 0u64;
+        for (b, bucket) in self.buckets.iter().enumerate() {
+            for (i, e) in bucket.iter().enumerate() {
+                scanned += 1;
+                if best.is_none() || e.t.total_cmp(&bt).then(e.seq.cmp(&bs)).is_lt() {
+                    best = Some((b, i));
+                    bt = e.t;
+                    bs = e.seq;
+                }
+            }
+        }
+        self.scanned += scanned;
+        let (b, i) = best.expect("global_min on a non-empty queue");
+        (b, i, bt)
+    }
+
+    /// Remove entry `i` of bucket `b` (order within a bucket is irrelevant:
+    /// the scans select by key, so `swap_remove` is safe) and shrink the
+    /// calendar if occupancy fell far enough.
+    fn take(&mut self, b: usize, i: usize) -> Timed<E> {
+        let e = self.buckets[b].swap_remove(i);
+        self.len -= 1;
+        if self.buckets.len() > MIN_BUCKETS && self.len * 2 < self.buckets.len() {
+            self.rebuild(self.buckets.len() / 2);
+        }
+        e
+    }
+
+    /// Redistribute into `nb` buckets, re-deriving the day width from the
+    /// pending span (target: ~2 events per day) and the cursor from the
+    /// earliest pending event. Deterministic: width and cursor depend only
+    /// on the pending set.
+    fn rebuild(&mut self, nb: usize) {
+        let nb = nb.max(MIN_BUCKETS);
+        self.resizes += 1;
+        let mut all: Vec<Timed<E>> = Vec::with_capacity(self.len);
+        for b in &mut self.buckets {
+            all.append(b);
+        }
+        if !all.is_empty() {
+            let mut min_t = f64::INFINITY;
+            let mut max_t = f64::NEG_INFINITY;
+            for e in &all {
+                min_t = min_t.min(e.t);
+                max_t = max_t.max(e.t);
+            }
+            let span = max_t - min_t;
+            if span > 0.0 {
+                self.width = (span * 2.0 / all.len() as f64).max(MIN_WIDTH);
+            }
+            self.cur_day = (min_t / self.width) as u64;
+        }
+        self.buckets.resize(nb, Vec::new());
+        let nb64 = nb as u64;
+        for e in all {
+            let d = self.day(e.t);
+            self.buckets[(d % nb64) as usize].push(e);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn drain(q: &mut EventQueue<u32>) -> Vec<(f64, u64)> {
+        let mut out = Vec::new();
+        while let Some(Timed { t, seq, .. }) = q.pop() {
+            out.push((t, seq));
+        }
+        out
+    }
+
+    fn assert_sorted(popped: &[(f64, u64)]) {
+        for w in popped.windows(2) {
+            let ord = w[0].0.total_cmp(&w[1].0).then(w[0].1.cmp(&w[1].1));
+            assert!(ord.is_lt(), "out of order: {:?} then {:?}", w[0], w[1]);
+        }
+    }
+
+    #[test]
+    fn both_kinds_pop_the_same_sequence() {
+        // interleaved pushes and pops with clustered, duplicate, and
+        // far-apart times — the two kinds must agree event for event
+        let times: Vec<f64> = (0..400)
+            .map(|i| {
+                let i = i as f64;
+                match i as u64 % 4 {
+                    0 => 1e-6 * i,            // dense cluster
+                    1 => 1e-6 * (i % 7.0),    // duplicates
+                    2 => 0.5 + 1e-3 * i,      // far block
+                    _ => 1e-9 * i * i,        // quadratic spread
+                }
+            })
+            .collect();
+        let mut h = EventQueue::<u32>::new(QueueKind::Heap);
+        let mut c = EventQueue::<u32>::new(QueueKind::Calendar);
+        let mut popped_h = Vec::new();
+        let mut popped_c = Vec::new();
+        for (i, &t) in times.iter().enumerate() {
+            h.push(t, i as u32);
+            c.push(t, i as u32);
+            if i % 3 == 2 {
+                let a = h.pop().unwrap();
+                let b = c.pop().unwrap();
+                assert_eq!(a.t.to_bits(), b.t.to_bits());
+                assert_eq!(a.seq, b.seq);
+                assert_eq!(a.ev, b.ev);
+                popped_h.push((a.t, a.seq));
+                popped_c.push((b.t, b.seq));
+            }
+        }
+        popped_h.extend(drain(&mut h));
+        popped_c.extend(drain(&mut c));
+        assert_eq!(popped_h, popped_c);
+        assert_eq!(popped_h.len(), times.len());
+        let sh = h.stats();
+        let sc = c.stats();
+        assert_eq!(sh.pushes, sc.pushes);
+        assert_eq!(sh.pops, sc.pops);
+        assert_eq!(sh.peak_len, sc.peak_len);
+        assert_eq!(sh.resizes, 0, "heap never resizes");
+        assert!(sc.resizes > 0, "400 events must outgrow 4 buckets");
+    }
+
+    #[test]
+    fn day_rollover_preserves_t_seq_total_order() {
+        // the satellite's targeted witness: same-instant events pushed
+        // around day boundaries and resizes, plus a far-future event that
+        // forces the direct-search fallback — pops must follow (t, seq)
+        // exactly, FIFO within each instant
+        let mut q = EventQueue::<u32>::new(QueueKind::Calendar);
+        // 12 events at one instant near a day boundary (seq FIFO within t),
+        // 12 at the exactly-next representable instant
+        let t0 = 64.0 * INIT_WIDTH; // an exact day boundary at initial width
+        let t1 = f64::from_bits(t0.to_bits() + 1);
+        for i in 0..12u32 {
+            q.push(t0, i);
+            q.push(t1, 100 + i);
+        }
+        // far-future straggler: > MIN_BUCKETS days out after any resize
+        q.push(1e3, 999);
+        // and a pre-boundary event pushed late (rewinds the cursor)
+        q.push(0.5 * t0, 1000);
+        let mut popped = Vec::new();
+        let mut evs = Vec::new();
+        while let Some(Timed { t, seq, ev }) = q.pop() {
+            popped.push((t, seq));
+            evs.push(ev);
+        }
+        assert_sorted(&popped);
+        assert_eq!(evs[0], 1000, "rewound event pops first");
+        assert_eq!(&evs[1..13], &(0..12).collect::<Vec<u32>>()[..], "FIFO within t0");
+        assert_eq!(
+            &evs[13..25],
+            &(100..112).collect::<Vec<u32>>()[..],
+            "t0's next ulp pops after every t0 event"
+        );
+        assert_eq!(*evs.last().unwrap(), 999, "fallback finds the straggler");
+    }
+
+    #[test]
+    fn grow_shrink_cycles_stay_exact() {
+        // pump the queue up past several doublings, drain through the
+        // halvings, repeat — every drain is sorted and complete
+        let mut q = EventQueue::<u32>::new(QueueKind::Calendar);
+        for round in 0..3u32 {
+            let n = 257; // odd, > 2 * any bucket count reached
+            for i in 0..n {
+                let t = (i as f64 * 31.0 % 97.0) * 1e-5 + round as f64;
+                q.push(t, i);
+            }
+            let popped = drain(&mut q);
+            assert_eq!(popped.len(), n as usize, "round {round}");
+            assert_sorted(&popped);
+        }
+        assert!(q.stats().resizes >= 6, "grow and shrink both exercised");
+    }
+
+    #[test]
+    fn zero_span_same_instant_burst_is_fifo() {
+        // every event at exactly one time (span 0: resize keeps the width):
+        // pops are pure FIFO by seq
+        let mut q = EventQueue::<u32>::new(QueueKind::Calendar);
+        for i in 0..100u32 {
+            q.push(2.5e-6, i);
+        }
+        let popped = drain(&mut q);
+        assert_eq!(popped.len(), 100);
+        assert_sorted(&popped);
+    }
+
+    #[test]
+    fn default_kind_round_trips() {
+        assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
+        assert_eq!(QueueKind::parse("calendar"), Some(QueueKind::Calendar));
+        assert_eq!(QueueKind::parse("cal"), None);
+        let prev = default_kind();
+        set_default_kind(QueueKind::Heap);
+        assert_eq!(default_kind(), QueueKind::Heap);
+        set_default_kind(prev);
+        assert_eq!(default_kind(), prev);
+    }
+}

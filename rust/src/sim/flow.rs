@@ -34,6 +34,18 @@
 //! computes the identical f64 division the generic first round would, so
 //! flow results are bit-identical either way.
 //!
+//! ## Allocation-free hot path
+//!
+//! Both engines run out of a thread-local [`FlowWs`] workspace: the event
+//! heap, the per-node receive/entered columns, the active-flow list, the
+//! water-filler, and the timeline engine's mutable per-link columns are
+//! allocated once per thread and re-initialized — never re-allocated — per
+//! collective. The workspace is thread-local rather than part of
+//! [`SimScratch`] because the scratch is shared *immutably* across sweep
+//! threads. Every buffer is fully re-initialized per call, so results are
+//! bit-identical to the former allocate-per-call engines
+//! (`sim_crosscheck.rs` pins this).
+//!
 //! ## Heterogeneous links
 //!
 //! Under a non-uniform [`crate::net::NetModel`] each link has its own
@@ -51,6 +63,7 @@ use crate::cost::NetParams;
 use crate::net::{Mutation, Timeline};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
+use std::cell::RefCell;
 use std::collections::BinaryHeap;
 
 const TIME_EPS: f64 = 1e-15;
@@ -76,8 +89,9 @@ struct ActiveFlow {
 }
 
 /// Persistent max-min water-filling state (see module docs). Sized once per
-/// plan; all per-recomputation work is proportional to the *touched* links
-/// and the still-unfrozen flows.
+/// plan ([`WaterFill::reset`]); all per-recomputation work is proportional
+/// to the *touched* links and the still-unfrozen flows.
+#[derive(Default)]
 struct WaterFill {
     /// Active flows crossing each link — incrementally maintained.
     nactive: Vec<u32>,
@@ -99,18 +113,31 @@ struct WaterFill {
 }
 
 impl WaterFill {
+    #[cfg(test)]
     fn new(plan: &SimPlan) -> Self {
+        let mut wf = WaterFill::default();
+        wf.reset(plan);
+        wf
+    }
+
+    /// Re-size and re-zero the per-link state for `plan`, reusing the
+    /// buffers' allocations. After a reset the state is indistinguishable
+    /// from a freshly constructed one — the engines call this once per
+    /// collective from the thread-local [`FlowWs`].
+    fn reset(&mut self, plan: &SimPlan) {
         let num_links = plan.num_links();
-        WaterFill {
-            nactive: vec![0; num_links],
-            touched: Vec::new(),
-            in_touched: vec![false; num_links],
-            residual: vec![0.0; num_links],
-            unfrozen: vec![0; num_links],
-            unfrozen_flows: Vec::new(),
-            freeze_buf: Vec::new(),
-            symmetric_ok: plan.is_uniform() && !plan.has_zero_hop_routes(),
-        }
+        self.nactive.clear();
+        self.nactive.resize(num_links, 0);
+        self.touched.clear();
+        self.in_touched.clear();
+        self.in_touched.resize(num_links, false);
+        self.residual.clear();
+        self.residual.resize(num_links, 0.0);
+        self.unfrozen.clear();
+        self.unfrozen.resize(num_links, 0);
+        self.unfrozen_flows.clear();
+        self.freeze_buf.clear();
+        self.symmetric_ok = plan.is_uniform() && !plan.has_zero_hop_routes();
     }
 
     fn inject(&mut self, route: &[u32]) {
@@ -245,6 +272,28 @@ impl WaterFill {
     }
 }
 
+/// Per-thread reusable engine state (see "Allocation-free hot path" in the
+/// module docs). Thread-local rather than part of [`SimScratch`] because
+/// the scratch is shared immutably across sweep threads; every field is
+/// fully re-initialized per collective, so reuse is invisible to results.
+#[derive(Default)]
+struct FlowWs {
+    received: Vec<u32>,
+    entered: Vec<i64>,
+    heap: BinaryHeap<Timed<Event>>,
+    active: Vec<ActiveFlow>,
+    wf: WaterFill,
+    /// Timeline-engine mutable per-link columns (unused by the static path).
+    caps_up: Vec<f64>,
+    caps_eff: Vec<f64>,
+    down: Vec<bool>,
+    link_hop: Vec<f64>,
+}
+
+thread_local! {
+    static WS: RefCell<FlowWs> = RefCell::new(FlowWs::default());
+}
+
 /// Convenience wrapper: build the plan and simulate. Ladder-style callers
 /// should build one [`SimPlan`] and call [`simulate_flow_plan`] per size.
 pub fn simulate_flow(
@@ -264,7 +313,9 @@ pub fn simulate_flow_plan(plan: &SimPlan, m_bytes: u64, params: &NetParams) -> S
     simulate_flow_plan_scratch(plan, m_bytes, params, &SimScratch::new(plan, params))
 }
 
-/// [`simulate_flow_plan`] against a precomputed [`SimScratch`].
+/// [`simulate_flow_plan`] against a precomputed [`SimScratch`]. Runs out
+/// of the thread-local [`FlowWs`] workspace — no per-call allocations on
+/// the hot path.
 pub fn simulate_flow_plan_scratch(
     plan: &SimPlan,
     m_bytes: u64,
@@ -272,21 +323,36 @@ pub fn simulate_flow_plan_scratch(
     scratch: &SimScratch,
 ) -> SimResult {
     debug_assert!(scratch.matches(plan), "scratch built for a different plan");
-    let n = plan.n();
-    let nsteps = plan.num_steps();
-    if nsteps == 0 {
+    if plan.num_steps() == 0 {
         return SimResult { completion_s: 0.0, messages: 0, events: 0 };
     }
+    WS.with(|ws| run_static(plan, m_bytes, params, scratch, &mut ws.borrow_mut()))
+}
+
+fn run_static(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    scratch: &SimScratch,
+    ws: &mut FlowWs,
+) -> SimResult {
+    let n = plan.n();
+    let nsteps = plan.num_steps();
     let cap = params.link_bw_bps / 8.0; // base bytes per second per link
     let caps = &scratch.caps; // per-link (== cap when uniform)
     let msg_hop_lat = &scratch.msg_hop_lat;
 
-    let mut received = vec![0u32; n * nsteps];
+    let FlowWs { received, entered, heap, active, wf, .. } = ws;
+    received.clear();
+    received.resize(n * nsteps, 0);
     // Per node: the step it has entered (sends injected); -1 = about to
     // enter step 0.
-    let mut entered = vec![-1i64; n];
+    entered.clear();
+    entered.resize(n, -1);
+    heap.clear();
+    active.clear();
+    wf.reset(plan);
 
-    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
     let mut seq = 0u64;
     macro_rules! push {
         ($t:expr, $ev:expr) => {{
@@ -299,8 +365,6 @@ pub fn simulate_flow_plan_scratch(
         push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
     }
 
-    let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut wf = WaterFill::new(plan);
     let mut now = 0.0f64;
     let mut completion = 0.0f64;
     let mut events = 0u64;
@@ -310,7 +374,7 @@ pub fn simulate_flow_plan_scratch(
         // Next discrete event vs. next flow drain.
         let t_event = heap.peek().map(|e| e.t).unwrap_or(f64::INFINITY);
         let mut t_drain = f64::INFINITY;
-        for f in &active {
+        for f in active.iter() {
             if f.rate > 0.0 {
                 let t = now + f.remaining / f.rate;
                 if t < t_drain {
@@ -393,7 +457,7 @@ pub fn simulate_flow_plan_scratch(
         }
 
         if need_recompute {
-            wf.recompute(&mut active, plan, cap, caps);
+            wf.recompute(active, plan, cap, caps);
             need_recompute = false;
         }
     }
@@ -425,24 +489,45 @@ pub fn simulate_flow_plan_timeline(
         return Ok(simulate_flow_plan_scratch(plan, m_bytes, params, scratch));
     }
     debug_assert!(scratch.matches(plan), "scratch built for a different plan");
-    let n = plan.n();
-    let nsteps = plan.num_steps();
-    if nsteps == 0 {
+    if plan.num_steps() == 0 {
         return Ok(SimResult { completion_s: 0.0, messages: 0, events: 0 });
     }
+    WS.with(|ws| run_timeline(plan, m_bytes, params, scratch, timeline, &mut ws.borrow_mut()))
+}
+
+fn run_timeline(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    scratch: &SimScratch,
+    timeline: &Timeline,
+    ws: &mut FlowWs,
+) -> Result<SimResult, SimError> {
+    let n = plan.n();
+    let nsteps = plan.num_steps();
     let cap = params.link_bw_bps / 8.0;
+
+    let FlowWs { received, entered, heap, active, wf, caps_up, caps_eff, down, link_hop } = ws;
     // Mutable per-link state seeded from the scratch columns: the class
     // value (`caps_up`), the down flag, and the effective capacity the
     // water-filling sees (`caps_eff` — 0 while down).
-    let mut caps_up: Vec<f64> = scratch.caps.clone();
-    let mut caps_eff: Vec<f64> = scratch.caps.clone();
-    let mut down: Vec<bool> = vec![false; plan.num_links()];
-    let mut link_hop: Vec<f64> = scratch.link_hop_lat.clone();
+    caps_up.clear();
+    caps_up.extend_from_slice(&scratch.caps);
+    caps_eff.clear();
+    caps_eff.extend_from_slice(&scratch.caps);
+    down.clear();
+    down.resize(plan.num_links(), false);
+    link_hop.clear();
+    link_hop.extend_from_slice(&scratch.link_hop_lat);
 
-    let mut received = vec![0u32; n * nsteps];
-    let mut entered = vec![-1i64; n];
+    received.clear();
+    received.resize(n * nsteps, 0);
+    entered.clear();
+    entered.resize(n, -1);
+    heap.clear();
+    active.clear();
+    wf.reset(plan);
 
-    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
     let mut seq = 0u64;
     macro_rules! push {
         ($t:expr, $ev:expr) => {{
@@ -457,8 +542,6 @@ pub fn simulate_flow_plan_timeline(
         push!(e.t, Event::Epoch { idx: ei as u32 });
     }
 
-    let mut active: Vec<ActiveFlow> = Vec::new();
-    let mut wf = WaterFill::new(plan);
     // Rates change mid-flight and capacities diverge per link: the
     // closed-form symmetric shortcut no longer applies.
     wf.symmetric_ok = false;
@@ -470,7 +553,7 @@ pub fn simulate_flow_plan_timeline(
     loop {
         let t_event = heap.peek().map(|e| e.t).unwrap_or(f64::INFINITY);
         let mut t_drain = f64::INFINITY;
-        for f in &active {
+        for f in active.iter() {
             if f.rate > 0.0 {
                 let t = now + f.remaining / f.rate;
                 if t < t_drain {
@@ -567,7 +650,7 @@ pub fn simulate_flow_plan_timeline(
         }
 
         if need_recompute {
-            wf.recompute(&mut active, plan, cap, &caps_eff);
+            wf.recompute(active, plan, cap, caps_eff);
             need_recompute = false;
         }
     }
@@ -708,6 +791,31 @@ mod tests {
                 assert_eq!(a.msg, b.msg);
                 assert_eq!(a.rate.to_bits(), b.rate.to_bits(), "step {step}");
             }
+        }
+    }
+
+    #[test]
+    fn thread_local_workspace_reuse_is_invisible() {
+        // Interleave two differently-shaped plans on one thread: the
+        // workspace (heap, water-filler, per-link columns) is resized and
+        // re-zeroed between calls, so the repeat run must be bit-identical
+        // to the first — any stale state would show up here.
+        let p = params();
+        let t9 = Torus::ring(9);
+        let s9 = latency_allreduce(&trivance(9, Order::Inc));
+        let plan9 = SimPlan::build(&s9, &t9);
+        let sc9 = SimScratch::new(&plan9, &p);
+        let t27 = Torus::ring(27);
+        let s27 = latency_allreduce(&trivance(27, Order::Inc));
+        let plan27 = SimPlan::build(&s27, &t27);
+        let sc27 = SimScratch::new(&plan27, &p);
+        for m in [0u64, 4096, 1 << 20] {
+            let first = simulate_flow_plan_scratch(&plan9, m, &p, &sc9);
+            let _ = simulate_flow_plan_scratch(&plan27, m, &p, &sc27);
+            let again = simulate_flow_plan_scratch(&plan9, m, &p, &sc9);
+            assert_eq!(first.completion_s.to_bits(), again.completion_s.to_bits(), "m={m}");
+            assert_eq!(first.events, again.events);
+            assert_eq!(first.messages, again.messages);
         }
     }
 

@@ -22,7 +22,11 @@
 //! traffic is `O(messages × hops)` and the ground-truth mode cross-validates
 //! the flow model up to 8×8 / 4×4×4 tori (see
 //! `rust/tests/sim_crosscheck.rs`); the pre-overhaul per-packet engine
-//! survives as [`packet::reference`], the drift oracle.
+//! survives as [`packet::reference`], the drift oracle. The batched
+//! engine's events are scheduled on a pluggable [`events`] queue — a
+//! bucketed calendar queue by default (amortized `O(1)` per operation,
+//! proven bit-identical to the seed `BinaryHeap`; `--event-queue heap`
+//! selects the heap).
 //!
 //! ## Network models
 //!
@@ -49,11 +53,13 @@
 //! ladder.
 
 pub mod cache;
+pub mod events;
 pub mod flow;
 pub mod packet;
 pub mod plan;
 
 pub use cache::{PlanCache, PlanKey};
+pub use events::{QueueKind, QueueStats};
 pub use plan::{SimPlan, SimScratch};
 
 use crate::cost::NetParams;

@@ -8,7 +8,17 @@
 //! the whole batch is scheduled as **one contiguous busy interval** instead
 //! of one heap event per packet — heap traffic is `O(messages × hops)`
 //! rather than `O(packets × hops)`, which is what extends flow-vs-packet
-//! cross-validation from ring-9 scale to 8×8 and 4×4×4 tori (and beyond).
+//! cross-validation from ring-9 scale to 16×16 / 8×8×8 / 4×8×16 tori (see
+//! `rust/tests/sim_crosscheck.rs`).
+//!
+//! Events are scheduled on a pluggable [`super::events::EventQueue`]: the
+//! bucketed calendar queue (amortized `O(1)` per operation) by default,
+//! the seed `BinaryHeap` behind `--event-queue heap` — the two are proven
+//! bit-identical (`tools/pysim/eval_core.py`, plus the sim-level tests
+//! below), so the knob is a pure performance choice. The per-run
+//! bookkeeping vectors (`received` / `entered` / `free_at`, and the
+//! timeline engine's change tracks) live in a thread-local workspace
+//! reused across calls: the inner loops allocate nothing after warmup.
 //!
 //! Per hop the recurrence is (each link `l` serializes at its own rate
 //! `cap_l` and charges its own forwarding latency `hop_l`, both from the
@@ -41,13 +51,14 @@
 //! cross-validation ladder shares one plan across both modes and every
 //! size.
 
+use super::events::{self, EventQueue, QueueKind, QueueStats};
 use super::plan::{SimPlan, SimScratch};
 use super::{SimError, SimResult, Timed};
 use crate::cost::NetParams;
 use crate::net::{Mutation, Timeline};
 use crate::schedule::Schedule;
 use crate::topology::Torus;
-use std::collections::BinaryHeap;
+use std::cell::RefCell;
 
 #[derive(Clone, Copy, Debug)]
 enum Event {
@@ -58,6 +69,30 @@ enum Event {
     /// `ready` is when the batch's *last* byte is available at this hop
     /// (the tail-arrival carry of the module docs).
     Batch { msg: u32, hop: u16, ready: f64 },
+}
+
+/// Per-thread workspace: every per-run vector the engines need, reused
+/// across calls so the hot loops are allocation-free after warmup. Each
+/// run fully reinitializes the fields it touches (`clear` + `resize`), so
+/// reuse is invisible to results — `sim_crosscheck.rs` pins bit-identity
+/// of every entry path. Thread-local rather than in [`SimScratch`] because
+/// the scratch is shared immutably across sweep threads.
+#[derive(Default)]
+struct PacketWs {
+    received: Vec<u32>,
+    entered: Vec<i64>,
+    free_at: Vec<f64>,
+    /// Timeline change tracks in CSR layout: `track_ranges[l]` slices
+    /// `track_pts` (empty range = static link, scalar arithmetic).
+    track_pts: Vec<TrackPoint>,
+    track_ranges: Vec<(u32, u32)>,
+    cur_up: Vec<f64>,
+    cur_hop: Vec<f64>,
+    cur_down: Vec<bool>,
+}
+
+thread_local! {
+    static WS: RefCell<PacketWs> = RefCell::new(PacketWs::default());
 }
 
 /// Convenience wrapper: build the plan and simulate. Ladder-style callers
@@ -85,7 +120,8 @@ pub fn simulate_packet_plan(
     simulate_packet_plan_scratch(plan, m_bytes, params, mtu, &SimScratch::new(plan, params))
 }
 
-/// [`simulate_packet_plan`] against a precomputed [`SimScratch`].
+/// [`simulate_packet_plan`] against a precomputed [`SimScratch`]. Runs on
+/// the process-default event queue ([`events::default_kind`]).
 pub fn simulate_packet_plan_scratch(
     plan: &SimPlan,
     m_bytes: u64,
@@ -93,48 +129,74 @@ pub fn simulate_packet_plan_scratch(
     mtu: u32,
     scratch: &SimScratch,
 ) -> SimResult {
+    simulate_packet_plan_queue(plan, m_bytes, params, mtu, scratch, events::default_kind()).0
+}
+
+/// [`simulate_packet_plan_scratch`] on an explicit [`QueueKind`], returning
+/// the queue's operation counters alongside the result — the entry point
+/// `bench-sweep` and the heap-vs-calendar benches instrument.
+pub fn simulate_packet_plan_queue(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+    scratch: &SimScratch,
+    kind: QueueKind,
+) -> (SimResult, QueueStats) {
     assert!(mtu > 0);
     debug_assert!(scratch.matches(plan), "scratch built for a different plan");
+    if plan.num_steps() == 0 {
+        return (
+            SimResult { completion_s: 0.0, messages: 0, events: 0 },
+            QueueStats::default(),
+        );
+    }
+    WS.with(|ws| run_static(plan, m_bytes, params, mtu, scratch, kind, &mut ws.borrow_mut()))
+}
+
+fn run_static(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+    scratch: &SimScratch,
+    kind: QueueKind,
+    ws: &mut PacketWs,
+) -> (SimResult, QueueStats) {
     let n = plan.n();
     let nsteps = plan.num_steps();
-    if nsteps == 0 {
-        return SimResult { completion_s: 0.0, messages: 0, events: 0 };
-    }
     let caps = &scratch.caps; // per-link bytes/s
     let hops = &scratch.link_hop_lat; // per-link forwarding latency
 
-    let mut received = vec![0u32; n * nsteps];
-    let mut entered = vec![-1i64; n];
-    let mut free_at = vec![0f64; plan.num_links()];
-    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    macro_rules! push {
-        ($t:expr, $ev:expr) => {{
-            seq += 1;
-            heap.push(Timed { t: $t, seq, ev: $ev });
-        }};
-    }
+    let PacketWs { received, entered, free_at, .. } = ws;
+    received.clear();
+    received.resize(n * nsteps, 0u32);
+    entered.clear();
+    entered.resize(n, -1i64);
+    free_at.clear();
+    free_at.resize(plan.num_links(), 0f64);
+    let mut q: EventQueue<Event> = EventQueue::new(kind);
     for r in 0..n {
-        push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+        q.push(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
     }
 
     let mut completion = 0.0f64;
     let mut events = 0u64;
 
-    while let Some(Timed { t: now, ev, .. }) = heap.pop() {
+    while let Some(Timed { t: now, ev, .. }) = q.pop() {
         events += 1;
         match ev {
             Event::StepStart { node, step } => {
                 entered[node as usize] = step as i64;
                 for &mi in plan.injections(node as usize, step as usize) {
                     // the whole payload is local at injection: ready = now
-                    push!(now, Event::Batch { msg: mi, hop: 0, ready: now });
+                    q.push(now, Event::Batch { msg: mi, hop: 0, ready: now });
                 }
                 let k = step as usize;
                 if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
                     && k + 1 < nsteps
                 {
-                    push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
+                    q.push(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                 }
             }
             Event::Batch { msg, hop, ready } => {
@@ -149,14 +211,14 @@ pub fn simulate_packet_plan_scratch(
                         && entered[m.dst as usize] == k as i64
                         && k + 1 < nsteps
                     {
-                        push!(
+                        q.push(
                             now + params.alpha_s,
-                            Event::StepStart { node: m.dst, step: m.step + 1 }
+                            Event::StepStart { node: m.dst, step: m.step + 1 },
                         );
                     }
                 } else {
                     // claim the link for the whole batch (FIFO by head
-                    // arrival: heap order is (time, push seq)); the batch
+                    // arrival: queue order is (time, push seq)); the batch
                     // cannot finish before its last byte arrived (`ready`)
                     let total = plan.bytes(msg as usize, m_bytes);
                     let l = route[hop as usize] as usize;
@@ -166,14 +228,14 @@ pub fn simulate_packet_plan_scratch(
                     let tail_ready = batch_end + hops[l];
                     if hop as usize + 1 == route.len() {
                         // tail arrives hop_l after the batch serializes
-                        push!(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
+                        q.push(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
                     } else {
                         // cut-through: the head packet frees up for the
                         // next hop after its own serialization only
                         let head = total.min(mtu as f64);
-                        push!(
+                        q.push(
                             start + head / caps[l] + hops[l],
-                            Event::Batch { msg, hop: hop + 1, ready: tail_ready }
+                            Event::Batch { msg, hop: hop + 1, ready: tail_ready },
                         );
                     }
                 }
@@ -181,7 +243,10 @@ pub fn simulate_packet_plan_scratch(
         }
     }
 
-    SimResult { completion_s: completion, messages: plan.num_msgs(), events }
+    (
+        SimResult { completion_s: completion, messages: plan.num_msgs(), events },
+        q.stats(),
+    )
 }
 
 /// One piecewise-constant change point of a link's state under a
@@ -194,42 +259,74 @@ struct TrackPoint {
     hop: f64,
 }
 
-/// Per-link change tracks for the links a timeline touches (`None` =
-/// static link, scalar arithmetic — identical to the no-timeline engine).
-fn build_tracks(
+/// Build the per-link change tracks for the links a timeline touches into
+/// the workspace's CSR storage (`track_pts` sliced by `track_ranges`; an
+/// empty range = static link, scalar arithmetic — identical to the
+/// no-timeline engine). Two passes: count per-link points, prefix-sum the
+/// ranges, then replay the epochs writing each point at its link's cursor —
+/// the same per-link point order the old per-link `Vec`s accumulated.
+fn build_tracks_into(
     plan: &SimPlan,
     params: &NetParams,
     scratch: &SimScratch,
     timeline: &Timeline,
-) -> Vec<Option<Vec<TrackPoint>>> {
+    ws: &mut PacketWs,
+) {
     let base_cap = params.link_bw_bps / 8.0;
-    let mut tracks: Vec<Option<Vec<TrackPoint>>> = vec![None; plan.num_links()];
-    let mut cur_up: Vec<f64> = scratch.caps.clone();
-    let mut cur_hop: Vec<f64> = scratch.link_hop_lat.clone();
-    let mut cur_down: Vec<bool> = vec![false; plan.num_links()];
+    let nl = plan.num_links();
+    ws.track_ranges.clear();
+    ws.track_ranges.resize(nl, (0u32, 0u32));
+    for e in timeline.epochs() {
+        for m in &e.mutations {
+            ws.track_ranges[m.link() as usize].1 += 1;
+        }
+    }
+    let mut off = 0u32;
+    for r in ws.track_ranges.iter_mut() {
+        let count = r.1;
+        *r = (off, off); // `.1` doubles as the write cursor below
+        off += count;
+    }
+    ws.track_pts.clear();
+    ws.track_pts.resize(off as usize, TrackPoint { t: 0.0, cap: 0.0, hop: 0.0 });
+    ws.cur_up.clear();
+    ws.cur_up.extend_from_slice(&scratch.caps);
+    ws.cur_hop.clear();
+    ws.cur_hop.extend_from_slice(&scratch.link_hop_lat);
+    ws.cur_down.clear();
+    ws.cur_down.resize(nl, false);
     for e in timeline.epochs() {
         for m in &e.mutations {
             let l = m.link() as usize;
             match *m {
                 Mutation::SetClass { class, .. } => {
-                    cur_up[l] = base_cap * class.bw_scale;
-                    cur_hop[l] = class.lat_scale * params.link_latency_s
+                    ws.cur_up[l] = base_cap * class.bw_scale;
+                    ws.cur_hop[l] = class.lat_scale * params.link_latency_s
                         + class.proc_scale * params.hop_latency_s;
                 }
-                Mutation::SetDown { down, .. } => cur_down[l] = down,
+                Mutation::SetDown { down, .. } => ws.cur_down[l] = down,
             }
-            let cap = if cur_down[l] { 0.0 } else { cur_up[l] };
-            if tracks[l].is_none() {
-                tracks[l] = Some(Vec::new());
-            }
-            tracks[l].as_mut().expect("just inserted").push(TrackPoint {
-                t: e.t,
-                cap,
-                hop: cur_hop[l],
-            });
+            let cap = if ws.cur_down[l] { 0.0 } else { ws.cur_up[l] };
+            let cursor = &mut ws.track_ranges[l].1;
+            ws.track_pts[*cursor as usize] = TrackPoint { t: e.t, cap, hop: ws.cur_hop[l] };
+            *cursor += 1;
         }
     }
-    tracks
+}
+
+/// The change track of link `l` (`None` = static link).
+#[inline]
+fn track_of<'a>(
+    pts: &'a [TrackPoint],
+    ranges: &[(u32, u32)],
+    l: usize,
+) -> Option<&'a [TrackPoint]> {
+    let (s, e) = ranges[l];
+    if s == e {
+        None
+    } else {
+        Some(&pts[s as usize..e as usize])
+    }
 }
 
 /// When does a serialization of `bytes` starting at `start` finish on a
@@ -308,51 +405,90 @@ pub fn simulate_packet_plan_timeline(
     scratch: &SimScratch,
     timeline: &Timeline,
 ) -> Result<SimResult, SimError> {
+    simulate_packet_plan_timeline_queue(
+        plan,
+        m_bytes,
+        params,
+        mtu,
+        scratch,
+        timeline,
+        events::default_kind(),
+    )
+    .map(|(r, _)| r)
+}
+
+/// [`simulate_packet_plan_timeline`] on an explicit [`QueueKind`], with the
+/// queue's operation counters.
+pub fn simulate_packet_plan_timeline_queue(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+    scratch: &SimScratch,
+    timeline: &Timeline,
+    kind: QueueKind,
+) -> Result<(SimResult, QueueStats), SimError> {
     if timeline.is_empty() {
-        return Ok(simulate_packet_plan_scratch(plan, m_bytes, params, mtu, scratch));
+        return Ok(simulate_packet_plan_queue(plan, m_bytes, params, mtu, scratch, kind));
     }
     assert!(mtu > 0);
     debug_assert!(scratch.matches(plan), "scratch built for a different plan");
+    if plan.num_steps() == 0 {
+        return Ok((
+            SimResult { completion_s: 0.0, messages: 0, events: 0 },
+            QueueStats::default(),
+        ));
+    }
+    WS.with(|ws| {
+        run_timeline(plan, m_bytes, params, mtu, scratch, timeline, kind, &mut ws.borrow_mut())
+    })
+}
+
+#[allow(clippy::too_many_arguments)] // internal: the public faces take fewer
+fn run_timeline(
+    plan: &SimPlan,
+    m_bytes: u64,
+    params: &NetParams,
+    mtu: u32,
+    scratch: &SimScratch,
+    timeline: &Timeline,
+    kind: QueueKind,
+    ws: &mut PacketWs,
+) -> Result<(SimResult, QueueStats), SimError> {
     let n = plan.n();
     let nsteps = plan.num_steps();
-    if nsteps == 0 {
-        return Ok(SimResult { completion_s: 0.0, messages: 0, events: 0 });
-    }
     let caps = &scratch.caps;
     let hops = &scratch.link_hop_lat;
-    let tracks = build_tracks(plan, params, scratch, timeline);
+    build_tracks_into(plan, params, scratch, timeline, ws);
 
-    let mut received = vec![0u32; n * nsteps];
-    let mut entered = vec![-1i64; n];
-    let mut free_at = vec![0f64; plan.num_links()];
-    let mut heap: BinaryHeap<Timed<Event>> = BinaryHeap::new();
-    let mut seq = 0u64;
-    macro_rules! push {
-        ($t:expr, $ev:expr) => {{
-            seq += 1;
-            heap.push(Timed { t: $t, seq, ev: $ev });
-        }};
-    }
+    let PacketWs { received, entered, free_at, track_pts, track_ranges, .. } = ws;
+    received.clear();
+    received.resize(n * nsteps, 0u32);
+    entered.clear();
+    entered.resize(n, -1i64);
+    free_at.clear();
+    free_at.resize(plan.num_links(), 0f64);
+    let mut q: EventQueue<Event> = EventQueue::new(kind);
     for r in 0..n {
-        push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+        q.push(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
     }
 
     let mut completion = 0.0f64;
     let mut events = 0u64;
 
-    while let Some(Timed { t: now, ev, .. }) = heap.pop() {
+    while let Some(Timed { t: now, ev, .. }) = q.pop() {
         events += 1;
         match ev {
             Event::StepStart { node, step } => {
                 entered[node as usize] = step as i64;
                 for &mi in plan.injections(node as usize, step as usize) {
-                    push!(now, Event::Batch { msg: mi, hop: 0, ready: now });
+                    q.push(now, Event::Batch { msg: mi, hop: 0, ready: now });
                 }
                 let k = step as usize;
                 if plan.expected(node as usize, k) == received[node as usize * nsteps + k]
                     && k + 1 < nsteps
                 {
-                    push!(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
+                    q.push(now + params.alpha_s, Event::StepStart { node, step: step + 1 });
                 }
             }
             Event::Batch { msg, hop, ready } => {
@@ -366,16 +502,16 @@ pub fn simulate_packet_plan_timeline(
                         && entered[m.dst as usize] == k as i64
                         && k + 1 < nsteps
                     {
-                        push!(
+                        q.push(
                             now + params.alpha_s,
-                            Event::StepStart { node: m.dst, step: m.step + 1 }
+                            Event::StepStart { node: m.dst, step: m.step + 1 },
                         );
                     }
                 } else {
                     let total = plan.bytes(msg as usize, m_bytes);
                     let l = route[hop as usize] as usize;
                     let start = now.max(free_at[l]);
-                    let track = tracks[l].as_deref();
+                    let track = track_of(track_pts, track_ranges, l);
                     let stranded =
                         || SimError::Stranded { link: l, step: plan.msg(msg as usize).step };
                     let batch_end = serialize_end(track, caps[l], start, total)
@@ -384,14 +520,14 @@ pub fn simulate_packet_plan_timeline(
                     free_at[l] = batch_end;
                     let tail_ready = batch_end + hop_at(track, hops[l], batch_end);
                     if hop as usize + 1 == route.len() {
-                        push!(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
+                        q.push(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
                     } else {
                         let head = total.min(mtu as f64);
                         let head_end =
                             serialize_end(track, caps[l], start, head).ok_or_else(stranded)?;
-                        push!(
+                        q.push(
                             head_end + hop_at(track, hops[l], head_end),
-                            Event::Batch { msg, hop: hop + 1, ready: tail_ready }
+                            Event::Batch { msg, hop: hop + 1, ready: tail_ready },
                         );
                     }
                 }
@@ -399,7 +535,10 @@ pub fn simulate_packet_plan_timeline(
         }
     }
 
-    Ok(SimResult { completion_s: completion, messages: plan.num_msgs(), events })
+    Ok((
+        SimResult { completion_s: completion, messages: plan.num_msgs(), events },
+        q.stats(),
+    ))
 }
 
 pub mod reference {
@@ -411,8 +550,11 @@ pub mod reference {
     //! engines. Store-and-forward per packet is naturally correct under
     //! heterogeneous link rates, so this engine consumes the same per-link
     //! capacity/latency columns and stays the oracle for NetModel runs.
+    //! It deliberately keeps its own plain `BinaryHeap`: the oracle does
+    //! not move to the data structure it is meant to check.
 
     use super::*;
+    use std::collections::BinaryHeap;
 
     #[derive(Clone, Copy, Debug)]
     enum RefEvent {
@@ -804,5 +946,91 @@ mod tests {
             large.events,
             r.events
         );
+    }
+
+    #[test]
+    fn heap_and_calendar_queues_are_bit_identical() {
+        // the tentpole claim at sim level: both queue kinds produce the
+        // same completion bits, event counts, and push/pop counters, on
+        // the static and timeline paths
+        use crate::net::{Epoch, LinkClass, Mutation, Timeline};
+        let p = NetParams::default();
+        for dims in [vec![9u32], vec![3, 3]] {
+            let t = Torus::new(&dims);
+            let s = latency_allreduce(&trivance(t.n(), Order::Inc));
+            let plan = SimPlan::build(&s, &t);
+            let scratch = SimScratch::new(&plan, &p);
+            let l = t.link_index(crate::topology::Link { node: 0, dim: 0, dir: 1 }) as u32;
+            let tl = Timeline::new(vec![
+                Epoch {
+                    t: p.alpha_s * 1.5,
+                    mutations: vec![Mutation::SetClass {
+                        link: l,
+                        class: LinkClass::slowdown(3.0),
+                    }],
+                },
+                Epoch {
+                    t: p.alpha_s * 3.0,
+                    mutations: vec![Mutation::SetClass { link: l, class: LinkClass::UNIFORM }],
+                },
+            ]);
+            for m in [0u64, 4096, 256 << 10, 1 << 20] {
+                let (h, hs) =
+                    simulate_packet_plan_queue(&plan, m, &p, 4096, &scratch, QueueKind::Heap);
+                let (c, cs) = simulate_packet_plan_queue(
+                    &plan,
+                    m,
+                    &p,
+                    4096,
+                    &scratch,
+                    QueueKind::Calendar,
+                );
+                assert_eq!(h.completion_s.to_bits(), c.completion_s.to_bits(), "{dims:?} m={m}");
+                assert_eq!(h.events, c.events);
+                assert_eq!((hs.pushes, hs.pops, hs.peak_len), (cs.pushes, cs.pops, cs.peak_len));
+                let (ht, _) = simulate_packet_plan_timeline_queue(
+                    &plan, m, &p, 4096, &scratch, &tl, QueueKind::Heap,
+                )
+                .unwrap();
+                let (ct, _) = simulate_packet_plan_timeline_queue(
+                    &plan, m, &p, 4096, &scratch, &tl, QueueKind::Calendar,
+                )
+                .unwrap();
+                assert_eq!(
+                    ht.completion_s.to_bits(),
+                    ct.completion_s.to_bits(),
+                    "timeline {dims:?} m={m}"
+                );
+                assert_eq!(ht.events, ct.events);
+            }
+        }
+    }
+
+    #[test]
+    fn zero_latency_links_collide_batch_and_stepstart_identically() {
+        // the tiebreak audit's sim-level half: with zero-latency links
+        // every tail arrival lands exactly on a batch boundary and the
+        // initial instant stacks n StepStarts with n injected Batches —
+        // same-instant ordering is pure (t, seq), which both queue kinds
+        // must replay identically
+        use crate::net::{LinkClass, NetModel};
+        let t = Torus::ring(9);
+        let s = latency_allreduce(&trivance(9, Order::Inc));
+        let mut model = NetModel::uniform(&t);
+        for l in 0..t.num_links() {
+            model.set_class(l, LinkClass::new(1.0, 0.0, 0.0));
+        }
+        let plan = SimPlan::try_build_with_model(&s, &model).unwrap();
+        let p = NetParams::default();
+        let scratch = SimScratch::new(&plan, &p);
+        for m in [0u64, 4096, 256 << 10] {
+            let (h, _) =
+                simulate_packet_plan_queue(&plan, m, &p, 4096, &scratch, QueueKind::Heap);
+            let (c, _) =
+                simulate_packet_plan_queue(&plan, m, &p, 4096, &scratch, QueueKind::Calendar);
+            assert_eq!(h.completion_s.to_bits(), c.completion_s.to_bits(), "m={m}");
+            assert_eq!(h.events, c.events);
+            assert!(h.completion_s > 0.0);
+        }
     }
 }

@@ -516,6 +516,57 @@ fn scale_smoke_16x16_and_8x8x8_flow_sweep_points() {
 }
 
 #[test]
+#[cfg_attr(
+    debug_assertions,
+    ignore = "TPU-scale packet ground truth runs release-mode only (CI crosscheck step)"
+)]
+fn packet_ground_truth_at_tpu_scale_full_registry() {
+    // The calendar-queue + workspace overhaul makes packet-mode ground
+    // truth tractable at 256/512-node scale: the fluid model must track the
+    // batched packet engine for the FULL registry on the 16×16, 8×8×8, and
+    // 4×8×16 tori across the latency→bandwidth size range.
+    //
+    // Per-topology bounds are pinned from a full measurement sweep via the
+    // pysim mirror (tools/pysim, this container's toolchain-less protocol):
+    // worst observed rel was 0.370 on 16×16 (trivance-L @ 16 MiB — the
+    // lumpy long-route traffic the fluid model smooths), 0.100 on 8×8×8,
+    // and 0.283 on 4×8×16 (trivance-L @ 16 MiB again). Bounds leave slack
+    // for float drift, not for regressions.
+    let p = NetParams::default();
+    let cases: [(Vec<u32>, f64); 3] =
+        [(vec![16, 16], 0.45), (vec![8, 8, 8], 0.15), (vec![4, 8, 16], 0.35)];
+    for (dims, bound) in cases {
+        let t = Torus::new(&dims);
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Ok(b) = build(*algo, *variant, &t) else { continue };
+                let plan = SimPlan::build(&b.net, &t);
+                let scratch = SimScratch::new(&plan, &p);
+                for m in [4096u64, 1 << 20, 16 << 20] {
+                    let f = simulate_plan_scratch(&plan, &scratch, m, &p, SimMode::Flow);
+                    let k = simulate_plan_scratch(
+                        &plan,
+                        &scratch,
+                        m,
+                        &p,
+                        SimMode::Packet { mtu: 4096 },
+                    );
+                    assert!(k.completion_s > 0.0, "{algo:?} {variant:?} {dims:?} m={m}");
+                    let rel = (f.completion_s - k.completion_s).abs() / k.completion_s;
+                    assert!(
+                        rel < bound,
+                        "{algo:?} {variant:?} {dims:?} m={m}: flow {} vs packet {} \
+                         (rel {rel:.3} > {bound})",
+                        f.completion_s,
+                        k.completion_s
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
 fn asymmetric_direction_model_prices_directions_independently() {
     // NetModel::asymmetric_dims (up != down): degrading only the +1
     // direction must land strictly between the uniform fabric and the

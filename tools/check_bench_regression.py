@@ -1,0 +1,76 @@
+"""CI perf-smoke gate: compare a freshly generated BENCH_core.json against
+the checked-in baseline and fail on a >25% events/sec regression.
+
+Usage: check_bench_regression.py BASELINE NEW
+
+Rules (schema trivance.bench_core.v1):
+- no baseline file -> skip (exit 0): first run bootstraps the trajectory;
+- baseline engine != "rust" -> skip (exit 0): the initial checked-in
+  baseline is generated through the pysim mirror (engine "pysim-mirror")
+  and python wall clock is not comparable to release-mode rust. The gate
+  arms itself once a rust-engine baseline is committed;
+- otherwise every queue kind present in the baseline must stay within
+  25% of its baseline events/sec in the new record, and the new record's
+  queue kinds must agree on events (the bit-identity contract's shadow in
+  the trajectory file — the real assert runs inside run_core_bench).
+"""
+
+import json
+import os
+import sys
+
+THRESHOLD = 0.25
+
+
+def main():
+    if len(sys.argv) != 3:
+        print(f"usage: {sys.argv[0]} BASELINE NEW", file=sys.stderr)
+        return 2
+    base_path, new_path = sys.argv[1], sys.argv[2]
+    if not os.path.exists(base_path):
+        print(f"no baseline at {base_path} — skipping (first run bootstraps)")
+        return 0
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    for rec, name in ((base, base_path), (new, new_path)):
+        if rec.get("schema") != "trivance.bench_core.v1":
+            print(f"{name}: unexpected schema {rec.get('schema')!r}", file=sys.stderr)
+            return 2
+
+    events = {q["events"] for q in new["event_queue"]}
+    if len(events) > 1:
+        print(f"FAIL: queue kinds disagree on event count in {new_path}: {events}", file=sys.stderr)
+        return 1
+
+    if base.get("engine") != "rust":
+        print(
+            f"baseline engine is {base.get('engine')!r} (not 'rust') — "
+            "wall-clock not comparable, skipping the regression gate"
+        )
+        return 0
+
+    base_eps = {q["kind"]: q["events_per_s"] for q in base["event_queue"]}
+    new_eps = {q["kind"]: q["events_per_s"] for q in new["event_queue"]}
+    failed = False
+    for kind, b in sorted(base_eps.items()):
+        n = new_eps.get(kind)
+        if n is None:
+            print(f"FAIL: queue kind {kind!r} missing from {new_path}", file=sys.stderr)
+            failed = True
+            continue
+        delta = (n - b) / b
+        mark = "FAIL" if delta < -THRESHOLD else "ok  "
+        print(f"[{mark}] {kind}: {b:.3e} -> {n:.3e} events/s ({delta:+.1%})")
+        if delta < -THRESHOLD:
+            failed = True
+    if failed:
+        print(f"events/sec regressed by more than {THRESHOLD:.0%}", file=sys.stderr)
+        return 1
+    print("perf smoke: no events/sec regression beyond threshold")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

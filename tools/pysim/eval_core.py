@@ -1,0 +1,273 @@
+"""Hot-path engine overhaul evals: the calendar event queue vs the binary
+heap, mirrored from rust/src/sim/events.rs.
+
+1. queue micro-checks mirroring the events.rs unit tests (interleaved
+   push/pop agreement, day-rollover (t, seq) order, grow/shrink cycles,
+   zero-span FIFO bursts);
+2. heap-vs-calendar bit identity across the full registry, static plans
+   (ring9/27, 3x3, 8x8, 4x4x4 at 4 KiB / 256 KiB / 1 MiB);
+3. the same identity under dynamic timelines (flap / brownout presets,
+   StrandedError symmetric);
+4. op-count report for the BENCH_core workload (trivance-B 8x8, 1 MiB,
+   mtu 4096): pushes/pops/peak and calendar resizes + entries scanned
+   per pop (the O(1)-amortized claim's basis);
+5. with --emit-baseline PATH: write the pysim-provenance BENCH_core.json
+   (schema trivance.bench_core.v1, engine "pysim-mirror"). The CI
+   perf-smoke gate only compares events/sec between same-engine records,
+   so this baseline bootstraps the trajectory without gating on python
+   wall clock; reducer-kernel GB/s is rust-only and left empty here.
+"""
+
+import heapq
+import sys
+import time
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+fails = []
+
+
+def chk(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+# --- 1. queue micro-checks (mirror of events.rs tests) ---
+print("== calendar queue micro-checks ==")
+
+
+def times_400():
+    out = []
+    for i in range(400):
+        fi = float(i)
+        m = i % 4
+        if m == 0:
+            out.append(1e-6 * fi)
+        elif m == 1:
+            out.append(1e-6 * (fi % 7.0))
+        elif m == 2:
+            out.append(0.5 + 1e-3 * fi)
+        else:
+            out.append(1e-9 * fi * fi)
+    return out
+
+
+h = EventQueue("heap")
+c = EventQueue("calendar")
+agree = True
+popped = 0
+for i, t in enumerate(times_400()):
+    h.push(t, i)
+    c.push(t, i)
+    if i % 3 == 2:
+        agree = agree and h.pop() == c.pop()
+        popped += 1
+while True:
+    a, b = h.pop(), c.pop()
+    agree = agree and a == b
+    if a is None:
+        break
+    popped += 1
+chk("interleaved push/pop agreement (400 events)", agree and popped == 400)
+hs, cs = h.stats(), c.stats()
+chk(
+    "op counters agree across kinds",
+    (hs["pushes"], hs["pops"], hs["peak_len"]) == (cs["pushes"], cs["pops"], cs["peak_len"]),
+)
+chk("400 events outgrow 4 buckets (resizes > 0)", cs["resizes"] > 0, f"resizes={cs['resizes']}")
+
+# day-rollover: same-instant bursts around a boundary + far straggler +
+# late rewind; pops must follow (t, seq) exactly
+import struct
+
+
+def next_ulp(x):
+    return struct.unpack("<d", struct.pack("<q", struct.unpack("<q", struct.pack("<d", x))[0] + 1))[0]
+
+
+q = EventQueue("calendar")
+t0 = 64.0 * CAL_INIT_WIDTH
+t1 = next_ulp(t0)
+for i in range(12):
+    q.push(t0, i)
+    q.push(t1, 100 + i)
+q.push(1e3, 999)
+q.push(0.5 * t0, 1000)
+evs = []
+keys = []
+while True:
+    e = q.pop()
+    if e is None:
+        break
+    keys.append(e[:2])
+    evs.append(e[2])
+chk("day rollover: pops sorted by (t, seq)", keys == sorted(keys))
+chk(
+    "day rollover: rewind first, FIFO within instants, straggler last",
+    evs[0] == 1000 and evs[1:13] == list(range(12)) and evs[13:25] == list(range(100, 112)) and evs[-1] == 999,
+)
+
+# grow/shrink cycles stay exact
+q = EventQueue("calendar")
+ok = True
+for rnd in range(3):
+    for i in range(257):
+        q.push((i * 31.0 % 97.0) * 1e-5 + float(rnd), i)
+    ks = []
+    while True:
+        e = q.pop()
+        if e is None:
+            break
+        ks.append(e[:2])
+    ok = ok and len(ks) == 257 and ks == sorted(ks)
+chk("grow/shrink cycles stay exact", ok and q.stats()["resizes"] >= 6)
+
+# zero-span same-instant burst is pure FIFO
+q = EventQueue("calendar")
+for i in range(100):
+    q.push(2.5e-6, i)
+out = []
+while True:
+    e = q.pop()
+    if e is None:
+        break
+    out.append(e[2])
+chk("zero-span burst is FIFO by seq", out == list(range(100)))
+
+# --- 2. heap vs calendar across the registry, static plans ---
+print("\n== heap vs calendar: full registry, static (bit identity) ==")
+mismatches = 0
+cells = 0
+cal_resizes_total = 0
+for dims in [[9], [27], [3, 3], [8, 8], [4, 4, 4]]:
+    t = Torus(dims)
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            plan = Plan(b.net, t)
+            for m in [4096, 256 << 10, 1 << 20]:
+                kh, eh, sh = simulate_packet_batched_stats(plan, m, P, 4096, "heap")
+                kc, ec, sc = simulate_packet_batched_stats(plan, m, P, 4096, "calendar")
+                cells += 1
+                cal_resizes_total += sc["resizes"]
+                same = (
+                    kh == kc
+                    and eh == ec
+                    and sh["pushes"] == sc["pushes"]
+                    and sh["pops"] == sc["pops"]
+                    and sh["peak_len"] == sc["peak_len"]
+                )
+                if not same:
+                    mismatches += 1
+                    print(f"  MISMATCH {dims} {algo}-{variant} m={m}: {kh} vs {kc}")
+chk(f"static registry bit-identical ({cells} cells)", mismatches == 0)
+chk("calendar resized on real workloads", cal_resizes_total > 0, f"total resizes={cal_resizes_total}")
+
+# --- 3. heap vs calendar under dynamic timelines ---
+print("\n== heap vs calendar: dynamic timelines (bit identity) ==")
+mismatches = 0
+cells = 0
+for dims in [[9], [3, 3]]:
+    t = Torus(dims)
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            plan = Plan(b.net, t)
+            for m in [4096, 1 << 20]:
+                for name in ("flap", "brownout"):
+                    tl = dynamic_timeline(name, t, P, m)
+                    res = []
+                    for kind in ("heap", "calendar"):
+                        try:
+                            k, e, _ = simulate_packet_dyn_stats(plan, m, P, 4096, tl, kind)
+                            res.append((k, e))
+                        except StrandedError as exc:
+                            res.append(("stranded", exc.link, exc.step))
+                    cells += 1
+                    if res[0] != res[1]:
+                        mismatches += 1
+                        print(f"  MISMATCH {name} {dims} {algo}-{variant} m={m}: {res}")
+chk(f"dynamic registry bit-identical ({cells} cells)", mismatches == 0)
+
+# --- 4. op counts on the BENCH_core workload ---
+print("\n== BENCH_core workload op counts (trivance-B 8x8, 1 MiB, mtu 4096) ==")
+t88 = Torus([8, 8])
+b88 = build("trivance", "B", t88)
+plan88 = Plan(b88.net, t88)
+k, e, s = simulate_packet_batched_stats(plan88, 1 << 20, P, 4096, "calendar")
+print(
+    f"events={e} pushes={s['pushes']} pops={s['pops']} peak={s['peak_len']} "
+    f"resizes={s['resizes']} scanned={s['scanned']} ({s['scanned'] / max(s['pops'], 1):.2f}/pop)"
+)
+chk("queue fully drained (pushes == pops)", s["pushes"] == s["pops"])
+# scanned/pop is the calendar's cost model: near-constant when event times
+# spread, degrading toward O(cluster) when many events share an instant
+# (64 synchronized step events per round here). Reported, not bounded —
+# correctness never depends on it; BENCH_core.json tracks the trajectory.
+t27 = Torus([27])
+b27 = build("trivance", "L", t27)
+_, e27, s27 = simulate_packet_batched_stats(Plan(b27.net, t27), 1 << 20, P, 4096, "calendar")
+print(
+    f"ring27 trivance-L (sparser ties): events={e27} resizes={s27['resizes']} "
+    f"scanned={s27['scanned']} ({s27['scanned'] / max(s27['pops'], 1):.2f}/pop)"
+)
+
+
+# --- 5. optional: emit the pysim-provenance BENCH_core.json baseline ---
+def emit_baseline(path):
+    rows = []
+    for kind in ("heap", "calendar"):
+        wall = float("inf")
+        for _ in range(3):
+            s0 = time.perf_counter()
+            k2, e2, st = simulate_packet_batched_stats(plan88, 1 << 20, P, 4096, kind)
+            wall = min(wall, time.perf_counter() - s0)
+        rows.append((kind, e2, wall, st))
+    lines = [
+        "{",
+        '  "schema": "trivance.bench_core.v1",',
+        '  "engine": "pysim-mirror",',
+        '  "quick": false,',
+        f'  "generated_unix_s": {int(time.time())},',
+        '  "packet_workload": {"topo": [8, 8], "algo": "trivance", "variant": "B", '
+        '"size_bytes": 1048576, "mtu": 4096},',
+        '  "event_queue": [',
+    ]
+    for i, (kind, e2, wall, st) in enumerate(rows):
+        comma = "," if i + 1 < len(rows) else ""
+        lines.append(
+            f'    {{"kind": "{kind}", "events": {e2}, "wall_s": {wall:e}, '
+            f'"events_per_s": {e2 / wall:e}, "pushes": {st["pushes"]}, "pops": {st["pops"]}, '
+            f'"peak_len": {st["peak_len"]}, "resizes": {st["resizes"]}, '
+            f'"scanned": {st["scanned"]}}}{comma}'
+        )
+    lines += [
+        "  ],",
+        '  "reduce": {"elems": 4194304, "kernels": [',
+        "  ]},",
+        '  "sweep": null,',
+        '  "plan_cache": {"hits": 0, "misses": 0, "evictions": 0, "cached": 0, "cap": 1024}',
+        "}",
+        "",
+    ]
+    with open(path, "w") as f:
+        f.write("\n".join(lines))
+    print(f"\nwrote pysim-mirror baseline to {path}")
+
+
+if "--emit-baseline" in sys.argv:
+    emit_baseline(sys.argv[sys.argv.index("--emit-baseline") + 1])
+
+print()
+if fails:
+    print(f"{len(fails)} FAILURES: {fails}")
+    sys.exit(1)
+print("core-engine eval: heap and calendar queues are bit-interchangeable")

@@ -1331,37 +1331,191 @@ def simulate_packet_ref(plan, m_bytes, params, mtu):
     return completion, events
 
 
+# --------------------------------------------------- calendar event queue
+# Mirror of rust/src/sim/events.rs: an O(1)-amortized bucketed calendar
+# queue selectable in place of the binary heap. Pop order is the strict
+# (t, seq) total order — identical to heapq on the same push sequence —
+# so the queue kinds are bit-interchangeable; eval_core.py asserts it.
+# Keep the day arithmetic, resize thresholds, and rebuild width derivation
+# in exact lockstep with events.rs (same f64 expressions).
+
+CAL_MIN_BUCKETS = 4
+CAL_INIT_WIDTH = 1e-6  # one day ~ 1 us — the engines' natural scale
+CAL_MIN_WIDTH = 1e-12
+
+
+class CalendarQueue:
+    """buckets[d % nbuckets] holds every pending (t, seq, ev) whose day is
+    d, unsorted. Grows when occupancy exceeds 2/bucket, shrinks below 1/2
+    per bucket; each rebuild re-derives the day width from the pending span
+    (target ~2 events per day)."""
+
+    def __init__(self):
+        self.buckets = [[] for _ in range(CAL_MIN_BUCKETS)]
+        self.len = 0
+        self.width = CAL_INIT_WIDTH
+        self.cur_day = 0
+        self.resizes = 0
+        self.scanned = 0
+
+    def day(self, t):
+        return int(t / self.width)
+
+    def push(self, e):
+        d = self.day(e[0])
+        # an earlier-than-cursor push rewinds the cursor (mirror: events.rs)
+        if self.len == 0 or d < self.cur_day:
+            self.cur_day = d
+        self.buckets[d % len(self.buckets)].append(e)
+        self.len += 1
+        if self.len > 2 * len(self.buckets):
+            self._rebuild(len(self.buckets) * 2)
+
+    def pop(self):
+        if self.len == 0:
+            return None
+        nb = len(self.buckets)
+        for _ in range(nb):
+            b = self.cur_day % nb
+            i = self._min_of_day_in(b, self.cur_day)
+            if i is not None:
+                return self._take(b, i)
+            self.cur_day += 1
+        # a full lap found nothing: the earliest event is > nbuckets days
+        # out; find it directly and jump the cursor to its day
+        b, i, t = self._global_min()
+        self.cur_day = self.day(t)
+        return self._take(b, i)
+
+    def _min_of_day_in(self, b, d):
+        best = None
+        w = self.width
+        for i, e in enumerate(self.buckets[b]):
+            self.scanned += 1
+            if int(e[0] / w) != d:
+                continue
+            if best is None or e[:2] < best[0]:
+                best = (e[:2], i)
+        return None if best is None else best[1]
+
+    def _global_min(self):
+        best = None
+        for b, bucket in enumerate(self.buckets):
+            for i, e in enumerate(bucket):
+                self.scanned += 1
+                if best is None or e[:2] < best[0]:
+                    best = (e[:2], b, i)
+        key, b, i = best
+        return b, i, key[0]
+
+    def _take(self, b, i):
+        bucket = self.buckets[b]
+        e = bucket[i]
+        bucket[i] = bucket[-1]  # swap_remove: in-bucket order is irrelevant
+        bucket.pop()
+        self.len -= 1
+        if len(self.buckets) > CAL_MIN_BUCKETS and self.len * 2 < len(self.buckets):
+            self._rebuild(len(self.buckets) // 2)
+        return e
+
+    def _rebuild(self, nb):
+        nb = max(nb, CAL_MIN_BUCKETS)
+        self.resizes += 1
+        all_e = [e for b in self.buckets for e in b]
+        if all_e:
+            min_t = min(e[0] for e in all_e)
+            max_t = max(e[0] for e in all_e)
+            span = max_t - min_t
+            if span > 0.0:
+                self.width = max(span * 2.0 / len(all_e), CAL_MIN_WIDTH)
+            self.cur_day = int(min_t / self.width)
+        self.buckets = [[] for _ in range(nb)]
+        for e in all_e:
+            self.buckets[self.day(e[0]) % nb].append(e)
+
+
+class EventQueue:
+    """push/pop facade over heapq or CalendarQueue with op counters.
+    Mirror of sim::events::EventQueue (seq assignment included, so either
+    kind sees the identical (t, seq, ev) stream)."""
+
+    def __init__(self, kind="heap"):
+        if kind not in ("heap", "calendar"):
+            raise ValueError(f"unknown queue kind: {kind}")
+        self.heap = [] if kind == "heap" else None
+        self.cal = CalendarQueue() if kind == "calendar" else None
+        self.seq = 0
+        self.pushes = 0
+        self.pops = 0
+        self.peak_len = 0
+
+    def push(self, t, ev):
+        self.seq += 1
+        self.pushes += 1
+        if self.heap is not None:
+            heapq.heappush(self.heap, (t, self.seq, ev))
+            n = len(self.heap)
+        else:
+            self.cal.push((t, self.seq, ev))
+            n = self.cal.len
+        if n > self.peak_len:
+            self.peak_len = n
+
+    def pop(self):
+        if self.heap is not None:
+            e = heapq.heappop(self.heap) if self.heap else None
+        else:
+            e = self.cal.pop()
+        if e is not None:
+            self.pops += 1
+        return e
+
+    def stats(self):
+        return {
+            "pushes": self.pushes,
+            "pops": self.pops,
+            "peak_len": self.peak_len,
+            "resizes": self.cal.resizes if self.cal is not None else 0,
+            "scanned": self.cal.scanned if self.cal is not None else 0,
+        }
+
+
 # ------------------------------------------------ batched packet simulator
 # The overhauled engine: each message's packets on a link are one contiguous
 # busy interval; heap traffic is O(messages x hops). Must stay in sync with
 # rust/src/sim/packet.rs.
 
 
-def simulate_packet_batched(plan, m_bytes, params, mtu):
+def simulate_packet_batched(plan, m_bytes, params, mtu, queue="heap"):
+    completion, events, _ = simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue)
+    return completion, events
+
+
+def simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue="heap"):
+    """As simulate_packet_batched but also returns the queue op counters.
+    Mirror of packet::simulate_packet_plan_queue."""
     n, nsteps = plan.n, plan.nsteps
     if nsteps == 0:
-        return 0.0, 0
+        return 0.0, 0, EventQueue(queue).stats()
     caps = link_caps(plan, params)
     hops = link_hop_lat(plan, params)
 
     received = [0] * (n * nsteps)
     entered = [-1] * n
     free_at = [0.0] * plan.num_links
-    heap = []
-    seq = 0
-
-    def push(t, ev):
-        nonlocal seq
-        seq += 1
-        heapq.heappush(heap, (t, seq, ev))
+    q = EventQueue(queue)
+    push = q.push
 
     for r in range(n):
         push(params["alpha"], ("step", r, 0))
 
     completion = 0.0
     events = 0
-    while heap:
-        now, _, ev = heapq.heappop(heap)
+    while True:
+        e = q.pop()
+        if e is None:
+            break
+        now, _, ev = e
         events += 1
         if ev[0] == "step":
             _, node, step = ev
@@ -1411,7 +1565,7 @@ def simulate_packet_batched(plan, m_bytes, params, mtu):
                     # outruns the bytes, even across rate changes).
                     head = min(total, float(mtu))
                     push(start + head / caps[l] + hops[l], ("batch", mi, hop + 1, tail_ready))
-    return completion, events
+    return completion, events, q.stats()
 
 
 # ------------------------------------------------------- dynamic fabrics
@@ -1689,14 +1843,20 @@ def _hop_at(track, hop0, t):
     return h
 
 
-def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline):
+def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline, queue="heap"):
+    completion, events, _ = simulate_packet_dyn_stats(plan, m_bytes, params, mtu, timeline, queue)
+    return completion, events
+
+
+def simulate_packet_dyn_stats(plan, m_bytes, params, mtu, timeline, queue="heap"):
     """Batched packet engine under a timeline: busy intervals split at
-    epoch boundaries. Mirror of packet::simulate_packet_plan_timeline."""
+    epoch boundaries. Mirror of packet::simulate_packet_plan_timeline_queue
+    (op counters included)."""
     if timeline.is_empty():
-        return simulate_packet_batched(plan, m_bytes, params, mtu)
+        return simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue)
     n, nsteps = plan.n, plan.nsteps
     if nsteps == 0:
-        return 0.0, 0
+        return 0.0, 0, EventQueue(queue).stats()
     caps = link_caps(plan, params)
     hops = link_hop_lat(plan, params)
     tracks = _build_tracks(plan, params, timeline)
@@ -1704,21 +1864,19 @@ def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline):
     received = [0] * (n * nsteps)
     entered = [-1] * n
     free_at = [0.0] * plan.num_links
-    heap = []
-    seq = 0
-
-    def push(t, ev):
-        nonlocal seq
-        seq += 1
-        heapq.heappush(heap, (t, seq, ev))
+    q = EventQueue(queue)
+    push = q.push
 
     for r in range(n):
         push(params["alpha"], ("step", r, 0))
 
     completion = 0.0
     events = 0
-    while heap:
-        now, _, ev = heapq.heappop(heap)
+    while True:
+        e = q.pop()
+        if e is None:
+            break
+        now, _, ev = e
         events += 1
         if ev[0] == "step":
             _, node, step = ev
@@ -1763,7 +1921,7 @@ def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline):
                         head_end + _hop_at(tracks[l], hops[l], head_end),
                         ("batch", mi, hop + 1, tail_ready),
                     )
-    return completion, events
+    return completion, events, q.stats()
 
 
 # --------------------------------------------------- fault-aware rewriting
