@@ -13,6 +13,8 @@
 //! trivance tune     [--topo 8x8]... [--quick] [--out tuner_table.json]
 //! trivance recommend --topo 8x8 --size 1MiB [--scenario uniform]
 //! trivance replay   [--topo 8x8] [--quick] [--table tuner_table.json]
+//! trivance metrics  [--topo 4x4x4] [--quick] [--out METRICS.json]
+//! trivance trace    [--topo 4x4x4] [--quick] [--out TRACE.json]
 //! ```
 
 use crate::algo::{build, Algo, Variant};
@@ -148,6 +150,10 @@ USAGE:
   trivance replay   [--topo 8x8] [--quick] [--calls 160] [--table tuner_table.json]
                     [--threads N] [--bw-gbps 800] [--alpha-us 1.5]
                     [--mode flow|packet] [--mtu 4096] [--no-plan-cache]
+  trivance metrics  [--topo 4x4x4] [--size 1MiB] [--quick] [--out METRICS.json]
+                    [--bw-gbps 800] [--alpha-us 1.5] [--mtu 4096] [--no-plan-cache]
+  trivance trace    [--topo 4x4x4] [--size 1MiB] [--quick] [--out TRACE.json]
+                    [--bw-gbps 800] [--alpha-us 1.5] [--mtu 4096] [--no-plan-cache]
   trivance validate --topo 27 [--algo A]
   trivance verify   [--topo 9]... [--all] [--out VERIFY_report.json]
                     [--mutants] [--numeric [--algo A] [--block-len 8] [--pjrt]
@@ -211,6 +217,19 @@ writes them to BENCH_core.json; --quick shrinks the workload for the CI
 perf-smoke job. verify --numeric --reducer vector runs the end-to-end
 check through the vectorized reduction kernel (bit-identical to scalar).
 
+metrics and trace run one small deterministic observed workload — both
+engines over Trivance (static plus the flap and brownout timelines), one
+executor run, and the seeded two-fault online response — with
+observability on. metrics exports the metrics-registry delta as
+trivance.metrics.v1 JSON (engine/queue/water-filler counters, plan-cache
+traffic, the calendar queue's scanned-per-pop histogram); trace installs
+the flight recorder and exports Chrome trace-event JSON
+(trivance.trace.v1, loadable in Perfetto or chrome://tracing) with
+per-link congestion telemetry rows sampled from the packet engine's busy
+intervals. Observability is off by default everywhere else, and
+instrumented runs are bit-identical to uninstrumented ones (pinned in
+rust/tests/obs.rs).
+
 IDs: table1 table2 fig6a fig6b fig7a fig7b fig8 fig9 fig10
 Algorithms: trivance bruck bruck-unidir swing recdoub bucket
 ";
@@ -240,6 +259,8 @@ fn run(argv: Vec<String>) -> Result<(), String> {
         "recommend" => recommend_cmd(&args),
         "replay" => replay_cmd(&args),
         "simulate" => simulate_cmd(&args),
+        "metrics" => metrics_cmd(&args),
+        "trace" => trace_cmd(&args),
         "validate" => validate_cmd(&args),
         "verify" => verify_cmd(&args),
         "pattern" => pattern_cmd(&args),
@@ -281,17 +302,139 @@ fn apply_engine_flags(args: &Args) -> Result<(), String> {
     Ok(())
 }
 
+/// The plan-cache summary line, as a thin view over the metrics registry:
+/// [`crate::obs::metrics::snapshot`] injects the cache's state as
+/// `plan_cache.*` counters/gauges, and this renders exactly the line the
+/// CLI has always printed from those.
 fn plan_cache_stats() -> String {
-    let c = crate::sim::PlanCache::global();
+    let s = crate::obs::metrics::snapshot();
+    let cap = s.gauge("plan_cache.cap").unwrap_or(0.0) as usize;
     format!(
         "plan cache: {} hits / {} misses / {} evictions, {} plans cached (cap {}){}",
-        c.hits(),
-        c.misses(),
-        c.evictions(),
-        c.len(),
-        if c.cap() == 0 { "unbounded".to_string() } else { c.cap().to_string() },
-        if c.is_enabled() { "" } else { " (disabled)" }
+        s.counter("plan_cache.hits"),
+        s.counter("plan_cache.misses"),
+        s.counter("plan_cache.evictions"),
+        s.gauge("plan_cache.len").unwrap_or(0.0) as usize,
+        if cap == 0 { "unbounded".to_string() } else { cap.to_string() },
+        if s.gauge("plan_cache.enabled") == Some(0.0) { " (disabled)" } else { "" }
     )
+}
+
+/// The small deterministic workload `trivance metrics` / `trivance trace`
+/// observe: both engines over Trivance-L (static plus every transient
+/// dynamic preset — flap and brownout), one executor run, and the seeded
+/// two-fault online response. Touches every instrumented subsystem.
+fn observed_workload(torus: &Torus, m: u64, params: &NetParams, mtu: u32) -> Result<(), String> {
+    use crate::harness::scenarios::{dynamic_presets, two_fault_events};
+    use crate::net::NetModel;
+    use crate::schedule::online::{respond, step_time_estimates, Action};
+    use crate::sim::{simulate_plan_scratch, simulate_plan_timeline, SimPlan, SimScratch};
+
+    let b = build(Algo::Trivance, Variant::Latency, torus).map_err(|e| e.to_string())?;
+    let plan = SimPlan::build(&b.net, torus);
+    let scratch = SimScratch::new(&plan, params);
+    let modes = [SimMode::Flow, SimMode::Packet { mtu }];
+    for mode in modes {
+        simulate_plan_scratch(&plan, &scratch, m, params, mode);
+    }
+    for sc in dynamic_presets().iter().filter(|s| s.fault(torus).is_none()) {
+        let tl = sc.timeline(torus, params, m);
+        for mode in modes {
+            simulate_plan_timeline(&plan, &scratch, m, params, mode, &tl)
+                .map_err(|e| format!("scenario {}: {e}", sc.name))?;
+        }
+    }
+    // the online controller's FaultEvent → decision → outcome chain
+    let model = NetModel::uniform(torus);
+    let ends = step_time_estimates(&b.net, &model, m, params);
+    let events = two_fault_events(torus, &ends);
+    respond(&b, &model, &events, m, params, |_, _| Action::Rewrite)?;
+    // one executor run for the reducer-call counters
+    verify_allreduce(&b.exec, 4, 42, &NativeReducer);
+    Ok(())
+}
+
+/// `trivance metrics`: run the observed workload and export the metrics
+/// registry delta as `trivance.metrics.v1` JSON.
+fn metrics_cmd(args: &Args) -> Result<(), String> {
+    apply_engine_flags(args)?;
+    let quick = args.has("quick");
+    let torus = match args.get("topo") {
+        Some(t) => parse_topo(t)?,
+        None if quick => Torus::new(&[3, 3]),
+        None => Torus::new(&[4, 4, 4]),
+    };
+    let m = args
+        .get("size")
+        .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --size {s:?}")))
+        .transpose()?
+        .unwrap_or(if quick { 64 << 10 } else { 1 << 20 });
+    let mtu: u32 = args
+        .get("mtu")
+        .map(|s| s.parse().map_err(|e| format!("bad --mtu: {e}")))
+        .transpose()?
+        .unwrap_or(4096);
+    let params = net_params(args)?;
+    let out = args.get("out").unwrap_or("METRICS.json");
+
+    let s0 = crate::obs::metrics::snapshot();
+    observed_workload(&torus, m, &params, mtu)?;
+    let delta = crate::obs::metrics::snapshot().diff(&s0);
+    std::fs::write(out, delta.to_json()).map_err(|e| format!("writing {out}: {e}"))?;
+
+    println!(
+        "observed workload on {:?} ({} nodes), {}:",
+        torus.dims(),
+        torus.n(),
+        fmt::bytes(m)
+    );
+    for (name, v) in &delta.counters {
+        println!("  {name} = {v}");
+    }
+    for (name, h) in &delta.histograms {
+        println!("  {name} ~ mean {:.3} over {} observations", h.mean(), h.count);
+    }
+    println!("wrote {out}; {}", plan_cache_stats());
+    Ok(())
+}
+
+/// `trivance trace`: run the observed workload under the flight recorder
+/// and export Chrome trace-event JSON (`trivance.trace.v1`).
+fn trace_cmd(args: &Args) -> Result<(), String> {
+    apply_engine_flags(args)?;
+    let quick = args.has("quick");
+    let torus = match args.get("topo") {
+        Some(t) => parse_topo(t)?,
+        None if quick => Torus::new(&[3, 3]),
+        None => Torus::new(&[4, 4, 4]),
+    };
+    let m = args
+        .get("size")
+        .map(|s| fmt::parse_size(s).ok_or_else(|| format!("bad --size {s:?}")))
+        .transpose()?
+        .unwrap_or(if quick { 64 << 10 } else { 1 << 20 });
+    let mtu: u32 = args
+        .get("mtu")
+        .map(|s| s.parse().map_err(|e| format!("bad --mtu: {e}")))
+        .transpose()?
+        .unwrap_or(4096);
+    let params = net_params(args)?;
+    let out = args.get("out").unwrap_or("TRACE.json");
+
+    let recorder = std::sync::Arc::new(crate::obs::trace::Recorder::new());
+    let guard = crate::obs::install(recorder.clone());
+    let run = observed_workload(&torus, m, &params, mtu);
+    drop(guard);
+    run?;
+    recorder.validate().map_err(|e| format!("trace failed self-validation: {e}"))?;
+    std::fs::write(out, recorder.to_chrome_json()).map_err(|e| format!("writing {out}: {e}"))?;
+    println!(
+        "wrote {out}: {} trace events, {} link-telemetry rows (load in Perfetto \
+         or chrome://tracing)",
+        recorder.num_events(),
+        recorder.samples().len()
+    );
+    Ok(())
 }
 
 fn figures(args: &Args) -> Result<(), String> {
@@ -489,6 +632,20 @@ fn bench_sweep_cmd(args: &Args) -> Result<(), String> {
         "build {:.3}s + sim {:.3}s = {:.3}s wall ({} threads); wrote {out} and {core_out}",
         timing.build_wall_s, timing.sim_wall_s, wall, timing.threads
     );
+    // per-phase metrics-registry deltas (what each phase actually did)
+    let phase_line = |name: &str, snap: &crate::obs::metrics::Snapshot| {
+        format!(
+            "{name} phase: plan cache {} hits / {} misses, {} flow sims, {} packet sims, \
+             {} queue events",
+            snap.counter("plan_cache.hits"),
+            snap.counter("plan_cache.misses"),
+            snap.counter("flow.sims"),
+            snap.counter("packet.sims"),
+            snap.counter("flow.events") + snap.counter("packet.events"),
+        )
+    };
+    println!("{}", phase_line("build", &timing.build_metrics));
+    println!("{}", phase_line("sim", &timing.sim_metrics));
     println!("{}", plan_cache_stats());
     Ok(())
 }

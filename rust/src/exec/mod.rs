@@ -140,19 +140,30 @@ struct Atom {
     data: Vec<f32>,
 }
 
+/// Reducer-call totals for one [`run_allreduce`]: plain local integers
+/// bumped alongside each dispatch, flushed to the `exec.reduce.*` metrics
+/// once per run — the observability plane never touches the f32 data.
+#[derive(Default)]
+struct ReduceCounts {
+    add2: u64,
+    add3: u64,
+}
+
 /// Sum a list of vectors with the reducer, preferring 3-way joint
 /// reductions (the Trivance fast path). Accumulates in place via the
 /// `_assign` face — one allocation (the initial clone) per call, and the
 /// exact left-to-right association the seed used: `((p0 + p1) + p2) + …`.
-fn sum_all(reducer: &dyn Reducer, parts: &[&Vec<f32>]) -> Vec<f32> {
+fn sum_all(reducer: &dyn Reducer, parts: &[&Vec<f32>], counts: &mut ReduceCounts) -> Vec<f32> {
     assert!(!parts.is_empty());
     let mut acc: Vec<f32> = parts[0].clone();
     let mut i = 1;
     while i < parts.len() {
         if i + 1 < parts.len() {
+            counts.add3 += 1;
             reducer.add3_assign(&mut acc, parts[i], parts[i + 1]);
             i += 2;
         } else {
+            counts.add2 += 1;
             reducer.add2_assign(&mut acc, parts[i]);
             i += 1;
         }
@@ -177,6 +188,8 @@ pub fn run_allreduce(
     for (r, v) in inputs.iter().enumerate() {
         assert_eq!(v.len(), nb * block_len, "input {r} length");
     }
+
+    let mut counts = ReduceCounts::default();
 
     // state[node][block] = atoms
     let mut state: Vec<Vec<Vec<Atom>>> = inputs
@@ -223,7 +236,7 @@ pub fn run_allreduce(
                                     snd.to,
                                     piece.contrib
                                 );
-                                let data = sum_all(reducer, &parts);
+                                let data = sum_all(reducer, &parts, &mut counts);
                                 deliveries.push((
                                     snd.to as usize,
                                     b as usize,
@@ -240,7 +253,7 @@ pub fn run_allreduce(
                                     snd.to
                                 );
                                 let parts: Vec<&Vec<f32>> = cell.iter().map(|a| &a.data).collect();
-                                let data = sum_all(reducer, &parts);
+                                let data = sum_all(reducer, &parts, &mut counts);
                                 deliveries.push((
                                     snd.to as usize,
                                     b as usize,
@@ -264,7 +277,7 @@ pub fn run_allreduce(
     }
 
     // Collapse: every node, every block must have full coverage.
-    state
+    let outputs: Vec<Vec<f32>> = state
         .into_iter()
         .enumerate()
         .map(|(r, node)| {
@@ -276,11 +289,18 @@ pub fn run_allreduce(
                     "node {r} block {b}: incomplete coverage"
                 );
                 let parts: Vec<&Vec<f32>> = cell.iter().map(|a| &a.data).collect();
-                out.extend_from_slice(&sum_all(reducer, &parts));
+                out.extend_from_slice(&sum_all(reducer, &parts, &mut counts));
             }
             out
         })
-        .collect()
+        .collect();
+
+    crate::obs::metrics::counters_add(&[
+        ("exec.runs", 1),
+        ("exec.reduce.add2_calls", counts.add2),
+        ("exec.reduce.add3_calls", counts.add3),
+    ]);
+    outputs
 }
 
 /// Build random inputs, run the schedule, and compare every node's result

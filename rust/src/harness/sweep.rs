@@ -281,6 +281,12 @@ pub struct SweepTiming {
     pub sim_wall_s: f64,
     /// Per-point wall seconds, `[size_idx][algo_idx]`.
     pub point_wall_s: Vec<Vec<f64>>,
+    /// Metrics-registry delta over the build phase (plan-cache traffic —
+    /// everything the registry accumulated while plans compiled).
+    pub build_metrics: crate::obs::metrics::Snapshot,
+    /// Metrics-registry delta over the grid-simulation phase (engine and
+    /// queue counters for exactly this sweep's simulations).
+    pub sim_metrics: crate::obs::metrics::Snapshot,
 }
 
 impl SweepTiming {
@@ -313,12 +319,24 @@ pub fn run_sweep_timed(
     params: &NetParams,
     threads: usize,
 ) -> (Sweep, SweepTiming) {
+    let snap_start = crate::obs::metrics::snapshot();
     let t_build = Instant::now();
+    if crate::obs::tracing() {
+        crate::obs::with_sink(|s| {
+            s.span_begin(crate::obs::PID_HARNESS, crate::obs::cur_tid(), "sweep_build", 0.0);
+        });
+    }
     let built = build_all(torus, algos);
     // Hoisted per-(plan, params) scratch: built once here, shared by every
     // grid point (previously rebuilt inside each simulate_plan call).
     let scratches = build_scratches(&built, params);
     let build_wall_s = t_build.elapsed().as_secs_f64();
+    let snap_built = crate::obs::metrics::snapshot();
+    if crate::obs::tracing() {
+        crate::obs::with_sink(|s| {
+            s.span_end(crate::obs::PID_HARNESS, crate::obs::cur_tid(), "sweep_build", build_wall_s);
+        });
+    }
 
     // One task per (size, algo) grid point through the shared grid engine;
     // the per-point work (simulating each variant and taking the min) is
@@ -326,6 +344,11 @@ pub fn run_sweep_timed(
     // thread count.
     let threads_used = par::resolve_threads(threads).min((sizes.len() * built.len()).max(1));
     let t_sim = Instant::now();
+    if crate::obs::tracing() {
+        crate::obs::with_sink(|s| {
+            s.span_begin(crate::obs::PID_HARNESS, crate::obs::cur_tid(), "sweep_sim", build_wall_s);
+        });
+    }
     let grid: Vec<Vec<Vec<(BestPoint, f64)>>> =
         eval_grid(1, sizes.len(), built.len(), threads, |_, si, ai| {
             let t0 = Instant::now();
@@ -333,6 +356,17 @@ pub fn run_sweep_timed(
             (bp, t0.elapsed().as_secs_f64())
         });
     let sim_wall_s = t_sim.elapsed().as_secs_f64();
+    let snap_simmed = crate::obs::metrics::snapshot();
+    if crate::obs::tracing() {
+        crate::obs::with_sink(|s| {
+            s.span_end(
+                crate::obs::PID_HARNESS,
+                crate::obs::cur_tid(),
+                "sweep_sim",
+                build_wall_s + sim_wall_s,
+            );
+        });
+    }
 
     let mut points: Vec<Vec<BestPoint>> = Vec::with_capacity(sizes.len());
     let mut point_wall_s: Vec<Vec<f64>> = Vec::with_capacity(sizes.len());
@@ -348,7 +382,14 @@ pub fn run_sweep_timed(
         algos: built.iter().map(|b| b.algo).collect(),
         points,
     };
-    let timing = SweepTiming { threads: threads_used, build_wall_s, sim_wall_s, point_wall_s };
+    let timing = SweepTiming {
+        threads: threads_used,
+        build_wall_s,
+        sim_wall_s,
+        point_wall_s,
+        build_metrics: snap_built.diff(&snap_start),
+        sim_metrics: snap_simmed.diff(&snap_built),
+    };
     (sweep, timing)
 }
 
@@ -457,6 +498,21 @@ pub fn bench_json(
     out.push_str(&format!("  \"build_wall_s\": {:e},\n", timing.build_wall_s));
     out.push_str(&format!("  \"sim_wall_s\": {:e},\n", timing.sim_wall_s));
     out.push_str(&format!("  \"total_wall_s\": {:e},\n", timing.total_wall_s()));
+    // Additive in v2: per-phase metrics-registry counter deltas (what the
+    // build and sim phases did, from obs::metrics snapshots).
+    let counters_json = |snap: &crate::obs::metrics::Snapshot| {
+        let rows: Vec<String> = snap
+            .counters
+            .iter()
+            .map(|(k, v)| format!("\"{}\": {}", crate::util::json::escape(k), v))
+            .collect();
+        format!("{{{}}}", rows.join(", "))
+    };
+    out.push_str(&format!(
+        "  \"phase_metrics\": {{\"build\": {}, \"sim\": {}}},\n",
+        counters_json(&timing.build_metrics),
+        counters_json(&timing.sim_metrics),
+    ));
     let sizes: Vec<String> = sweep.sizes.iter().map(|s| s.to_string()).collect();
     out.push_str(&format!("  \"sizes\": [{}],\n", sizes.join(", ")));
     let algos: Vec<String> =

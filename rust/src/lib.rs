@@ -51,6 +51,13 @@
 //!   bit-identical results through one shared grid engine
 //!   ([`harness::sweep::eval_grid`]), and `trivance bench-sweep` emits the
 //!   `BENCH_sweep.json` performance record.
+//! * [`obs`] — unified observability: a process-wide metrics registry
+//!   (counters / gauges / histograms with snapshot-and-diff,
+//!   `trivance metrics`), a span/event flight recorder exporting Chrome
+//!   trace-event JSON (`trivance trace`, Perfetto-loadable), and per-link
+//!   congestion telemetry sampled from the packet engine's busy intervals
+//!   — all behind an [`obs::Sink`] that is off (and bit-identically
+//!   invisible) by default.
 //! * [`tuner`] — offline sweeps distilled into servable per-`(topology,
 //!   scenario, size)` algorithm-selection tables
 //!   ([`tuner::DecisionTable`], O(1) lookups, NetModel-fingerprint
@@ -74,6 +81,7 @@ pub mod sim;
 pub mod verify;
 pub mod exec;
 pub mod runtime;
+pub mod obs;
 pub mod harness;
 pub mod tuner;
 pub mod cli;

@@ -1,0 +1,343 @@
+//! Process-wide metrics registry: counters, gauges, and power-of-two
+//! histograms behind one snapshot-and-diff API with hand-rolled JSON
+//! export (schema `trivance.metrics.v1`; no metrics crate in the vendored
+//! registry).
+//!
+//! Counters are monotone `u64` totals flushed by the engines once per
+//! simulation (integer-only — metric accounting can never perturb the f64
+//! simulation arithmetic). Because they are cumulative process-wide,
+//! every multi-phase consumer reports *deltas*: take a [`snapshot`] at
+//! each phase boundary and [`Snapshot::diff`] adjacent pairs
+//! (`harness::sweep` does this around its build/sim phases). The
+//! [`crate::sim::cache::PlanCache`] counters are injected at snapshot
+//! time from the cache's own atomics, so its hit/miss/evict totals diff
+//! the same way without double-maintaining state.
+//!
+//! Naming convention: `subsystem.object.event`, e.g.
+//! `packet.queue.calendar.scanned` or `online.rewrites`. The calendar
+//! queue's `scanned/pop` ratio — the PR 8 honest finding — is exported
+//! per simulation as the histogram `packet.queue.calendar.scanned_per_pop`.
+
+use std::collections::BTreeMap;
+use std::sync::{Mutex, PoisonError};
+
+/// Histogram bucket count: bucket `i` counts observations in
+/// `(2^(i-1), 2^i]` (bucket 0: `<= 1`), with the last bucket absorbing
+/// everything larger.
+const HIST_BUCKETS: usize = 32;
+
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Histogram {
+    /// Per-bucket observation counts; bucket `i` has upper edge `2^i`.
+    pub buckets: Vec<u64>,
+    pub count: u64,
+    pub sum: f64,
+}
+
+impl Histogram {
+    fn new() -> Histogram {
+        Histogram { buckets: vec![0; HIST_BUCKETS], count: 0, sum: 0.0 }
+    }
+
+    fn observe(&mut self, v: f64) {
+        let mut i = 0usize;
+        let mut edge = 1.0f64;
+        while v > edge && i + 1 < HIST_BUCKETS {
+            edge *= 2.0;
+            i += 1;
+        }
+        self.buckets[i] += 1;
+        self.count += 1;
+        self.sum += v;
+    }
+
+    /// Mean observation (`NaN`-free: 0 when empty).
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+#[derive(Default)]
+struct Registry {
+    counters: BTreeMap<String, u64>,
+    gauges: BTreeMap<String, f64>,
+    histograms: BTreeMap<String, Histogram>,
+}
+
+static REGISTRY: Mutex<Option<Registry>> = Mutex::new(None);
+
+fn with_registry<R>(f: impl FnOnce(&mut Registry) -> R) -> R {
+    let mut guard = REGISTRY.lock().unwrap_or_else(PoisonError::into_inner);
+    f(guard.get_or_insert_with(Registry::default))
+}
+
+/// Add `delta` to counter `name` (created at 0 on first touch).
+pub fn counter_add(name: &str, delta: u64) {
+    counters_add(&[(name, delta)]);
+}
+
+/// Batch counter update under one registry lock — the per-simulation
+/// flush path the engines use.
+pub fn counters_add(pairs: &[(&str, u64)]) {
+    with_registry(|r| {
+        for &(name, delta) in pairs {
+            match r.counters.get_mut(name) {
+                Some(c) => *c = c.saturating_add(delta),
+                None => {
+                    r.counters.insert(name.to_string(), delta);
+                }
+            }
+        }
+    });
+}
+
+/// Set gauge `name` to `v` (last-write-wins).
+pub fn gauge_set(name: &str, v: f64) {
+    with_registry(|r| {
+        r.gauges.insert(name.to_string(), v);
+    });
+}
+
+/// Record one observation into histogram `name`.
+pub fn observe(name: &str, v: f64) {
+    with_registry(|r| {
+        r.histograms.entry(name.to_string()).or_insert_with(Histogram::new).observe(v);
+    });
+}
+
+/// Clear every metric (tests and explicit CLI resets only — the registry
+/// is otherwise cumulative for the process lifetime).
+pub fn reset() {
+    let mut guard = REGISTRY.lock().unwrap_or_else(PoisonError::into_inner);
+    *guard = None;
+}
+
+/// A point-in-time copy of the registry, with the [`PlanCache`] state
+/// injected (counters `plan_cache.hits/misses/evictions`, gauges
+/// `plan_cache.len/cap/enabled`) so cache activity diffs per phase like
+/// everything else.
+///
+/// [`PlanCache`]: crate::sim::cache::PlanCache
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub counters: BTreeMap<String, u64>,
+    pub gauges: BTreeMap<String, f64>,
+    pub histograms: BTreeMap<String, Histogram>,
+}
+
+/// Snapshot the registry now.
+pub fn snapshot() -> Snapshot {
+    let mut snap = with_registry(|r| Snapshot {
+        counters: r.counters.clone(),
+        gauges: r.gauges.clone(),
+        histograms: r.histograms.clone(),
+    });
+    let c = crate::sim::cache::PlanCache::global();
+    snap.counters.insert("plan_cache.hits".to_string(), c.hits());
+    snap.counters.insert("plan_cache.misses".to_string(), c.misses());
+    snap.counters.insert("plan_cache.evictions".to_string(), c.evictions());
+    snap.gauges.insert("plan_cache.len".to_string(), c.len() as f64);
+    snap.gauges.insert("plan_cache.cap".to_string(), c.cap() as f64);
+    snap.gauges.insert(
+        "plan_cache.enabled".to_string(),
+        if c.is_enabled() { 1.0 } else { 0.0 },
+    );
+    snap
+}
+
+impl Snapshot {
+    /// Counter value (0 when absent — diffs drop untouched counters).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters.get(name).copied().unwrap_or(0)
+    }
+
+    /// Gauge value, if set.
+    pub fn gauge(&self, name: &str) -> Option<f64> {
+        self.gauges.get(name).copied()
+    }
+
+    /// The delta `self − earlier`: counters subtract (saturating, so a
+    /// reset between snapshots yields 0 rather than wrap), histograms
+    /// subtract per bucket, gauges keep `self`'s value (a gauge is a
+    /// level, not a rate). Counters that did not move are dropped so a
+    /// phase report only names what the phase did.
+    pub fn diff(&self, earlier: &Snapshot) -> Snapshot {
+        let mut counters = BTreeMap::new();
+        for (name, &v) in &self.counters {
+            let d = v.saturating_sub(earlier.counter(name));
+            if d > 0 {
+                counters.insert(name.clone(), d);
+            }
+        }
+        let mut histograms = BTreeMap::new();
+        for (name, h) in &self.histograms {
+            let mut d = h.clone();
+            if let Some(e) = earlier.histograms.get(name) {
+                for (b, eb) in d.buckets.iter_mut().zip(&e.buckets) {
+                    *b = b.saturating_sub(*eb);
+                }
+                d.count = d.count.saturating_sub(e.count);
+                d.sum -= e.sum;
+            }
+            if d.count > 0 {
+                histograms.insert(name.clone(), d);
+            }
+        }
+        Snapshot { counters, gauges: self.gauges.clone(), histograms }
+    }
+
+    /// Render as `trivance.metrics.v1` JSON (hand-rolled; floats via `{:e}`
+    /// so the output is valid JSON and round-trips through
+    /// [`crate::util::json::parse`]).
+    pub fn to_json(&self) -> String {
+        use crate::util::json::escape;
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"trivance.metrics.v1\",\n");
+        out.push_str("  \"counters\": {");
+        let mut first = true;
+        for (name, v) in &self.counters {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\n    \"{}\": {}", escape(name), v));
+        }
+        out.push_str(if first { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"gauges\": {");
+        let mut first = true;
+        for (name, v) in &self.gauges {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!("\n    \"{}\": {:e}", escape(name), v));
+        }
+        out.push_str(if first { "},\n" } else { "\n  },\n" });
+        out.push_str("  \"histograms\": {");
+        let mut first = true;
+        for (name, h) in &self.histograms {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    \"{}\": {{\"count\": {}, \"sum\": {:e}, \"buckets\": [",
+                escape(name),
+                h.count,
+                h.sum
+            ));
+            let mut first_b = true;
+            for (i, &count) in h.buckets.iter().enumerate() {
+                if count == 0 {
+                    continue;
+                }
+                if !first_b {
+                    out.push_str(", ");
+                }
+                first_b = false;
+                out.push_str(&format!("{{\"le\": {:e}, \"count\": {count}}}", 2f64.powi(i as i32)));
+            }
+            out.push_str("]}");
+        }
+        out.push_str(if first { "}\n" } else { "\n  }\n" });
+        out.push_str("}\n");
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate_and_diff() {
+        counter_add("test.metrics.a", 3);
+        let s0 = snapshot();
+        counter_add("test.metrics.a", 2);
+        counters_add(&[("test.metrics.b", 5), ("test.metrics.a", 1)]);
+        let s1 = snapshot();
+        let d = s1.diff(&s0);
+        assert_eq!(d.counter("test.metrics.a"), 3);
+        assert_eq!(d.counter("test.metrics.b"), 5);
+        // untouched counters are dropped from the delta
+        assert!(!d.counters.contains_key("test.metrics.untouched"));
+    }
+
+    #[test]
+    fn gauges_keep_latest_value_in_diff() {
+        gauge_set("test.metrics.g", 2.5);
+        let s0 = snapshot();
+        gauge_set("test.metrics.g", 7.25);
+        let d = snapshot().diff(&s0);
+        assert_eq!(d.gauge("test.metrics.g"), Some(7.25));
+    }
+
+    #[test]
+    fn histogram_buckets_and_diff() {
+        let name = "test.metrics.hist";
+        observe(name, 0.5); // bucket 0 (<= 1)
+        observe(name, 3.0); // bucket 2 (<= 4)
+        observe(name, 1e30); // overflow bucket
+        let s0 = snapshot();
+        let h = &s0.histograms[name];
+        assert_eq!(h.count, 3);
+        assert_eq!(h.buckets[0], 1);
+        assert_eq!(h.buckets[2], 1);
+        assert_eq!(h.buckets[HIST_BUCKETS - 1], 1);
+        assert!((h.mean() - (0.5 + 3.0 + 1e30) / 3.0).abs() < 1e15);
+        observe(name, 3.5);
+        let d = snapshot().diff(&s0);
+        let dh = &d.histograms[name];
+        assert_eq!(dh.count, 1);
+        assert_eq!(dh.buckets[2], 1);
+        assert_eq!(dh.buckets[0], 0);
+    }
+
+    #[test]
+    fn plan_cache_state_is_injected_at_snapshot() {
+        let s = snapshot();
+        assert!(s.counters.contains_key("plan_cache.hits"));
+        assert!(s.counters.contains_key("plan_cache.misses"));
+        assert!(s.counters.contains_key("plan_cache.evictions"));
+        assert!(s.gauge("plan_cache.len").is_some());
+        assert!(s.gauge("plan_cache.cap").is_some());
+        let enabled = s.gauge("plan_cache.enabled").unwrap();
+        assert!(enabled == 0.0 || enabled == 1.0);
+    }
+
+    #[test]
+    fn json_round_trips_through_own_parser() {
+        use crate::util::json;
+        counter_add("test.metrics.json", 7);
+        gauge_set("test.metrics.json.g", -0.5);
+        observe("test.metrics.json.h", 2.0);
+        let s = snapshot();
+        let doc = json::parse(&s.to_json()).expect("valid JSON");
+        assert_eq!(
+            doc.get("schema").and_then(|v| v.as_str()),
+            Some("trivance.metrics.v1")
+        );
+        let counters = doc.get("counters").expect("counters");
+        assert_eq!(
+            counters.get("test.metrics.json").and_then(|v| v.as_u64()),
+            Some(s.counter("test.metrics.json"))
+        );
+        assert_eq!(
+            doc.get("gauges").and_then(|g| g.get("test.metrics.json.g")).and_then(|v| v.as_f64()),
+            Some(-0.5)
+        );
+        let hist = doc.get("histograms").and_then(|h| h.get("test.metrics.json.h")).unwrap();
+        assert!(hist.get("count").and_then(|v| v.as_u64()).unwrap() >= 1);
+    }
+
+    #[test]
+    fn empty_snapshot_json_is_valid() {
+        let empty = Snapshot::default();
+        assert!(crate::util::json::parse(&empty.to_json()).is_ok());
+    }
+}

@@ -1,0 +1,211 @@
+//! Unified observability: metrics, tracing, and per-link congestion
+//! telemetry across both engines, the harness, and the online controller.
+//!
+//! Three planes, one discipline:
+//!
+//! * [`metrics`] — a process-wide registry of counters / gauges /
+//!   histograms (hand-rolled; the vendored registry has no metrics crate)
+//!   that absorbs every previously ad-hoc counter: `QueueStats`,
+//!   [`crate::sim::cache::PlanCache`] hit/miss/evict, the water-filler's
+//!   recompute/round counts, the executor's reducer-call totals, and the
+//!   online controller's decision log. Counters are integers only, so the
+//!   always-on metric flushes can never perturb engine arithmetic; the
+//!   [`metrics::Snapshot`] diff API is what turns cumulative process-wide
+//!   totals into per-phase deltas (`harness::sweep` snapshots around its
+//!   build/sim phases).
+//! * [`trace`] — a span/event flight recorder exporting Chrome trace-event
+//!   JSON (`trivance trace --out TRACE.json`, loadable in Perfetto):
+//!   packet/flow run spans, timeline epoch instants, and the online
+//!   controller's `FaultEvent → decision → outcome` chains.
+//! * per-link congestion telemetry — [`trace::LinkSample`] rows sampled
+//!   from the packet engine's busy intervals (one per `(link, batch)`,
+//!   carrying the step, exact f64 interval bounds, bytes, pristine
+//!   capacity, and instantaneous queue depth). These are the soft signals
+//!   ROADMAP's Canary rung asks for; [`crate::tuner::online::obs_of_samples`]
+//!   adapts them to the controller's `LinkObs` observation stream.
+//!
+//! ## Pure-selector discipline
+//!
+//! Everything hangs off the [`Sink`] trait. The default is no sink at all:
+//! [`tracing`] is a single relaxed atomic load, `false` unless a sink was
+//! [`install`]ed, and every trace/telemetry emission site is guarded by it
+//! — so with observability off the engines run the exact same instruction
+//! stream as before, and with it on the instrumentation only *reads*
+//! engine state. Either way every simulation output is bit-identical
+//! (pinned in `rust/tests/obs.rs` and mirrored in
+//! `tools/pysim/eval_obs.py`).
+
+pub mod metrics;
+pub mod trace;
+
+pub use trace::LinkSample;
+
+use std::sync::atomic::{AtomicBool, AtomicU32, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, PoisonError};
+
+/// Trace/telemetry consumer. All methods default to no-ops so a sink only
+/// implements the planes it cares about; [`NoopSink`] implements none.
+/// Timestamps are simulation seconds (the harness lane passes wall-clock
+/// seconds); the exporter converts to Chrome's microseconds.
+pub trait Sink: Send + Sync {
+    /// Begin a duration span (`ph: "B"`).
+    fn span_begin(&self, _pid: u32, _tid: u32, _name: &str, _ts_s: f64) {}
+    /// End the innermost open span of `name` on `(pid, tid)` (`ph: "E"`).
+    fn span_end(&self, _pid: u32, _tid: u32, _name: &str, _ts_s: f64) {}
+    /// A complete event (`ph: "X"`): a closed interval with numeric args.
+    fn complete(
+        &self,
+        _pid: u32,
+        _tid: u32,
+        _name: &str,
+        _t0_s: f64,
+        _t1_s: f64,
+        _args: &[(&str, f64)],
+    ) {
+    }
+    /// An instant event (`ph: "i"`).
+    fn instant(&self, _pid: u32, _tid: u32, _name: &str, _ts_s: f64, _args: &[(&str, f64)]) {}
+    /// One per-link congestion telemetry row (packet-engine busy interval).
+    fn link_sample(&self, _s: &LinkSample) {}
+}
+
+/// The default sink: drops everything. Engines are never handed this —
+/// "no sink installed" short-circuits at [`tracing`] — it exists so tests
+/// can assert that installing a sink at all (even a discarding one) leaves
+/// outputs bit-identical.
+pub struct NoopSink;
+
+impl Sink for NoopSink {}
+
+/// Trace lanes (Chrome `pid`s): one per subsystem so Perfetto groups
+/// tracks sensibly.
+pub const PID_PACKET: u32 = 1;
+pub const PID_FLOW: u32 = 2;
+pub const PID_ONLINE: u32 = 3;
+pub const PID_HARNESS: u32 = 4;
+/// Per-link telemetry lane: `tid` is the dense directed-link index, so
+/// each link renders as its own track of busy intervals.
+pub const PID_LINKS: u32 = 5;
+
+static TRACING: AtomicBool = AtomicBool::new(false);
+static SINK: Mutex<Option<Arc<dyn Sink>>> = Mutex::new(None);
+/// Serializes [`install`] across threads (cargo's parallel test runner):
+/// the returned guard holds this until dropped.
+static INSTALL_LOCK: Mutex<()> = Mutex::new(());
+
+/// Whether a sink is installed. This is the hot-path guard: a single
+/// relaxed atomic load, `false` in every default run.
+#[inline]
+pub fn tracing() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// Run `f` against the installed sink, if any. Emission sites call this
+/// behind their own [`tracing`] check so the lock is never touched when
+/// observability is off.
+pub fn with_sink(f: impl FnOnce(&dyn Sink)) {
+    if !tracing() {
+        return;
+    }
+    let sink = SINK
+        .lock()
+        .unwrap_or_else(PoisonError::into_inner)
+        .clone();
+    if let Some(s) = sink {
+        f(&*s);
+    }
+}
+
+/// Uninstalls the sink (and re-clears [`tracing`]) on drop.
+pub struct SinkGuard {
+    _serial: MutexGuard<'static, ()>,
+}
+
+impl Drop for SinkGuard {
+    fn drop(&mut self) {
+        TRACING.store(false, Ordering::SeqCst);
+        *SINK.lock().unwrap_or_else(PoisonError::into_inner) = None;
+    }
+}
+
+/// Install `sink` process-wide until the returned guard drops. Installs
+/// are serialized on a process-wide lock (held by the guard), so
+/// concurrent tests can't observe each other's sinks.
+#[must_use = "the sink is uninstalled when the guard drops"]
+pub fn install(sink: Arc<dyn Sink>) -> SinkGuard {
+    let serial = INSTALL_LOCK.lock().unwrap_or_else(PoisonError::into_inner);
+    *SINK.lock().unwrap_or_else(PoisonError::into_inner) = Some(sink);
+    TRACING.store(true, Ordering::SeqCst);
+    SinkGuard { _serial: serial }
+}
+
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+
+thread_local! {
+    static TID: u32 = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+}
+
+/// This thread's stable trace `tid` (assigned on first use). Keeps B/E
+/// span stacks per-thread under the sweep harness's fan-out, so spans from
+/// different worker threads never interleave on one track.
+pub fn cur_tid() -> u32 {
+    TID.with(|t| *t)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::AtomicU64;
+
+    struct CountingSink(AtomicU64);
+
+    impl Sink for CountingSink {
+        fn instant(&self, _p: u32, _t: u32, _n: &str, _ts: f64, _a: &[(&str, f64)]) {
+            self.0.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    #[test]
+    fn tracing_off_by_default_and_with_sink_skips() {
+        // Cannot assert !tracing() unconditionally (another test may hold
+        // an install); serialize through install() ourselves.
+        let sink = Arc::new(CountingSink(AtomicU64::new(0)));
+        let guard = install(sink.clone());
+        assert!(tracing());
+        with_sink(|s| s.instant(PID_PACKET, 0, "x", 0.0, &[]));
+        assert_eq!(sink.0.load(Ordering::Relaxed), 1);
+        drop(guard);
+        assert!(!tracing());
+        with_sink(|s| s.instant(PID_PACKET, 0, "x", 0.0, &[]));
+        assert_eq!(sink.0.load(Ordering::Relaxed), 1, "uninstalled sink still reached");
+    }
+
+    #[test]
+    fn noop_sink_installs_and_discards() {
+        let guard = install(Arc::new(NoopSink));
+        assert!(tracing());
+        with_sink(|s| {
+            s.span_begin(PID_FLOW, cur_tid(), "run", 0.0);
+            s.span_end(PID_FLOW, cur_tid(), "run", 1.0);
+            s.complete(PID_LINKS, 0, "busy", 0.0, 1.0, &[("bytes", 32.0)]);
+            s.link_sample(&LinkSample {
+                link: 0,
+                step: 0,
+                start_s: 0.0,
+                end_s: 1.0,
+                bytes: 32.0,
+                cap_bytes_per_s: 1.0,
+                queue_len: 0,
+            });
+        });
+        drop(guard);
+    }
+
+    #[test]
+    fn tids_are_stable_per_thread_and_distinct_across() {
+        let a = cur_tid();
+        assert_eq!(a, cur_tid());
+        let b = std::thread::spawn(cur_tid).join().unwrap();
+        assert_ne!(a, b);
+    }
+}

@@ -1,0 +1,362 @@
+//! Span/event flight recorder with Chrome trace-event JSON export.
+//!
+//! [`Recorder`] is the in-memory [`Sink`]: it timestamps nothing itself —
+//! every event arrives with the emitting subsystem's own simulation-time
+//! (or wall-clock, for the harness lane) seconds — and buffers events plus
+//! per-link telemetry rows under one mutex. [`Recorder::to_chrome_json`]
+//! emits the Chrome trace-event "JSON object format": a `traceEvents`
+//! array sorted by timestamp (stable on insertion order, so a zero-width
+//! span's `B` still precedes its `E`), timestamps converted to
+//! microseconds, with the telemetry rows preserved exactly (full-precision
+//! f64 seconds) under the extra top-level key `link_telemetry` — Chrome
+//! and Perfetto both ignore unknown top-level keys, so the file loads
+//! as-is in `ui.perfetto.dev`.
+//!
+//! [`Recorder::validate`] is the schema check the tests and
+//! `tools/check_trace.py` share: monotone export timestamps, matched `B`/`E`
+//! pairs per `(pid, tid)`, and known lane pids.
+
+use super::Sink;
+use std::sync::{Mutex, PoisonError};
+
+/// One packet-engine busy interval on one link: the per-link congestion
+/// telemetry row. `bytes / (end_s − start_s)` is the achieved bandwidth;
+/// `cap_bytes_per_s` is the link's *pristine* capacity (timeline brownouts
+/// stretch the interval instead, so achieved < cap is the congestion
+/// signal). `queue_len` is the event-queue depth when the batch was
+/// scheduled — the queue-depth time series.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct LinkSample {
+    /// Dense directed-link index.
+    pub link: u32,
+    /// Schedule step of the batch occupying the link.
+    pub step: u32,
+    pub start_s: f64,
+    pub end_s: f64,
+    pub bytes: f64,
+    pub cap_bytes_per_s: f64,
+    pub queue_len: u32,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq)]
+enum Ph {
+    B,
+    E,
+    X,
+    I,
+}
+
+#[derive(Clone, Debug)]
+struct TraceEvent {
+    ph: Ph,
+    pid: u32,
+    tid: u32,
+    name: String,
+    ts_s: f64,
+    /// Duration in seconds (X events only).
+    dur_s: f64,
+    args: Vec<(String, f64)>,
+}
+
+#[derive(Default)]
+struct Inner {
+    seq: u64,
+    events: Vec<(u64, TraceEvent)>,
+    samples: Vec<LinkSample>,
+}
+
+/// The buffering [`Sink`] behind `trivance trace`.
+#[derive(Default)]
+pub struct Recorder {
+    inner: Mutex<Inner>,
+}
+
+impl Recorder {
+    pub fn new() -> Recorder {
+        Recorder::default()
+    }
+
+    fn push(&self, ev: TraceEvent) {
+        let mut inner = self.inner.lock().unwrap_or_else(PoisonError::into_inner);
+        let seq = inner.seq;
+        inner.seq += 1;
+        inner.events.push((seq, ev));
+    }
+
+    /// Events recorded so far.
+    pub fn num_events(&self) -> usize {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).events.len()
+    }
+
+    /// Copy of the per-link telemetry rows (insertion order — the packet
+    /// engine's event order).
+    pub fn samples(&self) -> Vec<LinkSample> {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).samples.clone()
+    }
+
+    /// Events in export order: stable-sorted by `(ts, insertion seq)`.
+    fn sorted_events(&self) -> Vec<TraceEvent> {
+        let mut events =
+            self.inner.lock().unwrap_or_else(PoisonError::into_inner).events.clone();
+        events.sort_by(|a, b| a.1.ts_s.total_cmp(&b.1.ts_s).then(a.0.cmp(&b.0)));
+        events.into_iter().map(|(_, e)| e).collect()
+    }
+
+    /// Schema self-check (shared with `tools/check_trace.py`, which
+    /// re-validates the exported JSON): export-order timestamps monotone
+    /// non-decreasing and NaN-free, every `E` matches the innermost open
+    /// `B` of the same name on its `(pid, tid)` track, no span left open,
+    /// `X` durations non-negative, pids within the known lanes.
+    pub fn validate(&self) -> Result<(), String> {
+        use std::collections::BTreeMap;
+        let events = self.sorted_events();
+        let mut last_ts = f64::NEG_INFINITY;
+        let mut stacks: BTreeMap<(u32, u32), Vec<String>> = BTreeMap::new();
+        for (i, e) in events.iter().enumerate() {
+            if e.ts_s.is_nan() {
+                return Err(format!("event {i} ({}): NaN timestamp", e.name));
+            }
+            if e.ts_s < last_ts {
+                return Err(format!("event {i} ({}): ts went backwards", e.name));
+            }
+            last_ts = e.ts_s;
+            if !(super::PID_PACKET..=super::PID_LINKS).contains(&e.pid) {
+                return Err(format!("event {i} ({}): unknown pid {}", e.name, e.pid));
+            }
+            match e.ph {
+                Ph::B => stacks.entry((e.pid, e.tid)).or_default().push(e.name.clone()),
+                Ph::E => match stacks.entry((e.pid, e.tid)).or_default().pop() {
+                    Some(open) if open == e.name => {}
+                    Some(open) => {
+                        return Err(format!(
+                            "event {i}: E \"{}\" closes open span \"{open}\"",
+                            e.name
+                        ))
+                    }
+                    None => {
+                        return Err(format!("event {i}: E \"{}\" with no open span", e.name))
+                    }
+                },
+                Ph::X => {
+                    if e.dur_s.is_nan() || e.dur_s < 0.0 {
+                        return Err(format!("event {i} ({}): negative dur", e.name));
+                    }
+                }
+                Ph::I => {}
+            }
+        }
+        for ((pid, tid), stack) in &stacks {
+            if let Some(open) = stack.last() {
+                return Err(format!("span \"{open}\" left open on ({pid}, {tid})"));
+            }
+        }
+        Ok(())
+    }
+
+    /// Export as Chrome trace-event JSON (schema `trivance.trace.v1`).
+    pub fn to_chrome_json(&self) -> String {
+        use crate::util::json::escape;
+        let events = self.sorted_events();
+        let samples = self.samples();
+        let mut out = String::new();
+        out.push_str("{\n");
+        out.push_str("  \"schema\": \"trivance.trace.v1\",\n");
+        out.push_str("  \"displayTimeUnit\": \"ms\",\n");
+        out.push_str("  \"traceEvents\": [");
+        let mut first = true;
+        for e in &events {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            let ph = match e.ph {
+                Ph::B => "B",
+                Ph::E => "E",
+                Ph::X => "X",
+                Ph::I => "i",
+            };
+            out.push_str(&format!(
+                "\n    {{\"name\": \"{}\", \"ph\": \"{ph}\", \"pid\": {}, \"tid\": {}, \
+                 \"ts\": {:e}",
+                escape(&e.name),
+                e.pid,
+                e.tid,
+                e.ts_s * 1e6,
+            ));
+            if e.ph == Ph::X {
+                out.push_str(&format!(", \"dur\": {:e}", e.dur_s * 1e6));
+            }
+            if e.ph == Ph::I {
+                out.push_str(", \"s\": \"t\"");
+            }
+            if !e.args.is_empty() {
+                out.push_str(", \"args\": {");
+                for (i, (k, v)) in e.args.iter().enumerate() {
+                    if i > 0 {
+                        out.push_str(", ");
+                    }
+                    out.push_str(&format!("\"{}\": {:e}", escape(k), v));
+                }
+                out.push('}');
+            }
+            out.push('}');
+        }
+        out.push_str(if first { "],\n" } else { "\n  ],\n" });
+        out.push_str("  \"link_telemetry\": [");
+        let mut first = true;
+        for s in &samples {
+            if !first {
+                out.push(',');
+            }
+            first = false;
+            out.push_str(&format!(
+                "\n    {{\"link\": {}, \"step\": {}, \"start_s\": {:e}, \"end_s\": {:e}, \
+                 \"bytes\": {:e}, \"cap_bytes_per_s\": {:e}, \"queue_len\": {}}}",
+                s.link, s.step, s.start_s, s.end_s, s.bytes, s.cap_bytes_per_s, s.queue_len,
+            ));
+        }
+        out.push_str(if first { "]\n" } else { "\n  ]\n" });
+        out.push_str("}\n");
+        out
+    }
+}
+
+impl Sink for Recorder {
+    fn span_begin(&self, pid: u32, tid: u32, name: &str, ts_s: f64) {
+        self.push(TraceEvent {
+            ph: Ph::B,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_s,
+            dur_s: 0.0,
+            args: Vec::new(),
+        });
+    }
+
+    fn span_end(&self, pid: u32, tid: u32, name: &str, ts_s: f64) {
+        self.push(TraceEvent {
+            ph: Ph::E,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_s,
+            dur_s: 0.0,
+            args: Vec::new(),
+        });
+    }
+
+    fn complete(&self, pid: u32, tid: u32, name: &str, t0_s: f64, t1_s: f64, args: &[(&str, f64)]) {
+        self.push(TraceEvent {
+            ph: Ph::X,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_s: t0_s,
+            dur_s: t1_s - t0_s,
+            args: args.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    fn instant(&self, pid: u32, tid: u32, name: &str, ts_s: f64, args: &[(&str, f64)]) {
+        self.push(TraceEvent {
+            ph: Ph::I,
+            pid,
+            tid,
+            name: name.to_string(),
+            ts_s,
+            dur_s: 0.0,
+            args: args.iter().map(|&(k, v)| (k.to_string(), v)).collect(),
+        });
+    }
+
+    fn link_sample(&self, s: &LinkSample) {
+        self.inner.lock().unwrap_or_else(PoisonError::into_inner).samples.push(*s);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::obs::{PID_FLOW, PID_LINKS, PID_PACKET};
+    use crate::util::json;
+
+    #[test]
+    fn spans_sort_and_validate() {
+        let r = Recorder::new();
+        // emitted out of timestamp order — export must sort
+        r.complete(PID_LINKS, 0, "link_busy", 2.0, 3.0, &[("bytes", 64.0)]);
+        r.span_begin(PID_PACKET, 1, "packet_run", 0.0);
+        r.instant(PID_PACKET, 1, "epoch", 1.5, &[("idx", 0.0)]);
+        r.span_end(PID_PACKET, 1, "packet_run", 4.0);
+        assert_eq!(r.num_events(), 4);
+        r.validate().expect("valid trace");
+    }
+
+    #[test]
+    fn zero_width_span_keeps_b_before_e() {
+        let r = Recorder::new();
+        r.span_begin(PID_FLOW, 7, "run", 1.0);
+        r.span_end(PID_FLOW, 7, "run", 1.0);
+        r.validate().expect("B sorts before E at equal ts");
+    }
+
+    #[test]
+    fn mismatched_and_open_spans_are_rejected() {
+        let r = Recorder::new();
+        r.span_begin(PID_FLOW, 0, "outer", 0.0);
+        r.span_end(PID_FLOW, 0, "inner", 1.0);
+        assert!(r.validate().is_err());
+        let r = Recorder::new();
+        r.span_begin(PID_FLOW, 0, "outer", 0.0);
+        assert!(r.validate().unwrap_err().contains("left open"));
+        let r = Recorder::new();
+        r.span_end(PID_FLOW, 0, "never_opened", 0.0);
+        assert!(r.validate().unwrap_err().contains("no open span"));
+    }
+
+    #[test]
+    fn chrome_json_parses_and_converts_to_microseconds() {
+        let r = Recorder::new();
+        r.span_begin(PID_PACKET, 3, "run", 0.0);
+        r.complete(PID_LINKS, 2, "link_busy", 1e-6, 3e-6, &[("bytes", 4096.0)]);
+        r.span_end(PID_PACKET, 3, "run", 5e-6);
+        r.link_sample(&LinkSample {
+            link: 2,
+            step: 1,
+            start_s: 1e-6,
+            end_s: 3e-6,
+            bytes: 4096.0,
+            cap_bytes_per_s: 2.048e9,
+            queue_len: 5,
+        });
+        let doc = json::parse(&r.to_chrome_json()).expect("valid JSON");
+        assert_eq!(doc.get("schema").and_then(|v| v.as_str()), Some("trivance.trace.v1"));
+        let events = doc.get("traceEvents").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(events.len(), 3);
+        let x = events
+            .iter()
+            .find(|e| e.get("ph").and_then(|v| v.as_str()) == Some("X"))
+            .unwrap();
+        assert_eq!(x.get("ts").and_then(|v| v.as_f64()), Some(1.0)); // 1 µs
+        assert_eq!(x.get("dur").and_then(|v| v.as_f64()), Some(2e-6 * 1e6));
+        assert_eq!(
+            x.get("args").and_then(|a| a.get("bytes")).and_then(|v| v.as_f64()),
+            Some(4096.0)
+        );
+        let rows = doc.get("link_telemetry").and_then(|v| v.as_arr()).unwrap();
+        assert_eq!(rows.len(), 1);
+        assert_eq!(rows[0].get("link").and_then(|v| v.as_u64()), Some(2));
+        // telemetry keeps full-precision seconds (not µs)
+        assert_eq!(rows[0].get("start_s").and_then(|v| v.as_f64()), Some(1e-6));
+        assert_eq!(rows[0].get("queue_len").and_then(|v| v.as_u64()), Some(5));
+    }
+
+    #[test]
+    fn empty_recorder_exports_valid_json() {
+        let r = Recorder::new();
+        r.validate().expect("empty is valid");
+        let doc = json::parse(&r.to_chrome_json()).expect("valid JSON");
+        assert_eq!(doc.get("traceEvents").and_then(|v| v.as_arr()).map(|a| a.len()), Some(0));
+    }
+}

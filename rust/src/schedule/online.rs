@@ -41,6 +41,7 @@ use super::Schedule;
 use crate::algo::registry::{collapse_by_hosts, BuiltCollective};
 use crate::cost::NetParams;
 use crate::net::{NetModel, Unreachable};
+use crate::obs;
 use crate::sim::SimPlan;
 
 /// One observed fabric fault at wall-clock time `t` (seconds since the
@@ -226,6 +227,9 @@ pub fn respond(
     let mut actions = Vec::new();
     let mut prev_t = f64::NEG_INFINITY;
     let mut last_step = 0usize;
+    // Decision-log counters, flushed to `online.*` once per respond().
+    let (mut n_faults, mut n_ignored) = (0u64, 0u64);
+    let (mut n_rewrites, mut n_detours, mut n_fallbacks) = (0u64, 0u64, 0u64);
     for ev in events {
         if !(ev.t >= prev_t) {
             return Err(format!(
@@ -237,8 +241,10 @@ pub fn respond(
         if ev.is_empty() {
             continue;
         }
+        n_faults += 1;
         let Some(&done) = ends.last() else { break };
         if ev.t >= done {
+            n_ignored += 1;
             continue; // by the controller's clock the collective finished
         }
         // the step in flight when the event landed: first step whose
@@ -255,7 +261,23 @@ pub fn respond(
             down_links: ev.down_links.clone(),
             dead_nodes: ev.dead_nodes.clone(),
         };
-        let mut applied = policy(ev, step);
+        if obs::tracing() {
+            obs::with_sink(|s| {
+                s.instant(
+                    obs::PID_ONLINE,
+                    obs::cur_tid(),
+                    "fault_event",
+                    ev.t,
+                    &[
+                        ("step", step as f64),
+                        ("down_links", ev.down_links.len() as f64),
+                        ("dead_nodes", ev.dead_nodes.len() as f64),
+                    ],
+                );
+            });
+        }
+        let requested = policy(ev, step);
+        let mut applied = requested;
         if applied == Action::Rewrite {
             match rewrite_for_fault_hosted(&work, &model, &fault, hosts) {
                 Ok(rw) => {
@@ -266,11 +288,58 @@ pub fn respond(
                 Err(_) => applied = Action::Detour,
             }
         }
+        match applied {
+            Action::Rewrite => n_rewrites += 1,
+            Action::Detour => n_detours += 1,
+        }
+        if requested == Action::Rewrite && applied == Action::Detour {
+            n_fallbacks += 1;
+        }
         model = fault.apply(&model);
         stages.push((step as u32, model.clone()));
         actions.push((step, applied));
         ends = staged_step_time_estimates(&net_sched, base, &stages, m_bytes, params);
+        if obs::tracing() {
+            // The full FaultEvent → decision → outcome chain: the decision
+            // instant and an X span from the event to the re-estimated
+            // completion of the (possibly rewritten) schedule.
+            let name = match applied {
+                Action::Rewrite => "fault_rewrite",
+                Action::Detour => "fault_detour",
+            };
+            let new_done = ends.last().copied().unwrap_or(ev.t);
+            let fb = if requested == applied { 0.0 } else { 1.0 };
+            obs::with_sink(|s| {
+                s.instant(
+                    obs::PID_ONLINE,
+                    obs::cur_tid(),
+                    "decision",
+                    ev.t,
+                    &[
+                        ("step", step as f64),
+                        ("rewrite", matches!(applied, Action::Rewrite) as u8 as f64),
+                        ("fallback", fb),
+                    ],
+                );
+                s.complete(
+                    obs::PID_ONLINE,
+                    obs::cur_tid(),
+                    name,
+                    ev.t,
+                    new_done.max(ev.t),
+                    &[("step", step as f64)],
+                );
+            });
+        }
     }
+    obs::metrics::counters_add(&[
+        ("online.responds", 1),
+        ("online.faults", n_faults),
+        ("online.ignored", n_ignored),
+        ("online.rewrites", n_rewrites),
+        ("online.detours", n_detours),
+        ("online.rewrite_fallbacks", n_fallbacks),
+    ]);
     Ok(Response { schedule: net_sched, stages, actions })
 }
 

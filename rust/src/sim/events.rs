@@ -472,6 +472,40 @@ mod tests {
     }
 
     #[test]
+    fn same_instant_bursts_pin_the_scanned_per_pop_degradation() {
+        // PR 8's honest finding, pinned: same-instant bursts defeat the
+        // calendar's ~2-events-per-day sizing (span 0 means every rebuild
+        // keeps the old width, so the whole burst lands in one day and each
+        // pop rescans the remaining burst). The identical workload with
+        // distinct timestamps stays O(1) per pop. The exact workload and
+        // ratios are mirrored in tools/pysim (eval_core.py §4): burst
+        // 16640/512 = 32.5, spread 776/512 ≈ 1.52.
+        let ratio = |rounds: &[Vec<f64>]| {
+            let mut q = EventQueue::<u32>::new(QueueKind::Calendar);
+            for times in rounds {
+                for (i, &t) in times.iter().enumerate() {
+                    q.push(t, i as u32);
+                }
+                let popped = drain(&mut q);
+                assert_eq!(popped.len(), times.len());
+                assert_sorted(&popped);
+            }
+            let s = q.stats();
+            assert_eq!(s.pops, s.pushes);
+            s.scanned as f64 / s.pops as f64
+        };
+        let burst: Vec<Vec<f64>> = (0..8).map(|r| vec![r as f64 * 1e-3; 64]).collect();
+        let spread: Vec<Vec<f64>> = (0..8)
+            .map(|r| (0..64).map(|i| (r * 64 + i) as f64 * 1e-6).collect())
+            .collect();
+        let rb = ratio(&burst);
+        let rs = ratio(&spread);
+        assert!(rb > 16.0, "burst scanned/pop collapsed to {rb} — sizing fixed?");
+        assert!(rs < 4.0, "spread scanned/pop degraded to {rs}");
+        assert!(rb > 4.0 * rs, "burst ({rb}) no longer dominates spread ({rs})");
+    }
+
+    #[test]
     fn default_kind_round_trips() {
         assert_eq!(QueueKind::parse("heap"), Some(QueueKind::Heap));
         assert_eq!(QueueKind::parse("calendar"), Some(QueueKind::Calendar));

@@ -61,6 +61,7 @@ use super::plan::{SimPlan, SimScratch};
 use super::{SimError, SimResult, Timed};
 use crate::cost::NetParams;
 use crate::net::{Mutation, Timeline};
+use crate::obs;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 use std::cell::RefCell;
@@ -110,6 +111,11 @@ struct WaterFill {
     /// flow is never link-bound and must take the generic infinite-share
     /// branch).
     symmetric_ok: bool,
+    /// Observability counters, zeroed per collective by [`WaterFill::reset`]
+    /// and flushed to `flow.waterfill.*` after the run. Integer bookkeeping
+    /// only — the fill arithmetic never reads them.
+    recomputes: u64,
+    rounds: u64,
 }
 
 impl WaterFill {
@@ -138,6 +144,8 @@ impl WaterFill {
         self.unfrozen_flows.clear();
         self.freeze_buf.clear();
         self.symmetric_ok = plan.is_uniform() && !plan.has_zero_hop_routes();
+        self.recomputes = 0;
+        self.rounds = 0;
     }
 
     fn inject(&mut self, route: &[u32]) {
@@ -165,6 +173,7 @@ impl WaterFill {
     /// bandwidth from the links crossed. `cap` is the base (uniform)
     /// capacity, `caps` the per-link capacities (`== cap` on uniform plans).
     fn recompute(&mut self, active: &mut [ActiveFlow], plan: &SimPlan, cap: f64, caps: &[f64]) {
+        self.recomputes += 1;
         // Compact the touched list and (re)initialize per-link state for
         // links still carrying active flows.
         let mut touched = std::mem::take(&mut self.touched);
@@ -206,6 +215,7 @@ impl WaterFill {
         self.unfrozen_flows.clear();
         self.unfrozen_flows.extend(0..active.len() as u32);
         while !self.unfrozen_flows.is_empty() {
+            self.rounds += 1;
             // The most contended link's fair share.
             let mut min_share = f64::INFINITY;
             for &l in &self.touched {
@@ -294,6 +304,18 @@ thread_local! {
     static WS: RefCell<FlowWs> = RefCell::new(FlowWs::default());
 }
 
+/// One integer-only metrics flush per flow simulation (a single registry
+/// lock). `epochs` is the number of timeline epochs applied (0 static).
+fn flush_flow_metrics(events: u64, wf: &WaterFill, epochs: u64) {
+    obs::metrics::counters_add(&[
+        ("flow.sims", 1),
+        ("flow.events", events),
+        ("flow.waterfill.recomputes", wf.recomputes),
+        ("flow.waterfill.rounds", wf.rounds),
+        ("flow.epochs", epochs),
+    ]);
+}
+
 /// Convenience wrapper: build the plan and simulate. Ladder-style callers
 /// should build one [`SimPlan`] and call [`simulate_flow_plan`] per size.
 pub fn simulate_flow(
@@ -363,6 +385,9 @@ fn run_static(
     // Every node enters step 0 after the initial α.
     for r in 0..n {
         push!(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
+    }
+    if obs::tracing() {
+        obs::with_sink(|s| s.span_begin(obs::PID_FLOW, obs::cur_tid(), "flow_run", 0.0));
     }
 
     let mut now = 0.0f64;
@@ -462,6 +487,10 @@ fn run_static(
         }
     }
 
+    if obs::tracing() {
+        obs::with_sink(|s| s.span_end(obs::PID_FLOW, obs::cur_tid(), "flow_run", completion));
+    }
+    flush_flow_metrics(events, wf, 0);
     SimResult { completion_s: completion, messages: plan.num_msgs(), events }
 }
 
@@ -540,6 +569,9 @@ fn run_timeline(
     }
     for (ei, e) in timeline.epochs().iter().enumerate() {
         push!(e.t, Event::Epoch { idx: ei as u32 });
+    }
+    if obs::tracing() {
+        obs::with_sink(|s| s.span_begin(obs::PID_FLOW, obs::cur_tid(), "flow_run", 0.0));
     }
 
     // Rates change mid-flight and capacities diverge per link: the
@@ -628,6 +660,18 @@ fn run_timeline(
                     }
                 }
                 Event::Epoch { idx } => {
+                    if obs::tracing() {
+                        let muts = timeline.epochs()[idx as usize].mutations.len();
+                        obs::with_sink(|s| {
+                            s.instant(
+                                obs::PID_FLOW,
+                                obs::cur_tid(),
+                                "flow_epoch",
+                                now,
+                                &[("idx", idx as f64), ("mutations", muts as f64)],
+                            );
+                        });
+                    }
                     for m in &timeline.epochs()[idx as usize].mutations {
                         match *m {
                             Mutation::SetClass { link, class } => {
@@ -666,8 +710,16 @@ fn run_timeline(
             .map(|&l| l as usize)
             .find(|&l| caps_eff[l] == 0.0)
             .unwrap_or_else(|| route.first().map(|&l| l as usize).unwrap_or(0));
+        if obs::tracing() {
+            // Close the run span so error traces still validate.
+            obs::with_sink(|s| s.span_end(obs::PID_FLOW, obs::cur_tid(), "flow_run", now));
+        }
         return Err(SimError::Stranded { link, step: plan.msg(f.msg as usize).step });
     }
+    if obs::tracing() {
+        obs::with_sink(|s| s.span_end(obs::PID_FLOW, obs::cur_tid(), "flow_run", completion));
+    }
+    flush_flow_metrics(events, wf, timeline.epochs().len() as u64);
     Ok(SimResult { completion_s: completion, messages: plan.num_msgs(), events })
 }
 

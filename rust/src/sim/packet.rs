@@ -56,9 +56,93 @@ use super::plan::{SimPlan, SimScratch};
 use super::{SimError, SimResult, Timed};
 use crate::cost::NetParams;
 use crate::net::{Mutation, Timeline};
+use crate::obs;
 use crate::schedule::Schedule;
 use crate::topology::Torus;
 use std::cell::RefCell;
+
+/// Per-simulation metrics flush: one batched registry update (integer
+/// counters only, so engine arithmetic is untouched), plus the queue's
+/// peak depth and — for the calendar queue — the `scanned/pop` ratio
+/// histogram that makes the PR 8 same-instant-burst degradation a
+/// first-class, per-simulation metric.
+fn flush_packet_metrics(kind: QueueKind, events: u64, stats: &QueueStats) {
+    use crate::obs::metrics;
+    let (op_names, peak_name) = match kind {
+        QueueKind::Heap => (
+            [
+                "packet.queue.heap.pushes",
+                "packet.queue.heap.pops",
+                "packet.queue.heap.resizes",
+                "packet.queue.heap.scanned",
+            ],
+            "packet.queue.heap.peak_len",
+        ),
+        QueueKind::Calendar => (
+            [
+                "packet.queue.calendar.pushes",
+                "packet.queue.calendar.pops",
+                "packet.queue.calendar.resizes",
+                "packet.queue.calendar.scanned",
+            ],
+            "packet.queue.calendar.peak_len",
+        ),
+    };
+    metrics::counters_add(&[
+        ("packet.sims", 1),
+        ("packet.events", events),
+        (op_names[0], stats.pushes),
+        (op_names[1], stats.pops),
+        (op_names[2], stats.resizes),
+        (op_names[3], stats.scanned),
+    ]);
+    metrics::observe(peak_name, stats.peak_len as f64);
+    if matches!(kind, QueueKind::Calendar) && stats.pops > 0 {
+        metrics::observe(
+            "packet.queue.calendar.scanned_per_pop",
+            stats.scanned as f64 / stats.pops as f64,
+        );
+    }
+}
+
+/// Emit one per-link congestion telemetry row (and its `link_busy` trace
+/// interval) for a batch that occupied `link` from `start_s` to `end_s`.
+/// Only called behind [`obs::tracing`] — cold by construction.
+#[cold]
+fn emit_link_sample(
+    link: usize,
+    step: u32,
+    start_s: f64,
+    end_s: f64,
+    bytes: f64,
+    cap_bytes_per_s: f64,
+    queue_len: usize,
+) {
+    obs::with_sink(|s| {
+        s.link_sample(&obs::LinkSample {
+            link: link as u32,
+            step,
+            start_s,
+            end_s,
+            bytes,
+            cap_bytes_per_s,
+            queue_len: queue_len as u32,
+        });
+        s.complete(
+            obs::PID_LINKS,
+            link as u32,
+            "link_busy",
+            start_s,
+            end_s,
+            &[
+                ("step", step as f64),
+                ("bytes", bytes),
+                ("cap_bytes_per_s", cap_bytes_per_s),
+                ("queue_len", queue_len as f64),
+            ],
+        );
+    });
+}
 
 #[derive(Clone, Copy, Debug)]
 enum Event {
@@ -179,6 +263,9 @@ fn run_static(
     for r in 0..n {
         q.push(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
     }
+    if obs::tracing() {
+        obs::with_sink(|s| s.span_begin(obs::PID_PACKET, obs::cur_tid(), "packet_run", 0.0));
+    }
 
     let mut completion = 0.0f64;
     let mut events = 0u64;
@@ -226,6 +313,10 @@ fn run_static(
                     let batch_end = (start + total / caps[l]).max(ready);
                     free_at[l] = batch_end;
                     let tail_ready = batch_end + hops[l];
+                    if obs::tracing() {
+                        let step = plan.msg(msg as usize).step;
+                        emit_link_sample(l, step, start, batch_end, total, caps[l], q.len());
+                    }
                     if hop as usize + 1 == route.len() {
                         // tail arrives hop_l after the batch serializes
                         q.push(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
@@ -243,10 +334,14 @@ fn run_static(
         }
     }
 
-    (
-        SimResult { completion_s: completion, messages: plan.num_msgs(), events },
-        q.stats(),
-    )
+    if obs::tracing() {
+        obs::with_sink(|s| {
+            s.span_end(obs::PID_PACKET, obs::cur_tid(), "packet_run", completion)
+        });
+    }
+    let stats = q.stats();
+    flush_packet_metrics(kind, events, &stats);
+    (SimResult { completion_s: completion, messages: plan.num_msgs(), events }, stats)
 }
 
 /// One piecewise-constant change point of a link's state under a
@@ -472,6 +567,20 @@ fn run_timeline(
     for r in 0..n {
         q.push(params.alpha_s, Event::StepStart { node: r as u32, step: 0 });
     }
+    if obs::tracing() {
+        obs::with_sink(|s| {
+            s.span_begin(obs::PID_PACKET, obs::cur_tid(), "packet_run", 0.0);
+            for (ei, e) in timeline.epochs().iter().enumerate() {
+                s.instant(
+                    obs::PID_PACKET,
+                    obs::cur_tid(),
+                    "timeline_epoch",
+                    e.t,
+                    &[("idx", ei as f64), ("mutations", e.mutations.len() as f64)],
+                );
+            }
+        });
+    }
 
     let mut completion = 0.0f64;
     let mut events = 0u64;
@@ -512,13 +621,25 @@ fn run_timeline(
                     let l = route[hop as usize] as usize;
                     let start = now.max(free_at[l]);
                     let track = track_of(track_pts, track_ranges, l);
-                    let stranded =
-                        || SimError::Stranded { link: l, step: plan.msg(msg as usize).step };
+                    let stranded = || {
+                        // close the run span so an error exit still leaves
+                        // a well-formed (validating) trace behind
+                        if obs::tracing() {
+                            obs::with_sink(|s| {
+                                s.span_end(obs::PID_PACKET, obs::cur_tid(), "packet_run", now)
+                            });
+                        }
+                        SimError::Stranded { link: l, step: plan.msg(msg as usize).step }
+                    };
                     let batch_end = serialize_end(track, caps[l], start, total)
                         .ok_or_else(stranded)?
                         .max(ready);
                     free_at[l] = batch_end;
                     let tail_ready = batch_end + hop_at(track, hops[l], batch_end);
+                    if obs::tracing() {
+                        let step = plan.msg(msg as usize).step;
+                        emit_link_sample(l, step, start, batch_end, total, caps[l], q.len());
+                    }
                     if hop as usize + 1 == route.len() {
                         q.push(tail_ready, Event::Batch { msg, hop: hop + 1, ready: tail_ready });
                     } else {
@@ -535,10 +656,14 @@ fn run_timeline(
         }
     }
 
-    Ok((
-        SimResult { completion_s: completion, messages: plan.num_msgs(), events },
-        q.stats(),
-    ))
+    if obs::tracing() {
+        obs::with_sink(|s| {
+            s.span_end(obs::PID_PACKET, obs::cur_tid(), "packet_run", completion)
+        });
+    }
+    let stats = q.stats();
+    flush_packet_metrics(kind, events, &stats);
+    Ok((SimResult { completion_s: completion, messages: plan.num_msgs(), events }, stats))
 }
 
 pub mod reference {

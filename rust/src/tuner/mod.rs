@@ -34,8 +34,8 @@ pub mod table;
 pub mod workload;
 
 pub use online::{
-    obs_of_event, preset_obs, ref_horizon, LinkObs, OnlineSelector, ScenarioFeatures,
-    Selection, SelectorRow,
+    obs_of_event, obs_of_samples, preset_obs, ref_horizon, LinkObs, OnlineSelector,
+    ScenarioFeatures, Selection, SelectorRow,
 };
 pub use table::{
     distill, ladder_index, tune, tune_ladder, Choice, DecisionTable, Recommendation,

@@ -217,6 +217,31 @@ pub fn obs_of_event(ev: &FaultEvent, torus: &Torus) -> Vec<LinkObs> {
     obs
 }
 
+/// Per-link congestion telemetry ([`crate::obs::LinkSample`] rows — the
+/// packet engine's busy intervals) read as link-health observations: the
+/// observation stream the ROADMAP Canary rung asks the monitoring plane
+/// for, now sampled from the engine itself. One [`LinkObs`] per busy
+/// interval, stamped at the interval start; `cap_ratio` is the achieved
+/// bandwidth over the pristine capacity, clamped to `[0, 1]` (cut-through
+/// `ready` stalls can stretch an interval past its serialization time, and
+/// a brownout shows up as achieved ≪ pristine — exactly the congestion
+/// signal). Zero-length and zero-capacity intervals carry no observable
+/// rate and are skipped.
+pub fn obs_of_samples(samples: &[crate::obs::LinkSample]) -> Vec<LinkObs> {
+    samples
+        .iter()
+        .filter(|s| s.end_s > s.start_s && s.cap_bytes_per_s > 0.0)
+        .map(|s| {
+            let achieved = s.bytes / (s.end_s - s.start_s);
+            LinkObs {
+                t: s.start_s,
+                link: s.link as usize,
+                cap_ratio: (achieved / s.cap_bytes_per_s).clamp(0.0, 1.0),
+            }
+        })
+        .collect()
+}
+
 /// One embedded tuned scenario: its descriptor, whether its condition is
 /// permanent (fault) or transient (timeline), and the tuned per-size
 /// winners (empty when the table was not tuned on this preset).
@@ -393,6 +418,33 @@ mod tests {
             params,
             topos: vec![TopoTable { dims: t.dims().to_vec(), sizes, scenarios }],
         }
+    }
+
+    #[test]
+    fn obs_of_samples_converts_busy_intervals_to_cap_ratios() {
+        use crate::obs::LinkSample;
+        let mk = |link, start_s, end_s, bytes, cap| LinkSample {
+            link,
+            step: 0,
+            start_s,
+            end_s,
+            bytes,
+            cap_bytes_per_s: cap,
+            queue_len: 0,
+        };
+        let samples = [
+            mk(3, 1.0, 2.0, 100.0, 100.0),  // fully utilized: ratio 1
+            mk(4, 2.0, 4.0, 50.0, 100.0),   // browned out: 25 of 100
+            mk(5, 5.0, 7.0, 1000.0, 100.0), // float slop above cap: clamped
+            mk(6, 8.0, 8.0, 10.0, 100.0),   // zero-length: dropped
+            mk(7, 9.0, 10.0, 10.0, 0.0),    // zero capacity: dropped
+        ];
+        let obs = obs_of_samples(&samples);
+        assert_eq!(obs.len(), 3);
+        assert_eq!(obs[0], LinkObs { t: 1.0, link: 3, cap_ratio: 1.0 });
+        assert_eq!(obs[1], LinkObs { t: 2.0, link: 4, cap_ratio: 0.25 });
+        assert_eq!(obs[2], LinkObs { t: 5.0, link: 5, cap_ratio: 1.0 });
+        assert!(obs_of_samples(&[]).is_empty());
     }
 
     #[test]

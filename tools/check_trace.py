@@ -1,0 +1,190 @@
+"""CI observability gate: validate a TRACE.json produced by `trivance trace`.
+
+Usage: check_trace.py TRACE.json
+
+Checks (schema trivance.trace.v1, the Chrome trace-event "JSON object
+format" plus a `link_telemetry` extension):
+
+- top level: schema tag, `traceEvents` array, `link_telemetry` array;
+- every event has a name, a known phase (B/E/X/i), a pid inside the five
+  Trivance lanes (1 packet, 2 flow, 3 online, 4 harness, 5 links), a
+  non-negative integer tid, and a finite `ts`; `X` events carry a finite
+  non-negative `dur`;
+- export order is sorted by `ts` (Perfetto requirement for fast loads);
+- `B`/`E` events pair up per `(pid, tid)` track: every `E` closes the
+  innermost open `B` of the same name, and no span is left open;
+- telemetry rows carry exactly the LinkSample fields, describe forward
+  intervals, and never report achieved bandwidth above the pristine link
+  capacity (relative tolerance 1e-9);
+- the rows reconcile 1:1 with the `link_busy` X events on the links lane:
+  same link, step, interval (µs vs seconds to 1e-9 relative), bytes,
+  capacity, and queue depth. The packet engine emits both from the same
+  busy-interval computation, so any divergence means the exporter broke.
+"""
+
+import json
+import math
+import sys
+
+PH_KINDS = {"B", "E", "X", "i"}
+PID_MIN, PID_MAX = 1, 5
+PID_LINKS = 5
+ROW_KEYS = {"link", "step", "start_s", "end_s", "bytes", "cap_bytes_per_s", "queue_len"}
+REL_TOL = 1e-9
+
+
+def close(a, b):
+    """|a - b| within REL_TOL of the larger magnitude (floor 1.0)."""
+    return abs(a - b) <= REL_TOL * max(abs(a), abs(b), 1.0)
+
+
+def check_events(events):
+    """Validate the traceEvents array; return a list of error strings."""
+    errs = []
+    last_ts = -math.inf
+    stacks = {}
+    for i, e in enumerate(events):
+        name = e.get("name")
+        ph = e.get("ph")
+        pid = e.get("pid")
+        tid = e.get("tid")
+        ts = e.get("ts")
+        if not isinstance(name, str) or not name:
+            errs.append(f"event {i}: missing name")
+            continue
+        if ph not in PH_KINDS:
+            errs.append(f"event {i} ({name}): unknown phase {ph!r}")
+        if not isinstance(pid, int) or not PID_MIN <= pid <= PID_MAX:
+            errs.append(f"event {i} ({name}): pid {pid!r} outside lanes {PID_MIN}..{PID_MAX}")
+        if not isinstance(tid, int) or tid < 0:
+            errs.append(f"event {i} ({name}): bad tid {tid!r}")
+        if not isinstance(ts, (int, float)) or not math.isfinite(ts):
+            errs.append(f"event {i} ({name}): non-finite ts {ts!r}")
+            continue
+        if ts < last_ts:
+            errs.append(f"event {i} ({name}): ts {ts} below predecessor {last_ts}")
+        last_ts = ts
+        if ph == "X":
+            dur = e.get("dur")
+            if not isinstance(dur, (int, float)) or not math.isfinite(dur) or dur < 0:
+                errs.append(f"event {i} ({name}): X with bad dur {dur!r}")
+        elif ph == "B":
+            stacks.setdefault((pid, tid), []).append(name)
+        elif ph == "E":
+            stack = stacks.setdefault((pid, tid), [])
+            if not stack:
+                errs.append(f"event {i}: E {name!r} with no open span on ({pid}, {tid})")
+            elif stack[-1] != name:
+                errs.append(f"event {i}: E {name!r} closes open span {stack[-1]!r}")
+            else:
+                stack.pop()
+    for (pid, tid), stack in sorted(stacks.items()):
+        if stack:
+            errs.append(f"span {stack[-1]!r} left open on ({pid}, {tid})")
+    return errs
+
+
+def check_telemetry(rows):
+    """Validate the link_telemetry rows; return a list of error strings."""
+    errs = []
+    for i, r in enumerate(rows):
+        if set(r) != ROW_KEYS:
+            errs.append(f"row {i}: keys {sorted(r)} != {sorted(ROW_KEYS)}")
+            continue
+        if r["end_s"] <= r["start_s"]:
+            errs.append(f"row {i}: empty interval [{r['start_s']}, {r['end_s']}]")
+            continue
+        if r["bytes"] <= 0 or r["cap_bytes_per_s"] <= 0:
+            errs.append(f"row {i}: non-positive bytes/capacity")
+            continue
+        achieved = r["bytes"] / (r["end_s"] - r["start_s"])
+        if achieved > r["cap_bytes_per_s"] * (1 + REL_TOL):
+            errs.append(
+                f"row {i}: achieved {achieved:.6e} B/s above capacity "
+                f"{r['cap_bytes_per_s']:.6e} on link {r['link']}"
+            )
+    return errs
+
+
+def check_reconciliation(events, rows):
+    """Every telemetry row must reconcile with one link_busy X event.
+
+    Both are emitted by the packet engine from the same busy interval, the
+    event in microseconds, the row in full-precision seconds. Matched by
+    sorting both sides by (link, time, step) — intervals on one link are
+    far wider than f64 rounding, so the order is unambiguous.
+    """
+    busy = [
+        e
+        for e in events
+        if e.get("name") == "link_busy" and e.get("ph") == "X" and e.get("pid") == PID_LINKS
+    ]
+    if len(busy) != len(rows):
+        return [f"{len(busy)} link_busy events vs {len(rows)} telemetry rows"]
+    busy.sort(key=lambda e: (e["tid"], e["ts"], e["args"]["step"]))
+    srows = sorted(rows, key=lambda r: (r["link"], r["start_s"] * 1e6, r["step"]))
+    errs = []
+    for i, (e, r) in enumerate(zip(busy, srows)):
+        args = e.get("args", {})
+        bad = []
+        if e["tid"] != r["link"]:
+            bad.append(f"tid {e['tid']} vs link {r['link']}")
+        if args.get("step") != r["step"]:
+            bad.append(f"step {args.get('step')} vs {r['step']}")
+        if args.get("queue_len") != r["queue_len"]:
+            bad.append(f"queue_len {args.get('queue_len')} vs {r['queue_len']}")
+        if not close(e["ts"], r["start_s"] * 1e6):
+            bad.append(f"ts {e['ts']} vs start {r['start_s'] * 1e6} µs")
+        if not close(e["dur"], (r["end_s"] - r["start_s"]) * 1e6):
+            bad.append(f"dur {e['dur']} vs {(r['end_s'] - r['start_s']) * 1e6} µs")
+        if not close(args.get("bytes", math.nan), r["bytes"]):
+            bad.append(f"bytes {args.get('bytes')} vs {r['bytes']}")
+        if not close(args.get("cap_bytes_per_s", math.nan), r["cap_bytes_per_s"]):
+            bad.append(f"cap {args.get('cap_bytes_per_s')} vs {r['cap_bytes_per_s']}")
+        if bad:
+            errs.append(f"pair {i} (link {r['link']}): " + "; ".join(bad))
+    return errs
+
+
+def check_trace(doc):
+    """Full validation of a parsed TRACE.json; returns error strings."""
+    if doc.get("schema") != "trivance.trace.v1":
+        return [f"unexpected schema {doc.get('schema')!r}"]
+    events = doc.get("traceEvents")
+    rows = doc.get("link_telemetry")
+    if not isinstance(events, list):
+        return ["traceEvents is not an array"]
+    if not isinstance(rows, list):
+        return ["link_telemetry is not an array"]
+    errs = check_events(events)
+    errs += check_telemetry(rows)
+    errs += check_reconciliation(events, rows)
+    return errs
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(f"usage: {sys.argv[0]} TRACE.json", file=sys.stderr)
+        return 2
+    path = sys.argv[1]
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"{path}: {e}", file=sys.stderr)
+        return 2
+    errs = check_trace(doc)
+    if errs:
+        for e in errs[:20]:
+            print(f"FAIL: {e}", file=sys.stderr)
+        if len(errs) > 20:
+            print(f"... and {len(errs) - 20} more", file=sys.stderr)
+        return 1
+    n_events = len(doc["traceEvents"])
+    n_rows = len(doc["link_telemetry"])
+    print(f"{path}: valid trivance.trace.v1 — {n_events} events, {n_rows} telemetry rows")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

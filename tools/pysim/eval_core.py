@@ -210,15 +210,52 @@ print(
 chk("queue fully drained (pushes == pops)", s["pushes"] == s["pops"])
 # scanned/pop is the calendar's cost model: near-constant when event times
 # spread, degrading toward O(cluster) when many events share an instant
-# (64 synchronized step events per round here). Reported, not bounded —
-# correctness never depends on it; BENCH_core.json tracks the trajectory.
+# (64 synchronized step events per round here). The degradation is now a
+# first-class metric (packet.queue.calendar.scanned_per_pop in the rust
+# registry) and PINNED here, mirroring events.rs's
+# same_instant_bursts_pin_the_scanned_per_pop_degradation: the 8x8 BENCH
+# workload's synchronized rounds must show the O(cluster) blow-up that the
+# sparser ring27 workload avoids. Measured: 8x8 ~97.3/pop, ring27 ~30.1.
+r88 = s["scanned"] / s["pops"]
 t27 = Torus([27])
 b27 = build("trivance", "L", t27)
 _, e27, s27 = simulate_packet_batched_stats(Plan(b27.net, t27), 1 << 20, P, 4096, "calendar")
+r27 = s27["scanned"] / s27["pops"]
 print(
     f"ring27 trivance-L (sparser ties): events={e27} resizes={s27['resizes']} "
-    f"scanned={s27['scanned']} ({s27['scanned'] / max(s27['pops'], 1):.2f}/pop)"
+    f"scanned={s27['scanned']} ({r27:.2f}/pop)"
 )
+chk("8x8 same-instant bursts degrade scanned/pop (pinned)", r88 > 50.0, f"{r88:.2f}/pop")
+chk("8x8 degradation exceeds ring27 by 2x (pinned)", r88 > 2.0 * r27, f"{r88:.2f} vs {r27:.2f}")
+
+# synthetic burst-vs-spread pin (identical workloads to the events.rs
+# test): 8 rounds x 64 events at one shared instant per round vs the same
+# events spread 1 us apart, drained each round. Measured: burst
+# 16640/512 = 32.5/pop, spread 776/512 ~ 1.52/pop.
+
+
+def _drain_ratio(rounds):
+    q = EventQueue("calendar")
+    for times in rounds:
+        for i, t in enumerate(times):
+            q.push(t, i)
+        popped = []
+        while True:
+            e = q.pop()
+            if e is None:
+                break
+            popped.append(e[:2])
+        assert len(popped) == len(times) and popped == sorted(popped)
+    st = q.stats()
+    assert st["pops"] == st["pushes"]
+    return st["scanned"] / st["pops"]
+
+
+r_burst = _drain_ratio([[r * 1e-3] * 64 for r in range(8)])
+r_spread = _drain_ratio([[(r * 64 + i) * 1e-6 for i in range(64)] for r in range(8)])
+chk("synthetic burst degrades (pinned > 16/pop)", r_burst > 16.0, f"{r_burst:.2f}/pop")
+chk("synthetic spread stays amortized O(1) (pinned < 4/pop)", r_spread < 4.0, f"{r_spread:.3f}/pop")
+chk("burst exceeds spread by 4x (pinned)", r_burst > 4.0 * r_spread)
 
 
 # --- 5. optional: emit the pysim-provenance BENCH_core.json baseline ---

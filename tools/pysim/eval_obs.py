@@ -1,0 +1,154 @@
+"""Observability evals (ISSUE 9), mirrored from rust/src/obs/ and the
+packet engine's telemetry hooks — the container has no rustc, so this is
+the numeric validation of the same invariants rust/tests/obs.rs pins:
+
+1. sink-off bit identity: running the packet engine with a telemetry sink
+   attached returns byte-for-byte the same completion, event count, and
+   queue stats as running without one (the NoopSink contract) — static and
+   dynamic, both queue kinds;
+2. telemetry physics: per-link busy intervals are forward, disjoint per
+   link within a simulation, achieved bandwidth never exceeds the pristine
+   capacity (1e-9 relative), and there is exactly one row per message-hop;
+3. congestion signal: under the brownout preset the achieved/cap ratio —
+   the tuner::online observation stream (obs_of_samples) — drops on the
+   throttled links while every ratio stays in (0, 1];
+4. schema parity: the mirror's telemetry rows carry exactly the LinkSample
+   keys that rust exports into TRACE.json's `link_telemetry`, asserted
+   against tools/check_trace.py's ROW_KEYS so the validator, the rust
+   exporter, and the mirror can never drift apart silently.
+"""
+
+import importlib.util
+import os
+import sys
+
+sys.path.insert(0, __file__.rsplit("/", 1)[0])
+from mirror import *  # noqa
+
+P = DEFAULT_PARAMS
+fails = []
+
+
+def chk(name, cond, detail=""):
+    status = "ok " if cond else "FAIL"
+    print(f"[{status}] {name} {detail}")
+    if not cond:
+        fails.append(name)
+
+
+def _load_check_trace():
+    path = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..", "check_trace.py")
+    spec = importlib.util.spec_from_file_location("check_trace", path)
+    mod = importlib.util.module_from_spec(spec)
+    spec.loader.exec_module(mod)
+    return mod
+
+
+check_trace = _load_check_trace()
+
+# --- 1. sink-off bit identity ---
+print("== telemetry sink is invisible to the engines (bit identity) ==")
+mismatches = 0
+cells = 0
+for dims in [[9], [3, 3]]:
+    t = Torus(dims)
+    for algo in ("trivance", "bucket"):
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            plan = Plan(b.net, t)
+            for m in [4096, 256 << 10]:
+                for kind in ("heap", "calendar"):
+                    rows = []
+                    bare = simulate_packet_batched_stats(plan, m, P, 4096, kind)
+                    sunk = simulate_packet_batched_stats(plan, m, P, 4096, kind, sink=rows)
+                    cells += 1
+                    if bare != sunk or not rows:
+                        mismatches += 1
+                        print(f"  MISMATCH static {dims} {algo}-{variant} m={m} {kind}")
+                    for name in ("flap", "brownout"):
+                        tl = dynamic_timeline(name, t, P, m)
+                        rows_d = []
+                        bare_d = simulate_packet_dyn_stats(plan, m, P, 4096, tl, kind)
+                        sunk_d = simulate_packet_dyn_stats(plan, m, P, 4096, tl, kind, sink=rows_d)
+                        cells += 1
+                        if bare_d != sunk_d or not rows_d:
+                            mismatches += 1
+                            print(f"  MISMATCH {name} {dims} {algo}-{variant} m={m} {kind}")
+chk(f"sink on/off bit-identical ({cells} cells)", mismatches == 0)
+
+# --- 2. telemetry physics on one static simulation ---
+print("\n== per-link busy-interval telemetry (static 3x3 trivance-L) ==")
+t33 = Torus([3, 3])
+b33 = build("trivance", "L", t33)
+plan33 = Plan(b33.net, t33)
+rows = []
+simulate_packet_batched_stats(plan33, 64 << 10, P, 4096, "calendar", sink=rows)
+chk("telemetry rows emitted", len(rows) > 0, f"{len(rows)} rows")
+expected_rows = sum(len(msg[4]) for msg in plan33.msgs)
+chk("exactly one row per message-hop", len(rows) == expected_rows, f"expect {expected_rows}")
+
+REL_TOL = 1e-9
+bad_phys = 0
+for r in rows:
+    achieved = r["bytes"] / (r["end_s"] - r["start_s"])
+    if not (
+        0 <= r["link"] < plan33.num_links
+        and r["end_s"] > r["start_s"]
+        and r["bytes"] > 0
+        and achieved <= r["cap_bytes_per_s"] * (1 + REL_TOL)
+        and r["queue_len"] >= 0
+    ):
+        bad_phys += 1
+chk("rows are forward intervals with achieved <= cap (1e-9)", bad_phys == 0)
+
+by_link = {}
+for r in rows:
+    by_link.setdefault(r["link"], []).append((r["start_s"], r["end_s"]))
+overlaps = 0
+for l, iv in by_link.items():
+    iv.sort()
+    for (s0, e0), (s1, e1) in zip(iv, iv[1:]):
+        if s1 < e0 - 1e-12:
+            overlaps += 1
+chk("per-link busy intervals are disjoint within a simulation", overlaps == 0)
+
+# --- 3. brownout shows up in the achieved/cap observation stream ---
+print("\n== brownout congestion signal (tuner observation stream) ==")
+tl = dynamic_timeline("brownout", t33, P, 64 << 10)
+rows_b = []
+simulate_packet_dyn_stats(plan33, 64 << 10, P, 4096, tl, "calendar", sink=rows_b)
+# mirror of tuner::online::obs_of_samples: (t, link, achieved/cap clamped)
+stream = [
+    (r["start_s"], r["link"], min(max(r["bytes"] / (r["end_s"] - r["start_s"]) / r["cap_bytes_per_s"], 0.0), 1.0))
+    for r in rows_b
+    if r["end_s"] > r["start_s"] and r["cap_bytes_per_s"] > 0
+]
+chk("observation stream non-empty", len(stream) > 0, f"{len(stream)} observations")
+chk("all cap ratios in (0, 1]", all(0.0 < ratio <= 1.0 for _, _, ratio in stream))
+degraded = [ratio for _, _, ratio in stream if ratio < 0.9]
+chk(
+    "brownout degrades achieved/cap on throttled links",
+    len(degraded) > 0,
+    f"{len(degraded)}/{len(stream)} rows below 0.9, min {min(r for _, _, r in stream):.3f}",
+)
+
+# --- 4. schema parity with the rust exporter / trace validator ---
+print("\n== telemetry schema parity with tools/check_trace.py ==")
+keys = set(rows[0])
+chk(
+    "mirror rows carry exactly the LinkSample keys",
+    keys == check_trace.ROW_KEYS,
+    f"{sorted(keys)}",
+)
+chk(
+    "check_trace validator accepts the mirror's telemetry rows",
+    check_trace.check_telemetry(rows) == [],
+)
+
+print()
+if fails:
+    print(f"{len(fails)} FAILURES: {fails}")
+    sys.exit(1)
+print("obs eval: telemetry is invisible, physical, and schema-locked")

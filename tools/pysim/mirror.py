@@ -1470,6 +1470,9 @@ class EventQueue:
             self.pops += 1
         return e
 
+    def size(self):
+        return len(self.heap) if self.heap is not None else self.cal.len
+
     def stats(self):
         return {
             "pushes": self.pushes,
@@ -1491,9 +1494,13 @@ def simulate_packet_batched(plan, m_bytes, params, mtu, queue="heap"):
     return completion, events
 
 
-def simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue="heap"):
+def simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue="heap", sink=None):
     """As simulate_packet_batched but also returns the queue op counters.
-    Mirror of packet::simulate_packet_plan_queue."""
+    Mirror of packet::simulate_packet_plan_queue. When `sink` is a list,
+    one per-link telemetry row (the mirror of obs::LinkSample — same keys
+    as TRACE.json's `link_telemetry`) is appended per busy interval;
+    sink=None skips telemetry entirely (the NoopSink path), and the
+    returned numbers must be identical either way (eval_obs.py pins it)."""
     n, nsteps = plan.n, plan.nsteps
     if nsteps == 0:
         return 0.0, 0, EventQueue(queue).stats()
@@ -1552,6 +1559,18 @@ def simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue="heap"):
                 batch_end = max(start + total / caps[l], ready)
                 free_at[l] = batch_end
                 tail_ready = batch_end + hops[l]
+                if sink is not None:
+                    sink.append(
+                        {
+                            "link": l,
+                            "step": k,
+                            "start_s": start,
+                            "end_s": batch_end,
+                            "bytes": total,
+                            "cap_bytes_per_s": caps[l],
+                            "queue_len": q.size(),
+                        }
+                    )
                 if hop + 1 == len(route):
                     # last link: the tail packet arrives per_hop after the
                     # batch fully serializes
@@ -1848,12 +1867,14 @@ def simulate_packet_dyn(plan, m_bytes, params, mtu, timeline, queue="heap"):
     return completion, events
 
 
-def simulate_packet_dyn_stats(plan, m_bytes, params, mtu, timeline, queue="heap"):
+def simulate_packet_dyn_stats(plan, m_bytes, params, mtu, timeline, queue="heap", sink=None):
     """Batched packet engine under a timeline: busy intervals split at
     epoch boundaries. Mirror of packet::simulate_packet_plan_timeline_queue
-    (op counters included)."""
+    (op counters included; `sink` as in simulate_packet_batched_stats —
+    `cap_bytes_per_s` stays the pristine capacity, so a brownout shows up
+    as achieved bandwidth below cap, never as a mutated cap column)."""
     if timeline.is_empty():
-        return simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue)
+        return simulate_packet_batched_stats(plan, m_bytes, params, mtu, queue, sink)
     n, nsteps = plan.n, plan.nsteps
     if nsteps == 0:
         return 0.0, 0, EventQueue(queue).stats()
@@ -1910,6 +1931,18 @@ def simulate_packet_dyn_stats(plan, m_bytes, params, mtu, timeline, queue="heap"
                 batch_end = max(end, ready)
                 free_at[l] = batch_end
                 tail_ready = batch_end + _hop_at(tracks[l], hops[l], batch_end)
+                if sink is not None:
+                    sink.append(
+                        {
+                            "link": l,
+                            "step": k,
+                            "start_s": start,
+                            "end_s": batch_end,
+                            "bytes": total,
+                            "cap_bytes_per_s": caps[l],
+                            "queue_len": q.size(),
+                        }
+                    )
                 if hop + 1 == len(route):
                     push(tail_ready, ("batch", mi, hop + 1, tail_ready))
                 else:

@@ -1,0 +1,98 @@
+"""Unit tests for tools/check_bench_regression.py (the CI perf-smoke gate).
+
+Run directly: `python3 tools/test_check_bench_regression.py`. Each case
+shells out to the real script so the exit codes tested here are exactly
+the ones CI acts on: 0 pass/skip, 1 regression, 2 usage/schema error.
+"""
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)), "check_bench_regression.py")
+
+
+def record(engine="rust", eps=None, events=None):
+    """A minimal trivance.bench_core.v1 record."""
+    eps = eps if eps is not None else {"heap": 1e6, "calendar": 2e6}
+    return {
+        "schema": "trivance.bench_core.v1",
+        "engine": engine,
+        "event_queue": [
+            {"kind": kind, "events": (events or {}).get(kind, 1000), "events_per_s": v}
+            for kind, v in sorted(eps.items())
+        ],
+    }
+
+
+class CheckBenchRegressionTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def write(self, name, rec):
+        path = os.path.join(self.dir.name, name)
+        with open(path, "w") as f:
+            json.dump(rec, f)
+        return path
+
+    def gate(self, *argv):
+        return subprocess.run(
+            [sys.executable, SCRIPT, *argv], capture_output=True, text=True
+        ).returncode
+
+    def test_wrong_argc_is_usage_error(self):
+        self.assertEqual(self.gate(), 2)
+        self.assertEqual(self.gate("only-one.json"), 2)
+
+    def test_missing_baseline_bootstraps(self):
+        new = self.write("new.json", record())
+        self.assertEqual(self.gate(os.path.join(self.dir.name, "absent.json"), new), 0)
+
+    def test_bad_schema_is_an_error(self):
+        base = self.write("base.json", {"schema": "something.else"})
+        new = self.write("new.json", record())
+        self.assertEqual(self.gate(base, new), 2)
+
+    def test_non_rust_baseline_skips_even_on_huge_regression(self):
+        base = self.write("base.json", record(engine="pysim-mirror"))
+        new = self.write("new.json", record(eps={"heap": 1.0, "calendar": 1.0}))
+        self.assertEqual(self.gate(base, new), 0)
+
+    def test_within_threshold_passes(self):
+        base = self.write("base.json", record())
+        new = self.write("new.json", record(eps={"heap": 0.8e6, "calendar": 1.6e6}))
+        self.assertEqual(self.gate(base, new), 0)
+
+    def test_improvement_passes(self):
+        base = self.write("base.json", record())
+        new = self.write("new.json", record(eps={"heap": 1.5e6, "calendar": 3e6}))
+        self.assertEqual(self.gate(base, new), 0)
+
+    def test_one_kind_regressing_past_threshold_fails(self):
+        base = self.write("base.json", record())
+        new = self.write("new.json", record(eps={"heap": 1e6, "calendar": 1.4e6}))
+        self.assertEqual(self.gate(base, new), 1)
+
+    def test_missing_kind_in_new_record_fails(self):
+        base = self.write("base.json", record())
+        new = self.write("new.json", record(eps={"heap": 1e6}))
+        self.assertEqual(self.gate(base, new), 1)
+
+    def test_queue_kinds_disagreeing_on_events_fails_any_engine(self):
+        # The bit-identity shadow check runs before the engine gate, so it
+        # bites even while the baseline is still pysim-generated.
+        base = self.write("base.json", record(engine="pysim-mirror"))
+        new = self.write(
+            "new.json", record(events={"heap": 1000, "calendar": 999})
+        )
+        self.assertEqual(self.gate(base, new), 1)
+
+
+if __name__ == "__main__":
+    unittest.main()
