@@ -6,6 +6,7 @@
 //!                   [--bw-gbps N] [--mode flow|packet] [--mtu BYTES]
 //! trivance validate --topo 27 [--algo A]
 //! trivance verify   [--topo 9]... [--all] [--out VERIFY_report.json] [--mutants]
+//!                   [--pass NAME]... [--list-passes]
 //!                   [--numeric [--algo A] [--block-len N] [--pjrt]]
 //! trivance pattern  --n 9 [--algo trivance|bruck]
 //! trivance optimality --topo 81
@@ -156,6 +157,7 @@ USAGE:
                     [--bw-gbps 800] [--alpha-us 1.5] [--mtu 4096] [--no-plan-cache]
   trivance validate --topo 27 [--algo A]
   trivance verify   [--topo 9]... [--all] [--out VERIFY_report.json]
+                    [--pass NAME]... [--list-passes]
                     [--mutants] [--numeric [--algo A] [--block-len 8] [--pjrt]
                     [--reducer scalar|vector]]
   trivance pattern  --n 9 [--algo trivance|bruck]
@@ -193,15 +195,23 @@ rejected as stale for a dynamic lookup and vice versa); recommend --scenario
 accepts the dynamic preset names and sizes above the tuned ladder are
 refused (OutOfRange) instead of extrapolated.
 
-verify statically certifies every registry collective — dataflow proved
-exact (no missing or double-counted contribution), per-(node, step,
-direction) port usage within the fabric budget, per-algo congestion and
-latency/bandwidth optimality classification — without running a simulator;
-the default/--all topology set is the acceptance six (8, 9, 27, 3x3, 8x8,
-4x4x4). --out writes the machine-readable VERIFY_report.json; --mutants
-runs the seeded mutation-kill suite instead (the verifier must kill >= 95%
-of drop-a-send / swap-contributors / duplicate-a-reduce / shift-a-port
-mutants); --numeric is the legacy end-to-end numeric check on real vectors.
+verify statically certifies every registry collective through the pass
+manager (verify::passes) — dataflow proved exact, WAR/WAW hazards
+classified, deadlock-freedom by forward availability, peak live memory
+within the variant's certified bound, per-(node, step, direction) port
+usage within the fabric budget, per-algo congestion, latency/bandwidth
+optimality classification, and a symbolic cost certificate cross-checked
+against the congestion audit — without running a simulator; the
+default/--all topology set is the acceptance six (8, 9, 27, 3x3, 8x8,
+4x4x4). --list-passes names the passes and their dependencies;
+--pass NAME (repeatable) runs just those passes (dependencies pulled in
+automatically) and prints per-collective findings. --out writes the
+machine-readable VERIFY_report.json (schema trivance.verify.v2, with
+per-pass wall-clock timing); --mutants runs the seeded mutation-kill
+suite instead (the verifier must kill >= 95% of drop-a-send /
+swap-contributors / duplicate-a-reduce / shift-a-port / inject-hazard
+mutants); --numeric is the legacy end-to-end numeric check on real
+vectors.
 
 --threads 0 (default) uses every core; sweep results are identical for any
 thread count. Simulation plans are shared process-wide via a bounded LRU
@@ -901,6 +911,18 @@ const VERIFY_TOPOS: [&str; 6] = ["8", "9", "27", "3x3", "8x8", "4x4x4"];
 
 fn verify_cmd(args: &Args) -> Result<(), String> {
     apply_engine_flags(args)?;
+    if args.has("list-passes") {
+        println!("passes (canonical order; --pass selects a subset, dependencies included):");
+        for &p in &crate::verify::passes::PASS_NAMES {
+            let deps = crate::verify::passes::pass_deps(p);
+            if deps.is_empty() {
+                println!("  {p}");
+            } else {
+                println!("  {p} (after {})", deps.join(", "));
+            }
+        }
+        return Ok(());
+    }
     if args.has("numeric") {
         return verify_numeric_cmd(args);
     }
@@ -922,6 +944,10 @@ fn verify_cmd(args: &Args) -> Result<(), String> {
     } else {
         named.iter().map(|s| parse_topo(s)).collect::<Result<_, _>>()?
     };
+    let requested = args.getall("pass");
+    if !requested.is_empty() {
+        return verify_passes_cmd(&topos, &requested);
+    }
     let mut reports = Vec::new();
     for t in &topos {
         let rep = crate::verify::certify_registry(t)
@@ -929,10 +955,51 @@ fn verify_cmd(args: &Args) -> Result<(), String> {
         println!("{}", crate::verify::render_report(&rep));
         reports.push(rep);
     }
+    println!("per-pass wall-clock (summed over {} topologies):", reports.len());
+    for &p in &crate::verify::passes::PASS_NAMES {
+        let ms: f64 = reports
+            .iter()
+            .flat_map(|r| &r.timings)
+            .filter(|tm| tm.pass == p)
+            .map(|tm| tm.seconds * 1e3)
+            .sum();
+        println!("  {p:<12} {ms:9.3} ms");
+    }
     if let Some(path) = args.get("out") {
         std::fs::write(path, crate::verify::report_json(&reports))
             .map_err(|e| format!("writing {path}: {e}"))?;
         println!("wrote {path}");
+    }
+    Ok(())
+}
+
+/// `verify --pass NAME...`: run the selected passes (plus dependencies)
+/// over every registry build on every topo, printing typed findings and
+/// per-pass timing; any `error`-severity finding fails the command.
+fn verify_passes_cmd(topos: &[Torus], requested: &[&str]) -> Result<(), String> {
+    use crate::verify::passes::{run_passes, select_passes, Severity};
+    let sel = select_passes(requested)?;
+    println!("running passes: {}", sel.join(", "));
+    let mut failures = 0usize;
+    for t in topos {
+        for algo in Algo::ALL {
+            for variant in Variant::ALL {
+                let Ok(b) = build(algo, variant, t) else { continue };
+                let out = run_passes(&b, t, &sel);
+                let total_ms: f64 = out.timings.iter().map(|tm| tm.seconds * 1e3).sum();
+                let status = if out.first_error().is_some() { "FAIL" } else { "ok" };
+                println!("{:?} {:<24} {status} ({total_ms:.2} ms)", t.dims(), out.name);
+                for f in &out.findings {
+                    println!("    [{}] {}: {}", f.severity.label(), f.pass, f.message);
+                    if f.severity == Severity::Error {
+                        failures += 1;
+                    }
+                }
+            }
+        }
+    }
+    if failures > 0 {
+        return Err(format!("{failures} error finding(s) across the swept builds"));
     }
     Ok(())
 }

@@ -122,7 +122,8 @@ impl Schedule {
     /// Append an empty step and return a mutable reference to it.
     pub fn push_step(&mut self) -> &mut Step {
         self.steps.push(Step::new(self.n));
-        self.steps.last_mut().unwrap()
+        let last = self.steps.len() - 1;
+        &mut self.steps[last]
     }
 
     /// Total payload injected by `node` over the whole schedule, in units

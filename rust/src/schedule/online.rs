@@ -351,6 +351,7 @@ mod tests {
     use crate::algo::{build, Algo, Variant};
     use crate::sim::{simulate_plan, SimMode};
     use crate::topology::{Link, Torus};
+    use crate::verify::diff::certify_response;
     use crate::verify::{verify_dataflow, verify_dataflow_surviving, verify_plan};
 
     fn cable(t: &Torus, node: u32) -> usize {
@@ -384,6 +385,8 @@ mod tests {
         assert_eq!(resp.schedule.num_messages(), b.net.num_messages());
         // the identity response re-verifies statically before simulation
         verify_dataflow(&resp.schedule).unwrap_or_else(|e| panic!("{e}"));
+        // and trivially diffs clean against the pre-fault collective
+        certify_response(&b, &base, &resp).unwrap_or_else(|e| panic!("{e}"));
         // and the compiled plan is the plain static plan (same routes)
         let plan = resp.build_plan(&base).unwrap();
         let r = simulate_plan(&plan, 4096, &p, SimMode::Flow);
@@ -425,6 +428,9 @@ mod tests {
         let mut alive = vec![true; 9];
         alive[1] = false;
         verify_dataflow_surviving(&resp.schedule, &alive).unwrap_or_else(|e| panic!("{e}"));
+        // the full differential proof: prefix verbatim, body shrink-only,
+        // cleanup alive-to-alive, node 1 dead from its rewrite stage on
+        certify_response(&b, &base, &resp).unwrap_or_else(|e| panic!("{e}"));
         // and nothing touches the dead node after the fault
         for step in resp.schedule.steps.iter().skip(resp.actions[1].0) {
             assert!(step.sends[1].is_empty(), "dead node still sends");

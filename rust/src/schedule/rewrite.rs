@@ -551,7 +551,9 @@ mod tests {
     use crate::algo::rings::{trivance, Order};
     use crate::algo::{build, Algo, Variant};
     use crate::topology::Torus;
+    use crate::verify::diff::certify_rewrite;
     use crate::verify::{verify_dataflow, verify_dataflow_surviving};
+    use std::collections::HashMap;
 
     fn down_link_of(t: &Torus, node: u32) -> usize {
         t.link_index(Link { node, dim: 0, dir: 1 })
@@ -568,6 +570,9 @@ mod tests {
         // validator and the typed static dataflow proof
         validate_allreduce(&rw).unwrap_or_else(|e| panic!("{e}"));
         verify_dataflow(&rw).unwrap_or_else(|e| panic!("{e}"));
+        // and differentially certified equivalent to the original
+        certify_rewrite(&s, &rw, fault.step, &HashMap::new(), None)
+            .unwrap_or_else(|e| panic!("{e}"));
         // post-fault steps never route over the dead link nominally
         let post = fault.apply(&base);
         for (k, step) in rw.steps.iter().enumerate().skip(fault.step) {
@@ -613,6 +618,10 @@ mod tests {
                             .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                         verify_dataflow(&rw)
                             .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
+                        // differentially certified against the virtual exec
+                        // schedule through the host map
+                        certify_rewrite(&b.exec, &rw, fault.step, &HashMap::new(), Some(&pad.hosts))
+                            .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                         // and collapses onto the real torus with no send
                         // nominally crossing the dead link
                         let net = rewrite_collective_for_faults(
@@ -643,6 +652,8 @@ mod tests {
                         .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                     verify_dataflow(&rw)
                         .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
+                    certify_rewrite(&b.net, &rw, fault.step, &HashMap::new(), None)
+                        .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                 }
             }
         }
@@ -670,6 +681,10 @@ mod tests {
         let mut alive = vec![true; 9];
         alive[4] = false;
         verify_dataflow_surviving(&rw, &alive).unwrap_or_else(|e| panic!("{e}"));
+        // differential certification: the rewrite is the original minus
+        // node 4's dead contributions from its death step on
+        let dead = HashMap::from([(4u32, fault.step)]);
+        certify_rewrite(&s, &rw, fault.step, &dead, None).unwrap_or_else(|e| panic!("{e}"));
     }
 
     #[test]
@@ -708,6 +723,11 @@ mod tests {
         let rw2 = rewrite_for_faults(&s, &base, &[f1.clone(), f2.clone()]).unwrap();
         validate_allreduce(&rw2).unwrap_or_else(|e| panic!("{e}"));
         verify_dataflow(&rw2).unwrap_or_else(|e| panic!("{e}"));
+        // the composed rewrite still diffs clean against the ORIGINAL:
+        // shrink relations compose, and the second fault's edits land in
+        // the first rewrite's cleanup zone
+        certify_rewrite(&s, &rw2, f1.step, &HashMap::new(), None)
+            .unwrap_or_else(|e| panic!("{e}"));
         // identical to applying the second rewrite by hand against rw1 on
         // the post-f1 model
         let manual = rewrite_for_fault(&rw1, &f1.apply(&base), &f2).unwrap();
@@ -753,6 +773,10 @@ mod tests {
         let mut alive = vec![true; 9];
         alive[1] = false;
         verify_dataflow_surviving(&rw2, &alive).unwrap_or_else(|e| panic!("{e}"));
+        // differentially: node 1 is dead only from f2's step, so its
+        // earlier sends (including the first rewrite's) stay legitimate
+        let dead = HashMap::from([(1u32, f2.step)]);
+        certify_rewrite(&s, &rw2, 1, &dead, None).unwrap_or_else(|e| panic!("{e}"));
     }
 
     #[test]

@@ -1,0 +1,200 @@
+//! Symbolic cost certificates: size-independent coefficients of a
+//! closed-form completion bound, derived statically from the IR.
+//!
+//! For a schedule priced on a [`NetModel`], the certificate pins four
+//! coefficients such that for every vector size `m`:
+//!
+//! ```text
+//! T(m) ≤ steps·α + tx_rel·(8m/bw) + hop_lat_rel·link_lat + hop_proc_rel·hop_lat
+//! ```
+//!
+//! * `tx_rel` — the serialization sum: Σ over steps of the busiest
+//!   *scaled* link load (`load/bw_scale`), i.e. the Eq. 1 bottleneck term.
+//!   On the uniform fabric this equals the congestion audit's
+//!   `tx_delay_rel` exactly — the pass manager gates on agreement to
+//!   1e-12, so the two independent implementations cross-check each other.
+//! * `hop_lat_rel` / `hop_proc_rel` — Σ over steps of the longest route's
+//!   latency / processing scale sums (the per-step critical path pays each
+//!   hop's propagation and forwarding once).
+//!
+//! Unroutable sends (a down set disconnecting the pair) are priced by the
+//! surviving routes, matching `schedule::online`'s staged estimates. The
+//! certificate is audited against *measured* `sim::flow` completions in
+//! `tools/pysim/eval_passes.py` (and `rust/tests/verify_passes.rs`): the
+//! flow engine's round-robin sharing overlaps steps, so measurements run
+//! at or under the bound within a pinned tolerance (worst measured
+//! deviation 0.176 native / 0.249 padded across the full registry ×
+//! {4 KiB..16 MiB} — gated at 0.22 / 0.30). A measurement exceeding
+//! `bound·(1+tol)` is a typed [`VerifyError::CostRegression`].
+
+use super::VerifyError;
+use crate::cost::NetParams;
+use crate::net::NetModel;
+use crate::schedule::Schedule;
+
+/// Size-independent cost coefficients of one schedule on one fabric.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CostCertificate {
+    pub steps: usize,
+    /// Σ per-step busiest scaled link load (units of `m`).
+    pub tx_rel: f64,
+    /// Σ per-step longest route's propagation-latency scale sum.
+    pub hop_lat_rel: f64,
+    /// Σ per-step longest route's hop-processing scale sum.
+    pub hop_proc_rel: f64,
+}
+
+impl CostCertificate {
+    /// Evaluate the closed-form bound for an `m_bytes` AllReduce.
+    pub fn bound_s(&self, m_bytes: u64, p: &NetParams) -> f64 {
+        self.steps as f64 * p.alpha_s
+            + self.tx_rel * m_bytes as f64 * 8.0 / p.link_bw_bps
+            + self.hop_lat_rel * p.link_latency_s
+            + self.hop_proc_rel * p.hop_latency_s
+    }
+}
+
+/// Derive the certificate of `s` priced on `model` (module docs).
+pub fn cost_certificate(s: &Schedule, model: &NetModel) -> CostCertificate {
+    let t = model.torus();
+    assert_eq!(s.n, t.n(), "cost certificate prices the net schedule on its real torus");
+    let mut tx_rel = 0.0f64;
+    let mut hop_lat_rel = 0.0f64;
+    let mut hop_proc_rel = 0.0f64;
+    let mut link_rel = vec![0.0f64; t.num_links()];
+    for step in &s.steps {
+        link_rel.fill(0.0);
+        let mut lat = 0.0f64;
+        let mut proc = 0.0f64;
+        for (src, sends) in step.sends.iter().enumerate() {
+            for snd in sends {
+                let Ok(route) = model.try_route(src as u32, snd.to, snd.route) else {
+                    continue; // partitioned pair: priced by surviving routes
+                };
+                let rel = snd.rel_bytes(s.n_blocks);
+                let mut rlat = 0.0f64;
+                let mut rproc = 0.0f64;
+                for l in &route {
+                    let idx = t.link_index(*l);
+                    link_rel[idx] += rel;
+                    rlat += model.lat_scale(idx);
+                    rproc += model.proc_scale(idx);
+                }
+                lat = lat.max(rlat);
+                proc = proc.max(rproc);
+            }
+        }
+        let step_tx = link_rel
+            .iter()
+            .enumerate()
+            .map(|(l, &r)| r / model.bw_scale(l))
+            .fold(0.0f64, f64::max);
+        tx_rel += step_tx;
+        hop_lat_rel += lat;
+        hop_proc_rel += proc;
+    }
+    CostCertificate { steps: s.num_steps(), tx_rel, hop_lat_rel, hop_proc_rel }
+}
+
+/// The cross-check gate (module docs): a measured completion may not
+/// exceed the certified bound by more than `tol_rel` (relative).
+pub fn require_within(
+    cert: &CostCertificate,
+    m_bytes: u64,
+    p: &NetParams,
+    measured_s: f64,
+    tol_rel: f64,
+) -> Result<(), VerifyError> {
+    let bound = cert.bound_s(m_bytes, p);
+    if measured_s > bound * (1.0 + tol_rel) + super::EPS {
+        return Err(VerifyError::CostRegression {
+            detail: format!(
+                "measured {measured_s:.3e}s exceeds the certified bound {bound:.3e}s \
+                 by more than {:.0}%",
+                tol_rel * 100.0
+            ),
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockset::BlockSet;
+    use crate::schedule::{Kind, Piece, RouteHint, Send};
+    use crate::topology::Torus;
+
+    fn tiny() -> Schedule {
+        // ring-3, one step: each node reduces its full vector into both
+        // neighbors — per-step busiest link carries exactly 1.0
+        let n = 3u32;
+        let mut s = Schedule::new("tiny", n, 1);
+        let step = s.push_step();
+        for r in 0..n {
+            for d in [1i64, -1] {
+                let to = (i64::from(r) + d).rem_euclid(i64::from(n)) as u32;
+                step.push(
+                    r,
+                    Send {
+                        to,
+                        pieces: vec![Piece {
+                            blocks: BlockSet::singleton(0, 1),
+                            contrib: BlockSet::singleton(r, n),
+                            kind: Kind::Reduce,
+                        }],
+                        route: RouteHint::Minimal,
+                    },
+                );
+            }
+        }
+        s
+    }
+
+    #[test]
+    fn tiny_certificate_is_exact() {
+        let t = Torus::ring(3);
+        let cert = cost_certificate(&tiny(), &NetModel::uniform(&t));
+        assert_eq!(cert.steps, 1);
+        assert!((cert.tx_rel - 1.0).abs() < 1e-12, "{}", cert.tx_rel);
+        // every route is one hop on the uniform fabric
+        assert!((cert.hop_lat_rel - 1.0).abs() < 1e-12);
+        assert!((cert.hop_proc_rel - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn bound_arithmetic_matches_the_formula() {
+        let t = Torus::ring(3);
+        let cert = cost_certificate(&tiny(), &NetModel::uniform(&t));
+        let p = NetParams::default();
+        let m = 1u64 << 20;
+        let want = p.alpha_s + m as f64 * 8.0 / p.link_bw_bps + p.link_latency_s + p.hop_latency_s;
+        assert!((cert.bound_s(m, &p) - want).abs() < 1e-18);
+    }
+
+    #[test]
+    fn golden_cost_regression_is_typed() {
+        let t = Torus::ring(3);
+        let cert = cost_certificate(&tiny(), &NetModel::uniform(&t));
+        let p = NetParams::default();
+        let bound = cert.bound_s(4096, &p);
+        require_within(&cert, 4096, &p, bound, 0.0).unwrap();
+        match require_within(&cert, 4096, &p, 2.0 * bound, 0.25) {
+            Err(VerifyError::CostRegression { .. }) => {}
+            other => panic!("expected CostRegression, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn straggler_link_scales_the_serialization_term() {
+        let t = Torus::ring(3);
+        let mut m = NetModel::uniform(&t);
+        // slow every link 4x: tx_rel quadruples, hop terms stay
+        for l in 0..t.num_links() {
+            m.set_class(l, crate::net::LinkClass::slowdown(4.0));
+        }
+        let cert = cost_certificate(&tiny(), &m);
+        assert!((cert.tx_rel - 4.0).abs() < 1e-12, "{}", cert.tx_rel);
+        assert!((cert.hop_lat_rel - 1.0).abs() < 1e-12);
+    }
+}

@@ -1,0 +1,201 @@
+//! Deadlock-freedom: forward-availability causality over the schedule and
+//! typed stage-order certification for staged plans.
+//!
+//! A static schedule cannot literally deadlock — steps are globally
+//! ordered — but a *rewrite or generator bug* can emit a send that
+//! consumes a contribution produced only in a LATER step. Executed by a
+//! real runtime that blocks each send until its payload is available,
+//! such a schedule stalls forever: a dependency cycle through the step
+//! barrier. [`audit_deadlock`] proves the absence of that cycle by
+//! forward availability: walking steps in order, every Reduce's claimed
+//! contribution must already be available at the sender (union totals
+//! only — the atom *algebra* is the dataflow pass's job, which is why the
+//! pass manager orders `deadlock` after `dataflow`), and every `Set`
+//! requires the sender to have finished the block at the step's start.
+//!
+//! Like the dataflow proof, this runs on the **exec** schedule (virtual
+//! ranks for padded builds): collapsing co-hosted virtual ranks merges
+//! their contribution sets, so the collapsed net schedule is not a valid
+//! reduction trace and legitimately fails availability.
+//!
+//! [`audit_stages`] is the typed twin of [`crate::sim::SimPlan::build_staged`]'s
+//! assertions: a fault-response stage stack must be sorted by `from_step`
+//! with every stage model on the plan's topology — violations surface as
+//! [`VerifyError::StageOrderViolation`] instead of a panic inside the
+//! plan compiler.
+
+use super::VerifyError;
+use crate::blockset::BlockSet;
+use crate::net::NetModel;
+use crate::schedule::{Kind, Schedule};
+use crate::topology::Torus;
+
+/// Prove every consumed contribution is produced strictly earlier
+/// (module docs). Runs on the exec schedule.
+pub fn audit_deadlock(s: &Schedule) -> Result<(), VerifyError> {
+    let n = s.n;
+    let nb = s.n_blocks as usize;
+    let mut avail: Vec<BlockSet> = (0..n)
+        .flat_map(|r| (0..nb).map(move |_| BlockSet::singleton(r, n)))
+        .collect();
+    for (k, step) in s.steps.iter().enumerate() {
+        // availability snapshot at the step's start: a send may only
+        // consume what was produced in strictly earlier steps
+        let snap = avail.clone();
+        for (src, sends) in step.sends.iter().enumerate() {
+            for snd in sends {
+                for p in &snd.pieces {
+                    for b in p.blocks.iter() {
+                        if b as usize >= nb || snd.to >= n {
+                            continue; // dataflow reports these as MalformedSend
+                        }
+                        let cell = src * nb + b as usize;
+                        match p.kind {
+                            Kind::Reduce => {
+                                if !snap[cell].is_superset(&p.contrib) {
+                                    let need: Vec<u32> =
+                                        p.contrib.difference(&snap[cell]).iter().collect();
+                                    return Err(VerifyError::DeadlockCycle {
+                                        step: k,
+                                        src: src as u32,
+                                        dst: snd.to,
+                                        block: b,
+                                        detail: format!(
+                                            "waits on contribution(s) {need:?} produced \
+                                             in a later step"
+                                        ),
+                                    });
+                                }
+                                avail[snd.to as usize * nb + b as usize].union_with(&p.contrib);
+                            }
+                            Kind::Set => {
+                                if !snap[cell].is_full(n) {
+                                    return Err(VerifyError::DeadlockCycle {
+                                        step: k,
+                                        src: src as u32,
+                                        dst: snd.to,
+                                        block: b,
+                                        detail: "Set of a block the sender only completes \
+                                                 in a later step"
+                                            .into(),
+                                    });
+                                }
+                                avail[snd.to as usize * nb + b as usize] = BlockSet::full(n);
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// Typed stage-order certification for a fault-response stage stack
+/// (module docs): `from_step`s non-decreasing, every model on `t`.
+pub fn audit_stages(stages: &[(u32, NetModel)], t: &Torus) -> Result<(), VerifyError> {
+    let mut prev: Option<u32> = None;
+    for (i, (from, m)) in stages.iter().enumerate() {
+        if m.torus().dims() != t.dims() {
+            return Err(VerifyError::StageOrderViolation {
+                stage: i,
+                detail: format!(
+                    "stage model topology {:?} != plan topology {:?}",
+                    m.torus().dims(),
+                    t.dims()
+                ),
+            });
+        }
+        if let Some(p) = prev {
+            if *from < p {
+                return Err(VerifyError::StageOrderViolation {
+                    stage: i,
+                    detail: format!("from_step {from} < previous stage's {p}"),
+                });
+            }
+        }
+        prev = Some(*from);
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::schedule::{Piece, RouteHint, Send};
+
+    fn reduce(to: u32, contrib: &[u32], n: u32) -> Send {
+        Send {
+            to,
+            pieces: vec![Piece {
+                blocks: BlockSet::singleton(0, 1),
+                contrib: BlockSet::from_ranks(contrib, n),
+                kind: Kind::Reduce,
+            }],
+            route: RouteHint::Minimal,
+        }
+    }
+
+    #[test]
+    fn forward_chain_is_deadlock_free() {
+        // 0→1 ({0}), then 1→2 ({0,1}): strictly forward
+        let mut s = Schedule::new("fwd", 3, 1);
+        s.push_step().push(0, reduce(1, &[0], 3));
+        s.push_step().push(1, reduce(2, &[0, 1], 3));
+        audit_deadlock(&s).unwrap();
+    }
+
+    #[test]
+    fn golden_consume_before_produce_is_a_typed_cycle() {
+        // step 0: node 1 ships {0,1} — but {0} only arrives in step 1
+        let mut s = Schedule::new("cycle", 3, 1);
+        s.push_step().push(1, reduce(2, &[0, 1], 3));
+        s.push_step().push(0, reduce(1, &[0], 3));
+        match audit_deadlock(&s) {
+            Err(VerifyError::DeadlockCycle { step: 0, src: 1, dst: 2, block: 0, .. }) => {}
+            other => panic!("expected a DeadlockCycle at step 0, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn same_step_consume_is_a_cycle_not_a_race() {
+        // both sends in ONE step: 0→1 ({0}) and 1→2 ({0,1}) — under the
+        // receive barrier node 1 cannot yet hold {0}
+        let mut s = Schedule::new("same-step", 3, 1);
+        let st = s.push_step();
+        st.push(0, reduce(1, &[0], 3));
+        st.push(1, reduce(2, &[0, 1], 3));
+        assert!(matches!(
+            audit_deadlock(&s),
+            Err(VerifyError::DeadlockCycle { step: 0, src: 1, .. })
+        ));
+    }
+
+    #[test]
+    fn golden_unsorted_stages_are_typed() {
+        let t = Torus::ring(9);
+        let m = NetModel::uniform(&t);
+        let stages = vec![(2u32, m.clone()), (1u32, m.clone())];
+        match audit_stages(&stages, &t) {
+            Err(VerifyError::StageOrderViolation { stage: 1, .. }) => {}
+            other => panic!("expected StageOrderViolation at stage 1, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn golden_wrong_topology_stage_is_typed() {
+        let t = Torus::ring(9);
+        let other = NetModel::uniform(&Torus::new(&[3, 3]));
+        match audit_stages(&[(0u32, other)], &t) {
+            Err(VerifyError::StageOrderViolation { stage: 0, .. }) => {}
+            got => panic!("expected StageOrderViolation at stage 0, got {got:?}"),
+        }
+    }
+
+    #[test]
+    fn sorted_matching_stages_pass() {
+        let t = Torus::ring(9);
+        let m = NetModel::uniform(&t);
+        audit_stages(&[(0u32, m.clone()), (1, m.clone()), (1, m)], &t).unwrap();
+    }
+}

@@ -1,0 +1,245 @@
+//! Within-step write-hazard analysis on (rank, block) cells.
+//!
+//! The IR's receive barrier (every send reads the *start-of-step*
+//! snapshot) makes concurrent traffic into one cell safe — but only for
+//! commutative Reduce landings, and only for engines that actually
+//! implement the barrier. This pass classifies the two ways a step can
+//! race:
+//!
+//! * **WAW conflict** — a `Set` lands in a cell that takes *any other
+//!   write* the same step (`Set`+`Set` or `Set`+`Reduce`). The final cell
+//!   value depends on in-step delivery order: a race under ANY engine,
+//!   barrier or not. Concurrent Reduces into one cell are *not* WAW — the
+//!   reduction is commutative, and the dataflow pass separately proves
+//!   their contributions disjoint.
+//! * **WAR cell** — an incoming write into a cell whose rank also *sends
+//!   from* that block the same step. Safe only behind the receive barrier
+//!   (i.e. the executor must double-buffer); an in-place engine without a
+//!   barrier would ship partially-overwritten data.
+//!
+//! The pass manager's policy ([`super::passes`]): WAW is always an error;
+//! WAR is an error on bandwidth (`B`) variants — whose in-place streaming
+//! invariant forbids barrier reliance — and an informational finding on
+//! latency (`L`) variants. The pinned per-collective WAR counts live in
+//! `tools/pysim/eval_passes.py`; WAW is zero on every registry build.
+//!
+//! [`super::mutate`]'s `InjectHazard` corruptor appends a `Set` into a
+//! cell that already absorbs a Reduce — a mutant only this pass can see
+//! (the dataflow lattice replays sends in a fixed order and may still
+//! complete).
+
+use super::VerifyError;
+use crate::schedule::{Kind, Schedule};
+
+/// Aggregate hazard profile of one schedule (summed over steps; each
+/// (step, rank, block) cell counts once).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct HazardAudit {
+    /// Cells written in a step whose rank also sends from that block the
+    /// same step (barrier-dependent).
+    pub war_cells: u64,
+    /// Cells where a `Set` races another write in one step.
+    pub waw_conflicts: u64,
+    /// `war_cells == 0`: the schedule is correct even without the receive
+    /// barrier (no double-buffering needed).
+    pub barrier_free: bool,
+}
+
+/// Per-step scratch: write counts, set flags, read flags over the dense
+/// `(rank, block)` cell space.
+struct StepCells {
+    nb: usize,
+    write_cnt: Vec<u32>,
+    write_set: Vec<bool>,
+    reads: Vec<bool>,
+}
+
+impl StepCells {
+    fn new(n: usize, nb: usize) -> StepCells {
+        StepCells {
+            nb,
+            write_cnt: vec![0; n * nb],
+            write_set: vec![false; n * nb],
+            reads: vec![false; n * nb],
+        }
+    }
+
+    fn clear(&mut self) {
+        self.write_cnt.fill(0);
+        self.write_set.fill(false);
+        self.reads.fill(false);
+    }
+
+    /// Record one step's sends; out-of-range blocks are skipped here (the
+    /// dataflow pass reports them as typed [`VerifyError::MalformedSend`]s).
+    fn record(&mut self, step: &crate::schedule::Step, n_blocks: u32) {
+        for (src, sends) in step.sends.iter().enumerate() {
+            for snd in sends {
+                for p in &snd.pieces {
+                    for b in p.blocks.iter() {
+                        if b >= n_blocks {
+                            continue;
+                        }
+                        let wi = snd.to as usize * self.nb + b as usize;
+                        self.write_cnt[wi] += 1;
+                        if p.kind == Kind::Set {
+                            self.write_set[wi] = true;
+                        }
+                        self.reads[src * self.nb + b as usize] = true;
+                    }
+                }
+            }
+        }
+    }
+}
+
+/// Count WAR cells and WAW conflicts over the whole schedule (module
+/// docs). Purely structural — never fails; policy lives in the pass
+/// manager.
+pub fn audit_hazards(s: &Schedule) -> HazardAudit {
+    let (n, nb) = (s.n as usize, s.n_blocks as usize);
+    let mut cells = StepCells::new(n, nb);
+    let mut audit = HazardAudit { war_cells: 0, waw_conflicts: 0, barrier_free: true };
+    for step in &s.steps {
+        cells.clear();
+        cells.record(step, s.n_blocks);
+        for cell in 0..n * nb {
+            if cells.write_cnt[cell] > 1 && cells.write_set[cell] {
+                audit.waw_conflicts += 1;
+            }
+            if cells.write_cnt[cell] > 0 && cells.reads[cell] {
+                audit.war_cells += 1;
+            }
+        }
+    }
+    audit.barrier_free = audit.war_cells == 0;
+    audit
+}
+
+/// First WAW race as a typed error, or `None` when the schedule is
+/// WAW-free. `Some` exactly when [`audit_hazards`] counts
+/// `waw_conflicts > 0`.
+pub fn first_waw(s: &Schedule) -> Option<VerifyError> {
+    first_hazard(s, true)
+}
+
+/// First WAR cell as a typed error, or `None` when the schedule is
+/// barrier-free. `Some` exactly when [`audit_hazards`] counts
+/// `war_cells > 0`.
+pub fn first_war(s: &Schedule) -> Option<VerifyError> {
+    first_hazard(s, false)
+}
+
+fn first_hazard(s: &Schedule, waw: bool) -> Option<VerifyError> {
+    let (n, nb) = (s.n as usize, s.n_blocks as usize);
+    let mut cells = StepCells::new(n, nb);
+    for (k, step) in s.steps.iter().enumerate() {
+        cells.clear();
+        cells.record(step, s.n_blocks);
+        for cell in 0..n * nb {
+            let hit = if waw {
+                cells.write_cnt[cell] > 1 && cells.write_set[cell]
+            } else {
+                cells.write_cnt[cell] > 0 && cells.reads[cell]
+            };
+            if hit {
+                return Some(VerifyError::WriteHazard {
+                    step: k,
+                    node: (cell / nb) as u32,
+                    block: (cell % nb) as u32,
+                    detail: if waw {
+                        format!(
+                            "{} concurrent writes including a Set — the cell value \
+                             depends on in-step delivery order",
+                            cells.write_cnt[cell]
+                        )
+                    } else {
+                        "cell is written while its rank sends from the same block \
+                         (WAR: correct only behind the receive barrier)"
+                            .into()
+                    },
+                });
+            }
+        }
+    }
+    None
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockset::BlockSet;
+    use crate::schedule::{Piece, RouteHint, Send};
+
+    fn reduce(to: u32, block: u32, contrib: u32, n: u32, nb: u32) -> Send {
+        Send {
+            to,
+            pieces: vec![Piece {
+                blocks: BlockSet::singleton(block, nb),
+                contrib: BlockSet::singleton(contrib, n),
+                kind: Kind::Reduce,
+            }],
+            route: RouteHint::Minimal,
+        }
+    }
+
+    fn set(to: u32, block: u32, n: u32, nb: u32) -> Send {
+        Send {
+            to,
+            pieces: vec![Piece {
+                blocks: BlockSet::singleton(block, nb),
+                contrib: BlockSet::full(n),
+                kind: Kind::Set,
+            }],
+            route: RouteHint::Minimal,
+        }
+    }
+
+    #[test]
+    fn concurrent_reduces_are_not_waw() {
+        // nodes 1 and 2 both reduce into node 0's block 0 in one step:
+        // commutative, disjoint contributions — no WAW, but node 0 is not
+        // sending so no WAR either
+        let mut s = Schedule::new("r", 3, 1);
+        let st = s.push_step();
+        st.push(1, reduce(0, 0, 1, 3, 1));
+        st.push(2, reduce(0, 0, 2, 3, 1));
+        let a = audit_hazards(&s);
+        assert_eq!(a.waw_conflicts, 0);
+        assert_eq!(a.war_cells, 0);
+        assert!(a.barrier_free);
+        assert!(first_waw(&s).is_none());
+    }
+
+    #[test]
+    fn set_racing_a_reduce_is_waw() {
+        let mut s = Schedule::new("w", 3, 1);
+        let st = s.push_step();
+        st.push(1, reduce(0, 0, 1, 3, 1));
+        st.push(2, set(0, 0, 3, 1));
+        let a = audit_hazards(&s);
+        assert_eq!(a.waw_conflicts, 1);
+        match first_waw(&s) {
+            Some(VerifyError::WriteHazard { step: 0, node: 0, block: 0, .. }) => {}
+            other => panic!("expected a WAW WriteHazard at (0, 0, 0), got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn sender_receiving_into_a_read_block_is_war() {
+        // node 0 sends from block 0 while node 1 reduces into node 0's
+        // block 0 — barrier-dependent
+        let mut s = Schedule::new("war", 3, 1);
+        let st = s.push_step();
+        st.push(0, reduce(2, 0, 0, 3, 1));
+        st.push(1, reduce(0, 0, 1, 3, 1));
+        let a = audit_hazards(&s);
+        assert_eq!(a.war_cells, 1);
+        assert_eq!(a.waw_conflicts, 0);
+        assert!(!a.barrier_free);
+        match first_war(&s) {
+            Some(VerifyError::WriteHazard { step: 0, node: 0, block: 0, .. }) => {}
+            other => panic!("expected a WAR WriteHazard at (0, 0, 0), got {other:?}"),
+        }
+    }
+}

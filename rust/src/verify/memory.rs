@@ -1,0 +1,186 @@
+//! Memory certification: peak live bytes per real node per step, against
+//! a per-variant certified bound.
+//!
+//! Under receive-barrier execution a node holds, at any step, one
+//! full-vector accumulator per hosted virtual rank **plus** every
+//! incoming buffer landing that step (incoming data cannot be folded into
+//! the accumulator until the step's barrier). [`audit_memory`] walks the
+//! exec schedule and reports the peak of that live set, in units of the
+//! vector size `m`, folded onto real nodes through the padding host map.
+//!
+//! The audit also reports `in_rel_max` — the largest incoming relative
+//! payload any *virtual* rank sees in one step. Latency schedules may
+//! land several full vectors in a single message (merged concurrent
+//! dim-slices: trivance-L on a cube receives rel 3.0 per message, 18.0
+//! per rank-step), so the certified bound is on **bytes**, never message
+//! counts:
+//!
+//! * bandwidth (`B`) variants: `2·hm` — the in-place streaming invariant:
+//!   each hosted rank's incoming partial blocks never exceed one extra
+//!   full vector;
+//! * latency (`L`) variants: `hm·(1 + in_rel_max)` — each hosted rank
+//!   buffers at most the per-virtual incoming maximum on top of its
+//!   accumulator.
+//!
+//! (`hm` = host multiplicity, [`super::host_multiplicity`].) Exceeding
+//! the bound is a typed [`VerifyError::MemoryRegression`]; the pinned
+//! per-collective peaks live in `tools/pysim/eval_passes.py`.
+
+use super::{host_multiplicity, VerifyError, EPS};
+use crate::algo::{BuiltCollective, Variant};
+use crate::schedule::Schedule;
+
+/// Peak-live-memory profile of one (possibly padded) exec schedule.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct MemoryAudit {
+    /// Peak live data on any real node, in units of `m`.
+    pub peak_live_rel: f64,
+    /// Real node reaching the peak.
+    pub peak_node: u32,
+    /// Step of the peak (`None` when the accumulators alone are the peak,
+    /// i.e. no step's incoming traffic raised it).
+    pub peak_step: Option<usize>,
+    /// Max incoming relative payload of any (virtual rank, step).
+    pub in_rel_max: f64,
+}
+
+/// Measure peak live rel-bytes per real node per step (module docs).
+/// `hosts` maps virtual ranks to real nodes for padded builds (`None` =
+/// identity), `n_real` is the real torus size.
+pub fn audit_memory(s: &Schedule, hosts: Option<&[u32]>, n_real: u32) -> MemoryAudit {
+    let nr = n_real as usize;
+    let real = |v: usize| -> usize {
+        match hosts {
+            Some(h) => h[v] as usize,
+            None => v,
+        }
+    };
+    // one full-vector accumulator per hosted virtual rank
+    let mut base = vec![0.0f64; nr];
+    for v in 0..s.n as usize {
+        base[real(v)] += 1.0;
+    }
+    let mut peak = 0.0f64;
+    let mut peak_node = 0usize;
+    for (r, &b) in base.iter().enumerate() {
+        if b > peak {
+            peak = b;
+            peak_node = r;
+        }
+    }
+    let mut peak_step = None;
+    let mut in_rel_max = 0.0f64;
+    let mut incoming = vec![0.0f64; nr];
+    let mut in_rel = vec![0.0f64; s.n as usize];
+    for (k, step) in s.steps.iter().enumerate() {
+        incoming.fill(0.0);
+        in_rel.fill(0.0);
+        for sends in &step.sends {
+            for snd in sends {
+                if (snd.to as usize) >= s.n as usize {
+                    continue; // dataflow reports these as MalformedSend
+                }
+                let rel = snd.rel_bytes(s.n_blocks);
+                incoming[real(snd.to as usize)] += rel;
+                in_rel[snd.to as usize] += rel;
+            }
+        }
+        in_rel_max = in_rel.iter().fold(in_rel_max, |a, &b| a.max(b));
+        for (r, &inc) in incoming.iter().enumerate() {
+            let live = base[r] + inc;
+            if live > peak {
+                peak = live;
+                peak_node = r;
+                peak_step = Some(k);
+            }
+        }
+    }
+    MemoryAudit { peak_live_rel: peak, peak_node: peak_node as u32, peak_step, in_rel_max }
+}
+
+/// The per-variant certified peak bound (module docs): `2·hm` for
+/// bandwidth variants, `hm·(1 + in_rel_max)` for latency variants.
+pub fn certified_bound(b: &BuiltCollective, mem: &MemoryAudit) -> f64 {
+    let hm = f64::from(host_multiplicity(b));
+    match b.variant {
+        Variant::Bandwidth => 2.0 * hm,
+        Variant::Latency => hm * (1.0 + mem.in_rel_max),
+    }
+}
+
+/// Gate a measured peak against its certified bound.
+pub fn require_peak_within(mem: &MemoryAudit, bound: f64) -> Result<(), VerifyError> {
+    if mem.peak_live_rel > bound + EPS {
+        return Err(VerifyError::MemoryRegression {
+            node: mem.peak_node,
+            step: mem.peak_step.unwrap_or(0),
+            peak_rel: mem.peak_live_rel,
+            bound_rel: bound,
+        });
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::blockset::BlockSet;
+    use crate::schedule::{Kind, Piece, RouteHint, Send};
+
+    fn full_reduce(to: u32, contrib: u32, n: u32) -> Send {
+        Send {
+            to,
+            pieces: vec![Piece {
+                blocks: BlockSet::full(n),
+                contrib: BlockSet::singleton(contrib, n),
+                kind: Kind::Reduce,
+            }],
+            route: RouteHint::Minimal,
+        }
+    }
+
+    #[test]
+    fn two_full_vectors_into_one_node_peak_at_three() {
+        // node 0's accumulator (1.0) + two incoming full vectors
+        let mut s = Schedule::new("m", 3, 3);
+        let st = s.push_step();
+        st.push(1, full_reduce(0, 1, 3));
+        st.push(2, full_reduce(0, 2, 3));
+        let mem = audit_memory(&s, None, 3);
+        assert!((mem.peak_live_rel - 3.0).abs() < 1e-12, "{}", mem.peak_live_rel);
+        assert_eq!(mem.peak_node, 0);
+        assert_eq!(mem.peak_step, Some(0));
+        assert!((mem.in_rel_max - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn host_map_folds_virtual_peaks_onto_real_nodes() {
+        // virtual ranks 0 and 3 co-hosted on real node 0: base 2.0, and
+        // an incoming full vector at virtual 3 lands on real 0
+        let mut s = Schedule::new("pad", 4, 4);
+        s.push_step().push(1, full_reduce(3, 1, 4));
+        let hosts = [0u32, 1, 2, 0];
+        let mem = audit_memory(&s, Some(&hosts), 3);
+        assert!((mem.peak_live_rel - 3.0).abs() < 1e-12, "{}", mem.peak_live_rel);
+        assert_eq!(mem.peak_node, 0);
+    }
+
+    #[test]
+    fn golden_memory_regression_is_typed() {
+        let mut s = Schedule::new("m", 3, 3);
+        let st = s.push_step();
+        st.push(1, full_reduce(0, 1, 3));
+        st.push(2, full_reduce(0, 2, 3));
+        let mem = audit_memory(&s, None, 3);
+        // against an (artificially tight) bound of one accumulator the
+        // peak regresses with exact typed coordinates
+        match require_peak_within(&mem, 1.0) {
+            Err(VerifyError::MemoryRegression { node: 0, step: 0, peak_rel, bound_rel }) => {
+                assert!((peak_rel - 3.0).abs() < 1e-12);
+                assert!((bound_rel - 1.0).abs() < 1e-12);
+            }
+            other => panic!("expected MemoryRegression at node 0 step 0, got {other:?}"),
+        }
+        require_peak_within(&mem, 3.0).unwrap();
+    }
+}

@@ -1,5 +1,7 @@
-//! Static schedule certification: dataflow proofs, port-conflict
-//! detection, and congestion/optimality audits — no simulation involved.
+//! Static schedule certification: a pass manager ([`passes`]) running
+//! dataflow proofs, hazard/deadlock/memory analyses, port-conflict
+//! detection, congestion/optimality audits and symbolic cost
+//! certificates — no simulation involved.
 //!
 //! The paper's central claims are *static* properties of schedules:
 //! ⌈log₃ n⌉ steps, both ring ports busy every step with exactly one
@@ -39,22 +41,48 @@
 //!    2(n−1)/n AllReduce lower bound, classifying every collective as
 //!    latency-optimal / bandwidth-optimal / neither.
 //!
-//! [`certify_collective`] bundles all four into a [`Certificate`]: the
-//! dataflow proof runs on the *exec* schedule (virtual ranks for padded
-//! builds — the collapsed net schedule merges co-hosted contribution sets
-//! and is not a meaningful reduction trace at the real-rank level), while
-//! ports/congestion/optimality audit the *net* schedule actually shipped
-//! to the fabric. `trivance verify` renders the per-algorithm report and
-//! writes `VERIFY_report.json`; the verifier itself is mutation-tested by
-//! [`mutate`] (drop-a-send / swap-contributors / duplicate-a-reduce /
-//! shift-a-port must all be killed).
+//! Those four analyses predate the pass manager; they are now passes
+//! alongside four newer ones, each in its own submodule:
 //!
-//! Mirrored in `tools/pysim/mirror.py` + `eval_verify.py` (this container
-//! has no rustc): the dataflow lattice, port budgets, congestion sums and
-//! the ring-9/3×3 registry certificates are pinned there — keep the
-//! arithmetic in lockstep.
+//! 5. **Write hazards** ([`hazard`]) — WAR/WAW races on (rank, block)
+//!    cells within a step (policy: WAW always errs; WAR errs only on
+//!    in-place bandwidth variants).
+//! 6. **Deadlock freedom** ([`deadlock`]) — forward availability (no send
+//!    consumes a contribution produced in a later step) plus typed
+//!    stage-order certification for fault-response stage stacks.
+//! 7. **Memory certification** ([`memory`]) — peak live rel-bytes per
+//!    real node per step against a per-variant certified bound.
+//! 8. **Symbolic cost certificates** ([`cost`]) — size-independent
+//!    coefficients of `steps·α + tx_rel·β·m + …`, cross-checked against
+//!    the congestion audit to 1e-12 and against measured `sim::flow`
+//!    completions within pinned tolerances.
+//!
+//! [`certify_collective`] runs every pass through [`passes::run_passes`]
+//! and folds the results into a [`Certificate`]: exec-schedule passes see
+//! virtual ranks for padded builds — the collapsed net schedule merges
+//! co-hosted contribution sets and is not a meaningful reduction trace at
+//! the real-rank level — while net-schedule passes audit what actually
+//! ships to the fabric. `trivance verify` renders the per-algorithm
+//! report, accepts `--pass <name>` / `--list-passes`, and writes
+//! `VERIFY_report.json` (schema `trivance.verify.v2`, with per-pass
+//! wall-clock timing). [`diff`] differentially certifies fault rewrites
+//! against their originals; the verifier itself is mutation-tested by
+//! [`mutate`] (drop-a-send / swap-contributors / duplicate-a-reduce /
+//! shift-a-port / inject-hazard must all be killed).
+//!
+//! Mirrored in `tools/pysim/mirror.py` + `eval_verify.py` /
+//! `eval_passes.py` (this container has no rustc): the dataflow lattice,
+//! port budgets, congestion sums, per-pass policies, WAR/memory pins and
+//! the registry certificates are pinned there — keep the arithmetic in
+//! lockstep.
 
+pub mod cost;
+pub mod deadlock;
+pub mod diff;
+pub mod hazard;
+pub mod memory;
 pub mod mutate;
+pub mod passes;
 
 use std::fmt as stdfmt;
 
@@ -95,6 +123,21 @@ pub enum VerifyError {
     BrokenRoute { msg: usize, hop: usize, detail: String },
     /// A compiled plan does not match the topology it claims to run on.
     PlanMismatch { detail: String },
+    /// A within-step write race on one (rank, block) cell ([`hazard`]).
+    WriteHazard { step: usize, node: u32, block: u32, detail: String },
+    /// A send consumes a contribution produced only in a later step — a
+    /// dependency cycle through the step barrier ([`deadlock`]).
+    DeadlockCycle { step: usize, src: u32, dst: u32, block: u32, detail: String },
+    /// A fault-response stage stack is unsorted or on the wrong topology.
+    StageOrderViolation { stage: usize, detail: String },
+    /// Peak live memory exceeds the variant's certified bound ([`memory`]).
+    MemoryRegression { node: u32, step: usize, peak_rel: f64, bound_rel: f64 },
+    /// A measured completion exceeds the symbolic cost bound, or the
+    /// certificate disagrees with the congestion audit ([`cost`]).
+    CostRegression { detail: String },
+    /// A fault rewrite is not the original collective minus dead
+    /// contributions ([`diff`]).
+    RewriteDivergence { detail: String },
 }
 
 impl stdfmt::Display for VerifyError {
@@ -134,6 +177,26 @@ impl stdfmt::Display for VerifyError {
                 write!(f, "broken route in plan message {msg} at hop {hop}: {detail}")
             }
             VerifyError::PlanMismatch { detail } => write!(f, "plan/topology mismatch: {detail}"),
+            VerifyError::WriteHazard { step, node, block, detail } => write!(
+                f,
+                "write hazard at step {step} (node {node}, block {block}): {detail}"
+            ),
+            VerifyError::DeadlockCycle { step, src, dst, block, detail } => write!(
+                f,
+                "deadlock cycle at step {step} ({src}->{dst}, block {block}): {detail}"
+            ),
+            VerifyError::StageOrderViolation { stage, detail } => {
+                write!(f, "stage-order violation at stage {stage}: {detail}")
+            }
+            VerifyError::MemoryRegression { node, step, peak_rel, bound_rel } => write!(
+                f,
+                "memory regression: node {node} holds {peak_rel} m at step {step} \
+                 (certified bound {bound_rel} m)"
+            ),
+            VerifyError::CostRegression { detail } => write!(f, "cost regression: {detail}"),
+            VerifyError::RewriteDivergence { detail } => {
+                write!(f, "rewrite divergence: {detail}")
+            }
         }
     }
 }
@@ -633,30 +696,40 @@ pub struct Certificate {
     pub padded: bool,
     /// Proved on the exec schedule (virtual ranks for padded builds).
     pub dataflow: DataflowProof,
+    /// Within-step race profile of the exec schedule ([`hazard`]).
+    pub hazard: hazard::HazardAudit,
+    /// Forward-availability causality holds ([`deadlock`]).
+    pub deadlock_ok: bool,
+    /// Peak live memory per real node ([`memory`]).
+    pub memory: memory::MemoryAudit,
     /// Audited on the net schedule actually shipped to the fabric.
     pub ports: PortAudit,
     pub congestion: CongestionAudit,
     pub optimality: OptAudit,
+    /// Symbolic completion-bound coefficients of the net schedule ([`cost`]).
+    pub cost: cost::CostCertificate,
 }
 
-/// Certify one built collective (module docs): dataflow on `exec`,
-/// ports/congestion/optimality on `net` over the real torus `t`.
+/// Certify one built collective (module docs): every pass through the
+/// pass manager, first `Error` finding propagated as the typed error.
 pub fn certify_collective(b: &BuiltCollective, t: &Torus) -> Result<Certificate, VerifyError> {
-    let dataflow = verify_dataflow(&b.exec)?;
-    let budget = port_budget(b.algo, b.variant) * host_multiplicity(b);
-    let ports = audit_ports(&b.net, t, budget)?;
-    let congestion = audit_congestion(&b.net, t)?;
-    let optimality = audit_optimality(&b.net, t);
-    Ok(Certificate {
-        name: b.name.clone(),
-        algo: b.algo,
-        variant: b.variant,
-        padded: b.padded,
-        dataflow,
-        ports,
-        congestion,
-        optimality,
-    })
+    certify_collective_timed(b, t).map(|(cert, _)| cert)
+}
+
+/// [`certify_collective`] plus the per-pass wall-clock timings of the run.
+pub fn certify_collective_timed(
+    b: &BuiltCollective,
+    t: &Torus,
+) -> Result<(Certificate, Vec<passes::PassTiming>), VerifyError> {
+    let out = passes::run_passes(b, t, &passes::PASS_NAMES);
+    if let Some(e) = out.first_error() {
+        return Err(e.clone());
+    }
+    let timings = out.timings.clone();
+    let cert = out.certificate().ok_or_else(|| VerifyError::PlanMismatch {
+        detail: format!("pass manager produced no full certificate for {}", b.name),
+    })?;
+    Ok((cert, timings))
 }
 
 /// Certificates for every buildable (algorithm, variant) on one topology.
@@ -664,6 +737,9 @@ pub fn certify_collective(b: &BuiltCollective, t: &Torus) -> Result<Certificate,
 pub struct RegistryReport {
     pub dims: Vec<u32>,
     pub certs: Vec<Certificate>,
+    /// Per-pass wall-clock, summed over every certified build, in
+    /// canonical [`passes::PASS_NAMES`] order.
+    pub timings: Vec<passes::PassTiming>,
 }
 
 impl RegistryReport {
@@ -678,13 +754,25 @@ impl RegistryReport {
 /// no worse than the bidirectional Bruck port-spread.
 pub fn certify_registry(t: &Torus) -> Result<RegistryReport, VerifyError> {
     let mut certs = Vec::new();
+    let mut agg = vec![0.0f64; passes::PASS_NAMES.len()];
     for algo in Algo::ALL {
         for variant in Variant::ALL {
             let Ok(b) = build(algo, variant, t) else { continue };
-            certs.push(certify_collective(&b, t)?);
+            let (cert, timings) = certify_collective_timed(&b, t)?;
+            certs.push(cert);
+            for tm in timings {
+                if let Some(i) = passes::PASS_NAMES.iter().position(|&p| p == tm.pass) {
+                    agg[i] += tm.seconds;
+                }
+            }
         }
     }
-    let rep = RegistryReport { dims: t.dims().to_vec(), certs };
+    let timings = passes::PASS_NAMES
+        .iter()
+        .zip(agg)
+        .map(|(&pass, seconds)| passes::PassTiming { pass, seconds })
+        .collect();
+    let rep = RegistryReport { dims: t.dims().to_vec(), certs, timings };
     if let Some(tri) = rep.find(Algo::Trivance, Variant::Latency) {
         tri.optimality.require_latency_optimal(&tri.name)?;
         if t.ndims() == 1 {
@@ -838,10 +926,27 @@ pub fn render_report(rep: &RegistryReport) -> String {
     )
 }
 
-/// Hand-rolled `VERIFY_report.json` (schema `trivance.verify.v1`) — the
-/// CI artifact; parseable by [`crate::util::json`].
+/// Hand-rolled `VERIFY_report.json` (schema `trivance.verify.v2`) — the
+/// CI artifact; parseable by [`crate::util::json`] and validated by
+/// `tools/check_verify_report.py`. Every v1 field is preserved under its
+/// v1 name; v2 adds the hazard/deadlock/memory/cost fields per cert and
+/// a top-level `passes` array with per-pass wall-clock seconds summed
+/// over every report.
 pub fn report_json(reports: &[RegistryReport]) -> String {
-    let mut out = String::from("{\n  \"schema\": \"trivance.verify.v1\",\n  \"topos\": [\n");
+    let mut out = String::from("{\n  \"schema\": \"trivance.verify.v2\",\n  \"passes\": [\n");
+    for (i, &pass) in passes::PASS_NAMES.iter().enumerate() {
+        let seconds: f64 = reports
+            .iter()
+            .flat_map(|r| &r.timings)
+            .filter(|tm| tm.pass == pass)
+            .map(|tm| tm.seconds)
+            .sum();
+        out.push_str(&format!(
+            "    {{\"name\": \"{pass}\", \"seconds\": {seconds}}}{}\n",
+            if i + 1 < passes::PASS_NAMES.len() { "," } else { "" }
+        ));
+    }
+    out.push_str("  ],\n  \"topos\": [\n");
     for (ti, rep) in reports.iter().enumerate() {
         let dims: Vec<String> = rep.dims.iter().map(u32::to_string).collect();
         out.push_str(&format!("    {{\"dims\": [{}], \"certs\": [\n", dims.join(", ")));
@@ -852,7 +957,11 @@ pub fn report_json(reports: &[RegistryReport]) -> String {
                  \"max_node_sent_rel\": {}, \"bw_lower_rel\": {}, \"port_budget\": {}, \
                  \"max_port_msgs\": {}, \"tx_delay_rel\": {}, \"max_link_rel\": {}, \
                  \"mean_link_rel\": {}, \"max_link_msgs\": {}, \"bytes_on_wire_rel\": {}, \
-                 \"messages\": {}, \"max_atoms\": {}, \"class\": \"{}\"}}{}\n",
+                 \"messages\": {}, \"max_atoms\": {}, \"hazard_war_cells\": {}, \
+                 \"hazard_waw_conflicts\": {}, \"barrier_free\": {}, \"deadlock_ok\": {}, \
+                 \"mem_peak_rel\": {}, \"mem_in_rel_max\": {}, \"cost_steps\": {}, \
+                 \"cost_tx_rel\": {}, \"cost_hop_lat_rel\": {}, \"cost_hop_proc_rel\": {}, \
+                 \"class\": \"{}\"}}{}\n",
                 json::escape(&c.name),
                 c.algo.label(),
                 c.variant.label(),
@@ -871,6 +980,16 @@ pub fn report_json(reports: &[RegistryReport]) -> String {
                 c.congestion.bytes_on_wire_rel,
                 c.congestion.messages,
                 c.dataflow.max_atoms,
+                c.hazard.war_cells,
+                c.hazard.waw_conflicts,
+                c.hazard.barrier_free,
+                c.deadlock_ok,
+                c.memory.peak_live_rel,
+                c.memory.in_rel_max,
+                c.cost.steps,
+                c.cost.tx_rel,
+                c.cost.hop_lat_rel,
+                c.cost.hop_proc_rel,
                 c.optimality.class.label(),
                 if ci + 1 < rep.certs.len() { "," } else { "" },
             ));
@@ -1084,11 +1203,21 @@ mod tests {
         let rep = certify_registry(&Torus::ring(3)).unwrap();
         let doc = report_json(std::slice::from_ref(&rep));
         let v = json::parse(&doc).unwrap_or_else(|e| panic!("{e}\n{doc}"));
-        assert_eq!(v.get("schema").unwrap().as_str(), Some("trivance.verify.v1"));
+        assert_eq!(v.get("schema").unwrap().as_str(), Some("trivance.verify.v2"));
+        let ps = v.get("passes").unwrap().as_arr().unwrap();
+        assert_eq!(ps.len(), passes::PASS_NAMES.len());
+        assert_eq!(ps[0].get("name").unwrap().as_str(), Some("dataflow"));
         let topos = v.get("topos").unwrap().as_arr().unwrap();
         assert_eq!(topos.len(), 1);
         let certs = topos[0].get("certs").unwrap().as_arr().unwrap();
         assert_eq!(certs.len(), rep.certs.len());
         assert!(certs[0].get("class").unwrap().as_str().is_some());
+        // v2 fields are present on every cert
+        for c in certs {
+            assert!(c.get("deadlock_ok").is_some());
+            assert!(c.get("mem_peak_rel").is_some());
+            assert!(c.get("cost_tx_rel").is_some());
+            assert!(c.get("hazard_waw_conflicts").is_some());
+        }
     }
 }

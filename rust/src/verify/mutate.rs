@@ -2,10 +2,10 @@
 //! whose mutants the verifier must kill.
 //!
 //! A verifier that accepts everything is worse than none — it converts
-//! real defects into green checkmarks. This module proves the four
-//! analyses in [`super`] have teeth by corrupting known-good registry
-//! schedules in the four ways the ISSUE names and checking each mutant is
-//! rejected by dataflow or port analysis:
+//! real defects into green checkmarks. This module proves the analyses
+//! in [`super`] have teeth by corrupting known-good registry schedules
+//! in five ways and checking each mutant is rejected by the hazard,
+//! dataflow or port analysis:
 //!
 //! - **drop-a-send**: remove one payload-carrying message → some rank
 //!   must end incomplete ([`VerifyError::MissingContribution`]).
@@ -24,36 +24,52 @@
 //!   2-port Bruck family the flipped send is a *legal equivalent
 //!   schedule*, not a defect — measured in `tools/pysim` before pinning
 //!   this scope.
+//! - **inject-hazard**: append a `Set` landing in a (rank, block) cell
+//!   that already absorbs a Reduce the same step — a WAW race under any
+//!   in-step reordering, which only [`super::hazard`] can see (the
+//!   dataflow lattice replays sends in a fixed order and may still
+//!   complete). Proves the hazard pass pulls its weight in the kill
+//!   chain.
+//!
+//! Each class's seeding scope is part of the contract
+//! ([`MutationKind::scope`], rendered in the kill report) so a 100% kill
+//! rate is never overstated: shift-a-port's Trivance-only restriction is
+//! a statement about where a flipped port IS a defect, not a blind spot.
 //!
 //! Mutation targets are the registry's *native* builds (`net == exec`);
 //! padded builds collapse virtual ranks onto hosts, so a real-rank mutant
 //! would conflate verifier soundness with padding semantics. The runner
 //! is fully seeded ([`SplitMix64`]) and the acceptance gate
 //! (`trivance verify --mutants`, `rust/tests/verify_static.rs`) requires
-//! ≥ 95% kills; the pinned pysim measurement is 100% (720/720 across
+//! ≥ 95% kills; the pinned pysim measurement is 100% (944/944 across
 //! ring-8/ring-9/3×3).
 
+use super::hazard::first_waw;
 use super::{audit_ports, port_budget, verify_dataflow, VerifyError};
+use crate::blockset::BlockSet;
+use crate::schedule::{Piece, Send};
 use crate::algo::{build, Algo, Variant};
 use crate::schedule::{Kind, RouteHint, Schedule};
 use crate::topology::Torus;
 use crate::util::{fmt, SplitMix64};
 
-/// The four seeded corruption classes.
+/// The five seeded corruption classes.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum MutationKind {
     DropSend,
     SwapContributors,
     DuplicateReduce,
     ShiftPort,
+    InjectHazard,
 }
 
 impl MutationKind {
-    pub const ALL: [MutationKind; 4] = [
+    pub const ALL: [MutationKind; 5] = [
         MutationKind::DropSend,
         MutationKind::SwapContributors,
         MutationKind::DuplicateReduce,
         MutationKind::ShiftPort,
+        MutationKind::InjectHazard,
     ];
 
     pub fn label(self) -> &'static str {
@@ -62,6 +78,20 @@ impl MutationKind {
             MutationKind::SwapContributors => "swap-contributors",
             MutationKind::DuplicateReduce => "duplicate-a-reduce",
             MutationKind::ShiftPort => "shift-a-port",
+            MutationKind::InjectHazard => "inject-hazard",
+        }
+    }
+
+    /// Where this corruptor is seeded, and why (module docs) — rendered
+    /// in the kill report so the scope is part of the published contract.
+    pub fn scope(self) -> &'static str {
+        match self {
+            MutationKind::ShiftPort => {
+                "trivance only: on single-message schedules and the 2-port Bruck \
+                 family the flipped port is a legal routing equivalent, so the \
+                 mutant is not a defect there"
+            }
+            _ => "all native builds",
         }
     }
 }
@@ -116,6 +146,18 @@ fn sites(s: &Schedule, t: &Torus, kind: MutationKind) -> Vec<Site> {
                             out.push(Site { step, src, idx, aux: d });
                         }
                     }
+                    MutationKind::InjectHazard => {
+                        if snd.rel_bytes(s.n_blocks) <= 0.0 {
+                            continue;
+                        }
+                        for p in &snd.pieces {
+                            if p.kind == Kind::Reduce {
+                                if let Some(b) = p.blocks.iter().next() {
+                                    out.push(Site { step, src, idx, aux: b as usize });
+                                }
+                            }
+                        }
+                    }
                 }
             }
         }
@@ -145,6 +187,19 @@ fn apply(s: &Schedule, t: &Torus, kind: MutationKind, site: Site) -> Schedule {
             // force the opposite port
             let nat = t.route(site.src as u32, snd.to)[0].dir;
             snd.route = RouteHint::Directed { dim: site.aux as u8, dir: -nat };
+        }
+        MutationKind::InjectHazard => {
+            // land a Set into a cell a Reduce already writes this step
+            let to = sends[site.idx].to;
+            sends.push(Send {
+                to,
+                pieces: vec![Piece {
+                    blocks: BlockSet::singleton(site.aux as u32, s.n_blocks),
+                    contrib: BlockSet::full(s.n),
+                    kind: Kind::Set,
+                }],
+                route: RouteHint::Minimal,
+            });
         }
     }
     m
@@ -205,13 +260,21 @@ impl KillReport {
         for s in &self.survivors {
             out.push_str(&format!("SURVIVED: {s}\n"));
         }
+        out.push_str("\nseeding scope:\n");
+        for kind in MutationKind::ALL {
+            out.push_str(&format!("  {}: {}\n", kind.label(), kind.scope()));
+        }
         out
     }
 }
 
-/// Would the verifier reject this mutant? Dataflow first (the cheap,
-/// topology-free proof), then port legality at the native budget.
+/// Would the verifier reject this mutant? Hazard first (a WAW race is a
+/// defect even when the fixed-order lattice replay happens to complete),
+/// then dataflow, then port legality at the native budget.
 fn killed_by_verifier(m: &Schedule, t: &Torus, budget: u32) -> Option<VerifyError> {
+    if let Some(e) = first_waw(m) {
+        return Some(e);
+    }
     if let Err(e) = verify_dataflow(m) {
         return Some(e);
     }
@@ -293,6 +356,17 @@ mod tests {
                 && m.steps.iter().zip(&b.net.steps).all(|(a, c)| a.sends == c.sends);
             assert!(!identical, "{}: mutant identical to original", kind.label());
         }
+    }
+
+    #[test]
+    fn inject_hazard_mutants_are_typed_waw_kills() {
+        let t = Torus::ring(9);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        let site = sites(&b.net, &t, MutationKind::InjectHazard)[0];
+        let m = apply(&b.net, &t, MutationKind::InjectHazard, site);
+        assert!(matches!(first_waw(&m), Some(VerifyError::WriteHazard { .. })));
+        let budget = port_budget(Algo::Trivance, Variant::Latency);
+        assert!(killed_by_verifier(&m, &t, budget).is_some());
     }
 
     #[test]

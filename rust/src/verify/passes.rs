@@ -1,0 +1,350 @@
+//! The schedule-IR pass manager: named analyses with declared
+//! dependencies, typed findings, and per-pass wall-clock timing.
+//!
+//! Every verifier in this crate is registered here as a *pass* — a named
+//! analysis over one [`BuiltCollective`] — so the CLI can run any subset
+//! (`trivance verify --pass <name>`), the registry gate runs all of them,
+//! and every result lands in `VERIFY_report.json` (schema
+//! `trivance.verify.v2`) with its wall-clock cost. The canonical order:
+//!
+//! | pass         | schedule | proves / measures                             |
+//! |--------------|----------|-----------------------------------------------|
+//! | `dataflow`   | exec     | exact atom-lattice AllReduce proof            |
+//! | `hazard`     | exec     | WAR/WAW races on (rank, block) cells          |
+//! | `deadlock`   | exec     | forward availability (after `dataflow`)       |
+//! | `memory`     | exec     | peak live rel-bytes vs the certified bound    |
+//! | `ports`      | net      | per-(node, port, step) injection budget       |
+//! | `congestion` | net      | link-load profile (Eq. 1 serialization)       |
+//! | `optimality` | net      | step count / traffic vs the paper's bounds    |
+//! | `cost`       | net      | symbolic bound coefficients, cross-checked    |
+//!
+//! Dependencies ([`pass_deps`]) are closed transitively by
+//! [`select_passes`]: `deadlock` consumes only union totals and defers
+//! the atom algebra to `dataflow`; `cost` cross-checks its `tx_rel`
+//! against `congestion` to 1e-12 and reports next to `optimality`'s
+//! class. Selection is always re-sorted into canonical order, so a pass
+//! never runs before its dependencies.
+//!
+//! A pass emits [`Finding`]s instead of failing fast: `Error` findings
+//! carry the typed [`VerifyError`] (the severity policy — e.g. WAR is an
+//! error on in-place bandwidth variants but informational on
+//! barrier-protected latency variants — lives HERE, not in the
+//! analyses, which stay pure). [`super::certify_collective`] is a thin
+//! wrapper: run everything, propagate the first `Error` finding, fold
+//! the results into a [`Certificate`].
+
+use std::time::Instant;
+
+use super::cost::{cost_certificate, CostCertificate};
+use super::deadlock::audit_deadlock;
+use super::hazard::{audit_hazards, first_war, first_waw, HazardAudit};
+use super::memory::{audit_memory, certified_bound, require_peak_within, MemoryAudit};
+use super::{
+    audit_congestion, audit_optimality, audit_ports, host_multiplicity, port_budget,
+    Certificate, CongestionAudit, DataflowProof, OptAudit, PortAudit, VerifyError,
+};
+use crate::algo::{Algo, BuiltCollective, Variant};
+use crate::net::NetModel;
+use crate::topology::Torus;
+
+/// Canonical pass order — selection subsets preserve it.
+pub const PASS_NAMES: [&str; 8] = [
+    "dataflow",
+    "hazard",
+    "deadlock",
+    "memory",
+    "ports",
+    "congestion",
+    "optimality",
+    "cost",
+];
+
+/// Declared dependencies of a pass (module docs).
+pub fn pass_deps(name: &str) -> &'static [&'static str] {
+    match name {
+        "deadlock" => &["dataflow"],
+        "cost" => &["congestion", "optimality"],
+        _ => &[],
+    }
+}
+
+/// Resolve a requested subset into an executable selection: close over
+/// [`pass_deps`] transitively and re-sort into [`PASS_NAMES`] order.
+/// An empty request selects every pass; unknown names are an error.
+pub fn select_passes(requested: &[&str]) -> Result<Vec<&'static str>, String> {
+    if requested.is_empty() {
+        return Ok(PASS_NAMES.to_vec());
+    }
+    let mut want: Vec<&'static str> = Vec::new();
+    let mut queue: Vec<&str> = requested.to_vec();
+    while let Some(p) = queue.pop() {
+        let Some(&canon) = PASS_NAMES.iter().find(|&&q| q == p) else {
+            return Err(format!(
+                "unknown pass '{p}' (known: {})",
+                PASS_NAMES.join(", ")
+            ));
+        };
+        if !want.contains(&canon) {
+            want.push(canon);
+            queue.extend(pass_deps(canon));
+        }
+    }
+    Ok(PASS_NAMES.iter().copied().filter(|p| want.contains(p)).collect())
+}
+
+/// How severe a finding is. `Error` findings fail certification.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Severity {
+    Error,
+    Warn,
+    Info,
+}
+
+impl Severity {
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Error => "error",
+            Severity::Warn => "warn",
+            Severity::Info => "info",
+        }
+    }
+}
+
+/// One typed observation from one pass.
+#[derive(Clone, Debug)]
+pub struct Finding {
+    pub pass: &'static str,
+    pub severity: Severity,
+    pub message: String,
+    /// The typed error — always `Some` for [`Severity::Error`] findings
+    /// (enforced by construction: [`Finding::error`] is the only error
+    /// constructor).
+    pub error: Option<VerifyError>,
+}
+
+impl Finding {
+    fn error(pass: &'static str, err: VerifyError) -> Finding {
+        Finding { pass, severity: Severity::Error, message: err.to_string(), error: Some(err) }
+    }
+
+    fn info(pass: &'static str, message: String) -> Finding {
+        Finding { pass, severity: Severity::Info, message, error: None }
+    }
+}
+
+/// Wall-clock cost of one executed pass.
+#[derive(Clone, Copy, Debug)]
+pub struct PassTiming {
+    pub pass: &'static str,
+    pub seconds: f64,
+}
+
+/// Raw results of the executed passes — `None` for passes that were not
+/// selected or whose audit erred before producing a value.
+#[derive(Clone, Debug, Default)]
+pub struct PassResults {
+    pub dataflow: Option<DataflowProof>,
+    pub hazard: Option<HazardAudit>,
+    pub deadlock_ok: Option<bool>,
+    pub memory: Option<MemoryAudit>,
+    pub ports: Option<PortAudit>,
+    pub congestion: Option<CongestionAudit>,
+    pub optimality: Option<OptAudit>,
+    pub cost: Option<CostCertificate>,
+}
+
+/// Everything one [`run_passes`] execution produced.
+#[derive(Clone, Debug)]
+pub struct PassOutcome {
+    pub name: String,
+    pub algo: Algo,
+    pub variant: Variant,
+    pub padded: bool,
+    pub results: PassResults,
+    pub findings: Vec<Finding>,
+    pub timings: Vec<PassTiming>,
+}
+
+impl PassOutcome {
+    /// The first `Error` finding's typed error, if any pass failed.
+    pub fn first_error(&self) -> Option<&VerifyError> {
+        self.findings
+            .iter()
+            .find(|f| f.severity == Severity::Error)
+            .and_then(|f| f.error.as_ref())
+    }
+
+    /// Fold a full, error-free run into a [`Certificate`] (`None` when a
+    /// pass was skipped or erred before producing its result).
+    pub fn certificate(&self) -> Option<Certificate> {
+        Some(Certificate {
+            name: self.name.clone(),
+            algo: self.algo,
+            variant: self.variant,
+            padded: self.padded,
+            dataflow: self.results.dataflow.clone()?,
+            hazard: self.results.hazard?,
+            deadlock_ok: self.results.deadlock_ok?,
+            memory: self.results.memory?,
+            ports: self.results.ports?,
+            congestion: self.results.congestion?,
+            optimality: self.results.optimality?,
+            cost: self.results.cost?,
+        })
+    }
+}
+
+/// Execute `selection` (from [`select_passes`] — assumed closed and in
+/// canonical order) over one built collective on the real torus `t`.
+/// Exec-schedule passes see virtual ranks for padded builds; net-schedule
+/// passes see the collapsed schedule actually shipped to the fabric.
+pub fn run_passes(b: &BuiltCollective, t: &Torus, selection: &[&'static str]) -> PassOutcome {
+    let mut out = PassOutcome {
+        name: b.name.clone(),
+        algo: b.algo,
+        variant: b.variant,
+        padded: b.padded,
+        results: PassResults::default(),
+        findings: Vec::new(),
+        timings: Vec::new(),
+    };
+    let hm = host_multiplicity(b);
+    for &pass in selection {
+        let t0 = Instant::now();
+        match pass {
+            "dataflow" => match verify_dataflow_of(b) {
+                Ok(proof) => out.results.dataflow = Some(proof),
+                Err(e) => out.findings.push(Finding::error(pass, e)),
+            },
+            "hazard" => {
+                let haz = audit_hazards(&b.exec);
+                out.results.hazard = Some(haz);
+                if haz.waw_conflicts > 0 {
+                    if let Some(e) = first_waw(&b.exec) {
+                        out.findings.push(Finding::error(pass, e));
+                    }
+                }
+                if haz.war_cells > 0 {
+                    match b.variant {
+                        Variant::Bandwidth => {
+                            if let Some(e) = first_war(&b.exec) {
+                                out.findings.push(Finding::error(pass, e));
+                            }
+                        }
+                        Variant::Latency => out.findings.push(Finding::info(
+                            pass,
+                            format!(
+                                "{} WAR cell(s) rely on the receive barrier",
+                                haz.war_cells
+                            ),
+                        )),
+                    }
+                }
+            }
+            "deadlock" => match audit_deadlock(&b.exec) {
+                Ok(()) => out.results.deadlock_ok = Some(true),
+                Err(e) => {
+                    out.results.deadlock_ok = Some(false);
+                    out.findings.push(Finding::error(pass, e));
+                }
+            },
+            "memory" => {
+                let hosts = b.padding.as_ref().map(|p| p.hosts.as_slice());
+                let mem = audit_memory(&b.exec, hosts, t.n());
+                out.results.memory = Some(mem);
+                if let Err(e) = require_peak_within(&mem, certified_bound(b, &mem)) {
+                    out.findings.push(Finding::error(pass, e));
+                }
+            }
+            "ports" => {
+                let budget = port_budget(b.algo, b.variant) * hm;
+                match audit_ports(&b.net, t, budget) {
+                    Ok(ports) => out.results.ports = Some(ports),
+                    Err(e) => out.findings.push(Finding::error(pass, e)),
+                }
+            }
+            "congestion" => match audit_congestion(&b.net, t) {
+                Ok(c) => out.results.congestion = Some(c),
+                Err(e) => out.findings.push(Finding::error(pass, e)),
+            },
+            "optimality" => out.results.optimality = Some(audit_optimality(&b.net, t)),
+            "cost" => {
+                let cc = cost_certificate(&b.net, &NetModel::uniform(t));
+                out.results.cost = Some(cc);
+                // the two independent serialization sums must agree exactly
+                if let Some(cong) = &out.results.congestion {
+                    if (cc.tx_rel - cong.tx_delay_rel).abs() > 1e-12 {
+                        out.findings.push(Finding::error(
+                            pass,
+                            VerifyError::CostRegression {
+                                detail: format!(
+                                    "certificate tx_rel {} != congestion audit {}",
+                                    cc.tx_rel, cong.tx_delay_rel
+                                ),
+                            },
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+        out.timings.push(PassTiming { pass, seconds: t0.elapsed().as_secs_f64() });
+    }
+    out
+}
+
+fn verify_dataflow_of(b: &BuiltCollective) -> Result<DataflowProof, VerifyError> {
+    super::verify_dataflow(&b.exec)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::algo::build;
+
+    #[test]
+    fn empty_selection_is_every_pass_in_order() {
+        assert_eq!(select_passes(&[]).unwrap(), PASS_NAMES.to_vec());
+    }
+
+    #[test]
+    fn selection_closes_over_dependencies_in_canonical_order() {
+        assert_eq!(select_passes(&["cost"]).unwrap(), vec!["congestion", "optimality", "cost"]);
+        assert_eq!(select_passes(&["deadlock"]).unwrap(), vec!["dataflow", "deadlock"]);
+        assert_eq!(select_passes(&["hazard"]).unwrap(), vec!["hazard"]);
+        // request order is irrelevant; duplicates collapse
+        assert_eq!(
+            select_passes(&["cost", "deadlock", "cost"]).unwrap(),
+            vec!["dataflow", "deadlock", "congestion", "optimality", "cost"]
+        );
+    }
+
+    #[test]
+    fn unknown_pass_is_an_error() {
+        assert!(select_passes(&["hazards"]).is_err());
+    }
+
+    #[test]
+    fn full_run_on_trivance_ring9_has_no_error_findings() {
+        let t = Torus::ring(9);
+        let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+        let out = run_passes(&b, &t, &PASS_NAMES);
+        assert!(out.first_error().is_none(), "{:?}", out.findings);
+        assert_eq!(out.timings.len(), PASS_NAMES.len());
+        let cert = out.certificate().unwrap();
+        assert!(cert.deadlock_ok);
+        assert_eq!(cert.hazard.waw_conflicts, 0);
+        assert_eq!(cert.cost.steps, cert.optimality.steps);
+    }
+
+    #[test]
+    fn partial_selection_cannot_build_a_certificate() {
+        let t = Torus::ring(8);
+        let b = build(Algo::Bucket, Variant::Bandwidth, &t).unwrap();
+        let sel = select_passes(&["hazard"]).unwrap();
+        let out = run_passes(&b, &t, &sel);
+        assert!(out.certificate().is_none());
+        assert!(out.results.hazard.is_some());
+        assert!(out.results.dataflow.is_none());
+    }
+}

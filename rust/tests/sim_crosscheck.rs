@@ -33,6 +33,7 @@ use trivance::sim::{
 };
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
+use trivance::verify::diff::{certify_response, certify_rewrite};
 use trivance::verify::{verify_dataflow, verify_dataflow_surviving, verify_plan};
 
 /// Tolerance of the fluid approximation against packet ground truth.
@@ -767,6 +768,8 @@ fn midfault_rewrite_validates_and_beats_detour_where_crossings_repeat() {
     let rewritten = rewrite_for_fault(&bucket.net, &base, &fault).unwrap();
     validate_allreduce(&rewritten).unwrap_or_else(|e| panic!("bucket-B: {e}"));
     verify_dataflow(&rewritten).unwrap_or_else(|e| panic!("bucket-B: {e}"));
+    certify_rewrite(&bucket.net, &rewritten, fault.step, &std::collections::HashMap::new(), None)
+        .unwrap_or_else(|e| panic!("bucket-B diff: {e}"));
     let detour_plan =
         SimPlan::build_faulted(&bucket.net, &base, &post, fault.step as u32).unwrap();
     let rewrite_plan =
@@ -787,6 +790,8 @@ fn midfault_rewrite_validates_and_beats_detour_where_crossings_repeat() {
     let rw_tri = rewrite_for_fault(&tri.net, &base, &fault).unwrap();
     validate_allreduce(&rw_tri).unwrap_or_else(|e| panic!("trivance-L: {e}"));
     verify_dataflow(&rw_tri).unwrap_or_else(|e| panic!("trivance-L: {e}"));
+    certify_rewrite(&tri.net, &rw_tri, fault.step, &std::collections::HashMap::new(), None)
+        .unwrap_or_else(|e| panic!("trivance-L diff: {e}"));
     let dp = SimPlan::build_faulted(&tri.net, &base, &post, fault.step as u32).unwrap();
     let rp = SimPlan::build_faulted(&rw_tri, &base, &post, fault.step as u32).unwrap();
     let m = 1u64 << 20;
@@ -854,6 +859,10 @@ fn online_two_fault_sequence_completes_in_both_engines() {
                     }
                 }
                 verify_dataflow_surviving(&resp.schedule, &alive)
+                    .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
+                // differential certification of the controller's output
+                // against the pre-fault collective
+                certify_response(&b, &base, &resp)
                     .unwrap_or_else(|e| panic!("{algo:?} {variant:?} {dims:?}: {e}"));
                 let plan = resp
                     .build_plan(&base)
@@ -923,6 +932,9 @@ fn fault_sequences_keep_flow_and_packet_within_measured_bounds() {
                         }
                     }
                     verify_dataflow_surviving(&resp.schedule, &alive).unwrap_or_else(|e| {
+                        panic!("{tag} {algo:?} {variant:?} {dims:?}: {e}")
+                    });
+                    certify_response(&b, &base, &resp).unwrap_or_else(|e| {
                         panic!("{tag} {algo:?} {variant:?} {dims:?}: {e}")
                     });
                     let plan = resp.build_plan(&base).unwrap_or_else(|e| {

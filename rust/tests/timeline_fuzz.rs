@@ -20,6 +20,8 @@ use trivance::sim::{
 };
 use trivance::topology::Torus;
 use trivance::util::{prop, SplitMix64};
+use trivance::verify::deadlock::audit_deadlock;
+use trivance::verify::hazard::audit_hazards;
 use trivance::verify::{verify_dataflow, verify_plan};
 
 /// Flow-vs-packet drift bound under fuzzed timelines. Random flap windows
@@ -78,6 +80,11 @@ fn fuzzed_timelines_agree_or_fail_identically() {
         // must be a provably exact AllReduce and the compiled plan a
         // connected route set on this torus
         verify_dataflow(&b.exec).map_err(|e| format!("static dataflow: {e}"))?;
+        audit_deadlock(&b.exec).map_err(|e| format!("static deadlock: {e}"))?;
+        let haz = audit_hazards(&b.exec);
+        if haz.waw_conflicts > 0 {
+            return Err(format!("static hazard: {} WAW race(s)", haz.waw_conflicts));
+        }
         verify_plan(&plan, &t).map_err(|e| format!("static plan audit: {e}"))?;
         let scratch = SimScratch::new(&plan, &p);
         let horizon = simulate_plan(&plan, *m, &p, SimMode::Flow).completion_s;

@@ -1,0 +1,350 @@
+//! Pass-manager acceptance gate (ISSUE 10): the four new static passes —
+//! hazard, deadlock, memory, cost — must run green over the full registry
+//! on the acceptance topologies, reproduce the pinned tables, and flag
+//! every golden known-bad fixture with its exact typed finding. Every
+//! pinned constant below was measured in `tools/pysim/eval_passes.py` —
+//! keep them in lockstep.
+
+use std::collections::HashMap;
+
+use trivance::algo::{build, Algo, Variant};
+use trivance::blockset::BlockSet;
+use trivance::cost::NetParams;
+use trivance::net::NetModel;
+use trivance::schedule::rewrite::{rewrite_for_fault, Fault};
+use trivance::schedule::{Kind, Piece, RouteHint, Schedule, Send};
+use trivance::sim::{simulate_plan, SimMode, SimPlan};
+use trivance::topology::{Link, Torus};
+use trivance::verify::cost::{cost_certificate, require_within};
+use trivance::verify::deadlock::{audit_deadlock, audit_stages};
+use trivance::verify::diff::certify_rewrite;
+use trivance::verify::hazard::{audit_hazards, first_waw};
+use trivance::verify::memory::{audit_memory, certified_bound, require_peak_within};
+use trivance::verify::passes::{run_passes, select_passes, Severity, PASS_NAMES};
+use trivance::verify::{audit_congestion, host_multiplicity, VerifyError};
+
+/// The acceptance topologies: rings (native 8, padded 9 and 27), a square
+/// torus, a larger square, a cube.
+fn acceptance_topos() -> Vec<Torus> {
+    vec![
+        Torus::ring(8),
+        Torus::ring(9),
+        Torus::ring(27),
+        Torus::new(&[3, 3]),
+        Torus::new(&[8, 8]),
+        Torus::new(&[4, 4, 4]),
+    ]
+}
+
+fn registry(t: &Torus) -> Vec<trivance::algo::BuiltCollective> {
+    let mut out = Vec::new();
+    for algo in Algo::ALL {
+        for variant in Variant::ALL {
+            if let Ok(b) = build(algo, variant, t) {
+                out.push(b);
+            }
+        }
+    }
+    out
+}
+
+fn reduce_send(to: u32, block: u32, contrib: &[u32], n: u32, nb: u32) -> Send {
+    Send {
+        to,
+        pieces: vec![Piece {
+            blocks: BlockSet::singleton(block, nb),
+            contrib: BlockSet::from_ranks(contrib, n),
+            kind: Kind::Reduce,
+        }],
+        route: RouteHint::Minimal,
+    }
+}
+
+/// Pinned WAR barrier-reliance cells of each latency variant's exec
+/// schedule (pysim: eval_passes.py, PINNED_WAR_L).
+fn pinned_war(dims: &[u32], algo: Algo) -> u64 {
+    use Algo::*;
+    match (dims, algo) {
+        ([8], Trivance | Bruck | BruckUnidir) => 128,
+        ([8], Swing | RecDoub) => 192,
+        ([8], Bucket) => 448,
+        ([9], Trivance | Bruck | BruckUnidir) => 162,
+        ([9], Swing | RecDoub) => 1024,
+        ([9], Bucket) => 648,
+        ([27], Trivance | Bruck | BruckUnidir) => 2187,
+        ([27], Swing | RecDoub) => 5120,
+        ([27], Bucket) => 18954,
+        ([3, 3], Trivance | Bruck | BruckUnidir | Bucket) => 324,
+        ([3, 3], Swing | RecDoub) => 1024,
+        ([8, 8], Trivance | Bruck | BruckUnidir) => 32768,
+        ([8, 8], Swing | RecDoub) => 24576,
+        ([8, 8], Bucket) => 57344,
+        ([4, 4, 4], Trivance) => 55296,
+        ([4, 4, 4], Bruck | BruckUnidir) => 64512,
+        ([4, 4, 4], Swing | RecDoub) => 24576,
+        ([4, 4, 4], Bucket) => 36864,
+        _ => panic!("no pinned WAR count for {dims:?} {algo:?}"),
+    }
+}
+
+#[test]
+fn hazard_pass_matches_the_pinned_tables() {
+    // registry-wide: zero WAW races anywhere; bandwidth variants are
+    // in-place (zero WAR cells); latency variants match the pinned
+    // barrier-reliance table exactly
+    for t in acceptance_topos() {
+        for b in registry(&t) {
+            let haz = audit_hazards(&b.exec);
+            assert_eq!(haz.waw_conflicts, 0, "{}: WAW races", b.name);
+            match b.variant {
+                Variant::Bandwidth => {
+                    assert_eq!(haz.war_cells, 0, "{}: B variant not in-place", b.name);
+                    assert!(haz.barrier_free, "{}", b.name);
+                }
+                Variant::Latency => {
+                    assert_eq!(
+                        haz.war_cells,
+                        pinned_war(t.dims(), b.algo),
+                        "{}: WAR cells drifted from the pysim pin",
+                        b.name
+                    );
+                }
+            }
+        }
+    }
+}
+
+#[test]
+fn padded_golden_hazard_fixtures() {
+    // host multiplicity must not distort the virtual-rank cell counts:
+    // swing on ring-9 pads to 16 virtual ranks (hm = 2)
+    let t = Torus::ring(9);
+    let l = build(Algo::Swing, Variant::Latency, &t).unwrap();
+    assert!(l.padded, "swing-L ring-9 should be a padded build");
+    assert_eq!(audit_hazards(&l.exec).war_cells, 1024);
+    let b = build(Algo::Swing, Variant::Bandwidth, &t).unwrap();
+    assert!(b.padded, "swing-B ring-9 should be a padded build");
+    assert_eq!(audit_hazards(&b.exec).war_cells, 0, "padded swing-B must stay in-place");
+}
+
+#[test]
+fn golden_waw_fixture_is_a_typed_write_hazard() {
+    // a Set racing a Reduce into one cell: the classic lost-update race
+    let mut s = Schedule::new("waw-bad", 3, 1);
+    let st = s.push_step();
+    st.push(0, reduce_send(2, 0, &[0], 3, 1));
+    st.push(1, Send {
+        to: 2,
+        pieces: vec![Piece {
+            blocks: BlockSet::singleton(0, 1),
+            contrib: BlockSet::full(3),
+            kind: Kind::Set,
+        }],
+        route: RouteHint::Minimal,
+    });
+    assert_eq!(audit_hazards(&s).waw_conflicts, 1);
+    match first_waw(&s) {
+        Some(VerifyError::WriteHazard { step: 0, node: 2, block: 0, .. }) => {}
+        other => panic!("expected a typed WriteHazard at (0, 2, 0), got {other:?}"),
+    }
+}
+
+#[test]
+fn deadlock_pass_is_green_on_every_registry_schedule() {
+    for t in acceptance_topos() {
+        for b in registry(&t) {
+            audit_deadlock(&b.exec).unwrap_or_else(|e| panic!("{}: {e}", b.name));
+        }
+    }
+}
+
+#[test]
+fn golden_deadlock_and_stage_order_fixtures_are_typed() {
+    // node 0 forwards contribution 2 before anything delivered it: the
+    // forward-availability walk must flag the exact send
+    let mut s = Schedule::new("deadlock-bad", 3, 1);
+    s.push_step().push(0, reduce_send(1, 0, &[0, 2], 3, 1));
+    match audit_deadlock(&s) {
+        Err(VerifyError::DeadlockCycle { step: 0, src: 0, dst: 1, .. }) => {}
+        other => panic!("expected a typed DeadlockCycle at step 0, got {other:?}"),
+    }
+    // stage timelines: from_step must be non-decreasing…
+    let t9 = Torus::ring(9);
+    let stages = [(2u32, NetModel::uniform(&t9)), (1, NetModel::uniform(&t9))];
+    match audit_stages(&stages, &t9) {
+        Err(VerifyError::StageOrderViolation { stage: 1, .. }) => {}
+        other => panic!("expected StageOrderViolation at stage 1, got {other:?}"),
+    }
+    // …and every stage model must live on the plan's torus
+    let foreign = [(0u32, NetModel::uniform(&Torus::ring(8)))];
+    match audit_stages(&foreign, &t9) {
+        Err(VerifyError::StageOrderViolation { stage: 0, .. }) => {}
+        other => panic!("expected StageOrderViolation at stage 0, got {other:?}"),
+    }
+}
+
+#[test]
+fn memory_pass_matches_the_pinned_peaks() {
+    // ((dims), algo, variant) -> pinned peak_live_rel (pysim PINNED_MEM)
+    let pinned: &[(&[u32], Algo, Variant, f64)] = &[
+        (&[8], Algo::Trivance, Variant::Latency, 3.0),
+        (&[9], Algo::Trivance, Variant::Latency, 3.0),
+        (&[27], Algo::Trivance, Variant::Latency, 3.0),
+        (&[3, 3], Algo::Trivance, Variant::Latency, 3.0),
+        (&[8, 8], Algo::Trivance, Variant::Latency, 7.0),
+        (&[4, 4, 4], Algo::Trivance, Variant::Latency, 19.0),
+        (&[8], Algo::Bucket, Variant::Bandwidth, 1.0 + 1.0 / 8.0),
+        (&[9], Algo::Bucket, Variant::Bandwidth, 1.0 + 1.0 / 9.0),
+        (&[27], Algo::Bucket, Variant::Bandwidth, 1.0 + 1.0 / 27.0),
+        (&[9], Algo::Swing, Variant::Latency, 4.0),
+        (&[3, 3], Algo::Swing, Variant::Latency, 8.0),
+    ];
+    for &(dims, algo, variant, want) in pinned {
+        let t = Torus::new(dims);
+        let b = build(algo, variant, &t).unwrap();
+        let hosts = b.padding.as_ref().map(|p| p.hosts.as_slice());
+        let mem = audit_memory(&b.exec, hosts, t.n());
+        assert!(
+            (mem.peak_live_rel - want).abs() < 1e-9,
+            "{}: peak {} vs pinned {want}",
+            b.name,
+            mem.peak_live_rel
+        );
+        // and the measured peak sits within its own certified bound
+        require_peak_within(&mem, certified_bound(&b, &mem))
+            .unwrap_or_else(|e| panic!("{}: {e}", b.name));
+    }
+    // bucket-B peaks shrink as the ring grows (1 + 1/n): streaming memory
+    // is asymptotically one accumulator
+    let peaks: Vec<f64> = [8u32, 9, 27]
+        .iter()
+        .map(|&n| {
+            let t = Torus::ring(n);
+            let b = build(Algo::Bucket, Variant::Bandwidth, &t).unwrap();
+            audit_memory(&b.exec, None, n).peak_live_rel
+        })
+        .collect();
+    assert!(peaks[0] > peaks[1] && peaks[1] > peaks[2], "{peaks:?}");
+}
+
+#[test]
+fn padded_golden_memory_fixture_folds_hosts() {
+    // swing-L ring-9: two virtual ranks per real node — the folded peak is
+    // exactly host_multiplicity x the per-virtual peak
+    let t = Torus::ring(9);
+    let b = build(Algo::Swing, Variant::Latency, &t).unwrap();
+    let hm = host_multiplicity(&b);
+    assert_eq!(hm, 2, "swing-L ring-9 host multiplicity");
+    let virt = audit_memory(&b.exec, None, b.exec.n).peak_live_rel;
+    let hosts = b.padding.as_ref().unwrap().hosts.as_slice();
+    let folded = audit_memory(&b.exec, Some(hosts), t.n()).peak_live_rel;
+    assert!(
+        (folded - f64::from(hm) * virt).abs() < 1e-9,
+        "hm {hm}, virtual {virt}, folded {folded}"
+    );
+    // trivance-L on the cube lands merged concurrent dim-slices: the
+    // certified bound must be on bytes (in_rel_max 18), not message counts
+    let cube = Torus::new(&[4, 4, 4]);
+    let b = build(Algo::Trivance, Variant::Latency, &cube).unwrap();
+    let mem = audit_memory(&b.exec, None, 64);
+    assert!((mem.in_rel_max - 18.0).abs() < 1e-9, "{}", mem.in_rel_max);
+}
+
+#[test]
+fn cost_certificates_agree_with_congestion_and_bound_the_flow_engine() {
+    // two gates, pinned from pysim: (1) the certificate's serialization
+    // sum equals the independent congestion audit to 1e-12; (2) measured
+    // flow completions sit within the certified closed-form bound across
+    // the registry x four sizes (worst measured 0.176 native / 0.249
+    // padded — gated at 0.22 / 0.30)
+    let p = NetParams::default();
+    let sizes = [4u64 << 10, 64 << 10, 1 << 20, 16 << 20];
+    let (tol_native, tol_padded) = (0.22, 0.30);
+    for t in acceptance_topos() {
+        let base = NetModel::uniform(&t);
+        for b in registry(&t) {
+            let cert = cost_certificate(&b.net, &base);
+            let cong = audit_congestion(&b.net, &t).unwrap();
+            assert!(
+                (cert.tx_rel - cong.tx_delay_rel).abs() < 1e-12,
+                "{}: cost tx_rel {} vs congestion {}",
+                b.name,
+                cert.tx_rel,
+                cong.tx_delay_rel
+            );
+            let tol = if b.padded { tol_padded } else { tol_native };
+            let plan = SimPlan::build(&b.net, &t);
+            for m in sizes {
+                let flow = simulate_plan(&plan, m, &p, SimMode::Flow).completion_s;
+                require_within(&cert, m, &p, flow, tol).unwrap_or_else(|e| {
+                    panic!("{} m={m}: {e} (bound {:.3e})", b.name, cert.bound_s(m, &p))
+                });
+            }
+        }
+    }
+}
+
+#[test]
+fn golden_cost_regression_fixture_is_typed() {
+    let t = Torus::ring(8);
+    let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+    let cert = cost_certificate(&b.net, &NetModel::uniform(&t));
+    let p = NetParams::default();
+    let m = 1u64 << 20;
+    match require_within(&cert, m, &p, 2.0 * cert.bound_s(m, &p), 0.22) {
+        Err(VerifyError::CostRegression { .. }) => {}
+        other => panic!("expected CostRegression on a 2x-bound measurement, got {other:?}"),
+    }
+}
+
+#[test]
+fn golden_diff_fixture_modified_prefix_is_a_typed_divergence() {
+    // a rewrite that retroactively drops an already-executed send can
+    // never be certified equivalent — PR 5/6 fixture certification runs
+    // in the rewrite/online/crosscheck suites; this pins the refusal
+    let t = Torus::ring(8);
+    let b = build(Algo::Trivance, Variant::Latency, &t).unwrap();
+    let base = NetModel::uniform(&t);
+    let fault = Fault::link(1, t.link_index(Link { node: 0, dim: 0, dir: 1 }));
+    let mut rw = rewrite_for_fault(&b.net, &base, &fault).unwrap();
+    certify_rewrite(&b.net, &rw, fault.step, &HashMap::new(), None)
+        .unwrap_or_else(|e| panic!("untampered rewrite must certify: {e}"));
+    rw.steps[0].sends[0].clear();
+    match certify_rewrite(&b.net, &rw, fault.step, &HashMap::new(), None) {
+        Err(VerifyError::RewriteDivergence { detail }) => {
+            assert!(detail.contains("prefix"), "{detail}");
+        }
+        other => panic!("expected RewriteDivergence on a tampered prefix, got {other:?}"),
+    }
+}
+
+#[test]
+fn full_pass_sweep_over_the_registry_has_no_error_findings() {
+    // the end-to-end gate the CLI (`trivance verify --pass …`) and the
+    // registry certifier both sit on: every selected pass runs, times
+    // itself, and produces a full certificate with zero Error findings
+    let selection = select_passes(&[]).unwrap();
+    assert_eq!(selection, PASS_NAMES.to_vec());
+    for t in acceptance_topos() {
+        for b in registry(&t) {
+            let out = run_passes(&b, &t, &selection);
+            let errors: Vec<_> = out
+                .findings
+                .iter()
+                .filter(|f| f.severity == Severity::Error)
+                .collect();
+            assert!(errors.is_empty(), "{}: {errors:?}", b.name);
+            assert_eq!(out.timings.len(), PASS_NAMES.len(), "{}", b.name);
+            let cert = out
+                .certificate()
+                .unwrap_or_else(|| panic!("{}: no full certificate", b.name));
+            assert!(cert.deadlock_ok, "{}", b.name);
+            assert_eq!(cert.cost.steps, cert.optimality.steps, "{}", b.name);
+            // latency variants may carry Info findings (barrier reliance),
+            // never Warn or Error
+            for f in &out.findings {
+                assert_eq!(f.severity, Severity::Info, "{}: {f:?}", b.name);
+            }
+        }
+    }
+}

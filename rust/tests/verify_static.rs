@@ -140,10 +140,10 @@ fn congestion_audit_matches_schedule_analysis() {
 #[test]
 fn mutation_suite_kills_at_least_95_percent() {
     // The CI release gate (`trivance verify --mutants`) runs the same
-    // sweep; pysim measured 100% (720/720) on these three topologies.
+    // sweep; pysim measured 100% (944/944) on these three topologies.
     let topos = [Torus::ring(8), Torus::ring(9), Torus::new(&[3, 3])];
     let rep = run_mutation_suite(&topos, 0xC0FF_EE07, 8);
-    assert!(rep.total() >= 100, "suite too small: {} mutants", rep.total());
+    assert_eq!(rep.total(), 944, "suite size drifted from the pysim pin");
     assert!(
         rep.kill_rate() >= 0.95,
         "kill rate {:.1}% below the gate:\n{}",
@@ -159,7 +159,10 @@ fn verify_report_round_trips_through_util_json() {
         [Torus::ring(9), Torus::new(&[3, 3])].iter().map(|t| certify_registry(t).unwrap()).collect();
     let doc = report_json(&reports);
     let v = json::parse(&doc).unwrap_or_else(|e| panic!("{e}"));
-    assert_eq!(v.get("schema").unwrap().as_str(), Some("trivance.verify.v1"));
+    assert_eq!(v.get("schema").unwrap().as_str(), Some("trivance.verify.v2"));
+    let passes = v.get("passes").unwrap().as_arr().unwrap();
+    assert_eq!(passes.len(), trivance::verify::passes::PASS_NAMES.len());
+    assert_eq!(passes[0].get("name").unwrap().as_str(), Some("dataflow"));
     let topos = v.get("topos").unwrap().as_arr().unwrap();
     assert_eq!(topos.len(), 2);
     for (tv, rep) in topos.iter().zip(&reports) {
@@ -173,6 +176,19 @@ fn verify_report_round_trips_through_util_json() {
                 cv.get("class").unwrap().as_str(),
                 Some(c.optimality.class.label())
             );
+            // v2 pass fields ride along on every certificate
+            for key in [
+                "hazard_war_cells",
+                "hazard_waw_conflicts",
+                "deadlock_ok",
+                "mem_peak_rel",
+                "cost_steps",
+                "cost_tx_rel",
+            ] {
+                assert!(cv.get(key).is_some(), "{}: missing v2 field {key}", c.name);
+            }
+            let waw = cv.get("hazard_waw_conflicts").unwrap().as_f64().unwrap();
+            assert_eq!(waw, 0.0, "{}: registry schedule has WAW races", c.name);
         }
     }
 }

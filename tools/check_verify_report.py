@@ -1,0 +1,136 @@
+"""CI schema validator for VERIFY_report.json (schema trivance.verify.v2).
+
+Usage: check_verify_report.py REPORT
+
+Validates the report the `trivance verify --all` CI gate emits (and the
+pysim mirror's report_v2, which is shape-identical):
+
+- schema tag is "trivance.verify.v2";
+- top-level "passes" lists every pass exactly once with a non-negative
+  wall-clock "seconds" (the per-pass timing satellite: a slow pass must be
+  visible in the artifact before it bloats the CI gate);
+- "topos" is a non-empty list of {dims, certs} with non-empty certs;
+- every cert carries every v1 field (the v2 bump preserves them) and every
+  v2 pass field, with basic type/value sanity;
+- cross-field consistency a released report must satisfy: barrier_free
+  mirrors hazard_war_cells == 0, no WAW races, deadlock_ok true, the cost
+  certificate's step count and serialization sum agree with the v1
+  optimality/congestion fields, and bandwidth (B) variants are in-place
+  (zero WAR cells).
+
+Exit codes: 0 valid, 1 invalid, 2 usage/parse error.
+"""
+
+import json
+import sys
+
+PASS_NAMES = ["dataflow", "hazard", "deadlock", "memory", "ports",
+              "congestion", "optimality", "cost"]
+
+V1_FIELDS = {
+    "collective": str, "algo": str, "variant": str, "padded": bool,
+    "steps": int, "lat_bound3": int, "lat_bound2": int,
+    "max_node_sent_rel": (int, float), "bw_lower_rel": (int, float),
+    "port_budget": int, "max_port_msgs": int,
+    "tx_delay_rel": (int, float), "max_link_rel": (int, float),
+    "mean_link_rel": (int, float), "max_link_msgs": int,
+    "bytes_on_wire_rel": (int, float), "messages": int, "max_atoms": int,
+    "class": str,
+}
+V2_FIELDS = {
+    "hazard_war_cells": int, "hazard_waw_conflicts": int,
+    "barrier_free": bool, "deadlock_ok": bool,
+    "mem_peak_rel": (int, float), "mem_in_rel_max": (int, float),
+    "cost_steps": int, "cost_tx_rel": (int, float),
+    "cost_hop_lat_rel": (int, float), "cost_hop_proc_rel": (int, float),
+}
+CLASSES = {"latency-optimal", "bandwidth-optimal", "neither"}
+
+
+def fail(msg):
+    print(f"FAIL: {msg}", file=sys.stderr)
+    return 1
+
+
+def check_cert(where, c):
+    for field, ty in {**V1_FIELDS, **V2_FIELDS}.items():
+        if field not in c:
+            return fail(f"{where}: missing field {field!r}")
+        v = c[field]
+        if isinstance(v, bool) and ty is not bool:
+            return fail(f"{where}: field {field!r} is a bool, want {ty}")
+        if not isinstance(v, ty):
+            return fail(f"{where}: field {field!r} is {type(v).__name__}")
+    if c["class"] not in CLASSES:
+        return fail(f"{where}: unknown class {c['class']!r}")
+    if c["steps"] < 1 or c["max_atoms"] < 1 or c["messages"] < 1:
+        return fail(f"{where}: degenerate counts")
+    if c["hazard_waw_conflicts"] != 0:
+        return fail(f"{where}: released report carries a WAW race")
+    if c["barrier_free"] != (c["hazard_war_cells"] == 0):
+        return fail(f"{where}: barrier_free inconsistent with WAR count")
+    if c["variant"] == "B" and c["hazard_war_cells"] != 0:
+        return fail(f"{where}: bandwidth variant is not in-place")
+    if not c["deadlock_ok"]:
+        return fail(f"{where}: released report carries a deadlock finding")
+    if c["cost_steps"] != c["steps"]:
+        return fail(f"{where}: cost_steps {c['cost_steps']} != steps "
+                    f"{c['steps']}")
+    if abs(c["cost_tx_rel"] - c["tx_delay_rel"]) > 1e-9:
+        return fail(f"{where}: cost_tx_rel {c['cost_tx_rel']} != "
+                    f"tx_delay_rel {c['tx_delay_rel']}")
+    if c["mem_peak_rel"] < 1.0:
+        return fail(f"{where}: mem_peak_rel below one accumulator")
+    return 0
+
+
+def check_report(rep):
+    if rep.get("schema") != "trivance.verify.v2":
+        return fail(f"unexpected schema {rep.get('schema')!r}")
+    passes = rep.get("passes")
+    if not isinstance(passes, list):
+        return fail("missing top-level 'passes' timing list")
+    names = [p.get("name") for p in passes]
+    if sorted(names) != sorted(PASS_NAMES):
+        return fail(f"pass timing list {names} != {PASS_NAMES}")
+    for p in passes:
+        if not isinstance(p.get("seconds"), (int, float)) or p["seconds"] < 0:
+            return fail(f"pass {p.get('name')!r}: bad seconds")
+    topos = rep.get("topos")
+    if not isinstance(topos, list) or not topos:
+        return fail("missing or empty 'topos'")
+    for t in topos:
+        dims = t.get("dims")
+        if (not isinstance(dims, list) or not dims
+                or not all(isinstance(d, int) and d > 0 for d in dims)):
+            return fail(f"bad dims {dims!r}")
+        certs = t.get("certs")
+        if not isinstance(certs, list) or not certs:
+            return fail(f"{dims}: missing or empty certs")
+        for c in certs:
+            where = f"{dims}/{c.get('collective', '?')}"
+            if check_cert(where, c):
+                return 1
+    return 0
+
+
+def main():
+    if len(sys.argv) != 2:
+        print(f"usage: {sys.argv[0]} REPORT", file=sys.stderr)
+        return 2
+    try:
+        with open(sys.argv[1]) as f:
+            rep = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"{sys.argv[1]}: {e}", file=sys.stderr)
+        return 2
+    rc = check_report(rep)
+    if rc == 0:
+        n = sum(len(t["certs"]) for t in rep["topos"])
+        print(f"{sys.argv[1]}: valid trivance.verify.v2 "
+              f"({len(rep['topos'])} topologies, {n} certificates)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

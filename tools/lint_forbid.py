@@ -1,0 +1,121 @@
+"""CI source lint: ban `.unwrap()`, `.expect(` and `panic!` in the library
+paths of the Rust tree (rust/src/{sim,net,schedule,verify}).
+
+Usage: lint_forbid.py [--root DIR] [--allow FILE]
+
+Library code must surface failures as typed errors (VerifyError, SimError,
+try_* variants) — a panic in the serving path takes the daemon down with
+the plan it was certifying. Test code is exempt: this repo keeps tests in
+a trailing `#[cfg(test)]` module, so scanning stops at the first
+`#[cfg(test)]` line of each file.
+
+Justified exceptions live in tools/lint_forbid_allow.txt, one per line:
+
+    path :: substring :: reason
+
+An allowlist entry excuses a flagged line when the line's file matches
+`path` (relative to rust/src) and the line contains `substring`. Unused
+allowlist entries are an error too — stale exceptions hide regressions.
+
+Exit codes: 0 clean, 1 violations (or stale allowlist entries), 2 usage.
+"""
+
+import argparse
+import os
+import re
+import sys
+
+LIB_DIRS = ["sim", "net", "schedule", "verify"]
+FORBIDDEN = re.compile(r"\.unwrap\(\)|\.expect\(|panic!")
+TEST_GATE = re.compile(r"#\[cfg\(test\)\]")
+
+
+def parse_allowlist(path):
+    entries = []
+    if not os.path.exists(path):
+        return entries
+    with open(path) as f:
+        for ln, raw in enumerate(f, 1):
+            line = raw.strip()
+            if not line or line.startswith("#"):
+                continue
+            parts = [p.strip() for p in line.split("::")]
+            if len(parts) != 3 or not all(parts):
+                raise ValueError(f"{path}:{ln}: want 'path :: substring "
+                                 f":: reason', got {line!r}")
+            entries.append({"path": parts[0], "substring": parts[1],
+                            "reason": parts[2], "used": False})
+    return entries
+
+
+def scan_file(root, rel, allow):
+    violations = []
+    with open(os.path.join(root, rel)) as f:
+        for ln, line in enumerate(f, 1):
+            if TEST_GATE.search(line):
+                break
+            m = FORBIDDEN.search(line)
+            if not m:
+                continue
+            excused = False
+            for e in allow:
+                if e["path"] == rel and e["substring"] in line:
+                    e["used"] = True
+                    excused = True
+                    break
+            if not excused:
+                violations.append((rel, ln, m.group(0), line.rstrip()))
+    return violations
+
+
+def main():
+    ap = argparse.ArgumentParser(
+        description="ban unwrap/expect/panic! in rust library paths")
+    ap.add_argument("--root", default=os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), os.pardir))
+    ap.add_argument("--allow", default=None)
+    args = ap.parse_args()
+    src = os.path.join(args.root, "rust", "src")
+    if not os.path.isdir(src):
+        print(f"no rust/src under {args.root}", file=sys.stderr)
+        return 2
+    allow_path = args.allow or os.path.join(
+        os.path.dirname(os.path.abspath(__file__)), "lint_forbid_allow.txt")
+    try:
+        allow = parse_allowlist(allow_path)
+    except ValueError as e:
+        print(e, file=sys.stderr)
+        return 2
+
+    violations = []
+    scanned = 0
+    for d in LIB_DIRS:
+        base = os.path.join(src, d)
+        if not os.path.isdir(base):
+            continue
+        for dirpath, _dirs, files in os.walk(base):
+            for name in sorted(files):
+                if not name.endswith(".rs"):
+                    continue
+                rel = os.path.relpath(os.path.join(dirpath, name), src)
+                scanned += 1
+                violations.extend(scan_file(src, rel, allow))
+
+    rc = 0
+    for rel, ln, tok, line in violations:
+        print(f"FAIL: {rel}:{ln}: forbidden {tok!r}: {line.strip()}",
+              file=sys.stderr)
+        rc = 1
+    for e in allow:
+        if not e["used"]:
+            print(f"FAIL: stale allowlist entry {e['path']} :: "
+                  f"{e['substring']!r} matches nothing", file=sys.stderr)
+            rc = 1
+    if rc == 0:
+        print(f"lint_forbid: {scanned} library files clean "
+              f"({len(allow)} justified exceptions)")
+    return rc
+
+
+if __name__ == "__main__":
+    sys.exit(main())

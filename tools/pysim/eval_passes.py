@@ -1,0 +1,309 @@
+"""Pass-manager parity harness (ISSUE 10).
+
+Replicates rust/src/verify/{passes,hazard,deadlock,memory,cost,diff}.rs
+through the mirror and pins every constant the Rust test suite
+(rust/tests/verify_passes.rs) asserts — this container has no rustc, so
+these are the measurements the Rust constants were pinned from:
+
+  * hazard pass: zero WAW races anywhere in the registry, zero WAR cells on
+    every bandwidth (B) variant (the in-place gate), and the pinned WAR
+    barrier-reliance table for the latency (L) variants — including the
+    padded swing-L/recdoub-L builds, where host multiplicity is easiest to
+    get wrong;
+  * deadlock pass: forward-availability green on every exec schedule and on
+    every mid-fault rewrite; golden known-bad fixtures for the cycle and
+    stage-order findings;
+  * memory pass: the pinned peak-live table (trivance-L 3.0 rel on every
+    ring and the 3x3, 7.0 on 8x8, 19.0 on 4x4x4; bucket-B strictly
+    monotone decreasing over the ring sizes; padded peaks exactly
+    host_multiplicity x the per-virtual peak);
+  * cost pass: certificate tx_rel identical to the congestion audit, and
+    the closed-form bound within the pinned tolerance bands of the flow
+    engine over the full registry x six topologies x four sizes
+    (|rel| <= 0.22 native, <= 0.30 padded);
+  * verify::diff: differential certification of every PR 5/6 rewrite
+    fixture (mid-fault rewrites on all six topologies, the ring-9
+    node-death rewrite, and the online two-fault rewrite responses);
+  * the seeded mutation suite including the InjectHazard corruptor kills
+    100% (944/944 at seed 0xC0FFEE07, per_class 8).
+"""
+
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(os.path.abspath(__file__)))
+from mirror import (Torus, NetModel, Schedule, Send, MIN, build,  # noqa: E402
+                    ALGOS, VARIANTS, DEFAULT_PARAMS, Fault, Plan,
+                    host_multiplicity, midfault_fault, rewrite_for_fault,
+                    rewrite_for_faults, respond, two_fault_events,
+                    step_time_estimates, simulate_flow,
+                    select_passes, run_passes, audit_hazards, audit_deadlock,
+                    audit_stages, audit_memory, memory_bound,
+                    require_peak_within, cost_certificate, cost_bound_s,
+                    require_cost_within, certify_rewrite, certify_response,
+                    run_mutation_suite, mutation_sites, report_v2,
+                    PASS_NAMES)
+
+FAILED = []
+P = DEFAULT_PARAMS
+TOPOS = [Torus([8]), Torus([9]), Torus([27]),
+         Torus([3, 3]), Torus([8, 8]), Torus([4, 4, 4])]
+
+
+def check(name, ok, detail=""):
+    print(f"[{'ok ' if ok else 'FAIL'}] {name} {detail}")
+    if not ok:
+        FAILED.append(name)
+
+
+def registry(t):
+    for algo in ALGOS:
+        for variant in VARIANTS:
+            b = build(algo, variant, t)
+            if b is None:
+                continue
+            b.algo, b.variant = algo, variant
+            yield algo, variant, b
+
+
+# ── pass manager: selection closure ─────────────────────────────────────
+check("select: default is every pass in order",
+      select_passes() == PASS_NAMES)
+check("select: cost pulls congestion+optimality",
+      select_passes(["cost"]) == ["congestion", "optimality", "cost"])
+check("select: deadlock pulls dataflow",
+      select_passes(["deadlock"]) == ["dataflow", "deadlock"])
+
+# ── hazard pass: pinned WAR table, WAW == 0, B-variant in-place gate ─────
+PINNED_WAR_L = {  # (dims...) -> {algo: war_cells on the exec schedule}
+    (8,): {"trivance": 128, "bruck": 128, "bruck-unidir": 128,
+           "swing": 192, "recdoub": 192, "bucket": 448},
+    (9,): {"trivance": 162, "bruck": 162, "bruck-unidir": 162,
+           "swing": 1024, "recdoub": 1024, "bucket": 648},
+    (27,): {"trivance": 2187, "bruck": 2187, "bruck-unidir": 2187,
+            "swing": 5120, "recdoub": 5120, "bucket": 18954},
+    (3, 3): {"trivance": 324, "bruck": 324, "bruck-unidir": 324,
+             "swing": 1024, "recdoub": 1024, "bucket": 324},
+    (8, 8): {"trivance": 32768, "bruck": 32768, "bruck-unidir": 32768,
+             "swing": 24576, "recdoub": 24576, "bucket": 57344},
+    (4, 4, 4): {"trivance": 55296, "bruck": 64512, "bruck-unidir": 64512,
+                "swing": 24576, "recdoub": 24576, "bucket": 36864},
+}
+for t in TOPOS:
+    for algo, variant, b in registry(t):
+        haz = audit_hazards(b.exec_s)
+        if haz["waw_conflicts"] != 0:
+            check(f"{t.dims} {algo}-{variant}: WAW == 0", False,
+                  str(haz["waw_conflicts"]))
+        if variant == "B":
+            if haz["war_cells"] != 0:
+                check(f"{t.dims} {algo}-B: in-place (WAR == 0)", False,
+                      str(haz["war_cells"]))
+        else:
+            want = PINNED_WAR_L[tuple(t.dims)][algo]
+            if haz["war_cells"] != want:
+                check(f"{t.dims} {algo}-L: pinned WAR cells", False,
+                      f"{haz['war_cells']} vs {want}")
+check("hazard: registry WAW-free, B-variants in-place, L table pinned",
+      not FAILED)
+
+# padded golden fixtures: host multiplicity must not distort the counts
+b = build("swing", "L", Torus([9]))
+check("padded swing-L ring-9: WAR == 1024 on the virtual exec schedule",
+      b.padded and audit_hazards(b.exec_s)["war_cells"] == 1024)
+b = build("swing", "B", Torus([9]))
+check("padded swing-B ring-9: in-place (WAR == 0)",
+      b.padded and audit_hazards(b.exec_s)["war_cells"] == 0)
+
+# golden known-bad: a Set racing a Reduce into the same cell is WAW
+s = Schedule("waw-bad", 3, 1)
+st = s.push_step()
+st[0].append(Send(2, [(frozenset([0]), "reduce", frozenset([0]))], MIN))
+st[1].append(Send(2, [(frozenset([0]), "set", frozenset([0, 1, 2]))], MIN))
+check("golden hazard fixture: WAW race detected",
+      audit_hazards(s)["waw_conflicts"] == 1)
+
+# ── deadlock pass: golden fixtures (registry coverage is in run_passes) ──
+s = Schedule("deadlock-bad", 3, 1)
+st = s.push_step()
+st[0].append(Send(1, [(frozenset([0]), "reduce", frozenset([0, 2]))], MIN))
+err = audit_deadlock(s)
+check("golden deadlock fixture: later-produced contribution flagged",
+      err is not None and err[0] == "deadlock", str(err))
+t9 = Torus([9])
+err = audit_stages([(2, NetModel.uniform(t9)), (1, NetModel.uniform(t9))], t9)
+check("golden stage-order fixture: regressing from_step flagged",
+      err is not None and err[0] == "stage_order", str(err))
+err = audit_stages([(0, NetModel.uniform(Torus([8])))], t9)
+check("golden stage-order fixture: foreign topology flagged",
+      err is not None and err[0] == "stage_order", str(err))
+
+# ── memory pass: pinned peaks, monotone bucket-B, padded folding ─────────
+PINNED_MEM = {  # ((dims...), algo, variant) -> peak_live_rel
+    ((8,), "trivance", "L"): 3.0, ((9,), "trivance", "L"): 3.0,
+    ((27,), "trivance", "L"): 3.0, ((3, 3), "trivance", "L"): 3.0,
+    ((8, 8), "trivance", "L"): 7.0, ((4, 4, 4), "trivance", "L"): 19.0,
+    ((8,), "bucket", "B"): 1.0 + 1.0 / 8.0,
+    ((9,), "bucket", "B"): 1.0 + 1.0 / 9.0,
+    ((27,), "bucket", "B"): 1.0 + 1.0 / 27.0,
+    ((9,), "swing", "L"): 4.0, ((3, 3), "swing", "L"): 8.0,
+}
+for (dims, algo, variant), want in PINNED_MEM.items():
+    t = Torus(list(dims))
+    b = build(algo, variant, t)
+    b.algo, b.variant = algo, variant
+    mem = audit_memory(b.exec_s, b.hosts, t.n)
+    check(f"{list(dims)} {algo}-{variant}: pinned peak {want:.4f}",
+          abs(mem["peak_live_rel"] - want) < 1e-9,
+          f"got {mem['peak_live_rel']:.6f}")
+    check(f"{list(dims)} {algo}-{variant}: peak within certified bound",
+          require_peak_within(mem, memory_bound(b, mem)) is None)
+ring_peaks = [audit_memory(build("bucket", "B", Torus([n])).exec_s, None,
+                           n)["peak_live_rel"] for n in (8, 9, 27)]
+check("bucket-B ring peaks strictly monotone decreasing",
+      ring_peaks[0] > ring_peaks[1] > ring_peaks[2], str(ring_peaks))
+# padded folding: peak == host_multiplicity x per-virtual peak
+b = build("swing", "L", t9)
+hm = host_multiplicity(b)
+virt = audit_memory(b.exec_s, None, b.exec_s.n)["peak_live_rel"]
+folded = audit_memory(b.exec_s, b.hosts, t9.n)["peak_live_rel"]
+check("padded swing-L ring-9: folded peak == hm x virtual peak",
+      hm == 2 and abs(folded - hm * virt) < 1e-9,
+      f"hm {hm}, virtual {virt}, folded {folded}")
+check("trivance-L 4x4x4: in_rel_max == 18 (merged concurrent dim-slices)",
+      abs(audit_memory(build("trivance", "L", Torus([4, 4, 4])).exec_s,
+                       None, 64)["in_rel_max"] - 18.0) < 1e-9)
+# golden known-bad: an impossible bound trips the typed finding
+mem = audit_memory(build("trivance", "L", Torus([8])).exec_s, None, 8)
+err = require_peak_within(mem, 1.0)
+check("golden memory fixture: regression against a 1.0 bound",
+      err is not None and err[0] == "memory_regression", str(err))
+
+# ── cost pass: certificate vs the flow engine, pinned tolerance bands ────
+SIZES = [4 << 10, 64 << 10, 1 << 20, 16 << 20]
+TOL_NATIVE, TOL_PADDED = 0.22, 0.30
+worst_native = worst_padded = 0.0
+for t in TOPOS:
+    base = NetModel.uniform(t)
+    for algo, variant, b in registry(t):
+        cert = cost_certificate(b.net, base)
+        cong_tx = run_passes(b, t, ["congestion"])[0]["congestion"][
+            "tx_delay_rel"]
+        if abs(cert["tx_rel"] - cong_tx) > 1e-12:
+            check(f"{t.dims} {algo}-{variant}: cost tx == congestion tx",
+                  False, f"{cert['tx_rel']} vs {cong_tx}")
+        tol = TOL_PADDED if b.padded else TOL_NATIVE
+        for m in SIZES:
+            flow, _ev = simulate_flow(Plan(b.net, t, base), m, P)
+            bound = cost_bound_s(cert, m, P)
+            rel = abs(flow - bound) / bound
+            if b.padded:
+                worst_padded = max(worst_padded, rel)
+            else:
+                worst_native = max(worst_native, rel)
+            if require_cost_within(cert, m, P, flow, tol) is not None:
+                check(f"{t.dims} {algo}-{variant} m={m}: flow within "
+                      f"certified bound (+{tol:.0%})", False,
+                      f"flow {flow:.3e} bound {bound:.3e}")
+check(f"cost certificates: native |rel| <= {TOL_NATIVE} over the registry",
+      worst_native <= TOL_NATIVE, f"worst {worst_native:.4f}")
+check(f"cost certificates: padded |rel| <= {TOL_PADDED} over the registry",
+      worst_padded <= TOL_PADDED, f"worst {worst_padded:.4f}")
+# golden known-bad: a measurement far above the bound trips the finding
+cert = cost_certificate(build("trivance", "L", Torus([8])).net,
+                        NetModel.uniform(Torus([8])))
+err = require_cost_within(cert, 1 << 20, P,
+                          2.0 * cost_bound_s(cert, 1 << 20, P), TOL_NATIVE)
+check("golden cost fixture: 2x-bound measurement flagged",
+      err is not None and err[0] == "cost_regression", str(err))
+
+# ── verify::diff: every PR 5/6 rewrite fixture certifies ─────────────────
+certified = 0
+for t in TOPOS:
+    base = NetModel.uniform(t)
+    fault = midfault_fault(t)
+    dead = {v: fault.step for v in fault.dead_nodes}
+    for algo, variant, b in registry(t):
+        if b.hosts is None:
+            rw = rewrite_for_faults(b.net, base, [fault])
+            err = certify_rewrite(b.net, rw, fault.step, dead)
+        else:
+            rw = rewrite_for_faults(b.exec_s, base, [fault], b.hosts)
+            err = certify_rewrite(b.exec_s, rw, fault.step, dead, b.hosts)
+        if err is not None:
+            check(f"{t.dims} {algo}-{variant}: mid-fault diff", False,
+                  str(err))
+        if audit_deadlock(rw) is not None:
+            check(f"{t.dims} {algo}-{variant}: mid-fault deadlock-free",
+                  False)
+        certified += 1
+check("diff: every mid-fault rewrite certifies", certified == 72,
+      f"{certified} fixtures")
+
+b = build("trivance", "L", t9)
+base9 = NetModel.uniform(t9)
+rw = rewrite_for_fault(b.net, base9, Fault(1, dead_nodes=[4]))
+check("diff: ring-9 node-death rewrite certifies",
+      certify_rewrite(b.net, rw, 1, {4: 1}) is None)
+
+online_certified = 0
+for t in (Torus([9]), Torus([3, 3])):
+    base = NetModel.uniform(t)
+    m0 = 1 << 20
+    for algo, variant, b in registry(t):
+        if b.hosts is not None:
+            continue
+        ends = step_time_estimates(b.net, base, m0, P)
+        events = two_fault_events(t, ends)
+        resp = respond(b, base, events, m0, P, lambda ev, step: "rewrite")
+        err = certify_response(b, base, resp)
+        if err is not None:
+            check(f"{t.dims} {algo}-{variant}: online diff", False, str(err))
+        online_certified += 1
+check("diff: every online two-fault rewrite response certifies",
+      online_certified == 16, f"{online_certified} fixtures")
+
+# golden known-bad: touching the executed prefix breaks equivalence
+b = build("trivance", "L", Torus([8]))
+rw = rewrite_for_fault(b.net, NetModel.uniform(Torus([8])),
+                       midfault_fault(Torus([8])))
+rw.steps[0][0] = []  # retroactively drop an already-executed send
+err = certify_rewrite(b.net, rw, midfault_fault(Torus([8])).step, {})
+check("golden diff fixture: modified prefix flagged",
+      err is not None and err[0] == "divergence", str(err))
+
+# ── mutation suite with the InjectHazard corruptor ───────────────────────
+b = build("trivance", "L", Torus([8]))
+check("hazard corruptor has sites on every payload reduce",
+      len(mutation_sites(b.net, Torus([8]), "hazard")) > 0)
+total, killed, survivors = run_mutation_suite(
+    [Torus([8]), Torus([9]), Torus([3, 3])], 0xC0FFEE07, 8)
+check("mutation suite pinned total (with hazard class)", total == 944,
+      str(total))
+check("mutation suite kills 100%", killed == total and not survivors,
+      f"{killed}/{total}")
+
+# ── report v2 shape (validated in depth by tools/check_verify_report.py) ─
+rep = report_v2([Torus([8])])
+check("report v2 schema tag", rep["schema"] == "trivance.verify.v2")
+check("report v2 carries per-pass timings",
+      [p["name"] for p in rep["passes"]] == PASS_NAMES and
+      all(p["seconds"] >= 0.0 for p in rep["passes"]))
+e = rep["topos"][0]["certs"][0]
+V2_KEYS = {"hazard_war_cells", "hazard_waw_conflicts", "barrier_free",
+           "deadlock_ok", "mem_peak_rel", "mem_in_rel_max", "cost_steps",
+           "cost_tx_rel", "cost_hop_lat_rel", "cost_hop_proc_rel"}
+V1_KEYS = {"collective", "algo", "variant", "padded", "steps", "lat_bound3",
+           "lat_bound2", "max_node_sent_rel", "bw_lower_rel", "port_budget",
+           "max_port_msgs", "tx_delay_rel", "max_link_rel", "mean_link_rel",
+           "max_link_msgs", "bytes_on_wire_rel", "messages", "max_atoms",
+           "class"}
+check("report v2 preserves v1 cert fields and adds the pass fields",
+      (V1_KEYS | V2_KEYS) <= set(e))
+
+print()
+if FAILED:
+    print(f"eval_passes: {len(FAILED)} FAILURES: {FAILED}")
+    sys.exit(1)
+print("passes eval: hazard/deadlock/memory/cost certificates, the "
+      "differential rewrite proofs and the extended mutation gate all hold")

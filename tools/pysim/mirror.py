@@ -2970,19 +2970,15 @@ def audit_optimality(s, torus):
 
 
 def certify_collective(b, torus):
-    """Mirror of verify::certify_collective: dataflow on the exec
-    schedule, ports/congestion/optimality on the net schedule. Returns a
+    """Mirror of verify::certify_collective — since PR 10 a thin wrapper
+    over the pass manager: every pass runs (dataflow/hazard/deadlock/memory
+    on the exec schedule, ports/congestion/optimality/cost on the net
+    schedule) and any Error-severity finding is a hard failure. Returns the
     cert dict or raises AssertionError on any defect."""
-    err = verify_dataflow(b.exec_s)
-    assert err is None, f"{b.net.name}: dataflow {err}"
-    algo, variant = b.algo, b.variant
-    budget = port_budget(algo, variant) * host_multiplicity(b)
-    max_port, perr = audit_ports(b.net, torus, budget)
-    assert perr is None, f"{b.net.name}: ports {perr}"
-    return dict(name=b.net.name, algo=algo, variant=variant,
-                padded=b.padded, budget=budget, max_port_msgs=max_port,
-                congestion=audit_congestion(b.net, torus),
-                optimality=audit_optimality(b.net, torus))
+    cert, findings, _t = run_passes(b, torus)
+    errors = [f for f in findings if f[1] == "error"]
+    assert not errors, f"{b.net.name}: {errors}"
+    return cert
 
 
 def certify_registry(torus):
@@ -3012,7 +3008,20 @@ def certify_registry(torus):
 
 
 # Mutation corruptors — mirror of verify::mutate.
-MUTATION_KINDS = ["drop", "swap", "dup", "shift"]
+MUTATION_KINDS = ["drop", "swap", "dup", "shift", "hazard"]
+
+# Mirror of verify::mutate scope notes (rendered in the kill report so a
+# 100% kill rate is never overstated): which schedules each corruptor is
+# seeded on, and why.
+MUTATION_SCOPE = {
+    "drop": "all native builds",
+    "swap": "all native builds",
+    "dup": "all native builds",
+    "shift": ("trivance only: on single-message schedules and the 2-port "
+              "Bruck family the flipped port is a legal routing equivalent, "
+              "so the mutant is not a defect there"),
+    "hazard": "all native builds",
+}
 
 
 def mutation_sites(s, torus, kind):
@@ -3038,6 +3047,12 @@ def mutation_sites(s, torus, kind):
                             if torus.coord(src, d) != torus.coord(snd.to, d)]
                     if len(diff) == 1:
                         out.append((k, src, si, diff[0]))
+                elif kind == "hazard":
+                    if snd.rel_bytes(s.n_blocks) <= 0:
+                        continue
+                    for _pi, (bl, kd, _c) in enumerate(snd.pieces):
+                        if kd == "reduce" and bl:
+                            out.append((k, src, si, min(bl)))
     return out
 
 
@@ -3069,6 +3084,15 @@ def apply_mutation(s, torus, kind, site):
         nat_dr = 1 if nat[0] % 2 == 1 else -1
         m.steps[k][src][si] = Send(snd.to, list(snd.pieces),
                                    directed(aux, -nat_dr))
+    elif kind == "hazard":
+        # InjectHazard: land a Set into a (rank, block) cell that already
+        # absorbs a Reduce this step — a WAW race under any in-step
+        # reordering, which only the hazard pass can see (the lattice
+        # replay processes sends in a fixed order and may still complete).
+        snd = m.steps[k][src][si]
+        full = frozenset(range(s.n))
+        m.steps[k][src].append(
+            Send(snd.to, [(frozenset([aux]), "set", full)], MIN))
     return m
 
 
@@ -3095,7 +3119,14 @@ def run_mutation_suite(topos, seed, per_class):
                     for _ in range(min(per_class, len(ss))):
                         site = ss[rng.below(len(ss))]
                         m = apply_mutation(b.net, torus, kind, site)
-                        err = verify_dataflow(m)
+                        # hazard pass first (mirrors killed_by_verifier):
+                        # a WAW race is a defect even when the fixed-order
+                        # lattice replay happens to complete.
+                        haz = audit_hazards(m)
+                        err = (("hazard", "waw race")
+                               if haz["waw_conflicts"] > 0 else None)
+                        if err is None:
+                            err = verify_dataflow(m)
                         if err is None:
                             _mp, err = audit_ports(m, torus, budget)
                         total += 1
@@ -3105,3 +3136,503 @@ def run_mutation_suite(topos, seed, per_class):
                             survivors.append(
                                 (torus.dims, algo, variant, kind, site))
     return total, killed, survivors
+
+
+# ------------------------------------------------------------ verify passes
+# Mirror of rust/src/verify/{passes,hazard,deadlock,memory,cost,diff}.rs —
+# the PR 10 pass manager. Keep pass names, dependency edges, severities and
+# every gate constant in lockstep with the Rust side.
+
+PASS_NAMES = ["dataflow", "hazard", "deadlock", "memory", "ports",
+              "congestion", "optimality", "cost"]
+PASS_DEPS = {"deadlock": ["dataflow"], "cost": ["congestion", "optimality"]}
+
+
+def select_passes(requested=None):
+    """Mirror of PassManager::select: requested passes plus their transitive
+    dependencies, in the canonical (topologically sorted) PASS_NAMES order."""
+    if not requested:
+        return list(PASS_NAMES)
+    want = set()
+
+    def add(p):
+        if p not in PASS_NAMES:
+            raise ValueError(f"unknown pass: {p}")
+        if p in want:
+            return
+        want.add(p)
+        for d in PASS_DEPS.get(p, ()):
+            add(d)
+
+    for p in requested:
+        add(p)
+    return [p for p in PASS_NAMES if p in want]
+
+
+def audit_hazards(s):
+    """Mirror of verify::hazard::audit_hazards — within-step WAR/WAW
+    analysis on (rank, block) cells under receive-barrier semantics.
+
+      * WAW conflict: a Set landing in a cell that takes any other write the
+        same step (Set+Set or Set+Reduce) — the result depends on in-step
+        delivery order, a race under ANY engine. Concurrent Reduces into one
+        cell are not WAW: the reduction is commutative and the dataflow pass
+        separately proves their contributions disjoint.
+      * WAR cell: an incoming write into a cell whose rank also sends from
+        that block the same step — safe only behind the receive barrier
+        (sends read the start-of-step snapshot), i.e. needs double-buffering.
+    """
+    n = s.n
+    war = 0
+    waw = 0
+    for step in s.steps:
+        writes = {}
+        reads = set()
+        for src in range(n):
+            for snd in step[src]:
+                for blocks, kind, _c in snd.pieces:
+                    for b in blocks:
+                        writes.setdefault((snd.to, b), []).append(kind)
+                        reads.add((src, b))
+        for cell, kinds in writes.items():
+            if len(kinds) > 1 and "set" in kinds:
+                waw += 1
+            if cell in reads:
+                war += 1
+    return dict(war_cells=war, waw_conflicts=waw, barrier_free=(war == 0))
+
+
+def audit_deadlock(s):
+    """Mirror of verify::deadlock::audit_deadlock — forward-availability
+    causality: every contribution a send consumes at step k must have been
+    produced strictly earlier (union totals only; the atom algebra is the
+    dataflow pass's job). Returns None or ("deadlock", detail)."""
+    n, nb = s.n, s.n_blocks
+    full = frozenset(range(n))
+    avail = [[frozenset([r]) for _ in range(nb)] for r in range(n)]
+    for k, step in enumerate(s.steps):
+        snap = [[avail[r][b] for b in range(nb)] for r in range(n)]
+        for src in range(n):
+            for snd in step[src]:
+                for blocks, kind, contrib in snd.pieces:
+                    for b in blocks:
+                        if kind == "reduce":
+                            if not contrib <= snap[src][b]:
+                                need = sorted(contrib - snap[src][b])
+                                return ("deadlock",
+                                        f"step {k} {src}->{snd.to} b{b} "
+                                        f"waits on {need} produced later")
+                            avail[snd.to][b] = avail[snd.to][b] | contrib
+                        else:
+                            if snap[src][b] != full:
+                                return ("deadlock",
+                                        f"step {k} {src}->{snd.to} b{b}: "
+                                        "Set of a block completed later")
+                            avail[snd.to][b] = full
+    return None
+
+
+def audit_stages(stages, torus):
+    """Mirror of verify::deadlock::audit_stages — the typed check behind
+    SimPlan::build_staged's assertions: from_steps non-decreasing, every
+    stage model on the plan's topology. Returns None or
+    ("stage_order", detail)."""
+    prev = None
+    for i, (frm, m) in enumerate(stages):
+        if m.torus.dims != torus.dims:
+            return ("stage_order", f"stage {i}: model topology "
+                    f"{m.torus.dims} != plan topology {torus.dims}")
+        if prev is not None and frm < prev:
+            return ("stage_order",
+                    f"stage {i}: from_step {frm} < previous {prev}")
+        prev = frm
+    return None
+
+
+def audit_memory(s, hosts, n_real):
+    """Mirror of verify::memory::audit_memory — peak live rel-units per REAL
+    node per step: one full-vector accumulator per hosted virtual rank plus
+    the in-flight bytes landing that step (receive-barrier: incoming buffers
+    are held alongside the accumulator until the step's barrier). Also
+    reports in_rel_max, the max incoming rel per (virtual rank, step) —
+    latency schedules may land several full vectors per message (merged
+    concurrent dim-slices), so the bound is on bytes, not message counts:
+    folded peak <= hm·(1 + in_rel_max)."""
+    n, nb = s.n, s.n_blocks
+    real = (lambda v: hosts[v]) if hosts is not None else (lambda v: v)
+    base = [0.0] * n_real
+    for v in range(n):
+        base[real(v)] += 1.0
+    peak, peak_node, peak_step = max(base), max(range(n_real),
+                                                key=lambda r: base[r]), None
+    in_rel_max = 0.0
+    for k, step in enumerate(s.steps):
+        incoming = [0.0] * n_real
+        in_rel = [0.0] * n
+        for src in range(n):
+            for snd in step[src]:
+                r = snd.rel_bytes(nb)
+                incoming[real(snd.to)] += r
+                in_rel[snd.to] += r
+        in_rel_max = max(in_rel_max, max(in_rel))
+        for r in range(n_real):
+            live = base[r] + incoming[r]
+            if live > peak:
+                peak, peak_node, peak_step = live, r, k
+    return dict(peak_live_rel=peak, peak_node=peak_node,
+                peak_step=peak_step, in_rel_max=in_rel_max)
+
+
+def memory_bound(b, mem):
+    """Mirror of verify::memory::certified_bound: hm·2 for bandwidth
+    variants (streamed partial blocks never exceed one extra full vector
+    per hosted rank — the sharp in-place invariant), hm·(1 + in_rel_max)
+    for latency variants (each hosted rank buffers at most the per-virtual
+    incoming maximum on top of its accumulator)."""
+    hm = host_multiplicity(b)
+    if b.variant == "B":
+        return 2.0 * hm
+    return hm * (1.0 + mem["in_rel_max"])
+
+
+def require_peak_within(mem, bound):
+    """None or ("memory_regression", detail)."""
+    if mem["peak_live_rel"] > bound + VERIFY_EPS:
+        return ("memory_regression",
+                f"peak {mem['peak_live_rel']:.6f} rel at node "
+                f"{mem['peak_node']} step {mem['peak_step']} exceeds "
+                f"certified bound {bound:.6f}")
+    return None
+
+
+def cost_certificate(s, model):
+    """Mirror of verify::cost::cost_certificate — size-independent symbolic
+    coefficients of the closed-form completion bound
+
+        T(m) <= steps·alpha + tx_rel·(8m/bw) + hop_lat_rel·link_lat
+                + hop_proc_rel·hop_lat
+
+    derived statically from the IR and the NetModel scale table: tx_rel is
+    the serialization sum (per-step busiest scaled link), the hop terms the
+    per-step longest route's latency/processing scale sums. Unroutable
+    sends (down links) are priced by the surviving routes, matching
+    staged_step_time_estimates."""
+    torus = model.torus
+    assert s.n == torus.n, "cost certificate prices the net schedule"
+    nb = s.n_blocks
+    tx_rel = 0.0
+    hop_lat_rel = 0.0
+    hop_proc_rel = 0.0
+    for step in s.steps:
+        link_rel = [0.0] * torus.num_links()
+        lat = 0.0
+        proc = 0.0
+        for src in range(s.n):
+            for snd in step[src]:
+                try:
+                    route = model.route(src, snd.to, snd.route)
+                except AssertionError:
+                    continue
+                rel = snd.rel_bytes(nb)
+                rlat = 0.0
+                rproc = 0.0
+                for l in route:
+                    link_rel[l] += rel
+                    rlat += model.lat_scale[l]
+                    rproc += model.proc_scale[l]
+                lat = max(lat, rlat)
+                proc = max(proc, rproc)
+        tx_rel += max((r / model.bw_scale[l] for l, r in enumerate(link_rel)),
+                      default=0.0)
+        hop_lat_rel += lat
+        hop_proc_rel += proc
+    return dict(steps=s.num_steps(), tx_rel=tx_rel,
+                hop_lat_rel=hop_lat_rel, hop_proc_rel=hop_proc_rel)
+
+
+def cost_bound_s(cert, m_bytes, params):
+    """Mirror of CostCertificate::bound_s."""
+    return (cert["steps"] * params["alpha"]
+            + cert["tx_rel"] * m_bytes * 8.0 / params["bw"]
+            + cert["hop_lat_rel"] * params["link_lat"]
+            + cert["hop_proc_rel"] * params["hop_lat"])
+
+
+def require_cost_within(cert, m_bytes, params, measured_s, tol_rel):
+    """Mirror of verify::cost::require_within — the cross-check gate: a
+    measured completion may not exceed the certified bound by more than
+    tol_rel (relative). None or ("cost_regression", detail)."""
+    bound = cost_bound_s(cert, m_bytes, params)
+    if measured_s > bound * (1.0 + tol_rel) + VERIFY_EPS:
+        return ("cost_regression",
+                f"measured {measured_s:.3e}s exceeds certified bound "
+                f"{bound:.3e}s by more than {tol_rel:.0%}")
+    return None
+
+
+# ------------------------------------------------------- verify::diff mirror
+def _piece_shrinks(rw_piece, orig_pieces):
+    blocks, kind, contrib = rw_piece
+    for ob, ok, oc in orig_pieces:
+        if ok != kind or not blocks <= ob:
+            continue
+        if kind == "reduce":
+            if contrib <= oc:
+                return True
+        elif contrib == oc:
+            return True
+    return False
+
+
+def certify_rewrite(orig, rw, fault_step, dead, hosts=None):
+    """Mirror of verify::diff::certify_rewrite — differential certification
+    of a fault rewrite against its original, replacing re-verify-from-
+    scratch with a targeted equivalence proof. Obligations:
+
+      1. prefix (steps < fault_step): verbatim — already-executed steps are
+         immutable;
+      2. body (fault_step <= k < len(orig)): every send shrink-matches an
+         original send with the same (src, dst, route) — blocks and reduce
+         contributions shrink, Set contributions are preserved — no new
+         sends, and nothing touches a dead node (the rewrite is the same
+         computation minus dead/blocked contributions);
+      3. cleanup zone (k >= len(orig)): appended recovery steps are only
+         required to stay between alive nodes;
+      4. survivor completeness: one atom-lattice replay proves every alive
+         rank still finishes with the full reduction (contributions already
+         in flight before the fault included).
+
+    `dead` maps REAL dead ranks to the step they died at (a rank sends
+    legitimately until its own death step); `hosts` lifts virtual ranks of
+    a padded executable schedule onto the real torus. Composes over fault
+    sequences: shrink relations compose and every cleanup step of an
+    earlier rewrite lands in the later rewrite's cleanup zone.
+    Returns None or ("divergence", detail)."""
+    n, nb = orig.n, orig.n_blocks
+    if rw.n != n or rw.n_blocks != nb:
+        return ("divergence", "rank/block shape mismatch")
+    real = (lambda v: hosts[v]) if hosts is not None else (lambda v: v)
+    is_dead = lambda v, k: dead.get(real(v), 1 << 60) <= k  # noqa: E731
+    olen = len(orig.steps)
+    guard = min(fault_step, olen)
+    if len(rw.steps) < guard:
+        return ("divergence", "rewrite shorter than the immutable prefix")
+    for k, step in enumerate(rw.steps):
+        for src in range(n):
+            sends = step[src]
+            if k < guard:
+                o = orig.steps[k][src]
+                same = (len(sends) == len(o) and all(
+                    a.to == b.to and a.route == b.route
+                    and sorted(a.pieces) == sorted(b.pieces)
+                    for a, b in zip(sends, o)))
+                if not same:
+                    return ("divergence",
+                            f"step {k} src {src}: executed prefix modified")
+            elif k < olen:
+                if sends and is_dead(src, k):
+                    return ("divergence", f"step {k}: dead src {src} sends")
+                orig_sends = orig.steps[k][src]
+                used = [False] * len(orig_sends)
+                for s_rw in sends:
+                    if is_dead(s_rw.to, k):
+                        return ("divergence",
+                                f"step {k}: send to dead node {s_rw.to}")
+                    hit = None
+                    for i, s_o in enumerate(orig_sends):
+                        if (used[i] or s_o.to != s_rw.to
+                                or s_o.route != s_rw.route):
+                            continue
+                        if all(_piece_shrinks(p, s_o.pieces)
+                               for p in s_rw.pieces):
+                            hit = i
+                            break
+                    if hit is None:
+                        return ("divergence",
+                                f"step {k} src {src}->{s_rw.to}: no "
+                                "shrink-match against the original")
+                    used[hit] = True
+            else:
+                if sends and is_dead(src, k):
+                    return ("divergence", f"cleanup step {k}: dead src "
+                            f"{src} sends")
+                for s_rw in sends:
+                    if is_dead(s_rw.to, k):
+                        return ("divergence", f"cleanup step {k}: send to "
+                                f"dead node {s_rw.to}")
+    alive = [real(r) not in dead for r in range(n)]
+    err = verify_dataflow(rw, alive=alive)
+    if err is not None:
+        return ("divergence", f"survivor dataflow: {err[0]} ({err[1]})")
+    return None
+
+
+def certify_response(b, base, resp):
+    """Differentially certify a schedule::online Response: stage order plus
+    the rewrite diff against the pre-fault schedule (native builds only —
+    online collapses padded rewrites internally). Returns None or a typed
+    (kind, detail)."""
+    err = audit_stages(resp.stages, base.torus)
+    if err is not None:
+        return err
+    rewrites = [s for s, a in resp.actions if a == "rewrite"]
+    if not rewrites:
+        return None  # detour-only response: the schedule is the original
+    # The controller records faults as staged models; a rank is dead from
+    # the first stage in which every one of its ports is down. Only
+    # rewrite-applied stages create proof obligations — a fault the
+    # controller detoured (or could not rewrite) leaves the schedule
+    # untouched, so its sends legitimately remain.
+    t = base.torus
+
+    def downed(model, r):
+        return all(model.down[t.link_index(r, d, dr)]
+                   for d in range(t.ndims()) for dr in (1, -1))
+
+    dead = {}
+    prev = None
+    for (frm, model), (_s, applied) in zip(resp.stages, resp.actions):
+        if applied == "rewrite":
+            for r in range(t.n):
+                if r not in dead and downed(model, r) and (
+                        prev is None or not downed(prev, r)):
+                    dead[r] = frm
+        prev = model
+    return certify_rewrite(b.net, resp.schedule, min(rewrites), dead)
+
+
+# ------------------------------------------------------- pass manager lite
+def run_passes(b, torus, passes=None):
+    """Mirror of verify::passes::PassManager::run — executes the selected
+    passes over one BuiltCollective, returning (cert, findings, timings):
+    cert is the certificate dict (only the fields of executed passes),
+    findings a list of (pass, severity, message) with severity in
+    {"error", "warn", "info"}, timings a list of (pass, seconds)."""
+    import time as _time
+    sel = select_passes(passes)
+    cert = dict(name=b.net.name, algo=b.algo, variant=b.variant,
+                padded=b.padded)
+    findings = []
+    timings = []
+    hm = host_multiplicity(b)
+    for p in sel:
+        t0 = _time.perf_counter()
+        if p == "dataflow":
+            err = verify_dataflow(b.exec_s)
+            if err is not None:
+                findings.append((p, "error", f"{err[0]}: {err[1]}"))
+        elif p == "hazard":
+            haz = audit_hazards(b.exec_s)
+            cert["hazard"] = haz
+            if haz["waw_conflicts"] > 0:
+                findings.append((p, "error",
+                                 f"{haz['waw_conflicts']} WAW race(s)"))
+            if haz["war_cells"] > 0:
+                if b.variant == "B":
+                    findings.append((p, "error",
+                                     f"{haz['war_cells']} WAR cell(s) on an "
+                                     "in-place (bandwidth) variant"))
+                else:
+                    findings.append((p, "info",
+                                     f"{haz['war_cells']} WAR cell(s) rely "
+                                     "on the receive barrier"))
+        elif p == "deadlock":
+            err = audit_deadlock(b.exec_s)
+            cert["deadlock_ok"] = err is None
+            if err is not None:
+                findings.append((p, "error", err[1]))
+        elif p == "memory":
+            mem = audit_memory(b.exec_s, b.hosts, torus.n)
+            cert["memory"] = mem
+            err = require_peak_within(mem, memory_bound(b, mem))
+            if err is not None:
+                findings.append((p, "error", err[1]))
+        elif p == "ports":
+            budget = port_budget(b.algo, b.variant) * hm
+            max_port, err = audit_ports(b.net, torus, budget)
+            cert["budget"], cert["max_port_msgs"] = budget, max_port
+            if err is not None:
+                findings.append((p, "error", f"{err[0]}: {err[1]}"))
+        elif p == "congestion":
+            cert["congestion"] = audit_congestion(b.net, torus)
+        elif p == "optimality":
+            cert["optimality"] = audit_optimality(b.net, torus)
+        elif p == "cost":
+            cc = cost_certificate(b.net, NetModel.uniform(torus))
+            cert["cost"] = cc
+            tx = cert["congestion"]["tx_delay_rel"]
+            if abs(cc["tx_rel"] - tx) > 1e-12:
+                findings.append((p, "error",
+                                 f"certificate tx_rel {cc['tx_rel']} != "
+                                 f"congestion audit {tx}"))
+        timings.append((p, _time.perf_counter() - t0))
+    return cert, findings, timings
+
+
+def dataflow_max_atoms(s):
+    """Peak atoms held by any (rank, block) cell during the lattice replay
+    (mirror of DataflowProof::max_atoms)."""
+    n, nb = s.n, s.n_blocks
+    full = frozenset(range(n))
+    cells = [[[frozenset([r])] for _ in range(nb)] for r in range(n)]
+    peak = 1
+    for step in s.steps:
+        for src in range(n):
+            for snd in step[src]:
+                for blocks, kind, contrib in snd.pieces:
+                    for b in blocks:
+                        if kind == "reduce":
+                            cells[snd.to][b].append(contrib)
+                            peak = max(peak, len(cells[snd.to][b]))
+                        else:
+                            cells[snd.to][b] = [full]
+    return peak
+
+
+def report_v2(topos):
+    """Mirror of verify::report_json schema trivance.verify.v2 — the exact
+    shape the Rust side emits (every v1 field preserved under its v1 name,
+    hazard/deadlock/memory/cost fields and per-pass timings added) — feeds
+    tools/check_verify_report.py in the pysim CI job."""
+    out_topos = []
+    agg = {}
+    for torus in topos:
+        certs = certify_registry(torus)
+        entries = []
+        for (algo, variant), cert in sorted(certs.items()):
+            b = build(algo, variant, torus)
+            b.algo, b.variant = algo, variant
+            _c, _f, timings = run_passes(b, torus)
+            for p, dt in timings:
+                agg[p] = agg.get(p, 0.0) + dt
+            opt, cong = cert["optimality"], cert["congestion"]
+            entries.append(dict(
+                collective=cert["name"], algo=algo, variant=variant,
+                padded=cert["padded"], steps=opt["steps"],
+                lat_bound3=opt["lat_bound3"], lat_bound2=opt["lat_bound2"],
+                max_node_sent_rel=opt["max_node_sent_rel"],
+                bw_lower_rel=opt["bw_lower_rel"],
+                port_budget=cert["budget"],
+                max_port_msgs=cert["max_port_msgs"],
+                tx_delay_rel=cong["tx_delay_rel"],
+                max_link_rel=cong["max_link_rel"],
+                mean_link_rel=cong["mean_link_rel"],
+                max_link_msgs=cong["max_link_msgs"],
+                bytes_on_wire_rel=cong["bytes_on_wire_rel"],
+                messages=cong["messages"],
+                max_atoms=dataflow_max_atoms(b.exec_s),
+                hazard_war_cells=cert["hazard"]["war_cells"],
+                hazard_waw_conflicts=cert["hazard"]["waw_conflicts"],
+                barrier_free=cert["hazard"]["barrier_free"],
+                deadlock_ok=cert["deadlock_ok"],
+                mem_peak_rel=cert["memory"]["peak_live_rel"],
+                mem_in_rel_max=cert["memory"]["in_rel_max"],
+                cost_steps=cert["cost"]["steps"],
+                cost_tx_rel=cert["cost"]["tx_rel"],
+                cost_hop_lat_rel=cert["cost"]["hop_lat_rel"],
+                cost_hop_proc_rel=cert["cost"]["hop_proc_rel"],
+                **{"class": opt["klass"]}))
+        out_topos.append(dict(dims=list(torus.dims), certs=entries))
+    passes = [dict(name=p, seconds=agg.get(p, 0.0)) for p in PASS_NAMES]
+    return {"schema": "trivance.verify.v2", "passes": passes,
+            "topos": out_topos}

@@ -1,0 +1,128 @@
+"""Unit tests for tools/lint_forbid.py (the CI source-lint gate).
+
+Run directly: `python3 tools/test_lint_forbid.py`. Each case shells out to
+the real script against a synthetic repo tree so the exit codes tested
+here are exactly the ones CI acts on: 0 clean, 1 violation/stale entry,
+2 usage error.
+"""
+
+import os
+import subprocess
+import sys
+import tempfile
+import unittest
+
+SCRIPT = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                      "lint_forbid.py")
+
+
+class LintForbidTest(unittest.TestCase):
+    def setUp(self):
+        self.dir = tempfile.TemporaryDirectory()
+        self.root = self.dir.name
+
+    def tearDown(self):
+        self.dir.cleanup()
+
+    def write(self, rel, content):
+        path = os.path.join(self.root, rel)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        with open(path, "w") as f:
+            f.write(content)
+        return path
+
+    def run_lint(self, allow=None):
+        cmd = [sys.executable, SCRIPT, "--root", self.root,
+               "--allow", allow or os.path.join(self.root, "allow.txt")]
+        return subprocess.run(cmd, capture_output=True, text=True)
+
+    def test_clean_tree_passes(self):
+        self.write("rust/src/sim/mod.rs", "pub fn ok() -> u32 { 1 }\n")
+        self.write("rust/src/net/mod.rs", "pub fn ok() {}\n")
+        r = self.run_lint()
+        self.assertEqual(r.returncode, 0, r.stderr)
+        self.assertIn("clean", r.stdout)
+
+    def test_unwrap_in_library_fails(self):
+        self.write("rust/src/verify/mod.rs",
+                   "fn f(x: Option<u32>) -> u32 { x.unwrap() }\n")
+        r = self.run_lint()
+        self.assertEqual(r.returncode, 1)
+        self.assertIn("verify/mod.rs:1", r.stderr)
+        self.assertIn(".unwrap()", r.stderr)
+
+    def test_expect_and_panic_fail(self):
+        self.write("rust/src/schedule/mod.rs",
+                   'fn f() { g().expect("boom"); }\n')
+        self.write("rust/src/sim/plan.rs",
+                   'fn g() { panic!("no"); }\n')
+        r = self.run_lint()
+        self.assertEqual(r.returncode, 1)
+        self.assertIn("schedule/mod.rs", r.stderr)
+        self.assertIn("sim/plan.rs", r.stderr)
+
+    def test_cfg_test_tail_is_exempt(self):
+        self.write("rust/src/sim/mod.rs",
+                   "pub fn ok() {}\n"
+                   "#[cfg(test)]\n"
+                   "mod tests {\n"
+                   "    #[test]\n"
+                   '    fn t() { Some(1).unwrap(); panic!("fine here"); }\n'
+                   "}\n")
+        r = self.run_lint()
+        self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_paths_outside_library_dirs_are_ignored(self):
+        self.write("rust/src/cli.rs", "fn f() { x.unwrap(); }\n")
+        self.write("rust/src/sim/mod.rs", "pub fn ok() {}\n")
+        r = self.run_lint()
+        self.assertEqual(r.returncode, 0, r.stderr)
+
+    def test_allowlist_excuses_exact_file_and_substring(self):
+        self.write("rust/src/net/mod.rs",
+                   'fn f() { q.expect("bfs invariant") }\n')
+        allow = self.write(
+            "allow.txt",
+            'net/mod.rs :: q.expect("bfs invariant") :: queued nodes '
+            "always have distances\n")
+        r = self.run_lint(allow)
+        self.assertEqual(r.returncode, 0, r.stderr)
+        self.assertIn("1 justified exception", r.stdout)
+
+    def test_allowlist_is_per_file(self):
+        self.write("rust/src/sim/mod.rs",
+                   'fn f() { q.expect("bfs invariant") }\n')
+        allow = self.write(
+            "allow.txt",
+            'net/mod.rs :: q.expect("bfs invariant") :: wrong file\n')
+        r = self.run_lint(allow)
+        self.assertEqual(r.returncode, 1)
+
+    def test_stale_allowlist_entry_fails(self):
+        self.write("rust/src/sim/mod.rs", "pub fn ok() {}\n")
+        allow = self.write("allow.txt",
+                           "sim/mod.rs :: x.unwrap() :: long gone\n")
+        r = self.run_lint(allow)
+        self.assertEqual(r.returncode, 1)
+        self.assertIn("stale allowlist entry", r.stderr)
+
+    def test_malformed_allowlist_is_usage_error(self):
+        self.write("rust/src/sim/mod.rs", "pub fn ok() {}\n")
+        allow = self.write("allow.txt", "only two :: fields\n")
+        r = self.run_lint(allow)
+        self.assertEqual(r.returncode, 2)
+
+    def test_missing_rust_src_is_usage_error(self):
+        r = self.run_lint()
+        self.assertEqual(r.returncode, 2)
+
+    def test_repo_tree_is_clean(self):
+        repo = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                            os.pardir)
+        r = subprocess.run([sys.executable, SCRIPT, "--root", repo],
+                           capture_output=True, text=True)
+        self.assertEqual(r.returncode, 0, r.stderr)
+
+
+if __name__ == "__main__":
+    unittest.main()
